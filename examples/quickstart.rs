@@ -1,0 +1,77 @@
+//! Quickstart: load the AOT artifacts and serve one agent session
+//! end-to-end on the real PJRT engine.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full three-layer path: the Pallas-kernel transformer (L1/L2,
+//! AOT-compiled to HLO text) is loaded by the Rust runtime (L3), a cold
+//! prefill builds the KV cache, and a short ReAct-style loop alternates
+//! resume prefills with greedy decodes — printing TTFT/TPOT at the end.
+
+use agentserve::runtime::PjrtEngine;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    println!("loading artifacts from {dir}/ …");
+    let mut engine = PjrtEngine::load(&dir)?;
+    let geo = engine.geometry().clone();
+    println!(
+        "model: {} params, {} layers, d={}, vocab={}, max_seq={}, {} cache slots",
+        geo.param_count, geo.n_layers, geo.d_model, geo.vocab, geo.max_seq, geo.decode_batch
+    );
+    println!("prefill chunks: {:?}", engine.chunk_sizes());
+
+    // --- one agent session ------------------------------------------------
+    // Cold prefill: a 128-token "system prompt".
+    let system_prompt: Vec<i32> = (0..128).map(|i| (i * 13 + 5) % geo.vocab as i32).collect();
+    let t0 = Instant::now();
+    let first = engine.prefill(0, 0, &system_prompt)?;
+    let ttft = t0.elapsed();
+    println!(
+        "\ncold prefill: {} tokens → first token {first} (TTFT {ttft:?})",
+        system_prompt.len()
+    );
+
+    // Decode 24 tokens.
+    let mut len = system_prompt.len() as i32 + 1;
+    let mut tok = first;
+    let mut generated = vec![first];
+    let mut gaps_ms = Vec::new();
+    for _ in 0..24 {
+        let t = Instant::now();
+        let mut toks = vec![0i32; geo.decode_batch];
+        let mut lens = vec![0i32; geo.decode_batch];
+        toks[0] = tok;
+        lens[0] = len - 1;
+        let out = engine.decode_step(&toks, &lens)?;
+        gaps_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        tok = out.next_tokens[0];
+        generated.push(tok);
+        len += 1;
+    }
+    println!("decode burst: {generated:?}");
+
+    // Resume prefill: a 16-token "tool output" appended to the cache.
+    let tool_output: Vec<i32> = (0..16).map(|i| (i * 31 + 2) % geo.vocab as i32).collect();
+    let t1 = Instant::now();
+    let next = engine.prefill(0, len as usize, &tool_output)?;
+    println!(
+        "resume prefill: +{} tokens at position {len} → next token {next} (TTFT {:?})",
+        tool_output.len(),
+        t1.elapsed()
+    );
+
+    let mean_tpot = gaps_ms.iter().sum::<f64>() / gaps_ms.len() as f64;
+    println!("\nTPOT: mean {:.2} ms over {} tokens", mean_tpot, gaps_ms.len());
+    println!(
+        "engine stats: {} prefill calls, {} decode calls, {:.1} MB KV round-trip",
+        engine.stats.prefill_calls,
+        engine.stats.decode_calls,
+        engine.stats.cache_roundtrip_bytes as f64 / 1e6
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! SLO-attainment sweep (Fig. 6 slice): how session-level joint SLO
+//! attainment degrades with concurrency for each policy, on one
+//! (model, GPU) cell, including the violation breakdown.
+//!
+//! ```sh
+//! cargo run --release --example slo_sweep [-- 7b a5000]
+//! ```
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_sim, Policy, SimParams};
+use agentserve::workload::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model: ModelKind = args.get(1).map(|s| s.as_str()).unwrap_or("7b").parse()?;
+    let gpu: GpuKind = args.get(2).map(|s| s.as_str()).unwrap_or("a5000").parse()?;
+    let cfg = Config::preset(model, gpu);
+    println!(
+        "== SLO sweep: {model} on {gpu} (tau_TTFT={:.0} ms, tau_TPOT={:.1} ms) ==\n",
+        cfg.slo.ttft_ms, cfg.slo.tpot_ms
+    );
+    println!(
+        "{:<11} {:>3} {:>10} {:>14} {:>14}",
+        "policy", "N", "SLO rate", "TTFT violations", "TPOT violations"
+    );
+    for n in 3..=6 {
+        for policy in Policy::paper_lineup() {
+            let params = SimParams {
+                n_agents: n,
+                sessions_per_agent: 2,
+                workload: WorkloadKind::ReAct,
+                ..SimParams::default()
+            };
+            let out = run_sim(&cfg, policy, &params);
+            println!(
+                "{:<11} {:>3} {:>9.1}% {:>14} {:>14}",
+                out.policy_name,
+                n,
+                out.slo.rate() * 100.0,
+                out.slo.ttft_violations,
+                out.slo.tpot_violations
+            );
+        }
+        println!();
+    }
+    println!("(paper: AgentServe stays near-perfect; baselines drop sharply past N=4 on A5000)");
+    Ok(())
+}

@@ -1,0 +1,189 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+Emits HLO *text* (never ``.serialize()``): jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts`` -> ``artifacts/``):
+  - ``prefill_t{N}.hlo.txt``  one per chunk size
+  - ``decode_b{B}.hlo.txt``   one per decode batch size
+  - ``params.bin``            f32 little-endian weights, manifest order
+  - ``manifest.json``         geometry + artifact index
+
+Python runs ONCE at build time; the Rust binary is self-contained after.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    decode_multi,
+    decode_step,
+    init_params,
+    manifest_dict,
+    param_specs,
+    prefill_chunk,
+)
+
+PREFILL_CHUNKS = [16, 32, 64, 128]
+DECODE_BATCHES = [1, 2, 4]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: ModelConfig, params, chunk: int) -> str:
+    cache_shape = (cfg.n_layers, cfg.decode_batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    fn = functools.partial(prefill_chunk, cfg)
+    specs = (
+        [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params],
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),       # tokens
+        jax.ShapeDtypeStruct((), jnp.int32),             # start
+        jax.ShapeDtypeStruct((), jnp.int32),             # slot
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),  # k_cache
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),  # v_cache
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: ModelConfig, params, batch: int) -> str:
+    cache_shape = (cfg.n_layers, cfg.decode_batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    assert batch <= cfg.decode_batch
+
+    def fn(params, tokens, lens, k_cache, v_cache):
+        # Sub-batch artifacts still address the full cache; rows beyond
+        # `batch` are untouched (tokens/lens padded by the runtime).
+        return decode_step(cfg, params, tokens, lens, k_cache, v_cache)
+
+    specs = (
+        [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params],
+        jax.ShapeDtypeStruct((cfg.decode_batch,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((cfg.decode_batch,), jnp.int32),  # lens
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def lower_decode_multi(cfg: ModelConfig, params, n_steps: int) -> str:
+    cache_shape = (cfg.n_layers, cfg.decode_batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+
+    def fn(params, tokens, lens, k_cache, v_cache):
+        return decode_multi(cfg, params, tokens, lens, k_cache, v_cache, n_steps)
+
+    specs = (
+        [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params],
+        jax.ShapeDtypeStruct((cfg.decode_batch,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.decode_batch,), jnp.int32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def write_params_bin(params, path: str):
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+
+def build(outdir: str, chunks=None, batches=None, seed: int = 42) -> dict:
+    chunks = chunks or PREFILL_CHUNKS
+    batches = batches or DECODE_BATCHES
+    os.makedirs(outdir, exist_ok=True)
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=seed)
+
+    for n in chunks:
+        text = lower_prefill(cfg, params, n)
+        with open(os.path.join(outdir, f"prefill_t{n}.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"  prefill_t{n}: {len(text)} chars")
+    for b in batches:
+        text = lower_decode(cfg, params, b)
+        with open(os.path.join(outdir, f"decode_b{b}.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"  decode_b{b}: {len(text)} chars")
+    text = lower_decode_multi(cfg, params, 8)
+    with open(os.path.join(outdir, "decode_m8.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  decode_m8: {len(text)} chars")
+
+    write_params_bin(params, os.path.join(outdir, "params.bin"))
+    manifest = manifest_dict(cfg, chunks, batches)
+    manifest["seed"] = seed
+    manifest["golden"] = golden_vector(cfg, params, min(chunks), max(batches))
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_params = manifest["model"]["param_count"]
+    print(f"  params.bin: {n_params} f32 values")
+    return manifest
+
+
+def golden_vector(cfg: ModelConfig, params, chunk: int, batch: int) -> dict:
+    """Reference outputs the Rust runtime test asserts against: prefill a
+    fixed prompt into slot 0, then greedy-decode 5 tokens with the batched
+    decode step. Any numerical drift between jax and the PJRT-loaded HLO
+    shows up here."""
+    from .model import empty_cache
+
+    k, v = empty_cache(cfg)
+    tokens = (jnp.arange(chunk, dtype=jnp.int32) * 7 + 3) % cfg.vocab
+    nxt, k, v = jax.jit(functools.partial(prefill_chunk, cfg))(
+        params, tokens, jnp.int32(0), jnp.int32(0), k, v
+    )
+    first = int(nxt)
+    seq = [first]
+    lens = jnp.zeros((cfg.decode_batch,), jnp.int32).at[0].set(chunk)
+    toks = jnp.zeros((cfg.decode_batch,), jnp.int32).at[0].set(nxt)
+    step = jax.jit(functools.partial(decode_step, cfg))
+    for _ in range(5):
+        out, k, v = step(params, toks, lens, k, v)
+        seq.append(int(out[0]))
+        lens = lens.at[0].add(1)
+        toks = toks.at[0].set(out[0])
+    return {
+        "prompt": [int(t) for t in tokens],
+        "chunk": chunk,
+        "batch": batch,
+        "expected_tokens": seq,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--chunks", type=int, nargs="*", default=None)
+    ap.add_argument("--batches", type=int, nargs="*", default=None)
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    outdir = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    print(f"AOT-lowering to {outdir}")
+    build(outdir, args.chunks, args.batches, args.seed)
+    # Sanity: param count must match the binary size.
+    spec_count = sum(int(np.prod(s)) for _, s in param_specs(ModelConfig()))
+    size = os.path.getsize(os.path.join(outdir, "params.bin"))
+    assert size == 4 * spec_count, (size, spec_count)
+    print("AOT build OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""L1 Pallas attention kernels (build-time only).
+
+Two kernels cover the paper's compute hot spots:
+
+- :func:`flash_prefill` — tiled causal attention *with a cached-prefix
+  offset*, used for both cold prefills (offset 0) and resume prefills
+  (offset = cached length). This is the TPU re-think of the paper's CUDA
+  prefill path (DESIGN.md §Hardware-Adaptation): Q is tiled into
+  ``block_q``-row tiles streamed through VMEM (the scratchpad analogue of
+  CUDA shared memory), K/V are walked in ``block_k`` columns with an online
+  softmax carry, and the QK^T / PV contractions are jnp.dot-shaped for the
+  MXU systolic array.
+- :func:`decode_attention` — batched single-token attention over the KV
+  cache with per-row valid lengths; bandwidth-bound, reads each KV row
+  exactly once.
+
+Kernels are lowered with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom calls, and interpret-mode lowering produces plain HLO that runs on
+any backend. Real-TPU performance is *estimated* from the VMEM footprint and
+MXU utilisation in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(
+    start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int
+):
+    """One (head, q-block) tile of flash attention with prefix offset.
+
+    Refs (VMEM blocks):
+      start_ref: [1]        global position of the first new token (SMEM-ish)
+      q_ref:     [1, bq, D] query tile for this head
+      k_ref:     [1, S, D]  full key row of the matching KV head
+      v_ref:     [1, S, D]  full value row
+      o_ref:     [1, bq, D] output tile
+    """
+    iq = pl.program_id(1)
+    start = start_ref[0]
+    q = q_ref[0]  # [bq, D]
+    bq, d = q.shape
+    # Global positions of the query rows.
+    q_pos = start + iq * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(ik, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[0], ik * block_k, block_k, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[0], ik * block_k, block_k, 0)
+        # MXU contraction: [bq, D] x [D, bk] -> [bq, bk].
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(d))
+        kv_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v_tile, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    n_k = seq_len // block_k
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+    # Rows whose every key was masked (cannot happen causally, but guards
+    # padded shapes) would have l == 0; avoid 0/0.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_prefill(q, k, v, start, *, block_q: int = 64, block_k: int = 128):
+    """Causal attention of new tokens against cache + themselves.
+
+    Args:
+      q: [H, N, D] queries for N new tokens.
+      k: [H_kv, S, D] full key cache rows (positions >= start+N are masked).
+      v: [H_kv, S, D] full value cache rows.
+      start: scalar i32, global position of the first new token.
+      block_q/block_k: VMEM tile sizes.
+
+    Returns: [H, N, D] attention output.
+    """
+    h, n, d = q.shape
+    h_kv, s, _ = k.shape
+    assert h % h_kv == 0, "GQA requires n_heads % n_kv_heads == 0"
+    group = h // h_kv
+    bq = min(block_q, n)
+    assert n % bq == 0, f"chunk {n} not divisible by block_q {bq}"
+    bk = min(block_k, s)
+    assert s % bk == 0, f"seq {s} not divisible by block_k {bk}"
+    start_arr = jnp.reshape(start.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_flash_prefill_kernel, block_k=bk, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n // bq),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ih, iq: (0,)),
+            pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, s, d), lambda ih, iq: (ih // group, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda ih, iq: (ih // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, d), q.dtype),
+        interpret=True,
+    )(start_arr, q, k, v)
+
+
+def _decode_attention_kernel(
+    lens_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len: int, group: int
+):
+    """One batch row's decode attention, all heads at once.
+
+    A row's whole KV block streams through VMEM exactly once and feeds
+    every query head of the row (GQA expansion happens in-register) — the
+    bandwidth-optimal decode schedule. Grid is (B,): one invocation per
+    row keeps the interpret-mode overhead at B instead of B*H launches
+    (measured 8x faster; EXPERIMENTS.md §Perf L1).
+
+    Refs:
+      lens_ref: [1]           valid length of this row (new token at lens).
+      q_ref:    [1, H, D]     this row's queries.
+      k_ref:    [1, H_kv, S, D] key cache row.
+      v_ref:    [1, H_kv, S, D] value cache row.
+      o_ref:    [1, H, D]     output.
+    """
+    ln = lens_ref[0]
+    q = q_ref[0]  # [H, D]
+    kk = k_ref[0]  # [H_kv, S, D]
+    vv = v_ref[0]
+    h, d = q.shape
+    h_kv = kk.shape[0]
+    # Group query heads onto their KV head: [H_kv, group, D].
+    qg = q.reshape(h_kv, group, d)
+    # Scores: [H_kv, group, S] via MXU-shaped contraction over D.
+    s = jnp.einsum("kgd,ksd->kgs", qg, kk, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    pos = jax.lax.iota(jnp.int32, seq_len)
+    s = jnp.where(pos[None, None, :] <= ln, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("kgs,ksd->kgd", p, vv, preferred_element_type=jnp.float32)
+    o_ref[0] = out.reshape(h, d).astype(o_ref.dtype)
+
+
+@jax.jit
+def decode_attention(q, k, v, lens):
+    """Batched single-token attention over cached KV.
+
+    Args:
+      q: [B, H, D] one query per row.
+      k: [B, H_kv, S, D] key cache.
+      v: [B, H_kv, S, D] value cache.
+      lens: [B] i32; row b attends to positions <= lens[b] (the new token's
+        KV has just been written at index lens[b]).
+
+    Returns: [B, H, D].
+    """
+    b, h, d = q.shape
+    _, h_kv, s, _ = k.shape
+    assert h % h_kv == 0
+    group = h // h_kv
+
+    kernel = functools.partial(_decode_attention_kernel, seq_len=s, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib: (ib,)),
+            pl.BlockSpec((1, h, d), lambda ib: (ib, 0, 0)),
+            pl.BlockSpec((1, h_kv, s, d), lambda ib: (ib, 0, 0, 0)),
+            pl.BlockSpec((1, h_kv, s, d), lambda ib: (ib, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda ib: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(lens.astype(jnp.int32), q, k, v)

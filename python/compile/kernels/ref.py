@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels match these to float tolerance across shape/dtype sweeps.
+No Pallas, no tiling — just the textbook attention math.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, start):
+    """Reference for :func:`..attention.flash_prefill`.
+
+    q: [H, N, D]; k, v: [H_kv, S, D]; start: scalar i32.
+    Token i (global position start + i) attends to cache positions
+    j <= start + i.
+    """
+    h, n, d = q.shape
+    h_kv, s, _ = k.shape
+    group = h // h_kv
+    # Expand KV heads to full heads (GQA).
+    k_full = jnp.repeat(k, group, axis=0)  # [H, S, D]
+    v_full = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("hnd,hsd->hns", q, k_full) / jnp.sqrt(jnp.float32(d))
+    q_pos = start + jnp.arange(n)  # [N]
+    kv_pos = jnp.arange(s)  # [S]
+    mask = kv_pos[None, :] <= q_pos[:, None]  # [N, S]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hns,hsd->hnd", p, v_full).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Reference for :func:`..attention.decode_attention`.
+
+    q: [B, H, D]; k, v: [B, H_kv, S, D]; lens: [B] i32.
+    Row b attends to positions j <= lens[b].
+    """
+    b, h, d = q.shape
+    _, h_kv, s, _ = k.shape
+    group = h // h_kv
+    k_full = jnp.repeat(k, group, axis=1)  # [B, H, S, D]
+    v_full = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_full) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(s)[None, None, :] <= lens[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p, v_full).astype(q.dtype)

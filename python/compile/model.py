@@ -1,0 +1,264 @@
+"""L2 JAX model: a tiny Qwen-style decoder (build-time only).
+
+RMSNorm + RoPE + GQA attention (via the L1 Pallas kernels) + SwiGLU MLP,
+with tied embeddings and in-graph greedy sampling. Two entry points are
+AOT-lowered by :mod:`.aot`:
+
+- :func:`prefill_chunk` — prefill ``chunk`` new tokens into one KV slot of
+  the batched cache (dynamic start offset ⇒ the same artifact serves both
+  cold and resume prefills), returning the argmax next token.
+- :func:`decode_step` — one batched greedy decode step over all slots.
+
+The cache layout is ``[L, B, H_kv, S, D]`` (slot = batch row); the Rust
+runtime owns slot assignment, lengths, and chunking. Weights are random
+(seeded) — no pretrained checkpoint is available offline; the serving
+system exercises the identical compute/artifact path either way
+(DESIGN.md §1).
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import decode_attention, flash_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 512
+    rope_theta: float = 10_000.0
+    decode_batch: int = 4
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# Parameter order is the manifest contract with the Rust runtime: params.bin
+# concatenates these arrays (f32, row-major) in exactly this order.
+def param_specs(cfg: ModelConfig):
+    """[(name, shape)] in canonical order."""
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.attn_norm", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, qd)),
+            (f"l{i}.wk", (cfg.d_model, kvd)),
+            (f"l{i}.wv", (cfg.d_model, kvd)),
+            (f"l{i}.wo", (qd, cfg.d_model)),
+            (f"l{i}.mlp_norm", (cfg.d_model,)),
+            (f"l{i}.w_gate", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs.append(("final_norm", (cfg.d_model,)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 42):
+    """Seeded random weights (scaled normal; norms at 1)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+            )
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def _unpack(cfg: ModelConfig, params):
+    """params list -> (embed, per-layer dicts, final_norm)."""
+    it = iter(params)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                attn_norm=next(it),
+                wq=next(it),
+                wk=next(it),
+                wv=next(it),
+                wo=next(it),
+                mlp_norm=next(it),
+                w_gate=next(it),
+                w_up=next(it),
+                w_down=next(it),
+            )
+        )
+    final_norm = next(it)
+    return embed, layers, final_norm
+
+
+def rmsnorm(x, w, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotate-half RoPE. x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., T, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def prefill_chunk(cfg: ModelConfig, params, tokens, start, slot, k_cache, v_cache):
+    """Prefill `chunk` new tokens into cache slot `slot`.
+
+    Args:
+      tokens:  [N] i32 token ids.
+      start:   scalar i32 — tokens occupy cache positions [start, start+N).
+      slot:    scalar i32 — which batch row of the cache to extend.
+      k_cache: [L, B, H_kv, S, D] f32.
+      v_cache: [L, B, H_kv, S, D] f32.
+
+    Returns: (next_token scalar i32, k_cache', v_cache').
+    """
+    embed, layers, final_norm = _unpack(cfg, params)
+    n = tokens.shape[0]
+    positions = start + jnp.arange(n, dtype=jnp.int32)  # [N]
+    x = embed[tokens]  # [N, D_model]
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(n, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # Commit new KV into the cache at [li, slot, :, start:start+N, :].
+        k_upd = jnp.transpose(k, (1, 0, 2))[None, None]  # [1,1,H_kv,N,D]
+        v_upd = jnp.transpose(v, (1, 0, 2))[None, None]
+        zero = jnp.int32(0)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_upd, (jnp.int32(li), slot, zero, start, zero)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_upd, (jnp.int32(li), slot, zero, start, zero)
+        )
+        # Attend over the full cache row (masked beyond start+N).
+        k_row = jax.lax.dynamic_index_in_dim(k_cache[li], slot, 0, keepdims=False)
+        v_row = jax.lax.dynamic_index_in_dim(v_cache[li], slot, 0, keepdims=False)
+        attn = flash_prefill(jnp.transpose(q, (1, 0, 2)), k_row, v_row, start)
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(n, -1)  # [N, H*D]
+        x = x + attn @ lp["wo"]
+        x = x + swiglu(rmsnorm(x, lp["mlp_norm"]), lp["w_gate"], lp["w_up"], lp["w_down"])
+    logits = rmsnorm(x[-1], final_norm) @ embed.T  # [vocab]
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return next_token, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, lens, k_cache, v_cache):
+    """One batched greedy decode step.
+
+    Args:
+      tokens:  [B] i32 — current token of each slot.
+      lens:    [B] i32 — cached tokens per slot; the new KV is written at
+               position lens[b] (rows with stale lens are simply ignored by
+               the runtime).
+      k_cache/v_cache: [L, B, H_kv, S, D].
+
+    Returns: (next_tokens [B] i32, k_cache', v_cache').
+    """
+    embed, layers, final_norm = _unpack(cfg, params)
+    b = tokens.shape[0]
+    x = embed[tokens]  # [B, D_model]
+    zero = jnp.int32(0)
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+        # Per-row dynamic-update-slice writes at [li, row, :, lens[row], :].
+        # (A masked full-tensor rebuild costs ~2x the whole step; §Perf L2.)
+        for row in range(b):
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache,
+                k[row][None, None, :, None, :],
+                (jnp.int32(li), jnp.int32(row), zero, lens[row], zero),
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache,
+                v[row][None, None, :, None, :],
+                (jnp.int32(li), jnp.int32(row), zero, lens[row], zero),
+            )
+        attn = decode_attention(q, k_cache[li], v_cache[li], lens)  # [B, H, D]
+        x = x + attn.reshape(b, -1) @ lp["wo"]
+        x = x + swiglu(rmsnorm(x, lp["mlp_norm"]), lp["w_gate"], lp["w_up"], lp["w_down"])
+    logits = rmsnorm(x, final_norm) @ embed.T  # [B, vocab]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, k_cache, v_cache
+
+
+def decode_multi(cfg: ModelConfig, params, tokens, lens, k_cache, v_cache, n_steps: int):
+    """`n_steps` greedy decode steps in ONE executable (perf: the Rust
+    runtime pays the tuple-output KV round-trip once per call, so batching
+    steps amortizes it n_steps-fold — see EXPERIMENTS.md §Perf).
+
+    Every row advances n_steps positions; rows the caller considers
+    inactive write garbage KV beyond their real length, which the next
+    prefill overwrites (the runtime tracks true lengths).
+
+    Returns (tokens_out [n_steps, B], k_cache', v_cache').
+    """
+    outs = []
+    for _ in range(n_steps):
+        tokens, k_cache, v_cache = decode_step(cfg, params, tokens, lens, k_cache, v_cache)
+        lens = lens + 1
+        outs.append(tokens)
+    return jnp.stack(outs), k_cache, v_cache
+
+
+def empty_cache(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.decode_batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def manifest_dict(cfg: ModelConfig, chunks, batches):
+    """The manifest the Rust runtime consumes (see rust/src/runtime)."""
+    return {
+        "model": {**cfg.to_json(), "param_count": param_count(cfg)},
+        "dtype": "f32",
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in param_specs(cfg)
+        ],
+        "artifacts": (
+            [{"file": f"prefill_t{n}.hlo.txt", "kind": "prefill", "chunk": n} for n in chunks]
+            + [{"file": f"decode_b{b}.hlo.txt", "kind": "decode", "batch": b} for b in batches]
+            + [{"file": "decode_m8.hlo.txt", "kind": "decode_multi", "steps": 8}]
+        ),
+    }
+
+
+if __name__ == "__main__":
+    cfg = ModelConfig()
+    print(json.dumps(manifest_dict(cfg, [16, 64], [cfg.decode_batch]), indent=2)[:400])
+    print("params:", param_count(cfg))

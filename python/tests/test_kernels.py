@@ -1,0 +1,227 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer. Shapes and
+parameters are swept (hypothesis is not available in the offline image, so
+the sweep is an explicit parameter grid plus seeded random draws — same
+coverage, deterministic).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention, flash_prefill
+from compile.kernels.ref import decode_attention_ref, flash_prefill_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+PREFILL_GRID = [
+    # (H, H_kv, N, S, D, start)
+    (8, 4, 64, 256, 32, 0),       # cold prefill from empty cache
+    (8, 4, 64, 256, 32, 100),     # resume prefill mid-cache
+    (8, 8, 32, 128, 32, 96),      # MHA (no GQA grouping)
+    (4, 1, 16, 512, 64, 496),     # extreme GQA, chunk at cache tail
+    (8, 2, 128, 512, 16, 64),     # small head dim
+    (2, 2, 16, 128, 128, 0),      # large head dim
+]
+
+
+@pytest.mark.parametrize("h,h_kv,n,s,d,start", PREFILL_GRID)
+def test_flash_prefill_matches_ref(h, h_kv, n, s, d, start):
+    key = jax.random.PRNGKey(hash((h, h_kv, n, s, d, start)) % (2**31))
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (h, n, d))
+    k = rand(ks[1], (h_kv, s, d))
+    v = rand(ks[2], (h_kv, s, d))
+    out = flash_prefill(q, k, v, jnp.int32(start))
+    ref = flash_prefill_ref(q, k, v, jnp.int32(start))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 32), (32, 64), (64, 128), (64, 256)])
+def test_flash_prefill_block_size_invariance(block_q, block_k):
+    """Tiling must never change the math."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    h, h_kv, n, s, d = 8, 4, 64, 256, 32
+    q = rand(ks[0], (h, n, d))
+    k = rand(ks[1], (h_kv, s, d))
+    v = rand(ks[2], (h_kv, s, d))
+    ref = flash_prefill_ref(q, k, v, jnp.int32(32))
+    out = flash_prefill(q, k, v, jnp.int32(32), block_q=block_q, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_flash_prefill_causality():
+    """Future cache contents must not influence the output."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    h, h_kv, n, s, d = 4, 2, 32, 256, 32
+    start = 64
+    q = rand(ks[0], (h, n, d))
+    k = rand(ks[1], (h_kv, s, d))
+    v = rand(ks[2], (h_kv, s, d))
+    out1 = flash_prefill(q, k, v, jnp.int32(start))
+    # Corrupt all cache positions beyond the causal horizon.
+    horizon = start + n
+    noise = rand(ks[3], (h_kv, s - horizon, d), scale=100.0)
+    k2 = k.at[:, horizon:, :].set(noise)
+    v2 = v.at[:, horizon:, :].set(noise)
+    out2 = flash_prefill(q, k2, v2, jnp.int32(start))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=0, atol=0)
+
+
+def test_flash_prefill_prefix_influences():
+    """Cached prefix MUST influence the output (sanity anti-test)."""
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 4)
+    h, h_kv, n, s, d = 4, 2, 32, 256, 32
+    q = rand(ks[0], (h, n, d))
+    k = rand(ks[1], (h_kv, s, d))
+    v = rand(ks[2], (h_kv, s, d))
+    out1 = flash_prefill(q, k, v, jnp.int32(64))
+    k2 = k.at[:, :32, :].add(1.0)
+    out2 = flash_prefill(q, k2, v, jnp.int32(64))
+    assert not np.allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_flash_prefill_random_seeds_sweep():
+    """Seeded random sweep over moderate shapes (oracle equivalence)."""
+    rng = np.random.RandomState(0)
+    for trial in range(8):
+        h_kv = int(rng.choice([1, 2, 4]))
+        group = int(rng.choice([1, 2, 4]))
+        h = h_kv * group
+        n = int(rng.choice([16, 32, 64]))
+        s = int(rng.choice([128, 256]))
+        d = int(rng.choice([16, 32, 64]))
+        start = int(rng.randint(0, s - n + 1))
+        key = jax.random.PRNGKey(trial)
+        ks = jax.random.split(key, 3)
+        q = rand(ks[0], (h, n, d))
+        k = rand(ks[1], (h_kv, s, d))
+        v = rand(ks[2], (h_kv, s, d))
+        out = flash_prefill(q, k, v, jnp.int32(start))
+        ref = flash_prefill_ref(q, k, v, jnp.int32(start))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+DECODE_GRID = [
+    # (B, H, H_kv, S, D)
+    (1, 8, 4, 256, 32),
+    (4, 8, 4, 256, 32),
+    (4, 8, 8, 128, 32),
+    (8, 4, 1, 512, 64),
+    (2, 2, 2, 128, 128),
+]
+
+
+@pytest.mark.parametrize("b,h,h_kv,s,d", DECODE_GRID)
+def test_decode_attention_matches_ref(b, h, h_kv, s, d):
+    key = jax.random.PRNGKey(hash((b, h, h_kv, s, d)) % (2**31))
+    ks = jax.random.split(key, 4)
+    q = rand(ks[0], (b, h, d))
+    k = rand(ks[1], (b, h_kv, s, d))
+    v = rand(ks[2], (b, h_kv, s, d))
+    lens = jax.random.randint(ks[3], (b,), 0, s, dtype=jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_respects_lens():
+    """Positions beyond lens[b] must not influence row b."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    b, h, h_kv, s, d = 4, 8, 4, 256, 32
+    q = rand(ks[0], (b, h, d))
+    k = rand(ks[1], (b, h_kv, s, d))
+    v = rand(ks[2], (b, h_kv, s, d))
+    lens = jnp.array([10, 50, 100, 200], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    noise = rand(ks[3], (b, h_kv, s, d), scale=50.0)
+    mask = jnp.arange(s)[None, None, :, None] > lens[:, None, None, None]
+    k2 = jnp.where(mask, noise, k)
+    v2 = jnp.where(mask, noise, v)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=0, atol=0)
+
+
+def test_decode_attention_len_zero_attends_only_position_zero():
+    """lens=0 attends exactly to position 0 (the just-written KV)."""
+    b, h, h_kv, s, d = 1, 2, 2, 64, 16
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (b, h, d))
+    k = rand(ks[1], (b, h_kv, s, d))
+    v = rand(ks[2], (b, h_kv, s, d))
+    out = decode_attention(q, k, v, jnp.zeros((b,), jnp.int32))
+    # Softmax over one position = that position's value.
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0, :, 0, :]), **TOL)
+
+
+def test_decode_rows_isolated():
+    """Changing row 1's cache must not change row 0's output."""
+    b, h, h_kv, s, d = 2, 4, 2, 128, 32
+    key = jax.random.PRNGKey(8)
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (b, h, d))
+    k = rand(ks[1], (b, h_kv, s, d))
+    v = rand(ks[2], (b, h_kv, s, d))
+    lens = jnp.array([64, 64], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    k2 = k.at[1].add(3.0)
+    out2 = decode_attention(q, k2, v, lens)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]), rtol=0, atol=0)
+    assert not np.allclose(np.asarray(out1[1]), np.asarray(out2[1]))
+
+
+def test_flash_prefill_bf16():
+    """Reduced-precision path: bf16 inputs, f32 accumulation inside the
+    kernel (preferred_element_type) — loose tolerance vs the f32 oracle."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 3)
+    h, h_kv, n, s, d = 8, 4, 32, 128, 32
+    q = rand(ks[0], (h, n, d)).astype(jnp.bfloat16)
+    k = rand(ks[1], (h_kv, s, d)).astype(jnp.bfloat16)
+    v = rand(ks[2], (h_kv, s, d)).astype(jnp.bfloat16)
+    out = flash_prefill(q, k, v, jnp.int32(16))
+    ref = flash_prefill_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), jnp.int32(16)
+    )
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_decode_attention_bf16():
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 4)
+    b, h, h_kv, s, d = 2, 4, 2, 128, 32
+    q = rand(ks[0], (b, h, d)).astype(jnp.bfloat16)
+    k = rand(ks[1], (b, h_kv, s, d)).astype(jnp.bfloat16)
+    v = rand(ks[2], (b, h_kv, s, d)).astype(jnp.bfloat16)
+    lens = jnp.array([30, 100], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), lens
+    )
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), rtol=2e-2, atol=2e-2
+    )

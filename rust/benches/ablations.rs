@@ -1,0 +1,125 @@
+//! Design-choice ablation sweeps (DESIGN.md §5) beyond the paper's Fig. 7:
+//!
+//! - **Green-Context granularity** (slot count ⇒ δ in Theorem 1): coarser
+//!   slots overshoot the decode reservation more, costing prefill service —
+//!   measured TTFT/throughput vs the analytic ρ bound side by side.
+//! - **Control interval Δt**: slower control loops react late to TPOT
+//!   pressure (tail grows) but rebind less.
+//! - **Resume budget rerouting**: disable rerouting (B fixed at B_max, all
+//!   resumes merge) vs the dynamic budget.
+//! - **vLLM chunk size** and **SGLang static split**: baseline sensitivity.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::coordinator::CompetitiveAnalyzer;
+use agentserve::engine::{run_sim, AgentServeOpts, Policy, SimParams};
+use agentserve::gpusim::CostModel;
+use agentserve::greenctx::GreenContextPool;
+use agentserve::workload::WorkloadKind;
+
+fn params(n: usize) -> SimParams {
+    SimParams {
+        n_agents: n,
+        sessions_per_agent: 2,
+        workload: WorkloadKind::ReAct,
+        ..SimParams::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let base = Config::preset(ModelKind::Qwen7B, GpuKind::A5000);
+
+    println!("\n== ablation: Green-Context granularity (N=5, 7B/A5000) ==");
+    println!(
+        "{:<8} {:>6} {:>10} {:>10} {:>9} {:>12}",
+        "slots", "g(SMs)", "TTFT p95", "TPOT p95", "tok/s", "rho bound"
+    );
+    for slots in [2usize, 4, 10, 20] {
+        let mut cfg = base.clone();
+        cfg.engine.green_slots = slots;
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &params(5));
+        // Theorem-1 bound with delta = one slot of overshoot.
+        let pool = GreenContextPool::new(cfg.gpu.sm_count, slots, cfg.engine.rebind_us);
+        let cost = CostModel::new(&cfg.model, &cfg.gpu);
+        let analyzer =
+            CompetitiveAnalyzer::new(cost, pool.slot_sizes().to_vec(), cfg.gpu.sm_count);
+        let rho = analyzer
+            .bound(&cfg.slo, pool.granularity(), 0.01, out.eta_cold)
+            .map(|b| b.rho_bound)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{:<8} {:>6} {:>8.0}ms {:>8.1}ms {:>9.1} {:>12.3}",
+            slots,
+            pool.granularity(),
+            out.report.ttft.p95,
+            out.report.tpot.p95,
+            out.report.throughput_tok_s,
+            rho
+        );
+    }
+    println!("(expect: coarser slots (larger delta) => lower rho bound and lower prefill service)");
+
+    println!("\n== ablation: control interval Δt (N=5, 7B/A5000) ==");
+    println!("{:<10} {:>10} {:>10} {:>9} {:>9}", "Δt (ms)", "TTFT p95", "TPOT p95", "tok/s", "SLO");
+    for interval in [12.5, 25.0, 50.0, 200.0, 800.0] {
+        let mut cfg = base.clone();
+        cfg.scheduler.interval_ms = interval;
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &params(5));
+        println!(
+            "{:<10} {:>8.0}ms {:>8.1}ms {:>9.1} {:>8.1}%",
+            interval,
+            out.report.ttft.p95,
+            out.report.tpot.p95,
+            out.report.throughput_tok_s,
+            out.slo.rate() * 100.0
+        );
+    }
+    println!("(expect: very slow loops let TPOT pressure linger => worse tails)");
+
+    println!("\n== ablation: resume-budget rerouting (N=5, 7B/A5000) ==");
+    for (label, b_min, b_max) in [
+        ("dynamic budget", 16u32, 512u32),
+        ("no rerouting (B pinned at max)", 4096, 4096),
+        ("no merging (B pinned at 0-ish)", 1, 1),
+    ] {
+        let mut cfg = base.clone();
+        cfg.scheduler.b_min = b_min;
+        cfg.scheduler.b_max = b_max;
+        cfg.scheduler.b_init = b_min.max(cfg.scheduler.b_init.min(b_max));
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &params(5));
+        println!(
+            "{:<32} TTFT p95 {:>6.0}ms  TPOT p95 {:>6.1}ms  tok/s {:>6.1}  SLO {:>5.1}%",
+            label,
+            out.report.ttft.p95,
+            out.report.tpot.p95,
+            out.report.throughput_tok_s,
+            out.slo.rate() * 100.0
+        );
+    }
+
+    println!("\n== baseline sensitivity: vLLM chunk size (N=5, 7B/A5000) ==");
+    for chunk in [64usize, 128, 256, 512, 1024] {
+        let mut cfg = base.clone();
+        cfg.engine.chunk_size = chunk;
+        let out = run_sim(&cfg, Policy::Vllm, &params(5));
+        println!(
+            "chunk {:<5} TTFT p95 {:>7.0}ms  TPOT p95 {:>6.1}ms  tok/s {:>6.1}",
+            chunk, out.report.ttft.p95, out.report.tpot.p95, out.report.throughput_tok_s
+        );
+    }
+    println!("(the paper's chunking tension: small chunks protect TPOT but repeat weight reads)");
+
+    println!("\n== baseline sensitivity: SGLang static decode share (N=5, 7B/A5000) ==");
+    for share in [0.3, 0.4, 0.5, 0.6, 0.7] {
+        let out = run_sim(
+            &base,
+            Policy::Sglang(agentserve::engine::SglangOpts { decode_share: share }),
+            &params(5),
+        );
+        println!(
+            "share {:.1}  TTFT p95 {:>7.0}ms  TPOT p95 {:>6.1}ms  tok/s {:>6.1}",
+            share, out.report.ttft.p95, out.report.tpot.p95, out.report.throughput_tok_s
+        );
+    }
+    println!("(no static split wins both axes — the motivation for dynamic partitioning)");
+    Ok(())
+}

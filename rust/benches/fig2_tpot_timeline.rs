@@ -1,0 +1,26 @@
+//! Bench + regeneration for Fig. 2: TPOT timeline under mixed execution.
+//! Prints the paper's series (via the figures harness) and times the
+//! underlying simulation.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_sim, Policy, SimParams};
+use agentserve::util::bench::Bench;
+use agentserve::workload::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::fig2_tpot_timeline(None)?;
+    let b = Bench::new("fig2");
+    for model in [ModelKind::Qwen3B, ModelKind::Qwen7B] {
+        let cfg = Config::preset(model, GpuKind::A5000);
+        let params = SimParams {
+            n_agents: 3,
+            sessions_per_agent: 2,
+            workload: WorkloadKind::ReAct,
+            ..SimParams::default()
+        };
+        b.case(&format!("mixed_timeline_{model}"), || {
+            run_sim(&cfg, Policy::LlamaCpp, &params)
+        });
+    }
+    Ok(())
+}

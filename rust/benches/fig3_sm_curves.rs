@@ -1,0 +1,23 @@
+//! Bench + regeneration for Fig. 3: per-phase throughput vs SM share.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::gpusim::{CostModel, Phase};
+use agentserve::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::fig3_sm_curves(None)?;
+    let cfg = Config::preset(ModelKind::Qwen7B, GpuKind::Rtx5090);
+    let cost = CostModel::new(&cfg.model, &cfg.gpu);
+    let b = Bench::new("fig3").with_iters(3, 30);
+    b.case("full_share_sweep_30pts", || {
+        let mut acc = 0.0;
+        for i in 1..=30 {
+            let x = i as f64 / 30.0;
+            acc += cost.decode_throughput(4, 12_000, x);
+            acc += cost.prefill_throughput(3000, x, Phase::ColdPrefill);
+            acc += cost.prefill_throughput(128, x, Phase::ResumePrefill);
+        }
+        acc
+    });
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration for Fig. 5: the full latency/throughput grid
+//! (3 models x 2 GPUs x N=3..6 x 4 policies).
+
+use agentserve::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::fig5_latency_throughput(None)?;
+    let b = Bench::new("fig5").with_iters(0, 3);
+    b.case("full_grid_96_cells", agentserve::server::figures::run_grid);
+    Ok(())
+}

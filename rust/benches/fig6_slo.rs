@@ -1,0 +1,5 @@
+//! Bench + regeneration for Fig. 6: session-level SLO attainment grid.
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::fig6_slo_attainment(None)
+}

@@ -1,0 +1,16 @@
+//! Bench + regeneration for Fig. 7: No-Alg / No-Green ablation.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_sim, Policy, SimParams};
+use agentserve::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::fig7_ablation(None)?;
+    let b = Bench::new("fig7").with_iters(1, 5);
+    let cfg = Config::preset(ModelKind::Qwen7B, GpuKind::A5000);
+    for policy in Policy::ablation_lineup() {
+        let params = SimParams { n_agents: 4, sessions_per_agent: 2, ..SimParams::default() };
+        b.case(policy.name(), || run_sim(&cfg, policy, &params));
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Hot-path micro-benchmarks (the §Perf iteration targets):
+//! scheduler ticks, classification, queue ops, batch formation, KV radix
+//! lookups, cost-model pricing, and one end-to-end simulated run.
+
+use agentserve::config::{Config, GpuKind, ModelKind, SchedulerConfig};
+use agentserve::coordinator::{DecodeBatcher, PrefillJob, RequestManager, TpotScheduler};
+use agentserve::engine::{run_sim, Policy, SimParams};
+use agentserve::gpusim::{CostModel, Phase};
+use agentserve::greenctx::GreenContextPool;
+use agentserve::kvcache::{BlockAllocator, RadixPrefixCache};
+use agentserve::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("hotpath").with_iters(3, 20);
+
+    // Scheduler: 10k record+tick cycles.
+    b.case("scheduler_10k_ticks", || {
+        let mut s = TpotScheduler::new(SchedulerConfig::default(), 64);
+        for i in 0..10_000u64 {
+            s.record_decode_step(20_000.0 + (i % 7) as f64 * 9_000.0);
+            s.tick(i * 50_000);
+        }
+        s.r_min()
+    });
+
+    // Classification: 100k requests.
+    b.case("classify_100k", || {
+        let mut m = RequestManager::new();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            let job = PrefillJob::resume(i, (i % 300) as u32, 3000, i);
+            acc += matches!(
+                m.classify(&job, 128),
+                agentserve::coordinator::Classification::DecodeQueue
+            ) as u64;
+        }
+        acc
+    });
+
+    // Decode batch formation: 64 streams, 10k batches.
+    b.case("batcher_10k_batches_64_streams", || {
+        let mut batcher = DecodeBatcher::new(8);
+        for id in 0..64u64 {
+            batcher.join(id, 3000, 1_000_000);
+        }
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            let (ids, _) = batcher.next_batch();
+            acc += ids.len() as u64;
+            batcher.complete_step(&ids);
+        }
+        acc
+    });
+
+    // Green-context rebinds: 100k.
+    b.case("greenctx_100k_rebinds", || {
+        let mut pool = GreenContextPool::new(64, 10, 50.0);
+        let mut acc = 0.0;
+        for i in 0..100_000u32 {
+            acc += pool.rebind(i % 64 + 1).1;
+        }
+        acc
+    });
+
+    // Radix prefix cache: 1k inserts + 10k lookups over shared prompts.
+    b.case("radix_1k_inserts_10k_lookups", || {
+        let mut alloc = BlockAllocator::new(100_000, 16);
+        let mut radix = RadixPrefixCache::new();
+        for t in 0..8u32 {
+            let prompt: Vec<u32> = (0..3072).map(|i| i * 7 + t * 1000).collect();
+            let blocks = alloc.allocate_for_tokens(3072).unwrap();
+            radix.insert(&prompt, &blocks, &mut alloc);
+        }
+        let mut acc = 0usize;
+        for t in 0..8u32 {
+            let prompt: Vec<u32> = (0..3072).map(|i| i * 7 + t * 1000).collect();
+            for _ in 0..1250 {
+                let (hit, leased) = radix.lookup(&prompt, &mut alloc);
+                acc += hit;
+                for b in leased {
+                    alloc.release(b).unwrap();
+                }
+            }
+        }
+        acc
+    });
+
+    // Cost model pricing: 100k kernel estimates.
+    let cfg = Config::preset(ModelKind::Qwen7B, GpuKind::A5000);
+    let cost = CostModel::new(&cfg.model, &cfg.gpu);
+    b.case("costmodel_100k_kernels", || {
+        let mut acc = 0.0;
+        for i in 0..100_000u64 {
+            let x = (i % 10 + 1) as f64 / 10.0;
+            acc += cost.decode_step_us(4, 12_000, x);
+            acc += cost.prefill_ctx_us(64, 3000, x, Phase::ResumePrefill);
+        }
+        acc
+    });
+
+    // End-to-end simulated run (the figures' unit of work).
+    b.case("end_to_end_sim_n4", || {
+        let params = SimParams { n_agents: 4, sessions_per_agent: 2, ..SimParams::default() };
+        run_sim(&cfg, Policy::AgentServe(Default::default()), &params)
+            .report
+            .total_tokens
+    });
+
+    Ok(())
+}

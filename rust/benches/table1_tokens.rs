@@ -1,0 +1,15 @@
+//! Bench + regeneration for Table I: token distributions per workload/model.
+
+use agentserve::config::ModelKind;
+use agentserve::util::bench::Bench;
+use agentserve::workload::{TokenStats, WorkloadGenerator, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    agentserve::server::figures::table1_token_distribution(None)?;
+    let b = Bench::new("table1").with_iters(1, 10);
+    b.case("generate_300_sessions_with_stats", || {
+        let mut g = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen7B, 11);
+        TokenStats::from_sessions(&g.sessions(300))
+    });
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Agent clients: session scripts scaled for the real (tiny-model) engine.
+//!
+//! The Application Layer of the paper (§III-A) is an agent framework
+//! (LangChain/AutoGen-style) driving reasoning-action loops. For the
+//! end-to-end examples we synthesize those loops: each agent runs ReAct or
+//! Plan-and-Execute sessions whose token counts are scaled to the tiny
+//! model's `max_seq` budget (the real engine clamps further as needed).
+
+use crate::config::ModelKind;
+use crate::workload::{SessionScript, WorkloadGenerator, WorkloadKind};
+
+/// Generate `n` agent sessions for the real engine.
+pub fn tiny_sessions(kind: WorkloadKind, n: usize, seed: u64) -> Vec<SessionScript> {
+    let mut gen = WorkloadGenerator::new(kind, ModelKind::Tiny, seed);
+    gen.sessions(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sessions_generate() {
+        let s = tiny_sessions(WorkloadKind::ReAct, 4, 1);
+        assert_eq!(s.len(), 4);
+        for sess in &s {
+            assert!(sess.cold_prefill_tokens > 0);
+            assert!(!sess.steps.is_empty());
+        }
+    }
+}

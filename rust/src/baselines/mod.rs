@@ -1,0 +1,50 @@
+//! Baseline serving policies (§IV-A Baselines).
+//!
+//! The paper compares against three representative single-GPU serving
+//! engines, all with prefix caching. We implement each as a *scheduling
+//! policy* over the same engine substrate (cost model, KV manager, metrics),
+//! which isolates exactly the variable the paper studies — the scheduler:
+//!
+//! | Paper baseline | Policy | Mechanism modelled |
+//! |---|---|---|
+//! | SGLang | [`sglang`] | static PD disaggregation: dual engines with a fixed SM split; *all* prefills (cold and resume, treated uniformly) share one FIFO engine; every prefill→decode handoff pays KV-transfer + process-coordination overhead |
+//! | vLLM | [`vllm`] | continuous batching with chunked prefill: each iteration carries every decode stream plus up to `chunk_size` tokens of the oldest pending prompt; chunk boundaries perturb decode cadence |
+//! | llama.cpp | [`llamacpp`] | unchunked mixed batching: pending prompts ride whole in the next iteration; a 3k-token cold prefill stalls every concurrent stream (the Fig. 2 head-of-line spikes) |
+//!
+//! The drivers live in [`crate::engine::sim`]; this module provides the
+//! canonical constructors used by benches/figures.
+
+use crate::engine::{Policy, SglangOpts};
+
+/// SGLang-style static PD disaggregation.
+pub fn sglang() -> Policy {
+    Policy::Sglang(SglangOpts::default())
+}
+
+/// SGLang with a custom static decode share (ablation sweeps).
+pub fn sglang_with_share(decode_share: f64) -> Policy {
+    Policy::Sglang(SglangOpts { decode_share })
+}
+
+/// vLLM-style chunked-prefill continuous batching.
+pub fn vllm() -> Policy {
+    Policy::Vllm
+}
+
+/// llama.cpp-style unchunked mixed batching.
+pub fn llamacpp() -> Policy {
+    Policy::LlamaCpp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_name_correctly() {
+        assert_eq!(sglang().name(), "SGLang");
+        assert_eq!(vllm().name(), "vLLM");
+        assert_eq!(llamacpp().name(), "llama.cpp");
+        assert_eq!(sglang_with_share(0.3).name(), "SGLang");
+    }
+}

@@ -1,0 +1,52 @@
+//! Perf probe (§Perf L3): single-step vs fused multi-step decode on the
+//! real PJRT engine. Kept as a binary so the EXPERIMENTS.md numbers are
+//! one command away: `cargo run --release --bin perf_probe`.
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut eng = agentserve::runtime::PjrtEngine::load("artifacts")?;
+    let b = eng.geometry().decode_batch;
+    let first = eng.prefill(0, 0, &vec![1i32; 128])?;
+    let mut toks = vec![0i32; b];
+    let mut lens = vec![0i32; b];
+    toks[0] = first;
+    lens[0] = 128;
+
+    // Single-step path: 32 tokens.
+    let t0 = Instant::now();
+    let mut single_seq = Vec::new();
+    for _ in 0..32 {
+        let out = eng.decode_step(&toks, &lens)?;
+        toks[0] = out.next_tokens[0];
+        single_seq.push(out.next_tokens[0]);
+        lens[0] += 1;
+    }
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Reset and replay with the fused artifact.
+    eng.reset_cache()?;
+    let first2 = eng.prefill(0, 0, &vec![1i32; 128])?;
+    assert_eq!(first, first2);
+    toks = vec![0i32; b];
+    lens = vec![0i32; b];
+    toks[0] = first2;
+    lens[0] = 128;
+    let k = eng.multi_steps();
+    let t1 = Instant::now();
+    let mut multi_seq = Vec::new();
+    for _ in 0..(32 / k) {
+        let (steps, _) = eng.decode_multi(&toks, &lens)?;
+        for s in &steps {
+            multi_seq.push(s[0]);
+        }
+        toks[0] = steps[k - 1][0];
+        lens[0] += k as i32;
+    }
+    let multi_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(single_seq, multi_seq, "fused path must match single-step tokens");
+    println!("single-step: {:.1} ms for 32 tokens ({:.2} ms/tok)", single_ms, single_ms / 32.0);
+    println!("multi-step(K={k}): {:.1} ms for 32 tokens ({:.2} ms/tok)", multi_ms, multi_ms / 32.0);
+    println!("speedup: {:.2}x", single_ms / multi_ms);
+    Ok(())
+}

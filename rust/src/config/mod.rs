@@ -1,0 +1,294 @@
+//! Configuration system: model profiles, GPU profiles, scheduler parameters,
+//! workload parameters, and SLO calibration.
+//!
+//! Every experiment in the paper sweeps a (model × GPU × concurrency ×
+//! policy) grid; this module is the single source of truth for those axes.
+//! Configs load from JSON files (`--config path`, via the in-tree parser)
+//! with built-in presets matching the paper's setup (§IV-A).
+
+mod gpu;
+mod model;
+mod scheduler;
+mod slo;
+
+pub use gpu::{GpuProfile, GpuKind};
+pub use model::{ModelProfile, ModelKind};
+pub use scheduler::SchedulerConfig;
+pub use slo::SloConfig;
+
+use crate::util::json::{parse, Value};
+use std::path::Path;
+
+/// Top-level configuration for a serving run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// GPU the cost model simulates (ignored by the real PJRT backend).
+    pub gpu: GpuProfile,
+    /// Model whose per-phase costs drive the simulator.
+    pub model: ModelProfile,
+    /// Algorithm-1 scheduler parameters.
+    pub scheduler: SchedulerConfig,
+    /// SLO thresholds (calibrated per model-device pair; §IV-A Metrics).
+    pub slo: SloConfig,
+    /// Engine-level knobs.
+    pub engine: EngineConfig,
+}
+
+/// Engine-level knobs shared by all policies.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Maximum decode batch size (slots).
+    pub max_decode_batch: usize,
+    /// KV cache capacity in blocks.
+    pub kv_blocks: usize,
+    /// KV block size in tokens.
+    pub kv_block_size: usize,
+    /// Chunk size used by the vLLM-style chunked-prefill baseline (tokens).
+    pub chunk_size: usize,
+    /// Per-handoff KV transfer + process coordination overhead for the
+    /// SGLang-style dual-engine PD baseline (microseconds per KV token).
+    pub pd_transfer_us_per_token: f64,
+    /// Fixed per-handoff process coordination cost (microseconds).
+    pub pd_handoff_fixed_us: f64,
+    /// Green-Context rebind cost (microseconds; paper: < 50 us).
+    pub rebind_us: f64,
+    /// Number of pre-established Green Context slots (paper: 10).
+    pub green_slots: usize,
+    /// On-demand stream/context allocation cost paid per prefill launch by
+    /// the No-Green ablation (microseconds) — the overhead pre-established
+    /// contexts avoid (§III-C).
+    pub stream_alloc_us: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_decode_batch: 8,
+            kv_blocks: 4096,
+            kv_block_size: 16,
+            chunk_size: 256,
+            pd_transfer_us_per_token: 2.0,
+            pd_handoff_fixed_us: 1500.0,
+            rebind_us: 50.0,
+            green_slots: 10,
+            stream_alloc_us: 300.0,
+        }
+    }
+}
+
+impl Config {
+    /// Preset matching one of the paper's (model, GPU) cells.
+    pub fn preset(model: ModelKind, gpu: GpuKind) -> Self {
+        let gpu = GpuProfile::preset(gpu);
+        let model = ModelProfile::preset(model);
+        let slo = SloConfig::calibrate(&model, &gpu);
+        // Both the SLO thresholds and the controller's theta bounds are
+        // calibrated from the pair's isolated performance (SIV-A).
+        let mut scheduler =
+            SchedulerConfig::calibrated(SloConfig::isolated_decode_ms(&model, &gpu));
+        // Reservation bounds scale with the device: the decode floor sits at
+        // the saturation knee of mu_D (Fig. 3, ~25% of SMs), adjustments move
+        // one slot (10%) at a time.
+        scheduler.r_base = gpu.sm_count / 4;
+        scheduler.r_init = (3 * gpu.sm_count) / 8;
+        scheduler.delta_r = (gpu.sm_count / 10).max(1);
+        Self {
+            gpu,
+            model,
+            scheduler,
+            slo,
+            engine: EngineConfig::default(),
+        }
+    }
+
+    /// Load from a JSON file. Fields are sparse overrides on top of the
+    /// preset named by `model`/`gpu` (or the default preset).
+    pub fn from_path(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let v = parse(&text)?;
+        let cfg = Self::from_value(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        self.to_value().to_string_pretty()
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("model", self.model.kind.name().into()),
+            ("gpu", self.gpu.kind.name().into()),
+            (
+                "scheduler",
+                Value::obj(vec![
+                    ("theta_low_ms", self.scheduler.theta_low_ms.into()),
+                    ("theta_high_ms", self.scheduler.theta_high_ms.into()),
+                    ("delta_r", self.scheduler.delta_r.into()),
+                    ("delta_b", self.scheduler.delta_b.into()),
+                    ("interval_ms", self.scheduler.interval_ms.into()),
+                    ("b_min", self.scheduler.b_min.into()),
+                    ("b_max", self.scheduler.b_max.into()),
+                    ("b_init", self.scheduler.b_init.into()),
+                    ("r_base", self.scheduler.r_base.into()),
+                    ("r_init", self.scheduler.r_init.into()),
+                ]),
+            ),
+            (
+                "slo",
+                Value::obj(vec![
+                    ("ttft_ms", self.slo.ttft_ms.into()),
+                    ("tpot_ms", self.slo.tpot_ms.into()),
+                    ("scale", self.slo.scale.into()),
+                ]),
+            ),
+            (
+                "engine",
+                Value::obj(vec![
+                    ("max_decode_batch", self.engine.max_decode_batch.into()),
+                    ("kv_blocks", self.engine.kv_blocks.into()),
+                    ("kv_block_size", self.engine.kv_block_size.into()),
+                    ("chunk_size", self.engine.chunk_size.into()),
+                    ("pd_transfer_us_per_token", self.engine.pd_transfer_us_per_token.into()),
+                    ("pd_handoff_fixed_us", self.engine.pd_handoff_fixed_us.into()),
+                    ("rebind_us", self.engine.rebind_us.into()),
+                    ("green_slots", self.engine.green_slots.into()),
+                    ("stream_alloc_us", self.engine.stream_alloc_us.into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Build from a JSON value: `model`/`gpu` select the preset, then any
+    /// present scheduler/slo/engine fields override it.
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let model: ModelKind = v.get("model").and_then(|m| m.as_str()).unwrap_or("qwen3b").parse()?;
+        let gpu: GpuKind = v.get("gpu").and_then(|g| g.as_str()).unwrap_or("a5000").parse()?;
+        let mut cfg = Self::preset(model, gpu);
+        if let Some(s) = v.get("scheduler") {
+            let c = &mut cfg.scheduler;
+            override_f64(s, "theta_low_ms", &mut c.theta_low_ms);
+            override_f64(s, "theta_high_ms", &mut c.theta_high_ms);
+            override_u32(s, "delta_r", &mut c.delta_r);
+            override_u32(s, "delta_b", &mut c.delta_b);
+            override_f64(s, "interval_ms", &mut c.interval_ms);
+            override_u32(s, "b_min", &mut c.b_min);
+            override_u32(s, "b_max", &mut c.b_max);
+            override_u32(s, "b_init", &mut c.b_init);
+            override_u32(s, "r_base", &mut c.r_base);
+            override_u32(s, "r_init", &mut c.r_init);
+        }
+        if let Some(s) = v.get("slo") {
+            override_f64(s, "ttft_ms", &mut cfg.slo.ttft_ms);
+            override_f64(s, "tpot_ms", &mut cfg.slo.tpot_ms);
+            override_f64(s, "scale", &mut cfg.slo.scale);
+        }
+        if let Some(e) = v.get("engine") {
+            let c = &mut cfg.engine;
+            override_usize(e, "max_decode_batch", &mut c.max_decode_batch);
+            override_usize(e, "kv_blocks", &mut c.kv_blocks);
+            override_usize(e, "kv_block_size", &mut c.kv_block_size);
+            override_usize(e, "chunk_size", &mut c.chunk_size);
+            override_f64(e, "pd_transfer_us_per_token", &mut c.pd_transfer_us_per_token);
+            override_f64(e, "pd_handoff_fixed_us", &mut c.pd_handoff_fixed_us);
+            override_f64(e, "rebind_us", &mut c.rebind_us);
+            override_usize(e, "green_slots", &mut c.green_slots);
+            override_f64(e, "stream_alloc_us", &mut c.stream_alloc_us);
+        }
+        Ok(cfg)
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.gpu.sm_count > 0, "gpu.sm_count must be positive");
+        anyhow::ensure!(
+            self.engine.green_slots >= 2,
+            "need at least 2 green context slots for a decode/prefill split"
+        );
+        anyhow::ensure!(
+            self.scheduler.theta_low_ms < self.scheduler.theta_high_ms,
+            "theta_low must be below theta_high"
+        );
+        anyhow::ensure!(
+            self.scheduler.b_min <= self.scheduler.b_init
+                && self.scheduler.b_init <= self.scheduler.b_max,
+            "prefill budget bounds must satisfy b_min <= b_init <= b_max"
+        );
+        anyhow::ensure!(
+            self.engine.kv_block_size > 0 && self.engine.kv_blocks > 0,
+            "kv cache geometry must be positive"
+        );
+        Ok(())
+    }
+}
+
+fn override_f64(v: &Value, key: &str, slot: &mut f64) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
+        *slot = x;
+    }
+}
+
+fn override_u32(v: &Value, key: &str, slot: &mut u32) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
+        *slot = x as u32;
+    }
+}
+
+fn override_usize(v: &Value, key: &str, slot: &mut usize) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
+        *slot = x as usize;
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self::preset(ModelKind::Qwen3B, GpuKind::A5000)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for m in ModelKind::ALL {
+            for g in GpuKind::ALL {
+                Config::preset(m, g).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut cfg = Config::default();
+        cfg.scheduler.delta_b = 77;
+        cfg.engine.chunk_size = 123;
+        let text = cfg.to_json();
+        let back = Config::from_value(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.gpu.sm_count, cfg.gpu.sm_count);
+        assert_eq!(back.model.params_b, cfg.model.params_b);
+        assert_eq!(back.scheduler.delta_b, 77);
+        assert_eq!(back.engine.chunk_size, 123);
+    }
+
+    #[test]
+    fn invalid_thresholds_rejected() {
+        let mut cfg = Config::default();
+        cfg.scheduler.theta_low_ms = 100.0;
+        cfg.scheduler.theta_high_ms = 10.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_path_reads_file() {
+        let cfg = Config::default();
+        let dir = std::env::temp_dir().join("agentserve_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, cfg.to_json()).unwrap();
+        let back = Config::from_path(&p).unwrap();
+        assert_eq!(back.engine.green_slots, cfg.engine.green_slots);
+    }
+}

@@ -1,0 +1,171 @@
+//! Model profiles for the cost model.
+//!
+//! The paper evaluates Qwen2.5-3B, Qwen2.5-7B, and LLaMA-3-8B (§IV-A
+//! Models). The simulator needs per-token compute and memory costs:
+//! decode is bandwidth-bound (weights + KV read per token), prefill is
+//! compute-bound (2 * params FLOPs per token).
+//!
+//! A fourth profile, `Tiny`, describes the ~10M-parameter Qwen-style model
+//! that the real PJRT path actually executes (see `python/compile/model.py`).
+
+
+/// The models in the paper's testbed plus the real tiny model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Qwen3B,
+    Qwen7B,
+    Llama8B,
+    /// The ~10M-param model executed for real through PJRT (end-to-end example).
+    Tiny,
+}
+
+impl ModelKind {
+    /// The three paper models (the grid every figure sweeps).
+    pub const ALL: [ModelKind; 3] = [ModelKind::Qwen3B, ModelKind::Qwen7B, ModelKind::Llama8B];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Qwen3B => "Qwen2.5-3B",
+            ModelKind::Qwen7B => "Qwen2.5-7B",
+            ModelKind::Llama8B => "Llama-3-8B",
+            ModelKind::Tiny => "Tiny-10M",
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "qwen3b" | "qwen2.5-3b" | "3b" => Ok(ModelKind::Qwen3B),
+            "qwen7b" | "qwen2.5-7b" | "7b" => Ok(ModelKind::Qwen7B),
+            "llama8b" | "llama-3-8b" | "8b" => Ok(ModelKind::Llama8B),
+            "tiny" => Ok(ModelKind::Tiny),
+            other => anyhow::bail!("unknown model kind: {other} (expected 3b|7b|8b|tiny)"),
+        }
+    }
+}
+
+/// Per-model cost parameters consumed by [`crate::gpusim`].
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub kind: ModelKind,
+    /// Parameter count in billions.
+    pub params_b: f64,
+    /// Bytes per weight element after quantization (paper serves fp16/q8
+    /// SLMs on consumer GPUs; we use 2 bytes = fp16).
+    pub bytes_per_param: f64,
+    /// Hidden size (drives KV bytes per token).
+    pub hidden: u32,
+    /// Transformer layers.
+    pub layers: u32,
+    /// KV heads (GQA) and head dim: kv bytes/token = 2 * layers * kv_heads * head_dim * bytes.
+    pub kv_heads: u32,
+    pub head_dim: u32,
+    /// FLOPs per token ≈ 2 * params (forward only).
+    pub flops_per_token_g: f64,
+}
+
+impl ModelProfile {
+    pub fn preset(kind: ModelKind) -> Self {
+        match kind {
+            // Qwen2.5-3B: hidden 2048, 36 layers, 2 KV heads (GQA), head 128.
+            ModelKind::Qwen3B => Self {
+                kind,
+                params_b: 3.09,
+                bytes_per_param: 2.0,
+                hidden: 2048,
+                layers: 36,
+                kv_heads: 2,
+                head_dim: 128,
+                flops_per_token_g: 2.0 * 3.09,
+            },
+            // Qwen2.5-7B: hidden 3584, 28 layers, 4 KV heads, head 128.
+            ModelKind::Qwen7B => Self {
+                kind,
+                params_b: 7.62,
+                bytes_per_param: 2.0,
+                hidden: 3584,
+                layers: 28,
+                kv_heads: 4,
+                head_dim: 128,
+                flops_per_token_g: 2.0 * 7.62,
+            },
+            // Llama-3-8B: hidden 4096, 32 layers, 8 KV heads, head 128.
+            ModelKind::Llama8B => Self {
+                kind,
+                params_b: 8.03,
+                bytes_per_param: 2.0,
+                hidden: 4096,
+                layers: 32,
+                kv_heads: 8,
+                head_dim: 128,
+                flops_per_token_g: 2.0 * 8.03,
+            },
+            // The real PJRT model: python/compile/model.py defaults.
+            ModelKind::Tiny => Self {
+                kind,
+                params_b: 0.010,
+                bytes_per_param: 4.0,
+                hidden: 256,
+                layers: 4,
+                kv_heads: 4,
+                head_dim: 64,
+                flops_per_token_g: 2.0 * 0.010,
+            },
+        }
+    }
+
+    /// Model weight footprint in bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        self.params_b * 1e9 * self.bytes_per_param
+    }
+
+    /// KV cache bytes per token (both K and V across all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.layers as f64
+            * self.kv_heads as f64
+            * self.head_dim as f64
+            * self.bytes_per_param
+    }
+
+    /// Forward FLOPs for `t` tokens (prefill) or one step of batch `t` (decode).
+    pub fn flops(&self, t: u64) -> f64 {
+        self.flops_per_token_g * 1e9 * t as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_models_cost_more() {
+        let a = ModelProfile::preset(ModelKind::Qwen3B);
+        let b = ModelProfile::preset(ModelKind::Qwen7B);
+        let c = ModelProfile::preset(ModelKind::Llama8B);
+        assert!(a.weight_bytes() < b.weight_bytes());
+        assert!(b.weight_bytes() < c.weight_bytes());
+        assert!(a.flops(100) < c.flops(100));
+    }
+
+    #[test]
+    fn kv_bytes_sane() {
+        // Qwen2.5-3B GQA: 2*36*2*128*2 = 36,864 B/token.
+        let m = ModelProfile::preset(ModelKind::Qwen3B);
+        assert_eq!(m.kv_bytes_per_token() as u64, 36_864);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!("7b".parse::<ModelKind>().unwrap(), ModelKind::Qwen7B);
+        assert_eq!("tiny".parse::<ModelKind>().unwrap(), ModelKind::Tiny);
+        assert!("70b".parse::<ModelKind>().is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Algorithm-1 scheduler parameters (§III-B).
+//!
+//! The TPOT-driven feedback loop adjusts two control variables each control
+//! interval Δt: the resume-prefill token budget `B_prefill(t)` and the
+//! decode SM reservation `R_min(t)`.
+
+
+/// Parameters of the TPOT-driven resource scheduler (Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Lower TPOT threshold θ_low (ms): below it, relax protection.
+    pub theta_low_ms: f64,
+    /// Upper TPOT threshold θ_high (ms): above it, protect decodes.
+    pub theta_high_ms: f64,
+    /// SM adjustment step Δ_R (in SMs).
+    pub delta_r: u32,
+    /// Budget adjustment step Δ_B (in tokens).
+    pub delta_b: u32,
+    /// Control interval Δt (ms).
+    pub interval_ms: f64,
+    /// Resume-prefill budget bounds [B_min, B_max] and initial value.
+    pub b_min: u32,
+    pub b_max: u32,
+    pub b_init: u32,
+    /// Decode SM reservation floor R_base and initial R_min.
+    pub r_base: u32,
+    pub r_init: u32,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            theta_low_ms: 25.0,
+            theta_high_ms: 60.0,
+            delta_r: 8,
+            delta_b: 32,
+            interval_ms: 50.0,
+            b_min: 16,
+            b_max: 512,
+            b_init: 128,
+            r_base: 8,
+            r_init: 16,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Scale thresholds to a model-device pair: heavier models decode
+    /// slower, so θ bounds scale with the isolated decode step time
+    /// (the paper calibrates SLOs per pair the same way; §IV-A).
+    pub fn calibrated(isolated_tpot_ms: f64) -> Self {
+        let mut cfg = Self::default();
+        // Relax only with real headroom (below ~1.15x the isolated step);
+        // protect at 2x. The decode floor then parks at the mu_D knee.
+        cfg.theta_low_ms = isolated_tpot_ms * 1.3;
+        cfg.theta_high_ms = isolated_tpot_ms * 2.0;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ordering_holds() {
+        let c = SchedulerConfig::default();
+        assert!(c.theta_low_ms < c.theta_high_ms);
+        assert!(c.b_min <= c.b_init && c.b_init <= c.b_max);
+        assert!(c.r_base <= c.r_init);
+    }
+
+    #[test]
+    fn calibration_scales_with_isolated_tpot() {
+        let slow = SchedulerConfig::calibrated(40.0);
+        let fast = SchedulerConfig::calibrated(10.0);
+        assert!(slow.theta_high_ms > fast.theta_high_ms);
+        assert!(slow.theta_low_ms < slow.theta_high_ms);
+    }
+}

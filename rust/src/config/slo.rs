@@ -1,0 +1,94 @@
+//! SLO thresholds (§IV-A Metrics, §IV-C).
+//!
+//! "The thresholds τ_TTFT and τ_TPOT are determined for each model–device
+//! pair by profiling their isolated performance and scaling with a constant
+//! factor." A session attains the SLO only if BOTH its TTFT and every-token
+//! pacing stay within bounds (joint, session-level criterion).
+
+use super::{GpuProfile, ModelProfile};
+
+/// Joint TTFT + TPOT service-level objective for one model-device pair.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    /// TTFT bound τ_TTFT (ms).
+    pub ttft_ms: f64,
+    /// TPOT bound τ_TPOT (ms); r_min = 1000 / τ_TPOT tokens/s (Def. 1).
+    pub tpot_ms: f64,
+    /// Scaling factor applied to isolated-performance profiles.
+    pub scale: f64,
+}
+
+impl SloConfig {
+    /// Calibrate from isolated single-request performance estimates.
+    ///
+    /// Isolated TTFT ≈ cold-prefill time of a 3k-token prompt with the full
+    /// GPU; isolated TPOT ≈ batch-1 decode step time. Both are scaled by a
+    /// constant headroom factor (3x) as the paper describes.
+    pub fn calibrate(model: &ModelProfile, gpu: &GpuProfile) -> Self {
+        let scale = 3.0;
+        let isolated_ttft_ms = Self::isolated_prefill_ms(model, gpu, 3000);
+        let isolated_tpot_ms = Self::isolated_decode_ms(model, gpu);
+        Self {
+            ttft_ms: isolated_ttft_ms * scale,
+            tpot_ms: isolated_tpot_ms * scale,
+            scale,
+        }
+    }
+
+    /// Compute-bound prefill time estimate for `t` tokens on the full GPU.
+    pub fn isolated_prefill_ms(model: &ModelProfile, gpu: &GpuProfile, t: u64) -> f64 {
+        // Matches CostModel::max_compute_eff (large-prefill efficiency).
+        let eff = 0.18;
+        model.flops(t) / (gpu.peak_tflops * 1e12 * eff) * 1e3
+    }
+
+    /// Bandwidth-bound decode step time estimate (batch 1, full GPU).
+    pub fn isolated_decode_ms(model: &ModelProfile, gpu: &GpuProfile) -> f64 {
+        let bytes = model.weight_bytes();
+        bytes / (gpu.mem_bw_gbps * 1e9 * gpu.bw_saturation_frac) * 1e3
+    }
+
+    /// Decode SLO rate r_min = 1000 / τ_TPOT tokens/s (Definition 1, Eq. 2).
+    pub fn r_min_tokens_per_s(&self) -> f64 {
+        1000.0 / self.tpot_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, ModelKind};
+
+    #[test]
+    fn bigger_model_gets_looser_slo() {
+        let gpu = GpuProfile::preset(GpuKind::A5000);
+        let s3 = SloConfig::calibrate(&ModelProfile::preset(ModelKind::Qwen3B), &gpu);
+        let s8 = SloConfig::calibrate(&ModelProfile::preset(ModelKind::Llama8B), &gpu);
+        assert!(s8.ttft_ms > s3.ttft_ms);
+        assert!(s8.tpot_ms > s3.tpot_ms);
+    }
+
+    #[test]
+    fn faster_gpu_gets_tighter_slo() {
+        let m = ModelProfile::preset(ModelKind::Qwen7B);
+        let a = SloConfig::calibrate(&m, &GpuProfile::preset(GpuKind::A5000));
+        let b = SloConfig::calibrate(&m, &GpuProfile::preset(GpuKind::Rtx5090));
+        assert!(b.ttft_ms < a.ttft_ms);
+        assert!(b.tpot_ms < a.tpot_ms);
+    }
+
+    #[test]
+    fn r_min_matches_definition() {
+        let slo = SloConfig { ttft_ms: 1000.0, tpot_ms: 50.0, scale: 3.0 };
+        assert!((slo.r_min_tokens_per_s() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_estimate_is_bandwidth_bound_scale() {
+        // Qwen7B fp16 on A5000: ~15.2GB / (768GB/s * 0.82) ≈ 24 ms.
+        let m = ModelProfile::preset(ModelKind::Qwen7B);
+        let g = GpuProfile::preset(GpuKind::A5000);
+        let ms = SloConfig::isolated_decode_ms(&m, &g);
+        assert!(ms > 10.0 && ms < 50.0, "decode step {ms} ms out of plausible range");
+    }
+}

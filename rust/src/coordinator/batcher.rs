@@ -1,0 +1,168 @@
+//! Decode batch formation (continuous batching inside the decode context).
+//!
+//! Every decode step re-forms the batch from the set of decode-ready
+//! streams: sessions join as their prefills complete and leave as their
+//! structured outputs finish, without draining the batch (Orca-style
+//! iteration-level scheduling). The batcher enforces the slot cap and
+//! skips fenced sessions (prefill writes in flight; §III-C memory safety).
+
+use super::request::SessionId;
+use std::collections::BTreeMap;
+
+/// A decode-ready stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stream {
+    /// Cached context length (drives KV read cost of the step).
+    pub context: u32,
+    /// Tokens still to decode.
+    pub remaining: u32,
+    /// True while a prefill fence is open over this session's KV.
+    pub fenced: bool,
+}
+
+/// Continuous decode batcher.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeBatcher {
+    streams: BTreeMap<SessionId, Stream>,
+    max_batch: usize,
+}
+
+impl DecodeBatcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Self { streams: BTreeMap::new(), max_batch }
+    }
+
+    /// Register a stream (after its prefill completes).
+    pub fn join(&mut self, id: SessionId, context: u32, remaining: u32) {
+        self.streams.insert(id, Stream { context, remaining, fenced: false });
+    }
+
+    /// Remove a stream (session finished or evicted).
+    pub fn leave(&mut self, id: SessionId) -> Option<Stream> {
+        self.streams.remove(&id)
+    }
+
+    /// Set/clear the write fence for a session (resume prefill in flight).
+    pub fn set_fenced(&mut self, id: SessionId, fenced: bool) {
+        if let Some(s) = self.streams.get_mut(&id) {
+            s.fenced = fenced;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    pub fn get(&self, id: SessionId) -> Option<&Stream> {
+        self.streams.get(&id)
+    }
+
+    /// Form the next decode batch: up to `max_batch` unfenced streams with
+    /// tokens remaining, lowest session id first (deterministic), plus the
+    /// total context the step must read.
+    pub fn next_batch(&self) -> (Vec<SessionId>, u64) {
+        let mut ids = Vec::new();
+        let mut total_ctx = 0u64;
+        for (&id, s) in &self.streams {
+            if ids.len() >= self.max_batch {
+                break;
+            }
+            if !s.fenced && s.remaining > 0 {
+                ids.push(id);
+                total_ctx += s.context as u64;
+            }
+        }
+        (ids, total_ctx)
+    }
+
+    /// Apply one completed decode step for `ids`: each stream emits one
+    /// token (context grows, remaining shrinks). Returns sessions that just
+    /// finished their decode.
+    pub fn complete_step(&mut self, ids: &[SessionId]) -> Vec<SessionId> {
+        let mut finished = Vec::new();
+        for &id in ids {
+            if let Some(s) = self.streams.get_mut(&id) {
+                debug_assert!(s.remaining > 0 && !s.fenced);
+                s.remaining -= 1;
+                s.context += 1;
+                if s.remaining == 0 {
+                    finished.push(id);
+                }
+            }
+        }
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_caps_at_max() {
+        let mut b = DecodeBatcher::new(2);
+        for id in 0..4 {
+            b.join(id, 100, 10);
+        }
+        let (ids, _) = b.next_batch();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn fenced_streams_excluded() {
+        let mut b = DecodeBatcher::new(8);
+        b.join(1, 100, 5);
+        b.join(2, 100, 5);
+        b.set_fenced(1, true);
+        let (ids, ctx) = b.next_batch();
+        assert_eq!(ids, vec![2]);
+        assert_eq!(ctx, 100);
+        b.set_fenced(1, false);
+        let (ids, _) = b.next_batch();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn step_completion_advances_streams() {
+        let mut b = DecodeBatcher::new(8);
+        b.join(1, 100, 2);
+        b.join(2, 50, 1);
+        let (ids, _) = b.next_batch();
+        let done = b.complete_step(&ids);
+        assert_eq!(done, vec![2]);
+        assert_eq!(b.get(1).unwrap().remaining, 1);
+        assert_eq!(b.get(1).unwrap().context, 101);
+        let (ids, _) = b.next_batch();
+        assert_eq!(ids, vec![1]);
+        let done = b.complete_step(&ids);
+        assert_eq!(done, vec![1]);
+        let (ids, _) = b.next_batch();
+        assert!(ids.is_empty());
+    }
+
+    #[test]
+    fn leave_removes_stream() {
+        let mut b = DecodeBatcher::new(8);
+        b.join(1, 100, 5);
+        assert!(b.leave(1).is_some());
+        assert!(b.is_empty());
+        assert!(b.leave(1).is_none());
+    }
+
+    #[test]
+    fn exhausted_streams_not_batched() {
+        let mut b = DecodeBatcher::new(8);
+        b.join(1, 100, 1);
+        let (ids, _) = b.next_batch();
+        b.complete_step(&ids);
+        // Stream stays registered (awaiting tool call) but isn't batched.
+        assert_eq!(b.len(), 1);
+        let (ids, _) = b.next_batch();
+        assert!(ids.is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's system contribution (§III): phase-aware request management,
+//! TPOT-driven resource scheduling (Algorithm 1), dual queues, decode
+//! batching, and the competitive-ratio analysis (Theorem 1 / Corollary 2).
+//!
+//! - [`classifier`] — the Request Manager: cold prefill vs resume prefill
+//!   vs decode, with budget-based rerouting of oversized resumes.
+//! - [`scheduler`] — Algorithm 1: the feedback loop over `B_prefill(t)`
+//!   and `R_min(t)` driven by step-level TPOT.
+//! - [`queues`] — Q_D (decode + admitted resumes) and Q_P (cold + rerouted).
+//! - [`batcher`] — decode batch formation under slot and fence constraints.
+//! - [`analysis`] — profile-aware competitive-ratio bounds against the
+//!   SLO-feasible offline optimum.
+
+pub mod analysis;
+pub mod batcher;
+pub mod classifier;
+pub mod queues;
+pub mod request;
+pub mod scheduler;
+
+pub use analysis::{CompetitiveAnalyzer, CompetitiveBound};
+pub use batcher::DecodeBatcher;
+pub use classifier::{Classification, RequestManager};
+pub use queues::{DualQueues, QueuedJob};
+pub use request::{JobKind, PrefillJob, RequestId, SessionId};
+pub use scheduler::{ControlDecision, TpotScheduler, WindowStats};

@@ -1,0 +1,152 @@
+//! Dual work queues (§III-A): Q_P for cold/oversized prefills (dedicated
+//! prefill thread) and Q_D-side resume prefills merged with decodes.
+//!
+//! Both are FIFO within a class; Q_D's resume lane additionally enforces the
+//! decode-protection fairness rule (at most one resume kernel between
+//! consecutive decode steps) at the engine level.
+
+use super::request::PrefillJob;
+use std::collections::VecDeque;
+
+/// A queued prefill with its enqueue timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedJob {
+    pub job: PrefillJob,
+    pub enqueued_us: u64,
+}
+
+/// The two prefill queues of the orchestration layer.
+#[derive(Debug, Clone, Default)]
+pub struct DualQueues {
+    /// Q_P: cold prefills + rerouted oversized resumes (dedicated thread).
+    cold: VecDeque<QueuedJob>,
+    /// Q_D prefill lane: short resume prefills merged with decodes.
+    resume: VecDeque<QueuedJob>,
+    /// Peak occupancies (back-pressure / reporting).
+    pub peak_cold: usize,
+    pub peak_resume: usize,
+}
+
+impl DualQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_cold(&mut self, job: PrefillJob, now_us: u64) {
+        self.cold.push_back(QueuedJob { job, enqueued_us: now_us });
+        self.peak_cold = self.peak_cold.max(self.cold.len());
+    }
+
+    pub fn push_resume(&mut self, job: PrefillJob, now_us: u64) {
+        self.resume.push_back(QueuedJob { job, enqueued_us: now_us });
+        self.peak_resume = self.peak_resume.max(self.resume.len());
+    }
+
+    /// Return a popped job to the head of Q_P (KV back-pressure: the head
+    /// could not be admitted yet; FIFO order must be preserved).
+    pub fn push_cold_front(&mut self, q: QueuedJob) {
+        self.cold.push_front(q);
+        self.peak_cold = self.peak_cold.max(self.cold.len());
+    }
+
+    pub fn pop_cold(&mut self) -> Option<QueuedJob> {
+        self.cold.pop_front()
+    }
+
+    pub fn pop_resume(&mut self) -> Option<QueuedJob> {
+        self.resume.pop_front()
+    }
+
+    pub fn cold_len(&self) -> usize {
+        self.cold.len()
+    }
+
+    pub fn resume_len(&self) -> usize {
+        self.resume.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cold.is_empty() && self.resume.is_empty()
+    }
+
+    /// Re-evaluate the resume lane against a *shrunken* budget: jobs that no
+    /// longer fit are rerouted to Q_P, preserving FIFO order within each
+    /// destination (the dynamic-budget mechanism of §III-A).
+    pub fn reroute_over_budget(&mut self, b_prefill: u32) -> usize {
+        let mut moved = 0;
+        let mut keep = VecDeque::with_capacity(self.resume.len());
+        while let Some(q) = self.resume.pop_front() {
+            if q.job.tokens <= b_prefill {
+                keep.push_back(q);
+            } else {
+                self.cold.push_back(q);
+                moved += 1;
+            }
+        }
+        self.resume = keep;
+        self.peak_cold = self.peak_cold.max(self.cold.len());
+        moved
+    }
+
+    /// Oldest enqueue timestamp across both queues (for ageing / fairness).
+    pub fn oldest_wait_us(&self, now_us: u64) -> Option<u64> {
+        let c = self.cold.front().map(|q| q.enqueued_us);
+        let r = self.resume.front().map(|q| q.enqueued_us);
+        [c, r]
+            .into_iter()
+            .flatten()
+            .min()
+            .map(|t| now_us.saturating_sub(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_class() {
+        let mut q = DualQueues::new();
+        q.push_cold(PrefillJob::cold(1, 3000, 0), 0);
+        q.push_cold(PrefillJob::cold(2, 3000, 5), 5);
+        assert_eq!(q.pop_cold().unwrap().job.session, 1);
+        assert_eq!(q.pop_cold().unwrap().job.session, 2);
+        assert!(q.pop_cold().is_none());
+    }
+
+    #[test]
+    fn reroute_moves_only_over_budget() {
+        let mut q = DualQueues::new();
+        q.push_resume(PrefillJob::resume(1, 50, 3000, 0), 0);
+        q.push_resume(PrefillJob::resume(2, 200, 3000, 1), 1);
+        q.push_resume(PrefillJob::resume(3, 80, 3000, 2), 2);
+        let moved = q.reroute_over_budget(100);
+        assert_eq!(moved, 1);
+        assert_eq!(q.resume_len(), 2);
+        assert_eq!(q.cold_len(), 1);
+        // FIFO preserved in the resume lane.
+        assert_eq!(q.pop_resume().unwrap().job.session, 1);
+        assert_eq!(q.pop_resume().unwrap().job.session, 3);
+        assert_eq!(q.pop_cold().unwrap().job.session, 2);
+    }
+
+    #[test]
+    fn oldest_wait_spans_both_queues() {
+        let mut q = DualQueues::new();
+        assert_eq!(q.oldest_wait_us(100), None);
+        q.push_resume(PrefillJob::resume(1, 50, 0, 10), 10);
+        q.push_cold(PrefillJob::cold(2, 3000, 30), 30);
+        assert_eq!(q.oldest_wait_us(100), Some(90));
+    }
+
+    #[test]
+    fn peaks_track_high_water() {
+        let mut q = DualQueues::new();
+        for i in 0..5 {
+            q.push_cold(PrefillJob::cold(i, 3000, i), i);
+        }
+        q.pop_cold();
+        q.pop_cold();
+        assert_eq!(q.peak_cold, 5);
+    }
+}

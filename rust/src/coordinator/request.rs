@@ -1,0 +1,71 @@
+//! Request and job types shared across the orchestration layer.
+
+use crate::gpusim::Phase;
+
+/// Session identifier (one agent conversation).
+pub type SessionId = u64;
+/// Request identifier (one prefill or decode submission).
+pub type RequestId = u64;
+
+/// Work item kinds flowing through the orchestration layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    ColdPrefill,
+    ResumePrefill,
+    Decode,
+}
+
+impl JobKind {
+    pub fn phase(&self) -> Phase {
+        match self {
+            JobKind::ColdPrefill => Phase::ColdPrefill,
+            JobKind::ResumePrefill => Phase::ResumePrefill,
+            JobKind::Decode => Phase::Decode,
+        }
+    }
+}
+
+/// A prefill work item (cold or resume).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillJob {
+    pub session: SessionId,
+    pub kind: JobKind,
+    /// New tokens to prefill.
+    pub tokens: u32,
+    /// Already-cached context the new tokens attend to.
+    pub context: u32,
+    /// Arrival timestamp (virtual us) — FIFO key and TTFT anchor.
+    pub arrival_us: u64,
+}
+
+impl PrefillJob {
+    pub fn cold(session: SessionId, tokens: u32, arrival_us: u64) -> Self {
+        Self { session, kind: JobKind::ColdPrefill, tokens, context: 0, arrival_us }
+    }
+
+    pub fn resume(session: SessionId, tokens: u32, context: u32, arrival_us: u64) -> Self {
+        Self { session, kind: JobKind::ResumePrefill, tokens, context, arrival_us }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_kinds_map_to_phases() {
+        assert_eq!(JobKind::ColdPrefill.phase(), Phase::ColdPrefill);
+        assert_eq!(JobKind::ResumePrefill.phase(), Phase::ResumePrefill);
+        assert_eq!(JobKind::Decode.phase(), Phase::Decode);
+    }
+
+    #[test]
+    fn constructors_set_fields() {
+        let c = PrefillJob::cold(7, 3000, 123);
+        assert_eq!(c.kind, JobKind::ColdPrefill);
+        assert_eq!(c.context, 0);
+        let r = PrefillJob::resume(7, 80, 3100, 456);
+        assert_eq!(r.kind, JobKind::ResumePrefill);
+        assert_eq!(r.context, 3100);
+    }
+}

@@ -1,0 +1,228 @@
+//! Algorithm 1: TPOT-Driven Resource Scheduling (§III-B).
+//!
+//! A feedback control loop over two variables:
+//! - `B_prefill(t)` — the resume-prefill token budget admitted into the
+//!   decode context, and
+//! - `R_min(t)` — the minimum SMs reserved for decoding.
+//!
+//! Each control interval Δt, the scheduler measures the step-level TPOT
+//! `TPOT_step = ΔL_decode / ΔK_decode` and:
+//! - if `TPOT_step > θ_high`: **protection mode** — shrink `B_prefill` by
+//!   Δ_B (floor B_min) and grow `R_min` by Δ_R (cap S);
+//! - if `TPOT_step < θ_low`: **relaxation** — grow `B_prefill` (cap B_max)
+//!   and shrink `R_min` (floor R_base).
+
+use crate::config::SchedulerConfig;
+
+/// Decode-side measurements accumulated over one control interval.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    /// Cumulative decode busy time ΔL_decode (us).
+    pub decode_busy_us: f64,
+    /// Completed decode steps ΔK_decode.
+    pub decode_steps: u64,
+}
+
+impl WindowStats {
+    /// Step-level TPOT in ms; `None` when no decode steps completed (the
+    /// controller holds its variables rather than reacting to silence).
+    pub fn tpot_step_ms(&self) -> Option<f64> {
+        if self.decode_steps == 0 {
+            None
+        } else {
+            Some(self.decode_busy_us / self.decode_steps as f64 / 1000.0)
+        }
+    }
+
+    pub fn record_step(&mut self, dur_us: f64) {
+        self.decode_busy_us += dur_us;
+        self.decode_steps += 1;
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// The control decision emitted at each tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlDecision {
+    pub b_prefill: u32,
+    pub r_min: u32,
+    /// The TPOT that drove the decision (ms), if measurable.
+    pub tpot_step_ms: Option<f64>,
+    /// Which branch fired.
+    pub mode: ControlMode,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlMode {
+    /// TPOT_step > θ_high: decode protection.
+    Protect,
+    /// TPOT_step < θ_low: prefill relaxation.
+    Relax,
+    /// In the deadband (or no measurement): hold.
+    Hold,
+}
+
+/// Algorithm 1 controller state.
+#[derive(Debug, Clone)]
+pub struct TpotScheduler {
+    cfg: SchedulerConfig,
+    /// Total SMs S on the device.
+    total_sms: u32,
+    b_prefill: u32,
+    r_min: u32,
+    window: WindowStats,
+    /// Decision log (tick timestamps + decisions) for analysis/figures.
+    pub history: Vec<(u64, ControlDecision)>,
+}
+
+impl TpotScheduler {
+    pub fn new(cfg: SchedulerConfig, total_sms: u32) -> Self {
+        let b_prefill = cfg.b_init.clamp(cfg.b_min, cfg.b_max);
+        let r_min = cfg.r_init.clamp(cfg.r_base, total_sms);
+        Self { cfg, total_sms, b_prefill, r_min, window: WindowStats::default(), history: Vec::new() }
+    }
+
+    pub fn b_prefill(&self) -> u32 {
+        self.b_prefill
+    }
+
+    pub fn r_min(&self) -> u32 {
+        self.r_min
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Control interval Δt in microseconds.
+    pub fn interval_us(&self) -> u64 {
+        (self.cfg.interval_ms * 1000.0) as u64
+    }
+
+    /// Record one completed decode step (duration in us).
+    pub fn record_decode_step(&mut self, dur_us: f64) {
+        self.window.record_step(dur_us);
+    }
+
+    /// Execute one control tick (Algorithm 1 lines 2–9) at time `now_us`.
+    /// Resets the measurement window.
+    pub fn tick(&mut self, now_us: u64) -> ControlDecision {
+        let tpot = self.window.tpot_step_ms();
+        self.window.reset();
+        let mode = match tpot {
+            Some(t) if t > self.cfg.theta_high_ms => {
+                // Protection: shrink budget, grow decode reservation.
+                self.b_prefill = self.b_prefill.saturating_sub(self.cfg.delta_b).max(self.cfg.b_min);
+                self.r_min = (self.r_min + self.cfg.delta_r).min(self.total_sms);
+                ControlMode::Protect
+            }
+            Some(t) if t < self.cfg.theta_low_ms => {
+                // Relaxation: grow budget, release decode SMs to prefill.
+                // Budget growth is conservative (Δ_B/4): re-admitting long
+                // resumes too eagerly re-creates the spike that triggered
+                // protection (bang-bang oscillation).
+                self.b_prefill =
+                    (self.b_prefill + (self.cfg.delta_b / 4).max(1)).min(self.cfg.b_max);
+                self.r_min = self.r_min.saturating_sub(self.cfg.delta_r).max(self.cfg.r_base);
+                ControlMode::Relax
+            }
+            _ => ControlMode::Hold,
+        };
+        let decision = ControlDecision {
+            b_prefill: self.b_prefill,
+            r_min: self.r_min,
+            tpot_step_ms: tpot,
+            mode,
+        };
+        self.history.push((now_us, decision));
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> TpotScheduler {
+        TpotScheduler::new(SchedulerConfig::default(), 64)
+    }
+
+    #[test]
+    fn high_tpot_enters_protection() {
+        let mut s = sched();
+        let (b0, r0) = (s.b_prefill(), s.r_min());
+        s.record_decode_step(100_000.0); // 100ms step > theta_high
+        let d = s.tick(1_000_000);
+        assert_eq!(d.mode, ControlMode::Protect);
+        assert!(d.b_prefill < b0);
+        assert!(d.r_min > r0);
+    }
+
+    #[test]
+    fn low_tpot_relaxes() {
+        let mut s = sched();
+        let (b0, r0) = (s.b_prefill(), s.r_min());
+        s.record_decode_step(5_000.0); // 5ms < theta_low
+        let d = s.tick(1_000_000);
+        assert_eq!(d.mode, ControlMode::Relax);
+        assert!(d.b_prefill > b0);
+        assert!(d.r_min <= r0);
+    }
+
+    #[test]
+    fn deadband_holds() {
+        let mut s = sched();
+        let (b0, r0) = (s.b_prefill(), s.r_min());
+        s.record_decode_step(40_000.0); // between 25 and 60 ms
+        let d = s.tick(1_000_000);
+        assert_eq!(d.mode, ControlMode::Hold);
+        assert_eq!(d.b_prefill, b0);
+        assert_eq!(d.r_min, r0);
+    }
+
+    #[test]
+    fn no_measurement_holds() {
+        let mut s = sched();
+        let d = s.tick(1_000_000);
+        assert_eq!(d.mode, ControlMode::Hold);
+        assert_eq!(d.tpot_step_ms, None);
+    }
+
+    #[test]
+    fn bounds_respected_under_sustained_pressure() {
+        let mut s = sched();
+        for i in 0..1000 {
+            s.record_decode_step(500_000.0);
+            s.tick(i);
+        }
+        assert_eq!(s.b_prefill(), s.config().b_min);
+        assert_eq!(s.r_min(), 64); // capped at S
+        for i in 0..1000 {
+            s.record_decode_step(1.0);
+            s.tick(i);
+        }
+        assert_eq!(s.b_prefill(), s.config().b_max);
+        assert_eq!(s.r_min(), s.config().r_base);
+    }
+
+    #[test]
+    fn window_resets_each_tick() {
+        let mut s = sched();
+        s.record_decode_step(500_000.0);
+        s.tick(0);
+        // New window is empty → hold.
+        let d = s.tick(1);
+        assert_eq!(d.mode, ControlMode::Hold);
+    }
+
+    #[test]
+    fn tpot_step_is_mean_over_window() {
+        let mut w = WindowStats::default();
+        w.record_step(10_000.0);
+        w.record_step(30_000.0);
+        assert!((w.tpot_step_ms().unwrap() - 20.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! Serving-engine drivers.
+//!
+//! Two families share every substrate (cost model, queues, batcher,
+//! scheduler, metrics):
+//!
+//! - [`sim`] — the discrete-event simulator over [`crate::gpusim`] virtual
+//!   time. All paper figures (2, 5, 6, 7) are generated here; each policy
+//!   replays identical session scripts so differences are scheduling-only.
+//! - [`real`] — the PJRT-backed engine that actually executes the tiny
+//!   transformer (see [`crate::runtime`]); used by the end-to-end examples.
+//!
+//! Policies ([`Policy`]) cover AgentServe, its two ablations (§IV-D), and
+//! the three baselines (§IV-A): SGLang-style static PD disaggregation,
+//! vLLM-style chunked prefill, and llama.cpp-style unchunked mixed batching.
+
+pub mod policy;
+pub mod real;
+pub mod sim;
+
+pub use policy::{AgentServeOpts, Policy, SglangOpts};
+pub use sim::{run_sim, SimOutcome, SimParams};

@@ -1,0 +1,138 @@
+//! Serving policies: AgentServe, its ablations, and the three baselines.
+
+
+/// AgentServe configuration flags (the ablation axes of §IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AgentServeOpts {
+    /// TPOT-driven adaptation (Algorithm 1). `false` = **No-Alg** ablation:
+    /// static SM partition and static budget.
+    pub adaptive: bool,
+    /// Pre-established Green Context SM reservations. `false` = **No-Green**
+    /// ablation: on-demand streams, no decode reservation — prefill and
+    /// decode kernels serialize on the default queue.
+    pub green_contexts: bool,
+}
+
+impl Default for AgentServeOpts {
+    fn default() -> Self {
+        Self { adaptive: true, green_contexts: true }
+    }
+}
+
+/// SGLang-style static PD-disaggregation parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SglangOpts {
+    /// Static decode share of the device (dual-engine split).
+    pub decode_share: f64,
+}
+
+impl Default for SglangOpts {
+    fn default() -> Self {
+        Self { decode_share: 0.5 }
+    }
+}
+
+/// The serving policy under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// AgentServe (§III): phase-aware classification + Algorithm 1 +
+    /// Green-Context isolation.
+    AgentServe(AgentServeOpts),
+    /// SGLang-style: PD disaggregation with a static split; every prefill →
+    /// decode handoff pays KV-transfer/process-coordination overhead; cold
+    /// and resume prefills share one FIFO engine (treated uniformly).
+    Sglang(SglangOpts),
+    /// vLLM-style: continuous batching with chunked prefill — each
+    /// iteration carries all decode streams plus up to `chunk_size` prefill
+    /// tokens of the oldest pending prompt.
+    Vllm,
+    /// llama.cpp-style: unchunked mixed batching — each iteration carries
+    /// all pending prompt tokens plus one token per generating stream; a 3k
+    /// cold prefill rides in one iteration and stalls every stream (Fig. 2).
+    LlamaCpp,
+}
+
+impl Policy {
+    /// All policies compared in Fig. 5/6.
+    pub fn paper_lineup() -> Vec<Policy> {
+        vec![
+            Policy::AgentServe(AgentServeOpts::default()),
+            Policy::Sglang(SglangOpts::default()),
+            Policy::Vllm,
+            Policy::LlamaCpp,
+        ]
+    }
+
+    /// The ablation lineup of Fig. 7.
+    pub fn ablation_lineup() -> Vec<Policy> {
+        vec![
+            Policy::AgentServe(AgentServeOpts::default()),
+            Policy::AgentServe(AgentServeOpts { adaptive: false, green_contexts: true }),
+            Policy::AgentServe(AgentServeOpts { adaptive: true, green_contexts: false }),
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::AgentServe(o) => match (o.adaptive, o.green_contexts) {
+                (true, true) => "AgentServe",
+                (false, true) => "No-Alg",
+                (true, false) => "No-Green",
+                (false, false) => "No-Alg+No-Green",
+            },
+            Policy::Sglang(_) => "SGLang",
+            Policy::Vllm => "vLLM",
+            Policy::LlamaCpp => "llama.cpp",
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "agentserve" => Ok(Policy::AgentServe(AgentServeOpts::default())),
+            "no-alg" | "noalg" => Ok(Policy::AgentServe(AgentServeOpts {
+                adaptive: false,
+                green_contexts: true,
+            })),
+            "no-green" | "nogreen" => Ok(Policy::AgentServe(AgentServeOpts {
+                adaptive: true,
+                green_contexts: false,
+            })),
+            "sglang" => Ok(Policy::Sglang(SglangOpts::default())),
+            "vllm" => Ok(Policy::Vllm),
+            "llamacpp" | "llama.cpp" => Ok(Policy::LlamaCpp),
+            other => anyhow::bail!(
+                "unknown policy: {other} (expected agentserve|no-alg|no-green|sglang|vllm|llamacpp)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in Policy::paper_lineup() {
+            let parsed: Policy = p.name().to_lowercase().parse().unwrap();
+            assert_eq!(parsed.name(), p.name());
+        }
+        assert_eq!("no-alg".parse::<Policy>().unwrap().name(), "No-Alg");
+        assert_eq!("no-green".parse::<Policy>().unwrap().name(), "No-Green");
+    }
+
+    #[test]
+    fn lineups_have_expected_sizes() {
+        assert_eq!(Policy::paper_lineup().len(), 4);
+        assert_eq!(Policy::ablation_lineup().len(), 3);
+    }
+}

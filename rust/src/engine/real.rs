@@ -1,0 +1,391 @@
+//! Real-compute serving engine over the PJRT runtime.
+//!
+//! This is the end-to-end path: agent sessions are served by actually
+//! executing the AOT-compiled tiny transformer on CPU PJRT. The AgentServe
+//! control plane is identical to the simulator's (classification, dual
+//! queues, Algorithm 1); only the *mechanism* differs — on one CPU executor
+//! the Green-Context spatial partition maps to a **temporal quota**: the
+//! decode share determines how many prefill chunks may run between
+//! consecutive decode steps (DESIGN.md §Hardware-Adaptation).
+//!
+//! Two policies are exposed: `AgentServe` and `FcfsMixed` (the llama.cpp
+//! analogue — whole prompts run to completion before decode resumes), which
+//! is what the end-to-end example compares against.
+
+use crate::config::SchedulerConfig;
+use crate::coordinator::{Classification, JobKind, PrefillJob, RequestManager, TpotScheduler};
+use crate::metrics::{MetricsRecorder, RunReport};
+use crate::runtime::{EngineStats, PjrtEngine};
+use crate::workload::SessionScript;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Policy for the real engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RealPolicy {
+    /// Phase-aware queues + Algorithm 1 + temporal decode protection.
+    AgentServe,
+    /// FCFS mixed execution: the oldest pending prompt runs to completion
+    /// before decode continues (llama.cpp-style head-of-line behaviour).
+    FcfsMixed,
+}
+
+impl RealPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealPolicy::AgentServe => "AgentServe",
+            RealPolicy::FcfsMixed => "FCFS-mixed",
+        }
+    }
+}
+
+/// Outcome of a real-compute run.
+#[derive(Debug, Clone)]
+pub struct RealOutcome {
+    pub policy: &'static str,
+    pub report: RunReport,
+    pub engine_stats: EngineStats,
+    /// Final scheduler state (AgentServe only).
+    pub final_b_prefill: Option<u32>,
+    pub final_r_min: Option<u32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    WaitingPrefill,
+    Decoding,
+    ToolWait,
+    Done,
+}
+
+struct RealSession {
+    script: SessionScript,
+    slot: usize,
+    phase: Phase,
+    /// Committed cache length (tokens whose KV is valid).
+    len: usize,
+    cur_step: usize,
+    decode_remaining: u32,
+    last_token: i32,
+    tool_deadline: Option<Instant>,
+    /// Prefill in flight: (token ids, progress offset).
+    pending: Option<(Vec<i32>, usize)>,
+    pending_kind: JobKind,
+}
+
+/// Round `n` up to a multiple of `m`.
+fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Deterministic prompt ids within the model vocabulary.
+fn prompt_ids(script: &SessionScript, vocab: usize, len: usize) -> Vec<i32> {
+    script
+        .system_prompt_ids()
+        .into_iter()
+        .cycle()
+        .take(len)
+        .map(|t| (t % vocab as u32) as i32)
+        .collect()
+}
+
+/// Serve `scripts` (at most `decode_batch` of them) on the real engine.
+///
+/// Token counts from the scripts are rounded to the engine's chunk
+/// granularity and clamped so each session fits `max_seq`. Tool latencies
+/// are scaled by `tool_scale` (use < 1.0 to keep examples fast).
+pub fn run_real(
+    engine: &mut PjrtEngine,
+    policy: RealPolicy,
+    scripts: Vec<SessionScript>,
+    sched_cfg: SchedulerConfig,
+    tool_scale: f64,
+) -> crate::Result<RealOutcome> {
+    let geo = engine.geometry().clone();
+    anyhow::ensure!(
+        scripts.len() <= geo.decode_batch,
+        "at most {} concurrent sessions (cache slots)",
+        geo.decode_batch
+    );
+    engine.reset_cache()?;
+    let min_chunk = engine.min_chunk();
+
+    // Scale sessions to the tiny model's max_seq budget.
+    let mut sessions: Vec<RealSession> = scripts
+        .into_iter()
+        .enumerate()
+        .map(|(slot, mut script)| {
+            let budget = geo.max_seq;
+            let cold = round_up((script.cold_prefill_tokens as usize).min(budget / 3), min_chunk);
+            script.cold_prefill_tokens = cold as u32;
+            // Clamp per-step sizes so the whole session fits.
+            let mut total = cold + script.first_decode_tokens as usize;
+            for st in &mut script.steps {
+                st.resume_tokens = round_up(st.resume_tokens as usize, min_chunk)
+                    .min(4 * min_chunk) as u32;
+                total += st.resume_tokens as usize + st.decode_tokens as usize;
+            }
+            while total > budget.saturating_sub(min_chunk) && !script.steps.is_empty() {
+                let st = script.steps.pop().unwrap();
+                total -= st.resume_tokens as usize + st.decode_tokens as usize;
+            }
+            RealSession {
+                script,
+                slot,
+                phase: Phase::WaitingPrefill,
+                len: 0,
+                cur_step: 0,
+                decode_remaining: 0,
+                last_token: 0,
+                tool_deadline: None,
+                pending: None,
+                pending_kind: JobKind::ColdPrefill,
+            }
+        })
+        .collect();
+
+    let mut metrics = MetricsRecorder::new();
+    let mut sched = TpotScheduler::new(sched_cfg, 64);
+    let mut manager = RequestManager::new();
+    let mut cold_q: VecDeque<usize> = VecDeque::new();
+    let mut resume_q: VecDeque<usize> = VecDeque::new();
+    let t0 = Instant::now();
+    let now_us = |t0: &Instant| t0.elapsed().as_micros() as u64;
+
+    // Initial cold prefills.
+    for i in 0..sessions.len() {
+        let ids = prompt_ids(
+            &sessions[i].script,
+            geo.vocab,
+            sessions[i].script.cold_prefill_tokens as usize,
+        );
+        sessions[i].pending = Some((ids, 0));
+        sessions[i].pending_kind = JobKind::ColdPrefill;
+        metrics.request_arrival(i as u64, now_us(&t0));
+        cold_q.push_back(i);
+    }
+
+    let mut last_tick = Instant::now();
+    let interval = std::time::Duration::from_micros(sched.interval_us());
+    let mut done = 0usize;
+
+    // Temporal quota: prefill chunks allowed between consecutive decode
+    // steps, derived from the decode share (1 - share)/share.
+    let quota = |r_min: u32| -> usize {
+        let share = (r_min as f64 / 64.0).clamp(0.1, 0.9);
+        (((1.0 - share) / share).round() as usize).clamp(1, 8)
+    };
+
+    while done < sessions.len() {
+        // Tool returns.
+        for i in 0..sessions.len() {
+            if sessions[i].phase == Phase::ToolWait
+                && sessions[i].tool_deadline.map_or(false, |d| Instant::now() >= d)
+            {
+                let step = sessions[i].script.steps[sessions[i].cur_step].clone();
+                let ids = prompt_ids(&sessions[i].script, geo.vocab, step.resume_tokens as usize);
+                sessions[i].pending = Some((ids, 0));
+                sessions[i].pending_kind = JobKind::ResumePrefill;
+                sessions[i].phase = Phase::WaitingPrefill;
+                sessions[i].tool_deadline = None;
+                metrics.request_arrival(i as u64, now_us(&t0));
+                let job = PrefillJob::resume(
+                    i as u64,
+                    step.resume_tokens,
+                    sessions[i].len as u32,
+                    now_us(&t0),
+                );
+                match policy {
+                    RealPolicy::AgentServe => {
+                        match manager.classify(&job, sched.b_prefill()) {
+                            Classification::DecodeQueue => resume_q.push_back(i),
+                            Classification::ColdQueue => cold_q.push_back(i),
+                        }
+                    }
+                    RealPolicy::FcfsMixed => cold_q.push_back(i),
+                }
+            }
+        }
+
+        // Control tick (AgentServe only).
+        if policy == RealPolicy::AgentServe && last_tick.elapsed() >= interval {
+            sched.tick(now_us(&t0));
+            last_tick = Instant::now();
+        }
+
+        let decoding: Vec<usize> = (0..sessions.len())
+            .filter(|&i| sessions[i].phase == Phase::Decoding)
+            .collect();
+
+        // FCFS-mixed: a pending prompt preempts decode and runs whole.
+        let prefill_budget = match policy {
+            RealPolicy::FcfsMixed => {
+                if cold_q.is_empty() {
+                    0
+                } else {
+                    usize::MAX
+                }
+            }
+            RealPolicy::AgentServe => {
+                if decoding.is_empty() {
+                    usize::MAX
+                } else {
+                    quota(sched.r_min())
+                }
+            }
+        };
+
+        // Prefill work: resume lane first, then cold queue.
+        let mut chunks_run = 0usize;
+        let mut accum_prefill_us = 0u64;
+        while chunks_run < prefill_budget {
+            let (qi, from_resume) = if policy == RealPolicy::AgentServe && !resume_q.is_empty() {
+                (resume_q.front().copied(), true)
+            } else if !cold_q.is_empty() {
+                (cold_q.front().copied(), false)
+            } else {
+                (None, false)
+            };
+            let Some(i) = qi else { break };
+            let (ids, off) = sessions[i].pending.clone().expect("queued session has work");
+            let remaining = ids.len() - off;
+            let chunk = engine
+                .chunk_sizes()
+                .into_iter()
+                .rev()
+                .find(|&c| c <= remaining)
+                .expect("lengths are chunk multiples");
+            let tp = Instant::now();
+            let next = engine.prefill_chunk(sessions[i].slot, sessions[i].len, &ids[off..off + chunk])?;
+            accum_prefill_us += tp.elapsed().as_micros() as u64;
+            sessions[i].len += chunk;
+            chunks_run += 1;
+            if off + chunk == ids.len() {
+                // Prefill complete: first token.
+                if from_resume {
+                    resume_q.pop_front();
+                } else {
+                    cold_q.pop_front();
+                }
+                sessions[i].pending = None;
+                metrics.prefill_tokens(ids.len() as u64);
+                metrics.first_token(i as u64, now_us(&t0));
+                let burst = if sessions[i].pending_kind == JobKind::ColdPrefill {
+                    sessions[i].script.first_decode_tokens
+                } else {
+                    let b = sessions[i].script.steps[sessions[i].cur_step].decode_tokens;
+                    sessions[i].cur_step += 1;
+                    b
+                };
+                sessions[i].last_token = next;
+                sessions[i].decode_remaining = burst.saturating_sub(1);
+                sessions[i].len += 1; // the first token's KV lands next step
+                if sessions[i].decode_remaining == 0 {
+                    finish_burst(&mut sessions[i], &mut metrics, &mut done, now_us(&t0), tool_scale);
+                } else {
+                    sessions[i].phase = Phase::Decoding;
+                    if policy == RealPolicy::AgentServe {
+                        // A latency-critical stream appeared: stop prefilling
+                        // and let the decode step run.
+                        break;
+                    }
+                }
+            } else {
+                sessions[i].pending = Some((ids, off + chunk));
+            }
+        }
+
+        // One batched decode step for all decoding sessions.
+        let decoding: Vec<usize> = (0..sessions.len())
+            .filter(|&i| sessions[i].phase == Phase::Decoding)
+            .collect();
+        if !decoding.is_empty() {
+            let b = geo.decode_batch;
+            let mut toks = vec![0i32; b];
+            let mut lens = vec![0i32; b];
+            for &i in &decoding {
+                toks[sessions[i].slot] = sessions[i].last_token;
+                // The previous token's KV is written this step at len-1.
+                lens[sessions[i].slot] = (sessions[i].len - 1) as i32;
+            }
+            // Inactive rows: keep lens in range, outputs ignored.
+            for i in 0..sessions.len() {
+                if sessions[i].phase != Phase::Decoding {
+                    lens[sessions[i].slot] = sessions[i].len.min(geo.max_seq - 1) as i32;
+                }
+            }
+            // Fused multi-step decode when no prefill work is pending and
+            // every active stream has a full fused burst left (perf: one KV
+            // round-trip serves K tokens — EXPERIMENTS.md §Perf).
+            let k = engine.multi_steps();
+            let use_multi = k > 0
+                && cold_q.is_empty()
+                && resume_q.is_empty()
+                && decoding.iter().all(|&i| {
+                    sessions[i].decode_remaining as usize >= k
+                        && sessions[i].len + k <= geo.max_seq
+                });
+            if use_multi {
+                let (steps, exec_us) = engine.decode_multi(&toks, &lens)?;
+                sched.record_decode_step(exec_us as f64 / k as f64);
+                let t = now_us(&t0);
+                for &i in &decoding {
+                    for step_out in &steps {
+                        metrics.token_emitted(i as u64, t);
+                        sessions[i].last_token = step_out[sessions[i].slot];
+                        sessions[i].len += 1;
+                        sessions[i].decode_remaining -= 1;
+                    }
+                    if sessions[i].decode_remaining == 0 {
+                        finish_burst(&mut sessions[i], &mut metrics, &mut done, t, tool_scale);
+                    }
+                }
+                continue;
+            }
+            let out = engine.decode_step(&toks, &lens)?;
+            // The decode round includes the prefill chunks that ran since
+            // the previous step — the delay streams actually experienced.
+            sched.record_decode_step((out.exec_us + accum_prefill_us) as f64);
+            let t = now_us(&t0);
+            for &i in &decoding {
+                metrics.token_emitted(i as u64, t);
+                sessions[i].last_token = out.next_tokens[sessions[i].slot];
+                sessions[i].len += 1;
+                sessions[i].decode_remaining -= 1;
+                if sessions[i].decode_remaining == 0 {
+                    finish_burst(&mut sessions[i], &mut metrics, &mut done, t, tool_scale);
+                }
+            }
+        } else if cold_q.is_empty() && resume_q.is_empty() {
+            // Everyone is tool-waiting: nap briefly.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    let report = metrics.report(now_us(&t0));
+    Ok(RealOutcome {
+        policy: policy.name(),
+        report,
+        engine_stats: engine.stats,
+        final_b_prefill: (policy == RealPolicy::AgentServe).then(|| sched.b_prefill()),
+        final_r_min: (policy == RealPolicy::AgentServe).then(|| sched.r_min()),
+    })
+}
+
+fn finish_burst(
+    s: &mut RealSession,
+    metrics: &mut MetricsRecorder,
+    done: &mut usize,
+    now_us: u64,
+    tool_scale: f64,
+) {
+    if s.cur_step < s.script.steps.len() {
+        let lat = s.script.steps[s.cur_step].tool_latency_us as f64 * tool_scale;
+        s.phase = Phase::ToolWait;
+        s.tool_deadline = Some(Instant::now() + std::time::Duration::from_micros(lat as u64));
+    } else {
+        s.phase = Phase::Done;
+        metrics.session_complete(s.slot as u64, now_us);
+        *done += 1;
+    }
+}

@@ -1,0 +1,1032 @@
+//! Discrete-event serving simulator (virtual time).
+//!
+//! Replays [`crate::workload`] session scripts against one of the
+//! [`Policy`] drivers over the [`crate::gpusim`] cost model. All figures in
+//! the paper's evaluation are regenerated from this module; every policy
+//! replays *identical* scripts, so metric differences are attributable to
+//! scheduling alone.
+//!
+//! ## Execution models
+//! - **AgentServe / No-Alg** — two spatial contexts (decode + prefill) from
+//!   the Green-Context pool; Algorithm 1 adapts `B_prefill`/`R_min`
+//!   (No-Alg freezes them). Short resume prefills run *inside* the decode
+//!   context with an at-most-one-between-decode-steps fairness rule.
+//! - **No-Green** — same classification/budget, but no SM reservation:
+//!   kernels serialize on the default queue and every prefill launch pays
+//!   an on-demand stream-allocation cost.
+//! - **SGLang** — static dual-engine split; all prefills share one FIFO
+//!   (cold and resume treated uniformly); each prefill→decode handoff pays
+//!   KV-transfer + process-coordination overhead.
+//! - **vLLM** — single engine, hybrid iterations: all decode streams + up
+//!   to `chunk_size` tokens of the oldest pending prompt.
+//! - **llama.cpp** — single engine, unchunked iterations: all pending
+//!   prompt tokens ride in one iteration alongside decode (Fig. 2's HoL).
+
+use super::policy::{AgentServeOpts, Policy, SglangOpts};
+use crate::config::Config;
+use crate::coordinator::{
+    Classification, DecodeBatcher, DualQueues, JobKind, PrefillJob, RequestManager, TpotScheduler,
+};
+use crate::gpusim::CostModel;
+use crate::greenctx::{GreenContextPool, RebindStats};
+use crate::metrics::{MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample};
+use crate::workload::{SessionScript, WorkloadGenerator, WorkloadKind};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Simulation workload parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Concurrent agents (paper sweeps 3–6).
+    pub n_agents: usize,
+    /// Sessions each agent runs back-to-back.
+    pub sessions_per_agent: usize,
+    pub workload: WorkloadKind,
+    pub seed: u64,
+    /// Initial arrival stagger between agents (us).
+    pub stagger_us: u64,
+    /// Agent think time between chained sessions (us).
+    pub think_time_us: u64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        Self {
+            n_agents: 4,
+            sessions_per_agent: 3,
+            workload: WorkloadKind::ReAct,
+            seed: 7,
+            stagger_us: 150_000,
+            think_time_us: 100_000,
+        }
+    }
+}
+
+/// Results of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub policy_name: String,
+    pub report: RunReport,
+    pub slo: SloReport,
+    /// Per-token timeline (Fig. 2).
+    pub timeline: Vec<TpotSample>,
+    /// Green-Context rebind ledger (zeros for non-Green policies).
+    pub rebinds: RebindStats,
+    /// Measured cold-prefill fraction of total prefill work (η in Eq. 1).
+    pub eta_cold: f64,
+    /// Classifier routing counters (AgentServe variants).
+    pub cold_routed: u64,
+    pub resume_merged: u64,
+    pub resume_rerouted: u64,
+    /// Peak KV usage in tokens.
+    pub kv_peak_tokens: u64,
+    /// Scheduler decisions (tick time us, b_prefill, r_min).
+    pub control_trace: Vec<(u64, u32, u32)>,
+}
+
+// ---------------------------------------------------------------------------
+// internal machinery
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessPhase {
+    NotArrived,
+    WaitingPrefill,
+    Prefilling,
+    Decoding,
+    ToolWait,
+    Done,
+}
+
+#[derive(Debug)]
+struct SimSession {
+    script: SessionScript,
+    phase: SessPhase,
+    /// Committed cached tokens.
+    ctx_tokens: u32,
+    /// Completed tool cycles.
+    cur_step: usize,
+    /// Tokens left in the current decode burst.
+    decode_remaining: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Work {
+    /// Whole prefill in a dedicated (or serialized) context.
+    Prefill { sess: usize, tokens: u32, kind: JobKind, dur_us: f64 },
+    /// One batched decode step, optionally carrying a merged resume
+    /// prefill (§III-A: short resumes ride the decode batch — one weight
+    /// pass, marginal compute).
+    DecodeStep { ids: Vec<u64>, resume: Option<(usize, u32)>, dur_us: f64 },
+    /// SGLang KV transfer / process handoff after a prefill.
+    Transfer { sess: usize, kind: JobKind },
+    /// One-engine hybrid iteration (vLLM / llama.cpp).
+    Iteration { chunks: Vec<IterChunk>, decode_ids: Vec<u64> },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct IterChunk {
+    sess: usize,
+    tokens: u32,
+    kind: JobKind,
+    /// True when this chunk finishes the session's pending prefill.
+    completes: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    Arrive(usize),
+    ToolReturn(usize),
+    CtxFree(usize),
+    Tick,
+}
+
+const DECODE_CTX: usize = 0;
+const PREFILL_CTX: usize = 1;
+
+/// Relative decode slowdown while the SGLang prefill process is active
+/// (memory-bandwidth contention across the process boundary, §IV-C).
+const SGLANG_CONTENTION: f64 = 0.20;
+
+/// Efficiency penalty on single-engine iterations that mix prompt and
+/// decode phases (llama.cpp / vLLM): naive phase-mixed batches underutilize
+/// both compute and bandwidth (§II-C; quantified at 20-30% by the
+/// Sarathi/POD-Attention line of work the paper builds on).
+const MIXED_ITER_PENALTY: f64 = 1.25;
+
+/// Per-policy scheduling state.
+enum PState {
+    /// AgentServe full / No-Alg (two contexts) / No-Green (one context).
+    AgentServe {
+        opts: AgentServeOpts,
+        queues: DualQueues,
+        batcher: DecodeBatcher,
+        sched: TpotScheduler,
+        pool: GreenContextPool,
+        manager: RequestManager,
+        /// Pending rebind cost to charge to the next decode-ctx work (us).
+        pending_rebind_us: f64,
+        /// Fairness flag: last decode-ctx work was a prefill kernel.
+        last_was_prefill: bool,
+    },
+    Sglang {
+        opts: SglangOpts,
+        fifo: VecDeque<PrefillJob>,
+        batcher: DecodeBatcher,
+    },
+    /// vLLM (chunked=true) and llama.cpp (chunked=false).
+    IterBatch {
+        chunked: bool,
+        /// FIFO of (session, tokens remaining, kind).
+        fifo: VecDeque<(usize, u32, JobKind)>,
+        batcher: DecodeBatcher,
+    },
+}
+
+struct Sim {
+    cfg: Config,
+    cost: CostModel,
+    sessions: Vec<SimSession>,
+    n_agents: usize,
+    think_time_us: u64,
+    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    seq: u64,
+    now: u64,
+    /// Context work slots: [decode, prefill]; one-ctx policies use slot 0.
+    ctx_work: [Option<Work>; 2],
+    state: PState,
+    metrics: MetricsRecorder,
+    done_count: usize,
+    // KV accounting (token granularity; the real engine uses the paged
+    // allocator — the sim needs only capacity pressure + peak stats).
+    kv_used: u64,
+    kv_cap: u64,
+    kv_peak: u64,
+    // Work-mix accounting for η (Eq. 1).
+    cold_prefill_tokens: u64,
+    resume_prefill_tokens: u64,
+    /// Decode-ctx busy time since the last completed decode step (includes
+    /// interleaved resume/prefill kernels — the delay decode rounds see).
+    decode_round_accum_us: f64,
+    control_trace: Vec<(u64, u32, u32)>,
+}
+
+impl Sim {
+    fn push(&mut self, t: u64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse((t, self.seq, ev)));
+    }
+
+    fn decode_share(&self) -> f64 {
+        match &self.state {
+            PState::AgentServe { opts, pool, .. } => {
+                if opts.green_contexts {
+                    pool.current_partition().decode_share(self.cfg.gpu.sm_count)
+                } else {
+                    1.0
+                }
+            }
+            PState::Sglang { opts, .. } => opts.decode_share,
+            PState::IterBatch { .. } => 1.0,
+        }
+    }
+
+    fn prefill_share(&self) -> f64 {
+        match &self.state {
+            PState::AgentServe { opts, pool, .. } => {
+                if opts.green_contexts {
+                    pool.current_partition()
+                        .prefill_share(self.cfg.gpu.sm_count)
+                        .max(0.05)
+                } else {
+                    1.0
+                }
+            }
+            PState::Sglang { opts, .. } => (1.0 - opts.decode_share).max(0.05),
+            PState::IterBatch { .. } => 1.0,
+        }
+    }
+
+    /// True for policies where all work serializes on one device queue.
+    fn single_queue(&self) -> bool {
+        match &self.state {
+            PState::AgentServe { opts, .. } => !opts.green_contexts,
+            PState::Sglang { .. } => false,
+            PState::IterBatch { .. } => true,
+        }
+    }
+
+    // -- session transitions --------------------------------------------------
+
+    /// Submit the session's next prefill (cold if no cached context).
+    fn submit_prefill(&mut self, sess: usize) {
+        let s = &self.sessions[sess];
+        let job = if s.ctx_tokens == 0 {
+            PrefillJob::cold(sess as u64, s.script.cold_prefill_tokens, self.now)
+        } else {
+            PrefillJob::resume(
+                sess as u64,
+                s.script.steps[s.cur_step].resume_tokens,
+                s.ctx_tokens,
+                self.now,
+            )
+        };
+        self.sessions[sess].phase = SessPhase::WaitingPrefill;
+        self.metrics.request_arrival(sess as u64, self.now);
+        match &mut self.state {
+            PState::AgentServe { queues, sched, manager, .. } => {
+                match manager.classify(&job, sched.b_prefill()) {
+                    Classification::ColdQueue => queues.push_cold(job, self.now),
+                    Classification::DecodeQueue => queues.push_resume(job, self.now),
+                }
+            }
+            PState::Sglang { fifo, .. } => fifo.push_back(job),
+            PState::IterBatch { fifo, .. } => fifo.push_back((sess, job.tokens, job.kind)),
+        }
+    }
+
+    /// Account completed prefill tokens (work-mix, metrics, KV, context).
+    fn account_prefill_tokens(&mut self, sess: usize, tokens: u32, kind: JobKind) {
+        match kind {
+            JobKind::ColdPrefill => self.cold_prefill_tokens += tokens as u64,
+            _ => self.resume_prefill_tokens += tokens as u64,
+        }
+        self.metrics.prefill_tokens(tokens as u64);
+        self.kv_add(tokens as u64);
+        self.sessions[sess].ctx_tokens += tokens;
+    }
+
+    /// The session's prefill is fully committed: emit the first token (the
+    /// prefill's final logits produce it) and start the decode burst.
+    fn start_decode_burst(&mut self, sess: usize, kind: JobKind) {
+        let s = &mut self.sessions[sess];
+        let burst = if kind == JobKind::ColdPrefill {
+            s.script.first_decode_tokens
+        } else {
+            let b = s.script.steps[s.cur_step].decode_tokens;
+            s.cur_step += 1;
+            b
+        };
+        s.decode_remaining = burst.saturating_sub(1);
+        s.ctx_tokens += 1;
+        self.metrics.first_token(sess as u64, self.now);
+        self.kv_add(1);
+        if self.sessions[sess].decode_remaining == 0 {
+            self.decode_burst_finished(sess);
+        } else {
+            self.sessions[sess].phase = SessPhase::Decoding;
+            let (ctx, rem) = {
+                let s = &self.sessions[sess];
+                (s.ctx_tokens, s.decode_remaining)
+            };
+            self.batcher_mut().join(sess as u64, ctx, rem);
+        }
+    }
+
+    /// The current decode burst is done: tool-wait, or session complete.
+    fn decode_burst_finished(&mut self, sess: usize) {
+        let s = &self.sessions[sess];
+        if s.cur_step < s.script.steps.len() {
+            let lat = s.script.steps[s.cur_step].tool_latency_us;
+            self.sessions[sess].phase = SessPhase::ToolWait;
+            self.push(self.now + lat, Ev::ToolReturn(sess));
+        } else {
+            self.sessions[sess].phase = SessPhase::Done;
+            self.metrics.session_complete(sess as u64, self.now);
+            self.done_count += 1;
+            self.kv_free(self.sessions[sess].ctx_tokens as u64);
+            // Chain the agent's next session.
+            let next = sess + self.n_agents;
+            if next < self.sessions.len() {
+                self.push(self.now + self.think_time_us, Ev::Arrive(next));
+            }
+        }
+    }
+
+    fn batcher_mut(&mut self) -> &mut DecodeBatcher {
+        match &mut self.state {
+            PState::AgentServe { batcher, .. } => batcher,
+            PState::Sglang { batcher, .. } => batcher,
+            PState::IterBatch { batcher, .. } => batcher,
+        }
+    }
+
+    fn kv_add(&mut self, tokens: u64) {
+        self.kv_used += tokens;
+        self.kv_peak = self.kv_peak.max(self.kv_used);
+    }
+
+    fn kv_free(&mut self, tokens: u64) {
+        self.kv_used = self.kv_used.saturating_sub(tokens);
+    }
+
+    /// KV headroom gate for admitting a session's cold prefill.
+    fn kv_admit_cold(&self, sess: usize) -> bool {
+        self.kv_used + self.sessions[sess].script.final_context() <= self.kv_cap
+    }
+
+    // -- work completion -------------------------------------------------------
+
+    /// Apply one completed decode step's effects (shared by DecodeStep and
+    /// Iteration work).
+    fn apply_decode_step(&mut self, ids: &[u64]) {
+        for &id in ids {
+            self.metrics.token_emitted(id, self.now);
+            self.kv_add(1);
+        }
+        let finished = self.batcher_mut().complete_step(ids);
+        // Sync surviving streams' grown context back to the sessions.
+        for &id in ids {
+            if let Some(st) = self.batcher_mut().get(id) {
+                self.sessions[id as usize].ctx_tokens = st.context;
+            }
+        }
+        for id in finished {
+            let sess = id as usize;
+            if let Some(st) = self.batcher_mut().leave(id) {
+                self.sessions[sess].ctx_tokens = st.context;
+            }
+            self.decode_burst_finished(sess);
+        }
+    }
+
+    fn complete_work(&mut self, ctx_id: usize) {
+        let work = self.ctx_work[ctx_id].take().expect("ctx had work");
+        match work {
+            Work::Prefill { sess, tokens, kind, dur_us } => {
+                self.account_prefill_tokens(sess, tokens, kind);
+                if matches!(self.state, PState::Sglang { .. }) {
+                    // Dual-engine handoff: KV transfer + process overhead
+                    // keeps the prefill engine busy and delays the stream.
+                    let t_us = tokens as f64 * self.cfg.engine.pd_transfer_us_per_token
+                        + self.cfg.engine.pd_handoff_fixed_us;
+                    self.ctx_work[ctx_id] = Some(Work::Transfer { sess, kind });
+                    self.push(self.now + t_us as u64, Ev::CtxFree(ctx_id));
+                    return;
+                }
+                // No-Green: prefill on the shared queue delays decode rounds.
+                if self.single_queue() {
+                    self.decode_round_accum_us += dur_us;
+                }
+                self.start_decode_burst(sess, kind);
+            }
+            Work::DecodeStep { ids, resume, dur_us } => {
+                if let Some((sess, tokens)) = resume {
+                    self.account_prefill_tokens(sess, tokens, JobKind::ResumePrefill);
+                    self.start_decode_burst(sess, JobKind::ResumePrefill);
+                }
+                if ids.is_empty() {
+                    // Pure-resume step: counts toward the next decode round.
+                    self.decode_round_accum_us += dur_us;
+                } else {
+                    let round = self.decode_round_accum_us + dur_us;
+                    self.decode_round_accum_us = 0.0;
+                    if let PState::AgentServe { sched, .. } = &mut self.state {
+                        sched.record_decode_step(round);
+                    }
+                }
+                self.apply_decode_step(&ids);
+            }
+            Work::Transfer { sess, kind } => {
+                self.start_decode_burst(sess, kind);
+            }
+            Work::Iteration { chunks, decode_ids } => {
+                for c in &chunks {
+                    self.account_prefill_tokens(c.sess, c.tokens, c.kind);
+                    if c.completes {
+                        self.start_decode_burst(c.sess, c.kind);
+                    }
+                }
+                self.apply_decode_step(&decode_ids);
+            }
+        }
+    }
+
+    // -- dispatch ---------------------------------------------------------------
+
+    fn start(&mut self, ctx_id: usize, work: Work, dur_us: f64) {
+        debug_assert!(self.ctx_work[ctx_id].is_none());
+        self.ctx_work[ctx_id] = Some(work);
+        self.push(self.now + dur_us.max(1.0) as u64, Ev::CtxFree(ctx_id));
+    }
+
+    fn dispatch(&mut self) {
+        let d_share = self.decode_share();
+        let p_share = self.prefill_share();
+        let green = match &self.state {
+            PState::AgentServe { opts, .. } => Some(opts.green_contexts),
+            _ => None,
+        };
+        match (&self.state, green) {
+            (PState::AgentServe { .. }, Some(true)) => {
+                self.dispatch_agentserve_prefill_ctx(p_share);
+                self.dispatch_agentserve_decode_ctx(d_share, true);
+            }
+            (PState::AgentServe { .. }, Some(false)) => {
+                self.dispatch_agentserve_decode_ctx(1.0, false);
+            }
+            (PState::Sglang { .. }, _) => {
+                self.dispatch_sglang_prefill(p_share);
+                self.dispatch_sglang_decode(d_share);
+            }
+            (PState::IterBatch { .. }, _) => self.dispatch_iter(),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Dedicated prefill context: pop Q_P FIFO (KV-gated for colds).
+    /// When decode demand is idle, the prefill thread opportunistically
+    /// claims the whole device (SIII-C "thread cooperation").
+    fn dispatch_agentserve_prefill_ctx(&mut self, share: f64) {
+        if self.ctx_work[PREFILL_CTX].is_some() {
+            return;
+        }
+        let decode_idle =
+            self.ctx_work[DECODE_CTX].is_none() && self.batcher_mut().next_batch().0.is_empty();
+        let share = if decode_idle { 1.0 } else { share };
+        let head = match &mut self.state {
+            PState::AgentServe { queues, .. } => queues.pop_cold(),
+            _ => unreachable!(),
+        };
+        let Some(q) = head else { return };
+        let sess = q.job.session as usize;
+        if q.job.kind == JobKind::ColdPrefill && !self.kv_admit_cold(sess) {
+            // Strict FIFO: hold the head until KV headroom frees up.
+            if let PState::AgentServe { queues, .. } = &mut self.state {
+                queues.push_cold_front(q);
+            }
+            return;
+        }
+        self.sessions[sess].phase = SessPhase::Prefilling;
+        let dur = self.cost.prefill_ctx_us(
+            q.job.tokens as u64,
+            q.job.context as u64,
+            share,
+            q.job.kind.phase(),
+        );
+        self.start(
+            PREFILL_CTX,
+            Work::Prefill { sess, tokens: q.job.tokens, kind: q.job.kind, dur_us: dur },
+            dur,
+        );
+    }
+
+    /// Decode context (or the single shared queue when `green=false`):
+    /// alternates decode steps with admitted resume prefills; in No-Green
+    /// mode, cold prefills also serialize here (and pay stream allocation).
+    fn dispatch_agentserve_decode_ctx(&mut self, share: f64, green: bool) {
+        if self.ctx_work[DECODE_CTX].is_some() {
+            return;
+        }
+        let (ids, total_ctx) = self.batcher_mut().next_batch();
+        let stream_alloc = self.cfg.engine.stream_alloc_us;
+
+        // Pop an admitted resume to merge into this step, and (No-Green
+        // only) possibly a cold prefill to serialize on the shared queue.
+        enum Pick {
+            Hybrid(Option<crate::coordinator::QueuedJob>),
+            Cold(crate::coordinator::QueuedJob),
+        }
+        let (pick, rebind_charge) = match &mut self.state {
+            PState::AgentServe { queues, pending_rebind_us, last_was_prefill, .. } => {
+                let has_decode = !ids.is_empty();
+                let resume = queues.pop_resume();
+                let pick = if resume.is_none() && !green && (!*last_was_prefill || !has_decode) {
+                    match queues.pop_cold() {
+                        Some(q) => Pick::Cold(q),
+                        None => Pick::Hybrid(None),
+                    }
+                } else {
+                    Pick::Hybrid(resume)
+                };
+                (pick, std::mem::take(pending_rebind_us))
+            }
+            _ => unreachable!(),
+        };
+
+        match pick {
+            Pick::Hybrid(resume) => {
+                if ids.is_empty() && resume.is_none() {
+                    if rebind_charge > 0.0 {
+                        if let PState::AgentServe { pending_rebind_us, .. } = &mut self.state {
+                            *pending_rebind_us += rebind_charge;
+                        }
+                    }
+                    return;
+                }
+                let (r_info, r_tokens, r_ctx) = match &resume {
+                    Some(q) => (
+                        Some((q.job.session as usize, q.job.tokens)),
+                        q.job.tokens as u64,
+                        q.job.context as u64,
+                    ),
+                    None => (None, 0, 0),
+                };
+                if let Some((sess, _)) = r_info {
+                    self.sessions[sess].phase = SessPhase::Prefilling;
+                }
+                let mut dur = self
+                    .cost
+                    .hybrid_step_us(ids.len(), total_ctx, r_tokens, r_ctx, share)
+                    + rebind_charge;
+                if !green && r_tokens > 0 {
+                    dur += stream_alloc;
+                }
+                self.set_last_was_prefill(r_tokens > 0);
+                self.start(DECODE_CTX, Work::DecodeStep { ids, resume: r_info, dur_us: dur }, dur);
+            }
+            Pick::Cold(q) => {
+                let sess = q.job.session as usize;
+                if !self.kv_admit_cold(sess) {
+                    // Hold the cold head; run a plain decode step if any.
+                    if let PState::AgentServe { queues, pending_rebind_us, .. } = &mut self.state {
+                        queues.push_cold_front(q);
+                        *pending_rebind_us += rebind_charge;
+                    }
+                    if !ids.is_empty() {
+                        self.dispatch_decode_step(ids, total_ctx, share);
+                    }
+                    return;
+                }
+                self.sessions[sess].phase = SessPhase::Prefilling;
+                let dur = self.cost.prefill_ctx_us(
+                    q.job.tokens as u64,
+                    q.job.context as u64,
+                    share,
+                    q.job.kind.phase(),
+                ) + rebind_charge
+                    + stream_alloc;
+                self.set_last_was_prefill(true);
+                self.start(
+                    DECODE_CTX,
+                    Work::Prefill { sess, tokens: q.job.tokens, kind: q.job.kind, dur_us: dur },
+                    dur,
+                );
+            }
+        }
+    }
+
+    fn set_last_was_prefill(&mut self, v: bool) {
+        if let PState::AgentServe { last_was_prefill, .. } = &mut self.state {
+            *last_was_prefill = v;
+        }
+    }
+
+    fn dispatch_decode_step(&mut self, ids: Vec<u64>, total_ctx: u64, share: f64) {
+        let charge = match &mut self.state {
+            PState::AgentServe { pending_rebind_us, .. } => std::mem::take(pending_rebind_us),
+            _ => 0.0,
+        };
+        let dur = self.cost.decode_step_us(ids.len(), total_ctx, share) + charge;
+        self.set_last_was_prefill(false);
+        self.start(DECODE_CTX, Work::DecodeStep { ids, resume: None, dur_us: dur }, dur);
+    }
+
+    fn dispatch_sglang_prefill(&mut self, share: f64) {
+        if self.ctx_work[PREFILL_CTX].is_some() {
+            return;
+        }
+        // KV gate for colds (strict FIFO): peek under a short borrow first.
+        let head = match &self.state {
+            PState::Sglang { fifo, .. } => fifo.front().copied(),
+            _ => unreachable!(),
+        };
+        match head {
+            None => return,
+            Some(q) => {
+                let sess = q.session as usize;
+                if q.kind == JobKind::ColdPrefill && !self.kv_admit_cold(sess) {
+                    return;
+                }
+            }
+        }
+        let job = match &mut self.state {
+            PState::Sglang { fifo, .. } => fifo.pop_front(),
+            _ => unreachable!(),
+        };
+        let Some(job) = job else { return };
+        let sess = job.session as usize;
+        self.sessions[sess].phase = SessPhase::Prefilling;
+        let dur =
+            self.cost
+                .prefill_ctx_us(job.tokens as u64, job.context as u64, share, job.kind.phase());
+        self.start(
+            PREFILL_CTX,
+            Work::Prefill { sess, tokens: job.tokens, kind: job.kind, dur_us: dur },
+            dur,
+        );
+    }
+
+    fn dispatch_sglang_decode(&mut self, share: f64) {
+        if self.ctx_work[DECODE_CTX].is_some() {
+            return;
+        }
+        let (ids, total_ctx) = self.batcher_mut().next_batch();
+        if ids.is_empty() {
+            return;
+        }
+        let mut dur = self.cost.decode_step_us(ids.len(), total_ctx, share);
+        // Process-separated PD without SM isolation: the decode engine
+        // shares memory bandwidth with the concurrently running prefill
+        // process ("shares memory... lacks strict isolation", §IV-C).
+        if self.ctx_work[PREFILL_CTX].is_some() {
+            dur *= 1.0 + SGLANG_CONTENTION;
+        }
+        self.start(DECODE_CTX, Work::DecodeStep { ids, resume: None, dur_us: dur }, dur);
+    }
+
+    /// vLLM / llama.cpp hybrid iterations on a single engine.
+    fn dispatch_iter(&mut self) {
+        if self.ctx_work[DECODE_CTX].is_some() {
+            return;
+        }
+        let (decode_ids, total_ctx) = self.batcher_mut().next_batch();
+        let chunk_size = self.cfg.engine.chunk_size as u32;
+        let mut chunks: Vec<IterChunk> = Vec::new();
+        match &mut self.state {
+            PState::IterBatch { chunked, fifo, .. } => {
+                if *chunked {
+                    // vLLM: one chunk of the oldest pending prompt.
+                    if let Some((sess, remaining, kind)) = fifo.front_mut() {
+                        let take = chunk_size.min(*remaining);
+                        let completes = take == *remaining;
+                        chunks.push(IterChunk { sess: *sess, tokens: take, kind: *kind, completes });
+                        if completes {
+                            fifo.pop_front();
+                        } else {
+                            *remaining -= take;
+                        }
+                    }
+                } else {
+                    // llama.cpp: the oldest pending prompt rides in full
+                    // (unchunked); later prompts wait their turn — n_batch
+                    // admits one prompt's tokens per iteration.
+                    if let Some((sess, remaining, kind)) = fifo.pop_front() {
+                        chunks.push(IterChunk {
+                            sess,
+                            tokens: remaining,
+                            kind,
+                            completes: true,
+                        });
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        if chunks.is_empty() && decode_ids.is_empty() {
+            return;
+        }
+        // Iteration duration: prefill parts + decode part, serialized.
+        let mut dur = 0.0;
+        for c in &chunks {
+            let ctx = self.sessions[c.sess].ctx_tokens as u64;
+            dur += self.cost.prefill_ctx_us(c.tokens as u64, ctx, 1.0, c.kind.phase());
+            self.sessions[c.sess].phase = SessPhase::Prefilling;
+        }
+        if !decode_ids.is_empty() {
+            dur += self.cost.decode_step_us(decode_ids.len(), total_ctx, 1.0);
+            if !chunks.is_empty() {
+                dur *= MIXED_ITER_PENALTY;
+            }
+        }
+        self.start(DECODE_CTX, Work::Iteration { chunks, decode_ids }, dur);
+    }
+
+    // -- control ticks -----------------------------------------------------------
+
+    fn handle_tick(&mut self) {
+        let interval = match &mut self.state {
+            PState::AgentServe { opts, queues, sched, pool, pending_rebind_us, .. } => {
+                if !opts.adaptive {
+                    return;
+                }
+                let d = sched.tick(self.now);
+                queues.reroute_over_budget(d.b_prefill);
+                if opts.green_contexts {
+                    let (_, cost) = pool.rebind(d.r_min);
+                    if cost > 0.0 {
+                        *pending_rebind_us += cost;
+                    }
+                }
+                self.control_trace.push((self.now, d.b_prefill, d.r_min));
+                sched.interval_us()
+            }
+            _ => return,
+        };
+        if self.done_count < self.sessions.len() {
+            self.push(self.now + interval, Ev::Tick);
+        }
+    }
+
+    // -- main loop ----------------------------------------------------------------
+
+    fn run(&mut self) {
+        let cap = 200_000_000u64; // runaway guard
+        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+            self.now = t;
+            match ev {
+                Ev::Arrive(s) => {
+                    debug_assert_eq!(self.sessions[s].phase, SessPhase::NotArrived);
+                    self.submit_prefill(s);
+                }
+                Ev::ToolReturn(s) => {
+                    debug_assert_eq!(self.sessions[s].phase, SessPhase::ToolWait);
+                    self.submit_prefill(s);
+                }
+                Ev::CtxFree(c) => self.complete_work(c),
+                Ev::Tick => self.handle_tick(),
+            }
+            if self.done_count == self.sessions.len() {
+                break;
+            }
+            self.dispatch();
+            assert!(self.seq < cap, "simulation runaway");
+        }
+    }
+}
+
+/// Run one simulated serving experiment.
+pub fn run_sim(cfg: &Config, policy: Policy, params: &SimParams) -> SimOutcome {
+    let mut gen = WorkloadGenerator::new(params.workload, cfg.model.kind, params.seed);
+    let total_sessions = params.n_agents * params.sessions_per_agent;
+    let scripts = gen.sessions(total_sessions);
+    run_sim_scripts(cfg, policy, params, scripts)
+}
+
+/// Run with externally supplied scripts (trace replay / tests).
+pub fn run_sim_scripts(
+    cfg: &Config,
+    policy: Policy,
+    params: &SimParams,
+    scripts: Vec<SessionScript>,
+) -> SimOutcome {
+    let cost = CostModel::new(&cfg.model, &cfg.gpu);
+    let max_batch = cfg.engine.max_decode_batch;
+    let state = match policy {
+        Policy::AgentServe(opts) => {
+            let mut pool = GreenContextPool::new(
+                cfg.gpu.sm_count,
+                cfg.engine.green_slots,
+                cfg.engine.rebind_us,
+            );
+            let mut sched_cfg = cfg.scheduler.clone();
+            if !opts.adaptive {
+                // No-Alg ablation: a static 50/50 split, sized without
+                // profiling feedback (the obvious default, like the
+                // dual-engine baselines use).
+                sched_cfg.r_init = cfg.gpu.sm_count / 2;
+            }
+            let sched = TpotScheduler::new(sched_cfg, cfg.gpu.sm_count);
+            // Bind the initial reservation (construction-time, not charged).
+            pool.rebind(sched.r_min());
+            PState::AgentServe {
+                opts,
+                queues: DualQueues::new(),
+                batcher: DecodeBatcher::new(max_batch),
+                sched,
+                pool,
+                manager: RequestManager::new(),
+                pending_rebind_us: 0.0,
+                last_was_prefill: false,
+            }
+        }
+        Policy::Sglang(opts) => PState::Sglang {
+            opts,
+            fifo: VecDeque::new(),
+            batcher: DecodeBatcher::new(max_batch),
+        },
+        Policy::Vllm => PState::IterBatch {
+            chunked: true,
+            fifo: VecDeque::new(),
+            batcher: DecodeBatcher::new(max_batch),
+        },
+        Policy::LlamaCpp => PState::IterBatch {
+            chunked: false,
+            fifo: VecDeque::new(),
+            batcher: DecodeBatcher::new(max_batch),
+        },
+    };
+
+    let sessions: Vec<SimSession> = scripts
+        .into_iter()
+        .map(|script| SimSession {
+            script,
+            phase: SessPhase::NotArrived,
+            ctx_tokens: 0,
+            cur_step: 0,
+            decode_remaining: 0,
+        })
+        .collect();
+
+    let mut sim = Sim {
+        cost,
+        sessions,
+        n_agents: params.n_agents,
+        think_time_us: params.think_time_us,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        now: 0,
+        ctx_work: [None, None],
+        state,
+        metrics: MetricsRecorder::new(),
+        done_count: 0,
+        kv_used: 0,
+        kv_cap: (cfg.engine.kv_blocks * cfg.engine.kv_block_size) as u64,
+        kv_peak: 0,
+        cold_prefill_tokens: 0,
+        resume_prefill_tokens: 0,
+        decode_round_accum_us: 0.0,
+        control_trace: Vec::new(),
+        cfg: cfg.clone(),
+    };
+
+    // Wave-0 arrivals, staggered.
+    for a in 0..params.n_agents.min(sim.sessions.len()) {
+        sim.push(a as u64 * params.stagger_us, Ev::Arrive(a));
+    }
+    // Control ticks for adaptive AgentServe.
+    if let Policy::AgentServe(opts) = policy {
+        if opts.adaptive {
+            let interval = (cfg.scheduler.interval_ms * 1000.0) as u64;
+            sim.push(interval, Ev::Tick);
+        }
+    }
+
+    sim.run();
+
+    let end = sim.now;
+    let report = sim.metrics.report(end);
+    let slo = SloJudge::new(&cfg.slo).judge(&sim.metrics);
+    let total_prefill = sim.cold_prefill_tokens + sim.resume_prefill_tokens;
+    let (rebinds, cold_routed, resume_merged, resume_rerouted) = match &sim.state {
+        PState::AgentServe { pool, manager, .. } => (
+            pool.stats(),
+            manager.cold_routed,
+            manager.resume_merged,
+            manager.resume_rerouted,
+        ),
+        _ => (RebindStats::default(), 0, 0, 0),
+    };
+    SimOutcome {
+        policy_name: policy.name().to_string(),
+        report,
+        slo,
+        timeline: sim.metrics.timeline().to_vec(),
+        rebinds,
+        eta_cold: if total_prefill == 0 {
+            0.0
+        } else {
+            sim.cold_prefill_tokens as f64 / total_prefill as f64
+        },
+        cold_routed,
+        resume_merged,
+        resume_rerouted,
+        kv_peak_tokens: sim.kv_peak,
+        control_trace: sim.control_trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, ModelKind};
+
+    fn cfg() -> Config {
+        Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+    }
+
+    fn small_params() -> SimParams {
+        SimParams { n_agents: 3, sessions_per_agent: 1, ..SimParams::default() }
+    }
+
+    #[test]
+    fn all_policies_complete_all_sessions() {
+        let cfg = cfg();
+        let p = small_params();
+        for policy in Policy::paper_lineup()
+            .into_iter()
+            .chain(Policy::ablation_lineup())
+        {
+            let out = run_sim(&cfg, policy, &p);
+            assert_eq!(
+                out.report.completed_sessions, 3,
+                "{} must complete all sessions",
+                policy.name()
+            );
+            assert!(out.report.total_tokens > 0);
+            assert!(out.report.ttft.n >= 3, "each session has >= 1 request");
+        }
+    }
+
+    #[test]
+    fn identical_scripts_across_policies() {
+        // Paired comparison guarantee: same seed → same scripts.
+        let cfg = cfg();
+        let p = small_params();
+        let a = run_sim(&cfg, Policy::LlamaCpp, &p);
+        let b = run_sim(&cfg, Policy::Vllm, &p);
+        // Total decode tokens identical (schedule-independent).
+        assert_eq!(a.report.total_tokens, b.report.total_tokens);
+    }
+
+    #[test]
+    fn agentserve_beats_llamacpp_on_tpot_tail() {
+        let cfg = cfg();
+        let p = SimParams { n_agents: 4, sessions_per_agent: 2, ..SimParams::default() };
+        let ours = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &p);
+        let base = run_sim(&cfg, Policy::LlamaCpp, &p);
+        assert!(
+            ours.report.tpot.p95 < base.report.tpot.p95,
+            "AgentServe p95 TPOT {} must beat llama.cpp {}",
+            ours.report.tpot.p95,
+            base.report.tpot.p95
+        );
+    }
+
+    #[test]
+    fn agentserve_rebinds_and_adapts() {
+        let cfg = cfg();
+        let p = SimParams { n_agents: 5, sessions_per_agent: 2, ..SimParams::default() };
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &p);
+        assert!(!out.control_trace.is_empty(), "adaptive policy must tick");
+        assert!(out.cold_routed > 0);
+        assert!(out.resume_merged > 0);
+    }
+
+    #[test]
+    fn noalg_never_ticks() {
+        let cfg = cfg();
+        let out = run_sim(
+            &cfg,
+            Policy::AgentServe(AgentServeOpts { adaptive: false, green_contexts: true }),
+            &small_params(),
+        );
+        assert!(out.control_trace.is_empty());
+    }
+
+    #[test]
+    fn deterministic_outcomes() {
+        let cfg = cfg();
+        let p = small_params();
+        let a = run_sim(&cfg, Policy::Vllm, &p);
+        let b = run_sim(&cfg, Policy::Vllm, &p);
+        assert_eq!(a.report.total_tokens, b.report.total_tokens);
+        assert_eq!(a.report.wall_ms, b.report.wall_ms);
+        assert_eq!(a.report.tpot.p95, b.report.tpot.p95);
+    }
+
+    #[test]
+    fn eta_cold_is_a_fraction() {
+        let cfg = cfg();
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &small_params());
+        assert!(out.eta_cold > 0.0 && out.eta_cold < 1.0, "eta={}", out.eta_cold);
+    }
+
+    #[test]
+    fn kv_peak_tracks_context() {
+        let cfg = cfg();
+        let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &small_params());
+        // 3 sessions × ~3k cold prefill each → peak well above 3k tokens.
+        assert!(out.kv_peak_tokens > 3000, "peak={}", out.kv_peak_tokens);
+    }
+}

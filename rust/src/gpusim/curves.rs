@@ -1,0 +1,145 @@
+//! Per-phase normalized throughput vs SM-share curves (Fig. 3).
+//!
+//! The paper profiles decode, cold-prefill, and resume-prefill throughput
+//! as a function of the SM share and observes (§II-C):
+//!
+//! - decode throughput "increases rapidly at low SM shares and saturates
+//!   earlier than prefill" (bandwidth-bound; a modest number of SMs already
+//!   saturates DRAM bandwidth),
+//! - cold prefill "rises more gradually" (compute-bound; scales with SMs),
+//! - resume prefill "remains between decode and cold prefill".
+//!
+//! We model each as a saturating rational curve f(x) = x(1+k)/(x+k) with a
+//! per-phase knee constant k, normalized so f(1) = 1. Small k ⇒ early
+//! saturation. These satisfy Assumption 1 (monotone non-decreasing) exactly,
+//! which the competitive-ratio analysis (coordinator::analysis) relies on.
+
+
+/// Execution phase of a request (§I definitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Long uncached system prompt prefill.
+    ColdPrefill,
+    /// Cached-context extension with tool outputs.
+    ResumePrefill,
+    /// Token-by-token generation.
+    Decode,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::ColdPrefill => "cold_prefill",
+            Phase::ResumePrefill => "resume_prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Knee constants for the three phases.
+#[derive(Debug, Clone)]
+pub struct PhaseCurves {
+    /// Decode knee: small ⇒ saturates at low SM share.
+    pub k_decode: f64,
+    /// Cold-prefill knee: large ⇒ near-linear scaling.
+    pub k_cold: f64,
+    /// Resume-prefill knee: between the two.
+    pub k_resume: f64,
+}
+
+impl Default for PhaseCurves {
+    fn default() -> Self {
+        // Calibrated so that (matching Fig. 3's qualitative shape):
+        //   decode(0.3) ≈ 0.78, cold(0.3) ≈ 0.35, resume(0.3) ≈ 0.55.
+        Self { k_decode: 0.09, k_cold: 2.2, k_resume: 0.45 }
+    }
+}
+
+impl PhaseCurves {
+    /// Normalized throughput at SM share `x ∈ (0, 1]` for `phase`.
+    ///
+    /// Monotone non-decreasing in `x` and equal to 1 at `x = 1`
+    /// (Assumption 1 of the competitive-ratio analysis).
+    pub fn throughput_frac(&self, phase: Phase, x: f64) -> f64 {
+        let x = x.clamp(0.0, 1.0);
+        let k = match phase {
+            Phase::Decode => self.k_decode,
+            Phase::ColdPrefill => self.k_cold,
+            Phase::ResumePrefill => self.k_resume,
+        };
+        x * (1.0 + k) / (x + k)
+    }
+
+    /// Effective prefill throughput mix μ_P(R, t) = η μ_C + (1-η) μ_R (Eq. 1),
+    /// expressed on normalized curves.
+    pub fn prefill_mix_frac(&self, x: f64, eta_cold: f64) -> f64 {
+        let eta = eta_cold.clamp(0.0, 1.0);
+        eta * self.throughput_frac(Phase::ColdPrefill, x)
+            + (1.0 - eta) * self.throughput_frac(Phase::ResumePrefill, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_at_full_share() {
+        let c = PhaseCurves::default();
+        for p in [Phase::Decode, Phase::ColdPrefill, Phase::ResumePrefill] {
+            assert!((c.throughput_frac(p, 1.0) - 1.0).abs() < 1e-12);
+            assert_eq!(c.throughput_frac(p, 0.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn monotone_in_share() {
+        let c = PhaseCurves::default();
+        for p in [Phase::Decode, Phase::ColdPrefill, Phase::ResumePrefill] {
+            let mut prev = 0.0;
+            for i in 1..=100 {
+                let v = c.throughput_frac(p, i as f64 / 100.0);
+                assert!(v >= prev, "{p} curve must be non-decreasing");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_matches_fig3() {
+        // At every interior share: decode >= resume >= cold (normalized).
+        let c = PhaseCurves::default();
+        for i in 1..100 {
+            let x = i as f64 / 100.0;
+            let d = c.throughput_frac(Phase::Decode, x);
+            let r = c.throughput_frac(Phase::ResumePrefill, x);
+            let cd = c.throughput_frac(Phase::ColdPrefill, x);
+            assert!(d >= r && r >= cd, "at x={x}: d={d} r={r} c={cd}");
+        }
+    }
+
+    #[test]
+    fn decode_knee_is_early() {
+        let c = PhaseCurves::default();
+        assert!(c.throughput_frac(Phase::Decode, 0.3) > 0.75);
+        assert!(c.throughput_frac(Phase::ColdPrefill, 0.3) < 0.45);
+    }
+
+    #[test]
+    fn mix_interpolates() {
+        let c = PhaseCurves::default();
+        let x = 0.5;
+        let cold = c.throughput_frac(Phase::ColdPrefill, x);
+        let resume = c.throughput_frac(Phase::ResumePrefill, x);
+        assert!((c.prefill_mix_frac(x, 1.0) - cold).abs() < 1e-12);
+        assert!((c.prefill_mix_frac(x, 0.0) - resume).abs() < 1e-12);
+        let mid = c.prefill_mix_frac(x, 0.5);
+        assert!(mid > cold && mid < resume);
+    }
+}

@@ -1,0 +1,288 @@
+//! Absolute kernel-duration model.
+//!
+//! Combines the model/GPU profiles (absolute peaks) with the normalized
+//! per-phase SM curves ([`super::curves`]) to price individual kernels:
+//!
+//! - **Prefill** (cold or resume) of `t` tokens pays the roofline max of a
+//!   compute term `flops(t) / (peak * eff(t) * f_phase(x))` and a memory
+//!   floor (the full weight read every kernel pays):
+//!   `bytes / (bw * f_phase(x))`. `eff(t)` is the chunk-size efficiency —
+//!   small chunks underutilize the MXU/tensor cores, which is why resume
+//!   prefills and chunked prefill pay overhead.
+//! - **Decode step** of batch `b` over total context `K` tokens is
+//!   bandwidth-bound: `(weights + kv_bytes(K)) / (bw * f_decode(x))`, plus
+//!   a small per-launch fixed cost.
+//!
+//! The attention quadratic term is included for long prefills; it matters
+//! for 3k-token cold prefills on small models.
+
+use super::curves::{Phase, PhaseCurves};
+use crate::config::{GpuProfile, ModelProfile};
+
+/// Prices kernels for one (model, GPU) pair.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Peak fp16 FLOPs/s with the whole device.
+    peak_flops: f64,
+    /// Effective memory bandwidth bytes/s with the whole device.
+    bw_bytes: f64,
+    /// Model weight footprint (bytes) — read once per decode step.
+    weight_bytes: f64,
+    /// KV bytes per cached token.
+    kv_bytes_per_token: f64,
+    /// FLOPs per token of forward compute.
+    flops_per_token: f64,
+    /// Attention FLOPs coefficient: 2 * layers * hidden per (token · ctx token).
+    attn_flops_coeff: f64,
+    /// Max fraction of peak compute achievable by big prefills.
+    pub max_compute_eff: f64,
+    /// Chunk length at which prefill efficiency reaches half its max.
+    pub eff_half_tokens: f64,
+    /// Fixed per-kernel-launch overhead (us).
+    pub launch_overhead_us: f64,
+    /// Normalized SM-share curves.
+    pub curves: PhaseCurves,
+}
+
+impl CostModel {
+    pub fn new(model: &ModelProfile, gpu: &GpuProfile) -> Self {
+        Self {
+            peak_flops: gpu.peak_tflops * 1e12,
+            bw_bytes: gpu.mem_bw_gbps * 1e9 * gpu.bw_saturation_frac,
+            weight_bytes: model.weight_bytes(),
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            flops_per_token: model.flops_per_token_g * 1e9,
+            attn_flops_coeff: 4.0 * model.layers as f64 * model.hidden as f64,
+            // End-to-end prefill efficiency of the serving stack. The paper
+            // implements AgentServe *and* measures every baseline on
+            // llama.cpp-class kernels ("we extend llama.cpp"), whose prompt
+            // throughput on consumer GPUs is ~1.5-2k tok/s for a 3B model —
+            // far below vendor peaks. At that speed 3-6 concurrent agents
+            // genuinely saturate the device (the paper's operating regime).
+            max_compute_eff: 0.18,
+            eff_half_tokens: 16.0,
+            launch_overhead_us: 40.0,
+            curves: PhaseCurves::default(),
+        }
+    }
+
+    /// Chunk-size compute efficiency in (0, max_compute_eff].
+    #[inline]
+    pub fn chunk_eff(&self, t: u64) -> f64 {
+        let t = t as f64;
+        self.max_compute_eff * t / (t + self.eff_half_tokens)
+    }
+
+    /// Duration (us) of a prefill kernel of `t` new tokens in `phase`
+    /// (ColdPrefill or ResumePrefill) at SM share `x ∈ (0,1]`.
+    ///
+    /// `ctx` is the number of already-cached tokens the new tokens attend to
+    /// (0 for cold prefills).
+    pub fn prefill_ctx_us(&self, t: u64, ctx: u64, x: f64, phase: Phase) -> f64 {
+        debug_assert!(matches!(phase, Phase::ColdPrefill | Phase::ResumePrefill));
+        if t == 0 {
+            return 0.0;
+        }
+        let frac = self.curves.throughput_frac(phase, x).max(1e-6);
+        // Dense projections/MLP: 2*P per token. Attention: each new token
+        // attends to ctx + its causal prefix.
+        let causal = t as f64 * (t as f64 - 1.0) / 2.0;
+        let attn_flops = self.attn_flops_coeff * (t as f64 * ctx as f64 + causal);
+        let flops = self.flops_per_token * t as f64 + attn_flops;
+        let eff = self.chunk_eff(t);
+        let compute_s = flops / (self.peak_flops * eff * frac);
+        // Memory floor: the kernel reads all weights plus the cached KV of
+        // the attended context once, whatever the chunk size.
+        let bytes = self.weight_bytes + self.kv_bytes_per_token * ctx as f64;
+        let mem_s = bytes / (self.bw_bytes * frac);
+        compute_s.max(mem_s) * 1e6 + self.launch_overhead_us
+    }
+
+    /// Convenience wrapper with ctx=0 for cold prefills / profiling sweeps.
+    pub fn prefill_us(&self, t: u64, x: f64, phase: Phase) -> f64 {
+        self.prefill_ctx_us(t, 0, x, phase)
+    }
+
+    /// Duration (us) of one decode step for batch `b` with `total_ctx`
+    /// cached tokens across the batch, at SM share `x`.
+    pub fn decode_step_us(&self, b: usize, total_ctx: u64, x: f64) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        let frac = self.curves.throughput_frac(Phase::Decode, x).max(1e-6);
+        let bytes = self.weight_bytes + self.kv_bytes_per_token * total_ctx as f64;
+        // Batched decode also pays compute; it only matters at large b.
+        let compute_s = self.flops_per_token * b as f64 / (self.peak_flops * 0.3);
+        let mem_s = bytes / (self.bw_bytes * frac);
+        mem_s.max(compute_s) * 1e6 + self.launch_overhead_us
+    }
+
+    /// Duration (us) of one **hybrid** step: a decode batch of `b` streams
+    /// (total cached context `total_ctx`) merged with a resume prefill of
+    /// `r_tokens` new tokens attending to `r_ctx` cached tokens, at SM
+    /// share `x`.
+    ///
+    /// This is §III-A's "resume prefills are merged with decodes": one
+    /// kernel reads the weights once (memory term) and computes `b + r`
+    /// tokens (compute term), so a short resume rides a decode step at the
+    /// marginal compute cost instead of serializing a full weight read.
+    pub fn hybrid_step_us(
+        &self,
+        b: usize,
+        total_ctx: u64,
+        r_tokens: u64,
+        r_ctx: u64,
+        x: f64,
+    ) -> f64 {
+        if r_tokens == 0 {
+            return self.decode_step_us(b, total_ctx, x);
+        }
+        let f_d = self.curves.throughput_frac(Phase::Decode, x).max(1e-6);
+        let f_r = self.curves.throughput_frac(Phase::ResumePrefill, x).max(1e-6);
+        // One weight pass + all KV read.
+        let bytes = self.weight_bytes + self.kv_bytes_per_token * (total_ctx + r_ctx) as f64;
+        let mem_s = bytes / (self.bw_bytes * f_d);
+        // Compute for decode tokens + resume tokens (+ resume attention).
+        let causal = r_tokens as f64 * (r_tokens as f64 - 1.0) / 2.0;
+        let attn = self.attn_flops_coeff * (r_tokens as f64 * r_ctx as f64 + causal);
+        let flops = self.flops_per_token * (b as u64 + r_tokens) as f64 + attn;
+        let eff = self.chunk_eff(b as u64 + r_tokens);
+        let compute_s = flops / (self.peak_flops * eff * f_r);
+        mem_s.max(compute_s) * 1e6 + self.launch_overhead_us
+    }
+
+    /// Decode throughput μ_D(R) in tokens/s for a reference batch/context
+    /// (used by the scheduler's profile tables and the analysis module).
+    pub fn decode_throughput(&self, b: usize, total_ctx: u64, x: f64) -> f64 {
+        let us = self.decode_step_us(b, total_ctx, x);
+        if us <= 0.0 { 0.0 } else { b as f64 / (us * 1e-6) }
+    }
+
+    /// Prefill throughput in tokens/s for chunk `t` at share `x`.
+    pub fn prefill_throughput(&self, t: u64, x: f64, phase: Phase) -> f64 {
+        let us = self.prefill_us(t, x, phase);
+        if us <= 0.0 { 0.0 } else { t as f64 / (us * 1e-6) }
+    }
+
+    /// Effective prefill throughput μ_P(R, t) mixing cold/resume (Eq. 1).
+    pub fn prefill_mix_throughput(&self, x: f64, eta_cold: f64) -> f64 {
+        eta_cold * self.prefill_throughput(3000, x, Phase::ColdPrefill)
+            + (1.0 - eta_cold) * self.prefill_throughput(128, x, Phase::ResumePrefill)
+    }
+
+    /// KV bytes for `tokens` cached tokens (used to price PD transfers).
+    pub fn kv_bytes(&self, tokens: u64) -> f64 {
+        self.kv_bytes_per_token * tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, GpuProfile, ModelKind, ModelProfile};
+
+    fn model7b_a5000() -> CostModel {
+        CostModel::new(
+            &ModelProfile::preset(ModelKind::Qwen7B),
+            &GpuProfile::preset(GpuKind::A5000),
+        )
+    }
+
+    #[test]
+    fn decode_step_is_weight_read_bound() {
+        let m = model7b_a5000();
+        // ~15.2GB / (768*0.45 GB/s) ≈ 44ms + overhead.
+        let us = m.decode_step_us(1, 0, 1.0);
+        assert!(us > 35_000.0 && us < 55_000.0, "decode step {us} us");
+    }
+
+    #[test]
+    fn batching_decodes_is_nearly_free() {
+        let m = model7b_a5000();
+        let b1 = m.decode_step_us(1, 2000, 1.0);
+        let b8 = m.decode_step_us(8, 16_000, 1.0);
+        // 8x batch costs well under 2x the step time (weights dominate).
+        assert!(b8 < 2.0 * b1, "b1={b1} b8={b8}");
+    }
+
+    #[test]
+    fn cold_prefill_3k_is_hundreds_of_ms() {
+        let m = model7b_a5000();
+        // llama.cpp-class prompt speed on a 7B model: ~600-700 tok/s.
+        let us = m.prefill_us(3000, 1.0, Phase::ColdPrefill);
+        assert!(us > 2_000_000.0 && us < 8_000_000.0, "cold prefill {us} us");
+    }
+
+    #[test]
+    fn small_chunks_are_inefficient() {
+        let m = model7b_a5000();
+        let per_tok_small = m.prefill_us(32, 1.0, Phase::ResumePrefill) / 32.0;
+        let per_tok_big = m.prefill_us(2048, 1.0, Phase::ColdPrefill) / 2048.0;
+        assert!(
+            per_tok_small > 1.3 * per_tok_big,
+            "small={per_tok_small} big={per_tok_big}"
+        );
+    }
+
+    #[test]
+    fn context_makes_resume_prefill_slower() {
+        let m = model7b_a5000();
+        let no_ctx = m.prefill_ctx_us(128, 0, 1.0, Phase::ResumePrefill);
+        let with_ctx = m.prefill_ctx_us(128, 3000, 1.0, Phase::ResumePrefill);
+        assert!(with_ctx > no_ctx);
+    }
+
+    #[test]
+    fn hybrid_step_reduces_to_decode_when_empty() {
+        let m = model7b_a5000();
+        let plain = m.decode_step_us(4, 8000, 0.5);
+        let hybrid = m.hybrid_step_us(4, 8000, 0, 0, 0.5);
+        assert_eq!(plain, hybrid);
+    }
+
+    #[test]
+    fn hybrid_merge_cheaper_than_serialized_kernels() {
+        // The §III-A merge: one weight pass for decode + resume beats a
+        // decode step followed by a standalone resume prefill.
+        let m = model7b_a5000();
+        let merged = m.hybrid_step_us(4, 8000, 64, 3000, 0.5);
+        let serial = m.decode_step_us(4, 8000, 0.5)
+            + m.prefill_ctx_us(64, 3000, 0.5, Phase::ResumePrefill);
+        assert!(
+            merged < serial,
+            "merged {merged} must beat serialized {serial}"
+        );
+        // And it can never be cheaper than the decode step alone.
+        assert!(merged >= m.decode_step_us(4, 8000, 0.5));
+    }
+
+    #[test]
+    fn hybrid_cost_grows_with_resume_length() {
+        let m = model7b_a5000();
+        let mut prev = 0.0;
+        for r in [16u64, 64, 128, 256] {
+            let us = m.hybrid_step_us(4, 8000, r, 3000, 0.5);
+            assert!(us >= prev);
+            prev = us;
+        }
+    }
+
+    #[test]
+    fn throughputs_monotone_in_share() {
+        let m = model7b_a5000();
+        let mut prev = 0.0;
+        for i in 1..=10 {
+            let x = i as f64 / 10.0;
+            let v = m.decode_throughput(4, 8000, x);
+            assert!(v >= prev);
+            prev = v;
+        }
+        let mut prev = 0.0;
+        for i in 1..=10 {
+            let x = i as f64 / 10.0;
+            let v = m.prefill_throughput(3000, x, Phase::ColdPrefill);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+}

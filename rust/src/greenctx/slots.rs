@@ -1,0 +1,217 @@
+//! Green-Context slot pool, partitions, and the rebind ledger.
+
+
+/// A decode/prefill SM partition drawn from the discrete slot set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    /// SMs reserved for the decode context.
+    pub decode_sms: u32,
+    /// SMs left for the prefill context (complement).
+    pub prefill_sms: u32,
+    /// Index of the decode slot in the pool (0-based).
+    pub decode_slot: usize,
+}
+
+impl Partition {
+    /// Decode SM share in (0, 1].
+    pub fn decode_share(&self, total_sms: u32) -> f64 {
+        self.decode_sms as f64 / total_sms as f64
+    }
+
+    /// Prefill SM share in [0, 1).
+    pub fn prefill_share(&self, total_sms: u32) -> f64 {
+        self.prefill_sms as f64 / total_sms as f64
+    }
+}
+
+/// Cumulative rebinding statistics (charged by the engine drivers).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RebindStats {
+    /// Number of rebind operations performed.
+    pub rebinds: u64,
+    /// Total rebind time charged (us).
+    pub total_us: f64,
+    /// Number of scheduler targets that required no rebind.
+    pub no_ops: u64,
+}
+
+/// Pool of pre-established Green Context slots.
+///
+/// Slots reserve `g, 2g, …, S` SMs where `g = S / n_slots` (Assumption 2).
+/// Construction happens once; selection and rebinding are O(1).
+#[derive(Debug, Clone)]
+pub struct GreenContextPool {
+    total_sms: u32,
+    /// SM counts of each pre-created slot, ascending.
+    slot_sms: Vec<u32>,
+    /// Cost of switching between pre-created contexts (us). Paper: < 50.
+    rebind_us: f64,
+    /// Currently bound decode slot.
+    current: usize,
+    stats: RebindStats,
+}
+
+impl GreenContextPool {
+    /// Create `n_slots` contexts over `total_sms` SMs (paper: n_slots = 10).
+    pub fn new(total_sms: u32, n_slots: usize, rebind_us: f64) -> Self {
+        assert!(n_slots >= 2, "need at least two slots");
+        assert!(total_sms >= n_slots as u32, "more slots than SMs");
+        let slot_sms = (1..=n_slots)
+            .map(|i| ((total_sms as u64 * i as u64) / n_slots as u64) as u32)
+            .collect();
+        Self {
+            total_sms,
+            slot_sms,
+            rebind_us,
+            current: 0,
+            stats: RebindStats::default(),
+        }
+    }
+
+    /// SM granularity g (smallest slot).
+    pub fn granularity(&self) -> u32 {
+        self.slot_sms[0]
+    }
+
+    /// All available slot sizes (𝒢 in the paper).
+    pub fn slot_sizes(&self) -> &[u32] {
+        &self.slot_sms
+    }
+
+    pub fn total_sms(&self) -> u32 {
+        self.total_sms
+    }
+
+    pub fn stats(&self) -> RebindStats {
+        self.stats
+    }
+
+    /// Nearest slot guaranteeing at least `min_sms` for decode.
+    ///
+    /// Clamps to the largest slot when the target exceeds S. Never selects
+    /// the full-GPU slot unless requested, so prefill keeps its complement.
+    pub fn partition_for_decode_sms(&self, min_sms: u32) -> Partition {
+        let idx = self
+            .slot_sms
+            .iter()
+            .position(|&s| s >= min_sms)
+            .unwrap_or(self.slot_sms.len() - 1);
+        let decode_sms = self.slot_sms[idx];
+        Partition {
+            decode_sms,
+            prefill_sms: self.total_sms - decode_sms,
+            decode_slot: idx,
+        }
+    }
+
+    /// Overshoot δ of the discrete selection over the continuous target
+    /// (feeds the competitive-ratio bound: R_A ≤ R*_g + δ).
+    pub fn overshoot(&self, min_sms: u32) -> u32 {
+        self.partition_for_decode_sms(min_sms).decode_sms.saturating_sub(min_sms)
+    }
+
+    /// Rebind the decode thread to the slot satisfying `min_sms`.
+    ///
+    /// Returns `(partition, cost_us)`. Cost is zero when the target maps to
+    /// the already-bound slot (the common steady-state case).
+    pub fn rebind(&mut self, min_sms: u32) -> (Partition, f64) {
+        let part = self.partition_for_decode_sms(min_sms);
+        if part.decode_slot == self.current {
+            self.stats.no_ops += 1;
+            (part, 0.0)
+        } else {
+            self.current = part.decode_slot;
+            self.stats.rebinds += 1;
+            self.stats.total_us += self.rebind_us;
+            (part, self.rebind_us)
+        }
+    }
+
+    /// Currently bound partition.
+    pub fn current_partition(&self) -> Partition {
+        let decode_sms = self.slot_sms[self.current];
+        Partition {
+            decode_sms,
+            prefill_sms: self.total_sms - decode_sms,
+            decode_slot: self.current,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool64() -> GreenContextPool {
+        GreenContextPool::new(64, 10, 50.0)
+    }
+
+    #[test]
+    fn slots_are_10_percent_increments() {
+        let p = pool64();
+        let sizes = p.slot_sizes();
+        assert_eq!(sizes.len(), 10);
+        assert_eq!(sizes[0], 6); // 10% of 64, floor
+        assert_eq!(sizes[9], 64);
+        for w in sizes.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn selection_is_nearest_geq() {
+        let p = pool64();
+        for target in 1..=64u32 {
+            let part = p.partition_for_decode_sms(target);
+            assert!(part.decode_sms >= target.min(64));
+            // No smaller slot would have sufficed.
+            for &s in p.slot_sizes() {
+                if s >= target {
+                    assert!(part.decode_sms <= s);
+                }
+            }
+            assert_eq!(part.decode_sms + part.prefill_sms, 64);
+        }
+    }
+
+    #[test]
+    fn overshoot_bounded_by_granularity() {
+        let p = pool64();
+        for target in 1..=64u32 {
+            // δ < g except when rounding hits exactly.
+            assert!(p.overshoot(target) < p.granularity() + 1);
+        }
+    }
+
+    #[test]
+    fn rebind_charges_only_on_change() {
+        let mut p = pool64();
+        let (part1, c1) = p.rebind(30); // slot 32 (50%)
+        assert_eq!(part1.decode_sms, 32);
+        assert!(c1 > 0.0);
+        let (_, c2) = p.rebind(29); // still slot 32
+        assert_eq!(c2, 0.0);
+        let (part3, c3) = p.rebind(40);
+        assert!(part3.decode_sms >= 40);
+        assert!(c3 > 0.0);
+        let s = p.stats();
+        assert_eq!(s.rebinds, 2);
+        assert_eq!(s.no_ops, 1);
+        assert!((s.total_us - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_target_clamps_to_full_gpu() {
+        let p = pool64();
+        let part = p.partition_for_decode_sms(1000);
+        assert_eq!(part.decode_sms, 64);
+        assert_eq!(part.prefill_sms, 0);
+    }
+
+    #[test]
+    fn granularity_scales_with_slot_count() {
+        let p4 = GreenContextPool::new(64, 4, 50.0);
+        let p20 = GreenContextPool::new(64, 20, 50.0);
+        assert!(p4.granularity() > p20.granularity());
+    }
+}

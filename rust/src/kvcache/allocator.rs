@@ -1,0 +1,229 @@
+//! Paged KV block allocator with ref-counting.
+//!
+//! Blocks are fixed-size pages of `block_size` tokens (PagedAttention).
+//! Shared prefixes hold multiple references to the same physical block;
+//! a block returns to the free list only when its last reference drops.
+
+use std::fmt;
+
+/// Physical block handle.
+pub type BlockId = u32;
+
+/// Allocator errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    /// No free blocks left (back-pressure signal to the scheduler).
+    OutOfBlocks { requested: usize, free: usize },
+    /// Release/retain of an unallocated block.
+    NotAllocated(BlockId),
+    /// Block id outside the pool.
+    BadBlock(BlockId),
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::OutOfBlocks { requested, free } => {
+                write!(f, "out of KV blocks: requested {requested}, free {free}")
+            }
+            KvError::NotAllocated(b) => write!(f, "block {b} is not allocated"),
+            KvError::BadBlock(b) => write!(f, "block {b} out of range"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Fixed-pool paged allocator.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_size: usize,
+    ref_counts: Vec<u32>,
+    free_list: Vec<BlockId>,
+    /// High-water mark of simultaneously allocated blocks (for reporting).
+    peak_used: usize,
+}
+
+impl BlockAllocator {
+    /// Pool of `num_blocks` pages of `block_size` tokens each.
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(num_blocks > 0 && block_size > 0);
+        Self {
+            block_size,
+            ref_counts: vec![0; num_blocks],
+            // LIFO free list: most-recently-freed first for cache locality.
+            free_list: (0..num_blocks as BlockId).rev().collect(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.ref_counts.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_list.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks() - self.free_blocks()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Allocate `n` fresh blocks (each with refcount 1).
+    pub fn allocate(&mut self, n: usize) -> Result<Vec<BlockId>, KvError> {
+        if self.free_list.len() < n {
+            return Err(KvError::OutOfBlocks { requested: n, free: self.free_list.len() });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.free_list.pop().expect("checked above");
+            debug_assert_eq!(self.ref_counts[b as usize], 0);
+            self.ref_counts[b as usize] = 1;
+            out.push(b);
+        }
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(out)
+    }
+
+    /// Allocate enough fresh blocks for `tokens` tokens.
+    pub fn allocate_for_tokens(&mut self, tokens: usize) -> Result<Vec<BlockId>, KvError> {
+        self.allocate(self.blocks_for(tokens))
+    }
+
+    /// Add a reference to an allocated block (prefix sharing).
+    pub fn retain(&mut self, b: BlockId) -> Result<(), KvError> {
+        let rc = self
+            .ref_counts
+            .get_mut(b as usize)
+            .ok_or(KvError::BadBlock(b))?;
+        if *rc == 0 {
+            return Err(KvError::NotAllocated(b));
+        }
+        *rc += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; frees the block when the last reference drops.
+    pub fn release(&mut self, b: BlockId) -> Result<(), KvError> {
+        let rc = self
+            .ref_counts
+            .get_mut(b as usize)
+            .ok_or(KvError::BadBlock(b))?;
+        if *rc == 0 {
+            return Err(KvError::NotAllocated(b));
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free_list.push(b);
+        }
+        Ok(())
+    }
+
+    /// Current reference count (0 = free).
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.ref_counts.get(b as usize).copied().unwrap_or(0)
+    }
+
+    /// Invariant check used by tests and debug assertions: every block is
+    /// either on the free list with rc 0 or off it with rc > 0, exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut on_free = vec![false; self.num_blocks()];
+        for &b in &self.free_list {
+            if b as usize >= self.num_blocks() {
+                return Err(format!("free list has bad block {b}"));
+            }
+            if on_free[b as usize] {
+                return Err(format!("block {b} on free list twice"));
+            }
+            on_free[b as usize] = true;
+        }
+        for (i, &rc) in self.ref_counts.iter().enumerate() {
+            match (rc, on_free[i]) {
+                (0, false) => return Err(format!("block {i} leaked (rc=0, not free)")),
+                (r, true) if r > 0 => return Err(format!("block {i} free with rc={r}")),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut a = BlockAllocator::new(8, 16);
+        let bs = a.allocate(3).unwrap();
+        assert_eq!(a.used_blocks(), 3);
+        for &b in &bs {
+            a.release(b).unwrap();
+        }
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_blocks_reported() {
+        let mut a = BlockAllocator::new(4, 16);
+        a.allocate(4).unwrap();
+        let err = a.allocate(1).unwrap_err();
+        assert_eq!(err, KvError::OutOfBlocks { requested: 1, free: 0 });
+    }
+
+    #[test]
+    fn refcounting_delays_free() {
+        let mut a = BlockAllocator::new(4, 16);
+        let b = a.allocate(1).unwrap()[0];
+        a.retain(b).unwrap();
+        a.release(b).unwrap();
+        assert_eq!(a.ref_count(b), 1);
+        assert_eq!(a.free_blocks(), 3);
+        a.release(b).unwrap();
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.free_blocks(), 4);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut a = BlockAllocator::new(4, 16);
+        let b = a.allocate(1).unwrap()[0];
+        a.release(b).unwrap();
+        assert_eq!(a.release(b), Err(KvError::NotAllocated(b)));
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = BlockAllocator::new(4, 16);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn peak_used_tracks_high_water() {
+        let mut a = BlockAllocator::new(8, 16);
+        let bs = a.allocate(5).unwrap();
+        for &b in &bs {
+            a.release(b).unwrap();
+        }
+        a.allocate(2).unwrap();
+        assert_eq!(a.peak_used(), 5);
+    }
+}

@@ -1,0 +1,272 @@
+//! Radix-tree prefix cache (SGLang RadixAttention-style).
+//!
+//! Agent sessions share long system prompts (tool specs, schemas). The
+//! prefix cache indexes cached KV blocks by their *token content* at block
+//! granularity: a lookup walks the tree block-by-block and returns the
+//! longest cached prefix, leasing (ref-counting) each matched block to the
+//! caller so concurrent eviction cannot free it mid-use.
+//!
+//! Classification depends on this module: a request whose prompt fully hits
+//! the cache except for a short suffix is a **resume prefill**; a miss (or
+//! near-miss) is a **cold prefill** (§III-A Request Manager).
+
+use super::allocator::{BlockAllocator, BlockId};
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Child per full-block token chunk.
+    children: HashMap<Vec<u32>, Box<Node>>,
+    /// Physical block backing this node's chunk (root has none).
+    block: Option<BlockId>,
+    /// LRU stamp (monotone counter at last touch).
+    last_used: u64,
+}
+
+impl Node {
+    fn count_blocks(&self) -> usize {
+        self.block.is_some() as usize
+            + self.children.values().map(|c| c.count_blocks()).sum::<usize>()
+    }
+}
+
+/// Token-content → KV-block prefix index.
+#[derive(Debug)]
+pub struct RadixPrefixCache {
+    root: Node,
+    tick: u64,
+    /// Cumulative hit/miss token counters (reported by `make figures`).
+    pub hit_tokens: u64,
+    pub miss_tokens: u64,
+}
+
+impl Default for RadixPrefixCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixPrefixCache {
+    pub fn new() -> Self {
+        Self { root: Node::default(), tick: 0, hit_tokens: 0, miss_tokens: 0 }
+    }
+
+    /// Number of blocks currently pinned by the cache.
+    pub fn cached_blocks(&self) -> usize {
+        self.root.count_blocks()
+    }
+
+    /// Longest-prefix lookup.
+    ///
+    /// Returns `(matched_tokens, leased_blocks)`. Each returned block has
+    /// been `retain`ed on behalf of the caller; the caller must `release`
+    /// them when the session ends. Matching is at block granularity — a
+    /// partial final block never matches (its KV would be incomplete).
+    pub fn lookup(&mut self, tokens: &[u32], alloc: &mut BlockAllocator) -> (usize, Vec<BlockId>) {
+        self.tick += 1;
+        let bs = alloc.block_size();
+        let mut node: &mut Node = &mut self.root;
+        let mut blocks = Vec::new();
+        let mut matched = 0usize;
+        for chunk in tokens.chunks_exact(bs) {
+            match node.children.get_mut(chunk) {
+                Some(child) => {
+                    child.last_used = self.tick;
+                    let b = child.block.expect("non-root node has a block");
+                    alloc.retain(b).expect("cached block must be live");
+                    blocks.push(b);
+                    matched += bs;
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        self.hit_tokens += matched as u64;
+        self.miss_tokens += (tokens.len() - matched) as u64;
+        (matched, blocks)
+    }
+
+    /// Insert a prefilled sequence: `blocks[i]` backs tokens
+    /// `[i*bs, (i+1)*bs)`. Only fully-filled blocks are indexed. Blocks
+    /// newly referenced by the tree are `retain`ed (the tree holds its own
+    /// reference); blocks already present are left untouched.
+    pub fn insert(&mut self, tokens: &[u32], blocks: &[BlockId], alloc: &mut BlockAllocator) {
+        self.tick += 1;
+        let bs = alloc.block_size();
+        let full_blocks = tokens.len() / bs;
+        let mut node: &mut Node = &mut self.root;
+        for i in 0..full_blocks.min(blocks.len()) {
+            let chunk = tokens[i * bs..(i + 1) * bs].to_vec();
+            let tick = self.tick;
+            let entry = node.children.entry(chunk).or_insert_with(|| {
+                Box::new(Node { children: HashMap::new(), block: None, last_used: tick })
+            });
+            entry.last_used = self.tick;
+            if entry.block.is_none() {
+                entry.block = Some(blocks[i]);
+                alloc.retain(blocks[i]).expect("inserting a live block");
+            }
+            node = entry;
+        }
+    }
+
+    /// Evict up to `target` least-recently-used *leaf* blocks, releasing the
+    /// tree's references. Returns the number of blocks evicted. Interior
+    /// nodes are never evicted before their children (their KV is a prefix
+    /// of the children's).
+    pub fn evict_lru(&mut self, target: usize, alloc: &mut BlockAllocator) -> usize {
+        let mut evicted = 0;
+        while evicted < target {
+            let Some(path) = Self::oldest_leaf_path(&self.root) else { break };
+            // Walk to the parent of the leaf and remove it.
+            let mut node: &mut Node = &mut self.root;
+            for key in &path[..path.len() - 1] {
+                node = node.children.get_mut(key).expect("path valid");
+            }
+            let leaf = node.children.remove(&path[path.len() - 1]).expect("leaf exists");
+            if let Some(b) = leaf.block {
+                alloc.release(b).expect("tree held a reference");
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Path (chunk keys) to the least-recently-used leaf, if any.
+    fn oldest_leaf_path(root: &Node) -> Option<Vec<Vec<u32>>> {
+        fn walk(node: &Node, path: &mut Vec<Vec<u32>>, best: &mut Option<(u64, Vec<Vec<u32>>)>) {
+            if node.children.is_empty() {
+                if !path.is_empty() {
+                    let stamp = node.last_used;
+                    if best.as_ref().map_or(true, |(b, _)| stamp < *b) {
+                        *best = Some((stamp, path.clone()));
+                    }
+                }
+                return;
+            }
+            for (key, child) in &node.children {
+                path.push(key.clone());
+                walk(child, path, best);
+                path.pop();
+            }
+        }
+        let mut best = None;
+        walk(root, &mut Vec::new(), &mut best);
+        best.map(|(_, p)| p)
+    }
+
+    /// Hit rate over all lookups so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hit_tokens + self.miss_tokens;
+        if total == 0 { 0.0 } else { self.hit_tokens as f64 / total as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (BlockAllocator, RadixPrefixCache) {
+        (BlockAllocator::new(64, 4), RadixPrefixCache::new())
+    }
+
+    #[test]
+    fn empty_cache_misses() {
+        let (mut a, mut r) = setup();
+        let (m, bs) = r.lookup(&[1, 2, 3, 4], &mut a);
+        assert_eq!(m, 0);
+        assert!(bs.is_empty());
+        assert_eq!(r.miss_tokens, 4);
+    }
+
+    #[test]
+    fn exact_hit_returns_all_blocks() {
+        let (mut a, mut r) = setup();
+        let toks: Vec<u32> = (0..12).collect();
+        let blocks = a.allocate_for_tokens(12).unwrap();
+        r.insert(&toks, &blocks, &mut a);
+        let (m, hit) = r.lookup(&toks, &mut a);
+        assert_eq!(m, 12);
+        assert_eq!(hit, blocks);
+    }
+
+    #[test]
+    fn partial_block_never_matches() {
+        let (mut a, mut r) = setup();
+        let toks: Vec<u32> = (0..10).collect(); // 2 full blocks + 2 tokens
+        let blocks = a.allocate_for_tokens(10).unwrap();
+        r.insert(&toks, &blocks, &mut a);
+        // Tree indexed only the 2 full blocks.
+        assert_eq!(r.cached_blocks(), 2);
+        let (m, _) = r.lookup(&toks, &mut a);
+        assert_eq!(m, 8);
+    }
+
+    #[test]
+    fn divergent_suffix_matches_common_prefix() {
+        let (mut a, mut r) = setup();
+        let t1: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let blocks = a.allocate_for_tokens(8).unwrap();
+        r.insert(&t1, &blocks, &mut a);
+        let t2: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let (m, hit) = r.lookup(&t2, &mut a);
+        assert_eq!(m, 4);
+        assert_eq!(hit, vec![blocks[0]]);
+    }
+
+    #[test]
+    fn lookup_leases_blocks() {
+        let (mut a, mut r) = setup();
+        let toks: Vec<u32> = (0..4).collect();
+        let blocks = a.allocate_for_tokens(4).unwrap();
+        r.insert(&toks, &blocks, &mut a);
+        let rc_before = a.ref_count(blocks[0]);
+        let (_, hit) = r.lookup(&toks, &mut a);
+        assert_eq!(a.ref_count(blocks[0]), rc_before + 1);
+        a.release(hit[0]).unwrap();
+        assert_eq!(a.ref_count(blocks[0]), rc_before);
+    }
+
+    #[test]
+    fn eviction_frees_lru_leaves_first() {
+        let (mut a, mut r) = setup();
+        let t1: Vec<u32> = vec![1, 1, 1, 1, 2, 2, 2, 2];
+        let b1 = a.allocate_for_tokens(8).unwrap();
+        r.insert(&t1, &b1, &mut a);
+        let t2: Vec<u32> = vec![1, 1, 1, 1, 3, 3, 3, 3];
+        let b2_tail = a.allocate_for_tokens(4).unwrap();
+        // Reuse shared first block; insert only needs the tail to be new.
+        let all_b2 = vec![b1[0], b2_tail[0]];
+        r.insert(&t2, &all_b2, &mut a);
+        // Touch t2 so t1's leaf is the LRU.
+        let (_, lease) = r.lookup(&t2, &mut a);
+        for b in lease {
+            a.release(b).unwrap();
+        }
+        // Owners drop their original allocation refs; tree refs remain.
+        for &b in &b1 {
+            a.release(b).unwrap();
+        }
+        a.release(b2_tail[0]).unwrap();
+
+        assert_eq!(r.cached_blocks(), 3);
+        let evicted = r.evict_lru(1, &mut a);
+        assert_eq!(evicted, 1);
+        // t1's tail block (b1[1]) was the LRU leaf and is now free.
+        assert_eq!(a.ref_count(b1[1]), 0);
+        // Shared head block survives (still an interior node).
+        assert!(a.ref_count(b1[0]) > 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hit_rate_accumulates() {
+        let (mut a, mut r) = setup();
+        let toks: Vec<u32> = (0..8).collect();
+        let blocks = a.allocate_for_tokens(8).unwrap();
+        r.insert(&toks, &blocks, &mut a);
+        r.lookup(&toks, &mut a); // 8 hit
+        r.lookup(&[99, 98, 97, 96], &mut a); // 4 miss
+        assert!((r.hit_rate() - 8.0 / 12.0).abs() < 1e-12);
+    }
+}

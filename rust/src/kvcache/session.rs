@@ -1,0 +1,212 @@
+//! Per-session KV cache state and the write-fence protocol.
+//!
+//! The paper's Memory Manager marks a prefill's KV region **read-only on
+//! completion** and orders prefill-writes before decode-reads with
+//! CPU mutexes + GPU `cudaEvent`s, so "decoding never consumes partially
+//! written KV states" (§III-C). [`WriteFence`] is the event analogue: a
+//! prefill opens a fence over the region it extends and decode admission
+//! checks the fence before scheduling the stream.
+
+use super::allocator::{BlockAllocator, BlockId, KvError};
+
+/// State of an in-flight KV write region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteFence {
+    /// No write in flight; all cached tokens are read-only and decodable.
+    Clear,
+    /// A prefill is writing tokens `[from, to)`; decode must not start.
+    Pending { from: usize, to: usize },
+}
+
+/// One session's cache view.
+#[derive(Debug, Clone)]
+pub struct SessionCache {
+    /// Blocks backing the cached context, in order. Mixed ownership:
+    /// leased prefix blocks (from the radix cache) + privately allocated.
+    blocks: Vec<BlockId>,
+    /// Tokens whose KV is complete and read-only.
+    committed_tokens: usize,
+    /// Write fence for the in-flight prefill (if any).
+    fence: WriteFence,
+    /// Token ids of the committed context (kept for radix re-insertion).
+    tokens: Vec<u32>,
+}
+
+impl SessionCache {
+    pub fn new() -> Self {
+        Self {
+            blocks: Vec::new(),
+            committed_tokens: 0,
+            fence: WriteFence::Clear,
+            tokens: Vec::new(),
+        }
+    }
+
+    /// Adopt leased prefix blocks covering `tokens[..covered]`.
+    pub fn adopt_prefix(&mut self, leased: Vec<BlockId>, tokens: &[u32], covered: usize) {
+        debug_assert!(self.blocks.is_empty(), "adopt_prefix on fresh session only");
+        self.blocks = leased;
+        self.tokens = tokens[..covered].to_vec();
+        self.committed_tokens = covered;
+    }
+
+    pub fn committed_tokens(&self) -> usize {
+        self.committed_tokens
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn fence(&self) -> WriteFence {
+        self.fence
+    }
+
+    /// True when a decode over this session's context may launch.
+    pub fn decode_ready(&self) -> bool {
+        self.fence == WriteFence::Clear && self.committed_tokens > 0
+    }
+
+    /// Begin a prefill extending the context by `new_tokens`, allocating
+    /// private blocks as needed. Returns the fence region.
+    pub fn begin_prefill(
+        &mut self,
+        new_tokens: &[u32],
+        alloc: &mut BlockAllocator,
+    ) -> Result<WriteFence, KvError> {
+        assert_eq!(self.fence, WriteFence::Clear, "one in-flight prefill per session");
+        let from = self.committed_tokens;
+        let to = from + new_tokens.len();
+        let have = self.blocks.len() * alloc.block_size();
+        if to > have {
+            let need = alloc.blocks_for(to - have);
+            let fresh = alloc.allocate(need)?;
+            self.blocks.extend(fresh);
+        }
+        self.tokens.extend_from_slice(new_tokens);
+        self.fence = WriteFence::Pending { from, to };
+        Ok(self.fence)
+    }
+
+    /// Complete the in-flight prefill: the region becomes read-only and
+    /// decodable (the cudaEvent has fired).
+    pub fn complete_prefill(&mut self) {
+        if let WriteFence::Pending { to, .. } = self.fence {
+            self.committed_tokens = to;
+            self.fence = WriteFence::Clear;
+        }
+    }
+
+    /// Append one decoded token (decode writes one KV entry per step).
+    pub fn append_decoded(&mut self, token: u32, alloc: &mut BlockAllocator) -> Result<(), KvError> {
+        assert!(self.decode_ready(), "decode on fenced or empty cache");
+        let to = self.committed_tokens + 1;
+        if to > self.blocks.len() * alloc.block_size() {
+            let fresh = alloc.allocate(1)?;
+            self.blocks.extend(fresh);
+        }
+        self.tokens.push(token);
+        self.committed_tokens = to;
+        Ok(())
+    }
+
+    /// Release all block references (session teardown). The caller decides
+    /// whether the prefix lives on in the radix cache.
+    pub fn release_all(&mut self, alloc: &mut BlockAllocator) -> Result<(), KvError> {
+        for &b in &self.blocks {
+            alloc.release(b)?;
+        }
+        self.blocks.clear();
+        self.tokens.clear();
+        self.committed_tokens = 0;
+        self.fence = WriteFence::Clear;
+        Ok(())
+    }
+}
+
+impl Default for SessionCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_fence_blocks_decode_until_complete() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut s = SessionCache::new();
+        let toks: Vec<u32> = (0..6).collect();
+        let fence = s.begin_prefill(&toks, &mut alloc).unwrap();
+        assert_eq!(fence, WriteFence::Pending { from: 0, to: 6 });
+        assert!(!s.decode_ready());
+        s.complete_prefill();
+        assert!(s.decode_ready());
+        assert_eq!(s.committed_tokens(), 6);
+        assert_eq!(s.blocks().len(), 2);
+    }
+
+    #[test]
+    fn decode_appends_and_grows_blocks() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut s = SessionCache::new();
+        s.begin_prefill(&[1, 2, 3, 4], &mut alloc).unwrap();
+        s.complete_prefill();
+        assert_eq!(s.blocks().len(), 1);
+        s.append_decoded(5, &mut alloc).unwrap();
+        assert_eq!(s.blocks().len(), 2); // crossed block boundary
+        assert_eq!(s.committed_tokens(), 5);
+        assert_eq!(s.tokens(), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn resume_prefill_extends_committed_context() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut s = SessionCache::new();
+        s.begin_prefill(&[1, 2, 3, 4, 5], &mut alloc).unwrap();
+        s.complete_prefill();
+        let fence = s.begin_prefill(&[6, 7, 8], &mut alloc).unwrap();
+        assert_eq!(fence, WriteFence::Pending { from: 5, to: 8 });
+        s.complete_prefill();
+        assert_eq!(s.committed_tokens(), 8);
+        assert_eq!(s.blocks().len(), 2);
+    }
+
+    #[test]
+    fn adopt_prefix_skips_prefill_work() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let leased = alloc.allocate(2).unwrap();
+        let toks: Vec<u32> = (0..8).collect();
+        let mut s = SessionCache::new();
+        s.adopt_prefix(leased, &toks, 8);
+        assert!(s.decode_ready());
+        assert_eq!(s.committed_tokens(), 8);
+    }
+
+    #[test]
+    fn release_all_returns_blocks() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut s = SessionCache::new();
+        s.begin_prefill(&(0..12).collect::<Vec<_>>(), &mut alloc).unwrap();
+        s.complete_prefill();
+        assert_eq!(alloc.used_blocks(), 3);
+        s.release_all(&mut alloc).unwrap();
+        assert_eq!(alloc.used_blocks(), 0);
+        alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "one in-flight prefill")]
+    fn double_prefill_panics() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut s = SessionCache::new();
+        s.begin_prefill(&[1], &mut alloc).unwrap();
+        let _ = s.begin_prefill(&[2], &mut alloc);
+    }
+}

@@ -1,0 +1,38 @@
+//! # AgentServe
+//!
+//! Reproduction of *AgentServe: Algorithm-System Co-Design for Efficient
+//! Agentic AI Serving on a Consumer-Grade GPU* (CS.DC 2026).
+//!
+//! AgentServe serves multiple tool-augmented SLM agents on a single GPU by
+//! classifying requests into **cold prefills**, **resume prefills**, and
+//! **short decodes**, isolating cold prefills, admitting resume prefills
+//! under a dynamic token budget, and protecting decodes with SM reservations
+//! realised through pre-established Green Context slots.
+//!
+//! The crate is organised as a three-layer stack:
+//! - L3 (this crate): coordinator, scheduler, KV cache, execution engine.
+//! - L2 (`python/compile/model.py`): JAX transformer, AOT-lowered to HLO
+//!   text loaded by [`runtime`].
+//! - L1 (`python/compile/kernels/`): Pallas attention kernels.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping modules to paper figures.
+
+pub mod agents;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gpusim;
+pub mod greenctx;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (anyhow — the only general-purpose dependency
+/// available in the offline build image; see `rust/src/util` for the
+/// in-tree JSON/RNG/CLI/bench substrates).
+pub type Result<T> = anyhow::Result<T>;

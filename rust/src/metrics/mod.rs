@@ -1,0 +1,32 @@
+//! Serving metrics (§IV-A Metrics): TTFT, TPOT, throughput, and
+//! session-level joint SLO attainment, plus per-token timelines (Fig. 2).
+
+mod percentile;
+mod recorder;
+mod slo;
+
+pub use percentile::{percentile, Summary};
+pub use recorder::{MetricsRecorder, RunReport, SessionMetrics, TpotSample};
+pub use slo::{SloJudge, SloReport};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_report() {
+        let mut m = MetricsRecorder::new();
+        // Session 0: request at t=0, first token at 100ms, tokens every 20ms.
+        m.request_arrival(0, 0);
+        m.first_token(0, 100_000);
+        for i in 1..10u64 {
+            m.token_emitted(0, 100_000 + i * 20_000);
+        }
+        m.session_complete(0, 300_000);
+        let report = m.report(300_000);
+        assert_eq!(report.sessions, 1);
+        assert!((report.ttft.p50 - 100.0).abs() < 1e-9);
+        assert!((report.tpot.p50 - 20.0).abs() < 1e-9);
+        assert!(report.throughput_tok_s > 0.0);
+    }
+}

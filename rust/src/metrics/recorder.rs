@@ -1,0 +1,290 @@
+//! Per-session metric recording and run-level aggregation.
+//!
+//! TTFT is measured per *request* (cold prefill or resume prefill → first
+//! token of the following decode). TPOT follows standard serving-benchmark
+//! methodology (vLLM/DistServe): per request,
+//! `TPOT = (last_token_time - first_token_time) / (tokens - 1)`, with
+//! percentiles computed across requests — a stall inside a burst amortizes
+//! into that request's TPOT instead of being one outlier gap sample. Raw
+//! inter-token gaps are still kept as the Fig.-2 timeline.
+
+use super::percentile::Summary;
+use std::collections::HashMap;
+
+/// One emitted-token latency sample (for timelines).
+#[derive(Debug, Clone, Copy)]
+pub struct TpotSample {
+    /// Emission timestamp (virtual us).
+    pub t_us: u64,
+    /// Gap since previous token of this stream (ms).
+    pub gap_ms: f64,
+    /// Session the token belongs to.
+    pub session: u64,
+}
+
+/// Accumulated per-session state.
+#[derive(Debug, Clone, Default)]
+pub struct SessionMetrics {
+    /// TTFTs of every request in the session (ms). The first entry is the
+    /// cold-prefill TTFT; later entries are resume-prefill TTFTs.
+    pub ttfts_ms: Vec<f64>,
+    /// Per-request TPOTs (ms): burst duration / (burst tokens - 1).
+    pub tpots_ms: Vec<f64>,
+    /// Tokens emitted.
+    pub tokens: u64,
+    /// Completion timestamp, if finished (us).
+    pub completed_us: Option<u64>,
+    /// Arrival of the oldest unanswered request (us), if any.
+    pending_since_us: Option<u64>,
+    /// Timestamp of the last emitted token (us).
+    last_token_us: Option<u64>,
+    /// Current burst: first-token timestamp and tokens so far.
+    burst_first_us: Option<u64>,
+    burst_tokens: u64,
+}
+
+impl SessionMetrics {
+    /// Close the in-flight decode burst into a request-level TPOT sample.
+    fn close_burst(&mut self) {
+        if let (Some(first), Some(last)) = (self.burst_first_us, self.last_token_us) {
+            if self.burst_tokens >= 2 {
+                let tpot =
+                    (last.saturating_sub(first)) as f64 / (self.burst_tokens - 1) as f64 / 1000.0;
+                self.tpots_ms.push(tpot);
+            }
+        }
+        self.burst_first_us = None;
+        self.burst_tokens = 0;
+    }
+}
+
+/// Run-wide metrics recorder.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRecorder {
+    sessions: HashMap<u64, SessionMetrics>,
+    timeline: Vec<TpotSample>,
+    total_tokens: u64,
+    /// Prefill tokens processed (for prefill-throughput reporting).
+    prefill_tokens: u64,
+}
+
+/// Aggregated results of one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub sessions: usize,
+    pub completed_sessions: usize,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    /// Output tokens per second across all streams.
+    pub throughput_tok_s: f64,
+    /// Prefill tokens per second.
+    pub prefill_tok_s: f64,
+    pub total_tokens: u64,
+    pub wall_ms: f64,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn session(&mut self, id: u64) -> &mut SessionMetrics {
+        self.sessions.entry(id).or_default()
+    }
+
+    /// A request (cold or resume) arrived for `session` at `t_us`.
+    /// The previous decode burst (if any) closes into a TPOT sample; the
+    /// tool-call gap is never an inter-token gap.
+    pub fn request_arrival(&mut self, session: u64, t_us: u64) {
+        let s = self.session(session);
+        s.close_burst();
+        s.pending_since_us = Some(t_us);
+        s.last_token_us = None;
+    }
+
+    /// First token after the pending request (closes a TTFT, opens a burst).
+    pub fn first_token(&mut self, session: u64, t_us: u64) {
+        let s = self.session(session);
+        if let Some(since) = s.pending_since_us.take() {
+            s.ttfts_ms.push((t_us.saturating_sub(since)) as f64 / 1000.0);
+        }
+        s.tokens += 1;
+        s.last_token_us = Some(t_us);
+        s.burst_first_us = Some(t_us);
+        s.burst_tokens = 1;
+        self.total_tokens += 1;
+    }
+
+    /// Subsequent token emission (extends the burst; logs the raw gap).
+    pub fn token_emitted(&mut self, session: u64, t_us: u64) {
+        let s = self.session(session);
+        if s.pending_since_us.is_some() {
+            // A request was pending: this token is its first token.
+            self.first_token(session, t_us);
+            return;
+        }
+        let gap_ms = match s.last_token_us {
+            Some(prev) => (t_us.saturating_sub(prev)) as f64 / 1000.0,
+            None => {
+                // Stream restart without a recorded request: treat as first.
+                s.tokens += 1;
+                s.last_token_us = Some(t_us);
+                s.burst_first_us = Some(t_us);
+                s.burst_tokens = 1;
+                self.total_tokens += 1;
+                return;
+            }
+        };
+        s.tokens += 1;
+        s.burst_tokens += 1;
+        s.last_token_us = Some(t_us);
+        self.total_tokens += 1;
+        self.timeline.push(TpotSample { t_us, gap_ms, session });
+    }
+
+    /// Count prefill work for prefill-throughput reporting.
+    pub fn prefill_tokens(&mut self, n: u64) {
+        self.prefill_tokens += n;
+    }
+
+    pub fn session_complete(&mut self, session: u64, t_us: u64) {
+        let s = self.session(session);
+        s.close_burst();
+        s.completed_us = Some(t_us);
+    }
+
+    /// Full per-token timeline (Fig. 2).
+    pub fn timeline(&self) -> &[TpotSample] {
+        &self.timeline
+    }
+
+    pub fn sessions_map(&self) -> &HashMap<u64, SessionMetrics> {
+        &self.sessions
+    }
+
+    /// Aggregate into a run report; `end_us` is the run's end timestamp.
+    pub fn report(&self, end_us: u64) -> RunReport {
+        let ttfts: Vec<f64> = self
+            .sessions
+            .values()
+            .flat_map(|s| s.ttfts_ms.iter().copied())
+            .collect();
+        let tpots: Vec<f64> = self
+            .sessions
+            .values()
+            .flat_map(|s| s.tpots_ms.iter().copied())
+            .collect();
+        let wall_ms = end_us as f64 / 1000.0;
+        let wall_s = (wall_ms / 1000.0).max(1e-9);
+        RunReport {
+            sessions: self.sessions.len(),
+            completed_sessions: self
+                .sessions
+                .values()
+                .filter(|s| s.completed_us.is_some())
+                .count(),
+            ttft: Summary::from_samples(&ttfts),
+            tpot: Summary::from_samples(&tpots),
+            throughput_tok_s: self.total_tokens as f64 / wall_s,
+            prefill_tok_s: self.prefill_tokens as f64 / wall_s,
+            total_tokens: self.total_tokens,
+            wall_ms,
+        }
+    }
+}
+
+impl std::fmt::Display for RunReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "sessions={}/{} tokens={} wall={:.0}ms",
+            self.completed_sessions, self.sessions, self.total_tokens, self.wall_ms
+        )?;
+        writeln!(f, "  TTFT  {}", self.ttft)?;
+        writeln!(f, "  TPOT  {}", self.tpot)?;
+        write!(
+            f,
+            "  thpt  {:.1} tok/s out, {:.1} tok/s prefill",
+            self.throughput_tok_s, self.prefill_tok_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_measured_per_request() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(1, 1000);
+        m.first_token(1, 51_000); // 50ms TTFT
+        m.token_emitted(1, 71_000); // 20ms gap
+        // Tool call; resume request (closes the 2-token burst: TPOT 20ms).
+        m.request_arrival(1, 500_000);
+        m.token_emitted(1, 580_000); // becomes first token: 80ms TTFT
+        let r = m.report(1_000_000);
+        assert_eq!(r.ttft.n, 2);
+        assert!((r.ttft.min - 50.0).abs() < 1e-9);
+        assert!((r.ttft.max - 80.0).abs() < 1e-9);
+        assert_eq!(r.tpot.n, 1);
+        assert!((r.tpot.p50 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tool_gap_not_counted_as_tpot() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 10_000);
+        m.token_emitted(0, 20_000);
+        m.request_arrival(0, 900_000); // long tool call
+        m.token_emitted(0, 950_000);
+        m.token_emitted(0, 960_000);
+        m.session_complete(0, 960_000);
+        let r = m.report(1_000_000);
+        // Two bursts of 2 tokens, each with a 10ms mean gap; the 880ms tool
+        // gap never enters a burst.
+        assert_eq!(r.tpot.n, 2);
+        assert!(r.tpot.max < 11.0);
+    }
+
+    #[test]
+    fn stall_amortizes_into_request_tpot() {
+        // A 600ms stall inside a 4-token burst -> TPOT (600+10+10)/3 ~ 207ms.
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 10_000);
+        m.token_emitted(0, 20_000);
+        m.token_emitted(0, 620_000); // stall
+        m.token_emitted(0, 630_000);
+        m.session_complete(0, 630_000);
+        let r = m.report(700_000);
+        assert_eq!(r.tpot.n, 1);
+        assert!((r.tpot.p50 - 620.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throughput_counts_all_tokens() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 1000);
+        for i in 0..9u64 {
+            m.token_emitted(0, 2000 + i * 1000);
+        }
+        let r = m.report(1_000_000); // 1 second
+        assert_eq!(r.total_tokens, 10);
+        assert!((r.throughput_tok_s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_records_gaps() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(3, 0);
+        m.first_token(3, 5_000);
+        m.token_emitted(3, 30_000);
+        let tl = m.timeline();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].session, 3);
+        assert!((tl[0].gap_ms - 25.0).abs() < 1e-9);
+    }
+}

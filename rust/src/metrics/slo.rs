@@ -1,0 +1,127 @@
+//! Session-level joint SLO attainment (§IV-C).
+//!
+//! "A session is deemed successful if the TTFT is within its threshold and
+//! the TPOT is also within its threshold" — a *joint* criterion over the
+//! whole session: any violation of either bound anywhere in the session is
+//! a service-level failure.
+
+use super::recorder::MetricsRecorder;
+use crate::config::SloConfig;
+
+/// Judge applying the per-(model, device) calibrated thresholds.
+#[derive(Debug, Clone)]
+pub struct SloJudge {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+/// Attainment results for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct SloReport {
+    pub sessions: usize,
+    pub attained: usize,
+    pub ttft_violations: usize,
+    pub tpot_violations: usize,
+}
+
+impl SloReport {
+    pub fn rate(&self) -> f64 {
+        if self.sessions == 0 {
+            0.0
+        } else {
+            self.attained as f64 / self.sessions as f64
+        }
+    }
+}
+
+impl SloJudge {
+    pub fn new(slo: &SloConfig) -> Self {
+        Self { ttft_ms: slo.ttft_ms, tpot_ms: slo.tpot_ms }
+    }
+
+    /// Judge every session in the recorder. A session attains the SLO iff
+    /// **all** its request TTFTs are ≤ τ_TTFT and **all** its per-request
+    /// TPOTs are ≤ τ_TPOT. Sessions that never completed are failures.
+    pub fn judge(&self, m: &MetricsRecorder) -> SloReport {
+        let mut report = SloReport {
+            sessions: 0,
+            attained: 0,
+            ttft_violations: 0,
+            tpot_violations: 0,
+        };
+        for s in m.sessions_map().values() {
+            report.sessions += 1;
+            let ttft_ok = s.ttfts_ms.iter().all(|&t| t <= self.ttft_ms);
+            let tpot_ok = s.tpots_ms.iter().all(|&t| t <= self.tpot_ms);
+            if !ttft_ok {
+                report.ttft_violations += 1;
+            }
+            if !tpot_ok {
+                report.tpot_violations += 1;
+            }
+            if ttft_ok && tpot_ok && s.completed_us.is_some() {
+                report.attained += 1;
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn judge() -> SloJudge {
+        SloJudge { ttft_ms: 100.0, tpot_ms: 30.0 }
+    }
+
+    #[test]
+    fn clean_session_attains() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 50_000); // 50ms <= 100
+        m.token_emitted(0, 70_000); // 20ms <= 30
+        m.session_complete(0, 70_000);
+        let r = judge().judge(&m);
+        assert_eq!(r.attained, 1);
+        assert_eq!(r.rate(), 1.0);
+    }
+
+    #[test]
+    fn slow_burst_fails_session() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 50_000);
+        m.token_emitted(0, 70_000); // fine
+        m.token_emitted(0, 170_000); // burst TPOT (20+100)/2 = 60 > 30
+        m.session_complete(0, 170_000);
+        let r = judge().judge(&m);
+        assert_eq!(r.attained, 0);
+        assert_eq!(r.tpot_violations, 1);
+        assert_eq!(r.ttft_violations, 0);
+    }
+
+    #[test]
+    fn late_resume_ttft_fails_session() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 50_000);
+        m.request_arrival(0, 500_000);
+        m.token_emitted(0, 700_000); // 200ms resume TTFT > 100
+        m.session_complete(0, 700_000);
+        let r = judge().judge(&m);
+        assert_eq!(r.attained, 0);
+        assert_eq!(r.ttft_violations, 1);
+    }
+
+    #[test]
+    fn incomplete_session_fails() {
+        let mut m = MetricsRecorder::new();
+        m.request_arrival(0, 0);
+        m.first_token(0, 10_000);
+        // never completed
+        let r = judge().judge(&m);
+        assert_eq!(r.sessions, 1);
+        assert_eq!(r.attained, 0);
+    }
+}

@@ -1,0 +1,404 @@
+//! PJRT execution engine: compiled artifacts + device-resident state.
+//!
+//! Loads every HLO artifact once at startup (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile`), uploads the weights once,
+//! and then serves `prefill`/`decode_step` calls from the Rust request path
+//! with no Python anywhere.
+//!
+//! The xla crate returns multi-output results as a single tuple buffer, so
+//! each call round-trips the KV cache through a host literal (measured in
+//! [`EngineStats`]; see EXPERIMENTS.md §Perf for the cost and the mitigation
+//! analysis).
+
+use super::manifest::{Manifest, ModelGeometry};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Cumulative execution statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    /// Host<->device cache traffic (bytes) paid to the tuple-output ABI.
+    pub cache_roundtrip_bytes: u64,
+}
+
+/// Result of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// Next token per cache slot (rows the caller didn't activate are junk).
+    pub next_tokens: Vec<i32>,
+    /// Wall time of the XLA execution (us).
+    pub exec_us: u64,
+}
+
+/// The loaded engine.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// chunk size -> compiled prefill step.
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// compiled decode step (full-batch artifact).
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// fused multi-step decode (perf: amortizes the KV round-trip).
+    decode_multi_exe: Option<(usize, xla::PjRtLoadedExecutable)>,
+    /// Weights, uploaded once.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Device-resident KV cache (ping-ponged through each call).
+    k_cache: xla::PjRtBuffer,
+    v_cache: xla::PjRtBuffer,
+    pub stats: EngineStats,
+}
+
+impl PjrtEngine {
+    /// Load artifacts from `dir` (built by `make artifacts`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+
+        let mut prefill_exes = BTreeMap::new();
+        let mut decode_candidates = BTreeMap::new();
+        let mut decode_multi_exe = None;
+        for a in &manifest.artifacts {
+            let path = manifest.artifact_path(a);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            match (a.kind.as_str(), a.chunk, a.batch, a.steps) {
+                ("prefill", Some(c), _, _) => {
+                    prefill_exes.insert(c, exe);
+                }
+                ("decode", _, Some(b), _) => {
+                    decode_candidates.insert(b, exe);
+                }
+                ("decode_multi", _, _, Some(s)) => {
+                    decode_multi_exe = Some((s, exe));
+                }
+                _ => anyhow::bail!("malformed artifact spec {a:?}"),
+            }
+        }
+        let decode_exe = decode_candidates
+            .into_iter()
+            .next_back()
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow::anyhow!("no decode artifact"))?;
+
+        // Upload weights once.
+        let params = manifest.load_params()?;
+        let mut param_bufs = Vec::with_capacity(params.len());
+        for (vals, spec) in params.iter().zip(&manifest.params) {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(vals, &spec.shape, None)
+                .map_err(wrap)?;
+            param_bufs.push(buf);
+        }
+
+        let (k_cache, v_cache) = Self::fresh_cache(&client, &manifest.model)?;
+        Ok(Self {
+            client,
+            manifest,
+            prefill_exes,
+            decode_exe,
+            decode_multi_exe,
+            param_bufs,
+            k_cache,
+            v_cache,
+            stats: EngineStats::default(),
+        })
+    }
+
+    fn fresh_cache(
+        client: &xla::PjRtClient,
+        geo: &ModelGeometry,
+    ) -> crate::Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let dims = geo.cache_dims();
+        let zeros = vec![0f32; geo.cache_elements()];
+        let k = client
+            .buffer_from_host_buffer::<f32>(&zeros, &dims, None)
+            .map_err(wrap)?;
+        let v = client
+            .buffer_from_host_buffer::<f32>(&zeros, &dims, None)
+            .map_err(wrap)?;
+        Ok((k, v))
+    }
+
+    pub fn geometry(&self) -> &ModelGeometry {
+        &self.manifest.model
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Available prefill chunk sizes (ascending).
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        self.prefill_exes.keys().copied().collect()
+    }
+
+    /// Smallest prefill granularity; prompt lengths must be multiples of it.
+    pub fn min_chunk(&self) -> usize {
+        *self.prefill_exes.keys().next().expect("validated nonempty")
+    }
+
+    /// Clear the KV cache (all slots).
+    pub fn reset_cache(&mut self) -> crate::Result<()> {
+        let (k, v) = Self::fresh_cache(&self.client, &self.manifest.model)?;
+        self.k_cache = k;
+        self.v_cache = v;
+        Ok(())
+    }
+
+    fn i32_buf(&self, vals: &[i32], dims: &[usize]) -> crate::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(vals, dims, None)
+            .map_err(wrap)
+    }
+
+    /// Run one compiled step: params + dynamic args, unpack the 3-tuple,
+    /// re-upload the caches, return the token output literal.
+    ///
+    /// `which`: Some(chunk) selects a prefill artifact; None selects decode
+    /// (the fused multi-step variant when `multi` is set).
+    fn run_step(
+        &mut self,
+        which: Option<usize>,
+        multi: bool,
+        dyn_bufs: Vec<xla::PjRtBuffer>,
+    ) -> crate::Result<xla::Literal> {
+        let exe = match which {
+            Some(chunk) => self
+                .prefill_exes
+                .get(&chunk)
+                .ok_or_else(|| anyhow::anyhow!("no prefill artifact for chunk {chunk}"))?,
+            None if multi => {
+                &self
+                    .decode_multi_exe
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("no decode_multi artifact"))?
+                    .1
+            }
+            None => &self.decode_exe,
+        };
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        for b in &dyn_bufs {
+            args.push(b);
+        }
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
+        let out = exe.execute_b(&args).map_err(wrap)?;
+        let tuple = out[0][0].to_literal_sync().map_err(wrap)?;
+        let (tok, k_lit, v_lit) = tuple.to_tuple3().map_err(wrap)?;
+        self.stats.cache_roundtrip_bytes += (k_lit.size_bytes() + v_lit.size_bytes()) as u64 * 2;
+        // NOTE: re-uploading via buffer_from_host_literal on a decomposed
+        // tuple element produces a buffer that crashes xla_extension 0.5.1
+        // on next use (ByteSizeOf on a tuple-tainted shape, pointer_size
+        // assertion). Round-trip through raw f32 data instead.
+        let dims = self.manifest.model.cache_dims();
+        let k_host = k_lit.to_vec::<f32>().map_err(wrap)?;
+        let v_host = v_lit.to_vec::<f32>().map_err(wrap)?;
+        self.k_cache = self
+            .client
+            .buffer_from_host_buffer::<f32>(&k_host, &dims, None)
+            .map_err(wrap)?;
+        self.v_cache = self
+            .client
+            .buffer_from_host_buffer::<f32>(&v_host, &dims, None)
+            .map_err(wrap)?;
+        Ok(tok)
+    }
+
+    /// Prefill exactly one compiled chunk. `tokens.len()` must be an
+    /// available chunk size; tokens occupy positions `[start, start+N)` of
+    /// `slot`. Returns the greedy next token.
+    pub fn prefill_chunk(&mut self, slot: usize, start: usize, tokens: &[i32]) -> crate::Result<i32> {
+        let n = tokens.len();
+        anyhow::ensure!(
+            self.prefill_exes.contains_key(&n),
+            "no artifact for chunk size {n} (have {:?})",
+            self.chunk_sizes()
+        );
+        let geo = &self.manifest.model;
+        anyhow::ensure!(slot < geo.decode_batch, "slot {slot} out of range");
+        anyhow::ensure!(start + n <= geo.max_seq, "prefill overruns max_seq");
+        let t0 = Instant::now();
+        let dyn_bufs = vec![
+            self.i32_buf(tokens, &[n])?,
+            self.i32_buf(&[start as i32], &[])?,
+            self.i32_buf(&[slot as i32], &[])?,
+        ];
+        let tok = self.run_step(Some(n), false, dyn_bufs)?;
+        self.stats.prefill_calls += 1;
+        self.stats.prefill_us += t0.elapsed().as_micros() as u64;
+        Ok(tok.get_first_element::<i32>().map_err(wrap)?)
+    }
+
+    /// Prefill an arbitrary prompt by greedy chunk composition (largest
+    /// chunks first). `tokens.len()` must be a multiple of [`min_chunk`].
+    /// Returns the next token after the full prompt.
+    pub fn prefill(&mut self, slot: usize, start: usize, tokens: &[i32]) -> crate::Result<i32> {
+        let min = self.min_chunk();
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() % min == 0,
+            "prompt length {} must be a positive multiple of {min}",
+            tokens.len()
+        );
+        let chunks: Vec<usize> = self.chunk_sizes().into_iter().rev().collect();
+        let mut off = 0usize;
+        let mut last = 0i32;
+        while off < tokens.len() {
+            let remaining = tokens.len() - off;
+            let c = chunks
+                .iter()
+                .copied()
+                .find(|&c| c <= remaining)
+                .expect("min chunk divides remaining");
+            last = self.prefill_chunk(slot, start + off, &tokens[off..off + c])?;
+            off += c;
+        }
+        Ok(last)
+    }
+
+    /// One batched greedy decode step over all slots. `tokens[b]` is the
+    /// current token of slot `b`, `lens[b]` its cached length (the new KV is
+    /// written at `lens[b]`). Inactive slots: pass `lens[b]` = current
+    /// length and ignore the output row.
+    pub fn decode_step(&mut self, tokens: &[i32], lens: &[i32]) -> crate::Result<DecodeOutput> {
+        let b = self.manifest.model.decode_batch;
+        anyhow::ensure!(tokens.len() == b && lens.len() == b, "expected full batch of {b}");
+        for &l in lens {
+            anyhow::ensure!(
+                (l as usize) < self.manifest.model.max_seq,
+                "decode overruns max_seq"
+            );
+        }
+        let t0 = Instant::now();
+        let dyn_bufs = vec![self.i32_buf(tokens, &[b])?, self.i32_buf(lens, &[b])?];
+        let tok = self.run_step(None, false, dyn_bufs)?;
+        let exec_us = t0.elapsed().as_micros() as u64;
+        self.stats.decode_calls += 1;
+        self.stats.decode_us += exec_us;
+        Ok(DecodeOutput {
+            next_tokens: tok.to_vec::<i32>().map_err(wrap)?,
+            exec_us,
+        })
+    }
+
+    /// Fused steps per `decode_multi` call (0 when the artifact is absent).
+    pub fn multi_steps(&self) -> usize {
+        self.decode_multi_exe.as_ref().map(|(s, _)| *s).unwrap_or(0)
+    }
+
+    /// Run the fused multi-step decode artifact: K greedy steps in one
+    /// call (one KV round-trip for K tokens — see EXPERIMENTS.md §Perf).
+    /// Every row advances K positions; the caller must only trust rows it
+    /// considers active and must advance their lens by K.
+    ///
+    /// Returns `out[step][slot]` tokens plus the wall time (us).
+    pub fn decode_multi(
+        &mut self,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> crate::Result<(Vec<Vec<i32>>, u64)> {
+        let b = self.manifest.model.decode_batch;
+        let k = self.multi_steps();
+        anyhow::ensure!(k > 0, "decode_multi artifact not available");
+        anyhow::ensure!(tokens.len() == b && lens.len() == b, "expected full batch of {b}");
+        for &l in lens {
+            anyhow::ensure!(
+                (l as usize) + k <= self.manifest.model.max_seq,
+                "multi-step decode overruns max_seq"
+            );
+        }
+        let t0 = Instant::now();
+        let dyn_bufs = vec![self.i32_buf(tokens, &[b])?, self.i32_buf(lens, &[b])?];
+        let tok = self.run_step(None, true, dyn_bufs)?;
+        let exec_us = t0.elapsed().as_micros() as u64;
+        self.stats.decode_calls += 1;
+        self.stats.decode_us += exec_us;
+        let flat = tok.to_vec::<i32>().map_err(wrap)?; // [K*B], step-major
+        anyhow::ensure!(flat.len() == k * b, "unexpected multi output size");
+        let out = flat.chunks(b).map(|c| c.to_vec()).collect();
+        Ok((out, exec_us))
+    }
+}
+
+/// The xla crate has its own error type; fold it into eyre.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// All engine assertions run inside ONE test with ONE engine: creating
+    /// multiple PJRT CPU clients concurrently (cargo test threads) segfaults
+    /// inside xla_extension, so the process must hold a single client.
+    #[test]
+    fn pjrt_engine_end_to_end() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = PjrtEngine::load(dir).expect("engine loads");
+
+        // --- golden tokens match jax -------------------------------------
+        let golden = eng.manifest().golden.clone().expect("manifest has golden");
+        let first = eng.prefill(0, 0, &golden.prompt).expect("prefill runs");
+        assert_eq!(first, golden.expected_tokens[0], "first token must match jax");
+        let b = eng.geometry().decode_batch;
+        let mut lens = vec![0i32; b];
+        let mut toks = vec![0i32; b];
+        lens[0] = golden.prompt.len() as i32;
+        toks[0] = first;
+        for expected in &golden.expected_tokens[1..] {
+            let out = eng.decode_step(&toks, &lens).expect("decode runs");
+            assert_eq!(out.next_tokens[0], *expected, "decode token must match jax");
+            toks[0] = out.next_tokens[0];
+            lens[0] += 1;
+        }
+
+        // --- chunk composition is exact -----------------------------------
+        let min = eng.min_chunk();
+        eng.reset_cache().unwrap();
+        let prompt: Vec<i32> = (0..(2 * min) as i32).map(|i| (i * 5 + 1) % 2000).collect();
+        let t_a = eng.prefill(0, 0, &prompt).unwrap();
+        if eng.chunk_sizes().contains(&(2 * min)) {
+            eng.reset_cache().unwrap();
+            let t_b = eng.prefill_chunk(0, 0, &prompt).unwrap();
+            assert_eq!(t_a, t_b, "chunk composition must not change the result");
+        }
+
+        // --- slots are isolated -------------------------------------------
+        let p1: Vec<i32> = (0..min as i32).map(|i| (i * 3 + 7) % 2000).collect();
+        let p2: Vec<i32> = (0..min as i32).map(|i| (i * 11 + 13) % 2000).collect();
+        eng.reset_cache().unwrap();
+        let a_alone = eng.prefill(0, 0, &p1).unwrap();
+        eng.reset_cache().unwrap();
+        let _b = eng.prefill(1, 0, &p2).unwrap();
+        let a_with_neighbor = eng.prefill(0, 0, &p1).unwrap();
+        assert_eq!(a_alone, a_with_neighbor, "slot 1 contents must not leak into slot 0");
+
+        // --- bad inputs rejected -------------------------------------------
+        assert!(eng.prefill(0, 0, &vec![1; min + 1]).is_err(), "non-multiple length");
+        let nb = eng.geometry().decode_batch;
+        assert!(eng.prefill(nb, 0, &vec![1; min]).is_err(), "slot out of range");
+        let s = eng.geometry().max_seq;
+        assert!(eng.prefill(0, s - min + 1, &vec![1; min]).is_err(), "max_seq overrun");
+        assert!(eng.decode_step(&[0], &[0]).is_err(), "wrong batch width");
+
+        // --- stats accumulate ------------------------------------------------
+        assert!(eng.stats.prefill_calls > 0);
+        assert!(eng.stats.decode_calls > 0);
+        assert!(eng.stats.cache_roundtrip_bytes > 0);
+    }
+}

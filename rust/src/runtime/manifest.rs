@@ -1,0 +1,294 @@
+//! Artifact manifest (`artifacts/manifest.json`) — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+//!
+//! Argument order of every artifact (fixed by the AOT pytree flattening):
+//! `[params (manifest order)..., <dynamic args>]` where the dynamic args are
+//! - prefill: `tokens[chunk] i32, start i32, slot i32, k_cache, v_cache`
+//! - decode:  `tokens[B] i32, lens[B] i32, k_cache, v_cache`
+//!
+//! Outputs: `(next_token(s) i32, k_cache', v_cache')`.
+
+use crate::util::json::{parse, Value};
+use std::path::{Path, PathBuf};
+
+/// Model geometry, mirrored from `ModelConfig` in `python/compile/model.py`.
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub decode_batch: usize,
+    pub param_count: usize,
+}
+
+impl ModelGeometry {
+    /// KV cache shape `[L, B, H_kv, S, D]`.
+    pub fn cache_dims(&self) -> [usize; 5] {
+        [
+            self.n_layers,
+            self.decode_batch,
+            self.n_kv_heads,
+            self.max_seq,
+            self.head_dim,
+        ]
+    }
+
+    pub fn cache_elements(&self) -> usize {
+        self.cache_dims().iter().product()
+    }
+}
+
+/// One weight array in `params.bin` (f32 little-endian, this order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String,
+    pub chunk: Option<usize>,
+    pub batch: Option<usize>,
+    /// decode_multi artifacts: steps fused per call.
+    pub steps: Option<usize>,
+}
+
+/// Golden test vector generated at AOT time.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub chunk: usize,
+    pub batch: usize,
+    pub expected_tokens: Vec<i32>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelGeometry,
+    pub dtype: String,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub seed: Option<u64>,
+    pub golden: Option<Golden>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = parse(&text)?;
+        let mut m = Self::from_value(&v)?;
+        m.dir = dir;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        let mv = v.req("model")?;
+        let model = ModelGeometry {
+            vocab: mv.req_usize("vocab")?,
+            d_model: mv.req_usize("d_model")?,
+            n_layers: mv.req_usize("n_layers")?,
+            n_heads: mv.req_usize("n_heads")?,
+            n_kv_heads: mv.req_usize("n_kv_heads")?,
+            head_dim: mv.req_usize("head_dim")?,
+            d_ff: mv.req_usize("d_ff")?,
+            max_seq: mv.req_usize("max_seq")?,
+            rope_theta: mv.req_f64("rope_theta")?,
+            decode_batch: mv.req_usize("decode_batch")?,
+            param_count: mv.req_usize("param_count")?,
+        };
+        let params = v
+            .req_arr("params")?
+            .iter()
+            .map(|pv| {
+                Ok(ParamSpec {
+                    name: pv.req_str("name")?.to_string(),
+                    shape: pv
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape dim")))
+                        .collect::<crate::Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let artifacts = v
+            .req_arr("artifacts")?
+            .iter()
+            .map(|av| {
+                Ok(ArtifactSpec {
+                    file: av.req_str("file")?.to_string(),
+                    kind: av.req_str("kind")?.to_string(),
+                    chunk: av.get("chunk").and_then(|c| c.as_usize()),
+                    batch: av.get("batch").and_then(|b| b.as_usize()),
+                    steps: av.get("steps").and_then(|s| s.as_usize()),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let golden = match v.get("golden") {
+            Some(g) => Some(Golden {
+                prompt: g
+                    .req_arr("prompt")?
+                    .iter()
+                    .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token")))
+                    .collect::<crate::Result<Vec<_>>>()?,
+                chunk: g.req_usize("chunk")?,
+                batch: g.req_usize("batch")?,
+                expected_tokens: g
+                    .req_arr("expected_tokens")?
+                    .iter()
+                    .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token")))
+                    .collect::<crate::Result<Vec<_>>>()?,
+            }),
+            None => None,
+        };
+        Ok(Manifest {
+            model,
+            dtype: v.req_str("dtype")?.to_string(),
+            params,
+            artifacts,
+            seed: v.get("seed").and_then(|s| s.as_u64()),
+            golden,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        let total: usize = self.params.iter().map(|p| p.elements()).sum();
+        anyhow::ensure!(
+            total == self.model.param_count,
+            "param specs ({total}) disagree with param_count ({})",
+            self.model.param_count
+        );
+        anyhow::ensure!(self.dtype == "f32", "only f32 artifacts supported");
+        anyhow::ensure!(
+            !self.prefill_chunks().is_empty(),
+            "manifest has no prefill artifacts"
+        );
+        anyhow::ensure!(
+            !self.decode_batches().is_empty(),
+            "manifest has no decode artifacts"
+        );
+        Ok(())
+    }
+
+    /// Available prefill chunk sizes, ascending.
+    pub fn prefill_chunks(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "prefill")
+            .filter_map(|a| a.chunk)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Available decode batch sizes, ascending.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode")
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Load and split `params.bin` into per-array f32 vectors.
+    pub fn load_params(&self) -> crate::Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(self.dir.join("params.bin"))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * self.model.param_count,
+            "params.bin size {} != 4 * {}",
+            bytes.len(),
+            self.model.param_count
+        );
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for spec in &self.params {
+            let n = spec.elements();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.n_layers > 0);
+        assert!(!m.prefill_chunks().is_empty());
+        assert!(!m.decode_batches().is_empty());
+        assert_eq!(m.cache_shape_sane(), true);
+    }
+
+    impl Manifest {
+        fn cache_shape_sane(&self) -> bool {
+            self.model.cache_elements()
+                == self.model.n_layers
+                    * self.model.decode_batch
+                    * self.model.n_kv_heads
+                    * self.model.max_seq
+                    * self.model.head_dim
+        }
+    }
+
+    #[test]
+    fn params_split_matches_specs() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), m.params.len());
+        for (p, spec) in params.iter().zip(&m.params) {
+            assert_eq!(p.len(), spec.elements());
+        }
+        // Norm weights are initialized to 1.0 — spot-check one.
+        let norm_idx = m.params.iter().position(|p| p.name.ends_with("norm")).unwrap();
+        assert!(params[norm_idx].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+}

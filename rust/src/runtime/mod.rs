@@ -1,0 +1,19 @@
+//! PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path (Python is never involved).
+//!
+//! Artifacts (built by `make artifacts`):
+//! - `artifacts/manifest.json` — model geometry, artifact shapes, dtypes.
+//! - `artifacts/prefill_t{N}.hlo.txt` — prefill step for a chunk of N
+//!   tokens into one KV slot.
+//! - `artifacts/decode_b{B}.hlo.txt` — one batched greedy decode step.
+//! - `artifacts/params.bin` — flattened f32 weights in manifest order.
+//!
+//! The interchange format is HLO *text* (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod engine;
+mod manifest;
+
+pub use engine::{DecodeOutput, EngineStats, PjrtEngine};
+pub use manifest::{ArtifactSpec, Manifest, ModelGeometry};

@@ -1,0 +1,392 @@
+//! Paper table/figure regeneration harness (deliverable d).
+//!
+//! One function per evaluation artifact; each prints the same rows/series
+//! the paper reports and can dump JSON for plotting. Absolute values come
+//! from our calibrated cost model, so the claim under test is the *shape*:
+//! who wins, by roughly what factor, and where crossovers fall
+//! (EXPERIMENTS.md records paper-vs-measured for each).
+
+use crate::config::{Config, GpuKind, ModelKind};
+use crate::coordinator::CompetitiveAnalyzer;
+use crate::engine::{run_sim, Policy, SimOutcome, SimParams};
+use crate::gpusim::{CostModel, Phase};
+use crate::greenctx::GreenContextPool;
+use crate::util::json::Value;
+use crate::workload::{DistSummary, TokenStats, WorkloadGenerator, WorkloadKind};
+
+fn dump_json(json_dir: Option<&str>, name: &str, value: &Value) -> crate::Result<()> {
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("{name}.json"));
+        std::fs::write(path, value.to_string_pretty())?;
+    }
+    Ok(())
+}
+
+fn dist_value(d: &DistSummary) -> Value {
+    Value::obj(vec![
+        ("min", d.min.into()),
+        ("max", d.max.into()),
+        ("mean", d.mean.into()),
+        ("n", d.n.into()),
+    ])
+}
+
+/// Fig. 2: TPOT timeline of mixed execution — cold prefills overlapping
+/// decodes cause emission-latency spikes (Qwen-3B/7B, A5000, 3 agents).
+pub fn fig2_tpot_timeline(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Figure 2: TPOT timeline under mixed execution (A5000, 3 agents) ===");
+    let mut all = Vec::new();
+    for model in [ModelKind::Qwen3B, ModelKind::Qwen7B] {
+        let cfg = Config::preset(model, GpuKind::A5000);
+        let params = SimParams {
+            n_agents: 3,
+            sessions_per_agent: 2,
+            workload: WorkloadKind::ReAct,
+            ..SimParams::default()
+        };
+        let out = run_sim(&cfg, Policy::LlamaCpp, &params);
+        let spikes: Vec<&crate::metrics::TpotSample> = out
+            .timeline
+            .iter()
+            .filter(|s| s.gap_ms > 4.0 * out.report.tpot.p50)
+            .collect();
+        println!(
+            "{model}: {} tokens, TPOT p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms, {} spikes (> 4x p50)",
+            out.timeline.len(),
+            out.report.tpot.p50,
+            out.report.tpot.p95,
+            out.report.tpot.max,
+            spikes.len()
+        );
+        for s in spikes.iter().take(5) {
+            println!(
+                "   spike at t={:.1}s: {:.0} ms gap (agent {})",
+                s.t_us as f64 / 1e6,
+                s.gap_ms,
+                s.session
+            );
+        }
+        let series: Vec<Value> = out
+            .timeline
+            .iter()
+            .map(|s| Value::Arr(vec![s.t_us.into(), s.gap_ms.into()]))
+            .collect();
+        all.push((
+            model.name().to_string(),
+            Value::obj(vec![
+                ("series", Value::Arr(series)),
+                ("p50", out.report.tpot.p50.into()),
+                ("p95", out.report.tpot.p95.into()),
+            ]),
+        ));
+    }
+    println!("(paper: sharp TPOT spikes appear when heavy prefills overlap active decodes)");
+    dump_json(json_dir, "fig2", &Value::Obj(all))
+}
+
+/// Fig. 3: normalized throughput vs SM share per phase (Qwen-3B/7B, 5090).
+pub fn fig3_sm_curves(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Figure 3: normalized throughput vs SM share (RTX 5090) ===");
+    let mut all = Vec::new();
+    for model in [ModelKind::Qwen3B, ModelKind::Qwen7B] {
+        let cfg = Config::preset(model, GpuKind::Rtx5090);
+        let cost = CostModel::new(&cfg.model, &cfg.gpu);
+        println!("{model}:   share   decode  resume   cold");
+        let mut rows = Vec::new();
+        let full_d = cost.decode_throughput(4, 12_000, 1.0);
+        let full_r = cost.prefill_throughput(128, 1.0, Phase::ResumePrefill);
+        let full_c = cost.prefill_throughput(3000, 1.0, Phase::ColdPrefill);
+        for i in 1..=10 {
+            let x = i as f64 / 10.0;
+            let d = cost.decode_throughput(4, 12_000, x) / full_d;
+            let r = cost.prefill_throughput(128, x, Phase::ResumePrefill) / full_r;
+            let c = cost.prefill_throughput(3000, x, Phase::ColdPrefill) / full_c;
+            println!("          {:>4.0}%   {:>5.2}   {:>5.2}  {:>5.2}", x * 100.0, d, r, c);
+            rows.push(Value::obj(vec![
+                ("share", x.into()),
+                ("decode", d.into()),
+                ("resume", r.into()),
+                ("cold", c.into()),
+            ]));
+        }
+        all.push((model.name().to_string(), Value::Arr(rows)));
+    }
+    println!("(paper: decode saturates earliest, cold prefill scales most gradually, resume in between)");
+    dump_json(json_dir, "fig3", &Value::Obj(all))
+}
+
+/// The Fig. 5/6 grid: every (model, gpu, concurrency, policy) cell.
+pub fn run_grid() -> Vec<(ModelKind, GpuKind, usize, SimOutcome)> {
+    let mut cells = Vec::new();
+    for model in ModelKind::ALL {
+        for gpu in GpuKind::ALL {
+            let cfg = Config::preset(model, gpu);
+            for n in 3..=6 {
+                for policy in Policy::paper_lineup() {
+                    let params = SimParams {
+                        n_agents: n,
+                        sessions_per_agent: 2,
+                        workload: WorkloadKind::ReAct,
+                        ..SimParams::default()
+                    };
+                    cells.push((model, gpu, n, run_sim(&cfg, policy, &params)));
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Fig. 5: TTFT/TPOT (p50, p95) and throughput across the full grid.
+pub fn fig5_latency_throughput(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Figure 5: latency & throughput across model-device settings ===");
+    let cells = run_grid();
+    let mut rows = Vec::new();
+    for model in ModelKind::ALL {
+        for gpu in GpuKind::ALL {
+            println!("\n--- {model} on {gpu} ---");
+            println!(
+                "{:<11} {:>2}  {:>9} {:>9}  {:>8} {:>8}  {:>9}",
+                "policy", "N", "TTFT p50", "TTFT p95", "TPOT p50", "TPOT p95", "tok/s"
+            );
+            for n in 3..=6 {
+                for (m, g, nn, out) in &cells {
+                    if *m == model && *g == gpu && *nn == n {
+                        println!(
+                            "{:<11} {:>2}  {:>8.0}ms {:>8.0}ms  {:>7.1}ms {:>7.1}ms  {:>9.1}",
+                            out.policy_name,
+                            n,
+                            out.report.ttft.p50,
+                            out.report.ttft.p95,
+                            out.report.tpot.p50,
+                            out.report.tpot.p95,
+                            out.report.throughput_tok_s
+                        );
+                        rows.push(Value::obj(vec![
+                            ("model", m.name().into()),
+                            ("gpu", g.name().into()),
+                            ("agents", (*nn).into()),
+                            ("policy", out.policy_name.as_str().into()),
+                            ("ttft_p50", out.report.ttft.p50.into()),
+                            ("ttft_p95", out.report.ttft.p95.into()),
+                            ("tpot_p50", out.report.tpot.p50.into()),
+                            ("tpot_p95", out.report.tpot.p95.into()),
+                            ("throughput", out.report.throughput_tok_s.into()),
+                        ]));
+                    }
+                }
+            }
+        }
+    }
+    summarize_ratios(&cells);
+    dump_json(json_dir, "fig5", &Value::Arr(rows))
+}
+
+fn summarize_ratios(cells: &[(ModelKind, GpuKind, usize, SimOutcome)]) {
+    let mut best: Vec<(&str, f64, f64, f64)> = vec![
+        ("SGLang", 0.0, 0.0, 0.0),
+        ("vLLM", 0.0, 0.0, 0.0),
+        ("llama.cpp", 0.0, 0.0, 0.0),
+    ];
+    for model in ModelKind::ALL {
+        for gpu in GpuKind::ALL {
+            for n in 3..=6 {
+                let find = |p: &str| {
+                    cells
+                        .iter()
+                        .find(|(m, g, nn, o)| {
+                            *m == model && *g == gpu && *nn == n && o.policy_name == p
+                        })
+                        .map(|(_, _, _, o)| o)
+                };
+                let Some(ours) = find("AgentServe") else { continue };
+                for entry in best.iter_mut() {
+                    let Some(b) = find(entry.0) else { continue };
+                    entry.1 = entry.1.max(b.report.ttft.p95 / ours.report.ttft.p95.max(1e-9));
+                    entry.2 = entry.2.max(b.report.tpot.p95 / ours.report.tpot.p95.max(1e-9));
+                    entry.3 = entry
+                        .3
+                        .max(ours.report.throughput_tok_s / b.report.throughput_tok_s.max(1e-9));
+                }
+            }
+        }
+    }
+    println!("\nHeadline improvement ratios (best across grid, p95):");
+    for (k, t, p, thr) in &best {
+        println!("  vs {k:<10}  TTFT {t:.1}x   TPOT {p:.1}x   throughput {thr:.1}x");
+    }
+    println!("(paper: TTFT up to 2.8x vs llama.cpp, 1.5-1.8x vs vLLM, 1.1-1.3x vs SGLang; TPOT up to 2.7x)");
+}
+
+/// Fig. 6: session-level joint SLO attainment across the grid.
+pub fn fig6_slo_attainment(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Figure 6: session-level SLO attainment ===");
+    let cells = run_grid();
+    let mut rows = Vec::new();
+    for model in ModelKind::ALL {
+        for gpu in GpuKind::ALL {
+            println!("\n--- {model} on {gpu} ---");
+            print!("{:<11}", "policy");
+            for n in 3..=6 {
+                print!(" N={n:<6}");
+            }
+            println!();
+            for policy in Policy::paper_lineup() {
+                print!("{:<11}", policy.name());
+                for n in 3..=6 {
+                    if let Some((_, _, _, out)) = cells.iter().find(|(m, g, nn, o)| {
+                        *m == model && *g == gpu && *nn == n && o.policy_name == policy.name()
+                    }) {
+                        print!(" {:>5.1}% ", out.slo.rate() * 100.0);
+                        rows.push(Value::obj(vec![
+                            ("model", model.name().into()),
+                            ("gpu", gpu.name().into()),
+                            ("agents", n.into()),
+                            ("policy", policy.name().into()),
+                            ("slo_rate", out.slo.rate().into()),
+                        ]));
+                    }
+                }
+                println!();
+            }
+        }
+    }
+    println!("(paper: AgentServe highest everywhere; near-perfect on 5090; baselines drop past N=4 on A5000)");
+    dump_json(json_dir, "fig6", &Value::Arr(rows))
+}
+
+/// Fig. 7: ablation — Full vs No-Alg vs No-Green, N=4, p95 TTFT/TPOT.
+pub fn fig7_ablation(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Figure 7: ablation (N=4, p95) ===");
+    let mut rows = Vec::new();
+    for model in ModelKind::ALL {
+        for gpu in GpuKind::ALL {
+            println!("\n--- {model} on {gpu} ---");
+            println!("{:<11} {:>10} {:>10}", "variant", "TTFT p95", "TPOT p95");
+            for policy in Policy::ablation_lineup() {
+                let cfg = Config::preset(model, gpu);
+                let params = SimParams {
+                    n_agents: 4,
+                    sessions_per_agent: 2,
+                    workload: WorkloadKind::ReAct,
+                    ..SimParams::default()
+                };
+                let out = run_sim(&cfg, policy, &params);
+                println!(
+                    "{:<11} {:>8.0}ms {:>8.1}ms",
+                    out.policy_name, out.report.ttft.p95, out.report.tpot.p95
+                );
+                rows.push(Value::obj(vec![
+                    ("model", model.name().into()),
+                    ("gpu", gpu.name().into()),
+                    ("variant", out.policy_name.as_str().into()),
+                    ("ttft_p95", out.report.ttft.p95.into()),
+                    ("tpot_p95", out.report.tpot.p95.into()),
+                ]));
+            }
+        }
+    }
+    println!("(paper: No-Alg +15-25% TTFT, up to 1.4x TPOT p95; No-Green adds 20-30% TPOT variance)");
+    dump_json(json_dir, "fig7", &Value::Arr(rows))
+}
+
+/// Table I: token distribution across workloads and models.
+pub fn table1_token_distribution(json_dir: Option<&str>) -> crate::Result<()> {
+    println!("\n=== Table I: token distribution across workloads and models ===");
+    println!(
+        "{:<6} {:<15} {:<18} {:<18} {:<18}",
+        "", "stage", ModelKind::Qwen3B, ModelKind::Qwen7B, ModelKind::Llama8B
+    );
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let stats: Vec<TokenStats> = ModelKind::ALL
+            .iter()
+            .map(|&m| {
+                let mut gen = WorkloadGenerator::new(kind, m, 11);
+                TokenStats::from_sessions(&gen.sessions(300))
+            })
+            .collect();
+        let tag = match kind {
+            WorkloadKind::ReAct => "ReAct",
+            WorkloadKind::PlanAndExecute => "P&E",
+        };
+        println!(
+            "{:<6} {:<15} {:<18} {:<18} {:<18}",
+            tag,
+            "Cold Prefill",
+            stats[0].cold_prefill.to_string(),
+            stats[1].cold_prefill.to_string(),
+            stats[2].cold_prefill.to_string()
+        );
+        println!(
+            "{:<6} {:<15} {:<18} {:<18} {:<18}",
+            "",
+            "Resume Prefill",
+            stats[0].resume_prefill.to_string(),
+            stats[1].resume_prefill.to_string(),
+            stats[2].resume_prefill.to_string()
+        );
+        println!(
+            "{:<6} {:<15} {:<18} {:<18} {:<18}",
+            "",
+            "Decode",
+            stats[0].decode.to_string(),
+            stats[1].decode.to_string(),
+            stats[2].decode.to_string()
+        );
+        for (m, s) in ModelKind::ALL.iter().zip(&stats) {
+            rows.push(Value::obj(vec![
+                ("workload", tag.into()),
+                ("model", m.name().into()),
+                ("cold", dist_value(&s.cold_prefill)),
+                ("resume", dist_value(&s.resume_prefill)),
+                ("decode", dist_value(&s.decode)),
+            ]));
+        }
+    }
+    println!("(paper: cold 2.5k-3.5k; ReAct resume 30-127(56); P&E resume 125-421(251); short decodes)");
+    dump_json(json_dir, "table1", &Value::Arr(rows))
+}
+
+/// Theorem 1 / Corollary 2 evaluated on the profiled curves, plus the
+/// measured prefill-retention of an actual AgentServe run.
+pub fn analyze_competitive(
+    model: ModelKind,
+    gpu: GpuKind,
+    delta: u32,
+    eps: f64,
+) -> crate::Result<()> {
+    let cfg = Config::preset(model, gpu);
+    let cost = CostModel::new(&cfg.model, &cfg.gpu);
+    let pool = GreenContextPool::new(cfg.gpu.sm_count, cfg.engine.green_slots, cfg.engine.rebind_us);
+    let analyzer = CompetitiveAnalyzer::new(cost, pool.slot_sizes().to_vec(), cfg.gpu.sm_count);
+
+    println!("\n=== Competitive-ratio analysis ({model} on {gpu}) ===");
+    println!(
+        "decode SLO: TPOT <= {:.1} ms  =>  r_min = {:.1} tok/s",
+        cfg.slo.tpot_ms,
+        cfg.slo.r_min_tokens_per_s()
+    );
+    for eta in [0.25, 0.5, 0.75] {
+        match analyzer.bound(&cfg.slo, delta, eps, eta) {
+            Some(b) => println!(
+                "eta_cold={eta:.2}: R*_g={} SMs, rho >= {:.3} (linearized {:.3}); mu_P opt {:.0} vs ours {:.0} tok/s",
+                b.r_star_g, b.rho_bound, b.rho_linearized, b.mu_p_opt, b.mu_p_ours
+            ),
+            None => println!("eta_cold={eta:.2}: decode SLO infeasible at full GPU"),
+        }
+    }
+
+    // Measured retention from an actual simulated run.
+    let params = SimParams { n_agents: 4, sessions_per_agent: 2, ..SimParams::default() };
+    let out = run_sim(&cfg, Policy::AgentServe(Default::default()), &params);
+    if let Some(rho) = analyzer.measured_rho(&cfg.slo, out.report.prefill_tok_s, out.eta_cold) {
+        println!(
+            "measured: prefill {:.0} tok/s at eta_cold={:.2}  =>  retention rho = {:.3}",
+            out.report.prefill_tok_s, out.eta_cold, rho
+        );
+        println!("(rho is vs. a *continuously busy* offline prefill optimum; idle tool-wait time lowers it)");
+    }
+    Ok(())
+}

@@ -1,0 +1,223 @@
+//! CLI front end: `agentserve bench|figures|analyze|serve`.
+//!
+//! [`figures`] is the benchmark harness of deliverable (d): one function per
+//! paper table/figure, printing the same rows/series the paper reports and
+//! optionally dumping JSON for plotting.
+
+pub mod figures;
+
+use crate::config::{Config, GpuKind, ModelKind};
+use crate::engine::{Policy, SimParams};
+use crate::util::cli::Args;
+use crate::workload::WorkloadKind;
+
+pub const USAGE: &str = "\
+agentserve — efficient agentic AI serving on a consumer-grade GPU (reproduction)
+
+USAGE:
+  agentserve bench   [--policy P] [--model M] [--gpu G] [--agents N]
+                     [--sessions K] [--workload react|pe] [--seed S]
+                     [--config file.json] [--save-trace t.json]
+                     [--replay-trace t.json]
+  agentserve figures [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
+  agentserve analyze [--model M] [--gpu G] [--delta D] [--eps E]
+  agentserve serve   [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
+                     [--tool-scale F]
+
+policies: agentserve | no-alg | no-green | sglang | vllm | llamacpp
+models:   3b | 7b | 8b (cost-model) / tiny (real engine)
+gpus:     a5000 | 5090
+";
+
+/// Entry point used by `main` (and by CLI tests).
+pub fn run(args: Args) -> crate::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("bench") => bench(&args),
+        Some("figures") => run_figures(&args),
+        Some("analyze") => {
+            let model: ModelKind = args.get_or("model", "7b").parse()?;
+            let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+            let delta = args.get_u32("delta", 7)?;
+            let eps = args.get_f64("eps", 0.01)?;
+            figures::analyze_competitive(model, gpu, delta, eps)
+        }
+        Some("serve") => serve_real(&args),
+        Some(other) => {
+            eprintln!("{USAGE}");
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn bench(args: &Args) -> crate::Result<()> {
+    let model: ModelKind = args.get_or("model", "7b").parse()?;
+    let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+    let cfg = match args.get("config") {
+        Some(p) => Config::from_path(p)?,
+        None => Config::preset(model, gpu),
+    };
+    let policy: Policy = args.get_or("policy", "agentserve").parse()?;
+    let params = SimParams {
+        n_agents: args.get_usize("agents", 4)?,
+        sessions_per_agent: args.get_usize("sessions", 3)?,
+        workload: args.get_or("workload", "react").parse::<WorkloadKind>()?,
+        seed: args.get_u64("seed", 7)?,
+        ..SimParams::default()
+    };
+    // Trace record/replay for paired comparisons and regression debugging.
+    let out = if let Some(path) = args.get("replay-trace") {
+        let trace = crate::workload::Trace::load(path)?;
+        let scripts = trace.events.into_iter().map(|e| e.script).collect();
+        crate::engine::sim::run_sim_scripts(&cfg, policy, &params, scripts)
+    } else {
+        let mut gen = crate::workload::WorkloadGenerator::new(
+            params.workload,
+            cfg.model.kind,
+            params.seed,
+        );
+        let scripts = gen.sessions(params.n_agents * params.sessions_per_agent);
+        if let Some(path) = args.get("save-trace") {
+            let trace =
+                crate::workload::Trace::concurrent(scripts.clone(), params.n_agents, params.stagger_us);
+            trace.save(path)?;
+            println!("trace saved to {path}");
+        }
+        crate::engine::sim::run_sim_scripts(&cfg, policy, &params, scripts)
+    };
+    println!(
+        "== {} | {} | {} | {} agents ==",
+        out.policy_name, model, gpu, params.n_agents
+    );
+    println!("{}", out.report);
+    println!(
+        "  SLO   {}/{} attained ({:.1}%)",
+        out.slo.attained,
+        out.slo.sessions,
+        out.slo.rate() * 100.0
+    );
+    println!(
+        "  mix   eta_cold={:.2} cold_routed={} merged={} rerouted={} rebinds={}",
+        out.eta_cold, out.cold_routed, out.resume_merged, out.resume_rerouted, out.rebinds.rebinds
+    );
+    Ok(())
+}
+
+fn run_figures(args: &Args) -> crate::Result<()> {
+    let all = args.has("all");
+    let fig = args.get("fig").map(|f| f.parse::<u32>()).transpose()?;
+    let table = args.get("table").map(|t| t.parse::<u32>()).transpose()?;
+    let jd = args.get("json-dir");
+    if all || fig == Some(2) {
+        figures::fig2_tpot_timeline(jd)?;
+    }
+    if all || fig == Some(3) {
+        figures::fig3_sm_curves(jd)?;
+    }
+    if all || fig == Some(5) {
+        figures::fig5_latency_throughput(jd)?;
+    }
+    if all || fig == Some(6) {
+        figures::fig6_slo_attainment(jd)?;
+    }
+    if all || fig == Some(7) {
+        figures::fig7_ablation(jd)?;
+    }
+    if all || table == Some(1) {
+        figures::table1_token_distribution(jd)?;
+    }
+    if !all && fig.is_none() && table.is_none() {
+        anyhow::bail!("pass --fig N, --table N, or --all");
+    }
+    Ok(())
+}
+
+/// End-to-end demo on the real PJRT engine.
+fn serve_real(args: &Args) -> crate::Result<()> {
+    use crate::engine::real::{run_real, RealPolicy};
+    use crate::workload::WorkloadGenerator;
+
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let policy = match args.get_or("policy", "agentserve").to_ascii_lowercase().as_str() {
+        "agentserve" => RealPolicy::AgentServe,
+        "fcfs" | "fcfs-mixed" | "llamacpp" => RealPolicy::FcfsMixed,
+        other => anyhow::bail!("unknown real policy: {other} (agentserve|fcfs)"),
+    };
+    let tool_scale = args.get_f64("tool-scale", 0.1)?;
+    let mut engine = crate::runtime::PjrtEngine::load(artifacts)?;
+    let n = args
+        .get_usize("agents", 4)?
+        .min(engine.geometry().decode_batch);
+    let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Tiny, 7);
+    let scripts = gen.sessions(n);
+    println!(
+        "serving {n} concurrent ReAct sessions on the real engine ({} params)…",
+        engine.geometry().param_count
+    );
+    let out = run_real(
+        &mut engine,
+        policy,
+        scripts,
+        crate::config::SchedulerConfig::calibrated(10.0),
+        tool_scale,
+    )?;
+    println!("== {} (real PJRT compute) ==", out.policy);
+    println!("{}", out.report);
+    println!(
+        "  engine: {} prefill calls ({} ms), {} decode calls ({} ms), {:.1} MB cache traffic",
+        out.engine_stats.prefill_calls,
+        out.engine_stats.prefill_us / 1000,
+        out.engine_stats.decode_calls,
+        out.engine_stats.decode_us / 1000,
+        out.engine_stats.cache_roundtrip_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn bench_subcommand_runs() {
+        run(args("bench --model 3b --agents 3 --sessions 1")).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert!(run(args("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn figures_requires_selection() {
+        assert!(run(args("figures")).is_err());
+    }
+
+    #[test]
+    fn analyze_runs() {
+        run(args("analyze --model 7b --gpu 5090")).unwrap();
+    }
+
+    #[test]
+    fn trace_record_then_replay_matches() {
+        let dir = std::env::temp_dir().join("agentserve_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        let p = p.to_str().unwrap();
+        run(args(&format!(
+            "bench --model 3b --agents 3 --sessions 1 --save-trace {p}"
+        )))
+        .unwrap();
+        run(args(&format!(
+            "bench --model 3b --agents 3 --sessions 1 --replay-trace {p} --policy vllm"
+        )))
+        .unwrap();
+    }
+}

@@ -1,0 +1,95 @@
+//! Benchmark harness for `cargo bench` (criterion is unavailable offline).
+//!
+//! [`Bench`] runs closures with warmup, collects per-iteration wall times,
+//! and reports min/median/p95/mean — enough to compare policies and track
+//! hot-path regressions. `cargo bench` targets use `harness = false` and
+//! call this directly from `main`.
+
+use std::time::Instant;
+
+/// One benchmark group.
+pub struct Bench {
+    name: String,
+    warmup_iters: u32,
+    measure_iters: u32,
+}
+
+/// Timing summary of one case (microseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub min_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub mean_us: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Respect quick runs: AGENTSERVE_BENCH_ITERS=3 cargo bench.
+        let iters = std::env::var("AGENTSERVE_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        println!("\n== bench: {name} ==");
+        Self { name: name.to_string(), warmup_iters: 2, measure_iters: iters }
+    }
+
+    pub fn with_iters(mut self, warmup: u32, measure: u32) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Run one case; the closure's return value is black-boxed.
+    pub fn case<T>(&self, label: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters as usize);
+        for _ in 0..self.measure_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let result = BenchResult {
+            iters: self.measure_iters,
+            min_us: samples[0],
+            median_us: samples[n / 2],
+            p95_us: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            mean_us: samples.iter().sum::<f64>() / n as f64,
+        };
+        println!(
+            "{:<40} min {:>10.1} us   median {:>10.1} us   p95 {:>10.1} us",
+            format!("{}/{label}", self.name),
+            result.min_us,
+            result.median_us,
+            result.p95_us
+        );
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::remove_var("AGENTSERVE_BENCH_ITERS");
+        let b = Bench::new("test").with_iters(1, 5);
+        let r = b.case("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.min_us > 0.0);
+        assert!(r.median_us >= r.min_us);
+        assert!(r.p95_us >= r.median_us);
+        assert_eq!(r.iters, 5);
+    }
+}

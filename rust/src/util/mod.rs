@@ -1,0 +1,17 @@
+//! In-tree substrates for the offline build environment.
+//!
+//! The build image vendors only the PJRT bridge crates, so everything a
+//! serving framework usually pulls from crates.io is implemented here:
+//!
+//! - [`json`] — a complete JSON parser/emitter (manifest, traces, figure
+//!   series, config files).
+//! - [`rng`] — deterministic PRNG (SplitMix64) with uniform/normal/gamma/
+//!   beta sampling for the workload generator and property tests.
+//! - [`cli`] — a small `--flag value` argument parser for the launcher.
+//! - [`bench`] — the micro/macro benchmark harness used by `cargo bench`
+//!   (median-of-runs timing with warmup, criterion-style reporting).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,200 @@
+//! Deterministic PRNG + distribution sampling (no external crates).
+//!
+//! [`Rng`] is SplitMix64 — tiny state, passes BigCrush-lite, and perfectly
+//! adequate for workload synthesis and property tests (we need determinism
+//! and shape, not cryptography). Distributions: uniform, normal
+//! (Box–Muller), gamma (Marsaglia–Tsang), and beta (gamma ratio) — beta is
+//! what matches Table I's bounded min–max (avg) token statistics.
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare_normal: None }
+    }
+
+    /// Derive an independent stream (for shared-template prompt ids etc.).
+    pub fn fold(seed: u64, stream: u64) -> Self {
+        let mut r = Self::seed_from_u64(seed ^ stream.wrapping_mul(0xA24BAED4963EE407));
+        r.next_u64();
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive).
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as u32
+    }
+
+    /// Uniform f64 in [lo, hi].
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid ln(0).
+        let u1 = (1.0 - self.f64()).max(1e-300);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (shape > 0).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: G(a) = G(a+1) * U^(1/a).
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(alpha, beta) in (0, 1).
+    pub fn beta(&mut self, alpha: f64, beta: f64) -> f64 {
+        let x = self.gamma(alpha);
+        let y = self.gamma(beta);
+        x / (x + y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            let i = r.range_u32(5, 9);
+            assert!((5..=9).contains(&i));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_coverage() {
+        let mut r = Rng::seed_from_u64(2);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[(r.f64() * 10.0) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((0.08..0.12).contains(&frac), "bucket fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 100_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            sum += z;
+            sum2 += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "normal mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "normal var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::seed_from_u64(4);
+        for shape in [0.5, 1.0, 2.5, 7.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() / shape < 0.05,
+                "gamma({shape}) mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn beta_mean_matches_parameters() {
+        let mut r = Rng::seed_from_u64(5);
+        let (a, b) = (2.0, 6.0);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.beta(a, b)).sum::<f64>() / n as f64;
+        let expect = a / (a + b);
+        assert!((mean - expect).abs() < 0.01, "beta mean {mean} vs {expect}");
+        // Support check.
+        for _ in 0..1000 {
+            let v = r.beta(a, b);
+            assert!(v > 0.0 && v < 1.0);
+        }
+    }
+
+    #[test]
+    fn fold_streams_independent() {
+        let mut a = Rng::fold(7, 0);
+        let mut b = Rng::fold(7, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+        let mut a2 = Rng::fold(7, 0);
+        a2.next_u64();
+        // Same stream reproduces.
+        let mut a3 = Rng::fold(7, 0);
+        assert_eq!(a3.next_u64(), Rng::fold(7, 0).next_u64());
+    }
+}

@@ -1,0 +1,214 @@
+//! Deterministic session-script generator.
+//!
+//! Sessions are generated ahead of execution as *scripts*: the engine
+//! replays a script by issuing the cold prefill, decoding, waiting out the
+//! tool latency, issuing the resume prefill, and so on. Scripts make every
+//! policy comparison paired — all four serving systems replay the *same*
+//! token sequence, so differences are attributable to scheduling alone.
+
+use super::spec::{TokenRange, WorkloadKind, WorkloadSpec};
+use crate::config::ModelKind;
+use crate::util::rng::Rng;
+
+/// One reasoning-action step: tool call latency, tool-output resume
+/// prefill, then a short decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionStep {
+    /// External tool latency before the resume prefill (virtual us).
+    pub tool_latency_us: u64,
+    /// Tool output length appended to the cached context.
+    pub resume_tokens: u32,
+    /// Structured-output decode length.
+    pub decode_tokens: u32,
+}
+
+/// A full agent session script.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionScript {
+    /// Distinct id (stable across policies for paired comparison).
+    pub id: u64,
+    pub kind: WorkloadKind,
+    /// System-prompt token ids (content matters for prefix caching: all
+    /// sessions of one agent template share the same system prompt).
+    pub cold_prefill_tokens: u32,
+    /// Template id: sessions with equal template share the system prompt.
+    pub template: u32,
+    /// Decode length of the first response (after cold prefill).
+    pub first_decode_tokens: u32,
+    /// Subsequent reasoning-action steps.
+    pub steps: Vec<SessionStep>,
+}
+
+impl SessionScript {
+    /// Total tokens this session will ever prefill (cold + resumes).
+    pub fn total_prefill_tokens(&self) -> u64 {
+        self.cold_prefill_tokens as u64
+            + self.steps.iter().map(|s| s.resume_tokens as u64).sum::<u64>()
+    }
+
+    /// Total tokens this session will decode.
+    pub fn total_decode_tokens(&self) -> u64 {
+        self.first_decode_tokens as u64
+            + self.steps.iter().map(|s| s.decode_tokens as u64).sum::<u64>()
+    }
+
+    /// Final context length (everything cached at session end).
+    pub fn final_context(&self) -> u64 {
+        self.total_prefill_tokens() + self.total_decode_tokens()
+    }
+
+    /// Deterministic system-prompt token ids for prefix caching (derived
+    /// from the template id, shared across sessions of the same template).
+    pub fn system_prompt_ids(&self) -> Vec<u32> {
+        let mut rng = Rng::fold(0xC0FFEE, self.template as u64);
+        (0..self.cold_prefill_tokens)
+            .map(|_| rng.range_u32(0, 49_999))
+            .collect()
+    }
+}
+
+/// Seeded generator of session scripts for one (workload, model) pair.
+#[derive(Debug)]
+pub struct WorkloadGenerator {
+    spec: WorkloadSpec,
+    rng: Rng,
+    next_id: u64,
+    /// Number of distinct agent templates (distinct system prompts).
+    pub templates: u32,
+}
+
+impl WorkloadGenerator {
+    pub fn new(kind: WorkloadKind, model: ModelKind, seed: u64) -> Self {
+        Self {
+            spec: WorkloadSpec::table1(kind, model),
+            rng: Rng::seed_from_u64(seed),
+            next_id: 0,
+            templates: 4,
+        }
+    }
+
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    /// Sample a bounded token count with Table-I-matched mean: a Beta
+    /// distribution scaled to [min, max] whose mean hits the quoted average.
+    fn sample_range(rng: &mut Rng, r: TokenRange) -> u32 {
+        if r.min == r.max {
+            return r.min;
+        }
+        let m = r.mean_frac();
+        // Concentration 4 gives a unimodal shape without pinning variance.
+        let c = 4.0;
+        let frac = rng.beta(c * m, c * (1.0 - m));
+        r.min + (frac * (r.max - r.min) as f64).round() as u32
+    }
+
+    fn sample_tool_latency_us(&mut self) -> u64 {
+        let ms = self
+            .rng
+            .range_f64(self.spec.tool_latency_ms_min, self.spec.tool_latency_ms_max);
+        (ms * 1000.0) as u64
+    }
+
+    /// Generate the next session script.
+    pub fn next_session(&mut self) -> SessionScript {
+        let id = self.next_id;
+        self.next_id += 1;
+        let template = self.rng.range_u32(0, self.templates - 1);
+        let cold = Self::sample_range(&mut self.rng, self.spec.cold);
+        let n_steps = self.rng.range_u32(self.spec.steps_min, self.spec.steps_max);
+        let first_decode = Self::sample_range(&mut self.rng, self.spec.decode);
+        let steps = (0..n_steps)
+            .map(|_| SessionStep {
+                tool_latency_us: self.sample_tool_latency_us(),
+                resume_tokens: Self::sample_range(&mut self.rng, self.spec.resume),
+                decode_tokens: Self::sample_range(&mut self.rng, self.spec.decode),
+            })
+            .collect();
+        SessionScript {
+            id,
+            kind: self.spec.kind,
+            cold_prefill_tokens: cold,
+            template,
+            first_decode_tokens: first_decode,
+            steps,
+        }
+    }
+
+    /// Generate a batch of `n` sessions.
+    pub fn sessions(&mut self, n: usize) -> Vec<SessionScript> {
+        (0..n).map(|_| self.next_session()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 42);
+        let mut b = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 42);
+        assert_eq!(a.sessions(5), b.sessions(5));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 1);
+        let mut b = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 2);
+        assert_ne!(a.sessions(5), b.sessions(5));
+    }
+
+    #[test]
+    fn sample_means_approach_table1() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::PlanAndExecute, ModelKind::Qwen7B, 9);
+        let sessions = g.sessions(400);
+        let (mut n, mut sum) = (0u64, 0u64);
+        for s in &sessions {
+            for st in &s.steps {
+                n += 1;
+                sum += st.resume_tokens as u64;
+            }
+        }
+        let mean = sum as f64 / n as f64;
+        // Table I: P&E resume avg 251; allow ±10%.
+        assert!((225.0..=277.0).contains(&mean), "resume mean {mean}");
+    }
+
+    #[test]
+    fn shared_templates_share_prompts() {
+        // Prompt ids derive from the template only, so two sessions of the
+        // same template share a prefix (lengths differ per session).
+        let mut g = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 3);
+        let sessions = g.sessions(40);
+        let mut found_pair = false;
+        for i in 0..sessions.len() {
+            for j in i + 1..sessions.len() {
+                let a = sessions[i].system_prompt_ids();
+                let b = sessions[j].system_prompt_ids();
+                let n = a.len().min(b.len());
+                if sessions[i].template == sessions[j].template {
+                    assert_eq!(a[..n], b[..n], "same template must share the prompt prefix");
+                    found_pair = true;
+                } else {
+                    assert_ne!(a[..32.min(n)], b[..32.min(n)], "templates must differ");
+                }
+            }
+        }
+        assert!(found_pair, "expected at least one same-template pair in 40 sessions");
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 5);
+        let s = g.next_session();
+        let manual: u64 = s.cold_prefill_tokens as u64
+            + s.steps.iter().map(|x| x.resume_tokens as u64).sum::<u64>();
+        assert_eq!(s.total_prefill_tokens(), manual);
+        assert_eq!(
+            s.final_context(),
+            s.total_prefill_tokens() + s.total_decode_tokens()
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Token-distribution statistics (regenerates Table I).
+
+use super::generator::SessionScript;
+
+/// min–max (avg) summary, Table I's cell format.
+#[derive(Debug, Clone, Copy)]
+pub struct DistSummary {
+    pub min: u32,
+    pub max: u32,
+    pub mean: f64,
+    pub n: u64,
+}
+
+impl DistSummary {
+    fn from_samples(samples: &[u32]) -> Self {
+        if samples.is_empty() {
+            return Self { min: 0, max: 0, mean: 0.0, n: 0 };
+        }
+        let min = *samples.iter().min().unwrap();
+        let max = *samples.iter().max().unwrap();
+        let mean = samples.iter().map(|&x| x as f64).sum::<f64>() / samples.len() as f64;
+        Self { min, max, mean, n: samples.len() as u64 }
+    }
+}
+
+impl std::fmt::Display for DistSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-{} ({:.0})", self.min, self.max, self.mean)
+    }
+}
+
+/// Per-stage token statistics over a set of sessions.
+#[derive(Debug, Clone)]
+pub struct TokenStats {
+    pub cold_prefill: DistSummary,
+    pub resume_prefill: DistSummary,
+    pub decode: DistSummary,
+}
+
+impl TokenStats {
+    pub fn from_sessions(sessions: &[SessionScript]) -> Self {
+        let cold: Vec<u32> = sessions.iter().map(|s| s.cold_prefill_tokens).collect();
+        let resume: Vec<u32> = sessions
+            .iter()
+            .flat_map(|s| s.steps.iter().map(|st| st.resume_tokens))
+            .collect();
+        let decode: Vec<u32> = sessions
+            .iter()
+            .flat_map(|s| {
+                std::iter::once(s.first_decode_tokens)
+                    .chain(s.steps.iter().map(|st| st.decode_tokens))
+            })
+            .collect();
+        Self {
+            cold_prefill: DistSummary::from_samples(&cold),
+            resume_prefill: DistSummary::from_samples(&resume),
+            decode: DistSummary::from_samples(&decode),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::workload::{WorkloadGenerator, WorkloadKind};
+
+    #[test]
+    fn stats_stay_within_table1_bounds() {
+        for kind in WorkloadKind::ALL {
+            for model in ModelKind::ALL {
+                let mut g = WorkloadGenerator::new(kind, model, 11);
+                let sessions = g.sessions(200);
+                let stats = TokenStats::from_sessions(&sessions);
+                let spec = g.spec();
+                assert!(stats.cold_prefill.min >= spec.cold.min);
+                assert!(stats.cold_prefill.max <= spec.cold.max);
+                assert!(stats.resume_prefill.min >= spec.resume.min);
+                assert!(stats.resume_prefill.max <= spec.resume.max);
+                assert!(stats.decode.min >= spec.decode.min);
+                assert!(stats.decode.max <= spec.decode.max);
+                // Means within 12% of the quoted averages.
+                let tol = |target: u32, got: f64| {
+                    (got - target as f64).abs() / target as f64 <= 0.12
+                };
+                assert!(
+                    tol(spec.resume.mean, stats.resume_prefill.mean),
+                    "{kind}/{model} resume mean {} vs {}",
+                    stats.resume_prefill.mean,
+                    spec.resume.mean
+                );
+                assert!(
+                    tol(spec.decode.mean, stats.decode.mean),
+                    "{kind}/{model} decode mean {} vs {}",
+                    stats.decode.mean,
+                    spec.decode.mean
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn display_matches_table_format() {
+        let d = DistSummary { min: 30, max: 127, mean: 56.4, n: 100 };
+        assert_eq!(d.to_string(), "30-127 (56)");
+    }
+
+    #[test]
+    fn empty_sessions_dont_panic() {
+        let stats = TokenStats::from_sessions(&[]);
+        assert_eq!(stats.cold_prefill.n, 0);
+    }
+}

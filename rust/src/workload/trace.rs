@@ -1,0 +1,184 @@
+//! Trace record/replay: serialized session scripts + arrival offsets.
+//!
+//! Traces decouple workload generation from execution: `agentserve bench`
+//! can record the exact workload it ran, and any policy can replay it for
+//! paired comparison or regression debugging. Serialization goes through
+//! the in-tree JSON ([`crate::util::json`]).
+
+use super::generator::{SessionScript, SessionStep};
+use crate::util::json::{parse, Value};
+use crate::workload::WorkloadKind;
+use std::path::Path;
+
+/// One scheduled session arrival.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual arrival time (us) of the session's cold prefill.
+    pub arrival_us: u64,
+    pub script: SessionScript,
+}
+
+/// A recorded workload: sessions with arrival times.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl SessionStep {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("tool_latency_us", self.tool_latency_us.into()),
+            ("resume_tokens", self.resume_tokens.into()),
+            ("decode_tokens", self.decode_tokens.into()),
+        ])
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            tool_latency_us: v.req_f64("tool_latency_us")? as u64,
+            resume_tokens: v.req_f64("resume_tokens")? as u32,
+            decode_tokens: v.req_f64("decode_tokens")? as u32,
+        })
+    }
+}
+
+impl SessionScript {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("id", self.id.into()),
+            (
+                "kind",
+                match self.kind {
+                    WorkloadKind::ReAct => "react".into(),
+                    WorkloadKind::PlanAndExecute => "pe".into(),
+                },
+            ),
+            ("cold_prefill_tokens", self.cold_prefill_tokens.into()),
+            ("template", self.template.into()),
+            ("first_decode_tokens", self.first_decode_tokens.into()),
+            (
+                "steps",
+                Value::Arr(self.steps.iter().map(|s| s.to_value()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let steps = v
+            .req_arr("steps")?
+            .iter()
+            .map(SessionStep::from_value)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            id: v.req_f64("id")? as u64,
+            kind: v.req_str("kind")?.parse()?,
+            cold_prefill_tokens: v.req_f64("cold_prefill_tokens")? as u32,
+            template: v.req_f64("template")? as u32,
+            first_decode_tokens: v.req_f64("first_decode_tokens")? as u32,
+            steps,
+        })
+    }
+}
+
+impl Trace {
+    /// Build a concurrency-N trace: wave-0 arrivals are staggered by
+    /// `stagger_us`; later waves chain when the engine finishes a session.
+    pub fn concurrent(scripts: Vec<SessionScript>, n_agents: usize, stagger_us: u64) -> Self {
+        let events = scripts
+            .into_iter()
+            .enumerate()
+            .map(|(i, script)| TraceEvent {
+                arrival_us: (i % n_agents) as u64 * stagger_us,
+                script,
+            })
+            .collect();
+        Self { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![(
+            "events",
+            Value::Arr(
+                self.events
+                    .iter()
+                    .map(|e| {
+                        Value::obj(vec![
+                            ("arrival_us", e.arrival_us.into()),
+                            ("script", e.script.to_value()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let events = v
+            .req_arr("events")?
+            .iter()
+            .map(|e| {
+                Ok(TraceEvent {
+                    arrival_us: e.req_f64("arrival_us")? as u64,
+                    script: SessionScript::from_value(e.req("script")?)?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self { events })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_value().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_value(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::workload::{WorkloadGenerator, WorkloadKind};
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 1);
+        let trace = Trace::concurrent(g.sessions(6), 3, 100_000);
+        let dir = std::env::temp_dir().join("agentserve_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        trace.save(&p).unwrap();
+        let back = Trace::load(&p).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn staggered_arrivals() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, 1);
+        let trace = Trace::concurrent(g.sessions(6), 3, 50_000);
+        assert_eq!(trace.events[0].arrival_us, 0);
+        assert_eq!(trace.events[1].arrival_us, 50_000);
+        assert_eq!(trace.events[2].arrival_us, 100_000);
+        assert_eq!(trace.events[3].arrival_us, 0); // second wave chains
+    }
+
+    #[test]
+    fn pe_kind_round_trips() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::PlanAndExecute, ModelKind::Qwen7B, 2);
+        let s = g.next_session();
+        let v = s.to_value();
+        let back = SessionScript::from_value(&v).unwrap();
+        assert_eq!(back, s);
+    }
+}

@@ -1,0 +1,307 @@
+//! Property-based tests over randomized inputs (in-tree RNG; proptest is
+//! unavailable offline). Each property runs hundreds of randomized cases
+//! with seeds printed on failure for reproduction.
+
+use agentserve::config::SchedulerConfig;
+use agentserve::coordinator::TpotScheduler;
+use agentserve::greenctx::GreenContextPool;
+use agentserve::kvcache::{BlockAllocator, RadixPrefixCache};
+use agentserve::metrics::percentile;
+use agentserve::util::json::{parse, Value};
+use agentserve::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// KV allocator: invariants hold under arbitrary operation sequences.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_invariants_under_random_ops() {
+    for seed in 0..50 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let blocks = 16 + (rng.next_u64() % 64) as usize;
+        let mut alloc = BlockAllocator::new(blocks, 16);
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..400 {
+            match rng.next_u64() % 3 {
+                0 => {
+                    let n = 1 + (rng.next_u64() % 4) as usize;
+                    if let Ok(bs) = alloc.allocate(n) {
+                        live.extend(bs);
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let i = (rng.next_u64() % live.len() as u64) as usize;
+                    let b = live.swap_remove(i);
+                    alloc.release(b).unwrap();
+                }
+                2 if !live.is_empty() => {
+                    let i = (rng.next_u64() % live.len() as u64) as usize;
+                    let b = live[i];
+                    alloc.retain(b).unwrap();
+                    live.push(b);
+                }
+                _ => {}
+            }
+            alloc.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+        // Drain: everything must return to the free list.
+        for b in live {
+            alloc.release(b).unwrap();
+        }
+        assert_eq!(alloc.used_blocks(), 0, "seed {seed}: leak");
+        alloc.check_invariants().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Radix cache: lookups agree with a naive longest-common-prefix model.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_radix_matches_naive_prefix_model() {
+    for seed in 0..30 {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let bs = 8usize;
+        let mut alloc = BlockAllocator::new(4096, bs);
+        let mut radix = RadixPrefixCache::new();
+        // Naive model: the set of inserted token sequences.
+        let mut inserted: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..20 {
+            // Random sequence, sometimes sharing a prefix with a previous one.
+            let toks: Vec<u32> = if !inserted.is_empty() && rng.f64() < 0.5 {
+                let base = &inserted[(rng.next_u64() % inserted.len() as u64) as usize];
+                let keep_blocks = (rng.next_u64() % (base.len() / bs + 1) as u64) as usize;
+                let mut t = base[..keep_blocks * bs].to_vec();
+                let extra = bs * (1 + (rng.next_u64() % 3) as usize);
+                t.extend((0..extra).map(|_| rng.range_u32(0, 30)));
+                t
+            } else {
+                let len = bs * (1 + (rng.next_u64() % 5) as usize);
+                (0..len).map(|_| rng.range_u32(0, 30)).collect()
+            };
+            let blocks = alloc.allocate_for_tokens(toks.len()).unwrap();
+            radix.insert(&toks, &blocks, &mut alloc);
+            inserted.push(toks);
+
+            // Query a random sequence; expected hit = longest block-aligned
+            // common prefix with any inserted sequence.
+            let q: Vec<u32> = {
+                let base = &inserted[(rng.next_u64() % inserted.len() as u64) as usize];
+                let mut t = base.clone();
+                if rng.f64() < 0.5 && !t.is_empty() {
+                    let cut = (rng.next_u64() % t.len() as u64) as usize;
+                    t.truncate(cut.max(1));
+                }
+                if rng.f64() < 0.3 {
+                    let l = t.len();
+                    if l > 0 {
+                        t[l - 1] = 99; // diverge at tail
+                    }
+                }
+                t
+            };
+            let expected = inserted
+                .iter()
+                .map(|s| {
+                    let mut m = 0;
+                    while m + bs <= q.len().min(s.len()) && q[m..m + bs] == s[m..m + bs] {
+                        m += bs;
+                    }
+                    m
+                })
+                .max()
+                .unwrap_or(0);
+            let (hit, leased) = radix.lookup(&q, &mut alloc);
+            assert_eq!(hit, expected, "seed {seed}: query {q:?}");
+            for b in leased {
+                alloc.release(b).unwrap();
+            }
+        }
+        alloc.check_invariants().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: control variables always within configured bounds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_bounds_hold_for_any_signal() {
+    for seed in 0..40 {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let cfg = SchedulerConfig {
+            theta_low_ms: 5.0 + rng.f64() * 20.0,
+            theta_high_ms: 30.0 + rng.f64() * 50.0,
+            delta_r: 1 + (rng.next_u64() % 16) as u32,
+            delta_b: 1 + (rng.next_u64() % 64) as u32,
+            interval_ms: 50.0,
+            b_min: 8,
+            b_max: 512,
+            b_init: 128,
+            r_base: 4,
+            r_init: 16,
+        };
+        let total_sms = 32 + (rng.next_u64() % 96) as u32;
+        let mut s = TpotScheduler::new(cfg.clone(), total_sms);
+        for t in 0..500u64 {
+            // Arbitrary (possibly wild) TPOT signals.
+            for _ in 0..(rng.next_u64() % 4) {
+                s.record_decode_step(rng.f64() * 300_000.0);
+            }
+            s.tick(t * 50_000);
+            assert!(s.b_prefill() >= cfg.b_min && s.b_prefill() <= cfg.b_max, "seed {seed}");
+            assert!(s.r_min() >= cfg.r_base && s.r_min() <= total_sms, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Green contexts: selection is the true minimum feasible slot.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_greenctx_selects_min_feasible_slot() {
+    for seed in 0..30 {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let sms = 16 + (rng.next_u64() % 240) as u32;
+        let slots = 2 + (rng.next_u64() % 18) as usize;
+        if sms < slots as u32 {
+            continue;
+        }
+        let pool = GreenContextPool::new(sms, slots, 50.0);
+        for _ in 0..100 {
+            let target = 1 + (rng.next_u64() % (sms as u64 * 2)) as u32;
+            let part = pool.partition_for_decode_sms(target);
+            // Brute-force the minimal feasible slot.
+            let expected = pool
+                .slot_sizes()
+                .iter()
+                .copied()
+                .filter(|&s| s >= target)
+                .min()
+                .unwrap_or(*pool.slot_sizes().last().unwrap());
+            assert_eq!(part.decode_sms, expected, "seed {seed} target {target}");
+            assert_eq!(part.decode_sms + part.prefill_sms, sms);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Percentiles: agree with a naive definition and are monotone in q.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_percentile_monotone_and_bounded() {
+    for seed in 0..50 {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let n = 1 + (rng.next_u64() % 200) as usize;
+        let samples: Vec<f64> = (0..n).map(|_| rng.f64() * 1000.0).collect();
+        let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut prev = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let v = percentile(&samples, q);
+            assert!(v >= prev - 1e-12, "seed {seed}: must be monotone in q");
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12, "seed {seed}: bounded");
+            prev = v;
+        }
+        assert_eq!(percentile(&samples, 0.0), lo);
+        assert_eq!(percentile(&samples, 100.0), hi);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON: random value trees round-trip through emit + parse.
+// ---------------------------------------------------------------------------
+
+fn random_value(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.next_u64() % 4 } else { rng.next_u64() % 6 } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.f64() < 0.5),
+        2 => Value::Num((rng.f64() * 2e6).round() - 1e6),
+        3 => {
+            let len = (rng.next_u64() % 12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.range_u32(0, 5);
+                    match c {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'é',
+                        4 => '😀',
+                        _ => 'a',
+                    }
+                })
+                .collect();
+            Value::Str(s)
+        }
+        4 => {
+            let len = (rng.next_u64() % 5) as usize;
+            Value::Arr((0..len).map(|_| random_value(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = (rng.next_u64() % 5) as usize;
+            Value::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trips() {
+    for seed in 0..200 {
+        let mut rng = Rng::seed_from_u64(5000 + seed);
+        let v = random_value(&mut rng, 3);
+        let compact = v.to_string();
+        let pretty = v.to_string_pretty();
+        assert_eq!(parse(&compact).unwrap(), v, "seed {seed} compact");
+        assert_eq!(parse(&pretty).unwrap(), v, "seed {seed} pretty");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulation: conservation laws hold for random workloads and policies.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_conserves_tokens_across_policies() {
+    use agentserve::config::{Config, GpuKind, ModelKind};
+    use agentserve::engine::{run_sim, Policy, SimParams};
+    use agentserve::workload::{WorkloadGenerator, WorkloadKind};
+
+    for seed in 0..8 {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let model = ModelKind::ALL[(rng.next_u64() % 3) as usize];
+        let gpu = [GpuKind::A5000, GpuKind::Rtx5090][(rng.next_u64() % 2) as usize];
+        let wk = [WorkloadKind::ReAct, WorkloadKind::PlanAndExecute][(rng.next_u64() % 2) as usize];
+        let n = 3 + (rng.next_u64() % 4) as usize;
+        let cfg = Config::preset(model, gpu);
+        let params = SimParams {
+            n_agents: n,
+            sessions_per_agent: 1,
+            workload: wk,
+            seed: seed * 7 + 1,
+            ..SimParams::default()
+        };
+        // Expected totals from the scripts themselves.
+        let mut gen = WorkloadGenerator::new(wk, model, params.seed);
+        let scripts = gen.sessions(n);
+        let expected_decode: u64 = scripts.iter().map(|s| s.total_decode_tokens()).sum();
+        for policy in Policy::paper_lineup() {
+            let out = run_sim(&cfg, policy, &params);
+            assert_eq!(
+                out.report.total_tokens, expected_decode,
+                "seed {seed} {model}/{gpu}/{wk}/{policy:?}"
+            );
+            assert_eq!(out.report.completed_sessions, n);
+            // TTFT count = one per request = 1 cold + steps resumes.
+            let expected_requests: u64 =
+                scripts.iter().map(|s| 1 + s.steps.len() as u64).sum();
+            assert_eq!(out.report.ttft.n, expected_requests);
+        }
+    }
+}
