@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point (documented in ROADMAP.md).
+#
+#   ./ci/check.sh            # fmt check (if rustfmt exists) + build + tests
+#                            #   + scenario smoke
+#
+# Every PR must leave this green. The golden-report snapshot
+# (rust/tests/data/golden_report.json) is blessed on the first-ever run and
+# compared exactly afterwards; see rust/tests/scenarios.rs for the
+# regeneration protocol after intentional scheduling/cost-model changes.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() {
+    echo ""
+    echo "=== $1 ==="
+}
+
+step "Format check (advisory)"
+if cargo fmt --version >/dev/null 2>&1; then
+    # Advisory: reports drift without failing the gate (the seed predates
+    # rustfmt enforcement; tighten to a hard failure once the tree is clean).
+    cargo fmt --all -- --check || echo "rustfmt drift detected (advisory only)"
+else
+    echo "rustfmt not installed; skipping"
+fi
+
+step "Release build"
+cargo build --release
+
+step "Test suite"
+snap="rust/tests/data/golden_report.json"
+had_snap=0
+[ -f "$snap" ] && had_snap=1
+cargo test -q
+if [ "$had_snap" -eq 0 ] && [ -f "$snap" ]; then
+    echo "NOTE: $snap was blessed by this run — commit it to arm the golden gate."
+fi
+
+step "Scenario smoke (paper-fig5 under the default policy)"
+cargo run --release --bin agentserve -- scenario run --name paper-fig5 --model 3b
+
+step "Scenario record/replay smoke"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+cargo run --release --bin agentserve -- \
+    scenario record --name burst-storm --model 3b --out "$tmp/burst.jsonl"
+cargo run --release --bin agentserve -- \
+    scenario replay --trace "$tmp/burst.jsonl" --model 3b --verify
+
+echo ""
+echo "ci/check.sh: all green"

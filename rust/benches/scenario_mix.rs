@@ -1,0 +1,42 @@
+//! Scenario-mix benchmark: every built-in scenario under the full policy
+//! lineup. Prints headline metrics per (scenario, policy) cell and times the
+//! scenario engine itself (instantiation + simulation), so scheduling PRs
+//! see both metric movement and wall-clock cost across traffic shapes.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_scenario, Policy};
+use agentserve::util::bench::Bench;
+use agentserve::workload::Scenario;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+    println!("== scenario mix: {} / {} ==", cfg.model.kind, cfg.gpu.kind);
+    println!(
+        "{:<16} {:<11} {:>9} {:>9} {:>9} {:>7}",
+        "scenario", "policy", "TTFT p95", "TPOT p95", "tok/s", "SLO"
+    );
+    for scenario in Scenario::registry() {
+        for policy in Policy::paper_lineup() {
+            let out = run_scenario(&cfg, policy, &scenario, 7);
+            println!(
+                "{:<16} {:<11} {:>7.0}ms {:>7.1}ms {:>9.1} {:>6.1}%",
+                scenario.name,
+                out.policy_name,
+                out.report.ttft.p95,
+                out.report.tpot.p95,
+                out.report.throughput_tok_s,
+                out.slo.rate() * 100.0
+            );
+        }
+    }
+
+    let b = Bench::new("scenario_mix").with_iters(1, 5);
+    for scenario in Scenario::registry() {
+        b.case(&format!("sim_{}", scenario.name), || {
+            run_scenario(&cfg, Policy::AgentServe(Default::default()), &scenario, 7)
+                .report
+                .total_tokens
+        });
+    }
+    Ok(())
+}

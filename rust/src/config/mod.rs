@@ -166,6 +166,16 @@ impl Config {
         let model: ModelKind = v.get("model").and_then(|m| m.as_str()).unwrap_or("qwen3b").parse()?;
         let gpu: GpuKind = v.get("gpu").and_then(|g| g.as_str()).unwrap_or("a5000").parse()?;
         let mut cfg = Self::preset(model, gpu);
+        cfg.apply_overrides(v);
+        Ok(cfg)
+    }
+
+    /// Apply sparse scheduler/slo/engine overrides from a JSON value onto an
+    /// existing config. Scenario files embed these (under a `"config"` key)
+    /// without re-selecting the model/gpu preset; `from_value` delegates
+    /// here after preset selection. Call [`Config::validate`] afterwards.
+    pub fn apply_overrides(&mut self, v: &Value) {
+        let cfg = self;
         if let Some(s) = v.get("scheduler") {
             let c = &mut cfg.scheduler;
             override_f64(s, "theta_low_ms", &mut c.theta_low_ms);
@@ -196,7 +206,6 @@ impl Config {
             override_usize(e, "green_slots", &mut c.green_slots);
             override_f64(e, "stream_alloc_us", &mut c.stream_alloc_us);
         }
-        Ok(cfg)
     }
 
     /// Validate cross-field invariants.
@@ -279,6 +288,17 @@ mod tests {
         cfg.scheduler.theta_low_ms = 100.0;
         cfg.scheduler.theta_high_ms = 10.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn apply_overrides_is_sparse() {
+        let mut cfg = Config::default();
+        let before_slots = cfg.engine.green_slots;
+        let v = crate::util::json::parse(r#"{"engine": {"chunk_size": 99}}"#).unwrap();
+        cfg.apply_overrides(&v);
+        assert_eq!(cfg.engine.chunk_size, 99);
+        assert_eq!(cfg.engine.green_slots, before_slots, "untouched fields survive");
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -18,4 +18,7 @@ pub mod real;
 pub mod sim;
 
 pub use policy::{AgentServeOpts, Policy, SglangOpts};
-pub use sim::{run_sim, SimOutcome, SimParams};
+pub use sim::{
+    record_scenario_trace, run_scenario, run_scenario_recorded, run_sim, run_sim_trace,
+    run_sim_trace_recorded, ExecEvent, ExecEventKind, ExecTrace, SimOutcome, SimParams,
+};

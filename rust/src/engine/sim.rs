@@ -30,9 +30,11 @@ use crate::coordinator::{
 use crate::gpusim::CostModel;
 use crate::greenctx::{GreenContextPool, RebindStats};
 use crate::metrics::{MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample};
-use crate::workload::{SessionScript, WorkloadGenerator, WorkloadKind};
+use crate::util::json::Value;
+use crate::workload::{Scenario, SessionScript, Trace, WorkloadGenerator, WorkloadKind};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::path::Path;
 
 /// Simulation workload parameters.
 #[derive(Debug, Clone)]
@@ -62,6 +64,123 @@ impl Default for SimParams {
     }
 }
 
+/// How session arrivals are injected into the event loop.
+#[derive(Debug, Clone)]
+enum ArrivalPlan {
+    /// Wave-0 arrivals staggered across `n_agents` slots; each agent chains
+    /// its next session `think_time_us` after the previous completes (the
+    /// original `SimParams` closed-loop behavior).
+    Closed { n_agents: usize, stagger_us: u64, think_time_us: u64 },
+    /// One explicit arrival timestamp per session; no chaining (open-loop
+    /// scenarios and trace replay).
+    Explicit(Vec<u64>),
+}
+
+/// One execution-layer event (opt-in recording; see [`ExecTrace`]).
+#[derive(Debug, Clone)]
+pub struct ExecEvent {
+    /// Virtual timestamp (us).
+    pub t_us: u64,
+    pub kind: ExecEventKind,
+}
+
+/// What happened.
+#[derive(Debug, Clone)]
+pub enum ExecEventKind {
+    /// A request (cold or resume prefill) arrived for `session`.
+    Arrival { session: u64, kind: &'static str },
+    /// Where the request manager routed it.
+    Classified { session: u64, queue: &'static str },
+    /// Algorithm-1 control decision at a tick.
+    Control { b_prefill: u32, r_min: u32 },
+    /// Green-Context slot rebind charged by the tick.
+    Rebind { decode_sms: u32, cost_us: f64 },
+    /// First token of a decode burst (closes a TTFT).
+    FirstToken { session: u64 },
+    /// Subsequent token emission.
+    Token { session: u64 },
+    /// Session finished its last burst.
+    SessionDone { session: u64 },
+}
+
+impl ExecEvent {
+    fn to_value(&self) -> Value {
+        match self.kind {
+            ExecEventKind::Arrival { session, kind } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "arrival".into()),
+                ("session", session.into()),
+                ("kind", kind.into()),
+            ]),
+            ExecEventKind::Classified { session, queue } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "classified".into()),
+                ("session", session.into()),
+                ("queue", queue.into()),
+            ]),
+            ExecEventKind::Control { b_prefill, r_min } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "control".into()),
+                ("b_prefill", b_prefill.into()),
+                ("r_min", r_min.into()),
+            ]),
+            ExecEventKind::Rebind { decode_sms, cost_us } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "rebind".into()),
+                ("decode_sms", decode_sms.into()),
+                ("cost_us", cost_us.into()),
+            ]),
+            ExecEventKind::FirstToken { session } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "first_token".into()),
+                ("session", session.into()),
+            ]),
+            ExecEventKind::Token { session } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "token".into()),
+                ("session", session.into()),
+            ]),
+            ExecEventKind::SessionDone { session } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "session_done".into()),
+                ("session", session.into()),
+            ]),
+        }
+    }
+}
+
+/// Execution-event log of one run: arrivals, classifications, control
+/// decisions, slot rebinds, and per-token emissions. Serializes to JSONL
+/// (one event object per line) for offline analysis and debugging.
+#[derive(Debug, Clone, Default)]
+pub struct ExecTrace {
+    pub events: Vec<ExecEvent>,
+}
+
+impl ExecTrace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_value().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_jsonl())?;
+        Ok(())
+    }
+}
+
 /// Results of one simulated run.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
@@ -82,6 +201,11 @@ pub struct SimOutcome {
     pub kv_peak_tokens: u64,
     /// Scheduler decisions (tick time us, b_prefill, r_min).
     pub control_trace: Vec<(u64, u32, u32)>,
+    /// Realized cold-prefill arrival timestamp per session (us). For
+    /// closed-loop plans, waves > 0 arrive when their agent chains; pairing
+    /// these with the session scripts yields a replayable open-loop trace
+    /// (`agentserve scenario record`).
+    pub arrivals_us: Vec<u64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -187,8 +311,13 @@ struct Sim {
     cfg: Config,
     cost: CostModel,
     sessions: Vec<SimSession>,
-    n_agents: usize,
-    think_time_us: u64,
+    /// Closed-loop chaining: (agent-slot stride, think time). `None` for
+    /// explicit arrival plans (open-loop scenarios, trace replay).
+    chain: Option<(usize, u64)>,
+    /// Realized cold-arrival timestamp per session.
+    arrival_times: Vec<u64>,
+    /// Optional execution-event log (None costs nothing on the hot path).
+    log: Option<Vec<ExecEvent>>,
     heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
     seq: u64,
     now: u64,
@@ -215,6 +344,12 @@ impl Sim {
     fn push(&mut self, t: u64, ev: Ev) {
         self.seq += 1;
         self.heap.push(Reverse((t, self.seq, ev)));
+    }
+
+    fn log_event(&mut self, kind: ExecEventKind) {
+        if let Some(log) = &mut self.log {
+            log.push(ExecEvent { t_us: self.now, kind });
+        }
     }
 
     fn decode_share(&self) -> f64 {
@@ -271,18 +406,39 @@ impl Sim {
                 self.now,
             )
         };
+        let is_cold = job.kind == JobKind::ColdPrefill;
+        if is_cold {
+            self.arrival_times[sess] = self.now;
+        }
         self.sessions[sess].phase = SessPhase::WaitingPrefill;
         self.metrics.request_arrival(sess as u64, self.now);
-        match &mut self.state {
+        self.log_event(ExecEventKind::Arrival {
+            session: sess as u64,
+            kind: if is_cold { "cold" } else { "resume" },
+        });
+        let routed = match &mut self.state {
             PState::AgentServe { queues, sched, manager, .. } => {
                 match manager.classify(&job, sched.b_prefill()) {
-                    Classification::ColdQueue => queues.push_cold(job, self.now),
-                    Classification::DecodeQueue => queues.push_resume(job, self.now),
+                    Classification::ColdQueue => {
+                        queues.push_cold(job, self.now);
+                        "cold_queue"
+                    }
+                    Classification::DecodeQueue => {
+                        queues.push_resume(job, self.now);
+                        "decode_queue"
+                    }
                 }
             }
-            PState::Sglang { fifo, .. } => fifo.push_back(job),
-            PState::IterBatch { fifo, .. } => fifo.push_back((sess, job.tokens, job.kind)),
-        }
+            PState::Sglang { fifo, .. } => {
+                fifo.push_back(job);
+                "prefill_fifo"
+            }
+            PState::IterBatch { fifo, .. } => {
+                fifo.push_back((sess, job.tokens, job.kind));
+                "iteration_fifo"
+            }
+        };
+        self.log_event(ExecEventKind::Classified { session: sess as u64, queue: routed });
     }
 
     /// Account completed prefill tokens (work-mix, metrics, KV, context).
@@ -310,6 +466,7 @@ impl Sim {
         s.decode_remaining = burst.saturating_sub(1);
         s.ctx_tokens += 1;
         self.metrics.first_token(sess as u64, self.now);
+        self.log_event(ExecEventKind::FirstToken { session: sess as u64 });
         self.kv_add(1);
         if self.sessions[sess].decode_remaining == 0 {
             self.decode_burst_finished(sess);
@@ -335,10 +492,13 @@ impl Sim {
             self.metrics.session_complete(sess as u64, self.now);
             self.done_count += 1;
             self.kv_free(self.sessions[sess].ctx_tokens as u64);
-            // Chain the agent's next session.
-            let next = sess + self.n_agents;
-            if next < self.sessions.len() {
-                self.push(self.now + self.think_time_us, Ev::Arrive(next));
+            self.log_event(ExecEventKind::SessionDone { session: sess as u64 });
+            // Chain the agent's next session (closed-loop plans only).
+            if let Some((stride, think_us)) = self.chain {
+                let next = sess + stride;
+                if next < self.sessions.len() {
+                    self.push(self.now + think_us, Ev::Arrive(next));
+                }
             }
         }
     }
@@ -372,6 +532,7 @@ impl Sim {
     fn apply_decode_step(&mut self, ids: &[u64]) {
         for &id in ids {
             self.metrics.token_emitted(id, self.now);
+            self.log_event(ExecEventKind::Token { session: id });
             self.kv_add(1);
         }
         let finished = self.batcher_mut().complete_step(ids);
@@ -735,24 +896,35 @@ impl Sim {
     // -- control ticks -----------------------------------------------------------
 
     fn handle_tick(&mut self) {
-        let interval = match &mut self.state {
+        let (interval, decision, rebind) = match &mut self.state {
             PState::AgentServe { opts, queues, sched, pool, pending_rebind_us, .. } => {
                 if !opts.adaptive {
                     return;
                 }
                 let d = sched.tick(self.now);
                 queues.reroute_over_budget(d.b_prefill);
+                let mut rebind = None;
                 if opts.green_contexts {
-                    let (_, cost) = pool.rebind(d.r_min);
+                    let (part, cost) = pool.rebind(d.r_min);
                     if cost > 0.0 {
                         *pending_rebind_us += cost;
+                        rebind = Some((part.decode_sms, cost));
                     }
                 }
                 self.control_trace.push((self.now, d.b_prefill, d.r_min));
-                sched.interval_us()
+                (sched.interval_us(), (d.b_prefill, d.r_min), rebind)
             }
             _ => return,
         };
+        if self.log.is_some() {
+            self.log_event(ExecEventKind::Control {
+                b_prefill: decision.0,
+                r_min: decision.1,
+            });
+            if let Some((decode_sms, cost_us)) = rebind {
+                self.log_event(ExecEventKind::Rebind { decode_sms, cost_us });
+            }
+        }
         if self.done_count < self.sessions.len() {
             self.push(self.now + interval, Ev::Tick);
         }
@@ -793,13 +965,114 @@ pub fn run_sim(cfg: &Config, policy: Policy, params: &SimParams) -> SimOutcome {
     run_sim_scripts(cfg, policy, params, scripts)
 }
 
-/// Run with externally supplied scripts (trace replay / tests).
+/// Run with externally supplied scripts under the closed-loop plan
+/// described by `params` (stagger + completion-chained waves).
 pub fn run_sim_scripts(
     cfg: &Config,
     policy: Policy,
     params: &SimParams,
     scripts: Vec<SessionScript>,
 ) -> SimOutcome {
+    let plan = ArrivalPlan::Closed {
+        n_agents: params.n_agents.max(1),
+        stagger_us: params.stagger_us,
+        think_time_us: params.think_time_us,
+    };
+    run_sim_inner(cfg, policy, scripts, plan, false).0
+}
+
+/// Scripts + explicit arrival plan from a recorded trace.
+fn trace_inputs(trace: &Trace) -> (Vec<SessionScript>, ArrivalPlan) {
+    let (scripts, arrivals): (Vec<_>, Vec<_>) = trace
+        .events
+        .iter()
+        .map(|e| (e.script.clone(), e.arrival_us))
+        .unzip();
+    (scripts, ArrivalPlan::Explicit(arrivals))
+}
+
+/// Scripts + scenario-appropriate arrival plan (closed-loop chaining vs
+/// explicit open-loop arrivals) from one instantiation.
+fn scenario_inputs(
+    cfg: &Config,
+    scenario: &Scenario,
+    seed: u64,
+) -> (Vec<SessionScript>, ArrivalPlan) {
+    let wl = scenario.instantiate(cfg.model.kind, seed);
+    let plan = match scenario.closed_loop() {
+        Some((stagger_us, think_time_us)) => ArrivalPlan::Closed {
+            n_agents: scenario.n_agents.max(1),
+            stagger_us,
+            think_time_us,
+        },
+        None => ArrivalPlan::Explicit(wl.trace.events.iter().map(|e| e.arrival_us).collect()),
+    };
+    let scripts = wl.trace.events.into_iter().map(|e| e.script).collect();
+    (scripts, plan)
+}
+
+/// Replay a recorded workload trace: every session arrives at its recorded
+/// timestamp, with no closed-loop chaining. Identical inputs under every
+/// policy — the paired-comparison substrate of the scenario engine.
+pub fn run_sim_trace(cfg: &Config, policy: Policy, trace: &Trace) -> SimOutcome {
+    let (scripts, plan) = trace_inputs(trace);
+    run_sim_inner(cfg, policy, scripts, plan, false).0
+}
+
+/// [`run_sim_trace`] with the execution-event log captured.
+pub fn run_sim_trace_recorded(
+    cfg: &Config,
+    policy: Policy,
+    trace: &Trace,
+) -> (SimOutcome, ExecTrace) {
+    let (scripts, plan) = trace_inputs(trace);
+    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, true);
+    (out, log.unwrap_or_default())
+}
+
+/// Run one scenario end-to-end: instantiate its workload for
+/// `(cfg.model, seed)` and drive it with scenario-appropriate arrival
+/// semantics (closed-loop chaining vs explicit open-loop arrivals).
+pub fn run_scenario(cfg: &Config, policy: Policy, scenario: &Scenario, seed: u64) -> SimOutcome {
+    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    run_sim_inner(cfg, policy, scripts, plan, false).0
+}
+
+/// [`run_scenario`] with the execution-event log captured.
+pub fn run_scenario_recorded(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    seed: u64,
+) -> (SimOutcome, ExecTrace) {
+    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, true);
+    (out, log.unwrap_or_default())
+}
+
+/// Run a scenario and return the replayable workload trace: each script
+/// paired with its *realized* arrival timestamp, so closed-loop waves
+/// replay at the times they actually entered the system. This is what
+/// `agentserve scenario record` persists.
+pub fn record_scenario_trace(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    seed: u64,
+) -> (SimOutcome, Trace) {
+    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    let (out, _) = run_sim_inner(cfg, policy, scripts.clone(), plan, false);
+    let trace = Trace::with_arrivals(scripts, &out.arrivals_us);
+    (out, trace)
+}
+
+fn run_sim_inner(
+    cfg: &Config,
+    policy: Policy,
+    scripts: Vec<SessionScript>,
+    plan: ArrivalPlan,
+    record_events: bool,
+) -> (SimOutcome, Option<ExecTrace>) {
     let cost = CostModel::new(&cfg.model, &cfg.gpu);
     let max_batch = cfg.engine.max_decode_batch;
     let state = match policy {
@@ -858,11 +1131,24 @@ pub fn run_sim_scripts(
         })
         .collect();
 
+    if let ArrivalPlan::Explicit(times) = &plan {
+        assert_eq!(
+            times.len(),
+            sessions.len(),
+            "explicit arrival plan must cover every session"
+        );
+    }
+    let n_sessions = sessions.len();
+    let chain = match &plan {
+        ArrivalPlan::Closed { n_agents, think_time_us, .. } => Some((*n_agents, *think_time_us)),
+        ArrivalPlan::Explicit(_) => None,
+    };
     let mut sim = Sim {
         cost,
         sessions,
-        n_agents: params.n_agents,
-        think_time_us: params.think_time_us,
+        chain,
+        arrival_times: vec![0; n_sessions],
+        log: if record_events { Some(Vec::new()) } else { None },
         heap: BinaryHeap::new(),
         seq: 0,
         now: 0,
@@ -880,9 +1166,19 @@ pub fn run_sim_scripts(
         cfg: cfg.clone(),
     };
 
-    // Wave-0 arrivals, staggered.
-    for a in 0..params.n_agents.min(sim.sessions.len()) {
-        sim.push(a as u64 * params.stagger_us, Ev::Arrive(a));
+    match &plan {
+        // Wave-0 arrivals, staggered; later waves chain on completion.
+        ArrivalPlan::Closed { n_agents, stagger_us, .. } => {
+            for a in 0..(*n_agents).min(sim.sessions.len()) {
+                sim.push(a as u64 * stagger_us, Ev::Arrive(a));
+            }
+        }
+        // Every session arrives at its planned timestamp.
+        ArrivalPlan::Explicit(times) => {
+            for (s, &t) in times.iter().enumerate() {
+                sim.push(t, Ev::Arrive(s));
+            }
+        }
     }
     // Control ticks for adaptive AgentServe.
     if let Policy::AgentServe(opts) = policy {
@@ -907,7 +1203,8 @@ pub fn run_sim_scripts(
         ),
         _ => (RebindStats::default(), 0, 0, 0),
     };
-    SimOutcome {
+    let exec = sim.log.take().map(|events| ExecTrace { events });
+    let outcome = SimOutcome {
         policy_name: policy.name().to_string(),
         report,
         slo,
@@ -923,7 +1220,9 @@ pub fn run_sim_scripts(
         resume_rerouted,
         kv_peak_tokens: sim.kv_peak,
         control_trace: sim.control_trace,
-    }
+        arrivals_us: sim.arrival_times,
+    };
+    (outcome, exec)
 }
 
 #[cfg(test)]
@@ -1028,5 +1327,77 @@ mod tests {
         let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &small_params());
         // 3 sessions × ~3k cold prefill each → peak well above 3k tokens.
         assert!(out.kv_peak_tokens > 3000, "peak={}", out.kv_peak_tokens);
+    }
+
+    #[test]
+    fn explicit_trace_replay_honors_arrivals() {
+        let cfg = cfg();
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, cfg.model.kind, 3);
+        let trace = Trace::concurrent(gen.sessions(4), 4, 250_000);
+        let out = run_sim_trace(&cfg, Policy::Vllm, &trace);
+        assert_eq!(out.report.completed_sessions, 4);
+        assert_eq!(out.report.total_tokens, trace.total_decode_tokens());
+        // Realized arrivals are exactly the planned ones (no chaining).
+        let planned: Vec<u64> = trace.events.iter().map(|e| e.arrival_us).collect();
+        assert_eq!(out.arrivals_us, planned);
+    }
+
+    #[test]
+    fn closed_loop_records_chained_arrivals() {
+        let cfg = cfg();
+        let p = SimParams { n_agents: 2, sessions_per_agent: 2, ..SimParams::default() };
+        let out = run_sim(&cfg, Policy::LlamaCpp, &p);
+        assert_eq!(out.arrivals_us.len(), 4);
+        assert_eq!(out.arrivals_us[0], 0);
+        assert_eq!(out.arrivals_us[1], p.stagger_us);
+        // Wave-1 sessions arrive only after their agent's wave-0 completes.
+        assert!(out.arrivals_us[2] > p.stagger_us, "arrivals={:?}", out.arrivals_us);
+        assert!(out.arrivals_us[3] > p.stagger_us);
+    }
+
+    #[test]
+    fn event_log_captures_lifecycle() {
+        let cfg = cfg();
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, cfg.model.kind, 5);
+        let trace = Trace::concurrent(gen.sessions(3), 3, 100_000);
+        let (out, exec) =
+            run_sim_trace_recorded(&cfg, Policy::AgentServe(AgentServeOpts::default()), &trace);
+        assert_eq!(out.report.completed_sessions, 3);
+        let count = |f: &dyn Fn(&ExecEventKind) -> bool| {
+            exec.events.iter().filter(|e| f(&e.kind)).count() as u64
+        };
+        let arrivals = count(&|k| matches!(k, ExecEventKind::Arrival { .. }));
+        let classified = count(&|k| matches!(k, ExecEventKind::Classified { .. }));
+        let first = count(&|k| matches!(k, ExecEventKind::FirstToken { .. }));
+        let tokens = count(&|k| matches!(k, ExecEventKind::Token { .. }));
+        let done = count(&|k| matches!(k, ExecEventKind::SessionDone { .. }));
+        assert_eq!(arrivals, out.report.ttft.n, "one arrival per request");
+        assert_eq!(classified, arrivals);
+        assert_eq!(first + tokens, out.report.total_tokens);
+        assert_eq!(done, 3);
+        // Timestamps are non-decreasing and the JSONL form has one event/line.
+        for w in exec.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us);
+        }
+        assert_eq!(exec.to_jsonl().lines().count(), exec.len());
+        // The un-recorded path emits no log and the same outcome.
+        let plain = run_sim_trace(&cfg, Policy::AgentServe(AgentServeOpts::default()), &trace);
+        assert_eq!(plain.report.total_tokens, out.report.total_tokens);
+        assert_eq!(plain.report.wall_ms, out.report.wall_ms);
+    }
+
+    #[test]
+    fn scenario_runner_closed_and_open() {
+        let cfg = cfg();
+        for name in ["paper-fig5", "mixed-fleet"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let out = run_scenario(&cfg, Policy::AgentServe(AgentServeOpts::default()), &sc, 7);
+            assert_eq!(
+                out.report.completed_sessions, sc.total_sessions,
+                "{name} must complete"
+            );
+            let wl = sc.instantiate(cfg.model.kind, 7);
+            assert_eq!(out.report.total_tokens, wl.trace.total_decode_tokens(), "{name}");
+        }
     }
 }

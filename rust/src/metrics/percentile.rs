@@ -1,5 +1,7 @@
 //! Percentile helpers and distribution summaries.
 
+use crate::util::json::Value;
+
 
 /// Linear-interpolation percentile of an unsorted sample set.
 ///
@@ -51,6 +53,19 @@ impl Summary {
             min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
             max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
         }
+    }
+
+    /// Deterministic JSON form (report snapshots).
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("n", self.n.into()),
+            ("mean", self.mean.into()),
+            ("p50", self.p50.into()),
+            ("p95", self.p95.into()),
+            ("p99", self.p99.into()),
+            ("min", self.min.into()),
+            ("max", self.max.into()),
+        ])
     }
 }
 

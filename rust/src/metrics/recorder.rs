@@ -9,7 +9,8 @@
 //! inter-token gaps are still kept as the Fig.-2 timeline.
 
 use super::percentile::Summary;
-use std::collections::HashMap;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
 
 /// One emitted-token latency sample (for timelines).
 #[derive(Debug, Clone, Copy)]
@@ -59,9 +60,14 @@ impl SessionMetrics {
 }
 
 /// Run-wide metrics recorder.
+///
+/// Sessions live in a `BTreeMap` so aggregation order is deterministic:
+/// float sums (e.g. `Summary::mean`) are order-dependent in the last ulp,
+/// and a `HashMap`'s per-instance random state would make byte-identical
+/// golden-report snapshots impossible.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsRecorder {
-    sessions: HashMap<u64, SessionMetrics>,
+    sessions: BTreeMap<u64, SessionMetrics>,
     timeline: Vec<TpotSample>,
     total_tokens: u64,
     /// Prefill tokens processed (for prefill-throughput reporting).
@@ -158,7 +164,7 @@ impl MetricsRecorder {
         &self.timeline
     }
 
-    pub fn sessions_map(&self) -> &HashMap<u64, SessionMetrics> {
+    pub fn sessions_map(&self) -> &BTreeMap<u64, SessionMetrics> {
         &self.sessions
     }
 
@@ -190,6 +196,23 @@ impl MetricsRecorder {
             total_tokens: self.total_tokens,
             wall_ms,
         }
+    }
+}
+
+impl RunReport {
+    /// Deterministic JSON summary (scenario CLI output, golden-trace
+    /// snapshot comparisons). Identical runs serialize byte-identically.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("sessions", self.sessions.into()),
+            ("completed_sessions", self.completed_sessions.into()),
+            ("total_tokens", self.total_tokens.into()),
+            ("wall_ms", self.wall_ms.into()),
+            ("throughput_tok_s", self.throughput_tok_s.into()),
+            ("prefill_tok_s", self.prefill_tok_s.into()),
+            ("ttft", self.ttft.to_value()),
+            ("tpot", self.tpot.to_value()),
+        ])
     }
 }
 

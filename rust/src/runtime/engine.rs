@@ -11,6 +11,10 @@
 //! analysis).
 
 use super::manifest::{Manifest, ModelGeometry};
+// The offline build has no PJRT bridge crate; `xla_stub` mirrors the exact
+// API subset used below and fails fast at `PjRtClient::cpu()`. Linking the
+// vendored bridge is a one-line swap (`use xla;`).
+use super::xla_stub as xla;
 use std::collections::BTreeMap;
 use std::time::Instant;
 

@@ -14,6 +14,7 @@
 
 mod engine;
 mod manifest;
+pub(crate) mod xla_stub;
 
 pub use engine::{DecodeOutput, EngineStats, PjrtEngine};
 pub use manifest::{ArtifactSpec, Manifest, ModelGeometry};

@@ -15,24 +15,42 @@ pub const USAGE: &str = "\
 agentserve — efficient agentic AI serving on a consumer-grade GPU (reproduction)
 
 USAGE:
-  agentserve bench   [--policy P] [--model M] [--gpu G] [--agents N]
-                     [--sessions K] [--workload react|pe] [--seed S]
-                     [--config file.json] [--save-trace t.json]
-                     [--replay-trace t.json]
-  agentserve figures [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
-  agentserve analyze [--model M] [--gpu G] [--delta D] [--eps E]
-  agentserve serve   [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
-                     [--tool-scale F]
+  agentserve bench    [--policy P] [--model M] [--gpu G] [--agents N]
+                      [--sessions K] [--workload react|pe] [--seed S]
+                      [--config file.json] [--save-trace t.json]
+                      [--replay-trace t.json]
+  agentserve scenario list
+  agentserve scenario run    (--name S | --file f.json) [--policy P | --all-policies]
+                             [--model M] [--gpu G] [--seed N] [--events out.jsonl]
+  agentserve scenario record (--name S | --file f.json) --out trace.jsonl
+                             [--policy P] [--model M] [--gpu G] [--seed N]
+  agentserve scenario replay --trace trace.jsonl [--policy P | --all-policies]
+                             [--model M] [--gpu G] [--verify]
+  agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
+  agentserve analyze  [--model M] [--gpu G] [--delta D] [--eps E]
+  agentserve serve    [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
+                      [--tool-scale F]
 
-policies: agentserve | no-alg | no-green | sglang | vllm | llamacpp
-models:   3b | 7b | 8b (cost-model) / tiny (real engine)
-gpus:     a5000 | 5090
+policies:  agentserve | no-alg | no-green | sglang | vllm | llamacpp
+models:    3b | 7b | 8b (cost-model) / tiny (real engine)
+gpus:      a5000 | 5090
+scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
+           (see rust/src/workload/README.md for the scenario-file schema)
 ";
 
 /// Entry point used by `main` (and by CLI tests).
 pub fn run(args: Args) -> crate::Result<()> {
+    // Default-deny the action positional: only `scenario` takes one, so a
+    // stray positional on any other (or future) subcommand errors loudly
+    // instead of being silently ignored.
+    if args.subcommand.as_deref() != Some("scenario") {
+        if let Some(a) = &args.action {
+            anyhow::bail!("unexpected positional argument '{a}'");
+        }
+    }
     match args.subcommand.as_deref() {
         Some("bench") => bench(&args),
+        Some("scenario") => scenario_cmd(&args),
         Some("figures") => run_figures(&args),
         Some("analyze") => {
             let model: ModelKind = args.get_or("model", "7b").parse()?;
@@ -70,9 +88,8 @@ fn bench(args: &Args) -> crate::Result<()> {
     };
     // Trace record/replay for paired comparisons and regression debugging.
     let out = if let Some(path) = args.get("replay-trace") {
-        let trace = crate::workload::Trace::load(path)?;
-        let scripts = trace.events.into_iter().map(|e| e.script).collect();
-        crate::engine::sim::run_sim_scripts(&cfg, policy, &params, scripts)
+        let trace = load_trace_any(path)?;
+        crate::engine::run_sim_trace(&cfg, policy, &trace)
     } else {
         let mut gen = crate::workload::WorkloadGenerator::new(
             params.workload,
@@ -80,13 +97,20 @@ fn bench(args: &Args) -> crate::Result<()> {
             params.seed,
         );
         let scripts = gen.sessions(params.n_agents * params.sessions_per_agent);
-        if let Some(path) = args.get("save-trace") {
-            let trace =
-                crate::workload::Trace::concurrent(scripts.clone(), params.n_agents, params.stagger_us);
+        let save = args.get("save-trace");
+        let scripts_for_trace = save.map(|_| scripts.clone());
+        let out = crate::engine::sim::run_sim_scripts(&cfg, policy, &params, scripts);
+        if let Some(path) = save {
+            // Save *realized* arrivals (wave > 0 sessions at the times they
+            // actually chained in), so the trace replays this run faithfully.
+            let trace = crate::workload::Trace::with_arrivals(
+                scripts_for_trace.expect("cloned when saving"),
+                &out.arrivals_us,
+            );
             trace.save(path)?;
             println!("trace saved to {path}");
         }
-        crate::engine::sim::run_sim_scripts(&cfg, policy, &params, scripts)
+        out
     };
     println!(
         "== {} | {} | {} | {} agents ==",
@@ -104,6 +128,194 @@ fn bench(args: &Args) -> crate::Result<()> {
         out.eta_cold, out.cold_routed, out.resume_merged, out.resume_rerouted, out.rebinds.rebinds
     );
     Ok(())
+}
+
+/// Load a workload trace in either format (pretty JSON from `--save-trace`,
+/// or the scenario engine's JSONL interchange). A whole-file JSON document
+/// carrying an `"events"` key is the pretty format — its schema errors are
+/// reported as such, not masked as bogus JSONL line errors; everything else
+/// (including single-line traces) goes through the JSONL parser.
+fn load_trace_any(path: &str) -> crate::Result<crate::workload::Trace> {
+    let text = std::fs::read_to_string(path)?;
+    if let Ok(v) = crate::util::json::parse(&text) {
+        if v.get("events").is_some() {
+            return crate::workload::Trace::from_value(&v);
+        }
+    }
+    crate::workload::Trace::from_jsonl(&text)
+}
+
+/// Resolve the scenario named on the command line: `--name` from the
+/// built-in registry, or `--file` from disk (which may embed sparse
+/// `"config"` overrides applied on top of the CLI's model/gpu preset).
+fn load_scenario_arg(args: &Args, cfg: &mut Config) -> crate::Result<crate::workload::Scenario> {
+    use crate::workload::Scenario;
+    if let Some(path) = args.get("file") {
+        let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
+        let sc = Scenario::from_value(&v)?;
+        if let Some(overrides) = v.get("config") {
+            cfg.apply_overrides(overrides);
+            cfg.validate()?;
+        }
+        Ok(sc)
+    } else if let Some(name) = args.get("name") {
+        Scenario::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (try `agentserve scenario list`)")
+        })
+    } else {
+        anyhow::bail!("pass --name <scenario> or --file <scenario.json>")
+    }
+}
+
+fn scenario_policies(args: &Args) -> crate::Result<Vec<Policy>> {
+    if args.has("all-policies") {
+        Ok(Policy::paper_lineup())
+    } else {
+        Ok(vec![args.get_or("policy", "agentserve").parse()?])
+    }
+}
+
+fn print_scenario_outcome(out: &crate::engine::SimOutcome) {
+    println!("--- {} ---", out.policy_name);
+    println!("{}", out.report);
+    println!(
+        "  SLO   {}/{} attained ({:.1}%)",
+        out.slo.attained,
+        out.slo.sessions,
+        out.slo.rate() * 100.0
+    );
+}
+
+/// Filesystem-safe tag for a policy name (`llama.cpp` → `llama-cpp`).
+fn policy_slug(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect()
+}
+
+/// Insert a per-policy slug before the extension: `ev.jsonl` → `ev-vllm.jsonl`.
+/// Only the final path component is split, so dotted directories
+/// (`runs.v2/ev`) never get the slug spliced into the directory name.
+fn events_path(base: &str, slug: &str) -> String {
+    let (dir, file) = match base.rsplit_once('/') {
+        Some((d, f)) => (Some(d), f),
+        None => (None, base),
+    };
+    let file = match file.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => format!("{stem}-{slug}.{ext}"),
+        _ => format!("{file}-{slug}"),
+    };
+    match dir {
+        Some(d) => format!("{d}/{file}"),
+        None => file,
+    }
+}
+
+/// `agentserve scenario list|run|record|replay` — the scenario engine CLI.
+fn scenario_cmd(args: &Args) -> crate::Result<()> {
+    use crate::engine::{record_scenario_trace, run_scenario, run_scenario_recorded, run_sim_trace};
+    use crate::workload::Scenario;
+
+    let model: ModelKind = args.get_or("model", "3b").parse()?;
+    let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_path(p)?,
+        None => Config::preset(model, gpu),
+    };
+
+    match args.action.as_deref() {
+        Some("list") => {
+            println!("built-in scenarios:");
+            for s in Scenario::registry() {
+                println!(
+                    "  {:<16} {:>3} sessions  {:<11} {}",
+                    s.name,
+                    s.total_sessions,
+                    s.arrivals.kind_name(),
+                    s.description
+                );
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let scenario = load_scenario_arg(args, &mut cfg)?;
+            scenario.validate()?;
+            println!(
+                "== scenario '{}' | {} | {} | seed {} ==",
+                scenario.name, model, gpu, seed
+            );
+            let events_base = args.get("events");
+            let policies = scenario_policies(args)?;
+            let multi = policies.len() > 1;
+            for policy in policies {
+                // Only pay for event recording when the log is kept.
+                if let Some(base) = events_base {
+                    let (out, exec) = run_scenario_recorded(&cfg, policy, &scenario, seed);
+                    print_scenario_outcome(&out);
+                    // One file per policy so --all-policies doesn't clobber.
+                    let path = if multi {
+                        events_path(base, &policy_slug(&out.policy_name))
+                    } else {
+                        base.to_string()
+                    };
+                    exec.save(&path)?;
+                    println!("  {} execution events -> {path}", exec.len());
+                } else {
+                    print_scenario_outcome(&run_scenario(&cfg, policy, &scenario, seed));
+                }
+            }
+            Ok(())
+        }
+        Some("record") => {
+            let scenario = load_scenario_arg(args, &mut cfg)?;
+            scenario.validate()?;
+            let out_path = args.get_or("out", "trace.jsonl");
+            let policy: Policy = args.get_or("policy", "agentserve").parse()?;
+            let (out, trace) = record_scenario_trace(&cfg, policy, &scenario, seed);
+            print_scenario_outcome(&out);
+            trace.save_jsonl(out_path)?;
+            println!("recorded {} sessions -> {out_path}", trace.len());
+            Ok(())
+        }
+        Some("replay") => {
+            let path = args
+                .get("trace")
+                .ok_or_else(|| anyhow::anyhow!("scenario replay needs --trace <file>"))?;
+            let trace = load_trace_any(path)?;
+            anyhow::ensure!(!trace.is_empty(), "trace '{path}' has no sessions");
+            println!(
+                "== replaying {} sessions ({} decode tokens scripted) ==",
+                trace.len(),
+                trace.total_decode_tokens()
+            );
+            for policy in scenario_policies(args)? {
+                let out = run_sim_trace(&cfg, policy, &trace);
+                print_scenario_outcome(&out);
+                anyhow::ensure!(
+                    out.report.total_tokens == trace.total_decode_tokens(),
+                    "replay must conserve scripted decode tokens"
+                );
+                if args.has("verify") {
+                    let again = run_sim_trace(&cfg, policy, &trace);
+                    anyhow::ensure!(
+                        again.report.to_value().to_string() == out.report.to_value().to_string(),
+                        "{}: two consecutive replays diverged",
+                        out.policy_name
+                    );
+                    println!("  verify: two consecutive replays identical");
+                }
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("{USAGE}");
+            match other {
+                Some(a) => anyhow::bail!("unknown scenario action '{a}'"),
+                None => anyhow::bail!("scenario needs an action: list|run|record|replay"),
+            }
+        }
+    }
 }
 
 fn run_figures(args: &Args) -> crate::Result<()> {
@@ -203,6 +415,89 @@ mod tests {
     #[test]
     fn analyze_runs() {
         run(args("analyze --model 7b --gpu 5090")).unwrap();
+    }
+
+    #[test]
+    fn scenario_list_and_run_smoke() {
+        run(args("scenario list")).unwrap();
+        run(args("scenario run --name paper-fig5 --model 3b")).unwrap();
+        assert!(run(args("scenario run --name no-such-scenario")).is_err());
+        assert!(run(args("scenario")).is_err());
+        assert!(run(args("scenario frobnicate")).is_err());
+    }
+
+    #[test]
+    fn stray_positional_rejected_outside_scenario() {
+        assert!(run(args("bench vllm")).is_err());
+        assert!(run(args("figures 5")).is_err());
+        assert!(run(args("analyze 7b")).is_err());
+        assert!(run(args("serve now")).is_err());
+    }
+
+    #[test]
+    fn events_path_splits_only_the_filename() {
+        assert_eq!(events_path("ev.jsonl", "vllm"), "ev-vllm.jsonl");
+        assert_eq!(events_path("ev", "vllm"), "ev-vllm");
+        assert_eq!(events_path("runs.v2/ev", "vllm"), "runs.v2/ev-vllm");
+        assert_eq!(events_path("runs.v2/ev.jsonl", "vllm"), "runs.v2/ev-vllm.jsonl");
+        assert_eq!(events_path("a/b/.hidden", "x"), "a/b/.hidden-x");
+        assert_eq!(policy_slug("llama.cpp"), "llama-cpp");
+        assert_eq!(policy_slug("AgentServe"), "agentserve");
+    }
+
+    #[test]
+    fn all_policies_events_get_distinct_files() {
+        let dir = std::env::temp_dir().join("agentserve_scenario_events");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("ev.jsonl");
+        let base = base.to_str().unwrap();
+        run(args(&format!(
+            "scenario run --name paper-fig5 --model 3b --all-policies --events {base}"
+        )))
+        .unwrap();
+        for slug in ["agentserve", "sglang", "vllm", "llama-cpp"] {
+            let p = dir.join(format!("ev-{slug}.jsonl"));
+            assert!(p.exists(), "missing per-policy events file {p:?}");
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn scenario_record_then_replay_round_trips() {
+        let dir = std::env::temp_dir().join("agentserve_scenario_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("burst.jsonl");
+        let trace = trace.to_str().unwrap();
+        run(args(&format!(
+            "scenario record --name burst-storm --model 3b --out {trace}"
+        )))
+        .unwrap();
+        run(args(&format!(
+            "scenario replay --trace {trace} --model 3b --all-policies --verify"
+        )))
+        .unwrap();
+    }
+
+    #[test]
+    fn scenario_file_with_config_overrides_runs() {
+        use crate::workload::Scenario;
+        let dir = std::env::temp_dir().join("agentserve_scenario_file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("custom.json");
+        // A registry scenario serialized to disk, plus engine overrides.
+        let mut v = Scenario::by_name("mixed-fleet").unwrap().to_value();
+        if let crate::util::json::Value::Obj(pairs) = &mut v {
+            pairs.push((
+                "config".to_string(),
+                crate::util::json::parse(r#"{"engine": {"chunk_size": 128}}"#).unwrap(),
+            ));
+        }
+        std::fs::write(&path, v.to_string_pretty()).unwrap();
+        run(args(&format!(
+            "scenario run --file {} --policy vllm",
+            path.to_str().unwrap()
+        )))
+        .unwrap();
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Tiny argument parser: `subcommand --flag value --switch` conventions.
+//! Tiny argument parser: `subcommand [action] --flag value --switch`
+//! conventions (e.g. `bench --policy vllm`, `scenario run --name paper-fig5`).
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: one subcommand plus `--key value` / `--switch` flags.
+/// Parsed command line: a subcommand, an optional action (second
+/// positional, used by grouped subcommands like `scenario run|record|
+/// replay|list`), plus `--key value` / `--switch` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    pub action: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
@@ -28,6 +32,8 @@ impl Args {
                 }
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(arg);
+            } else if out.action.is_none() {
+                out.action = Some(arg);
             } else {
                 anyhow::bail!("unexpected positional argument '{arg}'");
             }
@@ -113,8 +119,18 @@ mod tests {
     }
 
     #[test]
-    fn double_positional_rejected() {
-        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    fn action_positional_parses() {
+        let a = parse("scenario run --name paper-fig5");
+        assert_eq!(a.subcommand.as_deref(), Some("scenario"));
+        assert_eq!(a.action.as_deref(), Some("run"));
+        assert_eq!(a.get("name"), Some("paper-fig5"));
+        let b = parse("bench --policy vllm");
+        assert_eq!(b.action, None);
+    }
+
+    #[test]
+    fn triple_positional_rejected() {
+        assert!(Args::parse(["a", "b", "c"].map(String::from)).is_err());
     }
 
     #[test]

@@ -15,11 +15,13 @@
 //! - **Plan-and-Execute** — fewer but longer resume prefills, medium decodes.
 
 mod generator;
+mod scenario;
 mod spec;
 mod stats;
 mod trace;
 
 pub use generator::{SessionScript, SessionStep, WorkloadGenerator};
+pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
 pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,528 @@
+//! Scenario engine: first-class workload descriptions.
+//!
+//! A [`Scenario`] generalizes the ad-hoc `SimParams` knobs into a declarative
+//! description of *traffic*: an arrival process (closed loop, open-loop
+//! Poisson, or on-off bursts), a heterogeneous mix of agent populations
+//! (e.g. 70% ReAct + 30% Plan-and-Execute with per-population tool-latency
+//! and prompt-length scaling), and a total session count. Instantiating a
+//! scenario for a (model, seed) pair yields a [`crate::workload::Trace`] —
+//! session scripts plus arrival timestamps — which any policy can execute,
+//! and which serializes to JSONL for record/replay (see
+//! `rust/src/workload/README.md` for the schema).
+//!
+//! Five built-in scenarios ([`Scenario::registry`]) cover the paper's
+//! closed-loop setup plus the bursty/mixed/open-loop traffic shapes that
+//! agentic serving systems must absorb; every scheduling PR is benchmarked
+//! against them (`agentserve scenario run`, `rust/benches/scenario_mix.rs`).
+
+use super::generator::WorkloadGenerator;
+use super::spec::WorkloadKind;
+use super::trace::{Trace, TraceEvent};
+use crate::config::ModelKind;
+use crate::util::json::{parse, Value};
+use crate::util::rng::Rng;
+use std::path::Path;
+
+/// How session arrivals are generated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed loop over `n_agents` slots: wave-0 arrivals staggered by
+    /// `stagger_us`; each agent admits its next session `think_time_us`
+    /// after the previous one completes (the original `SimParams` shape).
+    ClosedLoop { stagger_us: u64, think_time_us: u64 },
+    /// Open loop: arrivals follow a Poisson process with `rate_per_s`
+    /// expected arrivals per (virtual) second, independent of completions.
+    Poisson { rate_per_s: f64 },
+    /// On-off traffic: bursts of `burst_size` arrivals spaced `intra_gap_us`
+    /// apart, separated by idle gaps drawn uniformly from
+    /// `[idle_min_us, idle_max_us]`.
+    Bursty {
+        burst_size: u32,
+        intra_gap_us: u64,
+        idle_min_us: u64,
+        idle_max_us: u64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Short tag used by the CLI and serialization.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::ClosedLoop { .. } => "closed-loop",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        match *self {
+            ArrivalProcess::ClosedLoop { stagger_us, think_time_us } => Value::obj(vec![
+                ("kind", "closed-loop".into()),
+                ("stagger_us", stagger_us.into()),
+                ("think_time_us", think_time_us.into()),
+            ]),
+            ArrivalProcess::Poisson { rate_per_s } => Value::obj(vec![
+                ("kind", "poisson".into()),
+                ("rate_per_s", rate_per_s.into()),
+            ]),
+            ArrivalProcess::Bursty { burst_size, intra_gap_us, idle_min_us, idle_max_us } => {
+                Value::obj(vec![
+                    ("kind", "bursty".into()),
+                    ("burst_size", burst_size.into()),
+                    ("intra_gap_us", intra_gap_us.into()),
+                    ("idle_min_us", idle_min_us.into()),
+                    ("idle_max_us", idle_max_us.into()),
+                ])
+            }
+        }
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        match v.req_str("kind")? {
+            "closed-loop" => Ok(ArrivalProcess::ClosedLoop {
+                stagger_us: v.req_f64("stagger_us")? as u64,
+                think_time_us: v.req_f64("think_time_us")? as u64,
+            }),
+            "poisson" => Ok(ArrivalProcess::Poisson { rate_per_s: v.req_f64("rate_per_s")? }),
+            "bursty" => Ok(ArrivalProcess::Bursty {
+                burst_size: v.req_f64("burst_size")? as u32,
+                intra_gap_us: v.req_f64("intra_gap_us")? as u64,
+                idle_min_us: v.req_f64("idle_min_us")? as u64,
+                idle_max_us: v.req_f64("idle_max_us")? as u64,
+            }),
+            other => anyhow::bail!("unknown arrival kind '{other}' (closed-loop|poisson|bursty)"),
+        }
+    }
+}
+
+/// One agent population inside a heterogeneous mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Population {
+    pub name: String,
+    pub workload: WorkloadKind,
+    /// Relative weight of this population in the mix (need not sum to 1).
+    pub weight: f64,
+    /// Multiplier on every external tool-call latency of this population.
+    pub tool_latency_scale: f64,
+    /// Multiplier on the cold-prefill (system prompt) length.
+    pub prompt_scale: f64,
+}
+
+impl Population {
+    pub fn new(name: &str, workload: WorkloadKind, weight: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            workload,
+            weight,
+            tool_latency_scale: 1.0,
+            prompt_scale: 1.0,
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("workload", self.workload.tag().into()),
+            ("weight", self.weight.into()),
+            ("tool_latency_scale", self.tool_latency_scale.into()),
+            ("prompt_scale", self.prompt_scale.into()),
+        ])
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            workload: v.req_str("workload")?.parse()?,
+            weight: v.req_f64("weight")?,
+            tool_latency_scale: v.get("tool_latency_scale").and_then(|x| x.as_f64()).unwrap_or(1.0),
+            prompt_scale: v.get("prompt_scale").and_then(|x| x.as_f64()).unwrap_or(1.0),
+        })
+    }
+}
+
+/// A declarative workload scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub arrivals: ArrivalProcess,
+    pub populations: Vec<Population>,
+    /// Total sessions the scenario admits.
+    pub total_sessions: usize,
+    /// Closed-loop concurrency (agent slots); also a sizing hint elsewhere.
+    pub n_agents: usize,
+}
+
+/// A scenario instantiated for one (model, seed) pair.
+#[derive(Debug, Clone)]
+pub struct ScenarioWorkload {
+    /// Session scripts plus planned arrival timestamps.
+    pub trace: Trace,
+    /// Population index (into `Scenario::populations`) per trace event.
+    pub population_of: Vec<usize>,
+}
+
+impl Scenario {
+    /// Structural sanity checks (run before instantiation / after load).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "scenario needs a name");
+        anyhow::ensure!(self.total_sessions > 0, "scenario '{}' has no sessions", self.name);
+        anyhow::ensure!(self.n_agents > 0, "scenario '{}' needs n_agents > 0", self.name);
+        anyhow::ensure!(
+            !self.populations.is_empty(),
+            "scenario '{}' has no populations",
+            self.name
+        );
+        for p in &self.populations {
+            anyhow::ensure!(p.weight > 0.0, "population '{}' weight must be > 0", p.name);
+            anyhow::ensure!(
+                p.tool_latency_scale > 0.0 && p.prompt_scale > 0.0,
+                "population '{}' scales must be > 0",
+                p.name
+            );
+        }
+        match self.arrivals {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                anyhow::ensure!(rate_per_s > 0.0, "poisson rate must be > 0");
+            }
+            ArrivalProcess::Bursty { burst_size, idle_min_us, idle_max_us, .. } => {
+                anyhow::ensure!(burst_size > 0, "burst_size must be > 0");
+                anyhow::ensure!(idle_min_us <= idle_max_us, "idle_min_us must be <= idle_max_us");
+            }
+            ArrivalProcess::ClosedLoop { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Closed-loop parameters when this scenario uses closed-loop arrivals.
+    pub fn closed_loop(&self) -> Option<(u64, u64)> {
+        match self.arrivals {
+            ArrivalProcess::ClosedLoop { stagger_us, think_time_us } => {
+                Some((stagger_us, think_time_us))
+            }
+            _ => None,
+        }
+    }
+
+    /// Sample `n` arrival timestamps (non-decreasing, virtual us).
+    ///
+    /// Closed-loop scenarios return the wave-0 pattern (later waves chain at
+    /// run time); open-loop and bursty scenarios return the full plan.
+    pub fn arrival_times(&self, rng: &mut Rng, n: usize) -> Vec<u64> {
+        match self.arrivals {
+            ArrivalProcess::ClosedLoop { stagger_us, .. } => {
+                let slots = self.n_agents.max(1);
+                (0..n).map(|i| (i % slots) as u64 * stagger_us).collect()
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                let mut t = 0u64;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // Inverse-CDF exponential inter-arrival, mean 1/rate s.
+                    let u = (1.0 - rng.f64()).max(1e-300);
+                    t += ((-u.ln()) / rate_per_s * 1e6) as u64;
+                    out.push(t);
+                }
+                out
+            }
+            ArrivalProcess::Bursty { burst_size, intra_gap_us, idle_min_us, idle_max_us } => {
+                let mut t = 0u64;
+                let mut in_burst = 0u32;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    out.push(t);
+                    in_burst += 1;
+                    if in_burst >= burst_size.max(1) {
+                        in_burst = 0;
+                        t += rng.range_f64(idle_min_us as f64, idle_max_us as f64) as u64;
+                    } else {
+                        t += intra_gap_us;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Weighted population draw.
+    fn sample_population(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.populations.iter().map(|p| p.weight).sum();
+        let mut x = rng.f64() * total;
+        for (i, p) in self.populations.iter().enumerate() {
+            if x < p.weight {
+                return i;
+            }
+            x -= p.weight;
+        }
+        self.populations.len() - 1
+    }
+
+    /// Materialize the scenario into a concrete workload trace.
+    ///
+    /// Fully deterministic in `(self, model, seed)`: arrivals, population
+    /// assignment, and session contents all derive from the seed, so two
+    /// instantiations are identical and every policy replays the same bytes.
+    pub fn instantiate(&self, model: ModelKind, seed: u64) -> ScenarioWorkload {
+        // Scenario-level stream (arrivals + mix), separate from per-population
+        // script streams so adding a population never perturbs the others.
+        let mut rng = Rng::fold(seed, 0x5CE9A210);
+        let mut gens: Vec<WorkloadGenerator> = self
+            .populations
+            .iter()
+            .enumerate()
+            .map(|(i, p)| WorkloadGenerator::new(p.workload, model, seed ^ ((i as u64 + 1) * 0x9E37_79B9)))
+            .collect();
+        let arrivals = self.arrival_times(&mut rng, self.total_sessions);
+        let mut events = Vec::with_capacity(self.total_sessions);
+        let mut population_of = Vec::with_capacity(self.total_sessions);
+        for (i, &arrival_us) in arrivals.iter().enumerate() {
+            let p = self.sample_population(&mut rng);
+            let pop = &self.populations[p];
+            let mut script = gens[p].next_session();
+            script.id = i as u64;
+            if (pop.prompt_scale - 1.0).abs() > f64::EPSILON {
+                let scaled = (script.cold_prefill_tokens as f64 * pop.prompt_scale).round();
+                script.cold_prefill_tokens = scaled.max(1.0) as u32;
+            }
+            if (pop.tool_latency_scale - 1.0).abs() > f64::EPSILON {
+                for st in &mut script.steps {
+                    st.tool_latency_us =
+                        ((st.tool_latency_us as f64 * pop.tool_latency_scale) as u64).max(1);
+                }
+            }
+            events.push(TraceEvent { arrival_us, script });
+            population_of.push(p);
+        }
+        ScenarioWorkload { trace: Trace { events }, population_of }
+    }
+
+    // -- registry ------------------------------------------------------------
+
+    /// The built-in scenario registry (every scheduling PR load-tests these).
+    pub fn registry() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "paper-fig5".into(),
+                description: "paper closed loop: 4 ReAct agents, 3 chained sessions each".into(),
+                arrivals: ArrivalProcess::ClosedLoop { stagger_us: 150_000, think_time_us: 100_000 },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 12,
+                n_agents: 4,
+            },
+            Scenario {
+                name: "burst-storm".into(),
+                description: "on-off arrivals: bursts of 4 cold prefills 10 ms apart, 1.5-3 s idle".into(),
+                arrivals: ArrivalProcess::Bursty {
+                    burst_size: 4,
+                    intra_gap_us: 10_000,
+                    idle_min_us: 1_500_000,
+                    idle_max_us: 3_000_000,
+                },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 12,
+                n_agents: 4,
+            },
+            Scenario {
+                name: "mixed-fleet".into(),
+                description: "open-loop Poisson 1.2/s; 70% ReAct + 30% Plan-and-Execute".into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 1.2 },
+                populations: vec![
+                    Population::new("react", WorkloadKind::ReAct, 0.7),
+                    Population::new("planner", WorkloadKind::PlanAndExecute, 0.3),
+                ],
+                total_sessions: 14,
+                n_agents: 5,
+            },
+            Scenario {
+                name: "long-tool".into(),
+                description: "closed loop of planners whose external tools are 3x slower".into(),
+                arrivals: ArrivalProcess::ClosedLoop { stagger_us: 100_000, think_time_us: 150_000 },
+                populations: vec![Population {
+                    name: "slow-tools".into(),
+                    workload: WorkloadKind::PlanAndExecute,
+                    weight: 1.0,
+                    tool_latency_scale: 3.0,
+                    prompt_scale: 1.0,
+                }],
+                total_sessions: 8,
+                n_agents: 4,
+            },
+            Scenario {
+                name: "open-loop-sweep".into(),
+                description: "open-loop Poisson 2.5/s ReAct with 15% longer system prompts".into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 2.5 },
+                populations: vec![Population {
+                    name: "react-long-prompt".into(),
+                    workload: WorkloadKind::ReAct,
+                    weight: 1.0,
+                    tool_latency_scale: 1.0,
+                    prompt_scale: 1.15,
+                }],
+                total_sessions: 16,
+                n_agents: 6,
+            },
+        ]
+    }
+
+    /// Look up a built-in scenario by name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Self::registry()
+            .into_iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    // -- serde ---------------------------------------------------------------
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            ("arrivals", self.arrivals.to_value()),
+            (
+                "populations",
+                Value::Arr(self.populations.iter().map(|p| p.to_value()).collect()),
+            ),
+            ("total_sessions", self.total_sessions.into()),
+            ("n_agents", self.n_agents.into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let populations = v
+            .req_arr("populations")?
+            .iter()
+            .map(Population::from_value)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let sc = Self {
+            name: v.req_str("name")?.to_string(),
+            description: v
+                .get("description")
+                .and_then(|d| d.as_str())
+                .unwrap_or("")
+                .to_string(),
+            arrivals: ArrivalProcess::from_value(v.req("arrivals")?)?,
+            populations,
+            total_sessions: v.req_f64("total_sessions")? as usize,
+            n_agents: v.get("n_agents").and_then(|n| n.as_usize()).unwrap_or(4),
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_value().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_value(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_valid_and_named_uniquely() {
+        let reg = Scenario::registry();
+        assert!(reg.len() >= 5);
+        for s in &reg {
+            s.validate().unwrap();
+        }
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "scenario names must be unique");
+        assert!(Scenario::by_name("PAPER-FIG5").is_some());
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn instantiation_is_deterministic() {
+        for sc in Scenario::registry() {
+            let a = sc.instantiate(ModelKind::Qwen3B, 11);
+            let b = sc.instantiate(ModelKind::Qwen3B, 11);
+            assert_eq!(a.trace, b.trace, "{}", sc.name);
+            assert_eq!(a.population_of, b.population_of);
+            let c = sc.instantiate(ModelKind::Qwen3B, 12);
+            assert_ne!(a.trace, c.trace, "{}: different seeds must differ", sc.name);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_ids_sequential() {
+        for sc in Scenario::registry() {
+            let wl = sc.instantiate(ModelKind::Qwen3B, 3);
+            assert_eq!(wl.trace.len(), sc.total_sessions);
+            if sc.closed_loop().is_none() {
+                for w in wl.trace.events.windows(2) {
+                    assert!(w[0].arrival_us <= w[1].arrival_us, "{}", sc.name);
+                }
+            }
+            for (i, e) in wl.trace.events.iter().enumerate() {
+                assert_eq!(e.script.id, i as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn population_scales_apply() {
+        let mut sc = Scenario::by_name("long-tool").unwrap();
+        sc.populations[0].tool_latency_scale = 1.0;
+        let base = sc.instantiate(ModelKind::Qwen3B, 5);
+        sc.populations[0].tool_latency_scale = 3.0;
+        let slow = sc.instantiate(ModelKind::Qwen3B, 5);
+        for (a, b) in base.trace.events.iter().zip(&slow.trace.events) {
+            for (sa, sb) in a.script.steps.iter().zip(&b.script.steps) {
+                assert_eq!(sb.tool_latency_us, (sa.tool_latency_us as f64 * 3.0) as u64);
+                assert_eq!(sa.resume_tokens, sb.resume_tokens, "tokens unaffected by scaling");
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        for sc in Scenario::registry() {
+            let v = sc.to_value();
+            let back = Scenario::from_value(&v).unwrap();
+            assert_eq!(back, sc);
+            // And through actual text.
+            let text = v.to_string_pretty();
+            let back2 = Scenario::from_value(&parse(&text).unwrap()).unwrap();
+            assert_eq!(back2, sc);
+        }
+    }
+
+    #[test]
+    fn invalid_scenarios_rejected() {
+        let mut sc = Scenario::by_name("mixed-fleet").unwrap();
+        sc.total_sessions = 0;
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::by_name("mixed-fleet").unwrap();
+        sc.populations.clear();
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::by_name("mixed-fleet").unwrap();
+        sc.arrivals = ArrivalProcess::Poisson { rate_per_s: 0.0 };
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::by_name("burst-storm").unwrap();
+        sc.arrivals = ArrivalProcess::Bursty {
+            burst_size: 2,
+            intra_gap_us: 1,
+            idle_min_us: 10,
+            idle_max_us: 5,
+        };
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn mixed_fleet_uses_both_populations() {
+        let sc = Scenario::by_name("mixed-fleet").unwrap();
+        let wl = sc.instantiate(ModelKind::Qwen3B, 7);
+        // Scripts carry their population's workload kind.
+        for (e, &p) in wl.trace.events.iter().zip(&wl.population_of) {
+            assert_eq!(e.script.kind, sc.populations[p].workload);
+        }
+    }
+}

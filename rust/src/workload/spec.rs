@@ -22,6 +22,14 @@ impl WorkloadKind {
             WorkloadKind::PlanAndExecute => "Plan-and-Execute",
         }
     }
+
+    /// Short machine tag; the inverse of [`std::str::FromStr`].
+    pub fn tag(&self) -> &'static str {
+        match self {
+            WorkloadKind::ReAct => "react",
+            WorkloadKind::PlanAndExecute => "pe",
+        }
+    }
 }
 
 impl std::fmt::Display for WorkloadKind {

@@ -7,7 +7,6 @@
 
 use super::generator::{SessionScript, SessionStep};
 use crate::util::json::{parse, Value};
-use crate::workload::WorkloadKind;
 use std::path::Path;
 
 /// One scheduled session arrival.
@@ -46,13 +45,7 @@ impl SessionScript {
     pub fn to_value(&self) -> Value {
         Value::obj(vec![
             ("id", self.id.into()),
-            (
-                "kind",
-                match self.kind {
-                    WorkloadKind::ReAct => "react".into(),
-                    WorkloadKind::PlanAndExecute => "pe".into(),
-                },
-            ),
+            ("kind", self.kind.tag().into()),
             ("cold_prefill_tokens", self.cold_prefill_tokens.into()),
             ("template", self.template.into()),
             ("first_decode_tokens", self.first_decode_tokens.into()),
@@ -83,6 +76,12 @@ impl SessionScript {
 impl Trace {
     /// Build a concurrency-N trace: wave-0 arrivals are staggered by
     /// `stagger_us`; later waves chain when the engine finishes a session.
+    ///
+    /// The wave > 0 timestamps here are *placeholders* (the wave-0 pattern
+    /// repeated), meaningful only under closed-loop execution. Replaying
+    /// this trace via `engine::run_sim_trace` takes them literally; for a
+    /// faithful replayable trace, record a run and use [`Trace::with_arrivals`]
+    /// (what `scenario record` and `bench --save-trace` do).
     pub fn concurrent(scripts: Vec<SessionScript>, n_agents: usize, stagger_us: u64) -> Self {
         let events = scripts
             .into_iter()
@@ -95,12 +94,35 @@ impl Trace {
         Self { events }
     }
 
+    /// Pair scripts with realized arrival timestamps (one per script, in
+    /// order) — how recorded runs become replayable traces.
+    pub fn with_arrivals(scripts: Vec<SessionScript>, arrivals_us: &[u64]) -> Self {
+        assert_eq!(scripts.len(), arrivals_us.len(), "one arrival per script");
+        let events = scripts
+            .into_iter()
+            .zip(arrivals_us)
+            .map(|(script, &arrival_us)| TraceEvent { arrival_us, script })
+            .collect();
+        Self { events }
+    }
+
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
+    }
+
+    /// Schedule-independent decode-token total: any policy that completes
+    /// the trace emits exactly this many output tokens (conservation law).
+    pub fn total_decode_tokens(&self) -> u64 {
+        self.events.iter().map(|e| e.script.total_decode_tokens()).sum()
+    }
+
+    /// Schedule-independent prefill-token total (cold + resumes).
+    pub fn total_prefill_tokens(&self) -> u64 {
+        self.events.iter().map(|e| e.script.total_prefill_tokens()).sum()
     }
 
     pub fn to_value(&self) -> Value {
@@ -143,6 +165,51 @@ impl Trace {
         let text = std::fs::read_to_string(path.as_ref())?;
         Self::from_value(&parse(&text)?)
     }
+
+    // -- JSONL interchange (scenario record/replay format) -------------------
+
+    /// Serialize as JSONL: one `{"arrival_us":…,"script":{…}}` object per
+    /// line. Line-oriented so traces stream, diff, and `wc -l` cleanly; this
+    /// is the `agentserve scenario record`/`replay` interchange format.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let v = Value::obj(vec![
+                ("arrival_us", e.arrival_us.into()),
+                ("script", e.script.to_value()),
+            ]);
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the JSONL form (blank lines ignored; errors cite the line).
+    pub fn from_jsonl(text: &str) -> crate::Result<Self> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = parse(line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+            events.push(TraceEvent {
+                arrival_us: v.req_f64("arrival_us")? as u64,
+                script: SessionScript::from_value(v.req("script")?)?,
+            });
+        }
+        Ok(Self { events })
+    }
+
+    pub fn save_jsonl(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_jsonl())?;
+        Ok(())
+    }
+
+    pub fn load_jsonl(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_jsonl(&text)
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +238,24 @@ mod tests {
         assert_eq!(trace.events[1].arrival_us, 50_000);
         assert_eq!(trace.events[2].arrival_us, 100_000);
         assert_eq!(trace.events[3].arrival_us, 0); // second wave chains
+    }
+
+    #[test]
+    fn jsonl_round_trip_and_totals() {
+        let mut g = WorkloadGenerator::new(WorkloadKind::PlanAndExecute, ModelKind::Qwen3B, 4);
+        let trace = Trace::concurrent(g.sessions(5), 2, 75_000);
+        let text = trace.to_jsonl();
+        assert_eq!(text.lines().count(), 5);
+        let back = Trace::from_jsonl(&text).unwrap();
+        assert_eq!(back, trace);
+        let manual: u64 = trace.events.iter().map(|e| e.script.total_decode_tokens()).sum();
+        assert_eq!(trace.total_decode_tokens(), manual);
+        assert!(trace.total_prefill_tokens() > trace.total_decode_tokens());
+        // Blank lines are tolerated; garbage lines cite their line number.
+        let with_blank = format!("\n{text}\n");
+        assert_eq!(Trace::from_jsonl(&with_blank).unwrap(), trace);
+        let err = Trace::from_jsonl("not-json\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
     }
 
     #[test]

@@ -264,6 +264,146 @@ fn prop_json_round_trips() {
 }
 
 // ---------------------------------------------------------------------------
+// Scenario arrival processes: sampled statistics match their definitions.
+// ---------------------------------------------------------------------------
+
+mod arrivals {
+    use agentserve::config::ModelKind;
+    use agentserve::util::rng::Rng;
+    use agentserve::workload::{ArrivalProcess, Population, Scenario, WorkloadKind};
+
+    pub fn scenario_with(
+        arrivals: ArrivalProcess,
+        populations: Vec<Population>,
+        n: usize,
+    ) -> Scenario {
+        Scenario {
+            name: "prop".into(),
+            description: String::new(),
+            arrivals,
+            populations,
+            total_sessions: n,
+            n_agents: 4,
+        }
+    }
+
+    pub fn interarrivals(sc: &Scenario, seed: u64, n: usize) -> Vec<u64> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let times = sc.arrival_times(&mut rng, n);
+        assert_eq!(times.len(), n);
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1], "seed {seed}: arrivals must be non-decreasing");
+        }
+        // Include the first gap (process starts at virtual t=0).
+        let mut gaps = Vec::with_capacity(n);
+        let mut prev = 0u64;
+        for &t in &times {
+            gaps.push(t - prev);
+            prev = t;
+        }
+        gaps
+    }
+
+    pub const MODEL: ModelKind = ModelKind::Qwen3B;
+    pub use ArrivalProcess::{Bursty, Poisson};
+    pub use WorkloadKind::{PlanAndExecute, ReAct};
+    pub fn react_pop(weight: f64) -> Population {
+        Population::new("react", ReAct, weight)
+    }
+    pub fn pe_pop(weight: f64) -> Population {
+        Population::new("planner", PlanAndExecute, weight)
+    }
+}
+
+#[test]
+fn prop_poisson_interarrival_mean_matches_rate() {
+    use arrivals::*;
+    let n = 4000;
+    for seed in 0..5u64 {
+        for rate in [0.5f64, 2.0, 10.0] {
+            let sc = scenario_with(Poisson { rate_per_s: rate }, vec![react_pop(1.0)], n);
+            let gaps = interarrivals(&sc, 7000 + seed, n);
+            let mean = gaps.iter().sum::<u64>() as f64 / n as f64;
+            let expect = 1e6 / rate;
+            let rel = (mean - expect).abs() / expect;
+            assert!(
+                rel < 0.10,
+                "seed {seed} rate {rate}: inter-arrival mean {mean:.0} us vs 1/rate {expect:.0} us (rel {rel:.3})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bursty_respects_burst_and_idle_bounds() {
+    use arrivals::*;
+    for seed in 0..10u64 {
+        // Randomized-but-valid burst shapes, from the in-tree RNG.
+        let mut meta = agentserve::util::rng::Rng::seed_from_u64(8000 + seed);
+        let burst_size = 2 + (meta.next_u64() % 5) as u32; // 2..=6
+        let intra_gap_us = 5_000 + meta.next_u64() % 45_000;
+        let idle_min_us = 200_000 + meta.next_u64() % 300_000;
+        let idle_max_us = idle_min_us + 100_000 + meta.next_u64() % 900_000;
+        let n = (burst_size as usize) * 40 + 3; // includes a partial tail burst
+        let sc = scenario_with(
+            Bursty { burst_size, intra_gap_us, idle_min_us, idle_max_us },
+            vec![react_pop(1.0)],
+            n,
+        );
+        sc.validate().unwrap();
+        let gaps = interarrivals(&sc, 9000 + seed, n);
+        // gaps[0] is the start-of-time gap (0); gaps[i] for i>=1 separates
+        // arrival i-1 from i: an idle gap iff i-1 closed a burst.
+        assert_eq!(gaps[0], 0, "seed {seed}: first arrival at t=0");
+        for (i, &g) in gaps.iter().enumerate().skip(1) {
+            if (i as u32) % burst_size == 0 {
+                assert!(
+                    g >= idle_min_us && g <= idle_max_us,
+                    "seed {seed}: idle gap {g} outside [{idle_min_us}, {idle_max_us}] at {i}"
+                );
+            } else {
+                assert_eq!(
+                    g, intra_gap_us,
+                    "seed {seed}: intra-burst gap at {i} must equal {intra_gap_us}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_fleet_fractions_converge_to_weights() {
+    use arrivals::*;
+    let n = 3000;
+    for seed in 0..5u64 {
+        for weights in [vec![0.7, 0.3], vec![0.5, 0.25, 0.25]] {
+            let populations: Vec<_> = weights
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| if i % 2 == 0 { react_pop(w) } else { pe_pop(w) })
+                .collect();
+            let sc = scenario_with(Poisson { rate_per_s: 5.0 }, populations, n);
+            let wl = sc.instantiate(MODEL, 10_000 + seed);
+            assert_eq!(wl.population_of.len(), n);
+            let total: f64 = weights.iter().sum();
+            for (p, &w) in weights.iter().enumerate() {
+                let count = wl.population_of.iter().filter(|&&x| x == p).count();
+                let frac = count as f64 / n as f64;
+                let expect = w / total;
+                assert!(
+                    (frac - expect).abs() < 0.05,
+                    "seed {seed}: population {p} fraction {frac:.3} vs weight {expect:.3}"
+                );
+            }
+            // Scripts carry their population's workload kind.
+            for (e, &p) in wl.trace.events.iter().zip(&wl.population_of) {
+                assert_eq!(e.script.kind, sc.populations[p].workload, "seed {seed}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Simulation: conservation laws hold for random workloads and policies.
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,180 @@
+//! Scenario-engine regression suite (tier-1): every built-in scenario
+//! completes under every paper policy, identical `(Config, Scenario, seed)`
+//! runs produce byte-identical reports, recorded traces replay
+//! deterministically, and the checked-in golden trace reproduces its pinned
+//! report snapshot exactly.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{
+    record_scenario_trace, run_scenario, run_scenario_recorded, run_sim_trace, ExecEventKind,
+    Policy,
+};
+use agentserve::metrics::RunReport;
+use agentserve::workload::{Scenario, Trace};
+
+fn cfg() -> Config {
+    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+}
+
+/// Byte-exact comparison key: the deterministic JSON summary.
+fn key(r: &RunReport) -> String {
+    r.to_value().to_string()
+}
+
+#[test]
+fn every_builtin_scenario_completes_under_every_policy() {
+    let cfg = cfg();
+    for scenario in Scenario::registry() {
+        scenario.validate().unwrap();
+        let expected = scenario
+            .instantiate(cfg.model.kind, 7)
+            .trace
+            .total_decode_tokens();
+        for policy in Policy::paper_lineup() {
+            let out = run_scenario(&cfg, policy, &scenario, 7);
+            assert_eq!(
+                out.report.completed_sessions,
+                scenario.total_sessions,
+                "{}/{} must complete every session",
+                scenario.name,
+                policy.name()
+            );
+            assert_eq!(
+                out.report.total_tokens,
+                expected,
+                "{}/{} must conserve scripted decode tokens",
+                scenario.name,
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_identical_reports_across_policy_lineup() {
+    let cfg = cfg();
+    // One closed-loop and one open-loop scenario exercise both arrival paths.
+    for name in ["paper-fig5", "mixed-fleet"] {
+        let scenario = Scenario::by_name(name).unwrap();
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario(&cfg, policy, &scenario, 41);
+            let b = run_scenario(&cfg, policy, &scenario, 41);
+            assert_eq!(
+                key(&a.report),
+                key(&b.report),
+                "{name}/{}: same (Config, Scenario, seed) must be byte-identical",
+                policy.name()
+            );
+            assert_eq!(a.arrivals_us, b.arrivals_us);
+            let c = run_scenario(&cfg, policy, &scenario, 42);
+            assert_ne!(
+                key(&a.report),
+                key(&c.report),
+                "{name}/{}: different seeds must differ",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn recorded_trace_replays_identically_across_policies() {
+    let cfg = cfg();
+    let scenario = Scenario::by_name("mixed-fleet").unwrap();
+    let (_, exec) =
+        run_scenario_recorded(&cfg, Policy::AgentServe(Default::default()), &scenario, 9);
+    assert!(
+        exec.events
+            .iter()
+            .any(|e| matches!(e.kind, ExecEventKind::Classified { .. })),
+        "execution log must record classifications"
+    );
+    // What `scenario record` writes: scripts + realized arrivals.
+    let (rec_out, trace) =
+        record_scenario_trace(&cfg, Policy::AgentServe(Default::default()), &scenario, 9);
+    assert_eq!(rec_out.report.completed_sessions, scenario.total_sessions);
+    // Open-loop scenarios realize exactly their planned arrivals.
+    let planned: Vec<u64> = scenario
+        .instantiate(cfg.model.kind, 9)
+        .trace
+        .events
+        .iter()
+        .map(|e| e.arrival_us)
+        .collect();
+    assert_eq!(rec_out.arrivals_us, planned);
+    // JSONL round-trip preserves the workload bit-for-bit.
+    let back = Trace::from_jsonl(&trace.to_jsonl()).unwrap();
+    assert_eq!(back, trace);
+    // Two consecutive replays are identical, under every policy.
+    for policy in Policy::paper_lineup() {
+        let a = run_sim_trace(&cfg, policy, &back);
+        let b = run_sim_trace(&cfg, policy, &back);
+        assert_eq!(a.report.total_tokens, b.report.total_tokens, "{}", policy.name());
+        assert_eq!(
+            a.report.completed_sessions,
+            b.report.completed_sessions,
+            "{}",
+            policy.name()
+        );
+        assert_eq!(key(&a.report), key(&b.report), "{}", policy.name());
+        assert_eq!(a.report.completed_sessions, back.len());
+        assert_eq!(a.report.total_tokens, back.total_decode_tokens());
+    }
+}
+
+/// Golden-trace snapshot: replaying `rust/tests/data/golden_trace.jsonl`
+/// through `Policy::AgentServe` must reproduce the pinned RunReport summary
+/// in `rust/tests/data/golden_report.json` **exactly** (string equality of
+/// the deterministic JSON form).
+///
+/// Regenerating after an *intentional* scheduling/cost-model change:
+///
+/// ```sh
+/// AGENTSERVE_BLESS=1 cargo test --test scenarios golden_trace_snapshot
+/// # or: rm rust/tests/data/golden_report.json && cargo test --test scenarios
+/// ```
+///
+/// then commit the refreshed snapshot alongside the change. The *trace*
+/// (`golden_trace.jsonl`) is hand-written input and is never regenerated.
+#[test]
+fn golden_trace_snapshot() {
+    let data = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data");
+    let trace = Trace::load_jsonl(data.join("golden_trace.jsonl")).unwrap();
+    assert_eq!(trace.len(), 4, "golden trace is four hand-written sessions");
+    assert_eq!(trace.total_decode_tokens(), 566, "hand-computed scripted total");
+
+    let cfg = cfg();
+    let out = run_sim_trace(&cfg, Policy::AgentServe(Default::default()), &trace);
+    assert_eq!(out.report.completed_sessions, 4);
+    assert_eq!(out.report.total_tokens, 566);
+
+    let summary = out.report.to_value().to_string_pretty();
+    let snap = data.join("golden_report.json");
+    if std::env::var("AGENTSERVE_BLESS").is_ok() || !snap.exists() {
+        // Bless-on-absence bootstraps the snapshot in the first environment
+        // that can execute the suite (the authoring container had no Rust
+        // toolchain). Before writing, require a second independent replay to
+        // reproduce the summary byte-for-byte, so a blessed pin is at least
+        // internally deterministic. COMMIT the written file — until it is
+        // checked in, this gate only protects within a single checkout.
+        let again = run_sim_trace(&cfg, Policy::AgentServe(Default::default()), &trace);
+        assert_eq!(
+            again.report.to_value().to_string_pretty(),
+            summary,
+            "replay is not deterministic; refusing to bless"
+        );
+        std::fs::write(&snap, &summary).unwrap();
+        eprintln!(
+            "golden_trace_snapshot: blessed {} — commit this file to arm the gate",
+            snap.display()
+        );
+        return;
+    }
+    let pinned = std::fs::read_to_string(&snap).unwrap();
+    assert_eq!(
+        summary, pinned,
+        "replay diverged from the pinned golden report; if this change is \
+         intentional, regenerate per this test's doc comment and commit the \
+         new snapshot"
+    );
+}

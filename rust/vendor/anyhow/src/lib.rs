@@ -1,0 +1,128 @@
+//! Minimal, offline-buildable subset of the `anyhow` API.
+//!
+//! The build image has no crates.io registry, so this in-tree crate provides
+//! exactly what the repository uses: [`Result`], [`Error`], and the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros. `Error` erases the source error
+//! into its rendered message (the codebase never downcasts), and — like the
+//! real anyhow — deliberately does *not* implement `std::error::Error`, so
+//! the blanket `From<E: std::error::Error>` conversion powering `?` does not
+//! overlap with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// Drop-in alias for `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error: a rendered message (plus the source chain, already
+/// folded into the message at conversion time).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    /// Render a source error including its `source()` chain.
+    fn from_std<E: std::error::Error>(err: E) -> Self {
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Self { msg }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on exit;
+        // show the message, not a struct dump.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::from_std(err)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // ParseIntError -> Error via the blanket From
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_macros_work() {
+        assert_eq!(parse_num("7").unwrap(), 7);
+        assert!(parse_num("x").is_err());
+        let e = parse_num("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -3");
+        let made: Error = anyhow!("code {}", 42);
+        assert_eq!(format!("{made}"), "code 42");
+        assert_eq!(format!("{made:?}"), "code 42");
+    }
+
+    fn bails() -> Result<()> {
+        bail!("nope: {}", 1);
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 1");
+    }
+
+    #[test]
+    fn io_error_chain_renders() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing file");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("missing file"));
+    }
+}
