@@ -28,6 +28,9 @@ fi
 step "Release build"
 cargo build --release
 
+step "Rustdoc build (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
+
 step "Test suite"
 snap="rust/tests/data/golden_report.json"
 had_snap=0
@@ -47,6 +50,12 @@ cargo run --release --bin agentserve -- \
     scenario record --name burst-storm --model 3b --out "$tmp/burst.jsonl"
 cargo run --release --bin agentserve -- \
     scenario replay --trace "$tmp/burst.jsonl" --model 3b --verify
+
+step "Scenario sweep smoke (3-point arrival-rate grid)"
+cargo run --release --bin agentserve -- \
+    scenario sweep --scenario open-loop-sweep --rates 0.25,0.5,1 \
+    --policy agentserve --model 3b --out "$tmp/sweep.json" --csv "$tmp/sweep.csv"
+[ -s "$tmp/sweep.json" ] && [ -s "$tmp/sweep.csv" ]
 
 echo ""
 echo "ci/check.sh: all green"

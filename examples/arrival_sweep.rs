@@ -1,0 +1,50 @@
+//! Programmatic arrival-rate sweep: the paper's load curve in ~30 lines.
+//!
+//! Drives the `open-loop-sweep` registry scenario across a rate grid under
+//! every paper policy, prints the p99 TTFT curve, and reports each policy's
+//! knee point (the first rate whose p99 TTFT violates the TTFT SLO).
+//!
+//! ```sh
+//! cargo run --release --example arrival_sweep [-- 3b a5000]
+//! ```
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::Policy;
+use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model: ModelKind = args.get(1).map(|s| s.as_str()).unwrap_or("3b").parse()?;
+    let gpu: GpuKind = args.get(2).map(|s| s.as_str()).unwrap_or("a5000").parse()?;
+    let cfg = Config::preset(model, gpu);
+
+    let spec = SweepSpec {
+        name: "example-arrival-sweep".into(),
+        description: "open-loop ReAct fleet across arrival rates".into(),
+        base: Scenario::by_name("open-loop-sweep").expect("registry scenario"),
+        axis: SweepAxis::ArrivalRate(vec![0.125, 0.25, 0.5, 1.0, 2.0]),
+    };
+    let report = run_sweep(&cfg, &spec, &Policy::paper_lineup(), 7)?;
+
+    println!(
+        "== p99 TTFT (ms) vs arrival rate | {model} on {gpu} | TTFT SLO {:.0} ms ==\n",
+        report.slo_ttft_ms
+    );
+    print!("{:<12}", "policy");
+    for point in &report.points {
+        print!("{:>10}", format!("{}/s", point.axis_value));
+    }
+    println!();
+    for (pi, (policy, knee)) in report.knees.iter().enumerate() {
+        print!("{policy:<12}");
+        for point in &report.points {
+            print!("{:>10.0}", point.per_policy[pi].ttft_p99);
+        }
+        match knee {
+            Some(rate) => println!("   knee at {rate}/s"),
+            None => println!("   no knee in grid"),
+        }
+    }
+    println!("\n(paper: AgentServe's curve stays flat far past the baselines' knees)");
+    Ok(())
+}

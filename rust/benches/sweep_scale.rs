@@ -1,0 +1,57 @@
+//! Sweep-scale bench: times the simulator hot path at thousand-agent
+//! open-loop points (the `agent-scaling` registry grid, 250 → 2,000 agents)
+//! and one full small sweep grid, so scheduling or sim changes that regress
+//! the sweep engine's wall-clock show up immediately.
+//!
+//! The acceptance bar for `scenario sweep --name paper-fig5-sweep` is a
+//! full grid (including 2,000-agent points) in well under a minute; the
+//! per-point timings here are the early-warning signal for that.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_scenario_fast, Policy};
+use agentserve::util::bench::Bench;
+use agentserve::workload::{run_sweep, SweepAxis, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+
+    // Single points across the scaling axis, AgentServe policy.
+    let scaling = SweepSpec::by_name("agent-scaling").expect("registry sweep");
+    let b = Bench::new("sweep_scale").with_iters(1, 3);
+    for i in 0..scaling.axis.len() {
+        let scenario = scaling.scenario_at(i);
+        let label = format!("point_{}_agents", scenario.total_sessions);
+        b.case(&label, || {
+            run_scenario_fast(
+                &cfg,
+                Policy::AgentServe(Default::default()),
+                &scenario,
+                scaling.point_seed(7, i),
+            )
+            .report
+            .total_tokens
+        });
+    }
+
+    // A 2,000-agent point under the heaviest baseline (worst-case queues).
+    let biggest = scaling.scenario_at(scaling.axis.len() - 1);
+    b.case("point_2000_agents_llamacpp", || {
+        run_scenario_fast(&cfg, Policy::LlamaCpp, &biggest, 7)
+            .report
+            .total_tokens
+    });
+
+    // One full (small) grid through the sweep engine itself: 3 rate points
+    // x the whole paper lineup on a 100-agent fleet.
+    let mut small = SweepSpec::by_name("paper-fig5-sweep").expect("registry sweep");
+    small.base.total_sessions = 100;
+    small.base.n_agents = 100;
+    small.axis = SweepAxis::ArrivalRate(vec![0.25, 0.5, 1.0]);
+    b.case("grid_3rates_x_4policies_100_agents", || {
+        run_sweep(&cfg, &small, &Policy::paper_lineup(), 7)
+            .expect("sweep runs")
+            .points
+            .len()
+    });
+    Ok(())
+}

@@ -12,6 +12,11 @@
 //! Policies ([`Policy`]) cover AgentServe, its two ablations (§IV-D), and
 //! the three baselines (§IV-A): SGLang-style static PD disaggregation,
 //! vLLM-style chunked prefill, and llama.cpp-style unchunked mixed batching.
+//!
+//! The simulator's inner loop is allocation-free at steady state (pooled
+//! batch buffers, an indexed ready-queue in the batcher), which is what
+//! lets `scenario sweep` push single points to thousands of concurrent
+//! open-loop agents; [`run_scenario_fast`] is the sweep entry point.
 
 pub mod policy;
 pub mod real;
@@ -19,6 +24,7 @@ pub mod sim;
 
 pub use policy::{AgentServeOpts, Policy, SglangOpts};
 pub use sim::{
-    record_scenario_trace, run_scenario, run_scenario_recorded, run_sim, run_sim_trace,
-    run_sim_trace_recorded, ExecEvent, ExecEventKind, ExecTrace, SimOutcome, SimParams,
+    record_scenario_trace, run_scenario, run_scenario_fast, run_scenario_recorded, run_sim,
+    run_sim_trace, run_sim_trace_recorded, ExecEvent, ExecEventKind, ExecTrace, SimOutcome,
+    SimParams,
 };

@@ -244,8 +244,9 @@ enum Work {
     DecodeStep { ids: Vec<u64>, resume: Option<(usize, u32)>, dur_us: f64 },
     /// SGLang KV transfer / process handoff after a prefill.
     Transfer { sess: usize, kind: JobKind },
-    /// One-engine hybrid iteration (vLLM / llama.cpp).
-    Iteration { chunks: Vec<IterChunk>, decode_ids: Vec<u64> },
+    /// One-engine hybrid iteration (vLLM / llama.cpp): at most one prompt
+    /// (chunk) rides alongside the decode streams.
+    Iteration { chunk: Option<IterChunk>, decode_ids: Vec<u64> },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -338,6 +339,11 @@ struct Sim {
     /// interleaved resume/prefill kernels — the delay decode rounds see).
     decode_round_accum_us: f64,
     control_trace: Vec<(u64, u32, u32)>,
+    /// Recycled decode-batch id buffers. Every decode step borrows one and
+    /// returns it on completion, so the steady-state inner loop performs no
+    /// per-event heap allocation (thousand-agent sweep points emit hundreds
+    /// of thousands of steps per run).
+    id_buf_pool: Vec<Vec<u64>>,
 }
 
 impl Sim {
@@ -350,6 +356,15 @@ impl Sim {
         if let Some(log) = &mut self.log {
             log.push(ExecEvent { t_us: self.now, kind });
         }
+    }
+
+    fn take_id_buf(&mut self) -> Vec<u64> {
+        self.id_buf_pool.pop().unwrap_or_default()
+    }
+
+    fn recycle_id_buf(&mut self, mut buf: Vec<u64>) {
+        buf.clear();
+        self.id_buf_pool.push(buf);
     }
 
     fn decode_share(&self) -> f64 {
@@ -511,6 +526,14 @@ impl Sim {
         }
     }
 
+    fn batcher(&self) -> &DecodeBatcher {
+        match &self.state {
+            PState::AgentServe { batcher, .. } => batcher,
+            PState::Sglang { batcher, .. } => batcher,
+            PState::IterBatch { batcher, .. } => batcher,
+        }
+    }
+
     fn kv_add(&mut self, tokens: u64) {
         self.kv_used += tokens;
         self.kv_peak = self.kv_peak.max(self.kv_used);
@@ -587,18 +610,20 @@ impl Sim {
                     }
                 }
                 self.apply_decode_step(&ids);
+                self.recycle_id_buf(ids);
             }
             Work::Transfer { sess, kind } => {
                 self.start_decode_burst(sess, kind);
             }
-            Work::Iteration { chunks, decode_ids } => {
-                for c in &chunks {
+            Work::Iteration { chunk, decode_ids } => {
+                if let Some(c) = chunk {
                     self.account_prefill_tokens(c.sess, c.tokens, c.kind);
                     if c.completes {
                         self.start_decode_burst(c.sess, c.kind);
                     }
                 }
                 self.apply_decode_step(&decode_ids);
+                self.recycle_id_buf(decode_ids);
             }
         }
     }
@@ -642,8 +667,7 @@ impl Sim {
         if self.ctx_work[PREFILL_CTX].is_some() {
             return;
         }
-        let decode_idle =
-            self.ctx_work[DECODE_CTX].is_none() && self.batcher_mut().next_batch().0.is_empty();
+        let decode_idle = self.ctx_work[DECODE_CTX].is_none() && !self.batcher().has_ready();
         let share = if decode_idle { 1.0 } else { share };
         let head = match &mut self.state {
             PState::AgentServe { queues, .. } => queues.pop_cold(),
@@ -679,7 +703,8 @@ impl Sim {
         if self.ctx_work[DECODE_CTX].is_some() {
             return;
         }
-        let (ids, total_ctx) = self.batcher_mut().next_batch();
+        let mut ids = self.take_id_buf();
+        let total_ctx = self.batcher_mut().next_batch_into(&mut ids);
         let stream_alloc = self.cfg.engine.stream_alloc_us;
 
         // Pop an admitted resume to merge into this step, and (No-Green
@@ -713,6 +738,7 @@ impl Sim {
                             *pending_rebind_us += rebind_charge;
                         }
                     }
+                    self.recycle_id_buf(ids);
                     return;
                 }
                 let (r_info, r_tokens, r_ctx) = match &resume {
@@ -746,9 +772,12 @@ impl Sim {
                     }
                     if !ids.is_empty() {
                         self.dispatch_decode_step(ids, total_ctx, share);
+                    } else {
+                        self.recycle_id_buf(ids);
                     }
                     return;
                 }
+                self.recycle_id_buf(ids);
                 self.sessions[sess].phase = SessPhase::Prefilling;
                 let dur = self.cost.prefill_ctx_us(
                     q.job.tokens as u64,
@@ -822,8 +851,10 @@ impl Sim {
         if self.ctx_work[DECODE_CTX].is_some() {
             return;
         }
-        let (ids, total_ctx) = self.batcher_mut().next_batch();
+        let mut ids = self.take_id_buf();
+        let total_ctx = self.batcher_mut().next_batch_into(&mut ids);
         if ids.is_empty() {
+            self.recycle_id_buf(ids);
             return;
         }
         let mut dur = self.cost.decode_step_us(ids.len(), total_ctx, share);
@@ -841,9 +872,10 @@ impl Sim {
         if self.ctx_work[DECODE_CTX].is_some() {
             return;
         }
-        let (decode_ids, total_ctx) = self.batcher_mut().next_batch();
+        let mut decode_ids = self.take_id_buf();
+        let total_ctx = self.batcher_mut().next_batch_into(&mut decode_ids);
         let chunk_size = self.cfg.engine.chunk_size as u32;
-        let mut chunks: Vec<IterChunk> = Vec::new();
+        let mut chunk: Option<IterChunk> = None;
         match &mut self.state {
             PState::IterBatch { chunked, fifo, .. } => {
                 if *chunked {
@@ -851,7 +883,7 @@ impl Sim {
                     if let Some((sess, remaining, kind)) = fifo.front_mut() {
                         let take = chunk_size.min(*remaining);
                         let completes = take == *remaining;
-                        chunks.push(IterChunk { sess: *sess, tokens: take, kind: *kind, completes });
+                        chunk = Some(IterChunk { sess: *sess, tokens: take, kind: *kind, completes });
                         if completes {
                             fifo.pop_front();
                         } else {
@@ -863,7 +895,7 @@ impl Sim {
                     // (unchunked); later prompts wait their turn — n_batch
                     // admits one prompt's tokens per iteration.
                     if let Some((sess, remaining, kind)) = fifo.pop_front() {
-                        chunks.push(IterChunk {
+                        chunk = Some(IterChunk {
                             sess,
                             tokens: remaining,
                             kind,
@@ -874,23 +906,24 @@ impl Sim {
             }
             _ => unreachable!(),
         }
-        if chunks.is_empty() && decode_ids.is_empty() {
+        if chunk.is_none() && decode_ids.is_empty() {
+            self.recycle_id_buf(decode_ids);
             return;
         }
-        // Iteration duration: prefill parts + decode part, serialized.
+        // Iteration duration: prefill part + decode part, serialized.
         let mut dur = 0.0;
-        for c in &chunks {
+        if let Some(c) = &chunk {
             let ctx = self.sessions[c.sess].ctx_tokens as u64;
             dur += self.cost.prefill_ctx_us(c.tokens as u64, ctx, 1.0, c.kind.phase());
             self.sessions[c.sess].phase = SessPhase::Prefilling;
         }
         if !decode_ids.is_empty() {
             dur += self.cost.decode_step_us(decode_ids.len(), total_ctx, 1.0);
-            if !chunks.is_empty() {
+            if chunk.is_some() {
                 dur *= MIXED_ITER_PENALTY;
             }
         }
-        self.start(DECODE_CTX, Work::Iteration { chunks, decode_ids }, dur);
+        self.start(DECODE_CTX, Work::Iteration { chunk, decode_ids }, dur);
     }
 
     // -- control ticks -----------------------------------------------------------
@@ -965,6 +998,20 @@ pub fn run_sim(cfg: &Config, policy: Policy, params: &SimParams) -> SimOutcome {
     run_sim_scripts(cfg, policy, params, scripts)
 }
 
+/// Internal run switches: execution-event capture and per-token timeline
+/// retention (the latter is disabled on the sweep hot path).
+#[derive(Debug, Clone, Copy)]
+struct RunFlags {
+    record_events: bool,
+    record_timeline: bool,
+}
+
+impl Default for RunFlags {
+    fn default() -> Self {
+        Self { record_events: false, record_timeline: true }
+    }
+}
+
 /// Run with externally supplied scripts under the closed-loop plan
 /// described by `params` (stagger + completion-chained waves).
 pub fn run_sim_scripts(
@@ -978,7 +1025,7 @@ pub fn run_sim_scripts(
         stagger_us: params.stagger_us,
         think_time_us: params.think_time_us,
     };
-    run_sim_inner(cfg, policy, scripts, plan, false).0
+    run_sim_inner(cfg, policy, scripts, plan, RunFlags::default()).0
 }
 
 /// Scripts + explicit arrival plan from a recorded trace.
@@ -1016,7 +1063,7 @@ fn scenario_inputs(
 /// policy — the paired-comparison substrate of the scenario engine.
 pub fn run_sim_trace(cfg: &Config, policy: Policy, trace: &Trace) -> SimOutcome {
     let (scripts, plan) = trace_inputs(trace);
-    run_sim_inner(cfg, policy, scripts, plan, false).0
+    run_sim_inner(cfg, policy, scripts, plan, RunFlags::default()).0
 }
 
 /// [`run_sim_trace`] with the execution-event log captured.
@@ -1026,7 +1073,8 @@ pub fn run_sim_trace_recorded(
     trace: &Trace,
 ) -> (SimOutcome, ExecTrace) {
     let (scripts, plan) = trace_inputs(trace);
-    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, true);
+    let flags = RunFlags { record_events: true, ..RunFlags::default() };
+    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, flags);
     (out, log.unwrap_or_default())
 }
 
@@ -1035,7 +1083,22 @@ pub fn run_sim_trace_recorded(
 /// semantics (closed-loop chaining vs explicit open-loop arrivals).
 pub fn run_scenario(cfg: &Config, policy: Policy, scenario: &Scenario, seed: u64) -> SimOutcome {
     let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
-    run_sim_inner(cfg, policy, scripts, plan, false).0
+    run_sim_inner(cfg, policy, scripts, plan, RunFlags::default()).0
+}
+
+/// [`run_scenario`] with per-token timeline retention disabled — the sweep
+/// engine's hot path (thousand-session points across a policy × load grid).
+/// The report, SLO judgement, and every counter are byte-identical to
+/// [`run_scenario`]; only [`SimOutcome::timeline`] comes back empty.
+pub fn run_scenario_fast(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    seed: u64,
+) -> SimOutcome {
+    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    let flags = RunFlags { record_timeline: false, ..RunFlags::default() };
+    run_sim_inner(cfg, policy, scripts, plan, flags).0
 }
 
 /// [`run_scenario`] with the execution-event log captured.
@@ -1046,7 +1109,8 @@ pub fn run_scenario_recorded(
     seed: u64,
 ) -> (SimOutcome, ExecTrace) {
     let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
-    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, true);
+    let flags = RunFlags { record_events: true, ..RunFlags::default() };
+    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, flags);
     (out, log.unwrap_or_default())
 }
 
@@ -1061,7 +1125,7 @@ pub fn record_scenario_trace(
     seed: u64,
 ) -> (SimOutcome, Trace) {
     let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
-    let (out, _) = run_sim_inner(cfg, policy, scripts.clone(), plan, false);
+    let (out, _) = run_sim_inner(cfg, policy, scripts.clone(), plan, RunFlags::default());
     let trace = Trace::with_arrivals(scripts, &out.arrivals_us);
     (out, trace)
 }
@@ -1071,7 +1135,7 @@ fn run_sim_inner(
     policy: Policy,
     scripts: Vec<SessionScript>,
     plan: ArrivalPlan,
-    record_events: bool,
+    flags: RunFlags,
 ) -> (SimOutcome, Option<ExecTrace>) {
     let cost = CostModel::new(&cfg.model, &cfg.gpu);
     let max_batch = cfg.engine.max_decode_batch;
@@ -1143,18 +1207,22 @@ fn run_sim_inner(
         ArrivalPlan::Closed { n_agents, think_time_us, .. } => Some((*n_agents, *think_time_us)),
         ArrivalPlan::Explicit(_) => None,
     };
+    let mut metrics = MetricsRecorder::new();
+    if !flags.record_timeline {
+        metrics.disable_timeline();
+    }
     let mut sim = Sim {
         cost,
         sessions,
         chain,
         arrival_times: vec![0; n_sessions],
-        log: if record_events { Some(Vec::new()) } else { None },
-        heap: BinaryHeap::new(),
+        log: if flags.record_events { Some(Vec::new()) } else { None },
+        heap: BinaryHeap::with_capacity(n_sessions + 16),
         seq: 0,
         now: 0,
         ctx_work: [None, None],
         state,
-        metrics: MetricsRecorder::new(),
+        metrics,
         done_count: 0,
         kv_used: 0,
         kv_cap: (cfg.engine.kv_blocks * cfg.engine.kv_block_size) as u64,
@@ -1163,6 +1231,7 @@ fn run_sim_inner(
         resume_prefill_tokens: 0,
         decode_round_accum_us: 0.0,
         control_trace: Vec::new(),
+        id_buf_pool: Vec::new(),
         cfg: cfg.clone(),
     };
 
@@ -1204,11 +1273,12 @@ fn run_sim_inner(
         _ => (RebindStats::default(), 0, 0, 0),
     };
     let exec = sim.log.take().map(|events| ExecTrace { events });
+    let timeline = sim.metrics.take_timeline();
     let outcome = SimOutcome {
         policy_name: policy.name().to_string(),
         report,
         slo,
-        timeline: sim.metrics.timeline().to_vec(),
+        timeline,
         rebinds,
         eta_cold: if total_prefill == 0 {
             0.0
@@ -1384,6 +1454,28 @@ mod tests {
         let plain = run_sim_trace(&cfg, Policy::AgentServe(AgentServeOpts::default()), &trace);
         assert_eq!(plain.report.total_tokens, out.report.total_tokens);
         assert_eq!(plain.report.wall_ms, out.report.wall_ms);
+    }
+
+    #[test]
+    fn fast_path_reports_match_default_path() {
+        // run_scenario_fast only skips per-token timeline retention; every
+        // aggregate (report JSON, SLO, counters) must be byte-identical.
+        let cfg = cfg();
+        let sc = Scenario::by_name("mixed-fleet").unwrap();
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario(&cfg, policy, &sc, 7);
+            let b = run_scenario_fast(&cfg, policy, &sc, 7);
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(a.slo.attained, b.slo.attained, "{}", policy.name());
+            assert_eq!(a.kv_peak_tokens, b.kv_peak_tokens, "{}", policy.name());
+            assert!(!a.timeline.is_empty(), "{}", policy.name());
+            assert!(b.timeline.is_empty(), "{}", policy.name());
+        }
     }
 
     #[test]

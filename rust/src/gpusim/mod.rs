@@ -6,13 +6,13 @@
 //!
 //! - **Fig. 3**: per-phase normalized throughput vs SM share — decode
 //!   saturates early, cold prefill scales near-linearly, resume prefill in
-//!   between ([`curves`]).
+//!   between ([`PhaseCurves`]).
 //! - **HoL blocking (Fig. 2)**: in mixed execution a long prefill kernel
 //!   occupies the device and delays queued decode steps.
 //! - Chunked-prefill overhead, dual-engine KV transfer, and Green-Context
 //!   rebind costs are all charged explicitly by the engine drivers.
 //!
-//! All times are in microseconds of *virtual* time ([`clock::VirtualClock`]).
+//! All times are in microseconds of *virtual* time ([`VirtualClock`]).
 
 mod clock;
 mod curves;

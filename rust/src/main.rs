@@ -1,10 +1,11 @@
 //! `agentserve` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//! - `bench`   one simulated serving benchmark (policy x model x GPU x N)
-//! - `figures` regenerate the paper's tables/figures
-//! - `analyze` competitive-ratio bounds (Theorem 1 / Corollary 2)
-//! - `serve`   end-to-end demo on the real PJRT engine
+//! - `bench`    one simulated serving benchmark (policy x model x GPU x N)
+//! - `scenario` the workload engine: list|run|record|replay|sweep
+//! - `figures`  regenerate the paper's tables/figures
+//! - `analyze`  competitive-ratio bounds (Theorem 1 / Corollary 2)
+//! - `serve`    end-to-end demo on the real PJRT engine
 
 fn main() -> anyhow::Result<()> {
     let args = agentserve::util::cli::Args::from_env()?;

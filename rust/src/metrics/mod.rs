@@ -1,5 +1,10 @@
 //! Serving metrics (§IV-A Metrics): TTFT, TPOT, throughput, and
 //! session-level joint SLO attainment, plus per-token timelines (Fig. 2).
+//!
+//! Invariant: aggregation is order-deterministic — sessions live in a
+//! `BTreeMap` so float reductions visit samples in a fixed order, which is
+//! what makes byte-identical golden-report snapshots and sweep reports
+//! possible (see `docs/ARCHITECTURE.md`, determinism contract).
 
 mod percentile;
 mod recorder;

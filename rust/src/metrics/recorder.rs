@@ -69,6 +69,11 @@ impl SessionMetrics {
 pub struct MetricsRecorder {
     sessions: BTreeMap<u64, SessionMetrics>,
     timeline: Vec<TpotSample>,
+    /// When set, per-token gap samples are not retained. Aggregate metrics
+    /// (TTFT/TPOT summaries, throughput, SLO inputs) are unaffected — the
+    /// sweep engine disables retention because thousands of sessions times
+    /// every emitted token would dominate a grid run's memory and time.
+    timeline_disabled: bool,
     total_tokens: u64,
     /// Prefill tokens processed (for prefill-throughput reporting).
     prefill_tokens: u64,
@@ -145,7 +150,9 @@ impl MetricsRecorder {
         s.burst_tokens += 1;
         s.last_token_us = Some(t_us);
         self.total_tokens += 1;
-        self.timeline.push(TpotSample { t_us, gap_ms, session });
+        if !self.timeline_disabled {
+            self.timeline.push(TpotSample { t_us, gap_ms, session });
+        }
     }
 
     /// Count prefill work for prefill-throughput reporting.
@@ -162,6 +169,18 @@ impl MetricsRecorder {
     /// Full per-token timeline (Fig. 2).
     pub fn timeline(&self) -> &[TpotSample] {
         &self.timeline
+    }
+
+    /// Disable per-token timeline retention (see the field note). Aggregate
+    /// reports stay byte-identical to a recording run.
+    pub fn disable_timeline(&mut self) {
+        self.timeline_disabled = true;
+    }
+
+    /// Move the timeline out without cloning (large runs: one sample per
+    /// emitted token). The recorder's aggregates remain valid afterwards.
+    pub fn take_timeline(&mut self) -> Vec<TpotSample> {
+        std::mem::take(&mut self.timeline)
     }
 
     pub fn sessions_map(&self) -> &BTreeMap<u64, SessionMetrics> {
@@ -297,6 +316,27 @@ mod tests {
         let r = m.report(1_000_000); // 1 second
         assert_eq!(r.total_tokens, 10);
         assert!((r.throughput_tok_s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disabled_timeline_keeps_aggregates_identical() {
+        let mut on = MetricsRecorder::new();
+        let mut off = MetricsRecorder::new();
+        off.disable_timeline();
+        for m in [&mut on, &mut off] {
+            m.request_arrival(0, 0);
+            m.first_token(0, 10_000);
+            m.token_emitted(0, 30_000);
+            m.token_emitted(0, 50_000);
+            m.session_complete(0, 50_000);
+        }
+        assert_eq!(on.timeline().len(), 2);
+        assert!(off.timeline().is_empty());
+        let (a, b) = (on.report(60_000), off.report(60_000));
+        assert_eq!(a.to_value().to_string(), b.to_value().to_string());
+        // take_timeline moves the samples out exactly once.
+        assert_eq!(on.take_timeline().len(), 2);
+        assert!(on.timeline().is_empty());
     }
 
     #[test]

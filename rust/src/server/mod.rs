@@ -1,4 +1,4 @@
-//! CLI front end: `agentserve bench|figures|analyze|serve`.
+//! CLI front end: `agentserve bench|scenario|figures|analyze|serve`.
 //!
 //! [`figures`] is the benchmark harness of deliverable (d): one function per
 //! paper table/figure, printing the same rows/series the paper reports and
@@ -26,6 +26,10 @@ USAGE:
                              [--policy P] [--model M] [--gpu G] [--seed N]
   agentserve scenario replay --trace trace.jsonl [--policy P | --all-policies]
                              [--model M] [--gpu G] [--verify]
+  agentserve scenario sweep  (--name SWEEP | (--scenario S | --file f.json)
+                              (--rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…))
+                             [--policy P] [--model M] [--gpu G] [--seed N]
+                             [--out report.json] [--csv report.csv]
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
   agentserve analyze  [--model M] [--gpu G] [--delta D] [--eps E]
   agentserve serve    [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
@@ -35,7 +39,9 @@ policies:  agentserve | no-alg | no-green | sglang | vllm | llamacpp
 models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
-           (see rust/src/workload/README.md for the scenario-file schema)
+sweeps:    paper-fig5-sweep | agent-scaling | mix-shift
+           (sweep runs all paper policies unless --policy is given; see
+           rust/src/workload/README.md for the scenario/sweep file schema)
 ";
 
 /// Entry point used by `main` (and by CLI tests).
@@ -145,19 +151,26 @@ fn load_trace_any(path: &str) -> crate::Result<crate::workload::Trace> {
     crate::workload::Trace::from_jsonl(&text)
 }
 
+/// Load a scenario file from disk, applying its optional embedded sparse
+/// `"config"` overrides on top of the CLI's model/gpu preset. Shared by
+/// `scenario run|record` (`--file`) and `scenario sweep` base resolution.
+fn scenario_from_file(path: &str, cfg: &mut Config) -> crate::Result<crate::workload::Scenario> {
+    let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
+    let sc = crate::workload::Scenario::from_value(&v)?;
+    if let Some(overrides) = v.get("config") {
+        cfg.apply_overrides(overrides);
+        cfg.validate()?;
+    }
+    Ok(sc)
+}
+
 /// Resolve the scenario named on the command line: `--name` from the
 /// built-in registry, or `--file` from disk (which may embed sparse
 /// `"config"` overrides applied on top of the CLI's model/gpu preset).
 fn load_scenario_arg(args: &Args, cfg: &mut Config) -> crate::Result<crate::workload::Scenario> {
     use crate::workload::Scenario;
     if let Some(path) = args.get("file") {
-        let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
-        let sc = Scenario::from_value(&v)?;
-        if let Some(overrides) = v.get("config") {
-            cfg.apply_overrides(overrides);
-            cfg.validate()?;
-        }
-        Ok(sc)
+        scenario_from_file(path, cfg)
     } else if let Some(name) = args.get("name") {
         Scenario::by_name(name).ok_or_else(|| {
             anyhow::anyhow!("unknown scenario '{name}' (try `agentserve scenario list`)")
@@ -211,7 +224,8 @@ fn events_path(base: &str, slug: &str) -> String {
     }
 }
 
-/// `agentserve scenario list|run|record|replay` — the scenario engine CLI.
+/// `agentserve scenario list|run|record|replay|sweep` — the scenario
+/// engine CLI.
 fn scenario_cmd(args: &Args) -> crate::Result<()> {
     use crate::engine::{record_scenario_trace, run_scenario, run_scenario_recorded, run_sim_trace};
     use crate::workload::Scenario;
@@ -233,6 +247,16 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
                     s.name,
                     s.total_sessions,
                     s.arrivals.kind_name(),
+                    s.description
+                );
+            }
+            println!("\nbuilt-in sweeps (scenario sweep --name <sweep>):");
+            for s in crate::workload::SweepSpec::registry() {
+                println!(
+                    "  {:<16} {:>3} points    {:<11} {}",
+                    s.name,
+                    s.axis.len(),
+                    s.axis.kind_name(),
                     s.description
                 );
             }
@@ -278,6 +302,36 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             println!("recorded {} sessions -> {out_path}", trace.len());
             Ok(())
         }
+        Some("sweep") => {
+            let spec = resolve_sweep_spec(args, &mut cfg)?;
+            spec.validate()?;
+            // Sweeps default to comparing the whole paper lineup; --policy
+            // narrows to one (for quick smokes).
+            let policies = match args.get("policy") {
+                Some(p) => vec![p.parse::<Policy>()?],
+                None => Policy::paper_lineup(),
+            };
+            println!(
+                "== sweep '{}' | axis {} ({}) | {} | {} | seed {} ==",
+                spec.name,
+                spec.axis.kind_name(),
+                spec.axis.unit(),
+                model,
+                gpu,
+                seed
+            );
+            let report = crate::workload::run_sweep(&cfg, &spec, &policies, seed)?;
+            print_sweep_report(&report);
+            if let Some(path) = args.get("out") {
+                report.save_json(path)?;
+                println!("sweep report -> {path}");
+            }
+            if let Some(path) = args.get("csv") {
+                report.save_csv(path)?;
+                println!("sweep CSV -> {path}");
+            }
+            Ok(())
+        }
         Some("replay") => {
             let path = args
                 .get("trace")
@@ -312,8 +366,104 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             eprintln!("{USAGE}");
             match other {
                 Some(a) => anyhow::bail!("unknown scenario action '{a}'"),
-                None => anyhow::bail!("scenario needs an action: list|run|record|replay"),
+                None => anyhow::bail!("scenario needs an action: list|run|record|replay|sweep"),
             }
+        }
+    }
+}
+
+/// Resolve `scenario sweep` inputs: `--name` picks a built-in sweep;
+/// otherwise a base scenario (`--scenario` registry name or `--file`, which
+/// may embed config overrides) plus exactly one axis flag builds an ad-hoc
+/// spec.
+fn resolve_sweep_spec(
+    args: &Args,
+    cfg: &mut Config,
+) -> crate::Result<crate::workload::SweepSpec> {
+    use crate::workload::{Scenario, SweepAxis, SweepSpec};
+    if let Some(name) = args.get("name") {
+        // A registry sweep is fully specified: refuse flags that would be
+        // silently dropped (the grid the user asked for must be the grid run).
+        for flag in ["scenario", "file", "rates", "agents", "mix"] {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--name picks a built-in sweep; --{flag} would be ignored — \
+                 drop --name to build an ad-hoc sweep"
+            );
+        }
+        return SweepSpec::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown sweep '{name}' (try `agentserve scenario list`)")
+        });
+    }
+    let base = if let Some(path) = args.get("file") {
+        scenario_from_file(path, cfg)?
+    } else if let Some(name) = args.get("scenario") {
+        Scenario::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (try `agentserve scenario list`)")
+        })?
+    } else {
+        anyhow::bail!(
+            "scenario sweep needs --name <sweep>, or a base scenario \
+             (--scenario <name> | --file <scenario.json>) plus an axis flag"
+        )
+    };
+    let rates = args.get_f64_list("rates")?;
+    let agents = args.get_usize_list("agents")?;
+    let mix = args.get_f64_list("mix")?;
+    let n_axes = [rates.is_some(), agents.is_some(), mix.is_some()]
+        .iter()
+        .filter(|&&x| x)
+        .count();
+    anyhow::ensure!(
+        n_axes == 1,
+        "pass exactly one sweep axis: --rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…"
+    );
+    let axis = if let Some(r) = rates {
+        SweepAxis::ArrivalRate(r)
+    } else if let Some(a) = agents {
+        SweepAxis::AgentCount(a)
+    } else {
+        SweepAxis::MixRatio(mix.expect("one axis is set"))
+    };
+    Ok(SweepSpec {
+        name: format!("{}-sweep", base.name),
+        description: format!("ad-hoc {} sweep over '{}'", axis.kind_name(), base.name),
+        base,
+        axis,
+    })
+}
+
+/// Render a sweep report: one block per grid point, then the knee summary.
+fn print_sweep_report(report: &crate::workload::SweepReport) {
+    for point in &report.points {
+        println!(
+            "-- {} {} {} | {} sessions | seed {} --",
+            report.axis, point.axis_value, report.axis_unit, point.sessions, point.seed
+        );
+        println!(
+            "   {:<11} {:>10} {:>10} {:>10} {:>9} {:>7}",
+            "policy", "TTFT p50", "TTFT p99", "TPOT p99", "tok/s", "SLO"
+        );
+        for pp in &point.per_policy {
+            println!(
+                "   {:<11} {:>8.0}ms {:>8.0}ms {:>8.1}ms {:>9.1} {:>6.1}%",
+                pp.policy,
+                pp.ttft_p50,
+                pp.ttft_p99,
+                pp.tpot_p99,
+                pp.throughput_tok_s,
+                pp.slo_rate * 100.0
+            );
+        }
+    }
+    println!(
+        "knee ({} where p99 TTFT first exceeds the {:.0} ms SLO):",
+        report.axis, report.slo_ttft_ms
+    );
+    for (policy, knee) in &report.knees {
+        match knee {
+            Some(v) => println!("   {:<11} {} {}", policy, v, report.axis_unit),
+            None => println!("   {:<11} none within the grid", policy),
         }
     }
 }
@@ -424,6 +574,58 @@ mod tests {
         assert!(run(args("scenario run --name no-such-scenario")).is_err());
         assert!(run(args("scenario")).is_err());
         assert!(run(args("scenario frobnicate")).is_err());
+    }
+
+    #[test]
+    fn scenario_sweep_smoke_and_artifacts() {
+        // A tiny 2-point grid under one policy, with JSON + CSV artifacts.
+        let dir = std::env::temp_dir().join("agentserve_scenario_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("sweep.json");
+        let csv = dir.join("sweep.csv");
+        run(args(&format!(
+            "scenario sweep --scenario paper-fig5 --rates 0.5,2 --policy vllm \
+             --model 3b --out {} --csv {}",
+            json.to_str().unwrap(),
+            csv.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "arrival-rate");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        assert_eq!(report.req_arr("knees").unwrap().len(), 1);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert_eq!(csv_text.lines().count(), 1 + 2, "header + one row per point×policy");
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(csv).unwrap();
+    }
+
+    #[test]
+    fn scenario_sweep_flag_validation() {
+        // Unknown sweep name.
+        assert!(run(args("scenario sweep --name no-such-sweep")).is_err());
+        // --name with flags that would be silently dropped is an error.
+        assert!(run(args("scenario sweep --name agent-scaling --agents 3,4")).is_err());
+        assert!(run(args("scenario sweep --name agent-scaling --scenario paper-fig5")).is_err());
+        // No base scenario / axis at all.
+        assert!(run(args("scenario sweep")).is_err());
+        // Two axes at once.
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --rates 1,2 --agents 3,4"
+        ))
+        .is_err());
+        // Axis without a base scenario.
+        assert!(run(args("scenario sweep --rates 1,2")).is_err());
+        // Non-increasing grid.
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --rates 2,1 --policy vllm"
+        ))
+        .is_err());
+        // Mix axis on a single-population base.
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --mix 0.2,0.8 --policy vllm"
+        ))
+        .is_err());
     }
 
     #[test]

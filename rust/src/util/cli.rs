@@ -84,6 +84,33 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// Comma-separated f64 list (`--rates 0.5,1,2`); `None` when absent.
+    pub fn get_f64_list(&self, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+        self.get_list(key, |s| s.parse::<f64>().map_err(Into::into))
+    }
+
+    /// Comma-separated usize list (`--agents 250,1000,2000`); `None` when absent.
+    pub fn get_usize_list(&self, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        self.get_list(key, |s| s.parse::<usize>().map_err(Into::into))
+    }
+
+    fn get_list<T>(
+        &self,
+        key: &str,
+        parse: impl Fn(&str) -> anyhow::Result<T>,
+    ) -> anyhow::Result<Option<Vec<T>>> {
+        let Some(raw) = self.get(key) else { return Ok(None) };
+        let mut out = Vec::new();
+        for part in raw.split(',') {
+            let part = part.trim();
+            anyhow::ensure!(!part.is_empty(), "empty entry in --{key} list '{raw}'");
+            out.push(
+                parse(part).map_err(|e| anyhow::anyhow!("--{key} entry '{part}': {e}"))?,
+            );
+        }
+        Ok(Some(out))
+    }
 }
 
 #[cfg(test)]
@@ -137,5 +164,26 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("bench --agents five");
         assert!(a.get_usize("agents", 1).is_err());
+    }
+
+    #[test]
+    fn comma_lists_parse() {
+        let a = parse("scenario sweep --rates 0.5,1,2 --agents 250,2000");
+        assert_eq!(a.get_f64_list("rates").unwrap(), Some(vec![0.5, 1.0, 2.0]));
+        assert_eq!(a.get_usize_list("agents").unwrap(), Some(vec![250, 2000]));
+        assert_eq!(a.get_f64_list("mix").unwrap(), None);
+        // Whitespace around entries is tolerated (quoted lists).
+        let b = Args::parse(["sweep", "--rates", " 1 , 2 "].map(String::from)).unwrap();
+        assert_eq!(b.get_f64_list("rates").unwrap(), Some(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn bad_list_entries_are_errors() {
+        let a = parse("scenario sweep --rates 1,,2");
+        assert!(a.get_f64_list("rates").is_err(), "empty entry rejected");
+        let b = parse("scenario sweep --rates 1,x");
+        assert!(b.get_f64_list("rates").is_err(), "non-numeric entry rejected");
+        let c = parse("scenario sweep --agents 1.5,2");
+        assert!(c.get_usize_list("agents").is_err(), "non-integer agent count rejected");
     }
 }

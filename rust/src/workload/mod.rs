@@ -7,23 +7,37 @@
 //! latency. Concurrency varies from 3 to 6 agents.
 //!
 //! Since the original traces are not redistributable, we generate sessions
-//! from the paper's own Table I token statistics (see [`spec`]); the
-//! distribution test in [`stats`] verifies the generator matches the table.
+//! from the paper's own Table I token statistics (see [`WorkloadSpec`]); the
+//! distribution test behind [`TokenStats`] verifies the generator matches
+//! the table.
 //!
 //! Two paradigms (§IV-A):
 //! - **ReAct** — frequent short resume prefills, extremely short decodes.
 //! - **Plan-and-Execute** — fewer but longer resume prefills, medium decodes.
+//!
+//! Above single workloads sit [`Scenario`] (declarative traffic: arrival
+//! process × population mix) and [`SweepSpec`] (a scenario driven across an
+//! arrival-rate / agent-count / mix-ratio grid — the paper's load curves).
+//!
+//! Invariant (the determinism contract, see `docs/ARCHITECTURE.md`): every
+//! artifact here is a pure function of its inputs and a `u64` seed —
+//! generators, scenario instantiation, sweep grids, and their JSON forms are
+//! byte-stable across runs and platforms.
 
 mod generator;
 mod scenario;
 mod spec;
 mod stats;
+mod sweep;
 mod trace;
 
 pub use generator::{SessionScript, SessionStep, WorkloadGenerator};
 pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
+pub use sweep::{
+    knee_value, run_sweep, PolicyPoint, SweepAxis, SweepPoint, SweepReport, SweepSpec,
+};
 pub use trace::{Trace, TraceEvent};
 
 #[cfg(test)]

@@ -1,0 +1,627 @@
+//! Arrival-rate / agent-count / mix-ratio sweep engine.
+//!
+//! The paper's headline results (2.8x TTFT, 2.7x TPOT) are *curves over
+//! load*, not single points: AgentServe's value appears as arrival rate and
+//! agent count grow and head-of-line blocking sets in. A [`SweepSpec`] takes
+//! any [`Scenario`] plus one [`SweepAxis`] and materializes a grid of load
+//! points; [`run_sweep`] executes every point under every requested policy
+//! (via the timeline-free simulator fast path) and aggregates a
+//! [`SweepReport`]: per-point TTFT/TPOT percentiles, throughput, SLO
+//! attainment, and the per-policy **knee point** — the first grid value
+//! whose p99 TTFT violates the TTFT SLO.
+//!
+//! Determinism contract: one `(SweepSpec, Config, base_seed)` triple fixes
+//! every byte of the report. Grid points get decorrelated per-point seeds
+//! ([`SweepSpec::point_seed`]), but all policies at one point share that
+//! seed, so within-point comparisons stay paired (identical workload bytes).
+//!
+//! Built-in sweeps ([`SweepSpec::registry`]) include `paper-fig5-sweep`,
+//! which reproduces the paper's load-curve shape with a 2,000-agent
+//! open-loop fleet at every rate point.
+
+use super::scenario::{ArrivalProcess, Population, Scenario};
+use super::spec::WorkloadKind;
+use crate::config::Config;
+use crate::engine::{run_scenario_fast, Policy, SimOutcome};
+use crate::util::json::Value;
+use std::path::Path;
+
+/// The swept load axis. Grid values must be strictly increasing so the knee
+/// point ("first value in violation") is well defined.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepAxis {
+    /// Open-loop arrival rate (expected arrivals per virtual second). Each
+    /// point replaces the base scenario's arrival process with
+    /// `Poisson { rate_per_s: value }`.
+    ArrivalRate(Vec<f64>),
+    /// Concurrent agent count: each point sets both `n_agents` and
+    /// `total_sessions` to the value (one session per agent — the
+    /// thousand-agent scaling axis).
+    AgentCount(Vec<usize>),
+    /// Weight fraction of population 0; the remaining weight is spread over
+    /// the other populations in their base proportions. Requires a base
+    /// scenario with at least two populations.
+    MixRatio(Vec<f64>),
+}
+
+impl SweepAxis {
+    /// Short tag used by the CLI and serialization.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            SweepAxis::ArrivalRate(_) => "arrival-rate",
+            SweepAxis::AgentCount(_) => "agent-count",
+            SweepAxis::MixRatio(_) => "mix-ratio",
+        }
+    }
+
+    /// Unit label for report rendering.
+    pub fn unit(&self) -> &'static str {
+        match self {
+            SweepAxis::ArrivalRate(_) => "req/s",
+            SweepAxis::AgentCount(_) => "agents",
+            SweepAxis::MixRatio(_) => "fraction",
+        }
+    }
+
+    /// Number of grid points.
+    pub fn len(&self) -> usize {
+        match self {
+            SweepAxis::ArrivalRate(v) => v.len(),
+            SweepAxis::AgentCount(v) => v.len(),
+            SweepAxis::MixRatio(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Grid value at `i`, as f64 (agent counts are exact in f64 range).
+    pub fn value_at(&self, i: usize) -> f64 {
+        match self {
+            SweepAxis::ArrivalRate(v) => v[i],
+            SweepAxis::AgentCount(v) => v[i] as f64,
+            SweepAxis::MixRatio(v) => v[i],
+        }
+    }
+}
+
+/// A declarative load sweep: one base scenario driven across a grid.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    pub description: String,
+    pub base: Scenario,
+    pub axis: SweepAxis,
+}
+
+impl SweepSpec {
+    /// Structural sanity checks (run before execution / after CLI assembly).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "sweep needs a name");
+        self.base.validate()?;
+        anyhow::ensure!(!self.axis.is_empty(), "sweep '{}' has an empty grid", self.name);
+        let vals: Vec<f64> = (0..self.axis.len()).map(|i| self.axis.value_at(i)).collect();
+        for w in vals.windows(2) {
+            anyhow::ensure!(
+                w[0] < w[1],
+                "sweep '{}' grid must be strictly increasing (got {} then {})",
+                self.name,
+                w[0],
+                w[1]
+            );
+        }
+        match &self.axis {
+            SweepAxis::ArrivalRate(rs) => {
+                for &r in rs {
+                    anyhow::ensure!(
+                        r.is_finite() && r > 0.0,
+                        "arrival rate must be finite and > 0 (got {r})"
+                    );
+                }
+            }
+            SweepAxis::AgentCount(cs) => {
+                for &c in cs {
+                    anyhow::ensure!(c > 0, "agent count must be > 0");
+                }
+            }
+            SweepAxis::MixRatio(fs) => {
+                anyhow::ensure!(
+                    self.base.populations.len() >= 2,
+                    "mix-ratio sweep needs >= 2 populations in '{}'",
+                    self.base.name
+                );
+                for &f in fs {
+                    anyhow::ensure!(
+                        f > 0.0 && f < 1.0,
+                        "mix fraction must be in (0, 1) (got {f})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The concrete scenario for grid point `i` (base with the axis applied).
+    pub fn scenario_at(&self, i: usize) -> Scenario {
+        let mut sc = self.base.clone();
+        match &self.axis {
+            SweepAxis::ArrivalRate(rs) => {
+                sc.arrivals = ArrivalProcess::Poisson { rate_per_s: rs[i] };
+            }
+            SweepAxis::AgentCount(cs) => {
+                sc.n_agents = cs[i];
+                sc.total_sessions = cs[i];
+            }
+            SweepAxis::MixRatio(fs) => {
+                let f = fs[i];
+                let rest: f64 = sc.populations[1..].iter().map(|p| p.weight).sum();
+                sc.populations[0].weight = f;
+                for p in &mut sc.populations[1..] {
+                    p.weight = p.weight / rest * (1.0 - f);
+                }
+            }
+        }
+        sc
+    }
+
+    /// Per-point seed: decorrelates grid points while keeping every policy
+    /// at one point on identical workload bytes (paired comparison).
+    pub fn point_seed(&self, base_seed: u64, i: usize) -> u64 {
+        base_seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    // -- registry ------------------------------------------------------------
+
+    /// Built-in sweeps (`agentserve scenario sweep --name <sweep>`).
+    pub fn registry() -> Vec<SweepSpec> {
+        vec![
+            SweepSpec {
+                name: "paper-fig5-sweep".into(),
+                description:
+                    "the paper's load curve at fleet scale: 2,000 open-loop ReAct agents \
+                     swept across arrival rate"
+                        .into(),
+                base: Scenario {
+                    name: "fig5-fleet".into(),
+                    description: "2,000 single-session ReAct agents, open-loop arrivals".into(),
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 8.0 },
+                    populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                    total_sessions: 2000,
+                    n_agents: 2000,
+                },
+                // Cold-prefill service capacity in the calibrated 3B/A5000
+                // cost model is ~0.5 sessions/s, so this grid straddles the
+                // saturation knee instead of sitting entirely past it.
+                axis: SweepAxis::ArrivalRate(vec![0.125, 0.25, 0.5, 1.0]),
+            },
+            SweepSpec {
+                name: "agent-scaling".into(),
+                description:
+                    "session-count scaling toward thousands of concurrent agents at a \
+                     fixed near-saturation arrival rate"
+                        .into(),
+                base: Scenario {
+                    name: "scaling-fleet".into(),
+                    description: "open-loop ReAct fleet; the sweep sets the size".into(),
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 0.5 },
+                    populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                    total_sessions: 250,
+                    n_agents: 250,
+                },
+                axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
+            },
+            SweepSpec {
+                name: "mix-shift".into(),
+                description:
+                    "population-mix sweep: ReAct share of a 200-agent ReAct / \
+                     Plan-and-Execute fleet"
+                        .into(),
+                base: Scenario {
+                    name: "mix-fleet".into(),
+                    description: "open-loop 0.4/s; the sweep sets the ReAct share".into(),
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 0.4 },
+                    populations: vec![
+                        Population::new("react", WorkloadKind::ReAct, 0.7),
+                        Population::new("planner", WorkloadKind::PlanAndExecute, 0.3),
+                    ],
+                    total_sessions: 200,
+                    n_agents: 200,
+                },
+                axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
+            },
+        ]
+    }
+
+    /// Look up a built-in sweep by name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<SweepSpec> {
+        Self::registry()
+            .into_iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// One policy's aggregate metrics at one grid point.
+#[derive(Debug, Clone)]
+pub struct PolicyPoint {
+    pub policy: String,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    pub throughput_tok_s: f64,
+    pub slo_rate: f64,
+    pub completed: usize,
+    pub wall_ms: f64,
+}
+
+impl PolicyPoint {
+    pub fn from_outcome(out: &SimOutcome) -> Self {
+        Self {
+            policy: out.policy_name.clone(),
+            ttft_p50: out.report.ttft.p50,
+            ttft_p95: out.report.ttft.p95,
+            ttft_p99: out.report.ttft.p99,
+            tpot_p50: out.report.tpot.p50,
+            tpot_p95: out.report.tpot.p95,
+            tpot_p99: out.report.tpot.p99,
+            throughput_tok_s: out.report.throughput_tok_s,
+            slo_rate: out.slo.rate(),
+            completed: out.report.completed_sessions,
+            wall_ms: out.report.wall_ms,
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("policy", self.policy.as_str().into()),
+            ("ttft_p50_ms", self.ttft_p50.into()),
+            ("ttft_p95_ms", self.ttft_p95.into()),
+            ("ttft_p99_ms", self.ttft_p99.into()),
+            ("tpot_p50_ms", self.tpot_p50.into()),
+            ("tpot_p95_ms", self.tpot_p95.into()),
+            ("tpot_p99_ms", self.tpot_p99.into()),
+            ("throughput_tok_s", self.throughput_tok_s.into()),
+            ("slo_rate", self.slo_rate.into()),
+            ("completed", self.completed.into()),
+            ("wall_ms", self.wall_ms.into()),
+        ])
+    }
+}
+
+/// One grid point: the axis value plus every policy's results on the
+/// identical (seeded) workload.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub axis_value: f64,
+    pub sessions: usize,
+    pub seed: u64,
+    pub per_policy: Vec<PolicyPoint>,
+}
+
+impl SweepPoint {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("value", self.axis_value.into()),
+            ("sessions", self.sessions.into()),
+            // Seeds serialize as strings: point seeds use the full u64 range
+            // and Value::Num (f64) would round them above 2^53, making the
+            // reported seed unable to reproduce the point.
+            ("seed", self.seed.to_string().into()),
+            (
+                "policies",
+                Value::Arr(self.per_policy.iter().map(|p| p.to_value()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Aggregated results of one sweep run. Serializes deterministically: the
+/// same `(SweepSpec, Config, base_seed)` produces byte-identical JSON/CSV.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub sweep: String,
+    pub axis: String,
+    pub axis_unit: String,
+    pub model: String,
+    pub gpu: String,
+    pub slo_ttft_ms: f64,
+    pub slo_tpot_ms: f64,
+    pub base_seed: u64,
+    pub points: Vec<SweepPoint>,
+    /// Per policy (in run order): the knee point, if any (see [`knee_value`]).
+    pub knees: Vec<(String, Option<f64>)>,
+}
+
+impl SweepReport {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("sweep", self.sweep.as_str().into()),
+            ("axis", self.axis.as_str().into()),
+            ("axis_unit", self.axis_unit.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("gpu", self.gpu.as_str().into()),
+            ("slo_ttft_ms", self.slo_ttft_ms.into()),
+            ("slo_tpot_ms", self.slo_tpot_ms.into()),
+            // String for the same exact-u64 reason as the per-point seeds.
+            ("base_seed", self.base_seed.to_string().into()),
+            (
+                "points",
+                Value::Arr(self.points.iter().map(|p| p.to_value()).collect()),
+            ),
+            (
+                "knees",
+                Value::Arr(
+                    self.knees
+                        .iter()
+                        .map(|(policy, knee)| {
+                            Value::obj(vec![
+                                ("policy", policy.as_str().into()),
+                                (
+                                    "knee",
+                                    match knee {
+                                        Some(v) => (*v).into(),
+                                        None => Value::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Flat CSV form (one row per point × policy) for plotting tools.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
+             tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms\n",
+        );
+        for pt in &self.points {
+            for pp in &pt.per_policy {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    self.axis,
+                    pt.axis_value,
+                    pp.policy,
+                    pt.sessions,
+                    pt.seed,
+                    pp.ttft_p50,
+                    pp.ttft_p95,
+                    pp.ttft_p99,
+                    pp.tpot_p50,
+                    pp.tpot_p95,
+                    pp.tpot_p99,
+                    pp.throughput_tok_s,
+                    pp.slo_rate,
+                    pp.completed,
+                    pp.wall_ms
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn save_json(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_value().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// The knee point for policy `policy_idx`: the smallest axis value whose
+/// p99 TTFT exceeds `ttft_slo_ms` (`None` when the whole grid is within
+/// SLO). Points must be in ascending axis order (enforced by
+/// [`SweepSpec::validate`]).
+pub fn knee_value(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
+    points
+        .iter()
+        .find(|pt| pt.per_policy[policy_idx].ttft_p99 > ttft_slo_ms)
+        .map(|pt| pt.axis_value)
+}
+
+/// Execute the full grid: every point under every policy, timeline-free.
+///
+/// Fully deterministic in `(cfg, spec, policies, base_seed)`; all policies
+/// at one grid point replay identical workload bytes.
+pub fn run_sweep(
+    cfg: &Config,
+    spec: &SweepSpec,
+    policies: &[Policy],
+    base_seed: u64,
+) -> crate::Result<SweepReport> {
+    spec.validate()?;
+    anyhow::ensure!(!policies.is_empty(), "sweep needs at least one policy");
+    let mut points = Vec::with_capacity(spec.axis.len());
+    for i in 0..spec.axis.len() {
+        let scenario = spec.scenario_at(i);
+        scenario.validate()?;
+        let seed = spec.point_seed(base_seed, i);
+        let per_policy = policies
+            .iter()
+            .map(|&policy| PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed)))
+            .collect();
+        points.push(SweepPoint {
+            axis_value: spec.axis.value_at(i),
+            sessions: scenario.total_sessions,
+            seed,
+            per_policy,
+        });
+    }
+    let knees = policies
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| (p.name().to_string(), knee_value(&points, pi, cfg.slo.ttft_ms)))
+        .collect();
+    Ok(SweepReport {
+        sweep: spec.name.clone(),
+        axis: spec.axis.kind_name().to_string(),
+        axis_unit: spec.axis.unit().to_string(),
+        model: cfg.model.kind.name().to_string(),
+        gpu: cfg.gpu.kind.name().to_string(),
+        slo_ttft_ms: cfg.slo.ttft_ms,
+        slo_tpot_ms: cfg.slo.tpot_ms,
+        base_seed,
+        points,
+        knees,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+
+    #[test]
+    fn registry_is_valid_and_named_uniquely() {
+        let reg = SweepSpec::registry();
+        assert!(reg.len() >= 3);
+        for s in &reg {
+            s.validate().unwrap();
+        }
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "sweep names must be unique");
+        assert!(SweepSpec::by_name("PAPER-FIG5-SWEEP").is_some());
+        assert!(SweepSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn paper_fig5_sweep_is_a_thousand_agent_grid() {
+        let spec = SweepSpec::by_name("paper-fig5-sweep").unwrap();
+        assert!(spec.axis.len() >= 3, "needs a real curve, not a point");
+        for i in 0..spec.axis.len() {
+            let sc = spec.scenario_at(i);
+            assert!(sc.total_sessions >= 2000, "every point is a >=2,000-agent fleet");
+            assert!(sc.n_agents >= 2000);
+            assert!(matches!(sc.arrivals, ArrivalProcess::Poisson { .. }));
+        }
+    }
+
+    #[test]
+    fn axes_apply_to_the_base_scenario() {
+        let spec = SweepSpec::by_name("agent-scaling").unwrap();
+        let sc = spec.scenario_at(3);
+        assert_eq!(sc.total_sessions, 2000);
+        assert_eq!(sc.n_agents, 2000);
+
+        let spec = SweepSpec::by_name("paper-fig5-sweep").unwrap();
+        match spec.scenario_at(0).arrivals {
+            ArrivalProcess::Poisson { rate_per_s } => assert_eq!(rate_per_s, 0.125),
+            other => panic!("expected poisson, got {other:?}"),
+        }
+
+        let spec = SweepSpec::by_name("mix-shift").unwrap();
+        let sc = spec.scenario_at(0);
+        assert!((sc.populations[0].weight - 0.1).abs() < 1e-12);
+        let total: f64 = sc.populations.iter().map(|p| p.weight).sum();
+        assert!((total - 1.0).abs() < 1e-9, "weights stay normalized (sum {total})");
+        // The shift really changes the instantiated mix.
+        let lo = sc.instantiate(ModelKind::Qwen3B, 7);
+        let hi = spec.scenario_at(4).instantiate(ModelKind::Qwen3B, 7);
+        let count0 = |wl: &crate::workload::ScenarioWorkload| {
+            wl.population_of.iter().filter(|&&p| p == 0).count()
+        };
+        assert!(
+            count0(&hi) > count0(&lo),
+            "raising population 0's share must raise its draw count"
+        );
+    }
+
+    #[test]
+    fn point_seeds_are_distinct_and_stable() {
+        let spec = SweepSpec::by_name("mix-shift").unwrap();
+        let seeds: Vec<u64> = (0..spec.axis.len()).map(|i| spec.point_seed(7, i)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "per-point seeds must differ");
+        assert_eq!(spec.point_seed(7, 2), seeds[2], "seeds are pure functions");
+        assert_ne!(spec.point_seed(8, 2), seeds[2], "base seed participates");
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut spec = SweepSpec::by_name("paper-fig5-sweep").unwrap();
+        spec.axis = SweepAxis::ArrivalRate(vec![]);
+        assert!(spec.validate().is_err(), "empty grid");
+        spec.axis = SweepAxis::ArrivalRate(vec![4.0, 2.0]);
+        assert!(spec.validate().is_err(), "non-increasing grid");
+        spec.axis = SweepAxis::ArrivalRate(vec![-1.0, 2.0]);
+        assert!(spec.validate().is_err(), "non-positive rate");
+        spec.axis = SweepAxis::ArrivalRate(vec![f64::INFINITY]);
+        assert!(spec.validate().is_err(), "non-finite rate");
+        spec.axis = SweepAxis::MixRatio(vec![0.5]);
+        assert!(spec.validate().is_err(), "mix sweep needs >= 2 populations");
+        let mut spec = SweepSpec::by_name("mix-shift").unwrap();
+        spec.axis = SweepAxis::MixRatio(vec![0.5, 1.5]);
+        assert!(spec.validate().is_err(), "fraction out of (0, 1)");
+    }
+
+    #[test]
+    fn report_seeds_serialize_exactly() {
+        // Point seeds span the full u64 range; JSON Num is f64-backed, so
+        // they are emitted as strings and must round-trip byte-exactly.
+        let spec = SweepSpec::by_name("mix-shift").unwrap();
+        let seed = spec.point_seed(7, 0);
+        assert!(seed > (1u64 << 53), "seed {seed} exercises the >2^53 range");
+        let report = SweepReport {
+            sweep: "s".into(),
+            axis: "arrival-rate".into(),
+            axis_unit: "req/s".into(),
+            model: "m".into(),
+            gpu: "g".into(),
+            slo_ttft_ms: 1.0,
+            slo_tpot_ms: 1.0,
+            base_seed: u64::MAX,
+            points: vec![SweepPoint {
+                axis_value: 1.0,
+                sessions: 1,
+                seed,
+                per_policy: vec![],
+            }],
+            knees: vec![],
+        };
+        let v = crate::util::json::parse(&report.to_value().to_string()).unwrap();
+        assert_eq!(v.req_str("base_seed").unwrap(), u64::MAX.to_string());
+        let pt = &v.req_arr("points").unwrap()[0];
+        assert_eq!(pt.req_str("seed").unwrap().parse::<u64>().unwrap(), seed);
+    }
+
+    #[test]
+    fn knee_is_first_violation_in_grid_order() {
+        let pp = |ttft_p99: f64| PolicyPoint {
+            policy: "X".into(),
+            ttft_p50: 0.0,
+            ttft_p95: 0.0,
+            ttft_p99,
+            tpot_p50: 0.0,
+            tpot_p95: 0.0,
+            tpot_p99: 0.0,
+            throughput_tok_s: 0.0,
+            slo_rate: 1.0,
+            completed: 1,
+            wall_ms: 0.0,
+        };
+        let points: Vec<SweepPoint> = [(1.0, 50.0), (2.0, 120.0), (4.0, 400.0)]
+            .iter()
+            .map(|&(axis_value, p99)| SweepPoint {
+                axis_value,
+                sessions: 1,
+                seed: 0,
+                per_policy: vec![pp(p99)],
+            })
+            .collect();
+        assert_eq!(knee_value(&points, 0, 100.0), Some(2.0));
+        assert_eq!(knee_value(&points, 0, 40.0), Some(1.0));
+        assert_eq!(knee_value(&points, 0, 1000.0), None);
+    }
+}
