@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point (documented in ROADMAP.md).
 #
-#   ./ci/check.sh            # fmt check (if rustfmt exists) + build + tests
-#                            #   + scenario smoke
+#   ./ci/check.sh            # fmt (hard) + clippy (hard) + build + rustdoc
+#                            #   + tests + scenario/record-replay/sweep smokes
 #
-# Every PR must leave this green. The golden-report snapshot
+# Every PR must leave this green; .github/workflows/ci.yml runs it with
+# CI=1 on every push/PR to main. The golden-report snapshot
 # (rust/tests/data/golden_report.json) is blessed on the first-ever run and
 # compared exactly afterwards; see rust/tests/scenarios.rs for the
 # regeneration protocol after intentional scheduling/cost-model changes.
+# Under CI=1 a missing snapshot is a hard failure — the golden gate must
+# not silently stay unarmed; bless it locally and commit it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,13 +19,26 @@ step() {
     echo "=== $1 ==="
 }
 
-step "Format check (advisory)"
+step "Format check"
 if cargo fmt --version >/dev/null 2>&1; then
-    # Advisory: reports drift without failing the gate (the seed predates
-    # rustfmt enforcement; tighten to a hard failure once the tree is clean).
-    cargo fmt --all -- --check || echo "rustfmt drift detected (advisory only)"
+    cargo fmt --all -- --check
 else
-    echo "rustfmt not installed; skipping"
+    if [ "${CI:-0}" = "1" ]; then
+        echo "ERROR: rustfmt is required in CI" >&2
+        exit 1
+    fi
+    echo "rustfmt not installed; skipping (install it — CI enforces this)"
+fi
+
+step "Clippy (warnings denied)"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    if [ "${CI:-0}" = "1" ]; then
+        echo "ERROR: clippy is required in CI" >&2
+        exit 1
+    fi
+    echo "clippy not installed; skipping (install it — CI enforces this)"
 fi
 
 step "Release build"
@@ -33,6 +49,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
 
 step "Test suite"
 snap="rust/tests/data/golden_report.json"
+if [ "${CI:-0}" = "1" ] && [ ! -f "$snap" ]; then
+    echo "ERROR: $snap is missing — the golden gate is unarmed." >&2
+    echo "Run ./ci/check.sh locally (the suite blesses the snapshot) and commit it." >&2
+    exit 1
+fi
 had_snap=0
 [ -f "$snap" ] && had_snap=1
 cargo test -q
@@ -56,6 +77,13 @@ cargo run --release --bin agentserve -- \
     scenario sweep --scenario open-loop-sweep --rates 0.25,0.5,1 \
     --policy agentserve --model 3b --out "$tmp/sweep.json" --csv "$tmp/sweep.csv"
 [ -s "$tmp/sweep.json" ] && [ -s "$tmp/sweep.csv" ]
+
+step "KV sweep smoke (memory axis: constrained vs ample pool)"
+cargo run --release --bin agentserve -- \
+    scenario sweep --scenario open-loop-sweep --kv-blocks 640,65536 \
+    --policy agentserve --model 3b --out "$tmp/kv.json" --csv "$tmp/kv.csv"
+[ -s "$tmp/kv.json" ] && [ -s "$tmp/kv.csv" ]
+grep -q '"axis": "kv-blocks"' "$tmp/kv.json"
 
 echo ""
 echo "ci/check.sh: all green"

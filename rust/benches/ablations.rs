@@ -59,7 +59,10 @@ fn main() -> anyhow::Result<()> {
     println!("(expect: coarser slots (larger delta) => lower rho bound and lower prefill service)");
 
     println!("\n== ablation: control interval Δt (N=5, 7B/A5000) ==");
-    println!("{:<10} {:>10} {:>10} {:>9} {:>9}", "Δt (ms)", "TTFT p95", "TPOT p95", "tok/s", "SLO");
+    println!(
+        "{:<10} {:>10} {:>10} {:>9} {:>9}",
+        "Δt (ms)", "TTFT p95", "TPOT p95", "tok/s", "SLO"
+    );
     for interval in [12.5, 25.0, 50.0, 200.0, 800.0] {
         let mut cfg = base.clone();
         cfg.scheduler.interval_ms = interval;

@@ -1,0 +1,105 @@
+//! KV-cache geometry and sharing policy.
+//!
+//! The paper's whole premise is a consumer-grade GPU where VRAM is the
+//! binding constraint (§III-C): KV blocks are a fixed pool, shared system
+//! prompts are deduplicated through the radix prefix cache, and admission
+//! stalls / evictions / preemptions appear once the fleet outgrows the pool.
+//! [`KvConfig`] is the single knob surface for that subsystem: pool size,
+//! page size, and whether cross-session prefix sharing is on.
+//!
+//! The default is **effectively unbounded with sharing off**: the
+//! simulator then tracks token-level peaks only and never gates admission,
+//! keeping every run where the old 65,536-token default gate never fired
+//! (goldens, the registry scenarios, `paper-fig5`) byte-identical.
+//! Thousand-agent runs that used to bind on that legacy gate now admit
+//! freely by default — bound the pool explicitly to model VRAM. Any
+//! bounded pool (or sharing) switches the simulator onto the paged path
+//! backed by `rust/src/kvcache/`.
+
+/// KV-cache subsystem configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Pool size in blocks. [`KvConfig::UNBOUNDED`] (0) means "effectively
+    /// unbounded": no admission gating, no eviction, no preemption.
+    pub num_blocks: usize,
+    /// Block (page) size in tokens.
+    pub block_size: usize,
+    /// Cross-session system-prompt sharing through the radix prefix cache.
+    /// When on, cold prefills are charged only for tokens the cache does
+    /// not already hold.
+    pub prefix_sharing: bool,
+}
+
+impl KvConfig {
+    /// Sentinel for an effectively-unbounded pool.
+    pub const UNBOUNDED: usize = 0;
+
+    /// Pool used when prefix sharing is requested with an unbounded pool:
+    /// the paged machinery needs a concrete allocator, so "unbounded"
+    /// becomes "far beyond any plausible fleet" (4M blocks = 64M tokens at
+    /// the default block size).
+    pub const UNBOUNDED_SHARING_BLOCKS: usize = 1 << 22;
+
+    /// True when the pool never constrains admission.
+    pub fn is_unbounded(&self) -> bool {
+        self.num_blocks == Self::UNBOUNDED
+    }
+
+    /// True when the simulator must run the paged (block-allocator) path.
+    pub fn is_paged(&self) -> bool {
+        !self.is_unbounded() || self.prefix_sharing
+    }
+
+    /// Concrete allocator pool size for the paged path.
+    pub fn pool_blocks(&self) -> usize {
+        if self.is_unbounded() {
+            Self::UNBOUNDED_SHARING_BLOCKS
+        } else {
+            self.num_blocks
+        }
+    }
+
+    /// Pool capacity in tokens (paged path).
+    pub fn pool_tokens(&self) -> u64 {
+        self.pool_blocks() as u64 * self.block_size as u64
+    }
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self {
+            num_blocks: Self::UNBOUNDED,
+            block_size: 16,
+            prefix_sharing: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_unbounded_and_unpaged() {
+        let kv = KvConfig::default();
+        assert!(kv.is_unbounded());
+        assert!(!kv.is_paged());
+        assert_eq!(kv.block_size, 16);
+    }
+
+    #[test]
+    fn bounded_pool_is_paged() {
+        let kv = KvConfig { num_blocks: 2048, ..KvConfig::default() };
+        assert!(kv.is_paged());
+        assert_eq!(kv.pool_blocks(), 2048);
+        assert_eq!(kv.pool_tokens(), 2048 * 16);
+    }
+
+    #[test]
+    fn sharing_forces_paged_with_huge_pool() {
+        let kv = KvConfig { prefix_sharing: true, ..KvConfig::default() };
+        assert!(kv.is_unbounded());
+        assert!(kv.is_paged());
+        assert_eq!(kv.pool_blocks(), KvConfig::UNBOUNDED_SHARING_BLOCKS);
+    }
+}

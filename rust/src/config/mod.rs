@@ -7,11 +7,13 @@
 //! with built-in presets matching the paper's setup (§IV-A).
 
 mod gpu;
+mod kv;
 mod model;
 mod scheduler;
 mod slo;
 
 pub use gpu::{GpuProfile, GpuKind};
+pub use kv::KvConfig;
 pub use model::{ModelProfile, ModelKind};
 pub use scheduler::SchedulerConfig;
 pub use slo::SloConfig;
@@ -32,6 +34,9 @@ pub struct Config {
     pub slo: SloConfig,
     /// Engine-level knobs.
     pub engine: EngineConfig,
+    /// KV-cache geometry and prefix-sharing policy (default: effectively
+    /// unbounded, sharing off — the pre-memory-model behavior).
+    pub kv: KvConfig,
 }
 
 /// Engine-level knobs shared by all policies.
@@ -39,10 +44,6 @@ pub struct Config {
 pub struct EngineConfig {
     /// Maximum decode batch size (slots).
     pub max_decode_batch: usize,
-    /// KV cache capacity in blocks.
-    pub kv_blocks: usize,
-    /// KV block size in tokens.
-    pub kv_block_size: usize,
     /// Chunk size used by the vLLM-style chunked-prefill baseline (tokens).
     pub chunk_size: usize,
     /// Per-handoff KV transfer + process coordination overhead for the
@@ -64,8 +65,6 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             max_decode_batch: 8,
-            kv_blocks: 4096,
-            kv_block_size: 16,
             chunk_size: 256,
             pd_transfer_us_per_token: 2.0,
             pd_handoff_fixed_us: 1500.0,
@@ -98,6 +97,7 @@ impl Config {
             scheduler,
             slo,
             engine: EngineConfig::default(),
+            kv: KvConfig::default(),
         }
     }
 
@@ -147,14 +147,20 @@ impl Config {
                 "engine",
                 Value::obj(vec![
                     ("max_decode_batch", self.engine.max_decode_batch.into()),
-                    ("kv_blocks", self.engine.kv_blocks.into()),
-                    ("kv_block_size", self.engine.kv_block_size.into()),
                     ("chunk_size", self.engine.chunk_size.into()),
                     ("pd_transfer_us_per_token", self.engine.pd_transfer_us_per_token.into()),
                     ("pd_handoff_fixed_us", self.engine.pd_handoff_fixed_us.into()),
                     ("rebind_us", self.engine.rebind_us.into()),
                     ("green_slots", self.engine.green_slots.into()),
                     ("stream_alloc_us", self.engine.stream_alloc_us.into()),
+                ]),
+            ),
+            (
+                "kv",
+                Value::obj(vec![
+                    ("num_blocks", self.kv.num_blocks.into()),
+                    ("block_size", self.kv.block_size.into()),
+                    ("prefix_sharing", Value::Bool(self.kv.prefix_sharing)),
                 ]),
             ),
         ])
@@ -197,14 +203,21 @@ impl Config {
         if let Some(e) = v.get("engine") {
             let c = &mut cfg.engine;
             override_usize(e, "max_decode_batch", &mut c.max_decode_batch);
-            override_usize(e, "kv_blocks", &mut c.kv_blocks);
-            override_usize(e, "kv_block_size", &mut c.kv_block_size);
+            // Legacy aliases: kv geometry lived under "engine" before the
+            // kv section existed; old config/scenario files keep working.
+            override_usize(e, "kv_blocks", &mut cfg.kv.num_blocks);
+            override_usize(e, "kv_block_size", &mut cfg.kv.block_size);
             override_usize(e, "chunk_size", &mut c.chunk_size);
             override_f64(e, "pd_transfer_us_per_token", &mut c.pd_transfer_us_per_token);
             override_f64(e, "pd_handoff_fixed_us", &mut c.pd_handoff_fixed_us);
             override_f64(e, "rebind_us", &mut c.rebind_us);
             override_usize(e, "green_slots", &mut c.green_slots);
             override_f64(e, "stream_alloc_us", &mut c.stream_alloc_us);
+        }
+        if let Some(k) = v.get("kv") {
+            override_usize(k, "num_blocks", &mut cfg.kv.num_blocks);
+            override_usize(k, "block_size", &mut cfg.kv.block_size);
+            override_bool(k, "prefix_sharing", &mut cfg.kv.prefix_sharing);
         }
     }
 
@@ -224,9 +237,14 @@ impl Config {
                 && self.scheduler.b_init <= self.scheduler.b_max,
             "prefill budget bounds must satisfy b_min <= b_init <= b_max"
         );
+        anyhow::ensure!(self.kv.block_size > 0, "kv block size must be positive");
         anyhow::ensure!(
-            self.engine.kv_block_size > 0 && self.engine.kv_blocks > 0,
-            "kv cache geometry must be positive"
+            self.kv.is_unbounded() || self.kv.num_blocks * self.kv.block_size >= 8192,
+            "a bounded kv pool must hold at least one worst-case session \
+             (>= 8192 tokens; got {} blocks x {} tokens) — smaller pools \
+             cannot make progress",
+            self.kv.num_blocks,
+            self.kv.block_size
         );
         Ok(())
     }
@@ -247,6 +265,12 @@ fn override_u32(v: &Value, key: &str, slot: &mut u32) {
 fn override_usize(v: &Value, key: &str, slot: &mut usize) {
     if let Some(x) = v.get(key).and_then(|x| x.as_f64()) {
         *slot = x as usize;
+    }
+}
+
+fn override_bool(v: &Value, key: &str, slot: &mut bool) {
+    if let Some(x) = v.get(key).and_then(|x| x.as_bool()) {
+        *slot = x;
     }
 }
 
@@ -274,12 +298,56 @@ mod tests {
         let mut cfg = Config::default();
         cfg.scheduler.delta_b = 77;
         cfg.engine.chunk_size = 123;
+        cfg.kv = KvConfig { num_blocks: 4096, block_size: 32, prefix_sharing: true };
         let text = cfg.to_json();
         let back = Config::from_value(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.gpu.sm_count, cfg.gpu.sm_count);
         assert_eq!(back.model.params_b, cfg.model.params_b);
         assert_eq!(back.scheduler.delta_b, 77);
         assert_eq!(back.engine.chunk_size, 123);
+        assert_eq!(back.kv, cfg.kv);
+    }
+
+    #[test]
+    fn legacy_engine_kv_fields_still_apply() {
+        // Pre-kv-section files put geometry under "engine"; they must keep
+        // selecting a bounded pool.
+        let mut cfg = Config::default();
+        let v = crate::util::json::parse(r#"{"engine": {"kv_blocks": 700, "kv_block_size": 32}}"#)
+            .unwrap();
+        cfg.apply_overrides(&v);
+        assert_eq!(cfg.kv.num_blocks, 700);
+        assert_eq!(cfg.kv.block_size, 32);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn kv_section_overrides_apply() {
+        let mut cfg = Config::default();
+        let v = crate::util::json::parse(
+            r#"{"kv": {"num_blocks": 2048, "prefix_sharing": true}}"#,
+        )
+        .unwrap();
+        cfg.apply_overrides(&v);
+        assert_eq!(cfg.kv.num_blocks, 2048);
+        assert_eq!(cfg.kv.block_size, 16, "untouched fields survive");
+        assert!(cfg.kv.prefix_sharing);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn undersized_kv_pool_rejected() {
+        let mut cfg = Config::default();
+        cfg.kv.num_blocks = 8;
+        assert!(cfg.validate().is_err());
+        // The floor is in tokens, not blocks: 64 x 16 = 1,024 tokens cannot
+        // hold a single 2.5k-token cold prefill.
+        cfg.kv.num_blocks = 64;
+        assert!(cfg.validate().is_err());
+        cfg.kv.num_blocks = 512; // 8,192 tokens
+        cfg.validate().unwrap();
+        cfg.kv.num_blocks = KvConfig::UNBOUNDED;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Memory-pressure admission path (§III-C): capacity-constrained KV
+//! admission over the paged subsystem in `rust/src/kvcache/`.
+//!
+//! The [`MemoryGovernor`] owns the [`BlockAllocator`] pool, the optional
+//! [`RadixPrefixCache`] (cross-session system-prompt sharing), and one
+//! [`SessionCache`] per session. Every prefill admission and every decoded
+//! token flows through it, so the engine sees real back-pressure:
+//!
+//! 1. **Admission** — a prefill is admitted only when the pool can hold its
+//!    uncached tokens (plus a small watermark on cold admissions that
+//!    reserves headroom for decode growth, vLLM-style). With sharing on,
+//!    cold prefills first consult the radix cache and are charged only for
+//!    tokens the cache does not already hold.
+//! 2. **Eviction** — when allocation falls short, least-recently-used radix
+//!    *leaves* are evicted first (shared blocks still leased by live
+//!    sessions survive; only the cache's own references are dropped).
+//! 3. **Preemption** — if eviction cannot free enough, the engine preempts
+//!    the lowest-priority (youngest-arrival) resident session: its blocks
+//!    are released and it must later recompute its context as a cold-style
+//!    prefill. The governor records the preemption and the resulting
+//!    memory stall (admission-failure → next successful admission).
+//!
+//! Victim *selection* stays in the engine (it knows phases and arrival
+//! order); the governor is the single owner of block/radix/session state and
+//! of the memory metrics (radix hit rate, occupancy, evictions,
+//! preemptions, stall distribution).
+
+use crate::config::KvConfig;
+use crate::kvcache::{BlockAllocator, RadixPrefixCache, SessionCache};
+use crate::metrics::{KvReport, Summary};
+
+/// Result of a successful prefill admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmittedPrefill {
+    /// Tokens that must actually be computed (total minus radix hits).
+    pub charged_tokens: u32,
+    /// Cached tokens adopted from the radix cache (attended-to context the
+    /// charged suffix sees on top of the job's own cached context).
+    pub cached_tokens: u32,
+}
+
+/// Capacity-constrained KV state for one simulated run.
+#[derive(Debug)]
+pub struct MemoryGovernor {
+    alloc: BlockAllocator,
+    radix: Option<RadixPrefixCache>,
+    sessions: Vec<SessionCache>,
+    /// Reusable filler for notional token contents (the sim does not model
+    /// decode/tool-output token values; only the system prompt has content).
+    zeros: Vec<u32>,
+    /// Cold-admission headroom (blocks) reserved for decode growth.
+    watermark: usize,
+    /// Monotone stamp bumped on every feasibility-changing mutation
+    /// (allocation, release, eviction). A held queue head whose admission
+    /// failed at the current stamp fails fast on retry — the engine
+    /// re-dispatches after *every* event, and without this each retry would
+    /// repeat a full radix lookup under sustained pressure.
+    change_tick: u64,
+    /// Per-session stamp of the last failed admission attempt.
+    admit_fail_tick: Vec<Option<u64>>,
+    // -- memory metrics -----------------------------------------------------
+    evictions: u64,
+    preemptions: u64,
+    hit_tokens: u64,
+    miss_tokens: u64,
+    stall_ms: Vec<f64>,
+    stall_since: Vec<Option<u64>>,
+    /// Time-weighted occupancy integral (blocks x us) and its last stamp.
+    occ_blocks_us: f64,
+    last_t_us: u64,
+}
+
+impl MemoryGovernor {
+    pub fn new(kv: &KvConfig, n_sessions: usize) -> Self {
+        let pool = kv.pool_blocks();
+        Self {
+            alloc: BlockAllocator::new(pool, kv.block_size),
+            radix: kv.prefix_sharing.then(RadixPrefixCache::new),
+            sessions: (0..n_sessions).map(|_| SessionCache::new()).collect(),
+            zeros: Vec::new(),
+            watermark: (pool / 100).max(1),
+            change_tick: 0,
+            admit_fail_tick: vec![None; n_sessions],
+            evictions: 0,
+            preemptions: 0,
+            hit_tokens: 0,
+            miss_tokens: 0,
+            stall_ms: Vec::new(),
+            stall_since: vec![None; n_sessions],
+            occ_blocks_us: 0.0,
+            last_t_us: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.alloc.block_size()
+    }
+
+    pub fn peak_used_tokens(&self) -> u64 {
+        self.alloc.peak_used() as u64 * self.alloc.block_size() as u64
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Advance the occupancy integral to `now`.
+    fn note(&mut self, now_us: u64) {
+        let dt = now_us.saturating_sub(self.last_t_us);
+        if dt > 0 {
+            self.occ_blocks_us += self.alloc.used_blocks() as f64 * dt as f64;
+            self.last_t_us = now_us;
+        }
+    }
+
+    fn stall_begin(&mut self, sess: usize, now_us: u64) {
+        if self.stall_since[sess].is_none() {
+            self.stall_since[sess] = Some(now_us);
+        }
+    }
+
+    fn stall_end(&mut self, sess: usize, now_us: u64) {
+        if let Some(t0) = self.stall_since[sess].take() {
+            self.stall_ms.push(now_us.saturating_sub(t0) as f64 / 1000.0);
+        }
+    }
+
+    /// Free at least `need` blocks, evicting LRU radix leaves if necessary.
+    /// Returns whether the pool now has the headroom. Blocks still leased by
+    /// live sessions are never freed — eviction only drops the cache's own
+    /// references, so a "successful" eviction may free fewer blocks than
+    /// nodes removed (hence the loop on actual free count).
+    pub fn free_at_least(&mut self, need: usize) -> bool {
+        if self.alloc.free_blocks() >= need {
+            return true;
+        }
+        if let Some(radix) = &mut self.radix {
+            while self.alloc.free_blocks() < need {
+                let evicted = radix.evict_lru(need - self.alloc.free_blocks(), &mut self.alloc);
+                if evicted == 0 {
+                    break;
+                }
+                self.evictions += evicted as u64;
+                self.change_tick += 1;
+            }
+        }
+        self.alloc.free_blocks() >= need
+    }
+
+    /// Admit a cold-style prefill (fresh or recompute): radix lookup over
+    /// the session's system prompt, then allocation for the uncached
+    /// remainder of `total_tokens`. `None` = not enough memory even after
+    /// eviction (the caller holds the job and may escalate to preemption).
+    pub fn admit_cold(
+        &mut self,
+        sess: usize,
+        prompt: &[u32],
+        total_tokens: u32,
+        now_us: u64,
+    ) -> Option<AdmittedPrefill> {
+        self.note(now_us);
+        if self.admit_fail_tick[sess] == Some(self.change_tick) {
+            return None; // nothing changed since the last failed attempt
+        }
+        debug_assert!(
+            self.sessions[sess].blocks().is_empty(),
+            "cold admission on a session still holding blocks"
+        );
+        debug_assert!(prompt.len() <= total_tokens as usize);
+        let (matched, leased) = match &mut self.radix {
+            Some(radix) => radix.lookup(prompt, &mut self.alloc),
+            None => (0, Vec::new()),
+        };
+        let uncached = total_tokens as usize - matched;
+        let need = self.alloc.blocks_for(uncached);
+        if !self.free_at_least(need + self.watermark) {
+            // Roll the leases back; the job stays queued and retries when
+            // blocks free up (or after the engine preempts a victim).
+            for b in leased {
+                self.alloc.release(b).expect("leased block is live");
+            }
+            self.admit_fail_tick[sess] = Some(self.change_tick);
+            self.stall_begin(sess, now_us);
+            return None;
+        }
+        if self.zeros.len() < uncached {
+            self.zeros.resize(uncached, 0);
+        }
+        let session = &mut self.sessions[sess];
+        session.adopt_prefix(leased, prompt, matched);
+        session
+            .begin_prefill(&self.zeros[..uncached], &mut self.alloc)
+            .expect("headroom was ensured above");
+        self.hit_tokens += matched as u64;
+        self.miss_tokens += uncached as u64;
+        self.admit_fail_tick[sess] = None;
+        self.change_tick += 1;
+        self.stall_end(sess, now_us);
+        Some(AdmittedPrefill { charged_tokens: uncached as u32, cached_tokens: matched as u32 })
+    }
+
+    /// Admit a resume prefill extending a resident session by `new_tokens`.
+    pub fn admit_resume(&mut self, sess: usize, new_tokens: u32, now_us: u64) -> bool {
+        self.note(now_us);
+        if self.admit_fail_tick[sess] == Some(self.change_tick) {
+            return false; // nothing changed since the last failed attempt
+        }
+        let session = &self.sessions[sess];
+        let have = session.blocks().len() * self.alloc.block_size();
+        let to = session.committed_tokens() + new_tokens as usize;
+        let need = self.alloc.blocks_for(to.saturating_sub(have));
+        if !self.free_at_least(need) {
+            self.admit_fail_tick[sess] = Some(self.change_tick);
+            self.stall_begin(sess, now_us);
+            return false;
+        }
+        let n = new_tokens as usize;
+        if self.zeros.len() < n {
+            self.zeros.resize(n, 0);
+        }
+        self.sessions[sess]
+            .begin_prefill(&self.zeros[..n], &mut self.alloc)
+            .expect("headroom was ensured above");
+        self.admit_fail_tick[sess] = None;
+        self.change_tick += 1;
+        self.stall_end(sess, now_us);
+        true
+    }
+
+    /// The in-flight prefill committed: its region becomes read-only and
+    /// decodable (the write fence clears).
+    pub fn complete_prefill(&mut self, sess: usize) {
+        self.sessions[sess].complete_prefill();
+    }
+
+    /// Index the session's (re)computed system prompt into the radix cache
+    /// so later cold prefills can share it. Call after a cold-style prefill
+    /// commits; only fully-filled prompt blocks are indexed.
+    pub fn insert_prompt(&mut self, sess: usize, prompt: &[u32]) {
+        if let Some(radix) = &mut self.radix {
+            radix.insert(prompt, self.sessions[sess].blocks(), &mut self.alloc);
+        }
+    }
+
+    /// Append one decoded token, growing the block list when the tail block
+    /// fills. `false` = out of blocks even after eviction (the caller must
+    /// preempt a victim and retry, or give up).
+    pub fn append_decoded(&mut self, sess: usize, now_us: u64) -> bool {
+        self.note(now_us);
+        let session = &self.sessions[sess];
+        let to = session.committed_tokens() + 1;
+        if to > session.blocks().len() * self.alloc.block_size() {
+            if !self.free_at_least(1) {
+                return false;
+            }
+            self.change_tick += 1; // a fresh block is about to be taken
+        }
+        self.sessions[sess]
+            .append_decoded(0, &mut self.alloc)
+            .expect("headroom was ensured above");
+        true
+    }
+
+    /// Preempt a resident session: release every block it holds (shared
+    /// prompt blocks survive through the radix cache's own references). The
+    /// session must recompute its context before it can continue.
+    ///
+    /// `runnable` = the victim could otherwise have made progress right now
+    /// (decoding / mid-transition); its memory-stall clock starts
+    /// immediately. Victims that are waiting on an external tool are *not*
+    /// memory-stalled yet — their clock starts at the recompute admission
+    /// attempt after the tool returns, so stall metrics never absorb tool
+    /// latency.
+    pub fn preempt(&mut self, sess: usize, now_us: u64, runnable: bool) {
+        self.note(now_us);
+        self.sessions[sess]
+            .release_all(&mut self.alloc)
+            .expect("preempting a resident session");
+        self.preemptions += 1;
+        self.change_tick += 1;
+        if runnable {
+            self.stall_begin(sess, now_us);
+        }
+    }
+
+    /// Session finished: release its blocks (the prompt prefix lives on in
+    /// the radix cache for future sessions).
+    pub fn release_session(&mut self, sess: usize, now_us: u64) {
+        self.note(now_us);
+        self.sessions[sess]
+            .release_all(&mut self.alloc)
+            .expect("finishing session releases cleanly");
+        self.change_tick += 1;
+    }
+
+    /// Debug/test hook: allocator + per-session invariants.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.alloc.check_invariants()
+    }
+
+    /// Memory metrics for the run report. Advances the occupancy integral
+    /// to `end_us` first.
+    pub fn report(&mut self, end_us: u64) -> KvReport {
+        self.note(end_us);
+        let mean_occupancy_blocks = if end_us == 0 {
+            0.0
+        } else {
+            self.occ_blocks_us / end_us as f64
+        };
+        KvReport {
+            total_blocks: self.alloc.num_blocks(),
+            block_size: self.alloc.block_size(),
+            peak_blocks: self.alloc.peak_used(),
+            mean_occupancy_blocks,
+            radix_hit_tokens: self.hit_tokens,
+            radix_miss_tokens: self.miss_tokens,
+            evictions: self.evictions,
+            preemptions: self.preemptions,
+            stalls: Summary::from_samples(&self.stall_ms),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(blocks: usize, sharing: bool) -> KvConfig {
+        KvConfig { num_blocks: blocks, block_size: 16, prefix_sharing: sharing }
+    }
+
+    fn prompt(n: usize, salt: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i.wrapping_mul(7).wrapping_add(salt)).collect()
+    }
+
+    #[test]
+    fn cold_admission_charges_uncached_only() {
+        let mut g = MemoryGovernor::new(&kv(256, true), 2);
+        let p = prompt(64, 1); // 4 blocks
+        let a = g.admit_cold(0, &p, 64, 0).unwrap();
+        assert_eq!(a.charged_tokens, 64);
+        assert_eq!(a.cached_tokens, 0);
+        g.complete_prefill(0);
+        g.insert_prompt(0, &p);
+        // Second session with the same prompt: full radix hit.
+        let b = g.admit_cold(1, &p, 64, 10).unwrap();
+        assert_eq!(b.charged_tokens, 0);
+        assert_eq!(b.cached_tokens, 64);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_fails_then_succeeds_after_release_and_records_stall() {
+        let mut g = MemoryGovernor::new(&kv(64, false), 2);
+        // Session 0 takes (almost) everything: 960 tokens = 60 blocks.
+        assert!(g.admit_cold(0, &prompt(960, 1), 960, 0).is_some());
+        g.complete_prefill(0);
+        // Session 1 cannot fit (needs 60 + watermark > 4 free).
+        assert!(g.admit_cold(1, &prompt(960, 2), 960, 5).is_none());
+        g.release_session(0, 1_000);
+        let a = g.admit_cold(1, &prompt(960, 2), 960, 2_000).unwrap();
+        assert_eq!(a.charged_tokens, 960);
+        let r = g.report(10_000);
+        assert_eq!(r.stalls.n, 1);
+        assert!((r.stalls.max - 1.995).abs() < 1e-9, "stall {} ms", r.stalls.max);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_frees_radix_blocks_under_pressure() {
+        let mut g = MemoryGovernor::new(&kv(64, true), 3);
+        let p = prompt(480, 3); // 30 blocks
+        g.admit_cold(0, &p, 480, 0).unwrap();
+        g.complete_prefill(0);
+        g.insert_prompt(0, &p);
+        g.release_session(0, 100); // blocks now held only by the radix tree
+        // A different prompt needing 40 blocks forces eviction of the first.
+        let q = prompt(640, 4);
+        let a = g.admit_cold(1, &q, 640, 200).unwrap();
+        assert_eq!(a.charged_tokens, 640);
+        let r = g.report(1_000);
+        assert!(r.evictions > 0, "evictions {}", r.evictions);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preemption_releases_blocks_and_counts() {
+        let mut g = MemoryGovernor::new(&kv(64, false), 2);
+        g.admit_cold(0, &prompt(480, 5), 480, 0).unwrap();
+        g.complete_prefill(0);
+        let free_before = g.free_blocks();
+        g.preempt(0, 50, true);
+        assert!(g.free_blocks() > free_before);
+        assert_eq!(g.preemptions(), 1);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decode_growth_allocates_and_reports_occupancy() {
+        let mut g = MemoryGovernor::new(&kv(64, false), 1);
+        g.admit_cold(0, &prompt(16, 6), 16, 0).unwrap();
+        g.complete_prefill(0);
+        for i in 0..32 {
+            assert!(g.append_decoded(0, 10 + i));
+        }
+        let r = g.report(1_000);
+        assert_eq!(r.peak_blocks, 3, "16 prefill + 32 decoded = 48 tokens = 3 blocks");
+        assert!(r.mean_occupancy_blocks > 0.0);
+    }
+}

@@ -8,12 +8,15 @@
 //!   and `R_min(t)` driven by step-level TPOT.
 //! - [`queues`] — Q_D (decode + admitted resumes) and Q_P (cold + rerouted).
 //! - [`batcher`] — decode batch formation under slot and fence constraints.
+//! - [`memory`] — the memory-pressure admission path: capacity-constrained
+//!   KV admission, radix eviction, and preemption bookkeeping (§III-C).
 //! - [`analysis`] — profile-aware competitive-ratio bounds against the
 //!   SLO-feasible offline optimum.
 
 pub mod analysis;
 pub mod batcher;
 pub mod classifier;
+pub mod memory;
 pub mod queues;
 pub mod request;
 pub mod scheduler;
@@ -21,6 +24,7 @@ pub mod scheduler;
 pub use analysis::{CompetitiveAnalyzer, CompetitiveBound};
 pub use batcher::DecodeBatcher;
 pub use classifier::{Classification, RequestManager};
+pub use memory::{AdmittedPrefill, MemoryGovernor};
 pub use queues::{DualQueues, QueuedJob};
 pub use request::{JobKind, PrefillJob, RequestId, SessionId};
 pub use scheduler::{ControlDecision, TpotScheduler, WindowStats};

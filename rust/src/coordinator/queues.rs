@@ -49,6 +49,13 @@ impl DualQueues {
         self.peak_cold = self.peak_cold.max(self.cold.len());
     }
 
+    /// Return a popped job to the head of the Q_D resume lane (same KV
+    /// back-pressure contract as [`DualQueues::push_cold_front`]).
+    pub fn push_resume_front(&mut self, q: QueuedJob) {
+        self.resume.push_front(q);
+        self.peak_resume = self.peak_resume.max(self.resume.len());
+    }
+
     pub fn pop_cold(&mut self) -> Option<QueuedJob> {
         self.cold.pop_front()
     }

@@ -82,7 +82,14 @@ impl TpotScheduler {
     pub fn new(cfg: SchedulerConfig, total_sms: u32) -> Self {
         let b_prefill = cfg.b_init.clamp(cfg.b_min, cfg.b_max);
         let r_min = cfg.r_init.clamp(cfg.r_base, total_sms);
-        Self { cfg, total_sms, b_prefill, r_min, window: WindowStats::default(), history: Vec::new() }
+        Self {
+            cfg,
+            total_sms,
+            b_prefill,
+            r_min,
+            window: WindowStats::default(),
+            history: Vec::new(),
+        }
     }
 
     pub fn b_prefill(&self) -> u32 {
@@ -115,7 +122,8 @@ impl TpotScheduler {
         let mode = match tpot {
             Some(t) if t > self.cfg.theta_high_ms => {
                 // Protection: shrink budget, grow decode reservation.
-                self.b_prefill = self.b_prefill.saturating_sub(self.cfg.delta_b).max(self.cfg.b_min);
+                self.b_prefill =
+                    self.b_prefill.saturating_sub(self.cfg.delta_b).max(self.cfg.b_min);
                 self.r_min = (self.r_min + self.cfg.delta_r).min(self.total_sms);
                 ControlMode::Protect
             }

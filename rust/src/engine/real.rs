@@ -180,7 +180,7 @@ pub fn run_real(
         // Tool returns.
         for i in 0..sessions.len() {
             if sessions[i].phase == Phase::ToolWait
-                && sessions[i].tool_deadline.map_or(false, |d| Instant::now() >= d)
+                && sessions[i].tool_deadline.is_some_and(|d| Instant::now() >= d)
             {
                 let step = sessions[i].script.steps[sessions[i].cur_step].clone();
                 let ids = prompt_ids(&sessions[i].script, geo.vocab, step.resume_tokens as usize);
@@ -256,7 +256,8 @@ pub fn run_real(
                 .find(|&c| c <= remaining)
                 .expect("lengths are chunk multiples");
             let tp = Instant::now();
-            let next = engine.prefill_chunk(sessions[i].slot, sessions[i].len, &ids[off..off + chunk])?;
+            let next =
+                engine.prefill_chunk(sessions[i].slot, sessions[i].len, &ids[off..off + chunk])?;
             accum_prefill_us += tp.elapsed().as_micros() as u64;
             sessions[i].len += chunk;
             chunks_run += 1;
@@ -281,7 +282,13 @@ pub fn run_real(
                 sessions[i].decode_remaining = burst.saturating_sub(1);
                 sessions[i].len += 1; // the first token's KV lands next step
                 if sessions[i].decode_remaining == 0 {
-                    finish_burst(&mut sessions[i], &mut metrics, &mut done, now_us(&t0), tool_scale);
+                    finish_burst(
+                        &mut sessions[i],
+                        &mut metrics,
+                        &mut done,
+                        now_us(&t0),
+                        tool_scale,
+                    );
                 } else {
                     sessions[i].phase = Phase::Decoding;
                     if policy == RealPolicy::AgentServe {
@@ -309,9 +316,9 @@ pub fn run_real(
                 lens[sessions[i].slot] = (sessions[i].len - 1) as i32;
             }
             // Inactive rows: keep lens in range, outputs ignored.
-            for i in 0..sessions.len() {
-                if sessions[i].phase != Phase::Decoding {
-                    lens[sessions[i].slot] = sessions[i].len.min(geo.max_seq - 1) as i32;
+            for s in &sessions {
+                if s.phase != Phase::Decoding {
+                    lens[s.slot] = s.len.min(geo.max_seq - 1) as i32;
                 }
             }
             // Fused multi-step decode when no prefill work is pending and

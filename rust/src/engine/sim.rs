@@ -25,11 +25,12 @@
 use super::policy::{AgentServeOpts, Policy, SglangOpts};
 use crate::config::Config;
 use crate::coordinator::{
-    Classification, DecodeBatcher, DualQueues, JobKind, PrefillJob, RequestManager, TpotScheduler,
+    Classification, DecodeBatcher, DualQueues, JobKind, MemoryGovernor, PrefillJob,
+    RequestManager, TpotScheduler,
 };
 use crate::gpusim::CostModel;
 use crate::greenctx::{GreenContextPool, RebindStats};
-use crate::metrics::{MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample};
+use crate::metrics::{KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample};
 use crate::util::json::Value;
 use crate::workload::{Scenario, SessionScript, Trace, WorkloadGenerator, WorkloadKind};
 use std::cmp::Reverse;
@@ -101,6 +102,9 @@ pub enum ExecEventKind {
     Token { session: u64 },
     /// Session finished its last burst.
     SessionDone { session: u64 },
+    /// KV memory pressure preempted the session: its blocks were released
+    /// and its context must be recomputed before it continues.
+    Preempted { session: u64 },
 }
 
 impl ExecEvent {
@@ -143,6 +147,11 @@ impl ExecEvent {
             ExecEventKind::SessionDone { session } => Value::obj(vec![
                 ("t_us", self.t_us.into()),
                 ("event", "session_done".into()),
+                ("session", session.into()),
+            ]),
+            ExecEventKind::Preempted { session } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "preempted".into()),
                 ("session", session.into()),
             ]),
         }
@@ -199,6 +208,9 @@ pub struct SimOutcome {
     pub resume_rerouted: u64,
     /// Peak KV usage in tokens.
     pub kv_peak_tokens: u64,
+    /// Memory-subsystem metrics — present only on the paged path (bounded
+    /// pool or prefix sharing); `None` under the default unbounded config.
+    pub kv: Option<KvReport>,
     /// Scheduler decisions (tick time us, b_prefill, r_min).
     pub control_trace: Vec<(u64, u32, u32)>,
     /// Realized cold-prefill arrival timestamp per session (us). For
@@ -222,16 +234,36 @@ enum SessPhase {
     Done,
 }
 
+/// What happens when a session's in-flight (or queued) prefill commits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AfterPrefill {
+    /// Start the session's first decode burst (cold prefill).
+    FirstBurst,
+    /// Start the next scripted step's burst (resume prefill).
+    StepBurst,
+    /// Rejoin the decode burst a memory preemption interrupted (the prefill
+    /// was a context recompute; no new token is emitted).
+    ContinueDecode,
+}
+
 #[derive(Debug)]
 struct SimSession {
     script: SessionScript,
     phase: SessPhase,
-    /// Committed cached tokens.
+    /// Committed cached tokens (logical context — survives preemption).
     ctx_tokens: u32,
     /// Completed tool cycles.
     cur_step: usize,
     /// Tokens left in the current decode burst.
     decode_remaining: u32,
+    /// Paged mode: the session's KV is physically resident. Cleared by
+    /// memory preemption; restored when a (re)compute prefill is admitted.
+    kv_resident: bool,
+    /// Burst transition owed by the session's outstanding prefill.
+    after_prefill: AfterPrefill,
+    /// Logical context tokens the outstanding prefill adds on completion
+    /// (0 for pure recomputes — their tokens are already in `ctx_tokens`).
+    prefill_commit: u32,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -243,7 +275,7 @@ enum Work {
     /// pass, marginal compute).
     DecodeStep { ids: Vec<u64>, resume: Option<(usize, u32)>, dur_us: f64 },
     /// SGLang KV transfer / process handoff after a prefill.
-    Transfer { sess: usize, kind: JobKind },
+    Transfer { sess: usize },
     /// One-engine hybrid iteration (vLLM / llama.cpp): at most one prompt
     /// (chunk) rides alongside the decode streams.
     Iteration { chunk: Option<IterChunk>, decode_ids: Vec<u64> },
@@ -256,6 +288,24 @@ struct IterChunk {
     kind: JobKind,
     /// True when this chunk finishes the session's pending prefill.
     completes: bool,
+    /// True when each chunk advances the session's logical context (normal
+    /// prompts). False for context recomputes, whose tokens are already in
+    /// `ctx_tokens` (the commit happens once, at completion).
+    commit_chunks: bool,
+}
+
+/// A prompt queued on the single-engine iteration path (vLLM / llama.cpp).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct IterJob {
+    sess: usize,
+    /// Tokens still to prefill (after admission: *charged* tokens — radix
+    /// hits are deducted once at admission).
+    remaining: u32,
+    kind: JobKind,
+    /// KV admitted (blocks allocated). Unbounded mode admits trivially.
+    admitted: bool,
+    /// See [`IterChunk::commit_chunks`].
+    commit_chunks: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -280,6 +330,9 @@ const SGLANG_CONTENTION: f64 = 0.20;
 const MIXED_ITER_PENALTY: f64 = 1.25;
 
 /// Per-policy scheduling state.
+// One AgentServe-sized variant vs. two slim baselines; a single instance
+// lives per run, so boxing would only add indirection on the hot path.
+#[allow(clippy::large_enum_variant)]
 enum PState {
     /// AgentServe full / No-Alg (two contexts) / No-Green (one context).
     AgentServe {
@@ -302,10 +355,22 @@ enum PState {
     /// vLLM (chunked=true) and llama.cpp (chunked=false).
     IterBatch {
         chunked: bool,
-        /// FIFO of (session, tokens remaining, kind).
-        fifo: VecDeque<(usize, u32, JobKind)>,
+        fifo: VecDeque<IterJob>,
         batcher: DecodeBatcher,
     },
+}
+
+/// KV accounting mode for one run.
+///
+/// The default (unbounded pool, sharing off) keeps the pre-memory-model
+/// token counters — zero overhead, no gating, byte-identical outputs. Any
+/// bounded pool or prefix sharing switches to the paged path backed by the
+/// [`MemoryGovernor`] (block allocation on admission, radix reuse, LRU
+/// eviction, preemption under pressure).
+#[derive(Debug)]
+enum KvState {
+    Tokens { used: u64, peak: u64 },
+    Paged(Box<MemoryGovernor>),
 }
 
 struct Sim {
@@ -327,11 +392,15 @@ struct Sim {
     state: PState,
     metrics: MetricsRecorder,
     done_count: usize,
-    // KV accounting (token granularity; the real engine uses the paged
-    // allocator — the sim needs only capacity pressure + peak stats).
-    kv_used: u64,
-    kv_cap: u64,
-    kv_peak: u64,
+    /// KV subsystem: token counters (unbounded default) or the paged
+    /// governor (bounded pool / prefix sharing — the §III-C memory model).
+    kv: KvState,
+    /// Lazily materialized system-prompt token ids (radix lookups/inserts;
+    /// paged mode only).
+    prompt_ids: Vec<Option<Vec<u32>>>,
+    /// Scratch id buffer for paged decode steps (tokens that survive the
+    /// memory-pressure check of the step).
+    step_scratch: Vec<u64>,
     // Work-mix accounting for η (Eq. 1).
     cold_prefill_tokens: u64,
     resume_prefill_tokens: u64,
@@ -408,29 +477,57 @@ impl Sim {
 
     // -- session transitions --------------------------------------------------
 
-    /// Submit the session's next prefill (cold if no cached context).
+    /// Submit the session's next prefill: cold if no cached context, resume
+    /// if its KV is resident, a cold-style context recompute if a memory
+    /// preemption dropped its KV while it waited on a tool.
     fn submit_prefill(&mut self, sess: usize) {
         let s = &self.sessions[sess];
-        let job = if s.ctx_tokens == 0 {
-            PrefillJob::cold(sess as u64, s.script.cold_prefill_tokens, self.now)
+        let (job, after, commit, kind_str) = if s.ctx_tokens == 0 {
+            (
+                PrefillJob::cold(sess as u64, s.script.cold_prefill_tokens, self.now),
+                AfterPrefill::FirstBurst,
+                s.script.cold_prefill_tokens,
+                "cold",
+            )
+        } else if self.paged() && !s.kv_resident {
+            let resume = s.script.steps[s.cur_step].resume_tokens;
+            (
+                PrefillJob {
+                    session: sess as u64,
+                    kind: JobKind::ColdPrefill,
+                    tokens: s.ctx_tokens + resume,
+                    context: 0,
+                    arrival_us: self.now,
+                },
+                AfterPrefill::StepBurst,
+                resume,
+                "resume-recompute",
+            )
         } else {
-            PrefillJob::resume(
-                sess as u64,
-                s.script.steps[s.cur_step].resume_tokens,
-                s.ctx_tokens,
-                self.now,
+            let resume = s.script.steps[s.cur_step].resume_tokens;
+            (
+                PrefillJob::resume(sess as u64, resume, s.ctx_tokens, self.now),
+                AfterPrefill::StepBurst,
+                resume,
+                "resume",
             )
         };
-        let is_cold = job.kind == JobKind::ColdPrefill;
-        if is_cold {
+        if self.sessions[sess].ctx_tokens == 0 {
             self.arrival_times[sess] = self.now;
         }
-        self.sessions[sess].phase = SessPhase::WaitingPrefill;
+        let s = &mut self.sessions[sess];
+        s.phase = SessPhase::WaitingPrefill;
+        s.after_prefill = after;
+        s.prefill_commit = commit;
         self.metrics.request_arrival(sess as u64, self.now);
-        self.log_event(ExecEventKind::Arrival {
-            session: sess as u64,
-            kind: if is_cold { "cold" } else { "resume" },
-        });
+        self.log_event(ExecEventKind::Arrival { session: sess as u64, kind: kind_str });
+        self.enqueue_job(sess, job, true);
+    }
+
+    /// Route a prefill job into the active policy's queue structure.
+    /// `log_route` is off for internally generated recompute jobs so the
+    /// execution log keeps its one-arrival-one-classification pairing.
+    fn enqueue_job(&mut self, sess: usize, job: PrefillJob, log_route: bool) {
         let routed = match &mut self.state {
             PState::AgentServe { queues, sched, manager, .. } => {
                 match manager.classify(&job, sched.b_prefill()) {
@@ -449,29 +546,63 @@ impl Sim {
                 "prefill_fifo"
             }
             PState::IterBatch { fifo, .. } => {
-                fifo.push_back((sess, job.tokens, job.kind));
+                fifo.push_back(IterJob {
+                    sess,
+                    remaining: job.tokens,
+                    kind: job.kind,
+                    admitted: false,
+                    commit_chunks: true,
+                });
                 "iteration_fifo"
             }
         };
-        self.log_event(ExecEventKind::Classified { session: sess as u64, queue: routed });
-    }
-
-    /// Account completed prefill tokens (work-mix, metrics, KV, context).
-    fn account_prefill_tokens(&mut self, sess: usize, tokens: u32, kind: JobKind) {
-        match kind {
-            JobKind::ColdPrefill => self.cold_prefill_tokens += tokens as u64,
-            _ => self.resume_prefill_tokens += tokens as u64,
+        if log_route {
+            self.log_event(ExecEventKind::Classified { session: sess as u64, queue: routed });
         }
-        self.metrics.prefill_tokens(tokens as u64);
-        self.kv_add(tokens as u64);
-        self.sessions[sess].ctx_tokens += tokens;
     }
 
-    /// The session's prefill is fully committed: emit the first token (the
-    /// prefill's final logits produce it) and start the decode burst.
-    fn start_decode_burst(&mut self, sess: usize, kind: JobKind) {
+    /// Account completed prefill work. `work` is the computed token count
+    /// (radix hits deducted); `commit` is the logical-context extension (0
+    /// for pure recomputes, whose tokens `ctx_tokens` already holds). The
+    /// two are equal everywhere on the unbounded default path.
+    fn account_prefill_tokens(&mut self, sess: usize, work: u32, kind: JobKind, commit: u32) {
+        match kind {
+            JobKind::ColdPrefill => self.cold_prefill_tokens += work as u64,
+            _ => self.resume_prefill_tokens += work as u64,
+        }
+        self.metrics.prefill_tokens(work as u64);
+        self.kv_tokens_add(commit as u64);
+        self.sessions[sess].ctx_tokens += commit;
+    }
+
+    /// The session's prefill is fully committed: emit the first token of
+    /// its next burst (the prefill's final logits produce it), or — after a
+    /// preemption recompute — rejoin the interrupted burst.
+    fn finish_prefill_burst(&mut self, sess: usize) {
+        if self.sessions[sess].after_prefill == AfterPrefill::ContinueDecode {
+            // The recompute rebuilt the context; the burst continues where
+            // the preemption cut it off. No new token is emitted here.
+            let (ctx, rem) = {
+                let s = &self.sessions[sess];
+                (s.ctx_tokens, s.decode_remaining)
+            };
+            if rem == 0 {
+                self.decode_burst_finished(sess);
+            } else {
+                self.sessions[sess].phase = SessPhase::Decoding;
+                self.batcher_mut().join(sess as u64, ctx, rem);
+            }
+            return;
+        }
+        // Place the first token's KV before consuming the scripted burst;
+        // under extreme pressure even this can fail, in which case the
+        // session self-preempts and redoes the transition after recompute.
+        if self.paged() && !self.kv_try_append(sess, &[sess as u64]) {
+            self.preempt_session(sess);
+            return;
+        }
         let s = &mut self.sessions[sess];
-        let burst = if kind == JobKind::ColdPrefill {
+        let burst = if s.after_prefill == AfterPrefill::FirstBurst {
             s.script.first_decode_tokens
         } else {
             let b = s.script.steps[s.cur_step].decode_tokens;
@@ -482,7 +613,7 @@ impl Sim {
         s.ctx_tokens += 1;
         self.metrics.first_token(sess as u64, self.now);
         self.log_event(ExecEventKind::FirstToken { session: sess as u64 });
-        self.kv_add(1);
+        self.kv_tokens_add(1);
         if self.sessions[sess].decode_remaining == 0 {
             self.decode_burst_finished(sess);
         } else {
@@ -506,7 +637,17 @@ impl Sim {
             self.sessions[sess].phase = SessPhase::Done;
             self.metrics.session_complete(sess as u64, self.now);
             self.done_count += 1;
-            self.kv_free(self.sessions[sess].ctx_tokens as u64);
+            let now = self.now;
+            let ctx = self.sessions[sess].ctx_tokens as u64;
+            match &mut self.kv {
+                KvState::Tokens { used, .. } => *used = used.saturating_sub(ctx),
+                KvState::Paged(gov) => {
+                    if self.sessions[sess].kv_resident {
+                        gov.release_session(sess, now);
+                    }
+                }
+            }
+            self.sessions[sess].kv_resident = false;
             self.log_event(ExecEventKind::SessionDone { session: sess as u64 });
             // Chain the agent's next session (closed-loop plans only).
             if let Some((stride, think_us)) = self.chain {
@@ -534,18 +675,199 @@ impl Sim {
         }
     }
 
-    fn kv_add(&mut self, tokens: u64) {
-        self.kv_used += tokens;
-        self.kv_peak = self.kv_peak.max(self.kv_used);
+    // -- KV memory model (paged path) -----------------------------------------
+
+    fn paged(&self) -> bool {
+        matches!(self.kv, KvState::Paged(_))
     }
 
-    fn kv_free(&mut self, tokens: u64) {
-        self.kv_used = self.kv_used.saturating_sub(tokens);
+    /// Unbounded-path token accounting (no-op on the paged path, whose
+    /// blocks are tracked at allocation time by the governor).
+    fn kv_tokens_add(&mut self, n: u64) {
+        if let KvState::Tokens { used, peak } = &mut self.kv {
+            *used += n;
+            *peak = (*peak).max(*used);
+        }
     }
 
-    /// KV headroom gate for admitting a session's cold prefill.
-    fn kv_admit_cold(&self, sess: usize) -> bool {
-        self.kv_used + self.sessions[sess].script.final_context() <= self.kv_cap
+    /// A queued job as the engine must actually run it: a resume whose
+    /// session lost its KV while waiting becomes a cold-style recompute of
+    /// the whole context plus the new tokens. Identity on the default path.
+    fn effective_job(&self, job: PrefillJob) -> PrefillJob {
+        let sess = job.session as usize;
+        if self.paged()
+            && job.kind == JobKind::ResumePrefill
+            && !self.sessions[sess].kv_resident
+        {
+            PrefillJob {
+                kind: JobKind::ColdPrefill,
+                tokens: self.sessions[sess].ctx_tokens + job.tokens,
+                context: 0,
+                ..job
+            }
+        } else {
+            job
+        }
+    }
+
+    /// Admit a prefill's KV: blocks are allocated through the governor and
+    /// radix hits are deducted from the charged work. On failure the engine
+    /// escalates to preempting strictly-lower-priority residents; `None`
+    /// means the job must stay queued. Returns `(charged_tokens,
+    /// radix_cached_tokens)`; the unbounded path admits everything as-is.
+    fn kv_admit_prefill(&mut self, job: &PrefillJob) -> Option<(u32, u32)> {
+        if !self.paged() {
+            return Some((job.tokens, 0));
+        }
+        let sess = job.session as usize;
+        if self.prompt_ids[sess].is_none() {
+            self.prompt_ids[sess] = Some(self.sessions[sess].script.system_prompt_ids());
+        }
+        loop {
+            let now = self.now;
+            let admitted = match &mut self.kv {
+                KvState::Paged(gov) => match job.kind {
+                    JobKind::ColdPrefill => {
+                        let prompt = self.prompt_ids[sess].as_deref().expect("filled above");
+                        gov.admit_cold(sess, prompt, job.tokens, now)
+                            .map(|a| (a.charged_tokens, a.cached_tokens))
+                    }
+                    _ => gov.admit_resume(sess, job.tokens, now).then_some((job.tokens, 0)),
+                },
+                KvState::Tokens { .. } => unreachable!("paged() checked above"),
+            };
+            if let Some(res) = admitted {
+                self.sessions[sess].kv_resident = true;
+                return Some(res);
+            }
+            match self.preemption_victim(&[job.session], sess) {
+                Some(victim) => self.preempt_session(victim),
+                None => return None,
+            }
+        }
+    }
+
+    /// Grow a resident session's KV by one decoded token, escalating to
+    /// eviction (inside the governor) and then preemption of lower-priority
+    /// residents. `false` = the session itself must be preempted.
+    fn kv_try_append(&mut self, sess: usize, protect: &[u64]) -> bool {
+        loop {
+            let now = self.now;
+            let ok = match &mut self.kv {
+                KvState::Paged(gov) => gov.append_decoded(sess, now),
+                KvState::Tokens { .. } => return true,
+            };
+            if ok {
+                return true;
+            }
+            match self.preemption_victim(protect, sess) {
+                Some(victim) => self.preempt_session(victim),
+                None => return false,
+            }
+        }
+    }
+
+    /// The strictly-lowest-priority preemptable session, or `None`.
+    /// Priority is admission order — earlier original arrival wins, ties by
+    /// session index — and only sessions *younger than the requester* are
+    /// eligible, so preemption can never invert priority or livelock: the
+    /// oldest unfinished session is never preempted and always progresses.
+    ///
+    /// O(n_sessions) scan, but it runs only when an allocation actually
+    /// falls short even after eviction (each preemption then frees a whole
+    /// session's blocks, so failures are amortized across many successful
+    /// appends). An ordered resident index would make this O(log n) if
+    /// profiling ever shows it on the sweep hot path.
+    fn preemption_victim(&self, protect: &[u64], requester: usize) -> Option<usize> {
+        let req_key = (self.arrival_times[requester], requester);
+        let mut best: Option<(u64, usize)> = None;
+        for (i, s) in self.sessions.iter().enumerate() {
+            if i == requester || !s.kv_resident {
+                continue;
+            }
+            if !matches!(
+                s.phase,
+                SessPhase::Decoding | SessPhase::ToolWait | SessPhase::WaitingPrefill
+            ) {
+                continue;
+            }
+            if protect.contains(&(i as u64)) {
+                continue;
+            }
+            let key = (self.arrival_times[i], i);
+            if key <= req_key {
+                continue; // never preempt an equal-or-higher-priority session
+            }
+            if best.is_none_or(|b| key > b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Preempt `victim`: release its blocks (shared prompt blocks survive
+    /// via the radix cache) and arrange for a context recompute. The
+    /// victim's logical progress — emitted tokens, step position — is
+    /// preserved; only its KV must be recomputed (vLLM-style
+    /// recompute-on-resume preemption), so token conservation holds.
+    fn preempt_session(&mut self, victim: usize) {
+        let now = self.now;
+        // Tool-waiting victims are not (yet) memory-stalled: their clock
+        // starts when the post-tool recompute first fails admission.
+        let runnable = self.sessions[victim].phase != SessPhase::ToolWait;
+        if let KvState::Paged(gov) = &mut self.kv {
+            gov.preempt(victim, now, runnable);
+        }
+        self.sessions[victim].kv_resident = false;
+        self.log_event(ExecEventKind::Preempted { session: victim as u64 });
+        match self.sessions[victim].phase {
+            SessPhase::Decoding => {
+                if let Some(st) = self.batcher_mut().leave(victim as u64) {
+                    self.sessions[victim].ctx_tokens = st.context;
+                    self.sessions[victim].decode_remaining = st.remaining;
+                }
+                self.sessions[victim].after_prefill = AfterPrefill::ContinueDecode;
+                self.enqueue_recompute(victim);
+            }
+            // Only reachable as a self-preemption from the victim's own
+            // just-completed prefill (victim search skips Prefilling):
+            // keep `after_prefill` so the burst transition reruns after
+            // the recompute.
+            SessPhase::Prefilling => self.enqueue_recompute(victim),
+            // The tool-return (or the queued job's admission) notices the
+            // dropped KV and recomputes then.
+            SessPhase::ToolWait | SessPhase::WaitingPrefill => {}
+            SessPhase::NotArrived | SessPhase::Done => {
+                unreachable!("non-resident phases cannot be preempted")
+            }
+        }
+    }
+
+    /// Queue a cold-style recompute of the victim's whole logical context.
+    fn enqueue_recompute(&mut self, sess: usize) {
+        let job = PrefillJob {
+            session: sess as u64,
+            kind: JobKind::ColdPrefill,
+            tokens: self.sessions[sess].ctx_tokens,
+            context: 0,
+            arrival_us: self.now,
+        };
+        self.sessions[sess].phase = SessPhase::WaitingPrefill;
+        self.sessions[sess].prefill_commit = 0;
+        self.enqueue_job(sess, job, false);
+    }
+
+    /// Paged-mode completion bookkeeping: clear the write fence and index
+    /// the (re)computed system prompt into the radix cache for reuse.
+    fn kv_complete_prefill(&mut self, sess: usize, kind: JobKind) {
+        if let KvState::Paged(gov) = &mut self.kv {
+            gov.complete_prefill(sess);
+            if kind == JobKind::ColdPrefill {
+                if let Some(prompt) = &self.prompt_ids[sess] {
+                    gov.insert_prompt(sess, prompt);
+                }
+            }
+        }
     }
 
     // -- work completion -------------------------------------------------------
@@ -553,10 +875,53 @@ impl Sim {
     /// Apply one completed decode step's effects (shared by DecodeStep and
     /// Iteration work).
     fn apply_decode_step(&mut self, ids: &[u64]) {
+        if self.paged() {
+            // Each emitted token must first find a KV slot. A stream that
+            // cannot grow even after eviction and preempting every
+            // lower-priority resident self-preempts: it emits nothing this
+            // step and continues after recomputing its context.
+            let mut kept = std::mem::take(&mut self.step_scratch);
+            kept.clear();
+            for &id in ids {
+                let sess = id as usize;
+                // A stream preempted between this step's launch and its
+                // completion (e.g. by the merged resume's own admission)
+                // emits nothing; it rejoins after its context recompute.
+                if self.sessions[sess].phase != SessPhase::Decoding
+                    || !self.sessions[sess].kv_resident
+                {
+                    continue;
+                }
+                if self.kv_try_append(sess, ids) {
+                    kept.push(id);
+                } else {
+                    self.preempt_session(sess);
+                }
+            }
+            for &id in &kept {
+                self.metrics.token_emitted(id, self.now);
+                self.log_event(ExecEventKind::Token { session: id });
+            }
+            let finished = self.batcher_mut().complete_step(&kept);
+            for &id in &kept {
+                if let Some(st) = self.batcher_mut().get(id) {
+                    self.sessions[id as usize].ctx_tokens = st.context;
+                }
+            }
+            self.step_scratch = kept;
+            for id in finished {
+                let sess = id as usize;
+                if let Some(st) = self.batcher_mut().leave(id) {
+                    self.sessions[sess].ctx_tokens = st.context;
+                }
+                self.decode_burst_finished(sess);
+            }
+            return;
+        }
         for &id in ids {
             self.metrics.token_emitted(id, self.now);
             self.log_event(ExecEventKind::Token { session: id });
-            self.kv_add(1);
+            self.kv_tokens_add(1);
         }
         let finished = self.batcher_mut().complete_step(ids);
         // Sync surviving streams' grown context back to the sessions.
@@ -578,13 +943,17 @@ impl Sim {
         let work = self.ctx_work[ctx_id].take().expect("ctx had work");
         match work {
             Work::Prefill { sess, tokens, kind, dur_us } => {
-                self.account_prefill_tokens(sess, tokens, kind);
+                let commit = std::mem::take(&mut self.sessions[sess].prefill_commit);
+                self.account_prefill_tokens(sess, tokens, kind, commit);
+                self.kv_complete_prefill(sess, kind);
                 if matches!(self.state, PState::Sglang { .. }) {
                     // Dual-engine handoff: KV transfer + process overhead
                     // keeps the prefill engine busy and delays the stream.
+                    // Only freshly computed KV moves (radix-shared prefix
+                    // blocks already live in the common pool).
                     let t_us = tokens as f64 * self.cfg.engine.pd_transfer_us_per_token
                         + self.cfg.engine.pd_handoff_fixed_us;
-                    self.ctx_work[ctx_id] = Some(Work::Transfer { sess, kind });
+                    self.ctx_work[ctx_id] = Some(Work::Transfer { sess });
                     self.push(self.now + t_us as u64, Ev::CtxFree(ctx_id));
                     return;
                 }
@@ -592,12 +961,14 @@ impl Sim {
                 if self.single_queue() {
                     self.decode_round_accum_us += dur_us;
                 }
-                self.start_decode_burst(sess, kind);
+                self.finish_prefill_burst(sess);
             }
             Work::DecodeStep { ids, resume, dur_us } => {
                 if let Some((sess, tokens)) = resume {
-                    self.account_prefill_tokens(sess, tokens, JobKind::ResumePrefill);
-                    self.start_decode_burst(sess, JobKind::ResumePrefill);
+                    let commit = std::mem::take(&mut self.sessions[sess].prefill_commit);
+                    self.account_prefill_tokens(sess, tokens, JobKind::ResumePrefill, commit);
+                    self.kv_complete_prefill(sess, JobKind::ResumePrefill);
+                    self.finish_prefill_burst(sess);
                 }
                 if ids.is_empty() {
                     // Pure-resume step: counts toward the next decode round.
@@ -612,14 +983,22 @@ impl Sim {
                 self.apply_decode_step(&ids);
                 self.recycle_id_buf(ids);
             }
-            Work::Transfer { sess, kind } => {
-                self.start_decode_burst(sess, kind);
+            Work::Transfer { sess } => {
+                self.finish_prefill_burst(sess);
             }
             Work::Iteration { chunk, decode_ids } => {
                 if let Some(c) = chunk {
-                    self.account_prefill_tokens(c.sess, c.tokens, c.kind);
+                    let commit = if c.commit_chunks {
+                        c.tokens
+                    } else if c.completes {
+                        std::mem::take(&mut self.sessions[c.sess].prefill_commit)
+                    } else {
+                        0
+                    };
+                    self.account_prefill_tokens(c.sess, c.tokens, c.kind, commit);
                     if c.completes {
-                        self.start_decode_burst(c.sess, c.kind);
+                        self.kv_complete_prefill(c.sess, c.kind);
+                        self.finish_prefill_burst(c.sess);
                     }
                 }
                 self.apply_decode_step(&decode_ids);
@@ -674,24 +1053,25 @@ impl Sim {
             _ => unreachable!(),
         };
         let Some(q) = head else { return };
-        let sess = q.job.session as usize;
-        if q.job.kind == JobKind::ColdPrefill && !self.kv_admit_cold(sess) {
+        let job = self.effective_job(q.job);
+        let sess = job.session as usize;
+        let Some((charged, cached)) = self.kv_admit_prefill(&job) else {
             // Strict FIFO: hold the head until KV headroom frees up.
             if let PState::AgentServe { queues, .. } = &mut self.state {
                 queues.push_cold_front(q);
             }
             return;
-        }
+        };
         self.sessions[sess].phase = SessPhase::Prefilling;
         let dur = self.cost.prefill_ctx_us(
-            q.job.tokens as u64,
-            q.job.context as u64,
+            charged as u64,
+            job.context as u64 + cached as u64,
             share,
-            q.job.kind.phase(),
+            job.kind.phase(),
         );
         self.start(
             PREFILL_CTX,
-            Work::Prefill { sess, tokens: q.job.tokens, kind: q.job.kind, dur_us: dur },
+            Work::Prefill { sess, tokens: charged, kind: job.kind, dur_us: dur },
             dur,
         );
     }
@@ -732,6 +1112,26 @@ impl Sim {
 
         match pick {
             Pick::Hybrid(resume) => {
+                // Resume-lane admission (paged mode): a resume whose session
+                // lost its KV is too big to merge — reroute it to Q_P (it
+                // recomputes there); one the pool cannot take yet goes back
+                // to the lane head. Either way a plain decode step may run.
+                let mut resume = resume;
+                if let Some(q) = resume.take_if(|q| {
+                    self.paged() && !self.sessions[q.job.session as usize].kv_resident
+                }) {
+                    if let PState::AgentServe { queues, .. } = &mut self.state {
+                        queues.push_cold(q.job, q.enqueued_us);
+                    }
+                }
+                if let Some(q) = &resume {
+                    if self.kv_admit_prefill(&q.job).is_none() {
+                        let q = resume.take().expect("just checked");
+                        if let PState::AgentServe { queues, .. } = &mut self.state {
+                            queues.push_resume_front(q);
+                        }
+                    }
+                }
                 if ids.is_empty() && resume.is_none() {
                     if rebind_charge > 0.0 {
                         if let PState::AgentServe { pending_rebind_us, .. } = &mut self.state {
@@ -763,8 +1163,9 @@ impl Sim {
                 self.start(DECODE_CTX, Work::DecodeStep { ids, resume: r_info, dur_us: dur }, dur);
             }
             Pick::Cold(q) => {
-                let sess = q.job.session as usize;
-                if !self.kv_admit_cold(sess) {
+                let job = self.effective_job(q.job);
+                let sess = job.session as usize;
+                let Some((charged, cached)) = self.kv_admit_prefill(&job) else {
                     // Hold the cold head; run a plain decode step if any.
                     if let PState::AgentServe { queues, pending_rebind_us, .. } = &mut self.state {
                         queues.push_cold_front(q);
@@ -776,20 +1177,20 @@ impl Sim {
                         self.recycle_id_buf(ids);
                     }
                     return;
-                }
+                };
                 self.recycle_id_buf(ids);
                 self.sessions[sess].phase = SessPhase::Prefilling;
                 let dur = self.cost.prefill_ctx_us(
-                    q.job.tokens as u64,
-                    q.job.context as u64,
+                    charged as u64,
+                    job.context as u64 + cached as u64,
                     share,
-                    q.job.kind.phase(),
+                    job.kind.phase(),
                 ) + rebind_charge
                     + stream_alloc;
                 self.set_last_was_prefill(true);
                 self.start(
                     DECODE_CTX,
-                    Work::Prefill { sess, tokens: q.job.tokens, kind: q.job.kind, dur_us: dur },
+                    Work::Prefill { sess, tokens: charged, kind: job.kind, dur_us: dur },
                     dur,
                 );
             }
@@ -816,33 +1217,31 @@ impl Sim {
         if self.ctx_work[PREFILL_CTX].is_some() {
             return;
         }
-        // KV gate for colds (strict FIFO): peek under a short borrow first.
-        let head = match &self.state {
-            PState::Sglang { fifo, .. } => fifo.front().copied(),
-            _ => unreachable!(),
-        };
-        match head {
-            None => return,
-            Some(q) => {
-                let sess = q.session as usize;
-                if q.kind == JobKind::ColdPrefill && !self.kv_admit_cold(sess) {
-                    return;
-                }
-            }
-        }
-        let job = match &mut self.state {
+        let head = match &mut self.state {
             PState::Sglang { fifo, .. } => fifo.pop_front(),
             _ => unreachable!(),
         };
-        let Some(job) = job else { return };
+        let Some(queued) = head else { return };
+        let job = self.effective_job(queued);
         let sess = job.session as usize;
+        // KV gate (strict FIFO): an unadmittable head goes back and waits
+        // for headroom.
+        let Some((charged, cached)) = self.kv_admit_prefill(&job) else {
+            if let PState::Sglang { fifo, .. } = &mut self.state {
+                fifo.push_front(queued);
+            }
+            return;
+        };
         self.sessions[sess].phase = SessPhase::Prefilling;
-        let dur =
-            self.cost
-                .prefill_ctx_us(job.tokens as u64, job.context as u64, share, job.kind.phase());
+        let dur = self.cost.prefill_ctx_us(
+            charged as u64,
+            job.context as u64 + cached as u64,
+            share,
+            job.kind.phase(),
+        );
         self.start(
             PREFILL_CTX,
-            Work::Prefill { sess, tokens: job.tokens, kind: job.kind, dur_us: dur },
+            Work::Prefill { sess, tokens: charged, kind: job.kind, dur_us: dur },
             dur,
         );
     }
@@ -867,6 +1266,81 @@ impl Sim {
         self.start(DECODE_CTX, Work::DecodeStep { ids, resume: None, dur_us: dur }, dur);
     }
 
+    /// Admit the head iteration prompt's KV (paged mode): blocks for the
+    /// whole (uncached) prompt are allocated before its first chunk runs,
+    /// vLLM-style. A head the pool cannot take stays queued and unadmitted;
+    /// decode-only iterations keep running meanwhile.
+    fn admit_iter_head(&mut self) {
+        let head = match &self.state {
+            PState::IterBatch { fifo, .. } => fifo.front().copied(),
+            _ => unreachable!(),
+        };
+        let Some(entry) = head else { return };
+        if entry.admitted {
+            return;
+        }
+        if !self.paged() {
+            if let PState::IterBatch { fifo, .. } = &mut self.state {
+                fifo.front_mut().expect("head exists").admitted = true;
+            }
+            return;
+        }
+        let sess = entry.sess;
+        let ctx = self.sessions[sess].ctx_tokens;
+        // Recomputes (either enqueued directly after a preemption, or a
+        // resume whose session lost its KV while queued) run cold from an
+        // empty context and do not re-commit logical tokens per chunk.
+        let (job, commit_chunks) = if entry.kind == JobKind::ResumePrefill
+            && !self.sessions[sess].kv_resident
+        {
+            (
+                PrefillJob {
+                    session: sess as u64,
+                    kind: JobKind::ColdPrefill,
+                    tokens: ctx + entry.remaining,
+                    context: 0,
+                    arrival_us: self.now,
+                },
+                false,
+            )
+        } else if entry.kind == JobKind::ColdPrefill && ctx > 0 {
+            (
+                PrefillJob {
+                    session: sess as u64,
+                    kind: entry.kind,
+                    tokens: entry.remaining,
+                    context: 0,
+                    arrival_us: self.now,
+                },
+                false,
+            )
+        } else {
+            (
+                PrefillJob {
+                    session: sess as u64,
+                    kind: entry.kind,
+                    tokens: entry.remaining,
+                    context: ctx,
+                    arrival_us: self.now,
+                },
+                true,
+            )
+        };
+        let Some((charged, cached)) = self.kv_admit_prefill(&job) else { return };
+        if let PState::IterBatch { fifo, .. } = &mut self.state {
+            let e = fifo.front_mut().expect("head exists");
+            e.admitted = true;
+            e.kind = job.kind;
+            e.remaining = charged;
+            e.commit_chunks = commit_chunks;
+        }
+        if commit_chunks && cached > 0 {
+            // Radix-cached prompt tokens become context immediately; the
+            // chunks then commit only the charged remainder.
+            self.sessions[sess].ctx_tokens += cached;
+        }
+    }
+
     /// vLLM / llama.cpp hybrid iterations on a single engine.
     fn dispatch_iter(&mut self) {
         if self.ctx_work[DECODE_CTX].is_some() {
@@ -875,31 +1349,40 @@ impl Sim {
         let mut decode_ids = self.take_id_buf();
         let total_ctx = self.batcher_mut().next_batch_into(&mut decode_ids);
         let chunk_size = self.cfg.engine.chunk_size as u32;
+        self.admit_iter_head();
         let mut chunk: Option<IterChunk> = None;
         match &mut self.state {
             PState::IterBatch { chunked, fifo, .. } => {
                 if *chunked {
                     // vLLM: one chunk of the oldest pending prompt.
-                    if let Some((sess, remaining, kind)) = fifo.front_mut() {
-                        let take = chunk_size.min(*remaining);
-                        let completes = take == *remaining;
-                        chunk = Some(IterChunk { sess: *sess, tokens: take, kind: *kind, completes });
+                    if let Some(j) = fifo.front_mut().filter(|j| j.admitted) {
+                        let take = chunk_size.min(j.remaining);
+                        let completes = take == j.remaining;
+                        chunk = Some(IterChunk {
+                            sess: j.sess,
+                            tokens: take,
+                            kind: j.kind,
+                            completes,
+                            commit_chunks: j.commit_chunks,
+                        });
                         if completes {
                             fifo.pop_front();
                         } else {
-                            *remaining -= take;
+                            j.remaining -= take;
                         }
                     }
                 } else {
                     // llama.cpp: the oldest pending prompt rides in full
                     // (unchunked); later prompts wait their turn — n_batch
                     // admits one prompt's tokens per iteration.
-                    if let Some((sess, remaining, kind)) = fifo.pop_front() {
+                    if fifo.front().is_some_and(|j| j.admitted) {
+                        let j = fifo.pop_front().expect("head exists");
                         chunk = Some(IterChunk {
-                            sess,
-                            tokens: remaining,
-                            kind,
+                            sess: j.sess,
+                            tokens: j.remaining,
+                            kind: j.kind,
                             completes: true,
+                            commit_chunks: j.commit_chunks,
                         });
                     }
                 }
@@ -1080,10 +1563,13 @@ pub fn run_sim_trace_recorded(
 
 /// Run one scenario end-to-end: instantiate its workload for
 /// `(cfg.model, seed)` and drive it with scenario-appropriate arrival
-/// semantics (closed-loop chaining vs explicit open-loop arrivals).
+/// semantics (closed-loop chaining vs explicit open-loop arrivals). A
+/// scenario carrying its own KV requirements (`Scenario::kv`) runs under
+/// them ([`Scenario::effective_config`]).
 pub fn run_scenario(cfg: &Config, policy: Policy, scenario: &Scenario, seed: u64) -> SimOutcome {
-    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
-    run_sim_inner(cfg, policy, scripts, plan, RunFlags::default()).0
+    let cfg = scenario.effective_config(cfg);
+    let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
+    run_sim_inner(&cfg, policy, scripts, plan, RunFlags::default()).0
 }
 
 /// [`run_scenario`] with per-token timeline retention disabled — the sweep
@@ -1096,9 +1582,10 @@ pub fn run_scenario_fast(
     scenario: &Scenario,
     seed: u64,
 ) -> SimOutcome {
-    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    let cfg = scenario.effective_config(cfg);
+    let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
     let flags = RunFlags { record_timeline: false, ..RunFlags::default() };
-    run_sim_inner(cfg, policy, scripts, plan, flags).0
+    run_sim_inner(&cfg, policy, scripts, plan, flags).0
 }
 
 /// [`run_scenario`] with the execution-event log captured.
@@ -1108,9 +1595,10 @@ pub fn run_scenario_recorded(
     scenario: &Scenario,
     seed: u64,
 ) -> (SimOutcome, ExecTrace) {
-    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
+    let cfg = scenario.effective_config(cfg);
+    let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
     let flags = RunFlags { record_events: true, ..RunFlags::default() };
-    let (out, log) = run_sim_inner(cfg, policy, scripts, plan, flags);
+    let (out, log) = run_sim_inner(&cfg, policy, scripts, plan, flags);
     (out, log.unwrap_or_default())
 }
 
@@ -1124,8 +1612,9 @@ pub fn record_scenario_trace(
     scenario: &Scenario,
     seed: u64,
 ) -> (SimOutcome, Trace) {
-    let (scripts, plan) = scenario_inputs(cfg, scenario, seed);
-    let (out, _) = run_sim_inner(cfg, policy, scripts.clone(), plan, RunFlags::default());
+    let cfg = scenario.effective_config(cfg);
+    let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
+    let (out, _) = run_sim_inner(&cfg, policy, scripts.clone(), plan, RunFlags::default());
     let trace = Trace::with_arrivals(scripts, &out.arrivals_us);
     (out, trace)
 }
@@ -1192,6 +1681,9 @@ fn run_sim_inner(
             ctx_tokens: 0,
             cur_step: 0,
             decode_remaining: 0,
+            kv_resident: false,
+            after_prefill: AfterPrefill::FirstBurst,
+            prefill_commit: 0,
         })
         .collect();
 
@@ -1211,6 +1703,11 @@ fn run_sim_inner(
     if !flags.record_timeline {
         metrics.disable_timeline();
     }
+    let kv = if cfg.kv.is_paged() {
+        KvState::Paged(Box::new(MemoryGovernor::new(&cfg.kv, n_sessions)))
+    } else {
+        KvState::Tokens { used: 0, peak: 0 }
+    };
     let mut sim = Sim {
         cost,
         sessions,
@@ -1224,9 +1721,9 @@ fn run_sim_inner(
         state,
         metrics,
         done_count: 0,
-        kv_used: 0,
-        kv_cap: (cfg.engine.kv_blocks * cfg.engine.kv_block_size) as u64,
-        kv_peak: 0,
+        kv,
+        prompt_ids: vec![None; n_sessions],
+        step_scratch: Vec::new(),
         cold_prefill_tokens: 0,
         resume_prefill_tokens: 0,
         decode_round_accum_us: 0.0,
@@ -1274,6 +1771,10 @@ fn run_sim_inner(
     };
     let exec = sim.log.take().map(|events| ExecTrace { events });
     let timeline = sim.metrics.take_timeline();
+    let (kv_peak_tokens, kv_report) = match &mut sim.kv {
+        KvState::Tokens { peak, .. } => (*peak, None),
+        KvState::Paged(gov) => (gov.peak_used_tokens(), Some(gov.report(end))),
+    };
     let outcome = SimOutcome {
         policy_name: policy.name().to_string(),
         report,
@@ -1288,7 +1789,8 @@ fn run_sim_inner(
         cold_routed,
         resume_merged,
         resume_rerouted,
-        kv_peak_tokens: sim.kv_peak,
+        kv_peak_tokens,
+        kv: kv_report,
         control_trace: sim.control_trace,
         arrivals_us: sim.arrival_times,
     };
@@ -1475,6 +1977,112 @@ mod tests {
             assert_eq!(a.kv_peak_tokens, b.kv_peak_tokens, "{}", policy.name());
             assert!(!a.timeline.is_empty(), "{}", policy.name());
             assert!(b.timeline.is_empty(), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn huge_bounded_pool_matches_unbounded_bytes() {
+        // The paged path with a never-binding pool (sharing off) must be
+        // byte-identical to the default token-counter path: admission always
+        // succeeds, charged == committed tokens, durations untouched.
+        let mut bounded = cfg();
+        bounded.kv.num_blocks = 1 << 20; // 16M tokens — never binds here
+        let base = cfg();
+        let sc = Scenario::by_name("mixed-fleet").unwrap();
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario(&base, policy, &sc, 7);
+            let b = run_scenario(&bounded, policy, &sc, 7);
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(a.slo.attained, b.slo.attained, "{}", policy.name());
+            assert!(a.kv.is_none(), "{}: default path reports no kv", policy.name());
+            let kv = b.kv.expect("paged path reports kv");
+            assert_eq!(kv.evictions, 0, "{}", policy.name());
+            assert_eq!(kv.preemptions, 0, "{}", policy.name());
+            assert_eq!(kv.stalls.n, 0, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_collapses_cold_work() {
+        // With a generous pool, turning the radix cache on must strictly
+        // reduce computed cold-prefill work (shared system prompts) without
+        // changing scripted decode tokens.
+        let mut shared = cfg();
+        shared.kv = crate::config::KvConfig {
+            num_blocks: 1 << 20,
+            block_size: 16,
+            prefix_sharing: true,
+        };
+        let base = cfg();
+        let sc = Scenario::by_name("mixed-fleet").unwrap();
+        for policy in Policy::paper_lineup() {
+            let off = run_scenario(&base, policy, &sc, 7);
+            let on = run_scenario(&shared, policy, &sc, 7);
+            assert_eq!(on.report.total_tokens, off.report.total_tokens, "{}", policy.name());
+            assert_eq!(
+                on.report.completed_sessions,
+                off.report.completed_sessions,
+                "{}",
+                policy.name()
+            );
+            let kv = on.kv.expect("sharing runs the paged path");
+            assert!(
+                kv.radix_hit_tokens > 0,
+                "{}: 14 sessions over 4 templates must share prompts",
+                policy.name()
+            );
+            assert!(
+                on.eta_cold < off.eta_cold,
+                "{}: radix hits must lower the measured cold fraction ({} vs {})",
+                policy.name(),
+                on.eta_cold,
+                off.eta_cold
+            );
+        }
+    }
+
+    #[test]
+    fn pressure_preemption_conserves_tokens_and_completes() {
+        // A pool far below the fleet's working set: admissions stall,
+        // decode growth preempts, every session still completes and the
+        // scripted decode-token total is conserved (recompute-style
+        // preemption never replays emitted tokens).
+        let cfg0 = cfg();
+        let mut tight = cfg0.clone();
+        tight.kv = crate::config::KvConfig {
+            num_blocks: 600,
+            block_size: 16,
+            prefix_sharing: true,
+        };
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, cfg0.model.kind, 11);
+        let trace = Trace::concurrent(gen.sessions(8), 8, 50_000);
+        let expected = trace.total_decode_tokens();
+        for policy in Policy::paper_lineup() {
+            let out = run_sim_trace(&tight, policy, &trace);
+            assert_eq!(out.report.completed_sessions, 8, "{}", policy.name());
+            assert_eq!(out.report.total_tokens, expected, "{}", policy.name());
+            let kv = out.kv.expect("paged path");
+            assert!(
+                kv.stalls.n > 0 || kv.preemptions > 0,
+                "{}: 8 near-simultaneous sessions on a ~2.5-session pool must feel pressure",
+                policy.name()
+            );
+            // Determinism under pressure: identical reruns, byte-identical.
+            let again = run_sim_trace(&tight, policy, &trace);
+            assert_eq!(
+                out.report.to_value().to_string(),
+                again.report.to_value().to_string(),
+                "{}",
+                policy.name()
+            );
+            let kv2 = again.kv.expect("paged path");
+            assert_eq!(kv.preemptions, kv2.preemptions, "{}", policy.name());
+            assert_eq!(kv.evictions, kv2.evictions, "{}", policy.name());
         }
     }
 

@@ -61,7 +61,10 @@ mod tests {
     fn bigger_gpu_is_faster_everywhere() {
         let a = cm(ModelKind::Qwen7B, GpuKind::A5000);
         let b = cm(ModelKind::Qwen7B, GpuKind::Rtx5090);
-        assert!(b.prefill_us(3000, 1.0, Phase::ColdPrefill) < a.prefill_us(3000, 1.0, Phase::ColdPrefill));
+        assert!(
+            b.prefill_us(3000, 1.0, Phase::ColdPrefill)
+                < a.prefill_us(3000, 1.0, Phase::ColdPrefill)
+        );
         assert!(b.decode_step_us(4, 2000, 1.0) < a.decode_step_us(4, 2000, 1.0));
     }
 }

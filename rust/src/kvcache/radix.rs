@@ -138,7 +138,7 @@ impl RadixPrefixCache {
             if node.children.is_empty() {
                 if !path.is_empty() {
                     let stamp = node.last_used;
-                    if best.as_ref().map_or(true, |(b, _)| stamp < *b) {
+                    if best.as_ref().is_none_or(|(b, _)| stamp < *b) {
                         *best = Some((stamp, path.clone()));
                     }
                 }

@@ -102,7 +102,11 @@ impl SessionCache {
     }
 
     /// Append one decoded token (decode writes one KV entry per step).
-    pub fn append_decoded(&mut self, token: u32, alloc: &mut BlockAllocator) -> Result<(), KvError> {
+    pub fn append_decoded(
+        &mut self,
+        token: u32,
+        alloc: &mut BlockAllocator,
+    ) -> Result<(), KvError> {
         assert!(self.decode_ready(), "decode on fenced or empty cache");
         let to = self.committed_tokens + 1;
         if to > self.blocks.len() * alloc.block_size() {

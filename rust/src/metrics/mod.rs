@@ -11,7 +11,7 @@ mod recorder;
 mod slo;
 
 pub use percentile::{percentile, Summary};
-pub use recorder::{MetricsRecorder, RunReport, SessionMetrics, TpotSample};
+pub use recorder::{KvReport, MetricsRecorder, RunReport, SessionMetrics, TpotSample};
 pub use slo::{SloJudge, SloReport};
 
 #[cfg(test)]

@@ -218,6 +218,80 @@ impl MetricsRecorder {
     }
 }
 
+/// Memory-subsystem metrics of one run (present only when the KV pool is
+/// bounded or prefix sharing is on — the paged path; the default unbounded
+/// configuration reports nothing so legacy outputs stay byte-identical).
+#[derive(Debug, Clone)]
+pub struct KvReport {
+    /// Pool size in blocks.
+    pub total_blocks: usize,
+    /// Block size in tokens.
+    pub block_size: usize,
+    /// Peak simultaneously-allocated blocks.
+    pub peak_blocks: usize,
+    /// Time-weighted mean block occupancy over the run.
+    pub mean_occupancy_blocks: f64,
+    /// Radix prefix-cache hit/miss token counters (lookup = cold prefill).
+    pub radix_hit_tokens: u64,
+    pub radix_miss_tokens: u64,
+    /// LRU radix leaves evicted under pressure.
+    pub evictions: u64,
+    /// Sessions preempted (blocks released; context recomputed later).
+    pub preemptions: u64,
+    /// Memory-stall distribution (ms): admission failure → next successful
+    /// admission, per stalled request (includes preemption recompute waits).
+    pub stalls: Summary,
+}
+
+impl KvReport {
+    /// Radix hit rate over all cold-prefill lookups (0 when sharing is off
+    /// or nothing was looked up).
+    pub fn radix_hit_rate(&self) -> f64 {
+        let total = self.radix_hit_tokens + self.radix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.radix_hit_tokens as f64 / total as f64
+        }
+    }
+
+    /// Deterministic JSON form (sweep reports, diagnostics).
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("total_blocks", self.total_blocks.into()),
+            ("block_size", self.block_size.into()),
+            ("peak_blocks", self.peak_blocks.into()),
+            ("mean_occupancy_blocks", self.mean_occupancy_blocks.into()),
+            ("radix_hit_tokens", self.radix_hit_tokens.into()),
+            ("radix_miss_tokens", self.radix_miss_tokens.into()),
+            ("radix_hit_rate", self.radix_hit_rate().into()),
+            ("evictions", self.evictions.into()),
+            ("preemptions", self.preemptions.into()),
+            ("stall_p50_ms", self.stalls.p50.into()),
+            ("stall_p99_ms", self.stalls.p99.into()),
+            ("stall_count", self.stalls.n.into()),
+        ])
+    }
+}
+
+impl std::fmt::Display for KvReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "blocks {}/{} peak ({:.1} mean) | radix hit {:.1}% | evictions {} \
+             preemptions {} | stall p99 {:.1}ms (n={})",
+            self.peak_blocks,
+            self.total_blocks,
+            self.mean_occupancy_blocks,
+            self.radix_hit_rate() * 100.0,
+            self.evictions,
+            self.preemptions,
+            self.stalls.p99,
+            self.stalls.n
+        )
+    }
+}
+
 impl RunReport {
     /// Deterministic JSON summary (scenario CLI output, golden-trace
     /// snapshot comparisons). Identical runs serialize byte-identically.

@@ -217,7 +217,12 @@ impl PjrtEngine {
     /// Prefill exactly one compiled chunk. `tokens.len()` must be an
     /// available chunk size; tokens occupy positions `[start, start+N)` of
     /// `slot`. Returns the greedy next token.
-    pub fn prefill_chunk(&mut self, slot: usize, start: usize, tokens: &[i32]) -> crate::Result<i32> {
+    pub fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        start: usize,
+        tokens: &[i32],
+    ) -> crate::Result<i32> {
         let n = tokens.len();
         anyhow::ensure!(
             self.prefill_exes.contains_key(&n),

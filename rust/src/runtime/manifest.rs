@@ -147,14 +147,18 @@ impl Manifest {
                 prompt: g
                     .req_arr("prompt")?
                     .iter()
-                    .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token")))
+                    .map(|t| {
+                        t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token"))
+                    })
                     .collect::<crate::Result<Vec<_>>>()?,
                 chunk: g.req_usize("chunk")?,
                 batch: g.req_usize("batch")?,
                 expected_tokens: g
                     .req_arr("expected_tokens")?
                     .iter()
-                    .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token")))
+                    .map(|t| {
+                        t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow::anyhow!("bad token"))
+                    })
                     .collect::<crate::Result<Vec<_>>>()?,
             }),
             None => None,

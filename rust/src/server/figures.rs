@@ -359,7 +359,8 @@ pub fn analyze_competitive(
 ) -> crate::Result<()> {
     let cfg = Config::preset(model, gpu);
     let cost = CostModel::new(&cfg.model, &cfg.gpu);
-    let pool = GreenContextPool::new(cfg.gpu.sm_count, cfg.engine.green_slots, cfg.engine.rebind_us);
+    let pool =
+        GreenContextPool::new(cfg.gpu.sm_count, cfg.engine.green_slots, cfg.engine.rebind_us);
     let analyzer = CompetitiveAnalyzer::new(cost, pool.slot_sizes().to_vec(), cfg.gpu.sm_count);
 
     println!("\n=== Competitive-ratio analysis ({model} on {gpu}) ===");

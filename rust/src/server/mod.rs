@@ -22,12 +22,16 @@ USAGE:
   agentserve scenario list
   agentserve scenario run    (--name S | --file f.json) [--policy P | --all-policies]
                              [--model M] [--gpu G] [--seed N] [--events out.jsonl]
+                             [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario record (--name S | --file f.json) --out trace.jsonl
                              [--policy P] [--model M] [--gpu G] [--seed N]
+                             [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario replay --trace trace.jsonl [--policy P | --all-policies]
                              [--model M] [--gpu G] [--verify]
+                             [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario sweep  (--name SWEEP | (--scenario S | --file f.json)
-                              (--rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…))
+                              (--rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…
+                               | --kv-blocks b1,b2,…))
                              [--policy P] [--model M] [--gpu G] [--seed N]
                              [--out report.json] [--csv report.csv]
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
@@ -39,9 +43,14 @@ policies:  agentserve | no-alg | no-green | sglang | vllm | llamacpp
 models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
-sweeps:    paper-fig5-sweep | agent-scaling | mix-shift
+           | memory-pressure | shared-prefix-fleet
+sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee
            (sweep runs all paper policies unless --policy is given; see
            rust/src/workload/README.md for the scenario/sweep file schema)
+kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
+           sets the page size, --prefix-sharing enables cross-session
+           system-prompt reuse; on `scenario sweep`, --kv-blocks is the
+           memory sweep axis instead
 ";
 
 /// Entry point used by `main` (and by CLI tests).
@@ -133,6 +142,9 @@ fn bench(args: &Args) -> crate::Result<()> {
         "  mix   eta_cold={:.2} cold_routed={} merged={} rerouted={} rebinds={}",
         out.eta_cold, out.cold_routed, out.resume_merged, out.resume_rerouted, out.rebinds.rebinds
     );
+    if let Some(kv) = &out.kv {
+        println!("  mem   {kv}");
+    }
     Ok(())
 }
 
@@ -197,6 +209,37 @@ fn print_scenario_outcome(out: &crate::engine::SimOutcome) {
         out.slo.sessions,
         out.slo.rate() * 100.0
     );
+    // Memory line only on the paged path, so default-config output stays
+    // byte-identical to the pre-memory-model CLI.
+    if let Some(kv) = &out.kv {
+        println!("  mem   {kv}");
+    }
+}
+
+/// Apply the `--kv-blocks` / `--kv-block-size` / `--prefix-sharing` CLI
+/// overrides onto the config. Returns whether any flag was present — when
+/// the user constrains KV explicitly, scenario-embedded `kv` blocks are
+/// dropped so the CLI wins (flags merge onto the scenario's own settings).
+fn apply_kv_flags(
+    args: &Args,
+    cfg: &mut Config,
+    scenario_kv: Option<crate::config::KvConfig>,
+) -> crate::Result<bool> {
+    let present = args.get("kv-blocks").is_some()
+        || args.get("kv-block-size").is_some()
+        || args.has("prefix-sharing");
+    if !present {
+        return Ok(false);
+    }
+    let mut kv = scenario_kv.unwrap_or(cfg.kv);
+    kv.num_blocks = args.get_usize("kv-blocks", kv.num_blocks)?;
+    kv.block_size = args.get_usize("kv-block-size", kv.block_size)?;
+    if args.has("prefix-sharing") {
+        kv.prefix_sharing = true;
+    }
+    cfg.kv = kv;
+    cfg.validate()?;
+    Ok(true)
 }
 
 /// Filesystem-safe tag for a policy name (`llama.cpp` → `llama-cpp`).
@@ -263,8 +306,11 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("run") => {
-            let scenario = load_scenario_arg(args, &mut cfg)?;
+            let mut scenario = load_scenario_arg(args, &mut cfg)?;
             scenario.validate()?;
+            if apply_kv_flags(args, &mut cfg, scenario.kv)? {
+                scenario.kv = None;
+            }
             println!(
                 "== scenario '{}' | {} | {} | seed {} ==",
                 scenario.name, model, gpu, seed
@@ -292,8 +338,11 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("record") => {
-            let scenario = load_scenario_arg(args, &mut cfg)?;
+            let mut scenario = load_scenario_arg(args, &mut cfg)?;
             scenario.validate()?;
+            if apply_kv_flags(args, &mut cfg, scenario.kv)? {
+                scenario.kv = None;
+            }
             let out_path = args.get_or("out", "trace.jsonl");
             let policy: Policy = args.get_or("policy", "agentserve").parse()?;
             let (out, trace) = record_scenario_trace(&cfg, policy, &scenario, seed);
@@ -333,6 +382,7 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("replay") => {
+            apply_kv_flags(args, &mut cfg, None)?;
             let path = args
                 .get("trace")
                 .ok_or_else(|| anyhow::anyhow!("scenario replay needs --trace <file>"))?;
@@ -384,7 +434,7 @@ fn resolve_sweep_spec(
     if let Some(name) = args.get("name") {
         // A registry sweep is fully specified: refuse flags that would be
         // silently dropped (the grid the user asked for must be the grid run).
-        for flag in ["scenario", "file", "rates", "agents", "mix"] {
+        for flag in ["scenario", "file", "rates", "agents", "mix", "kv-blocks"] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--name picks a built-in sweep; --{flag} would be ignored — \
@@ -410,20 +460,24 @@ fn resolve_sweep_spec(
     let rates = args.get_f64_list("rates")?;
     let agents = args.get_usize_list("agents")?;
     let mix = args.get_f64_list("mix")?;
-    let n_axes = [rates.is_some(), agents.is_some(), mix.is_some()]
+    let kv_blocks = args.get_usize_list("kv-blocks")?;
+    let n_axes = [rates.is_some(), agents.is_some(), mix.is_some(), kv_blocks.is_some()]
         .iter()
         .filter(|&&x| x)
         .count();
     anyhow::ensure!(
         n_axes == 1,
-        "pass exactly one sweep axis: --rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…"
+        "pass exactly one sweep axis: --rates r1,r2,… | --agents n1,n2,… | \
+         --mix f1,f2,… | --kv-blocks b1,b2,…"
     );
     let axis = if let Some(r) = rates {
         SweepAxis::ArrivalRate(r)
     } else if let Some(a) = agents {
         SweepAxis::AgentCount(a)
+    } else if let Some(m) = mix {
+        SweepAxis::MixRatio(m)
     } else {
-        SweepAxis::MixRatio(mix.expect("one axis is set"))
+        SweepAxis::KvBlocks(kv_blocks.expect("one axis is set"))
     };
     Ok(SweepSpec {
         name: format!("{}-sweep", base.name),
@@ -441,25 +495,34 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
             report.axis, point.axis_value, report.axis_unit, point.sessions, point.seed
         );
         println!(
-            "   {:<11} {:>10} {:>10} {:>10} {:>9} {:>7}",
-            "policy", "TTFT p50", "TTFT p99", "TPOT p99", "tok/s", "SLO"
+            "   {:<11} {:>10} {:>10} {:>10} {:>9} {:>7} {:>7} {:>8}",
+            "policy", "TTFT p50", "TTFT p99", "TPOT p99", "tok/s", "SLO", "evict", "preempt"
         );
         for pp in &point.per_policy {
             println!(
-                "   {:<11} {:>8.0}ms {:>8.0}ms {:>8.1}ms {:>9.1} {:>6.1}%",
+                "   {:<11} {:>8.0}ms {:>8.0}ms {:>8.1}ms {:>9.1} {:>6.1}% {:>7} {:>8}",
                 pp.policy,
                 pp.ttft_p50,
                 pp.ttft_p99,
                 pp.tpot_p99,
                 pp.throughput_tok_s,
-                pp.slo_rate * 100.0
+                pp.slo_rate * 100.0,
+                pp.evictions,
+                pp.preemptions
             );
         }
     }
-    println!(
-        "knee ({} where p99 TTFT first exceeds the {:.0} ms SLO):",
-        report.axis, report.slo_ttft_ms
-    );
+    if report.axis == "kv-blocks" {
+        println!(
+            "memory knee (largest {} whose p99 TTFT still violates the {:.0} ms SLO):",
+            report.axis, report.slo_ttft_ms
+        );
+    } else {
+        println!(
+            "knee ({} where p99 TTFT first exceeds the {:.0} ms SLO):",
+            report.axis, report.slo_ttft_ms
+        );
+    }
     for (policy, knee) in &report.knees {
         match knee {
             Some(v) => println!("   {:<11} {} {}", policy, v, report.axis_unit),
@@ -626,6 +689,46 @@ mod tests {
             "scenario sweep --scenario paper-fig5 --mix 0.2,0.8 --policy vllm"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn scenario_run_with_kv_flags_smoke() {
+        // Constrained pool + sharing on a small closed-loop scenario.
+        run(args(
+            "scenario run --name paper-fig5 --model 3b --kv-blocks 2048 --prefix-sharing",
+        ))
+        .unwrap();
+        // A pool the validator knows is too small for one session errors.
+        assert!(run(args("scenario run --name paper-fig5 --kv-blocks 16")).is_err());
+    }
+
+    #[test]
+    fn scenario_sweep_kv_axis_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_kv_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("kv.json");
+        let csv = dir.join("kv.csv");
+        run(args(&format!(
+            "scenario sweep --scenario open-loop-sweep --kv-blocks 640,65536 \
+             --policy vllm --model 3b --out {} --csv {}",
+            json.to_str().unwrap(),
+            csv.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "kv-blocks");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.lines().next().unwrap().contains("preemptions"));
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(csv).unwrap();
+        // Axis validation: a grid value too small for one session errors,
+        // and a registry sweep refuses a would-be-dropped axis flag.
+        assert!(run(args(
+            "scenario sweep --scenario open-loop-sweep --kv-blocks 128,640 --policy vllm"
+        ))
+        .is_err());
+        assert!(run(args("scenario sweep --name kv-knee --kv-blocks 1024,2048")).is_err());
     }
 
     #[test]

@@ -279,7 +279,13 @@ impl<'a> Parser<'a> {
 
     fn expect(&mut self, c: u8) -> anyhow::Result<()> {
         let got = self.bump()?;
-        anyhow::ensure!(got == c, "expected '{}' at {}, got '{}'", c as char, self.pos - 1, got as char);
+        anyhow::ensure!(
+            got == c,
+            "expected '{}' at {}, got '{}'",
+            c as char,
+            self.pos - 1,
+            got as char
+        );
         Ok(())
     }
 

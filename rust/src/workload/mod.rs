@@ -36,7 +36,8 @@ pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
 pub use sweep::{
-    knee_value, run_sweep, PolicyPoint, SweepAxis, SweepPoint, SweepReport, SweepSpec,
+    knee_value, knee_value_kv, run_sweep, PolicyPoint, SweepAxis, SweepPoint, SweepReport,
+    SweepSpec,
 };
 pub use trace::{Trace, TraceEvent};
 

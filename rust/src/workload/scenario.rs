@@ -18,7 +18,7 @@
 use super::generator::WorkloadGenerator;
 use super::spec::WorkloadKind;
 use super::trace::{Trace, TraceEvent};
-use crate::config::ModelKind;
+use crate::config::{Config, KvConfig, ModelKind};
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
 use std::path::Path;
@@ -151,6 +151,12 @@ pub struct Scenario {
     pub total_sessions: usize,
     /// Closed-loop concurrency (agent slots); also a sizing hint elsewhere.
     pub n_agents: usize,
+    /// KV requirements the scenario ships with (pool size / prefix
+    /// sharing). `None` = run under the config's own KV settings. The
+    /// memory-bound registry scenarios carry theirs so `scenario run
+    /// --name memory-pressure` shows pressure out of the box; CLI
+    /// `--kv-blocks`-family flags override this.
+    pub kv: Option<KvConfig>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -191,7 +197,33 @@ impl Scenario {
             }
             ArrivalProcess::ClosedLoop { .. } => {}
         }
+        if let Some(kv) = &self.kv {
+            anyhow::ensure!(
+                kv.block_size > 0,
+                "scenario '{}': kv block size must be > 0",
+                self.name
+            );
+            anyhow::ensure!(
+                kv.is_unbounded() || kv.num_blocks * kv.block_size >= 8192,
+                "scenario '{}': a bounded kv pool must hold at least one worst-case \
+                 session (>= 8192 tokens; got {} blocks x {} tokens)",
+                self.name,
+                kv.num_blocks,
+                kv.block_size
+            );
+        }
         Ok(())
+    }
+
+    /// The config this scenario actually runs under: the caller's config
+    /// with the scenario's own KV requirements applied (identity when the
+    /// scenario carries none).
+    pub fn effective_config(&self, base: &Config) -> Config {
+        let mut cfg = base.clone();
+        if let Some(kv) = self.kv {
+            cfg.kv = kv;
+        }
+        cfg
     }
 
     /// Closed-loop parameters when this scenario uses closed-loop arrivals.
@@ -270,7 +302,9 @@ impl Scenario {
             .populations
             .iter()
             .enumerate()
-            .map(|(i, p)| WorkloadGenerator::new(p.workload, model, seed ^ ((i as u64 + 1) * 0x9E37_79B9)))
+            .map(|(i, p)| {
+                WorkloadGenerator::new(p.workload, model, seed ^ ((i as u64 + 1) * 0x9E37_79B9))
+            })
             .collect();
         let arrivals = self.arrival_times(&mut rng, self.total_sessions);
         let mut events = Vec::with_capacity(self.total_sessions);
@@ -304,14 +338,19 @@ impl Scenario {
             Scenario {
                 name: "paper-fig5".into(),
                 description: "paper closed loop: 4 ReAct agents, 3 chained sessions each".into(),
-                arrivals: ArrivalProcess::ClosedLoop { stagger_us: 150_000, think_time_us: 100_000 },
+                arrivals: ArrivalProcess::ClosedLoop {
+                    stagger_us: 150_000,
+                    think_time_us: 100_000,
+                },
                 populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
                 total_sessions: 12,
                 n_agents: 4,
+                kv: None,
             },
             Scenario {
                 name: "burst-storm".into(),
-                description: "on-off arrivals: bursts of 4 cold prefills 10 ms apart, 1.5-3 s idle".into(),
+                description: "on-off arrivals: bursts of 4 cold prefills 10 ms apart, 1.5-3 s idle"
+                    .into(),
                 arrivals: ArrivalProcess::Bursty {
                     burst_size: 4,
                     intra_gap_us: 10_000,
@@ -321,6 +360,7 @@ impl Scenario {
                 populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
                 total_sessions: 12,
                 n_agents: 4,
+                kv: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -332,11 +372,15 @@ impl Scenario {
                 ],
                 total_sessions: 14,
                 n_agents: 5,
+                kv: None,
             },
             Scenario {
                 name: "long-tool".into(),
                 description: "closed loop of planners whose external tools are 3x slower".into(),
-                arrivals: ArrivalProcess::ClosedLoop { stagger_us: 100_000, think_time_us: 150_000 },
+                arrivals: ArrivalProcess::ClosedLoop {
+                    stagger_us: 100_000,
+                    think_time_us: 150_000,
+                },
                 populations: vec![Population {
                     name: "slow-tools".into(),
                     workload: WorkloadKind::PlanAndExecute,
@@ -346,6 +390,7 @@ impl Scenario {
                 }],
                 total_sessions: 8,
                 n_agents: 4,
+                kv: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -360,6 +405,34 @@ impl Scenario {
                 }],
                 total_sessions: 16,
                 n_agents: 6,
+                kv: None,
+            },
+            Scenario {
+                name: "memory-pressure".into(),
+                description: "2,000 open-loop ReAct agents against a 2,048-block KV pool: \
+                              eviction + preemption under VRAM pressure"
+                    .into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 8.0 },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 2000,
+                n_agents: 2000,
+                // ~32k tokens of KV for a fleet that wants millions: the
+                // admission path stalls, the radix cache churns, and decode
+                // growth forces preemptions (all deterministic per seed).
+                kv: Some(KvConfig { num_blocks: 2048, block_size: 16, prefix_sharing: true }),
+            },
+            Scenario {
+                name: "shared-prefix-fleet".into(),
+                description: "600 open-loop ReAct agents sharing system prompts: radix reuse \
+                              collapses cold-prefill cost"
+                    .into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 2.0 },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 600,
+                n_agents: 600,
+                // Generous pool (1M tokens): sharing on, no pressure — the
+                // point is the >0.9 radix hit rate across the fleet.
+                kv: Some(KvConfig { num_blocks: 65_536, block_size: 16, prefix_sharing: true }),
             },
         ]
     }
@@ -374,7 +447,7 @@ impl Scenario {
     // -- serde ---------------------------------------------------------------
 
     pub fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("name", self.name.as_str().into()),
             ("description", self.description.as_str().into()),
             ("arrivals", self.arrivals.to_value()),
@@ -384,7 +457,18 @@ impl Scenario {
             ),
             ("total_sessions", self.total_sessions.into()),
             ("n_agents", self.n_agents.into()),
-        ])
+        ];
+        if let Some(kv) = &self.kv {
+            fields.push((
+                "kv",
+                Value::obj(vec![
+                    ("num_blocks", kv.num_blocks.into()),
+                    ("block_size", kv.block_size.into()),
+                    ("prefix_sharing", Value::Bool(kv.prefix_sharing)),
+                ]),
+            ));
+        }
+        Value::obj(fields)
     }
 
     pub fn from_value(v: &Value) -> crate::Result<Self> {
@@ -404,6 +488,26 @@ impl Scenario {
             populations,
             total_sessions: v.req_f64("total_sessions")? as usize,
             n_agents: v.get("n_agents").and_then(|n| n.as_usize()).unwrap_or(4),
+            kv: match v.get("kv") {
+                Some(k) => {
+                    let default = KvConfig::default();
+                    Some(KvConfig {
+                        num_blocks: k
+                            .get("num_blocks")
+                            .and_then(|x| x.as_usize())
+                            .unwrap_or(default.num_blocks),
+                        block_size: k
+                            .get("block_size")
+                            .and_then(|x| x.as_usize())
+                            .unwrap_or(default.block_size),
+                        prefix_sharing: k
+                            .get("prefix_sharing")
+                            .and_then(|x| x.as_bool())
+                            .unwrap_or(default.prefix_sharing),
+                    })
+                }
+                None => None,
+            },
         };
         sc.validate()?;
         Ok(sc)
@@ -427,7 +531,7 @@ mod tests {
     #[test]
     fn registry_is_valid_and_named_uniquely() {
         let reg = Scenario::registry();
-        assert!(reg.len() >= 5);
+        assert!(reg.len() >= 7);
         for s in &reg {
             s.validate().unwrap();
         }
@@ -493,6 +597,31 @@ mod tests {
             let back2 = Scenario::from_value(&parse(&text).unwrap()).unwrap();
             assert_eq!(back2, sc);
         }
+    }
+
+    #[test]
+    fn kv_carrying_scenarios_round_trip_and_apply() {
+        let sc = Scenario::by_name("memory-pressure").unwrap();
+        let kv = sc.kv.expect("memory-pressure ships a bounded pool");
+        assert!(kv.num_blocks > 0 && kv.prefix_sharing);
+        let back = Scenario::from_value(&sc.to_value()).unwrap();
+        assert_eq!(back, sc, "kv block survives the JSON round trip");
+        // effective_config applies the scenario's kv; identity otherwise.
+        let base = crate::config::Config::default();
+        assert_eq!(sc.effective_config(&base).kv, kv);
+        let plain = Scenario::by_name("paper-fig5").unwrap();
+        assert_eq!(plain.kv, None);
+        assert_eq!(plain.effective_config(&base).kv, base.kv);
+        // shared-prefix-fleet: sharing on, pool generous.
+        let shared = Scenario::by_name("shared-prefix-fleet").unwrap();
+        assert!(shared.kv.unwrap().prefix_sharing);
+    }
+
+    #[test]
+    fn undersized_scenario_kv_pool_rejected() {
+        let mut sc = Scenario::by_name("memory-pressure").unwrap();
+        sc.kv = Some(KvConfig { num_blocks: 100, block_size: 16, prefix_sharing: false });
+        assert!(sc.validate().is_err(), "100 blocks cannot hold one session");
     }
 
     #[test]

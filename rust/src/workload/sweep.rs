@@ -21,13 +21,13 @@
 
 use super::scenario::{ArrivalProcess, Population, Scenario};
 use super::spec::WorkloadKind;
-use crate::config::Config;
+use crate::config::{Config, KvConfig};
 use crate::engine::{run_scenario_fast, Policy, SimOutcome};
 use crate::util::json::Value;
 use std::path::Path;
 
 /// The swept load axis. Grid values must be strictly increasing so the knee
-/// point ("first value in violation") is well defined.
+/// point is well defined.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SweepAxis {
     /// Open-loop arrival rate (expected arrivals per virtual second). Each
@@ -42,6 +42,12 @@ pub enum SweepAxis {
     /// the other populations in their base proportions. Requires a base
     /// scenario with at least two populations.
     MixRatio(Vec<f64>),
+    /// KV pool size in blocks: each point bounds the scenario's KV pool
+    /// (block size / prefix sharing inherit from the base scenario's `kv`,
+    /// defaulting to 16-token blocks, sharing off). The memory axis: small
+    /// pools stall, evict, and preempt; large pools recover the unbounded
+    /// behavior.
+    KvBlocks(Vec<usize>),
 }
 
 impl SweepAxis {
@@ -51,6 +57,7 @@ impl SweepAxis {
             SweepAxis::ArrivalRate(_) => "arrival-rate",
             SweepAxis::AgentCount(_) => "agent-count",
             SweepAxis::MixRatio(_) => "mix-ratio",
+            SweepAxis::KvBlocks(_) => "kv-blocks",
         }
     }
 
@@ -60,6 +67,7 @@ impl SweepAxis {
             SweepAxis::ArrivalRate(_) => "req/s",
             SweepAxis::AgentCount(_) => "agents",
             SweepAxis::MixRatio(_) => "fraction",
+            SweepAxis::KvBlocks(_) => "blocks",
         }
     }
 
@@ -69,6 +77,7 @@ impl SweepAxis {
             SweepAxis::ArrivalRate(v) => v.len(),
             SweepAxis::AgentCount(v) => v.len(),
             SweepAxis::MixRatio(v) => v.len(),
+            SweepAxis::KvBlocks(v) => v.len(),
         }
     }
 
@@ -82,6 +91,7 @@ impl SweepAxis {
             SweepAxis::ArrivalRate(v) => v[i],
             SweepAxis::AgentCount(v) => v[i] as f64,
             SweepAxis::MixRatio(v) => v[i],
+            SweepAxis::KvBlocks(v) => v[i] as f64,
         }
     }
 }
@@ -138,6 +148,20 @@ impl SweepSpec {
                     );
                 }
             }
+            SweepAxis::KvBlocks(bs) => {
+                let block_size = self
+                    .base
+                    .kv
+                    .map(|kv| kv.block_size)
+                    .unwrap_or(KvConfig::default().block_size);
+                for &b in bs {
+                    anyhow::ensure!(
+                        b * block_size >= 8192,
+                        "kv-blocks grid value {b} x {block_size}-token blocks cannot hold \
+                         one worst-case session (need >= 8192 tokens)"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -160,6 +184,10 @@ impl SweepSpec {
                 for p in &mut sc.populations[1..] {
                     p.weight = p.weight / rest * (1.0 - f);
                 }
+            }
+            SweepAxis::KvBlocks(bs) => {
+                let base_kv = sc.kv.unwrap_or_default();
+                sc.kv = Some(KvConfig { num_blocks: bs[i], ..base_kv });
             }
         }
         sc
@@ -189,6 +217,7 @@ impl SweepSpec {
                     populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
                     total_sessions: 2000,
                     n_agents: 2000,
+                    kv: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -208,6 +237,7 @@ impl SweepSpec {
                     populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
                     total_sessions: 250,
                     n_agents: 250,
+                    kv: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -227,8 +257,30 @@ impl SweepSpec {
                     ],
                     total_sessions: 200,
                     n_agents: 200,
+                    kv: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
+            },
+            SweepSpec {
+                name: "kv-knee".into(),
+                description:
+                    "the memory knee: a 400-agent shared-prefix fleet swept across KV pool \
+                     sizes, from heavy pressure to effectively unconstrained"
+                        .into(),
+                base: Scenario {
+                    name: "kv-fleet".into(),
+                    description: "400 open-loop ReAct agents; the sweep sets the pool".into(),
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 2.0 },
+                    populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                    total_sessions: 400,
+                    n_agents: 400,
+                    kv: Some(KvConfig {
+                        num_blocks: 65_536,
+                        block_size: 16,
+                        prefix_sharing: true,
+                    }),
+                },
+                axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
             },
         ]
     }
@@ -255,10 +307,19 @@ pub struct PolicyPoint {
     pub slo_rate: f64,
     pub completed: usize,
     pub wall_ms: f64,
+    /// Memory metrics (zeros on the unbounded default path).
+    pub radix_hit_rate: f64,
+    pub evictions: u64,
+    pub preemptions: u64,
+    pub stall_p99_ms: f64,
 }
 
 impl PolicyPoint {
     pub fn from_outcome(out: &SimOutcome) -> Self {
+        let (radix_hit_rate, evictions, preemptions, stall_p99_ms) = match &out.kv {
+            Some(kv) => (kv.radix_hit_rate(), kv.evictions, kv.preemptions, kv.stalls.p99),
+            None => (0.0, 0, 0, 0.0),
+        };
         Self {
             policy: out.policy_name.clone(),
             ttft_p50: out.report.ttft.p50,
@@ -271,6 +332,10 @@ impl PolicyPoint {
             slo_rate: out.slo.rate(),
             completed: out.report.completed_sessions,
             wall_ms: out.report.wall_ms,
+            radix_hit_rate,
+            evictions,
+            preemptions,
+            stall_p99_ms,
         }
     }
 
@@ -287,6 +352,10 @@ impl PolicyPoint {
             ("slo_rate", self.slo_rate.into()),
             ("completed", self.completed.into()),
             ("wall_ms", self.wall_ms.into()),
+            ("radix_hit_rate", self.radix_hit_rate.into()),
+            ("evictions", self.evictions.into()),
+            ("preemptions", self.preemptions.into()),
+            ("stall_p99_ms", self.stall_p99_ms.into()),
         ])
     }
 }
@@ -378,12 +447,13 @@ impl SweepReport {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
-             tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms\n",
+             tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
+             radix_hit_rate,evictions,preemptions,stall_p99_ms\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -398,7 +468,11 @@ impl SweepReport {
                     pp.throughput_tok_s,
                     pp.slo_rate,
                     pp.completed,
-                    pp.wall_ms
+                    pp.wall_ms,
+                    pp.radix_hit_rate,
+                    pp.evictions,
+                    pp.preemptions,
+                    pp.stall_p99_ms
                 ));
             }
         }
@@ -419,10 +493,23 @@ impl SweepReport {
 /// The knee point for policy `policy_idx`: the smallest axis value whose
 /// p99 TTFT exceeds `ttft_slo_ms` (`None` when the whole grid is within
 /// SLO). Points must be in ascending axis order (enforced by
-/// [`SweepSpec::validate`]).
+/// [`SweepSpec::validate`]). This is the *load* knee — for the kv-blocks
+/// axis use [`knee_value_kv`].
 pub fn knee_value(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
     points
         .iter()
+        .find(|pt| pt.per_policy[policy_idx].ttft_p99 > ttft_slo_ms)
+        .map(|pt| pt.axis_value)
+}
+
+/// The *memory* knee for policy `policy_idx` on an ascending kv-blocks
+/// grid: the largest pool size whose p99 TTFT still violates `ttft_slo_ms`
+/// — capacities above it meet the SLO (`None` when no point violates, i.e.
+/// the whole grid is memory-adequate).
+pub fn knee_value_kv(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
+    points
+        .iter()
+        .rev()
         .find(|pt| pt.per_policy[policy_idx].ttft_p99 > ttft_slo_ms)
         .map(|pt| pt.axis_value)
 }
@@ -446,7 +533,9 @@ pub fn run_sweep(
         let seed = spec.point_seed(base_seed, i);
         let per_policy = policies
             .iter()
-            .map(|&policy| PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed)))
+            .map(|&policy| {
+                PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed))
+            })
             .collect();
         points.push(SweepPoint {
             axis_value: spec.axis.value_at(i),
@@ -458,7 +547,13 @@ pub fn run_sweep(
     let knees = policies
         .iter()
         .enumerate()
-        .map(|(pi, p)| (p.name().to_string(), knee_value(&points, pi, cfg.slo.ttft_ms)))
+        .map(|(pi, p)| {
+            let knee = match &spec.axis {
+                SweepAxis::KvBlocks(_) => knee_value_kv(&points, pi, cfg.slo.ttft_ms),
+                _ => knee_value(&points, pi, cfg.slo.ttft_ms),
+            };
+            (p.name().to_string(), knee)
+        })
         .collect();
     Ok(SweepReport {
         sweep: spec.name.clone(),
@@ -596,9 +691,8 @@ mod tests {
         assert_eq!(pt.req_str("seed").unwrap().parse::<u64>().unwrap(), seed);
     }
 
-    #[test]
-    fn knee_is_first_violation_in_grid_order() {
-        let pp = |ttft_p99: f64| PolicyPoint {
+    fn pp(ttft_p99: f64) -> PolicyPoint {
+        PolicyPoint {
             policy: "X".into(),
             ttft_p50: 0.0,
             ttft_p95: 0.0,
@@ -610,18 +704,53 @@ mod tests {
             slo_rate: 1.0,
             completed: 1,
             wall_ms: 0.0,
-        };
-        let points: Vec<SweepPoint> = [(1.0, 50.0), (2.0, 120.0), (4.0, 400.0)]
-            .iter()
+            radix_hit_rate: 0.0,
+            evictions: 0,
+            preemptions: 0,
+            stall_p99_ms: 0.0,
+        }
+    }
+
+    fn points_with(p99s: &[(f64, f64)]) -> Vec<SweepPoint> {
+        p99s.iter()
             .map(|&(axis_value, p99)| SweepPoint {
                 axis_value,
                 sessions: 1,
                 seed: 0,
                 per_policy: vec![pp(p99)],
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn knee_is_first_violation_in_grid_order() {
+        let points = points_with(&[(1.0, 50.0), (2.0, 120.0), (4.0, 400.0)]);
         assert_eq!(knee_value(&points, 0, 100.0), Some(2.0));
         assert_eq!(knee_value(&points, 0, 40.0), Some(1.0));
         assert_eq!(knee_value(&points, 0, 1000.0), None);
+    }
+
+    #[test]
+    fn kv_knee_is_largest_violation_in_grid_order() {
+        // Ascending pool sizes: small pools violate, big pools comply; the
+        // memory knee is the last (largest) violating capacity.
+        let points = points_with(&[(1024.0, 900.0), (4096.0, 300.0), (16384.0, 40.0)]);
+        assert_eq!(knee_value_kv(&points, 0, 100.0), Some(4096.0));
+        assert_eq!(knee_value_kv(&points, 0, 20.0), Some(16384.0));
+        assert_eq!(knee_value_kv(&points, 0, 1000.0), None);
+    }
+
+    #[test]
+    fn kv_blocks_axis_bounds_the_scenario_pool() {
+        let spec = SweepSpec::by_name("kv-knee").unwrap();
+        spec.validate().unwrap();
+        let sc = spec.scenario_at(0);
+        let kv = sc.kv.expect("axis installs a bounded pool");
+        assert_eq!(kv.num_blocks, 1024);
+        assert!(kv.prefix_sharing, "base scenario's sharing flag inherits");
+        // An undersized grid value is rejected.
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::KvBlocks(vec![128, 1024]);
+        assert!(bad.validate().is_err(), "128 blocks cannot hold one session");
     }
 }

@@ -194,10 +194,11 @@ fn rebind_overhead_stays_negligible() {
 
 #[test]
 fn kv_capacity_pressure_defers_but_completes() {
-    // Shrink KV capacity until cold admissions must wait; everything still
-    // completes (back-pressure, not deadlock).
+    // Shrink the KV pool until admissions must wait; everything still
+    // completes (back-pressure + preemption, not deadlock), and the paged
+    // allocator structurally cannot exceed the configured capacity.
     let mut cfg = cfg(ModelKind::Qwen3B, GpuKind::A5000);
-    cfg.engine.kv_blocks = 700; // ~11k tokens: < 3 concurrent full sessions
+    cfg.kv.num_blocks = 700; // ~11k tokens: < 3 concurrent full sessions
     let out = run_sim(&cfg, Policy::AgentServe(AgentServeOpts::default()), &params(4, 2));
     assert_eq!(out.report.completed_sessions, 8);
     assert!(
@@ -205,6 +206,9 @@ fn kv_capacity_pressure_defers_but_completes() {
         "peak {} must respect capacity",
         out.kv_peak_tokens
     );
+    let kv = out.kv.expect("bounded pool runs the paged path");
+    assert!(kv.peak_blocks <= 700);
+    assert!(kv.stalls.n > 0, "4 concurrent sessions must stall on a ~2.4-session pool");
 }
 
 #[test]
@@ -268,8 +272,9 @@ fn sglang_split_trades_ttft_for_tpot() {
     // worse TTFT/throughput. This is the motivation for Algorithm 1.
     let cfg = cfg(ModelKind::Qwen7B, GpuKind::A5000);
     let p = params(5, 2);
-    let lo = run_sim(&cfg, Policy::Sglang(agentserve::engine::SglangOpts { decode_share: 0.3 }), &p);
-    let hi = run_sim(&cfg, Policy::Sglang(agentserve::engine::SglangOpts { decode_share: 0.7 }), &p);
+    use agentserve::engine::SglangOpts;
+    let lo = run_sim(&cfg, Policy::Sglang(SglangOpts { decode_share: 0.3 }), &p);
+    let hi = run_sim(&cfg, Policy::Sglang(SglangOpts { decode_share: 0.7 }), &p);
     assert!(hi.report.tpot.p95 < lo.report.tpot.p95);
     assert!(hi.report.ttft.p95 > lo.report.ttft.p95);
     assert!(hi.report.throughput_tok_s < lo.report.throughput_tok_s);

@@ -1,0 +1,290 @@
+//! KV-cache subsystem under churn (tier-1): allocator + radix + session
+//! invariants across randomized admit/prefill/decode/finish sequences,
+//! deterministic eviction/preemption under pressure, and the memory-bound
+//! registry scenarios' acceptance properties (nonzero evictions and
+//! preemptions on `memory-pressure`, >0.9 radix hit rate on
+//! `shared-prefix-fleet`, a detected memory knee on a kv-blocks sweep).
+
+use agentserve::config::{Config, GpuKind, KvConfig, ModelKind};
+use agentserve::engine::{run_scenario_fast, Policy};
+use agentserve::kvcache::{BlockAllocator, RadixPrefixCache, SessionCache};
+use agentserve::util::rng::Rng;
+use agentserve::workload::{
+    run_sweep, ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
+};
+
+fn cfg() -> Config {
+    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+}
+
+// ---------------------------------------------------------------------------
+// Property: allocator + radix + session caches preserve every invariant
+// under random admit / prefill / decode / finish / evict sequences.
+// ---------------------------------------------------------------------------
+
+/// Model of one live session in the property driver.
+struct Live {
+    cache: SessionCache,
+    prompt: Vec<u32>,
+}
+
+/// Total references the model expects the allocator to hold: one per block
+/// per session list entry, plus one per block pinned by the radix tree.
+fn expected_refs(sessions: &[Option<Live>], radix: &RadixPrefixCache) -> usize {
+    sessions
+        .iter()
+        .flatten()
+        .map(|l| l.cache.blocks().len())
+        .sum::<usize>()
+        + radix.cached_blocks()
+}
+
+fn total_refs(alloc: &BlockAllocator) -> usize {
+    (0..alloc.num_blocks() as u32).map(|b| alloc.ref_count(b) as usize).sum()
+}
+
+#[test]
+fn prop_kv_trio_invariants_under_churn() {
+    let bs = 16usize;
+    for seed in 0..25u64 {
+        let mut rng = Rng::seed_from_u64(42_000 + seed);
+        let pool = 192 + (rng.next_u64() % 256) as usize;
+        let mut alloc = BlockAllocator::new(pool, bs);
+        let mut radix = RadixPrefixCache::new();
+        let n_slots = 6usize;
+        let mut sessions: Vec<Option<Live>> = (0..n_slots).map(|_| None).collect();
+        // A handful of shared "templates" so lookups actually hit.
+        let templates: Vec<Vec<u32>> = (0..3)
+            .map(|t| (0..(bs as u32 * (4 + t))).map(|i| i * 3 + t).collect())
+            .collect();
+
+        for step in 0..400 {
+            let slot = (rng.next_u64() % n_slots as u64) as usize;
+            match rng.next_u64() % 5 {
+                // Admit: radix lookup + adopt + begin a cold prefill.
+                0 if sessions[slot].is_none() => {
+                    let prompt = templates[(rng.next_u64() % 3) as usize].clone();
+                    let (matched, leased) = radix.lookup(&prompt, &mut alloc);
+                    let uncached = prompt.len() - matched;
+                    if alloc.free_blocks() >= alloc.blocks_for(uncached) {
+                        let mut cache = SessionCache::new();
+                        cache.adopt_prefix(leased, &prompt, matched);
+                        cache
+                            .begin_prefill(&prompt[matched..], &mut alloc)
+                            .expect("headroom checked");
+                        sessions[slot] = Some(Live { cache, prompt });
+                    } else {
+                        for b in leased {
+                            alloc.release(b).unwrap();
+                        }
+                    }
+                }
+                // Complete the prefill and index the prompt for sharing.
+                1 => {
+                    if let Some(l) = &mut sessions[slot] {
+                        l.cache.complete_prefill();
+                        if l.cache.committed_tokens() >= l.prompt.len() {
+                            radix.insert(&l.prompt, l.cache.blocks(), &mut alloc);
+                        }
+                    }
+                }
+                // Decode one token (only on committed, unfenced caches).
+                2 => {
+                    if let Some(l) = &mut sessions[slot] {
+                        if l.cache.decode_ready() && alloc.free_blocks() > 0 {
+                            l.cache.append_decoded(7, &mut alloc).expect("headroom");
+                        }
+                    }
+                }
+                // Finish: release everything the session holds.
+                3 => {
+                    if let Some(mut l) = sessions[slot].take() {
+                        l.cache.complete_prefill();
+                        l.cache.release_all(&mut alloc).unwrap();
+                    }
+                }
+                // Pressure: evict a few LRU radix leaves.
+                _ => {
+                    radix.evict_lru(1 + (rng.next_u64() % 3) as usize, &mut alloc);
+                }
+            }
+            alloc
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(
+                total_refs(&alloc),
+                expected_refs(&sessions, &radix),
+                "seed {seed} step {step}: reference-count conservation"
+            );
+        }
+        // Drain: finish every session, evict the whole tree — no leaks.
+        for slot in 0..n_slots {
+            if let Some(mut l) = sessions[slot].take() {
+                l.cache.complete_prefill();
+                l.cache.release_all(&mut alloc).unwrap();
+            }
+        }
+        while radix.evict_lru(usize::MAX, &mut alloc) > 0 {}
+        assert_eq!(alloc.used_blocks(), 0, "seed {seed}: blocks leaked");
+        alloc.check_invariants().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eviction/preemption under pressure: deterministic, conservative, nonzero.
+// ---------------------------------------------------------------------------
+
+/// A scaled-down memory-pressure fleet (same shape as the registry
+/// scenario, 300 sessions instead of 2,000) — cheap enough to run under
+/// every paper policy.
+fn scaled_pressure_fleet() -> Scenario {
+    Scenario {
+        name: "pressure-300".into(),
+        description: "scaled memory-pressure fleet for the churn suite".into(),
+        arrivals: ArrivalProcess::Poisson { rate_per_s: 8.0 },
+        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+        total_sessions: 300,
+        n_agents: 300,
+        kv: Some(KvConfig { num_blocks: 1024, block_size: 16, prefix_sharing: true }),
+    }
+}
+
+#[test]
+fn eviction_under_pressure_is_deterministic() {
+    let cfg = cfg();
+    let sc = scaled_pressure_fleet();
+    sc.validate().unwrap();
+    let expected = sc.instantiate(cfg.model.kind, 7).trace.total_decode_tokens();
+    for policy in [Policy::AgentServe(Default::default()), Policy::Vllm] {
+        let a = run_scenario_fast(&cfg, policy, &sc, 7);
+        let b = run_scenario_fast(&cfg, policy, &sc, 7);
+        assert_eq!(a.report.completed_sessions, 300, "{}", policy.name());
+        assert_eq!(a.report.total_tokens, expected, "{}", policy.name());
+        assert_eq!(
+            a.report.to_value().to_string(),
+            b.report.to_value().to_string(),
+            "{}: pressure runs must be byte-deterministic",
+            policy.name()
+        );
+        let (ka, kb) = (a.kv.expect("paged"), b.kv.expect("paged"));
+        assert_eq!(ka.evictions, kb.evictions, "{}", policy.name());
+        assert_eq!(ka.preemptions, kb.preemptions, "{}", policy.name());
+        assert_eq!(ka.peak_blocks, kb.peak_blocks, "{}", policy.name());
+        assert!(
+            ka.evictions > 0 && ka.preemptions > 0,
+            "{}: a 300-agent burst on a 1,024-block pool must evict ({}) and preempt ({})",
+            policy.name(),
+            ka.evictions,
+            ka.preemptions
+        );
+        assert!(ka.peak_blocks <= 1024, "{}", policy.name());
+    }
+}
+
+#[test]
+fn memory_pressure_registry_scenario_shows_pressure() {
+    // Acceptance: with its shipped constrained pool, the 2,000-agent
+    // `memory-pressure` scenario reports nonzero evictions and preemptions,
+    // deterministically, while conserving every scripted decode token.
+    let cfg = cfg();
+    let sc = Scenario::by_name("memory-pressure").unwrap();
+    let expected = sc.instantiate(cfg.model.kind, 7).trace.total_decode_tokens();
+    let out = run_scenario_fast(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    assert_eq!(out.report.completed_sessions, sc.total_sessions);
+    assert_eq!(out.report.total_tokens, expected);
+    let kv = out.kv.expect("memory-pressure runs the paged path");
+    assert!(kv.evictions > 0, "evictions {}", kv.evictions);
+    assert!(kv.preemptions > 0, "preemptions {}", kv.preemptions);
+    assert!(kv.stalls.n > 0, "stalls {}", kv.stalls.n);
+    assert!(kv.peak_blocks <= 2048, "peak {} within the pool", kv.peak_blocks);
+    let again = run_scenario_fast(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    assert_eq!(
+        out.report.to_value().to_string(),
+        again.report.to_value().to_string(),
+        "same seed must reproduce the pressure run byte-for-byte"
+    );
+    assert_eq!(kv.preemptions, again.kv.expect("paged").preemptions);
+}
+
+#[test]
+fn shared_prefix_fleet_reaches_high_radix_hit_rate() {
+    // Acceptance: the shared-prefix fleet's cold prefills overwhelmingly
+    // hit the radix cache (>0.9 of looked-up tokens), collapsing cold cost.
+    let cfg = cfg();
+    let sc = Scenario::by_name("shared-prefix-fleet").unwrap();
+    let out = run_scenario_fast(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    assert_eq!(out.report.completed_sessions, sc.total_sessions);
+    let kv = out.kv.expect("paged path");
+    assert!(
+        kv.radix_hit_rate() > 0.9,
+        "hit rate {:.3} (hit {} / miss {})",
+        kv.radix_hit_rate(),
+        kv.radix_hit_tokens,
+        kv.radix_miss_tokens
+    );
+    assert_eq!(kv.preemptions, 0, "the generous pool must not preempt");
+    // And the shared fleet's measured cold fraction collapses relative to
+    // the same fleet without sharing.
+    let mut unshared = sc.clone();
+    unshared.kv = Some(KvConfig { num_blocks: 65_536, block_size: 16, prefix_sharing: false });
+    let base = run_scenario_fast(&cfg, Policy::AgentServe(Default::default()), &unshared, 7);
+    assert!(
+        out.eta_cold < base.eta_cold * 0.5,
+        "radix reuse must at least halve the cold work fraction ({} vs {})",
+        out.eta_cold,
+        base.eta_cold
+    );
+}
+
+// ---------------------------------------------------------------------------
+// kv-blocks sweep: the memory knee is detected.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_blocks_sweep_detects_a_memory_knee() {
+    let cfg = cfg();
+    let spec = SweepSpec {
+        name: "knee-test".into(),
+        description: String::new(),
+        base: Scenario {
+            name: "knee-fleet".into(),
+            description: String::new(),
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 4.0 },
+            populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+            total_sessions: 20,
+            n_agents: 20,
+            kv: None,
+        },
+        axis: SweepAxis::KvBlocks(vec![640, 262_144]),
+    };
+    spec.validate().unwrap();
+    let policies = [Policy::AgentServe(Default::default()), Policy::LlamaCpp];
+    let report = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(report.axis, "kv-blocks");
+    // A ~2.5-session pool facing 20 near-simultaneous agents must blow the
+    // TTFT SLO, so at least one policy's memory knee is detected.
+    assert!(
+        report.knees.iter().any(|(_, knee)| knee.is_some()),
+        "knees: {:?}",
+        report.knees
+    );
+    // Memory monotonicity: the starved point's tail TTFT dominates the
+    // effectively-unbounded point's, under every policy.
+    for (pi, policy) in policies.iter().enumerate() {
+        let starved = &report.points[0].per_policy[pi];
+        let ample = &report.points[1].per_policy[pi];
+        assert!(
+            starved.ttft_p99 > ample.ttft_p99,
+            "{}: {} vs {}",
+            policy.name(),
+            starved.ttft_p99,
+            ample.ttft_p99
+        );
+        assert_eq!(starved.completed, 20, "{}", policy.name());
+        assert_eq!(ample.completed, 20, "{}", policy.name());
+    }
+    // The CSV carries the memory columns.
+    let csv = report.to_csv();
+    assert!(csv.lines().next().unwrap().ends_with("stall_p99_ms"));
+    assert_eq!(csv.lines().count(), 1 + 2 * policies.len());
+}

@@ -149,8 +149,8 @@ fn prop_scheduler_bounds_hold_for_any_signal() {
                 s.record_decode_step(rng.f64() * 300_000.0);
             }
             s.tick(t * 50_000);
-            assert!(s.b_prefill() >= cfg.b_min && s.b_prefill() <= cfg.b_max, "seed {seed}");
-            assert!(s.r_min() >= cfg.r_base && s.r_min() <= total_sms, "seed {seed}");
+            assert!((cfg.b_min..=cfg.b_max).contains(&s.b_prefill()), "seed {seed}");
+            assert!((cfg.r_base..=total_sms).contains(&s.r_min()), "seed {seed}");
         }
     }
 }
@@ -202,7 +202,7 @@ fn prop_percentile_monotone_and_bounded() {
         for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
             let v = percentile(&samples, q);
             assert!(v >= prev - 1e-12, "seed {seed}: must be monotone in q");
-            assert!(v >= lo - 1e-12 && v <= hi + 1e-12, "seed {seed}: bounded");
+            assert!(((lo - 1e-12)..=(hi + 1e-12)).contains(&v), "seed {seed}: bounded");
             prev = v;
         }
         assert_eq!(percentile(&samples, 0.0), lo);
@@ -284,6 +284,7 @@ mod arrivals {
             populations,
             total_sessions: n,
             n_agents: 4,
+            kv: None,
         }
     }
 
@@ -358,7 +359,7 @@ fn prop_bursty_respects_burst_and_idle_bounds() {
         for (i, &g) in gaps.iter().enumerate().skip(1) {
             if (i as u32) % burst_size == 0 {
                 assert!(
-                    g >= idle_min_us && g <= idle_max_us,
+                    (idle_min_us..=idle_max_us).contains(&g),
                     "seed {seed}: idle gap {g} outside [{idle_min_us}, {idle_max_us}] at {i}"
                 );
             } else {

@@ -23,6 +23,7 @@ fn small_open_loop(sessions: usize) -> Scenario {
         populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
         total_sessions: sessions,
         n_agents: sessions,
+        kv: None,
     }
 }
 
