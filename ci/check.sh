@@ -85,5 +85,17 @@ cargo run --release --bin agentserve -- \
 [ -s "$tmp/kv.json" ] && [ -s "$tmp/kv.csv" ]
 grep -q '"axis": "kv-blocks"' "$tmp/kv.json"
 
+step "Workflow smoke (supervisor/worker DAG under every policy)"
+cargo run --release --bin agentserve -- \
+    workflow run --name supervisor-worker --tasks 4 --model 3b --all-policies
+
+step "Fan-out knee sweep smoke (registry sweep, task-SLO knee)"
+cargo run --release --bin agentserve -- \
+    scenario sweep --name fanout-knee --policy agentserve --model 3b \
+    --out "$tmp/fan.json" --csv "$tmp/fan.csv"
+[ -s "$tmp/fan.json" ] && [ -s "$tmp/fan.csv" ]
+grep -q '"axis": "fan-out"' "$tmp/fan.json"
+grep -q 'makespan_p99_ms' "$tmp/fan.csv"
+
 echo ""
 echo "ci/check.sh: all green"

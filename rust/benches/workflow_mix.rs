@@ -1,0 +1,58 @@
+//! Workflow-mix benchmark: every registry workflow under the full policy
+//! lineup (task-level makespan / critical-path / task-SLO alongside the
+//! usual request metrics), then a 500-task supervisor/worker point timing
+//! the compiler + dependency-driven simulator at fleet scale.
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::engine::{run_scenario, run_scenario_fast, Policy};
+use agentserve::util::bench::Bench;
+use agentserve::workflow::{WorkflowLoad, WorkflowSpec};
+use agentserve::workload::Scenario;
+
+fn carrier(spec: WorkflowSpec, tasks: usize, rate: f64) -> Scenario {
+    Scenario {
+        name: format!("bench-{}", spec.name),
+        ..WorkflowLoad::new(spec).carrier(tasks, rate)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+    println!("== workflow mix: {} / {} ==", cfg.model.kind, cfg.gpu.kind);
+    println!(
+        "{:<18} {:<11} {:>11} {:>11} {:>9} {:>8} {:>9}",
+        "workflow", "policy", "mkspan p50", "mkspan p99", "cp p50", "stretch", "task-SLO"
+    );
+    for spec in WorkflowSpec::registry() {
+        let sc = carrier(spec, 8, 0.5);
+        for policy in Policy::paper_lineup() {
+            let out = run_scenario(&cfg, policy, &sc, 7);
+            let wf = out.workflow.expect("workflow scenarios report task metrics");
+            println!(
+                "{:<18} {:<11} {:>9.0}ms {:>9.0}ms {:>7.0}ms {:>8.2} {:>8.1}%",
+                sc.name.trim_start_matches("bench-"),
+                out.policy_name,
+                wf.makespan.p50,
+                wf.makespan.p99,
+                wf.critical_path.p50,
+                wf.stretch,
+                wf.rate() * 100.0
+            );
+        }
+    }
+
+    // The scale point: 500 supervisor/worker tasks (2,500 sessions) on the
+    // timeline-free fast path — what a fan-out sweep grid point costs.
+    let big = carrier(
+        WorkflowSpec::by_name("supervisor-worker").expect("registry"),
+        500,
+        2.0,
+    );
+    let b = Bench::new("workflow_mix").with_iters(1, 3);
+    b.case("supervisor_worker_500_tasks", || {
+        run_scenario_fast(&cfg, Policy::AgentServe(Default::default()), &big, 7)
+            .report
+            .total_tokens
+    });
+    Ok(())
+}

@@ -1,18 +1,45 @@
-//! Agent clients: session scripts scaled for the real (tiny-model) engine.
+//! Agent clients: the paper's Application Layer (§III-A), defined on top of
+//! the workflow DAG engine.
 //!
-//! The Application Layer of the paper (§III-A) is an agent framework
-//! (LangChain/AutoGen-style) driving reasoning-action loops. For the
-//! end-to-end examples we synthesize those loops: each agent runs ReAct or
-//! Plan-and-Execute sessions whose token counts are scaled to the tiny
-//! model's `max_seq` budget (the real engine clamps further as needed).
+//! The agent paradigms (ReAct, Plan-and-Execute) are registry *workflows* —
+//! the degenerate single-node DAGs `single-react` / `plan-execute`
+//! ([`crate::workflow::WorkflowSpec::registry`]) — so the real-engine
+//! examples and the simulator share one agent definition: both compile
+//! sessions through [`crate::workflow::compile()`], and richer pipelines
+//! (supervisor/worker, debate) are the same machinery with more nodes.
 
 use crate::config::ModelKind;
-use crate::workload::{SessionScript, WorkloadGenerator, WorkloadKind};
+use crate::workflow::{compile, WorkflowLoad, WorkflowSpec};
+use crate::workload::{SessionScript, WorkloadKind};
 
-/// Generate `n` agent sessions for the real engine.
+/// The degenerate single-agent workflow for one paradigm.
+pub fn agent_workflow(kind: WorkloadKind) -> WorkflowSpec {
+    let name = match kind {
+        WorkloadKind::ReAct => "single-react",
+        WorkloadKind::PlanAndExecute => "plan-execute",
+    };
+    WorkflowSpec::by_name(name).expect("registry carries both agent paradigms")
+}
+
+/// Generate `n` agent sessions for `model` by compiling the paradigm's
+/// workflow (one task per session). The arrival process of the throwaway
+/// carrier scenario does not influence the scripts — only the seed and the
+/// node generators do — so callers get pure session material.
+pub fn sessions_for(
+    kind: WorkloadKind,
+    model: ModelKind,
+    n: usize,
+    seed: u64,
+) -> Vec<SessionScript> {
+    let scenario = WorkflowLoad::new(agent_workflow(kind)).carrier(n, 1.0);
+    compile(&scenario, model, seed).scripts
+}
+
+/// Generate `n` agent sessions scaled for the real (tiny-model) engine:
+/// token counts fit the tiny model's `max_seq` budget (the engine clamps
+/// further as needed).
 pub fn tiny_sessions(kind: WorkloadKind, n: usize, seed: u64) -> Vec<SessionScript> {
-    let mut gen = WorkloadGenerator::new(kind, ModelKind::Tiny, seed);
-    gen.sessions(n)
+    sessions_for(kind, ModelKind::Tiny, n, seed)
 }
 
 #[cfg(test)]
@@ -27,5 +54,21 @@ mod tests {
             assert!(sess.cold_prefill_tokens > 0);
             assert!(!sess.steps.is_empty());
         }
+    }
+
+    #[test]
+    fn both_paradigms_are_registry_workflows() {
+        assert_eq!(agent_workflow(WorkloadKind::ReAct).name, "single-react");
+        assert_eq!(agent_workflow(WorkloadKind::PlanAndExecute).name, "plan-execute");
+        let pe = sessions_for(WorkloadKind::PlanAndExecute, ModelKind::Qwen3B, 3, 9);
+        assert!(pe.iter().all(|s| s.kind == WorkloadKind::PlanAndExecute));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = tiny_sessions(WorkloadKind::ReAct, 5, 42);
+        let b = tiny_sessions(WorkloadKind::ReAct, 5, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, tiny_sessions(WorkloadKind::ReAct, 5, 43));
     }
 }

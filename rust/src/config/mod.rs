@@ -141,6 +141,7 @@ impl Config {
                     ("ttft_ms", self.slo.ttft_ms.into()),
                     ("tpot_ms", self.slo.tpot_ms.into()),
                     ("scale", self.slo.scale.into()),
+                    ("task_ms", self.slo.task_ms.into()),
                 ]),
             ),
             (
@@ -199,6 +200,7 @@ impl Config {
             override_f64(s, "ttft_ms", &mut cfg.slo.ttft_ms);
             override_f64(s, "tpot_ms", &mut cfg.slo.tpot_ms);
             override_f64(s, "scale", &mut cfg.slo.scale);
+            override_f64(s, "task_ms", &mut cfg.slo.task_ms);
         }
         if let Some(e) = v.get("engine") {
             let c = &mut cfg.engine;

@@ -16,6 +16,12 @@ pub struct SloConfig {
     pub tpot_ms: f64,
     /// Scaling factor applied to isolated-performance profiles.
     pub scale: f64,
+    /// Task-level deadline τ_task (ms) for workflow DAG scenarios: a task
+    /// attains its SLO iff its makespan (release → last node completion)
+    /// stays within this bound. Judged per *task*, not per request — the
+    /// deadline a pipeline's end user actually experiences. Ignored by
+    /// plain session scenarios.
+    pub task_ms: f64,
 }
 
 impl SloConfig {
@@ -32,6 +38,10 @@ impl SloConfig {
             ttft_ms: isolated_ttft_ms * scale,
             tpot_ms: isolated_tpot_ms * scale,
             scale,
+            // Workflow tasks chain several tool-waiting LLM calls; a fixed
+            // tens-of-seconds envelope is the interactive-pipeline bound
+            // (override per experiment via config / --task-slo-ms).
+            task_ms: 30_000.0,
         }
     }
 
@@ -79,7 +89,7 @@ mod tests {
 
     #[test]
     fn r_min_matches_definition() {
-        let slo = SloConfig { ttft_ms: 1000.0, tpot_ms: 50.0, scale: 3.0 };
+        let slo = SloConfig { ttft_ms: 1000.0, tpot_ms: 50.0, scale: 3.0, task_ms: 30_000.0 };
         assert!((slo.r_min_tokens_per_s() - 20.0).abs() < 1e-9);
     }
 

@@ -200,7 +200,7 @@ mod tests {
     fn infeasible_slo_detected() {
         let (a, _) = analyzer();
         // Demand a TPOT no GPU can reach: r_min astronomically high.
-        let slo = SloConfig { ttft_ms: 1.0, tpot_ms: 1e-6, scale: 1.0 };
+        let slo = SloConfig { ttft_ms: 1.0, tpot_ms: 1e-6, scale: 1.0, task_ms: 30_000.0 };
         assert!(a.bound(&slo, 0, 0.0, 0.5).is_none());
     }
 }

@@ -30,8 +30,11 @@ use crate::coordinator::{
 };
 use crate::gpusim::CostModel;
 use crate::greenctx::{GreenContextPool, RebindStats};
-use crate::metrics::{KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample};
+use crate::metrics::{
+    KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample, WorkflowReport,
+};
 use crate::util::json::Value;
+use crate::workflow::{DepTarget, WorkflowPlan};
 use crate::workload::{Scenario, SessionScript, Trace, WorkloadGenerator, WorkloadKind};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -75,6 +78,11 @@ enum ArrivalPlan {
     /// One explicit arrival timestamp per session; no chaining (open-loop
     /// scenarios and trace replay).
     Explicit(Vec<u64>),
+    /// Dependency-driven arrivals from a compiled workflow DAG
+    /// ([`crate::workflow::compile()`]): root sessions are released at their
+    /// gate timestamps; dependent sessions and gated continuation steps
+    /// are released by the orchestrator as their join barriers resolve.
+    Workflow(WorkflowPlan),
 }
 
 /// One execution-layer event (opt-in recording; see [`ExecTrace`]).
@@ -105,6 +113,8 @@ pub enum ExecEventKind {
     /// KV memory pressure preempted the session: its blocks were released
     /// and its context must be recomputed before it continues.
     Preempted { session: u64 },
+    /// A workflow task's last node completed (workflow scenarios only).
+    TaskDone { task: u64 },
 }
 
 impl ExecEvent {
@@ -153,6 +163,11 @@ impl ExecEvent {
                 ("t_us", self.t_us.into()),
                 ("event", "preempted".into()),
                 ("session", session.into()),
+            ]),
+            ExecEventKind::TaskDone { task } => Value::obj(vec![
+                ("t_us", self.t_us.into()),
+                ("event", "task_done".into()),
+                ("task", task.into()),
             ]),
         }
     }
@@ -211,6 +226,9 @@ pub struct SimOutcome {
     /// Memory-subsystem metrics — present only on the paged path (bounded
     /// pool or prefix sharing); `None` under the default unbounded config.
     pub kv: Option<KvReport>,
+    /// Task-level workflow metrics (makespan, critical path, task-SLO) —
+    /// present only when the workload came from a workflow DAG scenario.
+    pub workflow: Option<WorkflowReport>,
     /// Scheduler decisions (tick time us, b_prefill, r_min).
     pub control_trace: Vec<(u64, u32, u32)>,
     /// Realized cold-prefill arrival timestamp per session (us). For
@@ -373,6 +391,116 @@ enum KvState {
     Paged(Box<MemoryGovernor>),
 }
 
+/// Orchestrator back half of a compiled workflow: runtime gate counters
+/// over the [`WorkflowPlan`] (the front half is
+/// [`crate::workflow::compile()`]). `None` on every legacy path — the plain
+/// session pipeline pays nothing for the DAG machinery.
+struct WfState {
+    plan: WorkflowPlan,
+    /// Unresolved arrival-gate dependencies per session.
+    arr_remaining: Vec<usize>,
+    /// Unresolved step-gate dependencies per (session, step).
+    step_remaining: Vec<Vec<usize>>,
+    /// Sessions whose burst finished while their next step's join barrier
+    /// was still closed (the barrier's last dependency wakes them).
+    parked: Vec<bool>,
+    /// Unfinished sessions per task.
+    task_left: Vec<usize>,
+    /// Completion timestamp per task (its last session's finish).
+    task_done_us: Vec<Option<u64>>,
+    /// Ideal critical-path lower bound per task (ms).
+    task_cp_ms: Vec<f64>,
+}
+
+impl WfState {
+    fn new(plan: WorkflowPlan, cost: &CostModel, sessions: &[SimSession]) -> Self {
+        let mut task_left = vec![0usize; plan.n_tasks];
+        for &t in &plan.task_of {
+            task_left[t] += 1;
+        }
+        let task_cp_ms = task_critical_paths_ms(cost, sessions, &plan);
+        Self {
+            arr_remaining: plan.arrivals.iter().map(|g| g.dep_count).collect(),
+            step_remaining: plan.step_deps.clone(),
+            parked: vec![false; plan.task_of.len()],
+            task_left,
+            task_done_us: vec![None; plan.n_tasks],
+            task_cp_ms,
+            plan,
+        }
+    }
+}
+
+/// Per-task ideal critical-path baseline (ms): the longest dependency
+/// chain's serial service time on an idle GPU — full SM share, batch-1
+/// decode, scripted tool waits and folded release delays included, zero
+/// queueing, every prefill fully recomputed (no radix sharing). Realized
+/// makespans are judged against this in [`WorkflowReport`] (the `stretch`
+/// ratio isolates scheduling-induced slowdown from inherent DAG depth;
+/// sharing-enabled runs can dip below 1).
+fn task_critical_paths_ms(
+    cost: &CostModel,
+    sessions: &[SimSession],
+    plan: &WorkflowPlan,
+) -> Vec<f64> {
+    let mut cp_us = vec![0.0f64; plan.units.len()];
+    for (u, info) in plan.units.iter().enumerate() {
+        // First burst this unit covers: everything after the previous unit
+        // on the same context chain (or the whole script head for roots).
+        let from = match info.prev {
+            Some(p) => plan.units[p].burst + 1,
+            None => 0,
+        };
+        let mut base = info.prev.map_or(0.0, |p| cp_us[p]);
+        for &d in &info.deps {
+            base = base.max(cp_us[d]);
+        }
+        let span = ideal_span_us(cost, &sessions[info.sess].script, from, info.burst);
+        cp_us[u] = base + info.delay_us as f64 + span;
+    }
+    let mut out = vec![0.0f64; plan.n_tasks];
+    for (u, info) in plan.units.iter().enumerate() {
+        let t = plan.task_of[info.sess];
+        out[t] = out[t].max(cp_us[u] / 1000.0);
+    }
+    out
+}
+
+/// Contention-free serial time of bursts `from..=to` of one script: the
+/// prefills, batch-1 full-device decodes, and scripted tool waits a lone
+/// session would take on an idle GPU.
+fn ideal_span_us(cost: &CostModel, s: &SessionScript, from: usize, to: usize) -> f64 {
+    let cold = JobKind::ColdPrefill.phase();
+    let resume = JobKind::ResumePrefill.phase();
+    let mut ctx: u64 = 0;
+    let mut t = 0.0;
+    for b in 0..=to {
+        let covered = b >= from;
+        if b == 0 {
+            if covered {
+                t += cost.prefill_ctx_us(s.cold_prefill_tokens as u64, 0, 1.0, cold);
+            }
+            ctx += s.cold_prefill_tokens as u64;
+            if covered {
+                t += s.first_decode_tokens as f64 * cost.decode_step_us(1, ctx, 1.0);
+            }
+            ctx += s.first_decode_tokens as u64;
+        } else {
+            let st = &s.steps[b - 1];
+            if covered {
+                t += st.tool_latency_us as f64
+                    + cost.prefill_ctx_us(st.resume_tokens as u64, ctx, 1.0, resume);
+            }
+            ctx += st.resume_tokens as u64;
+            if covered {
+                t += st.decode_tokens as f64 * cost.decode_step_us(1, ctx, 1.0);
+            }
+            ctx += st.decode_tokens as u64;
+        }
+    }
+    t
+}
+
 struct Sim {
     cfg: Config,
     cost: CostModel,
@@ -395,6 +523,8 @@ struct Sim {
     /// KV subsystem: token counters (unbounded default) or the paged
     /// governor (bounded pool / prefix sharing — the §III-C memory model).
     kv: KvState,
+    /// Workflow orchestration state (`None` on every legacy path).
+    wf: Option<WfState>,
     /// Lazily materialized system-prompt token ids (radix lookups/inserts;
     /// paged mode only).
     prompt_ids: Vec<Option<Vec<u32>>>,
@@ -626,13 +756,91 @@ impl Sim {
         }
     }
 
+    // -- workflow orchestration (dependency-driven releases) ------------------
+
+    /// The step's join barrier is still closed.
+    fn wf_step_blocked(&self, sess: usize, step: usize) -> bool {
+        self.wf
+            .as_ref()
+            .is_some_and(|wf| wf.step_remaining[sess].get(step).copied().unwrap_or(0) > 0)
+    }
+
+    /// A decode burst completed: resolve the DAG unit it carries (if any),
+    /// releasing dependent cold prefills and parked continuation steps.
+    fn wf_unit_done(&mut self, sess: usize, burst: usize) {
+        let mut arrivals: Vec<(usize, u64)> = Vec::new();
+        let mut opened: Vec<(usize, usize)> = Vec::new();
+        {
+            let Some(wf) = self.wf.as_mut() else { return };
+            let Some(&Some(unit)) = wf.plan.unit_of_burst[sess].get(burst) else { return };
+            // Disjoint-field borrows: the plan is read-only while the gate
+            // counters decrement.
+            for &target in &wf.plan.dependents[unit] {
+                match target {
+                    DepTarget::Arrival(s2) => {
+                        wf.arr_remaining[s2] -= 1;
+                        if wf.arr_remaining[s2] == 0 {
+                            arrivals.push((s2, wf.plan.arrivals[s2].delay_us));
+                        }
+                    }
+                    DepTarget::Step { sess: s2, step } => {
+                        wf.step_remaining[s2][step] -= 1;
+                        if wf.step_remaining[s2][step] == 0 {
+                            opened.push((s2, step));
+                        }
+                    }
+                }
+            }
+        }
+        let now = self.now;
+        for (s2, delay) in arrivals {
+            self.push(now + delay, Ev::Arrive(s2));
+        }
+        for (s2, step) in opened {
+            // Only a session parked *at this step* resumes here; a barrier
+            // resolving before its session finishes the preceding burst is
+            // simply found open when the session reaches the step.
+            let at_step = self.sessions[s2].cur_step == step
+                && self.sessions[s2].phase == SessPhase::ToolWait;
+            let wf = self.wf.as_mut().expect("workflow state exists");
+            if at_step && wf.parked[s2] {
+                wf.parked[s2] = false;
+                let lat = self.sessions[s2].script.steps[step].tool_latency_us;
+                self.push(now + lat, Ev::ToolReturn(s2));
+            }
+        }
+    }
+
+    /// A session finished: the last session closing a task records the
+    /// task's completion timestamp (its makespan sample).
+    fn wf_session_done(&mut self, sess: usize) {
+        let Some(wf) = self.wf.as_mut() else { return };
+        let task = wf.plan.task_of[sess];
+        wf.task_left[task] -= 1;
+        if wf.task_left[task] > 0 {
+            return;
+        }
+        wf.task_done_us[task] = Some(self.now);
+        self.log_event(ExecEventKind::TaskDone { task: task as u64 });
+    }
+
     /// The current decode burst is done: tool-wait, or session complete.
     fn decode_burst_finished(&mut self, sess: usize) {
+        // Workflow plans: the finished burst may complete a DAG unit.
+        let burst = self.sessions[sess].cur_step;
+        self.wf_unit_done(sess, burst);
         let s = &self.sessions[sess];
         if s.cur_step < s.script.steps.len() {
-            let lat = s.script.steps[s.cur_step].tool_latency_us;
+            let step = s.cur_step;
+            let lat = s.script.steps[step].tool_latency_us;
             self.sessions[sess].phase = SessPhase::ToolWait;
-            self.push(self.now + lat, Ev::ToolReturn(sess));
+            if self.wf_step_blocked(sess, step) {
+                // Join barrier still closed: park; the barrier's last
+                // dependency schedules this tool return.
+                self.wf.as_mut().expect("gated step implies a plan").parked[sess] = true;
+            } else {
+                self.push(self.now + lat, Ev::ToolReturn(sess));
+            }
         } else {
             self.sessions[sess].phase = SessPhase::Done;
             self.metrics.session_complete(sess as u64, self.now);
@@ -649,6 +857,7 @@ impl Sim {
             }
             self.sessions[sess].kv_resident = false;
             self.log_event(ExecEventKind::SessionDone { session: sess as u64 });
+            self.wf_session_done(sess);
             // Chain the agent's next session (closed-loop plans only).
             if let Some((stride, think_us)) = self.chain {
                 let next = sess + stride;
@@ -771,7 +980,19 @@ impl Sim {
     /// Priority is admission order — earlier original arrival wins, ties by
     /// session index — and only sessions *younger than the requester* are
     /// eligible, so preemption can never invert priority or livelock: the
-    /// oldest unfinished session is never preempted and always progresses.
+    /// oldest *runnable* session is never preempted and always progresses.
+    ///
+    /// Exception: sessions **parked on a workflow join barrier** are
+    /// eligible regardless of age. A parked session cannot run until its
+    /// dependencies complete, and those dependencies may be exactly the
+    /// admissions its resident context is blocking — without this carve-out
+    /// an old parked supervisor holding the pool while its young workers
+    /// wait for admission is a circular stall the age order alone cannot
+    /// break. Taking a parked session's KV never costs progress (it
+    /// recomputes on wake via the standard resume-recompute path), and the
+    /// victim order still prefers the youngest eligible session, so
+    /// runnable-session priority is unchanged. Legacy (non-workflow) runs
+    /// have no parked sessions and behave exactly as before.
     ///
     /// O(n_sessions) scan, but it runs only when an allocation actually
     /// falls short even after eviction (each preemption then frees a whole
@@ -795,8 +1016,9 @@ impl Sim {
                 continue;
             }
             let key = (self.arrival_times[i], i);
-            if key <= req_key {
-                continue; // never preempt an equal-or-higher-priority session
+            let parked = self.wf.as_ref().is_some_and(|wf| wf.parked[i]);
+            if key <= req_key && !parked {
+                continue; // never preempt an equal-or-higher-priority runnable
             }
             if best.is_none_or(|b| key > b) {
                 best = Some(key);
@@ -1521,13 +1743,18 @@ fn trace_inputs(trace: &Trace) -> (Vec<SessionScript>, ArrivalPlan) {
     (scripts, ArrivalPlan::Explicit(arrivals))
 }
 
-/// Scripts + scenario-appropriate arrival plan (closed-loop chaining vs
-/// explicit open-loop arrivals) from one instantiation.
+/// Scripts + scenario-appropriate arrival plan (closed-loop chaining,
+/// explicit open-loop arrivals, or a workflow dependency plan) from one
+/// instantiation.
 fn scenario_inputs(
     cfg: &Config,
     scenario: &Scenario,
     seed: u64,
 ) -> (Vec<SessionScript>, ArrivalPlan) {
+    if scenario.workflow.is_some() {
+        let cw = crate::workflow::compile(scenario, cfg.model.kind, seed);
+        return (cw.scripts, ArrivalPlan::Workflow(cw.plan));
+    }
     let wl = scenario.instantiate(cfg.model.kind, seed);
     let plan = match scenario.closed_loop() {
         Some((stagger_us, think_time_us)) => ArrivalPlan::Closed {
@@ -1605,7 +1832,10 @@ pub fn run_scenario_recorded(
 /// Run a scenario and return the replayable workload trace: each script
 /// paired with its *realized* arrival timestamp, so closed-loop waves
 /// replay at the times they actually entered the system. This is what
-/// `agentserve scenario record` persists.
+/// `agentserve scenario record` persists. Workflow scenarios record their
+/// *flattened* realized arrivals — dependency gates are not representable
+/// in the trace format, so a replay treats every session as an independent
+/// open-loop arrival at the time it was released in the recorded run.
 pub fn record_scenario_trace(
     cfg: &Config,
     policy: Policy,
@@ -1697,7 +1927,7 @@ fn run_sim_inner(
     let n_sessions = sessions.len();
     let chain = match &plan {
         ArrivalPlan::Closed { n_agents, think_time_us, .. } => Some((*n_agents, *think_time_us)),
-        ArrivalPlan::Explicit(_) => None,
+        ArrivalPlan::Explicit(_) | ArrivalPlan::Workflow(_) => None,
     };
     let mut metrics = MetricsRecorder::new();
     if !flags.record_timeline {
@@ -1707,6 +1937,20 @@ fn run_sim_inner(
         KvState::Paged(Box::new(MemoryGovernor::new(&cfg.kv, n_sessions)))
     } else {
         KvState::Tokens { used: 0, peak: 0 }
+    };
+    // Workflow plans are consumed into orchestrator state; legacy plans are
+    // kept for heap seeding below.
+    let (plan, wf) = match plan {
+        ArrivalPlan::Workflow(p) => {
+            assert_eq!(
+                p.arrivals.len(),
+                sessions.len(),
+                "workflow plan must cover every session"
+            );
+            let wf = WfState::new(p, &cost, &sessions);
+            (None, Some(wf))
+        }
+        other => (Some(other), None),
     };
     let mut sim = Sim {
         cost,
@@ -1722,6 +1966,7 @@ fn run_sim_inner(
         metrics,
         done_count: 0,
         kv,
+        wf,
         prompt_ids: vec![None; n_sessions],
         step_scratch: Vec::new(),
         cold_prefill_tokens: 0,
@@ -1734,14 +1979,33 @@ fn run_sim_inner(
 
     match &plan {
         // Wave-0 arrivals, staggered; later waves chain on completion.
-        ArrivalPlan::Closed { n_agents, stagger_us, .. } => {
+        Some(ArrivalPlan::Closed { n_agents, stagger_us, .. }) => {
             for a in 0..(*n_agents).min(sim.sessions.len()) {
                 sim.push(a as u64 * stagger_us, Ev::Arrive(a));
             }
         }
         // Every session arrives at its planned timestamp.
-        ArrivalPlan::Explicit(times) => {
+        Some(ArrivalPlan::Explicit(times)) => {
             for (s, &t) in times.iter().enumerate() {
+                sim.push(t, Ev::Arrive(s));
+            }
+        }
+        Some(ArrivalPlan::Workflow(_)) => unreachable!("consumed into WfState above"),
+        // Workflow roots arrive at their gate timestamps; every other
+        // session is released by the orchestrator as its joins resolve.
+        None => {
+            let roots: Vec<(usize, u64)> = sim
+                .wf
+                .as_ref()
+                .expect("plan was consumed into workflow state")
+                .plan
+                .arrivals
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.dep_count == 0)
+                .map(|(s, g)| (s, g.delay_us))
+                .collect();
+            for (s, t) in roots {
                 sim.push(t, Ev::Arrive(s));
             }
         }
@@ -1775,6 +2039,16 @@ fn run_sim_inner(
         KvState::Tokens { peak, .. } => (*peak, None),
         KvState::Paged(gov) => (gov.peak_used_tokens(), Some(gov.report(end))),
     };
+    let workflow = sim.wf.as_ref().map(|wf| {
+        let mut completed = Vec::with_capacity(wf.plan.n_tasks);
+        for t in 0..wf.plan.n_tasks {
+            if let Some(done) = wf.task_done_us[t] {
+                let span = done.saturating_sub(wf.plan.task_release_us[t]);
+                completed.push((span as f64 / 1000.0, wf.task_cp_ms[t]));
+            }
+        }
+        WorkflowReport::from_parts(wf.plan.n_tasks, &completed, &wf.task_cp_ms, cfg.slo.task_ms)
+    });
     let outcome = SimOutcome {
         policy_name: policy.name().to_string(),
         report,
@@ -1791,6 +2065,7 @@ fn run_sim_inner(
         resume_rerouted,
         kv_peak_tokens,
         kv: kv_report,
+        workflow,
         control_trace: sim.control_trace,
         arrivals_us: sim.arrival_times,
     };

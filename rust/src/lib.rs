@@ -30,6 +30,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod server;
 pub mod util;
+pub mod workflow;
 pub mod workload;
 
 /// Crate-wide result type (anyhow — the only general-purpose dependency

@@ -11,7 +11,9 @@ mod recorder;
 mod slo;
 
 pub use percentile::{percentile, Summary};
-pub use recorder::{KvReport, MetricsRecorder, RunReport, SessionMetrics, TpotSample};
+pub use recorder::{
+    KvReport, MetricsRecorder, RunReport, SessionMetrics, TpotSample, WorkflowReport,
+};
 pub use slo::{SloJudge, SloReport};
 
 #[cfg(test)]

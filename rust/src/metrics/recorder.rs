@@ -292,6 +292,117 @@ impl std::fmt::Display for KvReport {
     }
 }
 
+/// Task-level metrics of one workflow run (present only when the workload
+/// came from a workflow DAG scenario; plain session scenarios report
+/// nothing so legacy outputs stay byte-identical).
+///
+/// A *task* is one instantiated DAG: its **makespan** runs from the task's
+/// release (arrival-process timestamp) to the completion of its last node,
+/// and its **critical path** is the contention-free *no-sharing* baseline
+/// — the longest dependency chain's serial service time on an idle GPU
+/// (full SM share, batch-1 decode, every prefill fully recomputed). The
+/// gap between the two is scheduling-induced
+/// ([`WorkflowReport::stretch`]); note that radix prefix sharing can push
+/// realized prefill work *below* the baseline (cached prompts skip
+/// recomputation), so stretch may legitimately dip under 1 on
+/// sharing-enabled runs. Task-SLO attainment judges makespan against the
+/// deadline (`slo.task_ms`), a *task-level* criterion distinct from the
+/// per-request TTFT/TPOT SLO.
+#[derive(Debug, Clone)]
+pub struct WorkflowReport {
+    /// Tasks the scenario released.
+    pub tasks: usize,
+    /// Tasks whose every node completed.
+    pub completed_tasks: usize,
+    /// Makespan distribution across completed tasks (ms).
+    pub makespan: Summary,
+    /// Ideal critical-path baseline across tasks (ms): contention-free,
+    /// no prefix sharing (see the struct docs).
+    pub critical_path: Summary,
+    /// Scheduling stretch: total makespan / total critical path over the
+    /// *completed* tasks (both sides describe the same population). ~1 on
+    /// an idle GPU; below 1 only when radix sharing skips prefill work.
+    pub stretch: f64,
+    /// Task deadline (ms) and how many completed tasks met it.
+    pub task_slo_ms: f64,
+    pub attained: usize,
+}
+
+impl WorkflowReport {
+    /// Aggregate per-task samples. `completed` pairs each *completed*
+    /// task's `(makespan_ms, critical_path_ms)`; `critical_paths_ms`
+    /// covers every released task (the reported distribution). Stretch is
+    /// computed over the completed pairs only, so both sides of the ratio
+    /// describe the same task population even when overload leaves tasks
+    /// unfinished.
+    pub fn from_parts(
+        tasks: usize,
+        completed: &[(f64, f64)],
+        critical_paths_ms: &[f64],
+        task_slo_ms: f64,
+    ) -> Self {
+        let makespans: Vec<f64> = completed.iter().map(|&(m, _)| m).collect();
+        let makespan = Summary::from_samples(&makespans);
+        let critical_path = Summary::from_samples(critical_paths_ms);
+        let cp_completed: f64 = completed.iter().map(|&(_, c)| c).sum();
+        let stretch = if cp_completed > 0.0 {
+            makespans.iter().sum::<f64>() / cp_completed
+        } else {
+            0.0
+        };
+        Self {
+            tasks,
+            completed_tasks: completed.len(),
+            makespan,
+            critical_path,
+            stretch,
+            task_slo_ms,
+            attained: completed.iter().filter(|&&(m, _)| m <= task_slo_ms).count(),
+        }
+    }
+
+    /// Task-SLO attainment rate over *released* tasks (incomplete = failed).
+    pub fn rate(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.attained as f64 / self.tasks as f64
+        }
+    }
+
+    /// Deterministic JSON form (run/sweep reports, diagnostics).
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("tasks", self.tasks.into()),
+            ("completed_tasks", self.completed_tasks.into()),
+            ("makespan_ms", self.makespan.to_value()),
+            ("critical_path_ms", self.critical_path.to_value()),
+            ("stretch", self.stretch.into()),
+            ("task_slo_ms", self.task_slo_ms.into()),
+            ("task_slo_attained", self.attained.into()),
+            ("task_slo_rate", self.rate().into()),
+        ])
+    }
+}
+
+impl std::fmt::Display for WorkflowReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{} tasks | makespan p50 {:.0}ms p99 {:.0}ms | critical path p50 {:.0}ms \
+             | stretch {:.2} | task-SLO {:.1}% (<= {:.0}ms)",
+            self.completed_tasks,
+            self.tasks,
+            self.makespan.p50,
+            self.makespan.p99,
+            self.critical_path.p50,
+            self.stretch,
+            self.rate() * 100.0,
+            self.task_slo_ms
+        )
+    }
+}
+
 impl RunReport {
     /// Deterministic JSON summary (scenario CLI output, golden-trace
     /// snapshot comparisons). Identical runs serialize byte-identically.
@@ -411,6 +522,33 @@ mod tests {
         // take_timeline moves the samples out exactly once.
         assert_eq!(on.take_timeline().len(), 2);
         assert!(on.timeline().is_empty());
+    }
+
+    #[test]
+    fn workflow_report_aggregates_tasks() {
+        // 4 released tasks, 3 completed; deadline 1000 ms lets 2 through.
+        let completed = [(400.0, 300.0), (900.0, 500.0), (2500.0, 800.0)];
+        let cps = [300.0, 500.0, 800.0, 600.0];
+        let r = WorkflowReport::from_parts(4, &completed, &cps, 1000.0);
+        assert_eq!(r.tasks, 4);
+        assert_eq!(r.completed_tasks, 3);
+        assert_eq!(r.attained, 2);
+        assert!((r.rate() - 0.5).abs() < 1e-12, "incomplete tasks fail the task SLO");
+        assert!((r.makespan.mean - 3800.0 / 3.0).abs() < 1e-9);
+        // Stretch pairs makespans with the *same* (completed) tasks' cps —
+        // the incomplete task's 600 ms cp stays out of the ratio but in
+        // the reported distribution.
+        assert!((r.stretch - 3800.0 / 1600.0).abs() < 1e-9);
+        assert_eq!(r.critical_path.n, 4);
+        // JSON form is complete and deterministic.
+        let v = r.to_value().to_string();
+        assert!(v.contains("\"task_slo_rate\""));
+        let again = WorkflowReport::from_parts(4, &completed, &cps, 1000.0);
+        assert_eq!(v, again.to_value().to_string());
+        // Empty runs are well defined.
+        let empty = WorkflowReport::from_parts(0, &[], &[], 1000.0);
+        assert_eq!(empty.rate(), 0.0);
+        assert_eq!(empty.stretch, 0.0);
     }
 
     #[test]

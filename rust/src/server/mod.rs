@@ -21,7 +21,8 @@ USAGE:
                       [--replay-trace t.json]
   agentserve scenario list
   agentserve scenario run    (--name S | --file f.json) [--policy P | --all-policies]
-                             [--model M] [--gpu G] [--seed N] [--events out.jsonl]
+                             [--model M] [--gpu G] [--seed N]
+                             [--exec-out out.jsonl | --events out.jsonl]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario record (--name S | --file f.json) --out trace.jsonl
                              [--policy P] [--model M] [--gpu G] [--seed N]
@@ -31,9 +32,15 @@ USAGE:
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario sweep  (--name SWEEP | (--scenario S | --file f.json)
                               (--rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…
-                               | --kv-blocks b1,b2,…))
+                               | --kv-blocks b1,b2,… | --fan-outs d1,d2,…))
                              [--policy P] [--model M] [--gpu G] [--seed N]
                              [--out report.json] [--csv report.csv]
+  agentserve workflow list
+  agentserve workflow run    --name W [--policy P | --all-policies] [--tasks N]
+                             [--rate R] [--fan-out D] [--task-slo-ms MS]
+                             [--model M] [--gpu G] [--seed N]
+                             [--exec-out out.jsonl]
+                             [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
   agentserve analyze  [--model M] [--gpu G] [--delta D] [--eps E]
   agentserve serve    [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
@@ -44,9 +51,12 @@ models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
            | memory-pressure | shared-prefix-fleet
-sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee
+sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee | fanout-knee
            (sweep runs all paper policies unless --policy is given; see
            rust/src/workload/README.md for the scenario/sweep file schema)
+workflows: single-react | plan-execute | supervisor-worker | pipeline-chain
+           | debate — multi-agent DAG tasks (fan-out, join barriers, context
+           continuations) with task-level makespan/SLO metrics
 kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
            sets the page size, --prefix-sharing enables cross-session
            system-prompt reuse; on `scenario sweep`, --kv-blocks is the
@@ -55,10 +65,10 @@ kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
 
 /// Entry point used by `main` (and by CLI tests).
 pub fn run(args: Args) -> crate::Result<()> {
-    // Default-deny the action positional: only `scenario` takes one, so a
-    // stray positional on any other (or future) subcommand errors loudly
-    // instead of being silently ignored.
-    if args.subcommand.as_deref() != Some("scenario") {
+    // Default-deny the action positional: only `scenario` and `workflow`
+    // take one, so a stray positional on any other (or future) subcommand
+    // errors loudly instead of being silently ignored.
+    if !matches!(args.subcommand.as_deref(), Some("scenario") | Some("workflow")) {
         if let Some(a) = &args.action {
             anyhow::bail!("unexpected positional argument '{a}'");
         }
@@ -66,6 +76,7 @@ pub fn run(args: Args) -> crate::Result<()> {
     match args.subcommand.as_deref() {
         Some("bench") => bench(&args),
         Some("scenario") => scenario_cmd(&args),
+        Some("workflow") => workflow_cmd(&args),
         Some("figures") => run_figures(&args),
         Some("analyze") => {
             let model: ModelKind = args.get_or("model", "7b").parse()?;
@@ -210,9 +221,13 @@ fn print_scenario_outcome(out: &crate::engine::SimOutcome) {
         out.slo.rate() * 100.0
     );
     // Memory line only on the paged path, so default-config output stays
-    // byte-identical to the pre-memory-model CLI.
+    // byte-identical to the pre-memory-model CLI; likewise the task line
+    // appears only for workflow DAG scenarios.
     if let Some(kv) = &out.kv {
         println!("  mem   {kv}");
+    }
+    if let Some(wf) = &out.workflow {
+        println!("  task  {wf}");
     }
 }
 
@@ -315,7 +330,9 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
                 "== scenario '{}' | {} | {} | seed {} ==",
                 scenario.name, model, gpu, seed
             );
-            let events_base = args.get("events");
+            // --exec-out is the documented name (ROADMAP: step-level
+            // execution-log replay); --events remains as the original alias.
+            let events_base = args.get("exec-out").or_else(|| args.get("events"));
             let policies = scenario_policies(args)?;
             let multi = policies.len() > 1;
             for policy in policies {
@@ -422,6 +439,94 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
     }
 }
 
+/// `agentserve workflow list|run` — the workflow DAG engine CLI.
+///
+/// `run` wraps the named registry workflow in an open-loop Poisson carrier
+/// scenario (`--tasks` task releases at `--rate`/s) and drives it through
+/// the simulator's dependency-driven arrival source, reporting task-level
+/// makespan / critical-path / task-SLO metrics alongside the usual
+/// per-request ones.
+fn workflow_cmd(args: &Args) -> crate::Result<()> {
+    use crate::engine::{run_scenario, run_scenario_recorded};
+    use crate::workflow::{WorkflowLoad, WorkflowSpec};
+
+    match args.action.as_deref() {
+        Some("list") => {
+            println!("built-in workflows (workflow run --name <workflow>):");
+            for w in WorkflowSpec::registry() {
+                println!(
+                    "  {:<18} {:>2} nodes  {:>2} sessions/task  {}",
+                    w.name,
+                    w.nodes.len(),
+                    w.sessions_per_task(),
+                    w.description
+                );
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let model: ModelKind = args.get_or("model", "3b").parse()?;
+            let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+            let seed = args.get_u64("seed", 7)?;
+            let mut cfg = Config::preset(model, gpu);
+            let name = args
+                .get("name")
+                .ok_or_else(|| anyhow::anyhow!("workflow run needs --name <workflow>"))?;
+            let spec = WorkflowSpec::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown workflow '{name}' (try `agentserve workflow list`)")
+            })?;
+            let tasks = args.get_usize("tasks", 12)?;
+            let rate = args.get_f64("rate", 0.5)?;
+            let fan_out = match args.get("fan-out") {
+                Some(v) => Some(v.parse::<usize>()?),
+                None => None,
+            };
+            if let Some(ms) = args.get("task-slo-ms") {
+                cfg.slo.task_ms = ms.parse()?;
+            }
+            apply_kv_flags(args, &mut cfg, None)?;
+            let scenario = WorkflowLoad { spec, fan_out }.carrier(tasks, rate);
+            scenario.validate()?;
+            let per_task = scenario
+                .workflow
+                .as_ref()
+                .expect("just built")
+                .effective_spec()
+                .sessions_per_task();
+            println!(
+                "== workflow '{}' | {} tasks x {} sessions | {} | {} | seed {} ==",
+                scenario.name, tasks, per_task, model, gpu, seed
+            );
+            let exec_base = args.get("exec-out");
+            let policies = scenario_policies(args)?;
+            let multi = policies.len() > 1;
+            for policy in policies {
+                if let Some(base) = exec_base {
+                    let (out, exec) = run_scenario_recorded(&cfg, policy, &scenario, seed);
+                    print_scenario_outcome(&out);
+                    let path = if multi {
+                        events_path(base, &policy_slug(&out.policy_name))
+                    } else {
+                        base.to_string()
+                    };
+                    exec.save(&path)?;
+                    println!("  {} execution events -> {path}", exec.len());
+                } else {
+                    print_scenario_outcome(&run_scenario(&cfg, policy, &scenario, seed));
+                }
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("{USAGE}");
+            match other {
+                Some(a) => anyhow::bail!("unknown workflow action '{a}'"),
+                None => anyhow::bail!("workflow needs an action: list|run"),
+            }
+        }
+    }
+}
+
 /// Resolve `scenario sweep` inputs: `--name` picks a built-in sweep;
 /// otherwise a base scenario (`--scenario` registry name or `--file`, which
 /// may embed config overrides) plus exactly one axis flag builds an ad-hoc
@@ -434,7 +539,7 @@ fn resolve_sweep_spec(
     if let Some(name) = args.get("name") {
         // A registry sweep is fully specified: refuse flags that would be
         // silently dropped (the grid the user asked for must be the grid run).
-        for flag in ["scenario", "file", "rates", "agents", "mix", "kv-blocks"] {
+        for flag in ["scenario", "file", "rates", "agents", "mix", "kv-blocks", "fan-outs"] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--name picks a built-in sweep; --{flag} would be ignored — \
@@ -461,14 +566,21 @@ fn resolve_sweep_spec(
     let agents = args.get_usize_list("agents")?;
     let mix = args.get_f64_list("mix")?;
     let kv_blocks = args.get_usize_list("kv-blocks")?;
-    let n_axes = [rates.is_some(), agents.is_some(), mix.is_some(), kv_blocks.is_some()]
-        .iter()
-        .filter(|&&x| x)
-        .count();
+    let fan_outs = args.get_usize_list("fan-outs")?;
+    let n_axes = [
+        rates.is_some(),
+        agents.is_some(),
+        mix.is_some(),
+        kv_blocks.is_some(),
+        fan_outs.is_some(),
+    ]
+    .iter()
+    .filter(|&&x| x)
+    .count();
     anyhow::ensure!(
         n_axes == 1,
         "pass exactly one sweep axis: --rates r1,r2,… | --agents n1,n2,… | \
-         --mix f1,f2,… | --kv-blocks b1,b2,…"
+         --mix f1,f2,… | --kv-blocks b1,b2,… | --fan-outs d1,d2,…"
     );
     let axis = if let Some(r) = rates {
         SweepAxis::ArrivalRate(r)
@@ -476,8 +588,10 @@ fn resolve_sweep_spec(
         SweepAxis::AgentCount(a)
     } else if let Some(m) = mix {
         SweepAxis::MixRatio(m)
+    } else if let Some(b) = kv_blocks {
+        SweepAxis::KvBlocks(b)
     } else {
-        SweepAxis::KvBlocks(kv_blocks.expect("one axis is set"))
+        SweepAxis::FanOut(fan_outs.expect("one axis is set"))
     };
     Ok(SweepSpec {
         name: format!("{}-sweep", base.name),
@@ -512,7 +626,12 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
             );
         }
     }
-    if report.axis == "kv-blocks" {
+    if report.axis == "fan-out" {
+        println!(
+            "task knee ({} where p99 makespan first exceeds the {:.0} ms task SLO):",
+            report.axis, report.slo_task_ms
+        );
+    } else if report.axis == "kv-blocks" {
         println!(
             "memory knee (largest {} whose p99 TTFT still violates the {:.0} ms SLO):",
             report.axis, report.slo_ttft_ms
@@ -737,6 +856,87 @@ mod tests {
         assert!(run(args("figures 5")).is_err());
         assert!(run(args("analyze 7b")).is_err());
         assert!(run(args("serve now")).is_err());
+    }
+
+    #[test]
+    fn workflow_list_and_run_smoke() {
+        run(args("workflow list")).unwrap();
+        run(args("workflow run --name supervisor-worker --tasks 2 --model 3b")).unwrap();
+        // Degenerate single-node workflow and a fan-out override.
+        run(args("workflow run --name single-react --tasks 3 --model 3b")).unwrap();
+        run(args(
+            "workflow run --name supervisor-worker --tasks 2 --fan-out 2 --model 3b \
+             --task-slo-ms 45000",
+        ))
+        .unwrap();
+        assert!(run(args("workflow run --name no-such-workflow")).is_err());
+        assert!(run(args("workflow run")).is_err(), "--name is required");
+        assert!(run(args("workflow")).is_err());
+        assert!(run(args("workflow frobnicate")).is_err());
+        // Degree 0 is rejected by scenario validation.
+        assert!(run(args("workflow run --name supervisor-worker --fan-out 0")).is_err());
+    }
+
+    #[test]
+    fn exec_out_alias_dumps_the_event_log() {
+        let dir = std::env::temp_dir().join("agentserve_exec_out");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exec.jsonl");
+        let p = p.to_str().unwrap();
+        run(args(&format!(
+            "scenario run --name paper-fig5 --model 3b --exec-out {p}"
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.lines().count() > 0, "exec log has one JSON event per line");
+        assert!(text.contains("\"event\":\"arrival\""), "compact JSONL events");
+        std::fs::remove_file(p).unwrap();
+        // And on workflow runs, where it also carries task_done events.
+        let p2 = dir.join("wf.jsonl");
+        let p2 = p2.to_str().unwrap();
+        run(args(&format!(
+            "workflow run --name pipeline-chain --tasks 2 --model 3b --exec-out {p2}"
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(p2).unwrap();
+        assert!(text.contains("\"event\":\"task_done\""));
+        std::fs::remove_file(p2).unwrap();
+    }
+
+    #[test]
+    fn scenario_sweep_fan_out_axis_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_fan_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("fan.json");
+        // Ad-hoc fan-out sweeps need a workflow-carrying base, which only
+        // files (or the registry sweep) provide; exercise the file path.
+        let sc = dir.join("wf-scenario.json");
+        let scenario = crate::workload::Scenario {
+            name: "fan-test".into(),
+            ..crate::workflow::WorkflowLoad::new(
+                crate::workflow::WorkflowSpec::by_name("supervisor-worker").unwrap(),
+            )
+            .carrier(2, 1.0)
+        };
+        scenario.save(&sc).unwrap();
+        run(args(&format!(
+            "scenario sweep --file {} --fan-outs 2,4 --policy vllm --model 3b --out {}",
+            sc.to_str().unwrap(),
+            json.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "fan-out");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(sc).unwrap();
+        // A fan-out grid over a plain base scenario is rejected.
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --fan-outs 2,4 --policy vllm"
+        ))
+        .is_err());
+        // Registry sweeps refuse a would-be-dropped --fan-outs flag.
+        assert!(run(args("scenario sweep --name fanout-knee --fan-outs 2,4")).is_err());
     }
 
     #[test]

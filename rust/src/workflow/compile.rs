@@ -1,0 +1,492 @@
+//! Workflow compiler: lower (scenario, spec, seed) into session scripts
+//! plus the dependency plan the simulator's orchestrator executes.
+//!
+//! Each task arrival (sampled from the carrying scenario's arrival process)
+//! instantiates the DAG once: every fresh-context node instance becomes a
+//! [`SessionScript`]; every continuation node becomes a dependency-gated
+//! step appended to its context owner's script (its prompt arrives as a
+//! *resume* prefill); tool nodes fold into release-edge delays. The
+//! resulting [`WorkflowPlan`] tells the simulator when each cold prefill
+//! may be released (arrival gates) and which steps must wait for join
+//! barriers (step gates).
+//!
+//! Determinism contract: `compile` is a pure function of
+//! `(scenario, model, seed)`. Node generators are seeded exactly like the
+//! legacy per-population streams (`seed ^ ((node_idx + 1) * 0x9E37_79B9)`)
+//! and task arrivals come from the same scenario stream
+//! (`Rng::fold(seed, 0x5CE9A210)`), so the degenerate single-agent workflow
+//! reproduces the classic scenario's workload byte-for-byte (locked by
+//! tests here and in `rust/tests/workflows.rs`).
+
+use super::spec::{NodeKind, WorkflowSpec};
+use crate::config::ModelKind;
+use crate::util::rng::Rng;
+use crate::workload::{Scenario, SessionScript, SessionStep, WorkloadGenerator};
+
+/// Template-id base for workflow LLM nodes: far outside the generator's
+/// 0..4 agent-template range, so workflow prompts never collide with
+/// Table-I system prompts in the radix cache. All instances of one node
+/// share a template (and therefore a system prompt) across every task —
+/// the realistic shared-prefix fan-out shape.
+const WF_TEMPLATE_BASE: u32 = 0x57F0_0000;
+
+/// Gate releasing a session's cold prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrivalGate {
+    /// Unresolved dependency units. 0 = released unconditionally.
+    pub dep_count: usize,
+    /// With dependencies: extra delay after the last one resolves (folded
+    /// tool latency). Without: the absolute release timestamp (us).
+    pub delay_us: u64,
+}
+
+/// What a completed unit releases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepTarget {
+    /// A dependent session's cold prefill.
+    Arrival(usize),
+    /// A dependency-gated step (continuation resume) of a running session.
+    Step { sess: usize, step: usize },
+}
+
+/// One schedulable DAG unit: a node instance, resolved to the decode burst
+/// whose completion marks it done.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitInfo {
+    pub sess: usize,
+    /// Burst index within the session (0 = first decode after the cold
+    /// prefill, b = the decode of step b-1).
+    pub burst: usize,
+    /// Previous unit on the same session's context chain, if any.
+    pub prev: Option<usize>,
+    /// Units gating this one (join barrier; empty for roots).
+    pub deps: Vec<usize>,
+    /// Release-edge delay (folded tool latency). For continuation units
+    /// the delay lives in their step's `tool_latency_us` instead.
+    pub delay_us: u64,
+}
+
+/// The dependency plan of one compiled workflow fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowPlan {
+    pub n_tasks: usize,
+    /// Task release timestamps (the arrival process's samples).
+    pub task_release_us: Vec<u64>,
+    /// Owning task per session.
+    pub task_of: Vec<usize>,
+    /// Per session: cold-prefill release gate.
+    pub arrivals: Vec<ArrivalGate>,
+    /// Per session, per step: unresolved gating units (0 = plain tool step).
+    pub step_deps: Vec<Vec<usize>>,
+    /// Per session, per burst: the unit that burst completes, if any.
+    pub unit_of_burst: Vec<Vec<Option<usize>>>,
+    /// Per unit: gates to notify when it completes.
+    pub dependents: Vec<Vec<DepTarget>>,
+    /// All units in deterministic topological order (deps precede uses).
+    pub units: Vec<UnitInfo>,
+}
+
+/// Scripts + plan: everything the simulator needs to run a workflow fleet.
+#[derive(Debug, Clone)]
+pub struct CompiledWorkflow {
+    pub scripts: Vec<SessionScript>,
+    pub plan: WorkflowPlan,
+}
+
+/// Per-node non-tool dependencies with tool chains folded into a single
+/// release delay (the maximum accumulated latency across incoming tool
+/// paths — a join releases when its last dependency resolves, so per-path
+/// delays collapse conservatively onto that edge).
+///
+/// Computed in one pass over the topological definition order, reusing
+/// earlier nodes' folded results, so shared (diamond-shaped) tool
+/// subgraphs cost linear work instead of one recursive walk per path.
+fn fold_deps(spec: &WorkflowSpec) -> Vec<(Vec<usize>, u64)> {
+    let mut folded: Vec<(Vec<usize>, u64)> = Vec::with_capacity(spec.nodes.len());
+    for node in &spec.nodes {
+        let mut deps: Vec<usize> = Vec::new();
+        let mut delay = 0u64;
+        for dep in &node.deps {
+            let d = spec.node_index(dep).expect("validated dep");
+            match spec.nodes[d].kind {
+                NodeKind::Tool { latency_us } => {
+                    // A tool edge contributes its anchors plus its own
+                    // latency on top of whatever tool chain fed it.
+                    for &anchor in &folded[d].0 {
+                        if !deps.contains(&anchor) {
+                            deps.push(anchor);
+                        }
+                    }
+                    delay = delay.max(folded[d].1 + latency_us);
+                }
+                _ => {
+                    if !deps.contains(&d) {
+                        deps.push(d);
+                    }
+                }
+            }
+        }
+        folded.push((deps, delay));
+    }
+    folded
+}
+
+/// Compile a workflow-carrying scenario for one `(model, seed)` pair.
+///
+/// Expects a validated scenario ([`Scenario::validate`]); panics on
+/// structural violations a validated scenario cannot exhibit.
+pub fn compile(scenario: &Scenario, model: ModelKind, seed: u64) -> CompiledWorkflow {
+    let load = scenario
+        .workflow
+        .as_ref()
+        .expect("compile() needs a workflow-carrying scenario");
+    assert!(
+        scenario.closed_loop().is_none(),
+        "workflow scenarios use open-loop arrival processes (validate() enforces this)"
+    );
+    let spec = load.effective_spec();
+    let n_tasks = scenario.total_sessions;
+
+    // Same streams as the legacy scenario path (see module docs).
+    let mut rng = Rng::fold(seed, 0x5CE9A210);
+    let releases = scenario.arrival_times(&mut rng, n_tasks);
+    let mut gens: Vec<Option<WorkloadGenerator>> = spec
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(j, n)| match n.kind {
+            NodeKind::Agent { workload } => Some(WorkloadGenerator::new(
+                workload,
+                model,
+                seed ^ ((j as u64 + 1) * 0x9E37_79B9),
+            )),
+            _ => None,
+        })
+        .collect();
+
+    // Static per-node structure.
+    let folded = fold_deps(&spec);
+    let roots: Vec<usize> = (0..spec.nodes.len()).map(|i| spec.session_root(i)).collect();
+
+    let mut scripts: Vec<SessionScript> = Vec::with_capacity(n_tasks * spec.sessions_per_task());
+    let mut task_of: Vec<usize> = Vec::new();
+    let mut arrivals: Vec<ArrivalGate> = Vec::new();
+    let mut step_deps: Vec<Vec<usize>> = Vec::new();
+    let mut units: Vec<UnitInfo> = Vec::new();
+    let mut dependents: Vec<Vec<DepTarget>> = Vec::new();
+    let mut unit_output: Vec<u32> = Vec::new();
+    // Last unit on each session's context chain (for `prev` links).
+    let mut last_unit: Vec<usize> = Vec::new();
+    // Unit carried by each (session, burst), filled as units are created.
+    let mut unit_at: Vec<Vec<(usize, usize)>> = Vec::new(); // per session: (burst, unit)
+
+    for (t, &release) in releases.iter().enumerate() {
+        // Per-task instance tables, indexed by node.
+        let mut node_units: Vec<Vec<usize>> = vec![Vec::new(); spec.nodes.len()];
+        let mut node_sessions: Vec<Vec<usize>> = vec![Vec::new(); spec.nodes.len()];
+        for (j, node) in spec.nodes.iter().enumerate() {
+            if matches!(node.kind, NodeKind::Tool { .. }) {
+                continue;
+            }
+            let dep_nodes = &folded[j].0;
+            let delay = folded[j].1;
+            let dep_units: Vec<usize> = dep_nodes
+                .iter()
+                .flat_map(|&d| node_units[d].iter().copied())
+                .collect();
+            let dep_tokens: u32 = dep_units.iter().map(|&u| unit_output[u]).sum();
+            for k in 0..node.count {
+                if node.continues.is_none() {
+                    // Fresh context: a new session whose cold prefill is the
+                    // node's prompt plus its dependencies' outputs.
+                    let sess = scripts.len();
+                    let mut script = match node.kind {
+                        NodeKind::Agent { .. } => {
+                            gens[j].as_mut().expect("agent node has a generator").next_session()
+                        }
+                        NodeKind::Llm { prefill, decode } => SessionScript {
+                            id: 0,
+                            kind: crate::workload::WorkloadKind::ReAct,
+                            cold_prefill_tokens: prefill,
+                            template: WF_TEMPLATE_BASE + j as u32,
+                            unique_prompt_tokens: 0,
+                            first_decode_tokens: decode,
+                            steps: Vec::new(),
+                        },
+                        NodeKind::Tool { .. } => unreachable!("tools skipped above"),
+                    };
+                    script.id = sess as u64;
+                    // Dependency outputs are per-task content: they extend
+                    // the prompt but stay outside the template-shared
+                    // prefix, so the radix cache never counts them as
+                    // cross-task reuse.
+                    script.cold_prefill_tokens += dep_tokens;
+                    script.unique_prompt_tokens = dep_tokens;
+                    let burst = script.steps.len();
+                    let output = script
+                        .steps
+                        .last()
+                        .map(|s| s.decode_tokens)
+                        .unwrap_or(script.first_decode_tokens);
+                    let unit = units.len();
+                    units.push(UnitInfo {
+                        sess,
+                        burst,
+                        prev: None,
+                        deps: dep_units.clone(),
+                        delay_us: delay,
+                    });
+                    dependents.push(Vec::new());
+                    unit_output.push(output);
+                    for &d in &dep_units {
+                        dependents[d].push(DepTarget::Arrival(sess));
+                    }
+                    arrivals.push(if dep_units.is_empty() {
+                        ArrivalGate { dep_count: 0, delay_us: release + delay }
+                    } else {
+                        ArrivalGate { dep_count: dep_units.len(), delay_us: delay }
+                    });
+                    step_deps.push(vec![0; script.steps.len()]);
+                    scripts.push(script);
+                    task_of.push(t);
+                    last_unit.push(unit);
+                    unit_at.push(vec![(burst, unit)]);
+                    node_units[j].push(unit);
+                    node_sessions[j].push(sess);
+                } else {
+                    // Continuation: a dependency-gated resume step on the
+                    // context owner's k-th session (join outputs append to
+                    // the cached context).
+                    let NodeKind::Llm { prefill, decode } = node.kind else {
+                        unreachable!("validate(): only llm nodes continue")
+                    };
+                    let sess = node_sessions[roots[j]][k];
+                    let step = scripts[sess].steps.len();
+                    scripts[sess].steps.push(SessionStep {
+                        tool_latency_us: delay.max(1),
+                        resume_tokens: prefill + dep_tokens,
+                        decode_tokens: decode,
+                    });
+                    let burst = step + 1;
+                    let unit = units.len();
+                    units.push(UnitInfo {
+                        sess,
+                        burst,
+                        prev: Some(last_unit[sess]),
+                        deps: dep_units.clone(),
+                        delay_us: 0,
+                    });
+                    dependents.push(Vec::new());
+                    unit_output.push(decode);
+                    for &d in &dep_units {
+                        dependents[d].push(DepTarget::Step { sess, step });
+                    }
+                    step_deps[sess].push(dep_units.len());
+                    last_unit[sess] = unit;
+                    unit_at[sess].push((burst, unit));
+                    // (Only node_units is recorded here: session lookups go
+                    // through roots[j], which always resolves to a
+                    // fresh-context node.)
+                    node_units[j].push(unit);
+                }
+            }
+        }
+    }
+
+    let unit_of_burst: Vec<Vec<Option<usize>>> = scripts
+        .iter()
+        .zip(&unit_at)
+        .map(|(script, entries)| {
+            let mut v = vec![None; script.steps.len() + 1];
+            for &(burst, unit) in entries {
+                v[burst] = Some(unit);
+            }
+            v
+        })
+        .collect();
+
+    CompiledWorkflow {
+        scripts,
+        plan: WorkflowPlan {
+            n_tasks,
+            task_release_us: releases,
+            task_of,
+            arrivals,
+            step_deps,
+            unit_of_burst,
+            dependents,
+            units,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{WorkflowLoad, WorkflowSpec};
+    use crate::workload::{ArrivalProcess, Population, WorkloadKind};
+
+    fn carrier(name: &str, spec: WorkflowSpec, tasks: usize) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            ..WorkflowLoad::new(spec).carrier(tasks, 1.0)
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let sc = carrier("t", WorkflowSpec::by_name("supervisor-worker").unwrap(), 5);
+        let a = compile(&sc, ModelKind::Qwen3B, 11);
+        let b = compile(&sc, ModelKind::Qwen3B, 11);
+        assert_eq!(a.scripts, b.scripts);
+        assert_eq!(a.plan, b.plan);
+        let c = compile(&sc, ModelKind::Qwen3B, 12);
+        assert_ne!(a.scripts, c.scripts, "different seeds must differ");
+    }
+
+    #[test]
+    fn degenerate_single_agent_matches_legacy_scenario_bytes() {
+        // The single-node workflow must produce the exact trace the classic
+        // one-population scenario produces: same scripts, same arrivals.
+        let tasks = 9;
+        let wf = carrier("deg", WorkflowSpec::by_name("single-react").unwrap(), tasks);
+        let legacy = Scenario {
+            name: "deg".into(),
+            description: String::new(),
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+            total_sessions: tasks,
+            n_agents: tasks,
+            kv: None,
+            workflow: None,
+        };
+        for seed in [3, 7, 11] {
+            let cw = compile(&wf, ModelKind::Qwen3B, seed);
+            let wl = legacy.instantiate(ModelKind::Qwen3B, seed);
+            let legacy_scripts: Vec<_> =
+                wl.trace.events.iter().map(|e| e.script.clone()).collect();
+            assert_eq!(cw.scripts, legacy_scripts, "seed {seed}: scripts must match");
+            for (gate, ev) in cw.plan.arrivals.iter().zip(&wl.trace.events) {
+                assert_eq!(gate.dep_count, 0, "degenerate sessions are roots");
+                assert_eq!(gate.delay_us, ev.arrival_us, "seed {seed}: arrivals must match");
+            }
+            assert!(cw.plan.step_deps.iter().all(|s| s.iter().all(|&d| d == 0)));
+        }
+    }
+
+    #[test]
+    fn supervisor_worker_structure() {
+        let tasks = 3;
+        let sc = carrier("sw", WorkflowSpec::by_name("supervisor-worker").unwrap(), tasks);
+        let cw = compile(&sc, ModelKind::Qwen3B, 7);
+        // 5 sessions per task: plan + 4 workers (reduce rides plan's context).
+        assert_eq!(cw.scripts.len(), 5 * tasks);
+        assert_eq!(cw.plan.units.len(), 6 * tasks);
+        for t in 0..tasks {
+            let base = 5 * t;
+            let plan_sess = base;
+            // The supervisor session gained the gated reduce step.
+            assert_eq!(cw.scripts[plan_sess].steps.len(), 1);
+            assert_eq!(cw.plan.step_deps[plan_sess], vec![4], "reduce joins on 4 workers");
+            // Reduce's resume = its own 48-token prompt + the 4 workers'
+            // final outputs appended to the supervisor's cached context.
+            let worker_out: u32 = (1..5)
+                .map(|w| {
+                    let s = &cw.scripts[base + w];
+                    s.steps.last().map(|st| st.decode_tokens).unwrap_or(s.first_decode_tokens)
+                })
+                .sum();
+            assert_eq!(cw.scripts[plan_sess].steps[0].resume_tokens, 48 + worker_out);
+            for w in 1..5 {
+                let sess = base + w;
+                assert_eq!(cw.plan.task_of[sess], t);
+                // Workers gate on the supervisor unit with the folded
+                // 120 ms dispatch-tool delay.
+                assert_eq!(cw.plan.arrivals[sess].dep_count, 1);
+                assert_eq!(cw.plan.arrivals[sess].delay_us, 120_000);
+                // Worker prompts carry the supervisor's 96-token plan.
+                assert!(cw.scripts[sess].cold_prefill_tokens >= 2500 + 96);
+            }
+        }
+        // Fan-out override widens the join.
+        let mut wide = sc.clone();
+        wide.workflow.as_mut().unwrap().fan_out = Some(8);
+        let cw8 = compile(&wide, ModelKind::Qwen3B, 7);
+        assert_eq!(cw8.scripts.len(), 9 * tasks);
+        assert_eq!(cw8.plan.step_deps[0], vec![8]);
+    }
+
+    #[test]
+    fn debate_cross_gates_and_judge_join() {
+        let sc = carrier("d", WorkflowSpec::by_name("debate").unwrap(), 2);
+        let cw = compile(&sc, ModelKind::Qwen3B, 7);
+        // 3 sessions per task (pro, con, judge); rebuttals ride the debaters.
+        assert_eq!(cw.scripts.len(), 6);
+        for t in 0..2 {
+            let (pro, con, judge) = (3 * t, 3 * t + 1, 3 * t + 2);
+            // Each rebuttal step gates on the *other* debater's opening.
+            assert_eq!(cw.plan.step_deps[pro], vec![1]);
+            assert_eq!(cw.plan.step_deps[con], vec![1]);
+            let pro_open = cw.plan.unit_of_burst[pro][0].unwrap();
+            assert!(
+                cw.plan.dependents[pro_open]
+                    .contains(&DepTarget::Step { sess: con, step: 0 }),
+                "pro's opening releases con's rebuttal"
+            );
+            // The judge joins on both rebuttal units.
+            assert_eq!(cw.plan.arrivals[judge].dep_count, 2);
+            let reb_out = 180 + 180;
+            assert_eq!(cw.scripts[judge].cold_prefill_tokens, 700 + reb_out);
+        }
+    }
+
+    #[test]
+    fn pipeline_folds_tool_latency_into_the_release_edge() {
+        let sc = carrier("p", WorkflowSpec::by_name("pipeline-chain").unwrap(), 1);
+        let cw = compile(&sc, ModelKind::Qwen3B, 7);
+        assert_eq!(cw.scripts.len(), 3, "verify is pure latency, not a session");
+        // summarize waits on transform + the folded 250 ms verify delay.
+        assert_eq!(cw.plan.arrivals[2].dep_count, 1);
+        assert_eq!(cw.plan.arrivals[2].delay_us, 250_000);
+        // Stage prompts prefix the previous stage's output.
+        assert_eq!(cw.scripts[1].cold_prefill_tokens, 500 + 200);
+        assert_eq!(cw.scripts[2].cold_prefill_tokens, 400 + 180);
+        // Units are in topological order: deps always precede users.
+        for (u, info) in cw.plan.units.iter().enumerate() {
+            for &d in &info.deps {
+                assert!(d < u, "unit {u} depends on later unit {d}");
+            }
+            if let Some(p) = info.prev {
+                assert!(p < u);
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_instances_share_a_template() {
+        let sc = carrier("d", WorkflowSpec::by_name("debate").unwrap(), 3);
+        let cw = compile(&sc, ModelKind::Qwen3B, 7);
+        // All `pro` instances (across tasks) share one workflow template;
+        // `pro` and `con` differ.
+        assert_eq!(cw.scripts[0].template, cw.scripts[3].template);
+        assert_ne!(cw.scripts[0].template, cw.scripts[1].template);
+        assert!(cw.scripts[0].template >= WF_TEMPLATE_BASE);
+    }
+
+    #[test]
+    fn dependency_outputs_are_prompt_unique_per_task() {
+        // Judges prefix their task's rebuttal outputs: the 700 static
+        // prompt tokens radix-share across tasks, the 360 output tokens
+        // must not (they are per-task content).
+        let sc = carrier("d", WorkflowSpec::by_name("debate").unwrap(), 2);
+        let cw = compile(&sc, ModelKind::Qwen3B, 7);
+        let (j0, j1) = (&cw.scripts[2], &cw.scripts[5]);
+        assert_eq!(j0.unique_prompt_tokens, 360);
+        assert_eq!(j0.cold_prefill_tokens, 700 + 360);
+        let (a, b) = (j0.system_prompt_ids(), j1.system_prompt_ids());
+        assert_eq!(a[..700], b[..700], "static judge prompt is template-shared");
+        assert_ne!(a[700..], b[700..], "rebuttal outputs are task-unique");
+        // Root nodes without dependencies carry no unique suffix.
+        assert_eq!(cw.scripts[0].unique_prompt_tokens, 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Workflow DAG engine: multi-agent pipelines as first-class workloads.
+//!
+//! The paper's Application Layer (§III-A) drives reasoning-action loops;
+//! real deployments compose those loops into *pipelines* — a supervisor
+//! fans out to sub-agents and joins on their results, debaters cross-
+//! examine, stages chain. This layer sits between the scenario engine and
+//! the simulator and gives rust_pallas that structure:
+//!
+//! - [`WorkflowSpec`] — a declarative DAG of LLM calls, agent sessions,
+//!   external tool calls, fan-outs (`count > 1`), and join barriers
+//!   (`deps`); `continues` chains a call onto an earlier node's cached
+//!   context so join outputs arrive as **resume prefills** (the shared-
+//!   prefix fan-out shape the KV radix path is built for).
+//! - [`compile()`] — the deterministic orchestrator front half: lowers a
+//!   workflow-carrying [`crate::workload::Scenario`] into session scripts
+//!   plus a [`WorkflowPlan`] of arrival/step gates. The simulator's event
+//!   loop is the back half: it releases each LLM call into the coordinator
+//!   only when its dependencies resolve (`engine/sim.rs`, dependency-driven
+//!   arrivals alongside the legacy arrival-plan injection).
+//! - Task-level metrics — workflow makespan, ideal critical-path lower
+//!   bound, and task-SLO attainment ([`crate::metrics::WorkflowReport`]) —
+//!   plus the [`crate::workload::SweepAxis::FanOut`] load axis and the
+//!   `fanout-knee` registry sweep.
+//!
+//! CLI: `agentserve workflow list|run`. Registry: supervisor/worker
+//! map-reduce, pipeline chain, debate, and the degenerate single-agent
+//! cases that reproduce the legacy session-script scenarios byte-for-byte.
+
+mod compile;
+mod spec;
+
+pub use compile::{compile, ArrivalGate, CompiledWorkflow, DepTarget, UnitInfo, WorkflowPlan};
+pub use spec::{NodeKind, WorkflowLoad, WorkflowNode, WorkflowSpec};

@@ -1,0 +1,641 @@
+//! Workflow DAG specifications: multi-agent pipelines as first-class
+//! workloads.
+//!
+//! A [`WorkflowSpec`] describes one *task* — a DAG of LLM calls, external
+//! tool calls, fan-outs, and join barriers — that the orchestrator
+//! instantiates per task arrival. Nodes reference each other by name;
+//! dependencies (`deps`) are join barriers (a dependent waits for **all**
+//! instances of every dependency), replication (`count > 1`) is fan-out, and
+//! `continues` chains a call onto an earlier node's cached context so its
+//! prompt arrives as a *resume* prefill (join outputs append to the parent's
+//! context — the shape the KV radix path sees in real supervisor/worker
+//! deployments).
+//!
+//! Specs are declarative and serializable; the compiler
+//! ([`crate::workflow::compile()`]) lowers a (scenario, spec, seed) triple
+//! into session scripts plus a dependency plan the simulator executes (see
+//! `docs/ARCHITECTURE.md` § Workflow DAG layer).
+
+use crate::util::json::Value;
+use crate::workload::{ArrivalProcess, Scenario, WorkloadKind};
+
+/// What one workflow node does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A single LLM call: `prefill` prompt tokens then `decode` output
+    /// tokens. Fresh-context unless the node `continues` a parent; either
+    /// way, outputs of its dependencies are appended to the prompt.
+    Llm { prefill: u32, decode: u32 },
+    /// A full Table-I agent session (cold prefill + reasoning-action tool
+    /// loop) of the given paradigm, drawn from [`crate::workload::WorkloadGenerator`].
+    Agent { workload: WorkloadKind },
+    /// An external tool/service call: pure latency, no GPU work. Folded
+    /// into the release edge of its dependents at compile time.
+    Tool { latency_us: u64 },
+}
+
+impl NodeKind {
+    /// Short tag used by serialization and the CLI listing.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            NodeKind::Llm { .. } => "llm",
+            NodeKind::Agent { .. } => "agent",
+            NodeKind::Tool { .. } => "tool",
+        }
+    }
+}
+
+/// One node of a workflow DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowNode {
+    /// Unique name within the spec.
+    pub name: String,
+    pub kind: NodeKind,
+    /// Names of earlier nodes that must complete first (join barrier over
+    /// **all** their instances). Empty = released at task arrival.
+    pub deps: Vec<String>,
+    /// Replication degree: the node runs as `count` parallel instances
+    /// (fan-out). Dependents join on all of them.
+    pub count: usize,
+    /// When set, this call extends the named earlier node's cached context
+    /// instead of opening a fresh one: it becomes a dependency-gated resume
+    /// prefill on that node's session. Must be an `Llm` node whose `count`
+    /// equals the context owner's.
+    pub continues: Option<String>,
+}
+
+impl WorkflowNode {
+    /// Fresh-context LLM call.
+    pub fn llm(name: &str, prefill: u32, decode: u32, deps: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: NodeKind::Llm { prefill, decode },
+            deps: deps.iter().map(|d| d.to_string()).collect(),
+            count: 1,
+            continues: None,
+        }
+    }
+
+    /// Full agent session node.
+    pub fn agent(name: &str, workload: WorkloadKind, deps: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: NodeKind::Agent { workload },
+            deps: deps.iter().map(|d| d.to_string()).collect(),
+            count: 1,
+            continues: None,
+        }
+    }
+
+    /// External tool call node.
+    pub fn tool(name: &str, latency_us: u64, deps: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: NodeKind::Tool { latency_us },
+            deps: deps.iter().map(|d| d.to_string()).collect(),
+            count: 1,
+            continues: None,
+        }
+    }
+
+    /// Builder: set the replication degree (fan-out).
+    pub fn with_count(mut self, count: usize) -> Self {
+        self.count = count;
+        self
+    }
+
+    /// Builder: continue `parent`'s cached context.
+    pub fn continuing(mut self, parent: &str) -> Self {
+        self.continues = Some(parent.to_string());
+        self
+    }
+
+    fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("name", self.name.as_str().into()),
+            ("kind", self.kind.kind_name().into()),
+        ];
+        match self.kind {
+            NodeKind::Llm { prefill, decode } => {
+                fields.push(("prefill", prefill.into()));
+                fields.push(("decode", decode.into()));
+            }
+            NodeKind::Agent { workload } => fields.push(("workload", workload.tag().into())),
+            NodeKind::Tool { latency_us } => fields.push(("latency_us", latency_us.into())),
+        }
+        fields.push((
+            "deps",
+            Value::Arr(self.deps.iter().map(|d| d.as_str().into()).collect()),
+        ));
+        fields.push(("count", self.count.into()));
+        if let Some(c) = &self.continues {
+            fields.push(("continues", c.as_str().into()));
+        }
+        Value::obj(fields)
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        let kind = match v.req_str("kind")? {
+            "llm" => NodeKind::Llm {
+                prefill: v.req_f64("prefill")? as u32,
+                decode: v.req_f64("decode")? as u32,
+            },
+            "agent" => NodeKind::Agent { workload: v.req_str("workload")?.parse()? },
+            "tool" => NodeKind::Tool { latency_us: v.req_f64("latency_us")? as u64 },
+            other => anyhow::bail!("unknown workflow node kind '{other}' (llm|agent|tool)"),
+        };
+        let deps = match v.get("deps") {
+            Some(Value::Arr(a)) => a
+                .iter()
+                .map(|d| {
+                    d.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow::anyhow!("workflow deps must be node names"))
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            kind,
+            deps,
+            count: v.get("count").and_then(|c| c.as_usize()).unwrap_or(1),
+            continues: v.get("continues").and_then(|c| c.as_str()).map(String::from),
+        })
+    }
+}
+
+/// A workflow DAG: the per-task template the orchestrator instantiates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub description: String,
+    /// Nodes in definition order. Dependencies (`deps`, `continues`) may
+    /// only reference strictly earlier nodes, which makes the DAG acyclic
+    /// by construction and fixes a deterministic topological order.
+    pub nodes: Vec<WorkflowNode>,
+}
+
+impl WorkflowSpec {
+    /// Index of the node with this name.
+    pub fn node_index(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Resolve a node's context owner: follow `continues` links to the
+    /// fresh-context root whose session the node extends (identity for
+    /// fresh nodes). Panics on unresolved names — call [`validate`] first.
+    ///
+    /// [`validate`]: WorkflowSpec::validate
+    pub fn session_root(&self, idx: usize) -> usize {
+        let mut i = idx;
+        while let Some(parent) = &self.nodes[i].continues {
+            i = self.node_index(parent).expect("validated continues target");
+        }
+        i
+    }
+
+    /// Sessions each task instantiates (fresh-context node instances).
+    pub fn sessions_per_task(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.continues.is_none() && !matches!(n.kind, NodeKind::Tool { .. }))
+            .map(|n| n.count)
+            .sum()
+    }
+
+    /// LLM-call units each task instantiates (everything but tool nodes).
+    pub fn units_per_task(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.kind, NodeKind::Tool { .. }))
+            .map(|n| n.count)
+            .sum()
+    }
+
+    /// The spec with every replicated node's degree overridden to `degree`
+    /// (the `--fan-out` / [`crate::workload::SweepAxis::FanOut`] knob).
+    /// Nodes with `count == 1` are untouched, so supervisors and joins keep
+    /// their shape. Continuations of a replicated root follow it.
+    pub fn with_fan_out(&self, degree: usize) -> WorkflowSpec {
+        let mut spec = self.clone();
+        let replicated: Vec<bool> = spec.nodes.iter().map(|n| n.count > 1).collect();
+        for (i, node) in spec.nodes.iter_mut().enumerate() {
+            if replicated[i] {
+                node.count = degree;
+            }
+        }
+        // Keep continuation counts locked to their (possibly overridden)
+        // session root.
+        for i in 0..spec.nodes.len() {
+            if spec.nodes[i].continues.is_some() {
+                let root = spec.session_root(i);
+                spec.nodes[i].count = spec.nodes[root].count;
+            }
+        }
+        spec
+    }
+
+    /// Structural sanity checks (run before compilation / after load).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "workflow needs a name");
+        anyhow::ensure!(!self.nodes.is_empty(), "workflow '{}' has no nodes", self.name);
+        let mut seen: Vec<&str> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(!node.name.is_empty(), "workflow '{}': node {} unnamed", self.name, i);
+            anyhow::ensure!(
+                !seen.contains(&node.name.as_str()),
+                "workflow '{}': duplicate node name '{}'",
+                self.name,
+                node.name
+            );
+            anyhow::ensure!(
+                node.count >= 1,
+                "workflow '{}': node '{}' count must be >= 1",
+                self.name,
+                node.name
+            );
+            for dep in &node.deps {
+                anyhow::ensure!(
+                    seen.contains(&dep.as_str()),
+                    "workflow '{}': node '{}' depends on '{}', which is not an earlier \
+                     node (define nodes in topological order)",
+                    self.name,
+                    node.name,
+                    dep
+                );
+            }
+            match node.kind {
+                NodeKind::Llm { prefill, decode } => {
+                    anyhow::ensure!(
+                        prefill >= 1 && decode >= 1,
+                        "workflow '{}': node '{}' needs prefill/decode >= 1",
+                        self.name,
+                        node.name
+                    );
+                }
+                NodeKind::Agent { .. } => {}
+                NodeKind::Tool { latency_us } => {
+                    anyhow::ensure!(
+                        latency_us >= 1,
+                        "workflow '{}': tool node '{}' needs latency >= 1us",
+                        self.name,
+                        node.name
+                    );
+                    anyhow::ensure!(
+                        node.count == 1 && node.continues.is_none(),
+                        "workflow '{}': tool node '{}' cannot fan out or continue a context",
+                        self.name,
+                        node.name
+                    );
+                }
+            }
+            if let Some(parent) = &node.continues {
+                anyhow::ensure!(
+                    matches!(node.kind, NodeKind::Llm { .. }),
+                    "workflow '{}': only llm nodes can continue a context ('{}')",
+                    self.name,
+                    node.name
+                );
+                anyhow::ensure!(
+                    seen.contains(&parent.as_str()),
+                    "workflow '{}': node '{}' continues '{}', which is not an earlier node",
+                    self.name,
+                    node.name,
+                    parent
+                );
+                let p = self.node_index(parent).expect("checked above");
+                anyhow::ensure!(
+                    !matches!(self.nodes[p].kind, NodeKind::Tool { .. }),
+                    "workflow '{}': node '{}' cannot continue tool node '{}'",
+                    self.name,
+                    node.name,
+                    parent
+                );
+                let root = self.session_root(i);
+                anyhow::ensure!(
+                    node.count == self.nodes[root].count,
+                    "workflow '{}': continuation '{}' (count {}) must match its context \
+                     owner '{}' (count {})",
+                    self.name,
+                    node.name,
+                    node.count,
+                    self.nodes[root].name,
+                    self.nodes[root].count
+                );
+            }
+            seen.push(&node.name);
+        }
+        anyhow::ensure!(
+            self.sessions_per_task() >= 1,
+            "workflow '{}' has no LLM work (tool nodes only)",
+            self.name
+        );
+        Ok(())
+    }
+
+    // -- registry ------------------------------------------------------------
+
+    /// The built-in workflow registry (`agentserve workflow list`).
+    ///
+    /// `single-react` / `plan-execute` are the degenerate single-node cases:
+    /// one Table-I agent session per task, byte-identical to the legacy
+    /// session-script scenarios (locked by `rust/tests/workflows.rs`).
+    pub fn registry() -> Vec<WorkflowSpec> {
+        vec![
+            WorkflowSpec {
+                name: "single-react".into(),
+                description: "degenerate case: one ReAct agent session per task".into(),
+                nodes: vec![WorkflowNode::agent("react", WorkloadKind::ReAct, &[])],
+            },
+            WorkflowSpec {
+                name: "plan-execute".into(),
+                description: "degenerate case: one Plan-and-Execute session per task".into(),
+                nodes: vec![WorkflowNode::agent("planner", WorkloadKind::PlanAndExecute, &[])],
+            },
+            WorkflowSpec {
+                name: "supervisor-worker".into(),
+                description:
+                    "map-reduce: a supervisor plans, fans out to 4 ReAct workers, and \
+                     reduces their outputs in its own cached context"
+                        .into(),
+                nodes: vec![
+                    WorkflowNode::llm("plan", 1400, 96, &[]),
+                    WorkflowNode::tool("dispatch", 120_000, &["plan"]),
+                    WorkflowNode::agent("workers", WorkloadKind::ReAct, &["dispatch"])
+                        .with_count(4),
+                    WorkflowNode::llm("reduce", 48, 160, &["workers"]).continuing("plan"),
+                ],
+            },
+            WorkflowSpec {
+                name: "pipeline-chain".into(),
+                description:
+                    "sequential pipeline: ingest -> transform -> external verify -> \
+                     summarize, each stage prefixing the previous stage's output"
+                        .into(),
+                nodes: vec![
+                    WorkflowNode::llm("ingest", 900, 200, &[]),
+                    WorkflowNode::llm("transform", 500, 180, &["ingest"]),
+                    WorkflowNode::tool("verify", 250_000, &["transform"]),
+                    WorkflowNode::llm("summarize", 400, 140, &["verify"]),
+                ],
+            },
+            WorkflowSpec {
+                name: "debate".into(),
+                description:
+                    "two debaters open in parallel, rebut each other in their own \
+                     contexts (cross-gated resumes), then a judge rules"
+                        .into(),
+                nodes: vec![
+                    WorkflowNode::llm("pro", 1100, 220, &[]),
+                    WorkflowNode::llm("con", 1100, 220, &[]),
+                    WorkflowNode::llm("pro-rebuttal", 32, 180, &["con"]).continuing("pro"),
+                    WorkflowNode::llm("con-rebuttal", 32, 180, &["pro"]).continuing("con"),
+                    WorkflowNode::llm("judge", 700, 140, &["pro-rebuttal", "con-rebuttal"]),
+                ],
+            },
+        ]
+    }
+
+    /// Look up a built-in workflow by name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<WorkflowSpec> {
+        Self::registry()
+            .into_iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    // -- serde ---------------------------------------------------------------
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            (
+                "nodes",
+                Value::Arr(self.nodes.iter().map(|n| n.to_value()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let spec = Self {
+            name: v.req_str("name")?.to_string(),
+            description: v
+                .get("description")
+                .and_then(|d| d.as_str())
+                .unwrap_or("")
+                .to_string(),
+            nodes: v
+                .req_arr("nodes")?
+                .iter()
+                .map(WorkflowNode::from_value)
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// A workflow bound into a [`crate::workload::Scenario`]: the spec plus the
+/// scenario-level fan-out override (the swept knob).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowLoad {
+    pub spec: WorkflowSpec,
+    /// When set, every replicated node runs at this degree
+    /// ([`WorkflowSpec::with_fan_out`]).
+    pub fan_out: Option<usize>,
+}
+
+impl WorkflowLoad {
+    pub fn new(spec: WorkflowSpec) -> Self {
+        Self { spec, fan_out: None }
+    }
+
+    /// The spec as it will actually run (fan-out override applied).
+    pub fn effective_spec(&self) -> WorkflowSpec {
+        match self.fan_out {
+            Some(d) => self.spec.with_fan_out(d),
+            None => self.spec.clone(),
+        }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        self.spec.validate()?;
+        if let Some(d) = self.fan_out {
+            anyhow::ensure!(d >= 1, "workflow fan-out override must be >= 1 (got {d})");
+            // An override on a DAG with nothing to rescale would be
+            // silently ignored — refuse it loudly instead.
+            anyhow::ensure!(
+                self.spec.nodes.iter().any(|n| n.count > 1),
+                "workflow '{}' has no replicated node (count > 1) for the fan-out \
+                 override to rescale",
+                self.spec.name
+            );
+            self.effective_spec().validate()?;
+        }
+        Ok(())
+    }
+
+    /// The canonical open-loop carrier scenario for this load: `tasks` task
+    /// releases at Poisson `rate_per_s`, one DAG instance each. Callers
+    /// that need a different name/description/arrival shape can override
+    /// fields with struct-update syntax.
+    pub fn carrier(self, tasks: usize, rate_per_s: f64) -> Scenario {
+        Scenario {
+            name: self.spec.name.clone(),
+            description: self.spec.description.clone(),
+            arrivals: ArrivalProcess::Poisson { rate_per_s },
+            populations: vec![],
+            total_sessions: tasks,
+            n_agents: tasks,
+            kv: None,
+            workflow: Some(self),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![("spec", self.spec.to_value())];
+        if let Some(d) = self.fan_out {
+            fields.push(("fan_out", d.into()));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            spec: WorkflowSpec::from_value(v.req("spec")?)?,
+            fan_out: v.get("fan_out").and_then(|d| d.as_usize()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn registry_is_valid_and_named_uniquely() {
+        let reg = WorkflowSpec::registry();
+        assert!(reg.len() >= 4, "need the four paper-shaped workflows");
+        for s in &reg {
+            s.validate().unwrap();
+        }
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "workflow names must be unique");
+        assert!(WorkflowSpec::by_name("SUPERVISOR-WORKER").is_some());
+        assert!(WorkflowSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn counting_helpers() {
+        let sw = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        // plan + 4 workers open sessions; reduce rides plan's context; the
+        // tool node is folded away.
+        assert_eq!(sw.sessions_per_task(), 5);
+        assert_eq!(sw.units_per_task(), 6);
+        let single = WorkflowSpec::by_name("single-react").unwrap();
+        assert_eq!(single.sessions_per_task(), 1);
+        assert_eq!(single.units_per_task(), 1);
+    }
+
+    #[test]
+    fn fan_out_override_rescales_replicated_nodes_only() {
+        let sw = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        let wide = sw.with_fan_out(16);
+        wide.validate().unwrap();
+        assert_eq!(wide.nodes[2].count, 16, "workers widen");
+        assert_eq!(wide.nodes[0].count, 1, "supervisor untouched");
+        assert_eq!(wide.sessions_per_task(), 17);
+        // A spec with no replicated node is untouched.
+        let single = WorkflowSpec::by_name("single-react").unwrap();
+        assert_eq!(single.with_fan_out(8), single);
+    }
+
+    #[test]
+    fn session_root_follows_continuation_chains() {
+        let sw = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        let reduce = sw.node_index("reduce").unwrap();
+        assert_eq!(sw.session_root(reduce), sw.node_index("plan").unwrap());
+        let debate = WorkflowSpec::by_name("debate").unwrap();
+        let reb = debate.node_index("con-rebuttal").unwrap();
+        assert_eq!(debate.session_root(reb), debate.node_index("con").unwrap());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[0].deps.push("reduce".into());
+        assert!(s.validate().is_err(), "forward dep (cycle) rejected");
+
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[3].count = 3;
+        assert!(s.validate().is_err(), "continuation count must match its root");
+
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[1].count = 2;
+        assert!(s.validate().is_err(), "tool nodes cannot fan out");
+
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[3].continues = Some("dispatch".into());
+        assert!(s.validate().is_err(), "cannot continue a tool node");
+
+        let mut s = WorkflowSpec::by_name("pipeline-chain").unwrap();
+        s.nodes[1].name = "ingest".into();
+        assert!(s.validate().is_err(), "duplicate names rejected");
+
+        let s = WorkflowSpec {
+            name: "tools-only".into(),
+            description: String::new(),
+            nodes: vec![WorkflowNode::tool("t", 1000, &[])],
+        };
+        assert!(s.validate().is_err(), "a workflow needs LLM work");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        for spec in WorkflowSpec::registry() {
+            let v = spec.to_value();
+            let back = WorkflowSpec::from_value(&v).unwrap();
+            assert_eq!(back, spec);
+            let text = v.to_string_pretty();
+            let back2 = WorkflowSpec::from_value(&parse(&text).unwrap()).unwrap();
+            assert_eq!(back2, spec);
+        }
+        // WorkflowLoad round trip with and without the override.
+        let mut load = WorkflowLoad::new(WorkflowSpec::by_name("debate").unwrap());
+        assert_eq!(WorkflowLoad::from_value(&load.to_value()).unwrap(), load);
+        load.fan_out = Some(8);
+        assert_eq!(WorkflowLoad::from_value(&load.to_value()).unwrap(), load);
+    }
+
+    #[test]
+    fn bad_fan_out_override_rejected() {
+        let mut load = WorkflowLoad::new(WorkflowSpec::by_name("supervisor-worker").unwrap());
+        load.fan_out = Some(0);
+        assert!(load.validate().is_err());
+        load.fan_out = Some(8);
+        load.validate().unwrap();
+        assert_eq!(load.effective_spec().nodes[2].count, 8);
+        // An override on a DAG with no replicated node would be silently
+        // ignored; it is refused instead.
+        let mut flat = WorkflowLoad::new(WorkflowSpec::by_name("debate").unwrap());
+        flat.fan_out = Some(4);
+        assert!(flat.validate().is_err(), "nothing to rescale");
+        flat.fan_out = None;
+        flat.validate().unwrap();
+    }
+
+    #[test]
+    fn carrier_wraps_the_load_in_an_open_loop_scenario() {
+        let sc = WorkflowLoad::new(WorkflowSpec::by_name("supervisor-worker").unwrap())
+            .carrier(24, 0.4);
+        sc.validate().unwrap();
+        assert_eq!(sc.total_sessions, 24);
+        assert!(sc.populations.is_empty());
+        assert!(matches!(sc.arrivals, ArrivalProcess::Poisson { .. }));
+        assert_eq!(sc.workflow.unwrap().spec.name, "supervisor-worker");
+    }
+}

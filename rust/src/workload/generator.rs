@@ -33,6 +33,11 @@ pub struct SessionScript {
     pub cold_prefill_tokens: u32,
     /// Template id: sessions with equal template share the system prompt.
     pub template: u32,
+    /// Trailing cold-prefill tokens unique to this session (workflow
+    /// dependency outputs appended to the prompt). Excluded from the
+    /// template-shared prefix so the radix cache never counts per-task
+    /// content as cross-task reuse. 0 for plain generator sessions.
+    pub unique_prompt_tokens: u32,
     /// Decode length of the first response (after cold prefill).
     pub first_decode_tokens: u32,
     /// Subsequent reasoning-action steps.
@@ -57,13 +62,22 @@ impl SessionScript {
         self.total_prefill_tokens() + self.total_decode_tokens()
     }
 
-    /// Deterministic system-prompt token ids for prefix caching (derived
-    /// from the template id, shared across sessions of the same template).
+    /// Deterministic system-prompt token ids for prefix caching: a shared
+    /// prefix derived from the template id (identical across sessions of
+    /// one template), then `unique_prompt_tokens` session-unique ids
+    /// (workflow dependency outputs — per-task content that must *not*
+    /// radix-match across tasks).
     pub fn system_prompt_ids(&self) -> Vec<u32> {
+        let shared = self.cold_prefill_tokens.saturating_sub(self.unique_prompt_tokens);
         let mut rng = Rng::fold(0xC0FFEE, self.template as u64);
-        (0..self.cold_prefill_tokens)
-            .map(|_| rng.range_u32(0, 49_999))
-            .collect()
+        let mut ids: Vec<u32> = (0..shared).map(|_| rng.range_u32(0, 49_999)).collect();
+        if self.unique_prompt_tokens > 0 {
+            let mut unique = Rng::fold(0x0D15_7C70, self.id);
+            ids.extend(
+                (0..self.cold_prefill_tokens - shared).map(|_| unique.range_u32(0, 49_999)),
+            );
+        }
+        ids
     }
 }
 
@@ -131,6 +145,7 @@ impl WorkloadGenerator {
             kind: self.spec.kind,
             cold_prefill_tokens: cold,
             template,
+            unique_prompt_tokens: 0,
             first_decode_tokens: first_decode,
             steps,
         }

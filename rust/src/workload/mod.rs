@@ -18,6 +18,9 @@
 //! Above single workloads sit [`Scenario`] (declarative traffic: arrival
 //! process × population mix) and [`SweepSpec`] (a scenario driven across an
 //! arrival-rate / agent-count / mix-ratio grid — the paper's load curves).
+//! A scenario may instead carry a [`crate::workflow::WorkflowSpec`]: each
+//! arrival then releases one multi-agent DAG *task* (fan-out, join
+//! barriers, context continuations) compiled by [`crate::workflow::compile()`].
 //!
 //! Invariant (the determinism contract, see `docs/ARCHITECTURE.md`): every
 //! artifact here is a pure function of its inputs and a `u64` seed —
@@ -36,8 +39,8 @@ pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
 pub use sweep::{
-    knee_value, knee_value_kv, run_sweep, PolicyPoint, SweepAxis, SweepPoint, SweepReport,
-    SweepSpec,
+    knee_value, knee_value_kv, knee_value_task, run_sweep, PolicyPoint, SweepAxis, SweepPoint,
+    SweepReport, SweepSpec,
 };
 pub use trace::{Trace, TraceEvent};
 

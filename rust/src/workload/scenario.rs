@@ -21,6 +21,7 @@ use super::trace::{Trace, TraceEvent};
 use crate::config::{Config, KvConfig, ModelKind};
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
+use crate::workflow::WorkflowLoad;
 use std::path::Path;
 
 /// How session arrivals are generated.
@@ -157,6 +158,12 @@ pub struct Scenario {
     /// --name memory-pressure` shows pressure out of the box; CLI
     /// `--kv-blocks`-family flags override this.
     pub kv: Option<KvConfig>,
+    /// When set, this is a *workflow* scenario: each arrival releases one
+    /// task of the DAG (`total_sessions` counts tasks) and the workload is
+    /// defined entirely by the spec — `populations` must be empty and the
+    /// arrival process open-loop. Compiled via [`crate::workflow::compile()`]
+    /// instead of [`Scenario::instantiate`].
+    pub workflow: Option<WorkflowLoad>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -174,11 +181,26 @@ impl Scenario {
         anyhow::ensure!(!self.name.is_empty(), "scenario needs a name");
         anyhow::ensure!(self.total_sessions > 0, "scenario '{}' has no sessions", self.name);
         anyhow::ensure!(self.n_agents > 0, "scenario '{}' needs n_agents > 0", self.name);
-        anyhow::ensure!(
-            !self.populations.is_empty(),
-            "scenario '{}' has no populations",
-            self.name
-        );
+        if let Some(wf) = &self.workflow {
+            wf.validate()?;
+            anyhow::ensure!(
+                self.populations.is_empty(),
+                "workflow scenario '{}' defines its workload in the DAG; drop the populations",
+                self.name
+            );
+            anyhow::ensure!(
+                self.closed_loop().is_none(),
+                "workflow scenario '{}' needs an open-loop arrival process (poisson|bursty): \
+                 closed-loop chaining is not defined for multi-session tasks",
+                self.name
+            );
+        } else {
+            anyhow::ensure!(
+                !self.populations.is_empty(),
+                "scenario '{}' has no populations",
+                self.name
+            );
+        }
         for p in &self.populations {
             anyhow::ensure!(p.weight > 0.0, "population '{}' weight must be > 0", p.name);
             anyhow::ensure!(
@@ -295,6 +317,11 @@ impl Scenario {
     /// assignment, and session contents all derive from the seed, so two
     /// instantiations are identical and every policy replays the same bytes.
     pub fn instantiate(&self, model: ModelKind, seed: u64) -> ScenarioWorkload {
+        assert!(
+            self.workflow.is_none(),
+            "workflow scenarios compile through crate::workflow::compile (scripts + \
+             dependency plan), not instantiate()"
+        );
         // Scenario-level stream (arrivals + mix), separate from per-population
         // script streams so adding a population never perturbs the others.
         let mut rng = Rng::fold(seed, 0x5CE9A210);
@@ -346,6 +373,7 @@ impl Scenario {
                 total_sessions: 12,
                 n_agents: 4,
                 kv: None,
+                workflow: None,
             },
             Scenario {
                 name: "burst-storm".into(),
@@ -361,6 +389,7 @@ impl Scenario {
                 total_sessions: 12,
                 n_agents: 4,
                 kv: None,
+                workflow: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -373,6 +402,7 @@ impl Scenario {
                 total_sessions: 14,
                 n_agents: 5,
                 kv: None,
+                workflow: None,
             },
             Scenario {
                 name: "long-tool".into(),
@@ -391,6 +421,7 @@ impl Scenario {
                 total_sessions: 8,
                 n_agents: 4,
                 kv: None,
+                workflow: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -406,6 +437,7 @@ impl Scenario {
                 total_sessions: 16,
                 n_agents: 6,
                 kv: None,
+                workflow: None,
             },
             Scenario {
                 name: "memory-pressure".into(),
@@ -420,6 +452,7 @@ impl Scenario {
                 // admission path stalls, the radix cache churns, and decode
                 // growth forces preemptions (all deterministic per seed).
                 kv: Some(KvConfig { num_blocks: 2048, block_size: 16, prefix_sharing: true }),
+                workflow: None,
             },
             Scenario {
                 name: "shared-prefix-fleet".into(),
@@ -433,6 +466,7 @@ impl Scenario {
                 // Generous pool (1M tokens): sharing on, no pressure — the
                 // point is the >0.9 radix hit rate across the fleet.
                 kv: Some(KvConfig { num_blocks: 65_536, block_size: 16, prefix_sharing: true }),
+                workflow: None,
             },
         ]
     }
@@ -468,15 +502,28 @@ impl Scenario {
                 ]),
             ));
         }
+        if let Some(wf) = &self.workflow {
+            fields.push(("workflow", wf.to_value()));
+        }
         Value::obj(fields)
     }
 
     pub fn from_value(v: &Value) -> crate::Result<Self> {
-        let populations = v
-            .req_arr("populations")?
-            .iter()
-            .map(Population::from_value)
-            .collect::<crate::Result<Vec<_>>>()?;
+        let workflow = match v.get("workflow") {
+            Some(w) => Some(WorkflowLoad::from_value(w)?),
+            None => None,
+        };
+        // Workflow scenarios define their workload in the DAG; the
+        // populations array is optional (and must stay empty) for them.
+        let populations = match v.get("populations") {
+            Some(Value::Arr(a)) => a
+                .iter()
+                .map(Population::from_value)
+                .collect::<crate::Result<Vec<_>>>()?,
+            Some(_) => anyhow::bail!("'populations' must be an array"),
+            None if workflow.is_some() => Vec::new(),
+            None => anyhow::bail!("missing key 'populations'"),
+        };
         let sc = Self {
             name: v.req_str("name")?.to_string(),
             description: v
@@ -508,6 +555,7 @@ impl Scenario {
                 }
                 None => None,
             },
+            workflow,
         };
         sc.validate()?;
         Ok(sc)
@@ -642,6 +690,36 @@ mod tests {
             idle_min_us: 10,
             idle_max_us: 5,
         };
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn workflow_scenarios_validate_and_round_trip() {
+        use crate::workflow::{WorkflowLoad, WorkflowSpec};
+        let mut sc = Scenario {
+            name: "wf".into(),
+            description: "workflow carrier".into(),
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 0.5 },
+            populations: vec![],
+            total_sessions: 6,
+            n_agents: 6,
+            kv: None,
+            workflow: Some(WorkflowLoad::new(
+                WorkflowSpec::by_name("supervisor-worker").unwrap(),
+            )),
+        };
+        sc.validate().unwrap();
+        let back = Scenario::from_value(&sc.to_value()).unwrap();
+        assert_eq!(back, sc);
+        // And through actual text (the scenario-file path).
+        let text = sc.to_value().to_string_pretty();
+        assert_eq!(Scenario::from_value(&parse(&text).unwrap()).unwrap(), sc);
+        // Closed-loop carriers are rejected: task chaining is undefined.
+        sc.arrivals = ArrivalProcess::ClosedLoop { stagger_us: 1, think_time_us: 1 };
+        assert!(sc.validate().is_err());
+        sc.arrivals = ArrivalProcess::Poisson { rate_per_s: 0.5 };
+        // Populations and a DAG are mutually exclusive.
+        sc.populations = vec![Population::new("react", WorkloadKind::ReAct, 1.0)];
         assert!(sc.validate().is_err());
     }
 

@@ -24,6 +24,7 @@ use super::spec::WorkloadKind;
 use crate::config::{Config, KvConfig};
 use crate::engine::{run_scenario_fast, Policy, SimOutcome};
 use crate::util::json::Value;
+use crate::workflow::{WorkflowLoad, WorkflowSpec};
 use std::path::Path;
 
 /// The swept load axis. Grid values must be strictly increasing so the knee
@@ -48,6 +49,12 @@ pub enum SweepAxis {
     /// pools stall, evict, and preempt; large pools recover the unbounded
     /// behavior.
     KvBlocks(Vec<usize>),
+    /// Workflow fan-out degree: each point overrides every replicated DAG
+    /// node's `count` (requires a workflow-carrying base scenario). The
+    /// parallelism axis: wider fan-outs mean more concurrent sub-agents
+    /// per task and a heavier join — the knee is judged on the task SLO
+    /// (p99 makespan vs `slo.task_ms`), not per-request TTFT.
+    FanOut(Vec<usize>),
 }
 
 impl SweepAxis {
@@ -58,6 +65,7 @@ impl SweepAxis {
             SweepAxis::AgentCount(_) => "agent-count",
             SweepAxis::MixRatio(_) => "mix-ratio",
             SweepAxis::KvBlocks(_) => "kv-blocks",
+            SweepAxis::FanOut(_) => "fan-out",
         }
     }
 
@@ -68,6 +76,7 @@ impl SweepAxis {
             SweepAxis::AgentCount(_) => "agents",
             SweepAxis::MixRatio(_) => "fraction",
             SweepAxis::KvBlocks(_) => "blocks",
+            SweepAxis::FanOut(_) => "degree",
         }
     }
 
@@ -78,6 +87,7 @@ impl SweepAxis {
             SweepAxis::AgentCount(v) => v.len(),
             SweepAxis::MixRatio(v) => v.len(),
             SweepAxis::KvBlocks(v) => v.len(),
+            SweepAxis::FanOut(v) => v.len(),
         }
     }
 
@@ -92,6 +102,7 @@ impl SweepAxis {
             SweepAxis::AgentCount(v) => v[i] as f64,
             SweepAxis::MixRatio(v) => v[i],
             SweepAxis::KvBlocks(v) => v[i] as f64,
+            SweepAxis::FanOut(v) => v[i] as f64,
         }
     }
 }
@@ -162,6 +173,23 @@ impl SweepSpec {
                     );
                 }
             }
+            SweepAxis::FanOut(ds) => {
+                let wf = self.base.workflow.as_ref();
+                anyhow::ensure!(
+                    wf.is_some(),
+                    "fan-out sweep needs a workflow-carrying base scenario ('{}' has none)",
+                    self.base.name
+                );
+                anyhow::ensure!(
+                    wf.is_some_and(|w| w.spec.nodes.iter().any(|n| n.count > 1)),
+                    "fan-out sweep needs a replicated node (count > 1) in workflow '{}' — \
+                     otherwise every grid point runs the same degree",
+                    self.base.name
+                );
+                for &d in ds {
+                    anyhow::ensure!(d >= 1, "fan-out degree must be >= 1");
+                }
+            }
         }
         Ok(())
     }
@@ -188,6 +216,12 @@ impl SweepSpec {
             SweepAxis::KvBlocks(bs) => {
                 let base_kv = sc.kv.unwrap_or_default();
                 sc.kv = Some(KvConfig { num_blocks: bs[i], ..base_kv });
+            }
+            SweepAxis::FanOut(ds) => {
+                sc.workflow
+                    .as_mut()
+                    .expect("validate(): fan-out sweeps carry a workflow")
+                    .fan_out = Some(ds[i]);
             }
         }
         sc
@@ -218,6 +252,7 @@ impl SweepSpec {
                     total_sessions: 2000,
                     n_agents: 2000,
                     kv: None,
+                    workflow: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -238,6 +273,7 @@ impl SweepSpec {
                     total_sessions: 250,
                     n_agents: 250,
                     kv: None,
+                    workflow: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -258,6 +294,7 @@ impl SweepSpec {
                     total_sessions: 200,
                     n_agents: 200,
                     kv: None,
+                    workflow: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
             },
@@ -279,8 +316,28 @@ impl SweepSpec {
                         block_size: 16,
                         prefix_sharing: true,
                     }),
+                    workflow: None,
                 },
                 axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
+            },
+            SweepSpec {
+                name: "fanout-knee".into(),
+                description:
+                    "the parallelism knee: supervisor/worker map-reduce tasks swept across \
+                     worker fan-out, judged on the task SLO (p99 makespan)"
+                        .into(),
+                base: Scenario {
+                    name: "fanout-fleet".into(),
+                    description: "open-loop supervisor/worker tasks; the sweep sets the \
+                                  fan-out degree"
+                        .into(),
+                    ..WorkflowLoad::new(
+                        WorkflowSpec::by_name("supervisor-worker")
+                            .expect("registry workflow exists"),
+                    )
+                    .carrier(24, 0.4)
+                },
+                axis: SweepAxis::FanOut(vec![2, 4, 8, 16]),
             },
         ]
     }
@@ -312,6 +369,9 @@ pub struct PolicyPoint {
     pub evictions: u64,
     pub preemptions: u64,
     pub stall_p99_ms: f64,
+    /// Workflow task metrics (zeros on plain session scenarios).
+    pub makespan_p99_ms: f64,
+    pub task_slo_rate: f64,
 }
 
 impl PolicyPoint {
@@ -319,6 +379,10 @@ impl PolicyPoint {
         let (radix_hit_rate, evictions, preemptions, stall_p99_ms) = match &out.kv {
             Some(kv) => (kv.radix_hit_rate(), kv.evictions, kv.preemptions, kv.stalls.p99),
             None => (0.0, 0, 0, 0.0),
+        };
+        let (makespan_p99_ms, task_slo_rate) = match &out.workflow {
+            Some(wf) => (wf.makespan.p99, wf.rate()),
+            None => (0.0, 0.0),
         };
         Self {
             policy: out.policy_name.clone(),
@@ -336,6 +400,8 @@ impl PolicyPoint {
             evictions,
             preemptions,
             stall_p99_ms,
+            makespan_p99_ms,
+            task_slo_rate,
         }
     }
 
@@ -356,6 +422,8 @@ impl PolicyPoint {
             ("evictions", self.evictions.into()),
             ("preemptions", self.preemptions.into()),
             ("stall_p99_ms", self.stall_p99_ms.into()),
+            ("makespan_p99_ms", self.makespan_p99_ms.into()),
+            ("task_slo_rate", self.task_slo_rate.into()),
         ])
     }
 }
@@ -398,6 +466,8 @@ pub struct SweepReport {
     pub gpu: String,
     pub slo_ttft_ms: f64,
     pub slo_tpot_ms: f64,
+    /// Task deadline judged by the fan-out axis (workflow scenarios).
+    pub slo_task_ms: f64,
     pub base_seed: u64,
     pub points: Vec<SweepPoint>,
     /// Per policy (in run order): the knee point, if any (see [`knee_value`]).
@@ -414,6 +484,7 @@ impl SweepReport {
             ("gpu", self.gpu.as_str().into()),
             ("slo_ttft_ms", self.slo_ttft_ms.into()),
             ("slo_tpot_ms", self.slo_tpot_ms.into()),
+            ("slo_task_ms", self.slo_task_ms.into()),
             // String for the same exact-u64 reason as the per-point seeds.
             ("base_seed", self.base_seed.to_string().into()),
             (
@@ -448,12 +519,12 @@ impl SweepReport {
         let mut out = String::from(
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
-             radix_hit_rate,evictions,preemptions,stall_p99_ms\n",
+             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -472,7 +543,9 @@ impl SweepReport {
                     pp.radix_hit_rate,
                     pp.evictions,
                     pp.preemptions,
-                    pp.stall_p99_ms
+                    pp.stall_p99_ms,
+                    pp.makespan_p99_ms,
+                    pp.task_slo_rate
                 ));
             }
         }
@@ -514,6 +587,17 @@ pub fn knee_value_kv(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64)
         .map(|pt| pt.axis_value)
 }
 
+/// The *task* knee for policy `policy_idx` on an ascending fan-out grid:
+/// the smallest degree whose p99 task makespan exceeds `task_slo_ms`
+/// (`None` when every degree meets the task SLO). Fan-out scales the work
+/// a join must absorb, so the load axis semantics (first violation) apply.
+pub fn knee_value_task(points: &[SweepPoint], policy_idx: usize, task_slo_ms: f64) -> Option<f64> {
+    points
+        .iter()
+        .find(|pt| pt.per_policy[policy_idx].makespan_p99_ms > task_slo_ms)
+        .map(|pt| pt.axis_value)
+}
+
 /// Execute the full grid: every point under every policy, timeline-free.
 ///
 /// Fully deterministic in `(cfg, spec, policies, base_seed)`; all policies
@@ -550,6 +634,7 @@ pub fn run_sweep(
         .map(|(pi, p)| {
             let knee = match &spec.axis {
                 SweepAxis::KvBlocks(_) => knee_value_kv(&points, pi, cfg.slo.ttft_ms),
+                SweepAxis::FanOut(_) => knee_value_task(&points, pi, cfg.slo.task_ms),
                 _ => knee_value(&points, pi, cfg.slo.ttft_ms),
             };
             (p.name().to_string(), knee)
@@ -563,6 +648,7 @@ pub fn run_sweep(
         gpu: cfg.gpu.kind.name().to_string(),
         slo_ttft_ms: cfg.slo.ttft_ms,
         slo_tpot_ms: cfg.slo.tpot_ms,
+        slo_task_ms: cfg.slo.task_ms,
         base_seed,
         points,
         knees,
@@ -676,6 +762,7 @@ mod tests {
             gpu: "g".into(),
             slo_ttft_ms: 1.0,
             slo_tpot_ms: 1.0,
+            slo_task_ms: 1.0,
             base_seed: u64::MAX,
             points: vec![SweepPoint {
                 axis_value: 1.0,
@@ -708,6 +795,8 @@ mod tests {
             evictions: 0,
             preemptions: 0,
             stall_p99_ms: 0.0,
+            makespan_p99_ms: 0.0,
+            task_slo_rate: 0.0,
         }
     }
 
@@ -738,6 +827,38 @@ mod tests {
         assert_eq!(knee_value_kv(&points, 0, 100.0), Some(4096.0));
         assert_eq!(knee_value_kv(&points, 0, 20.0), Some(16384.0));
         assert_eq!(knee_value_kv(&points, 0, 1000.0), None);
+    }
+
+    #[test]
+    fn task_knee_is_first_makespan_violation() {
+        let mut points = points_with(&[(2.0, 0.0), (4.0, 0.0), (8.0, 0.0)]);
+        for (pt, m) in points.iter_mut().zip([5_000.0, 20_000.0, 90_000.0]) {
+            pt.per_policy[0].makespan_p99_ms = m;
+        }
+        assert_eq!(knee_value_task(&points, 0, 30_000.0), Some(8.0));
+        assert_eq!(knee_value_task(&points, 0, 10_000.0), Some(4.0));
+        assert_eq!(knee_value_task(&points, 0, 100_000.0), None);
+    }
+
+    #[test]
+    fn fan_out_axis_overrides_the_workflow_degree() {
+        let spec = SweepSpec::by_name("fanout-knee").unwrap();
+        spec.validate().unwrap();
+        let sc = spec.scenario_at(2);
+        assert_eq!(sc.workflow.as_ref().unwrap().fan_out, Some(8));
+        assert_eq!(
+            sc.workflow.as_ref().unwrap().effective_spec().sessions_per_task(),
+            9,
+            "8 workers + the supervisor"
+        );
+        // A fan-out grid over a plain (non-workflow) base is rejected.
+        let mut bad = SweepSpec::by_name("agent-scaling").unwrap();
+        bad.axis = SweepAxis::FanOut(vec![2, 4]);
+        assert!(bad.validate().is_err());
+        // Degree 0 is rejected.
+        let mut bad = SweepSpec::by_name("fanout-knee").unwrap();
+        bad.axis = SweepAxis::FanOut(vec![0, 2]);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

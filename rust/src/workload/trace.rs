@@ -43,17 +43,24 @@ impl SessionStep {
 
 impl SessionScript {
     pub fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("id", self.id.into()),
             ("kind", self.kind.tag().into()),
             ("cold_prefill_tokens", self.cold_prefill_tokens.into()),
             ("template", self.template.into()),
-            ("first_decode_tokens", self.first_decode_tokens.into()),
-            (
-                "steps",
-                Value::Arr(self.steps.iter().map(|s| s.to_value()).collect()),
-            ),
-        ])
+        ];
+        // Only workflow-compiled scripts carry a unique suffix; omitting
+        // the zero default keeps legacy traces (and the golden snapshot)
+        // byte-identical.
+        if self.unique_prompt_tokens > 0 {
+            fields.push(("unique_prompt_tokens", self.unique_prompt_tokens.into()));
+        }
+        fields.push(("first_decode_tokens", self.first_decode_tokens.into()));
+        fields.push((
+            "steps",
+            Value::Arr(self.steps.iter().map(|s| s.to_value()).collect()),
+        ));
+        Value::obj(fields)
     }
 
     pub fn from_value(v: &Value) -> crate::Result<Self> {
@@ -67,6 +74,10 @@ impl SessionScript {
             kind: v.req_str("kind")?.parse()?,
             cold_prefill_tokens: v.req_f64("cold_prefill_tokens")? as u32,
             template: v.req_f64("template")? as u32,
+            unique_prompt_tokens: v
+                .get("unique_prompt_tokens")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0) as u32,
             first_decode_tokens: v.req_f64("first_decode_tokens")? as u32,
             steps,
         })

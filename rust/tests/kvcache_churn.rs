@@ -146,6 +146,7 @@ fn scaled_pressure_fleet() -> Scenario {
         total_sessions: 300,
         n_agents: 300,
         kv: Some(KvConfig { num_blocks: 1024, block_size: 16, prefix_sharing: true }),
+        workflow: None,
     }
 }
 
@@ -254,6 +255,7 @@ fn kv_blocks_sweep_detects_a_memory_knee() {
             total_sessions: 20,
             n_agents: 20,
             kv: None,
+            workflow: None,
         },
         axis: SweepAxis::KvBlocks(vec![640, 262_144]),
     };

@@ -285,6 +285,7 @@ mod arrivals {
             total_sessions: n,
             n_agents: 4,
             kv: None,
+            workflow: None,
         }
     }
 

@@ -24,6 +24,7 @@ fn small_open_loop(sessions: usize) -> Scenario {
         total_sessions: sessions,
         n_agents: sessions,
         kv: None,
+        workflow: None,
     }
 }
 

@@ -1,0 +1,233 @@
+//! Workflow DAG engine regression suite (tier-1): byte-determinism, the
+//! degenerate single-agent equality contract (workflow path == legacy
+//! session-script path, byte-for-byte), join-barrier token conservation
+//! under every paper policy, dependency-driven arrival ordering, radix
+//! prefix sharing across fan-out, and the fan-out sweep axis.
+
+use agentserve::config::{Config, GpuKind, KvConfig, ModelKind};
+use agentserve::engine::{run_scenario, Policy};
+use agentserve::workflow::{compile, WorkflowLoad, WorkflowSpec};
+use agentserve::workload::{
+    run_sweep, ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
+};
+
+fn cfg() -> Config {
+    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+}
+
+/// Open-loop carrier releasing `tasks` instances of a registry workflow.
+fn wf_scenario(spec_name: &str, tasks: usize, rate: f64) -> Scenario {
+    Scenario {
+        name: format!("wf-{spec_name}"),
+        ..WorkflowLoad::new(WorkflowSpec::by_name(spec_name).expect("registry workflow"))
+            .carrier(tasks, rate)
+    }
+}
+
+#[test]
+fn workflow_runs_are_byte_deterministic() {
+    let cfg = cfg();
+    let sc = wf_scenario("supervisor-worker", 4, 0.5);
+    sc.validate().unwrap();
+    let policy = Policy::AgentServe(Default::default());
+    let a = run_scenario(&cfg, policy, &sc, 7);
+    let b = run_scenario(&cfg, policy, &sc, 7);
+    assert_eq!(
+        a.report.to_value().to_string(),
+        b.report.to_value().to_string(),
+        "same (scenario, seed) must serialize byte-identically"
+    );
+    let (awf, bwf) = (a.workflow.unwrap(), b.workflow.unwrap());
+    assert_eq!(awf.to_value().to_string(), bwf.to_value().to_string());
+    assert_eq!(a.arrivals_us, b.arrivals_us);
+    // A different seed must actually change the workload.
+    let c = run_scenario(&cfg, policy, &sc, 8);
+    assert_ne!(a.report.to_value().to_string(), c.report.to_value().to_string());
+}
+
+#[test]
+fn degenerate_single_react_matches_legacy_byte_identically() {
+    // The single-node workflow must reproduce the legacy session-script
+    // path exactly: same scripts, same arrivals, same simulated bytes.
+    let cfg = cfg();
+    let tasks = 8;
+    let wf = wf_scenario("single-react", tasks, 1.0);
+    let legacy = Scenario {
+        name: "wf-single-react".into(),
+        description: String::new(),
+        arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+        total_sessions: tasks,
+        n_agents: tasks,
+        kv: None,
+        workflow: None,
+    };
+    for policy in Policy::paper_lineup() {
+        let a = run_scenario(&cfg, policy, &wf, 7);
+        let b = run_scenario(&cfg, policy, &legacy, 7);
+        assert_eq!(
+            a.report.to_value().to_string(),
+            b.report.to_value().to_string(),
+            "{}: degenerate workflow must match the legacy path byte-for-byte",
+            policy.name()
+        );
+        assert_eq!(a.slo.attained, b.slo.attained, "{}", policy.name());
+        assert_eq!(a.arrivals_us, b.arrivals_us, "{}", policy.name());
+        assert_eq!(a.eta_cold, b.eta_cold, "{}", policy.name());
+        // Only the workflow run carries task metrics; one task per session.
+        let wf_report = a.workflow.expect("workflow path reports tasks");
+        assert!(b.workflow.is_none(), "legacy path reports no task metrics");
+        assert_eq!(wf_report.tasks, tasks);
+        assert_eq!(wf_report.completed_tasks, tasks);
+    }
+}
+
+#[test]
+fn join_barriers_conserve_every_fanout_token() {
+    // Every scripted decode token of every fan-out branch is emitted
+    // exactly once, under every policy, for every registry workflow shape.
+    let cfg = cfg();
+    for spec_name in ["supervisor-worker", "debate", "pipeline-chain"] {
+        let sc = wf_scenario(spec_name, 3, 1.0);
+        sc.validate().unwrap();
+        let compiled = compile(&sc, cfg.model.kind, 7);
+        let expected: u64 = compiled.scripts.iter().map(|s| s.total_decode_tokens()).sum();
+        for policy in Policy::paper_lineup() {
+            let out = run_scenario(&cfg, policy, &sc, 7);
+            assert_eq!(
+                out.report.completed_sessions,
+                compiled.scripts.len(),
+                "{spec_name}/{}: every session completes",
+                policy.name()
+            );
+            assert_eq!(
+                out.report.total_tokens,
+                expected,
+                "{spec_name}/{}: decode tokens conserved across the DAG",
+                policy.name()
+            );
+            let wf = out.workflow.expect("workflow metrics present");
+            assert_eq!(wf.tasks, 3, "{spec_name}/{}", policy.name());
+            assert_eq!(wf.completed_tasks, 3, "{spec_name}/{}", policy.name());
+            assert_eq!(wf.makespan.n, 3, "{spec_name}/{}", policy.name());
+            assert_eq!(wf.critical_path.n, 3, "{spec_name}/{}", policy.name());
+            assert!(wf.makespan.p99 > 0.0, "{spec_name}/{}", policy.name());
+            assert!(wf.critical_path.p50 > 0.0, "{spec_name}/{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn dependent_sessions_arrive_only_after_their_join_resolves() {
+    // Supervisor/worker: workers are released by the supervisor's first
+    // burst completing plus the folded 120 ms dispatch-tool delay — the
+    // dependency-driven arrival source, observable in realized arrivals.
+    let cfg = cfg();
+    let tasks = 3;
+    let sc = wf_scenario("supervisor-worker", tasks, 1.0);
+    for policy in [Policy::Vllm, Policy::AgentServe(Default::default())] {
+        let out = run_scenario(&cfg, policy, &sc, 7);
+        for t in 0..tasks {
+            let supervisor = 5 * t;
+            for w in 1..5 {
+                assert!(
+                    out.arrivals_us[supervisor + w] >= out.arrivals_us[supervisor] + 120_000,
+                    "{}: worker {} of task {} arrived at {} before its join \
+                     (supervisor cold at {})",
+                    policy.name(),
+                    w,
+                    t,
+                    out.arrivals_us[supervisor + w],
+                    out.arrivals_us[supervisor]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_kv_pool_cannot_stall_parked_joins() {
+    // Parked supervisors hold resident contexts while their young workers
+    // wait for admission — the age-ordered preemption rule alone would
+    // leave that circular wait unbreakable (old sessions are normally
+    // untouchable). Parked sessions are preemption-eligible regardless of
+    // age, so even the minimum legal pool (8,192 tokens, sharing off to
+    // maximize pressure) must drain completely with tokens conserved.
+    let mut cfg = cfg();
+    cfg.kv = KvConfig { num_blocks: 512, block_size: 16, prefix_sharing: false };
+    let sc = wf_scenario("supervisor-worker", 6, 4.0);
+    let compiled = compile(&sc, cfg.model.kind, 7);
+    let expected: u64 = compiled.scripts.iter().map(|s| s.total_decode_tokens()).sum();
+    for policy in Policy::paper_lineup() {
+        let out = run_scenario(&cfg, policy, &sc, 7);
+        assert_eq!(
+            out.report.completed_sessions,
+            compiled.scripts.len(),
+            "{}: every session must finish under pressure (no parked-join stall)",
+            policy.name()
+        );
+        assert_eq!(out.report.total_tokens, expected, "{}", policy.name());
+        let wf = out.workflow.expect("workflow metrics");
+        assert_eq!(wf.completed_tasks, 6, "{}", policy.name());
+    }
+}
+
+#[test]
+fn fanout_prompts_share_the_radix_cache() {
+    // With prefix sharing on a generous pool, workflow templates (shared
+    // across tasks) and worker agent templates both produce radix hits —
+    // the realistic shared-prefix fan-out shape the KV path is built for.
+    let mut cfg = cfg();
+    cfg.kv = KvConfig { num_blocks: 1 << 20, block_size: 16, prefix_sharing: true };
+    let sc = wf_scenario("supervisor-worker", 4, 1.0);
+    let out = run_scenario(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    let kv = out.kv.expect("sharing runs the paged path");
+    assert!(
+        kv.radix_hit_tokens > 0,
+        "replicated workers and repeated supervisor prompts must share prefixes"
+    );
+    assert_eq!(out.workflow.unwrap().completed_tasks, 4);
+}
+
+#[test]
+fn fanout_axis_scales_task_load_under_all_policies() {
+    // An ascending fan-out grid strictly increases the work behind every
+    // join; p99 makespan must follow, for each of the four paper policies,
+    // and the sweep must stay byte-deterministic.
+    let cfg = cfg();
+    let spec = SweepSpec {
+        name: "fan-test".into(),
+        description: String::new(),
+        base: wf_scenario("supervisor-worker", 4, 0.4),
+        axis: SweepAxis::FanOut(vec![2, 8]),
+    };
+    spec.validate().unwrap();
+    let policies = Policy::paper_lineup();
+    let report = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    let again = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(report.to_value().to_string(), again.to_value().to_string());
+    assert_eq!(report.axis, "fan-out");
+    assert_eq!(report.points.len(), 2);
+    assert_eq!(report.knees.len(), policies.len());
+    for (pi, policy) in policies.iter().enumerate() {
+        let narrow = &report.points[0].per_policy[pi];
+        let wide = &report.points[1].per_policy[pi];
+        assert!(narrow.makespan_p99_ms > 0.0, "{}", policy.name());
+        assert!(
+            wide.makespan_p99_ms > narrow.makespan_p99_ms,
+            "{}: quadrupling the fan-out must raise p99 makespan ({} vs {})",
+            policy.name(),
+            wide.makespan_p99_ms,
+            narrow.makespan_p99_ms
+        );
+        assert!(
+            (0.0..=1.0).contains(&narrow.task_slo_rate),
+            "{}: task-SLO rate is a fraction",
+            policy.name()
+        );
+    }
+    // The CSV stays in lock-step with the JSON and carries the task columns.
+    let csv = report.to_csv();
+    assert!(csv.lines().next().unwrap().contains("makespan_p99_ms,task_slo_rate"));
+    assert_eq!(csv.lines().count(), 1 + 2 * policies.len());
+}
