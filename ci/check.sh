@@ -97,5 +97,26 @@ cargo run --release --bin agentserve -- \
 grep -q '"axis": "fan-out"' "$tmp/fan.json"
 grep -q 'makespan_p99_ms' "$tmp/fan.csv"
 
+step "Cluster smoke (4-replica fleet, cache-aware router, every policy)"
+cargo run --release --bin agentserve -- \
+    cluster run --name shared-prefix-fleet --replicas 4 --model 3b \
+    --router cache-aware
+cargo run --release --bin agentserve -- \
+    cluster run --name mixed-fleet --replicas 4 --model 3b --all-policies
+
+step "gpus-for-slo sweep smoke (3-point registry fleet sweep, inverse knee)"
+cargo run --release --bin agentserve -- \
+    cluster sweep --name gpus-for-slo --policy agentserve --model 3b \
+    --out "$tmp/fleet.json" --csv "$tmp/fleet.csv"
+[ -s "$tmp/fleet.json" ] && [ -s "$tmp/fleet.csv" ]
+grep -q '"axis": "replicas"' "$tmp/fleet.json"
+grep -q 'load_cov' "$tmp/fleet.csv"
+# The acceptance bar: a finite fleet holds the SLO at a rate past the
+# single-GPU knee — the inverse knee must not be null.
+if grep -q '"knee": null' "$tmp/fleet.json"; then
+    echo "ERROR: gpus-for-slo found no compliant fleet size in the grid" >&2
+    exit 1
+fi
+
 echo ""
 echo "ci/check.sh: all green"

@@ -1,0 +1,65 @@
+//! Fleet-scale bench: wall-clock of the interleaved multi-replica loop at
+//! 1 → 8 replicas × 2,000 open-loop agents, so fleet-loop overhead (the
+//! per-event global merge scan, routing probes, completion drains) is
+//! tracked the same way `sweep_scale` tracks the single-GPU hot path.
+//!
+//! The acceptance bar: the `gpus-for-slo` registry sweep (3 points, 2,000
+//! agents each) stays comfortably inside the ci/check.sh smoke budget, and
+//! fleet overhead stays a small multiple of the summed single-replica work
+//! (the loop is O(events × replicas) in the merge scan).
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::{Config, GpuKind, ModelKind, RouterPolicy};
+use agentserve::engine::Policy;
+use agentserve::util::bench::Bench;
+use agentserve::workload::{SweepAxis, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+    // The gpus-for-slo base: 2,000 single-session ReAct agents at 1.0/s —
+    // past one GPU's knee, the load the fleet layer exists to absorb.
+    let spec = SweepSpec::by_name("gpus-for-slo").expect("registry sweep");
+    let scenario = spec.base.clone();
+    let router = match spec.axis {
+        SweepAxis::Replicas { router, .. } => router,
+        _ => RouterPolicy::CacheAware,
+    };
+
+    let b = Bench::new("fleet_scale").with_iters(1, 2);
+    for replicas in [1usize, 2, 4, 8] {
+        let label = format!("replicas_{replicas}_2000_agents");
+        b.case(&label, || {
+            run_cluster_fast(
+                &cfg,
+                Policy::AgentServe(Default::default()),
+                &scenario,
+                replicas,
+                router,
+                7,
+            )
+            .expect("fleet runs")
+            .report
+            .total_tokens
+        });
+    }
+
+    // Router comparison at a fixed fleet size: the probe-cost delta
+    // between state-blind and state-reading policies.
+    for router in RouterPolicy::ALL {
+        let label = format!("router_{}_4_replicas", router.name());
+        b.case(&label, || {
+            run_cluster_fast(
+                &cfg,
+                Policy::AgentServe(Default::default()),
+                &scenario,
+                4,
+                router,
+                7,
+            )
+            .expect("fleet runs")
+            .report
+            .total_tokens
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,413 @@
+//! The fleet loop: N replica simulators on one shared virtual clock behind
+//! a session router.
+//!
+//! A fleet run is a deterministic three-way merge:
+//!
+//! 1. **Fleet arrivals** — the scenario's arrival plan, plus arrivals the
+//!    run itself creates: closed-loop agents chain their next session
+//!    `think_time` after the previous completes, and workflow dependents
+//!    are released when their fleet-wide join barrier resolves. Each
+//!    arrival is routed *at its timestamp* against the replicas' live load
+//!    surfaces and injected into the chosen [`SimDriver`].
+//! 2. **Replica events** — each replica advances one event at a time; the
+//!    loop always processes the globally earliest thing (arrivals win
+//!    exact-timestamp ties, mirroring the simulator's low sequence band
+//!    for injected arrivals; replica ties resolve by index).
+//! 3. **Completions** — burst/session completions drain back to the fleet
+//!    after every step, resolving workflow gates *fleet-wide*: a join's
+//!    workers may live on different replicas than the supervisor they
+//!    release ([`SimDriver::open_step_gate`]).
+//!
+//! With one replica and an open-loop scenario this machinery collapses to
+//! exactly the batch event order, so `run_cluster(.., 1, ..)` reproduces
+//! [`crate::engine::run_scenario`] byte-for-byte under every router — the
+//! lock that keeps the `SimDriver` refactor a pure refactor
+//! (`rust/tests/cluster.rs`). Closed-loop and workflow scenarios re-route
+//! fleet-created arrivals at their own timestamps, which can order
+//! differently from the batch path only when such an arrival collides with
+//! an internal event on the exact microsecond (see
+//! `docs/ARCHITECTURE.md` § Fleet layer).
+
+use super::router::Router;
+use crate::config::{Config, RouterPolicy};
+use crate::engine::sim::task_critical_paths_ms;
+use crate::engine::{DriverEvent, Policy, SimDriver, SimOutcome};
+use crate::gpusim::CostModel;
+use crate::metrics::{load_cov, FleetReport, SloReport, Summary, WorkflowReport};
+use crate::workflow::WorkflowPlan;
+use crate::workload::{Scenario, SessionScript};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Results of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub policy_name: String,
+    pub router: RouterPolicy,
+    pub replicas: usize,
+    /// Fleet-level aggregation (the headline surface).
+    pub report: FleetReport,
+    /// Each replica's own outcome, in replica order.
+    pub per_replica: Vec<SimOutcome>,
+    /// Replica index per global session (the routing record).
+    pub placements: Vec<usize>,
+}
+
+/// Fleet-side workflow orchestration: gate counters over the compiled
+/// [`WorkflowPlan`], resolved from completions across *all* replicas.
+struct WfFleet {
+    plan: WorkflowPlan,
+    /// Unresolved arrival-gate dependencies per session.
+    arr_remaining: Vec<usize>,
+    /// Unresolved step-gate dependencies per (session, step).
+    step_remaining: Vec<Vec<usize>>,
+    /// Unfinished sessions per task.
+    task_left: Vec<usize>,
+    /// Completion timestamp per task.
+    task_done_us: Vec<Option<u64>>,
+    /// Ideal critical-path lower bound per task (ms) — same cost model on
+    /// every (homogeneous) replica.
+    task_cp_ms: Vec<f64>,
+}
+
+/// Run a scenario on an `n_replicas`-GPU fleet under `router` (timeline
+/// retained per replica, like [`crate::engine::run_scenario`]).
+pub fn run_cluster(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    n_replicas: usize,
+    router: RouterPolicy,
+    seed: u64,
+) -> crate::Result<FleetOutcome> {
+    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, false)
+}
+
+/// [`run_cluster`] without per-token timeline retention — the fleet-sweep
+/// hot path. Aggregates are byte-identical to [`run_cluster`].
+pub fn run_cluster_fast(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    n_replicas: usize,
+    router: RouterPolicy,
+    seed: u64,
+) -> crate::Result<FleetOutcome> {
+    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, true)
+}
+
+/// The affinity-unit key of one global session: closed-loop agent slot, or
+/// owning workflow task. Independent open-loop sessions have none.
+fn unit_key(g: usize, chain: Option<(usize, u64)>, wf: Option<&WfFleet>) -> Option<u64> {
+    if let Some((stride, _)) = chain {
+        return Some((g % stride) as u64);
+    }
+    wf.map(|w| w.plan.task_of[g] as u64)
+}
+
+fn run_cluster_inner(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    n_replicas: usize,
+    router_policy: RouterPolicy,
+    seed: u64,
+    fast: bool,
+) -> crate::Result<FleetOutcome> {
+    anyhow::ensure!(n_replicas >= 1, "a fleet needs at least one replica");
+    scenario.validate()?;
+    let cfg = scenario.effective_config(cfg);
+
+    // -- 1) lower the scenario into scripts + the fleet arrival plan --------
+    // `chain` = closed-loop chaining (stride, think time); `wf` = fleet-wide
+    // workflow gates. `seeds` are the unconditional (wave-0 / root /
+    // open-loop) arrivals in session-index order.
+    let mut chain: Option<(usize, u64)> = None;
+    let mut wf: Option<WfFleet> = None;
+    let (scripts, seeds): (Vec<SessionScript>, Vec<(usize, u64)>) = if scenario.workflow.is_some()
+    {
+        let cw = crate::workflow::compile(scenario, cfg.model.kind, seed);
+        let cost = CostModel::new(&cfg.model, &cfg.gpu);
+        let seeds = cw.plan.root_arrivals();
+        // Same gate initialization as the in-simulator WfState — both sides
+        // call the shared WorkflowPlan helpers, so semantics cannot drift.
+        wf = Some(WfFleet {
+            arr_remaining: cw.plan.initial_arrival_gates(),
+            step_remaining: cw.plan.initial_step_gates(),
+            task_left: cw.plan.task_session_counts(),
+            task_done_us: vec![None; cw.plan.n_tasks],
+            task_cp_ms: task_critical_paths_ms(&cost, &cw.scripts, &cw.plan),
+            plan: cw.plan,
+        });
+        (cw.scripts, seeds)
+    } else {
+        let wl = scenario.instantiate(cfg.model.kind, seed);
+        let (scripts, arrivals): (Vec<_>, Vec<_>) = wl
+            .trace
+            .events
+            .into_iter()
+            .map(|e| (e.script, e.arrival_us))
+            .unzip();
+        let seeds = match scenario.closed_loop() {
+            Some((stagger_us, think_time_us)) => {
+                // Wave 0 staggered across the agent slots; waves > 0 chain
+                // at fleet level (each re-routed at its arrival timestamp).
+                let slots = scenario.n_agents.max(1);
+                chain = Some((slots, think_time_us));
+                (0..slots.min(scripts.len()))
+                    .map(|a| (a, a as u64 * stagger_us))
+                    .collect()
+            }
+            None => arrivals.iter().copied().enumerate().collect(),
+        };
+        (scripts, seeds)
+    };
+    let total = scripts.len();
+
+    // -- 2) replicas, router, fleet arrival queue ---------------------------
+    let mut drivers: Vec<SimDriver> = (0..n_replicas)
+        .map(|_| {
+            if fast {
+                SimDriver::new_fast(&cfg, policy)
+            } else {
+                SimDriver::new(&cfg, policy)
+            }
+        })
+        .collect();
+    let mut router = Router::new(router_policy);
+    // (time, fleet-seq, global session): seq makes equal-time arrivals pop
+    // in creation order — seed order first, then fleet-created arrivals.
+    let mut queue: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    let mut fseq: u64 = 0;
+    for &(g, t) in &seeds {
+        queue.push(Reverse((t, fseq, g)));
+        fseq += 1;
+    }
+
+    let mut placements = vec![usize::MAX; total];
+    let mut local_of = vec![usize::MAX; total];
+    let mut local2global: Vec<Vec<usize>> = vec![Vec::new(); n_replicas];
+    let mut injected = 0usize;
+    let mut finished = vec![false; n_replicas];
+    let mut events: Vec<DriverEvent> = Vec::new();
+    // Prompt ids are only materialized when the cache-aware router can use
+    // them (radix cache live on the paged path with sharing on). Same-
+    // template prompts are one deterministic stream — a shorter prompt is a
+    // prefix of a longer one — so the longest materialized vector per
+    // template is cached and sliced instead of regenerated per arrival
+    // (sessions with per-task unique suffixes bypass the cache).
+    let want_prompt =
+        router_policy == RouterPolicy::CacheAware && cfg.kv.is_paged() && cfg.kv.prefix_sharing;
+    let mut prompt_cache: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+
+    // -- 3) the lockstep merge loop ----------------------------------------
+    loop {
+        let t_arr = queue.peek().map(|Reverse((t, _, _))| *t);
+        let mut t_rep: Option<(u64, usize)> = None;
+        for (r, d) in drivers.iter().enumerate() {
+            if finished[r] {
+                continue;
+            }
+            if let Some(t) = d.next_event_us() {
+                if t_rep.is_none_or(|(bt, _)| t < bt) {
+                    t_rep = Some((t, r));
+                }
+            }
+        }
+        // Arrivals win exact-time ties: injected arrivals sit in the low
+        // sequence band of the replica heap, so the replica would order
+        // them first anyway — the fleet must have routed them by then.
+        let take_arrival = match (t_arr, t_rep) {
+            (None, None) => break,
+            (Some(ta), Some((tr, _))) => ta <= tr,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+        };
+        if take_arrival {
+            let Reverse((t, _, g)) = queue.pop().expect("peeked above");
+            let unit = unit_key(g, chain, wf.as_ref());
+            let unique_buf: Vec<u32>;
+            let prompt: Option<&[u32]> = if want_prompt {
+                let s = &scripts[g];
+                if s.unique_prompt_tokens == 0 {
+                    let entry = prompt_cache.entry(s.template).or_default();
+                    if entry.len() < s.cold_prefill_tokens as usize {
+                        *entry = s.system_prompt_ids();
+                    }
+                    Some(&entry[..s.cold_prefill_tokens as usize])
+                } else {
+                    unique_buf = s.system_prompt_ids();
+                    Some(&unique_buf)
+                }
+            } else {
+                None
+            };
+            let r = router.route(unit, prompt, &drivers);
+            let gated: Vec<usize> = wf
+                .as_ref()
+                .map(|w| {
+                    w.step_remaining[g]
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &c)| c > 0)
+                        .map(|(i, _)| i)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let local = drivers[r].inject(scripts[g].clone(), t, &gated);
+            debug_assert_eq!(local, local2global[r].len());
+            placements[g] = r;
+            local_of[g] = local;
+            local2global[r].push(g);
+            injected += 1;
+            if injected == total {
+                for (r, d) in drivers.iter_mut().enumerate() {
+                    d.set_no_more_arrivals();
+                    finished[r] = d.all_done(); // replicas that got nothing
+                }
+            }
+            continue;
+        }
+        let (_, r) = t_rep.expect("one side is Some");
+        if !drivers[r].step() {
+            finished[r] = true;
+            continue;
+        }
+        drivers[r].drain_events(&mut events);
+        for ev in events.drain(..) {
+            match ev {
+                DriverEvent::BurstDone { sess, burst, t_us } => {
+                    let g = local2global[r][sess];
+                    let Some(w) = &mut wf else { continue };
+                    // One shared implementation of the decrement/release
+                    // semantics (WorkflowPlan::resolve_burst) — the fleet
+                    // only differs in *where* releases go: arrivals into
+                    // the router queue, step gates onto the holding replica.
+                    let resolved = w.plan.resolve_burst(
+                        g,
+                        burst,
+                        &mut w.arr_remaining,
+                        &mut w.step_remaining,
+                    );
+                    for (s2, delay) in resolved.arrivals {
+                        queue.push(Reverse((t_us + delay, fseq, s2)));
+                        fseq += 1;
+                    }
+                    for (s2, step) in resolved.steps {
+                        // Wake the (possibly parked) session on whichever
+                        // replica holds it; a target not yet injected
+                        // simply arrives with this gate already open.
+                        if placements[s2] != usize::MAX {
+                            drivers[placements[s2]].open_step_gate(local_of[s2], step, t_us);
+                        }
+                    }
+                }
+                DriverEvent::SessionDone { sess, t_us } => {
+                    let g = local2global[r][sess];
+                    if let Some((stride, think_us)) = chain {
+                        let next = g + stride;
+                        if next < total {
+                            queue.push(Reverse((t_us + think_us, fseq, next)));
+                            fseq += 1;
+                        }
+                    }
+                    if let Some(w) = &mut wf {
+                        let task = w.plan.task_of[g];
+                        w.task_left[task] -= 1;
+                        if w.task_left[task] == 0 {
+                            w.task_done_us[task] = Some(t_us);
+                        }
+                    }
+                }
+            }
+        }
+        if injected == total && drivers[r].all_done() {
+            finished[r] = true;
+        }
+    }
+    anyhow::ensure!(
+        injected == total && drivers.iter().all(|d| d.all_done()),
+        "fleet stalled: {injected}/{total} sessions injected, {} finished \
+         (a workflow dependency cycle or router bug)",
+        drivers.iter().filter(|d| d.all_done()).count()
+    );
+
+    // -- 4) fleet aggregation ----------------------------------------------
+    // Raw per-request samples in global session order, so fleet summaries
+    // are byte-deterministic and independent of replica interleaving.
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut tpots: Vec<f64> = Vec::new();
+    for g in 0..total {
+        let (r, l) = (placements[g], local_of[g]);
+        if let Some(s) = drivers[r].recorder().sessions_map().get(&(l as u64)) {
+            ttfts.extend_from_slice(&s.ttfts_ms);
+            tpots.extend_from_slice(&s.tpots_ms);
+        }
+    }
+    let wall_us = drivers.iter().map(|d| d.now_us()).max().unwrap_or(0);
+    let per_replica: Vec<SimOutcome> = drivers.into_iter().map(|d| d.finish()).collect();
+
+    let mut slo = SloReport { sessions: 0, attained: 0, ttft_violations: 0, tpot_violations: 0 };
+    let mut total_tokens = 0u64;
+    let mut completed = 0usize;
+    let mut per_replica_tokens = Vec::with_capacity(per_replica.len());
+    let (mut hit, mut miss, mut evictions, mut preemptions) = (0u64, 0u64, 0u64, 0u64);
+    let mut stall_p99_ms = 0.0f64;
+    for o in &per_replica {
+        slo.sessions += o.slo.sessions;
+        slo.attained += o.slo.attained;
+        slo.ttft_violations += o.slo.ttft_violations;
+        slo.tpot_violations += o.slo.tpot_violations;
+        total_tokens += o.report.total_tokens;
+        completed += o.report.completed_sessions;
+        per_replica_tokens.push(o.report.total_tokens);
+        if let Some(kv) = &o.kv {
+            hit += kv.radix_hit_tokens;
+            miss += kv.radix_miss_tokens;
+            evictions += kv.evictions;
+            preemptions += kv.preemptions;
+            stall_p99_ms = stall_p99_ms.max(kv.stalls.p99);
+        }
+    }
+    let workflow = wf.map(|w| {
+        WorkflowReport::from_task_times(
+            &w.plan.task_release_us,
+            &w.task_done_us,
+            &w.task_cp_ms,
+            cfg.slo.task_ms,
+        )
+    });
+    let wall_ms = wall_us as f64 / 1000.0;
+    let wall_s = (wall_ms / 1000.0).max(1e-9);
+    let report = FleetReport {
+        replicas: n_replicas,
+        router: router_policy.name().to_string(),
+        sessions: total,
+        completed_sessions: completed,
+        total_tokens,
+        wall_ms,
+        throughput_tok_s: total_tokens as f64 / wall_s,
+        ttft: Summary::from_samples(&ttfts),
+        tpot: Summary::from_samples(&tpots),
+        slo,
+        load_cov: load_cov(&per_replica_tokens),
+        per_replica_tokens,
+        affinity_hits: router.affinity_hits,
+        affinity_opportunities: router.affinity_opportunities,
+        radix_hit_tokens: hit,
+        radix_miss_tokens: miss,
+        evictions,
+        preemptions,
+        stall_p99_ms,
+        kv_present: cfg.kv.is_paged(),
+        workflow,
+    };
+    Ok(FleetOutcome {
+        policy_name: policy.name().to_string(),
+        router: router_policy,
+        replicas: n_replicas,
+        report,
+        per_replica,
+        placements,
+    })
+}

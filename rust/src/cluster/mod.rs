@@ -1,0 +1,38 @@
+//! Fleet layer: multi-replica cluster simulation with cache-aware routing.
+//!
+//! AgentServe stabilizes *one* consumer GPU; the ROADMAP north star is
+//! heavy traffic from millions of users, which in the SLM-on-consumer-
+//! hardware world means a **fleet** of such GPUs behind a request router.
+//! This layer drives N independent single-GPU replica simulators
+//! ([`crate::engine::SimDriver`] — the incremental stepping half of
+//! `engine/sim.rs`) on a shared virtual clock:
+//!
+//! - **Routing** — each session is routed at its arrival timestamp using
+//!   the replicas' live load surfaces ([`crate::engine::ReplicaLoad`]).
+//!   Four policies ([`RouterPolicy`]): round-robin,
+//!   least-outstanding-tokens (JSQ), session-affinity (an agent's chained
+//!   sessions and a task's sessions return to their warm replica), and
+//!   cache-aware (maximize the expected radix-prefix hit via a read-only
+//!   probe of each replica's radix cache, falling back to load).
+//! - **Fleet-wide workflow gates** — a compiled DAG's join barriers
+//!   resolve across replicas: a supervisor parked on one GPU is woken by
+//!   workers finishing on others ([`run_cluster`]'s lockstep merge loop).
+//! - **Metrics** — [`crate::metrics::FleetReport`]: fleet TTFT/TPOT/SLO,
+//!   per-replica load balance (CoV), routing affinity rate, and the
+//!   fleet-wide radix hit rate.
+//! - **Capacity planning** — the `replicas` sweep axis and the
+//!   `gpus-for-slo` registry sweep (`rust/src/workload/sweep.rs`) answer
+//!   the inverse-knee question: the smallest fleet meeting the TTFT SLO at
+//!   a fixed arrival rate.
+//!
+//! CLI: `agentserve cluster list|run|sweep`. Determinism: one
+//! `(config, scenario, policy, router, replicas, seed)` tuple fixes every
+//! byte; a 1-replica fleet over an open-loop scenario reproduces
+//! `scenario run` byte-for-byte under every router
+//! (`rust/tests/cluster.rs`).
+
+mod fleet;
+mod router;
+
+pub use crate::config::RouterPolicy;
+pub use fleet::{run_cluster, run_cluster_fast, FleetOutcome};

@@ -1,0 +1,183 @@
+//! Session routers: place each arriving session on one replica using the
+//! live load surface ([`crate::engine::ReplicaLoad`]) and, for the
+//! cache-aware policy, a read-only probe of each replica's radix cache.
+//!
+//! Determinism: every policy is a pure function of the routing history and
+//! the replicas' live state at the arrival timestamp; ties always resolve
+//! toward the lowest replica index, so a fleet run is byte-reproducible.
+
+use crate::config::RouterPolicy;
+use crate::engine::SimDriver;
+use std::collections::BTreeMap;
+
+/// The replica with the least outstanding scripted work (ties: shallower
+/// prefill queue, then lowest index).
+fn least_loaded(drivers: &[SimDriver]) -> usize {
+    drivers
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let l = d.load();
+            (l.outstanding_tokens, l.queue_depth, i)
+        })
+        .min()
+        .map(|(_, _, i)| i)
+        .expect("non-empty fleet")
+}
+
+/// Stateful router over one fleet run.
+///
+/// `homes` remembers the latest replica of each multi-session *unit* (a
+/// closed-loop agent slot or a workflow task) for the affinity policy and
+/// the affinity-rate metric: a follow-up session routed to its unit's
+/// previous replica is an affinity *hit*, whatever policy made the choice.
+pub(crate) struct Router {
+    policy: RouterPolicy,
+    rr_next: usize,
+    homes: BTreeMap<u64, usize>,
+    pub affinity_hits: u64,
+    pub affinity_opportunities: u64,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Self {
+        Self {
+            policy,
+            rr_next: 0,
+            homes: BTreeMap::new(),
+            affinity_hits: 0,
+            affinity_opportunities: 0,
+        }
+    }
+
+    /// Choose a replica for one arriving session. `unit` keys multi-session
+    /// units (None for independent open-loop sessions); `prompt` is the
+    /// session's system-prompt ids, supplied only when the cache-aware
+    /// policy can use them (paged path with prefix sharing).
+    pub fn route(
+        &mut self,
+        unit: Option<u64>,
+        prompt: Option<&[u32]>,
+        drivers: &[SimDriver],
+    ) -> usize {
+        let home = unit.and_then(|u| self.homes.get(&u).copied());
+        if home.is_some() {
+            self.affinity_opportunities += 1;
+        }
+        let choice = match self.policy {
+            RouterPolicy::RoundRobin => {
+                let c = self.rr_next % drivers.len();
+                self.rr_next += 1;
+                c
+            }
+            RouterPolicy::LeastOutstanding => least_loaded(drivers),
+            RouterPolicy::SessionAffinity => home.unwrap_or_else(|| least_loaded(drivers)),
+            RouterPolicy::CacheAware => {
+                let scores: Vec<u32> = match prompt {
+                    Some(p) => drivers.iter().map(|d| d.cached_prompt_tokens(p)).collect(),
+                    None => Vec::new(),
+                };
+                let top = scores.iter().copied().max().unwrap_or(0);
+                if top == 0 {
+                    // No cache signal anywhere: pure load decision.
+                    least_loaded(drivers)
+                } else {
+                    // Best expected radix hit; ties broken by load, index.
+                    drivers
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| scores[*i] == top)
+                        .map(|(i, d)| {
+                            let l = d.load();
+                            (l.outstanding_tokens, l.queue_depth, i)
+                        })
+                        .min()
+                        .map(|(_, _, i)| i)
+                        .expect("non-empty fleet")
+                }
+            }
+        };
+        if home == Some(choice) {
+            self.affinity_hits += 1;
+        }
+        if let Some(u) = unit {
+            self.homes.insert(u, choice);
+        }
+        choice
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, GpuKind, ModelKind};
+    use crate::engine::Policy;
+    use crate::workload::{WorkloadGenerator, WorkloadKind};
+
+    fn fleet(n: usize) -> Vec<SimDriver> {
+        let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+        (0..n).map(|_| SimDriver::new(&cfg, Policy::Vllm)).collect()
+    }
+
+    fn script(seed: u64) -> crate::workload::SessionScript {
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, ModelKind::Qwen3B, seed);
+        gen.next_session()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let drivers = fleet(3);
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(None, None, &drivers)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_replicas() {
+        let mut drivers = fleet(2);
+        let mut r = Router::new(RouterPolicy::LeastOutstanding);
+        assert_eq!(r.route(None, None, &drivers), 0, "empty fleet ties to index 0");
+        drivers[0].inject(script(1), 0, &[]);
+        assert_eq!(r.route(None, None, &drivers), 1, "replica 0 now carries work");
+    }
+
+    #[test]
+    fn affinity_pins_units_to_their_home() {
+        let mut drivers = fleet(3);
+        let mut r = Router::new(RouterPolicy::SessionAffinity);
+        let first = r.route(Some(7), None, &drivers);
+        assert_eq!(first, 0);
+        assert_eq!(r.affinity_opportunities, 0, "first placement is not an opportunity");
+        // Load up the home replica: affinity still returns there.
+        drivers[first].inject(script(2), 0, &[]);
+        let again = r.route(Some(7), None, &drivers);
+        assert_eq!(again, first);
+        assert_eq!((r.affinity_hits, r.affinity_opportunities), (1, 1));
+        // A different unit balances away.
+        assert_eq!(r.route(Some(8), None, &drivers), 1);
+    }
+
+    #[test]
+    fn cache_aware_without_signal_is_load_driven() {
+        let mut drivers = fleet(2);
+        let mut r = Router::new(RouterPolicy::CacheAware);
+        drivers[0].inject(script(3), 0, &[]);
+        // Unbounded (non-paged) replicas report no cached prefix: the
+        // policy degrades to least-outstanding.
+        let s = script(4);
+        let ids = s.system_prompt_ids();
+        assert_eq!(r.route(None, Some(&ids), &drivers), 1);
+        assert_eq!(r.route(None, None, &drivers), 1);
+    }
+
+    #[test]
+    fn affinity_metric_counts_other_policies_too() {
+        let drivers = fleet(2);
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        r.route(Some(1), None, &drivers); // -> 0 (home)
+        r.route(Some(1), None, &drivers); // -> 1 (miss)
+        r.route(Some(1), None, &drivers); // -> 0, but home moved to 1 (miss)
+        assert_eq!(r.affinity_opportunities, 2);
+        assert_eq!(r.affinity_hits, 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Fleet (multi-replica) configuration: replica count and router policy.
+//!
+//! One AgentServe instance stabilizes one consumer GPU; serving heavy
+//! traffic means a **fleet** of such replicas behind a request router
+//! (`rust/src/cluster/`). [`ClusterConfig`] is the knob surface: how many
+//! replicas, and which [`RouterPolicy`] assigns each arriving session to
+//! one of them. The default (1 replica) degenerates to the single-GPU
+//! simulator — `cluster run --replicas 1` reproduces `scenario run`
+//! byte-for-byte on open-loop scenarios (locked in
+//! `rust/tests/cluster.rs`).
+
+/// How the fleet router places each arriving session on a replica.
+///
+/// Sessions are *atomic*: every step of a session (resume prefills, decode
+/// bursts, recomputes) runs on the replica that admitted its cold prefill —
+/// the engine's KV is replica-local, so migrating a step would mean moving
+/// or recomputing the context. Routers therefore differ in where they place
+/// *new* sessions, and in whether follow-up sessions of the same agent or
+/// workflow task return to their unit's previous replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through replicas in index order, ignoring state.
+    RoundRobin,
+    /// Join-the-shortest-queue on outstanding scripted tokens (ties: queue
+    /// depth, then lowest index).
+    LeastOutstanding,
+    /// Follow-up sessions of a multi-session unit (a closed-loop agent's
+    /// chained sessions; a workflow task's sessions) return to the unit's
+    /// previous replica, where its context and prompt prefix are warm;
+    /// first placements fall back to least-outstanding.
+    SessionAffinity,
+    /// Score replicas by the radix-cached prefix length of the session's
+    /// system prompt (a read-only probe of live replica KV state) and pick
+    /// the best; with no cache signal (sharing off, or nothing cached yet)
+    /// fall back to least-outstanding.
+    CacheAware,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 4] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::SessionAffinity,
+        RouterPolicy::CacheAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastOutstanding => "least-outstanding",
+            RouterPolicy::SessionAffinity => "session-affinity",
+            RouterPolicy::CacheAware => "cache-aware",
+        }
+    }
+
+    /// One-line description for `cluster list`.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "cycle through replicas, state-blind",
+            RouterPolicy::LeastOutstanding => {
+                "JSQ on outstanding scripted tokens (live load surface)"
+            }
+            RouterPolicy::SessionAffinity => {
+                "agents/tasks return to the replica holding their warm context"
+            }
+            RouterPolicy::CacheAware => {
+                "maximize expected radix-prefix hit; fall back to load"
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for RouterPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for RouterPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Ok(RouterPolicy::RoundRobin),
+            "least-outstanding" | "jsq" | "least-loaded" => Ok(RouterPolicy::LeastOutstanding),
+            "session-affinity" | "affinity" => Ok(RouterPolicy::SessionAffinity),
+            "cache-aware" | "cache" => Ok(RouterPolicy::CacheAware),
+            other => anyhow::bail!(
+                "unknown router '{other}' \
+                 (round-robin|least-outstanding|session-affinity|cache-aware)"
+            ),
+        }
+    }
+}
+
+/// Fleet-simulation configuration (CLI defaults; `cluster run --replicas`
+/// and `--router` override per invocation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Replica count. 1 = the single-GPU simulator.
+    pub replicas: usize,
+    /// Session router.
+    pub router: RouterPolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { replicas: 1, router: RouterPolicy::CacheAware }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_names_round_trip() {
+        for r in RouterPolicy::ALL {
+            let parsed: RouterPolicy = r.name().parse().unwrap();
+            assert_eq!(parsed, r);
+        }
+        assert_eq!("rr".parse::<RouterPolicy>().unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!("jsq".parse::<RouterPolicy>().unwrap(), RouterPolicy::LeastOutstanding);
+        assert!("nope".parse::<RouterPolicy>().is_err());
+    }
+
+    #[test]
+    fn default_is_single_replica() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.router, RouterPolicy::CacheAware);
+    }
+}

@@ -6,12 +6,14 @@
 //! Configs load from JSON files (`--config path`, via the in-tree parser)
 //! with built-in presets matching the paper's setup (§IV-A).
 
+mod cluster;
 mod gpu;
 mod kv;
 mod model;
 mod scheduler;
 mod slo;
 
+pub use cluster::{ClusterConfig, RouterPolicy};
 pub use gpu::{GpuProfile, GpuKind};
 pub use kv::KvConfig;
 pub use model::{ModelProfile, ModelKind};
@@ -37,6 +39,8 @@ pub struct Config {
     /// KV-cache geometry and prefix-sharing policy (default: effectively
     /// unbounded, sharing off — the pre-memory-model behavior).
     pub kv: KvConfig,
+    /// Fleet simulation defaults (default: 1 replica — single-GPU runs).
+    pub cluster: ClusterConfig,
 }
 
 /// Engine-level knobs shared by all policies.
@@ -98,6 +102,7 @@ impl Config {
             slo,
             engine: EngineConfig::default(),
             kv: KvConfig::default(),
+            cluster: ClusterConfig::default(),
         }
     }
 
@@ -164,6 +169,13 @@ impl Config {
                     ("prefix_sharing", Value::Bool(self.kv.prefix_sharing)),
                 ]),
             ),
+            (
+                "cluster",
+                Value::obj(vec![
+                    ("replicas", self.cluster.replicas.into()),
+                    ("router", self.cluster.router.name().into()),
+                ]),
+            ),
         ])
     }
 
@@ -173,7 +185,7 @@ impl Config {
         let model: ModelKind = v.get("model").and_then(|m| m.as_str()).unwrap_or("qwen3b").parse()?;
         let gpu: GpuKind = v.get("gpu").and_then(|g| g.as_str()).unwrap_or("a5000").parse()?;
         let mut cfg = Self::preset(model, gpu);
-        cfg.apply_overrides(v);
+        cfg.apply_overrides(v)?;
         Ok(cfg)
     }
 
@@ -181,7 +193,10 @@ impl Config {
     /// existing config. Scenario files embed these (under a `"config"` key)
     /// without re-selecting the model/gpu preset; `from_value` delegates
     /// here after preset selection. Call [`Config::validate`] afterwards.
-    pub fn apply_overrides(&mut self, v: &Value) {
+    /// Absent keys are sparse; a *present but invalid* enum value (e.g. a
+    /// mistyped router name) is an error — silently substituting a
+    /// different policy would change results without any signal.
+    pub fn apply_overrides(&mut self, v: &Value) -> crate::Result<()> {
         let cfg = self;
         if let Some(s) = v.get("scheduler") {
             let c = &mut cfg.scheduler;
@@ -221,6 +236,13 @@ impl Config {
             override_usize(k, "block_size", &mut cfg.kv.block_size);
             override_bool(k, "prefix_sharing", &mut cfg.kv.prefix_sharing);
         }
+        if let Some(c) = v.get("cluster") {
+            override_usize(c, "replicas", &mut cfg.cluster.replicas);
+            if let Some(s) = c.get("router").and_then(|x| x.as_str()) {
+                cfg.cluster.router = s.parse()?;
+            }
+        }
+        Ok(())
     }
 
     /// Validate cross-field invariants.
@@ -248,6 +270,7 @@ impl Config {
             self.kv.num_blocks,
             self.kv.block_size
         );
+        anyhow::ensure!(self.cluster.replicas >= 1, "cluster.replicas must be >= 1");
         Ok(())
     }
 }
@@ -317,7 +340,7 @@ mod tests {
         let mut cfg = Config::default();
         let v = crate::util::json::parse(r#"{"engine": {"kv_blocks": 700, "kv_block_size": 32}}"#)
             .unwrap();
-        cfg.apply_overrides(&v);
+        cfg.apply_overrides(&v).unwrap();
         assert_eq!(cfg.kv.num_blocks, 700);
         assert_eq!(cfg.kv.block_size, 32);
         cfg.validate().unwrap();
@@ -330,7 +353,7 @@ mod tests {
             r#"{"kv": {"num_blocks": 2048, "prefix_sharing": true}}"#,
         )
         .unwrap();
-        cfg.apply_overrides(&v);
+        cfg.apply_overrides(&v).unwrap();
         assert_eq!(cfg.kv.num_blocks, 2048);
         assert_eq!(cfg.kv.block_size, 16, "untouched fields survive");
         assert!(cfg.kv.prefix_sharing);
@@ -353,6 +376,31 @@ mod tests {
     }
 
     #[test]
+    fn cluster_overrides_apply_and_round_trip() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.cluster, ClusterConfig::default());
+        let v = crate::util::json::parse(
+            r#"{"cluster": {"replicas": 4, "router": "session-affinity"}}"#,
+        )
+        .unwrap();
+        cfg.apply_overrides(&v).unwrap();
+        assert_eq!(cfg.cluster.replicas, 4);
+        assert_eq!(cfg.cluster.router, RouterPolicy::SessionAffinity);
+        cfg.validate().unwrap();
+        // Round trip through JSON text.
+        let back = Config::from_value(&crate::util::json::parse(&cfg.to_json()).unwrap()).unwrap();
+        assert_eq!(back.cluster, cfg.cluster);
+        // A mistyped router name is a loud error, not a silent fallback to
+        // a different policy.
+        let bad = crate::util::json::parse(r#"{"cluster": {"router": "least-outstandin"}}"#)
+            .unwrap();
+        assert!(cfg.apply_overrides(&bad).is_err());
+        // Zero replicas is rejected.
+        cfg.cluster.replicas = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn invalid_thresholds_rejected() {
         let mut cfg = Config::default();
         cfg.scheduler.theta_low_ms = 100.0;
@@ -365,7 +413,7 @@ mod tests {
         let mut cfg = Config::default();
         let before_slots = cfg.engine.green_slots;
         let v = crate::util::json::parse(r#"{"engine": {"chunk_size": 99}}"#).unwrap();
-        cfg.apply_overrides(&v);
+        cfg.apply_overrides(&v).unwrap();
         assert_eq!(cfg.engine.chunk_size, 99);
         assert_eq!(cfg.engine.green_slots, before_slots, "untouched fields survive");
         cfg.validate().unwrap();

@@ -104,6 +104,31 @@ impl MemoryGovernor {
         self.alloc.free_blocks()
     }
 
+    /// Current KV occupancy in tokens (allocated blocks × block size) — the
+    /// fleet load surface's memory signal.
+    pub fn used_tokens(&self) -> u64 {
+        self.alloc.used_blocks() as u64 * self.alloc.block_size() as u64
+    }
+
+    /// Register one more session slot (driver-mode injection: the fleet
+    /// grows a replica's session table incrementally; see
+    /// [`crate::engine::SimDriver`]).
+    pub fn add_session(&mut self) {
+        self.sessions.push(SessionCache::new());
+        self.admit_fail_tick.push(None);
+        self.stall_since.push(None);
+    }
+
+    /// Longest radix-cached prefix of `prompt` in tokens — a read-only
+    /// probe (no leasing, no LRU touch, no hit/miss counting). 0 when
+    /// prefix sharing is off.
+    pub fn peek_prompt(&self, prompt: &[u32]) -> usize {
+        match &self.radix {
+            Some(radix) => radix.peek(prompt, self.alloc.block_size()),
+            None => 0,
+        }
+    }
+
     pub fn preemptions(&self) -> u64 {
         self.preemptions
     }
@@ -396,6 +421,32 @@ mod tests {
         g.preempt(0, 50, true);
         assert!(g.free_blocks() > free_before);
         assert_eq!(g.preemptions(), 1);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_and_session_growth_support_the_fleet_layer() {
+        // The fleet router probes live radix state read-only, and the
+        // driver grows a replica's session table incrementally.
+        let mut g = MemoryGovernor::new(&kv(256, true), 1);
+        let p = prompt(64, 1);
+        assert_eq!(g.peek_prompt(&p), 0);
+        g.admit_cold(0, &p, 64, 0).unwrap();
+        g.complete_prefill(0);
+        g.insert_prompt(0, &p);
+        assert_eq!(g.peek_prompt(&p), 64);
+        assert!(g.used_tokens() >= 64);
+        let hit_before = {
+            let r = g.report(100);
+            (r.radix_hit_tokens, r.radix_miss_tokens)
+        };
+        g.peek_prompt(&p);
+        let r = g.report(200);
+        assert_eq!((r.radix_hit_tokens, r.radix_miss_tokens), hit_before, "peek is pure");
+        // A session added after construction admits through the same path.
+        g.add_session();
+        let b = g.admit_cold(1, &p, 64, 300).unwrap();
+        assert_eq!(b.cached_tokens, 64);
         g.check_invariants().unwrap();
     }
 

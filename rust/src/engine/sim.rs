@@ -34,7 +34,7 @@ use crate::metrics::{
     KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample, WorkflowReport,
 };
 use crate::util::json::Value;
-use crate::workflow::{DepTarget, WorkflowPlan};
+use crate::workflow::WorkflowPlan;
 use crate::workload::{Scenario, SessionScript, Trace, WorkloadGenerator, WorkloadKind};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -337,6 +337,82 @@ enum Ev {
 const DECODE_CTX: usize = 0;
 const PREFILL_CTX: usize = 1;
 
+// ---------------------------------------------------------------------------
+// driver mode (incremental stepping for the fleet layer)
+// ---------------------------------------------------------------------------
+//
+// Event-heap keys are `(t, seq, ev)`. A batch run pushes its whole arrival
+// plan before any internal event, so at equal timestamps arrivals always
+// win and tie-break among themselves in plan order. Driver mode injects
+// arrivals *while the run is in flight*, so the same ordering is recovered
+// with sequence **bands**: injected arrivals draw from a low band, the
+// initial control tick sits in a middle band, and every internally pushed
+// event draws from a high band. Relative order within each band follows
+// creation order, exactly as in a batch run — which is what makes a
+// 1-replica fleet over an open-loop scenario replay `run_scenario`
+// byte-for-byte (locked in `rust/tests/cluster.rs`).
+
+/// Driver mode: sequence of the initial control tick (above every injected
+/// arrival, below every internal event — the batch-run relative order).
+const DRIVER_SEQ_TICK: u64 = 1 << 32;
+/// Driver mode: first internal sequence number.
+const DRIVER_SEQ_INTERNAL: u64 = 1 << 33;
+
+/// One replica-level completion, reported to the fleet loop (which owns
+/// arrivals, closed-loop chaining, and fleet-wide workflow gates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverEvent {
+    /// A decode burst finished. Burst 0 is the first response (after the
+    /// cold prefill); burst `b` is the decode of step `b - 1`. Fleet-side
+    /// workflow join barriers key off these.
+    BurstDone { sess: usize, burst: usize, t_us: u64 },
+    /// The session's last burst finished.
+    SessionDone { sess: usize, t_us: u64 },
+}
+
+/// Live load surface of one replica — the router's scoring inputs
+/// ([`crate::cluster`]). All O(1) reads of simulator state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaLoad {
+    /// Sessions injected and not yet finished.
+    pub active_sessions: usize,
+    /// Prefill jobs waiting in the policy's queue structure (both lanes of
+    /// the AgentServe dual queues; the single FIFO elsewhere).
+    pub queue_depth: usize,
+    /// Scripted tokens (prefill commits + decode bursts) not yet completed
+    /// across active sessions — the least-outstanding-tokens (JSQ) signal.
+    pub outstanding_tokens: u64,
+    /// Streams registered with the decode batcher.
+    pub decode_streams: usize,
+    /// KV occupancy in tokens (paged path: allocated blocks × block size;
+    /// unbounded path: the logical token counter).
+    pub kv_used_tokens: u64,
+}
+
+/// Driver-mode orchestration state: the fleet loop owns arrivals, chaining,
+/// and workflow dependency gates; the replica reports burst/session
+/// completions upward instead of resolving them locally. `None` on every
+/// batch path — `run_scenario` and friends pay nothing for the fleet layer.
+struct DriverState {
+    /// Completions since the last [`SimDriver::drain_events`].
+    events: Vec<DriverEvent>,
+    /// Per session, per step: externally gated steps still closed
+    /// (fleet-wide join barriers whose dependencies live on other replicas).
+    gate_closed: Vec<Vec<bool>>,
+    /// Sessions parked on a closed external gate (preemption carve-out and
+    /// wake-up bookkeeping, mirroring the workflow `parked` semantics).
+    parked: Vec<bool>,
+    /// Low-band sequence counter for injected arrivals.
+    arrival_seq: u64,
+    /// Outstanding scripted tokens across active sessions (see
+    /// [`ReplicaLoad::outstanding_tokens`]).
+    outstanding_tokens: u64,
+    /// The fleet has injected every session it ever will: the final
+    /// completion may end the run exactly like a batch run does (break
+    /// before the post-completion dispatch).
+    no_more_arrivals: bool,
+}
+
 /// Relative decode slowdown while the SGLang prefill process is active
 /// (memory-bandwidth contention across the process boundary, §IV-C).
 const SGLANG_CONTENTION: f64 = 0.20;
@@ -413,17 +489,13 @@ struct WfState {
 }
 
 impl WfState {
-    fn new(plan: WorkflowPlan, cost: &CostModel, sessions: &[SimSession]) -> Self {
-        let mut task_left = vec![0usize; plan.n_tasks];
-        for &t in &plan.task_of {
-            task_left[t] += 1;
-        }
-        let task_cp_ms = task_critical_paths_ms(cost, sessions, &plan);
+    fn new(plan: WorkflowPlan, cost: &CostModel, scripts: &[SessionScript]) -> Self {
+        let task_cp_ms = task_critical_paths_ms(cost, scripts, &plan);
         Self {
-            arr_remaining: plan.arrivals.iter().map(|g| g.dep_count).collect(),
-            step_remaining: plan.step_deps.clone(),
+            arr_remaining: plan.initial_arrival_gates(),
+            step_remaining: plan.initial_step_gates(),
             parked: vec![false; plan.task_of.len()],
-            task_left,
+            task_left: plan.task_session_counts(),
             task_done_us: vec![None; plan.n_tasks],
             task_cp_ms,
             plan,
@@ -437,10 +509,12 @@ impl WfState {
 /// queueing, every prefill fully recomputed (no radix sharing). Realized
 /// makespans are judged against this in [`WorkflowReport`] (the `stretch`
 /// ratio isolates scheduling-induced slowdown from inherent DAG depth;
-/// sharing-enabled runs can dip below 1).
-fn task_critical_paths_ms(
+/// sharing-enabled runs can dip below 1). Shared with the fleet layer
+/// (`crate::cluster`), which resolves workflow gates fleet-wide and builds
+/// the task report itself.
+pub(crate) fn task_critical_paths_ms(
     cost: &CostModel,
-    sessions: &[SimSession],
+    scripts: &[SessionScript],
     plan: &WorkflowPlan,
 ) -> Vec<f64> {
     let mut cp_us = vec![0.0f64; plan.units.len()];
@@ -455,7 +529,7 @@ fn task_critical_paths_ms(
         for &d in &info.deps {
             base = base.max(cp_us[d]);
         }
-        let span = ideal_span_us(cost, &sessions[info.sess].script, from, info.burst);
+        let span = ideal_span_us(cost, &scripts[info.sess], from, info.burst);
         cp_us[u] = base + info.delay_us as f64 + span;
     }
     let mut out = vec![0.0f64; plan.n_tasks];
@@ -514,6 +588,9 @@ struct Sim {
     log: Option<Vec<ExecEvent>>,
     heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
     seq: u64,
+    /// First value `seq` took (0 batch, [`DRIVER_SEQ_INTERNAL`] driver) —
+    /// the runaway guard counts events relative to it.
+    seq_base: u64,
     now: u64,
     /// Context work slots: [decode, prefill]; one-ctx policies use slot 0.
     ctx_work: [Option<Work>; 2],
@@ -525,6 +602,8 @@ struct Sim {
     kv: KvState,
     /// Workflow orchestration state (`None` on every legacy path).
     wf: Option<WfState>,
+    /// Driver-mode state (`None` on every batch path; see [`SimDriver`]).
+    driver: Option<DriverState>,
     /// Lazily materialized system-prompt token ids (radix lookups/inserts;
     /// paged mode only).
     prompt_ids: Vec<Option<Vec<u32>>>,
@@ -703,6 +782,11 @@ impl Sim {
         self.metrics.prefill_tokens(work as u64);
         self.kv_tokens_add(commit as u64);
         self.sessions[sess].ctx_tokens += commit;
+        if let Some(d) = &mut self.driver {
+            // Only committed *scripted* tokens retire outstanding work;
+            // preemption recomputes commit 0 and correctly stay owed.
+            d.outstanding_tokens = d.outstanding_tokens.saturating_sub(commit as u64);
+        }
     }
 
     /// The session's prefill is fully committed: emit the first token of
@@ -767,36 +851,21 @@ impl Sim {
 
     /// A decode burst completed: resolve the DAG unit it carries (if any),
     /// releasing dependent cold prefills and parked continuation steps.
+    /// The decrement semantics live in [`WorkflowPlan::resolve_burst`],
+    /// shared with the fleet loop.
     fn wf_unit_done(&mut self, sess: usize, burst: usize) {
-        let mut arrivals: Vec<(usize, u64)> = Vec::new();
-        let mut opened: Vec<(usize, usize)> = Vec::new();
-        {
+        let resolved = {
             let Some(wf) = self.wf.as_mut() else { return };
-            let Some(&Some(unit)) = wf.plan.unit_of_burst[sess].get(burst) else { return };
             // Disjoint-field borrows: the plan is read-only while the gate
             // counters decrement.
-            for &target in &wf.plan.dependents[unit] {
-                match target {
-                    DepTarget::Arrival(s2) => {
-                        wf.arr_remaining[s2] -= 1;
-                        if wf.arr_remaining[s2] == 0 {
-                            arrivals.push((s2, wf.plan.arrivals[s2].delay_us));
-                        }
-                    }
-                    DepTarget::Step { sess: s2, step } => {
-                        wf.step_remaining[s2][step] -= 1;
-                        if wf.step_remaining[s2][step] == 0 {
-                            opened.push((s2, step));
-                        }
-                    }
-                }
-            }
-        }
+            wf.plan
+                .resolve_burst(sess, burst, &mut wf.arr_remaining, &mut wf.step_remaining)
+        };
         let now = self.now;
-        for (s2, delay) in arrivals {
+        for (s2, delay) in resolved.arrivals {
             self.push(now + delay, Ev::Arrive(s2));
         }
-        for (s2, step) in opened {
+        for (s2, step) in resolved.steps {
             // Only a session parked *at this step* resumes here; a barrier
             // resolving before its session finishes the preceding burst is
             // simply found open when the session reaches the step.
@@ -824,11 +893,36 @@ impl Sim {
         self.log_event(ExecEventKind::TaskDone { task: task as u64 });
     }
 
+    // -- driver-mode orchestration (fleet-owned gates and completions) --------
+
+    /// Driver mode: report the finished burst upward and retire its tokens
+    /// from the outstanding-work ledger. No-op on batch paths.
+    fn driver_burst_done(&mut self, sess: usize, burst: usize) {
+        let Some(d) = &mut self.driver else { return };
+        let s = &self.sessions[sess].script;
+        let tokens = if burst == 0 {
+            s.first_decode_tokens
+        } else {
+            s.steps[burst - 1].decode_tokens
+        };
+        d.outstanding_tokens = d.outstanding_tokens.saturating_sub(tokens as u64);
+        d.events.push(DriverEvent::BurstDone { sess, burst, t_us: self.now });
+    }
+
+    /// Driver mode: the step's fleet-wide join barrier is still closed.
+    fn driver_step_blocked(&self, sess: usize, step: usize) -> bool {
+        self.driver
+            .as_ref()
+            .is_some_and(|d| d.gate_closed[sess].get(step).copied().unwrap_or(false))
+    }
+
     /// The current decode burst is done: tool-wait, or session complete.
     fn decode_burst_finished(&mut self, sess: usize) {
         // Workflow plans: the finished burst may complete a DAG unit.
+        // Driver mode reports it upward instead (the fleet owns the DAG).
         let burst = self.sessions[sess].cur_step;
         self.wf_unit_done(sess, burst);
+        self.driver_burst_done(sess, burst);
         let s = &self.sessions[sess];
         if s.cur_step < s.script.steps.len() {
             let step = s.cur_step;
@@ -838,6 +932,11 @@ impl Sim {
                 // Join barrier still closed: park; the barrier's last
                 // dependency schedules this tool return.
                 self.wf.as_mut().expect("gated step implies a plan").parked[sess] = true;
+            } else if self.driver_step_blocked(sess, step) {
+                // Same, but the barrier is fleet-wide: the fleet loop wakes
+                // this session via [`SimDriver::open_step_gate`].
+                self.driver.as_mut().expect("gated step implies driver mode").parked[sess] =
+                    true;
             } else {
                 self.push(self.now + lat, Ev::ToolReturn(sess));
             }
@@ -858,7 +957,12 @@ impl Sim {
             self.sessions[sess].kv_resident = false;
             self.log_event(ExecEventKind::SessionDone { session: sess as u64 });
             self.wf_session_done(sess);
-            // Chain the agent's next session (closed-loop plans only).
+            if let Some(d) = &mut self.driver {
+                d.events.push(DriverEvent::SessionDone { sess, t_us: self.now });
+            }
+            // Chain the agent's next session (closed-loop plans only;
+            // driver mode carries no chain — the fleet loop re-routes each
+            // chained session at its arrival timestamp).
             if let Some((stride, think_us)) = self.chain {
                 let next = sess + stride;
                 if next < self.sessions.len() {
@@ -1016,7 +1120,8 @@ impl Sim {
                 continue;
             }
             let key = (self.arrival_times[i], i);
-            let parked = self.wf.as_ref().is_some_and(|wf| wf.parked[i]);
+            let parked = self.wf.as_ref().is_some_and(|wf| wf.parked[i])
+                || self.driver.as_ref().is_some_and(|d| d.parked[i]);
             if key <= req_key && !parked {
                 continue; // never preempt an equal-or-higher-priority runnable
             }
@@ -1558,8 +1663,13 @@ impl Sim {
         }
         if commit_chunks && cached > 0 {
             // Radix-cached prompt tokens become context immediately; the
-            // chunks then commit only the charged remainder.
+            // chunks then commit only the charged remainder. They are
+            // committed scripted work, so the driver ledger retires them
+            // here (the chunk path never sees them).
             self.sessions[sess].ctx_tokens += cached;
+            if let Some(d) = &mut self.driver {
+                d.outstanding_tokens = d.outstanding_tokens.saturating_sub(cached as u64);
+            }
         }
     }
 
@@ -1663,34 +1773,43 @@ impl Sim {
                 self.log_event(ExecEventKind::Rebind { decode_sms, cost_us });
             }
         }
-        if self.done_count < self.sessions.len() {
+        // Driver mode keeps ticking while the fleet may still inject
+        // arrivals (a batch run's session table always covers every future
+        // arrival, so its `done < len` test encodes the same condition).
+        let more = self.done_count < self.sessions.len()
+            || self.driver.as_ref().is_some_and(|d| !d.no_more_arrivals);
+        if more {
             self.push(self.now + interval, Ev::Tick);
         }
     }
 
     // -- main loop ----------------------------------------------------------------
 
+    fn handle_event(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(s) => {
+                debug_assert_eq!(self.sessions[s].phase, SessPhase::NotArrived);
+                self.submit_prefill(s);
+            }
+            Ev::ToolReturn(s) => {
+                debug_assert_eq!(self.sessions[s].phase, SessPhase::ToolWait);
+                self.submit_prefill(s);
+            }
+            Ev::CtxFree(c) => self.complete_work(c),
+            Ev::Tick => self.handle_tick(),
+        }
+    }
+
     fn run(&mut self) {
         let cap = 200_000_000u64; // runaway guard
         while let Some(Reverse((t, _, ev))) = self.heap.pop() {
             self.now = t;
-            match ev {
-                Ev::Arrive(s) => {
-                    debug_assert_eq!(self.sessions[s].phase, SessPhase::NotArrived);
-                    self.submit_prefill(s);
-                }
-                Ev::ToolReturn(s) => {
-                    debug_assert_eq!(self.sessions[s].phase, SessPhase::ToolWait);
-                    self.submit_prefill(s);
-                }
-                Ev::CtxFree(c) => self.complete_work(c),
-                Ev::Tick => self.handle_tick(),
-            }
+            self.handle_event(ev);
             if self.done_count == self.sessions.len() {
                 break;
             }
             self.dispatch();
-            assert!(self.seq < cap, "simulation runaway");
+            assert!(self.seq - self.seq_base < cap, "simulation runaway");
         }
     }
 }
@@ -1849,16 +1968,11 @@ pub fn record_scenario_trace(
     (out, trace)
 }
 
-fn run_sim_inner(
-    cfg: &Config,
-    policy: Policy,
-    scripts: Vec<SessionScript>,
-    plan: ArrivalPlan,
-    flags: RunFlags,
-) -> (SimOutcome, Option<ExecTrace>) {
-    let cost = CostModel::new(&cfg.model, &cfg.gpu);
+/// Per-policy scheduling state for one run (shared by the batch entry
+/// points and [`SimDriver`]).
+fn build_pstate(cfg: &Config, policy: Policy) -> PState {
     let max_batch = cfg.engine.max_decode_batch;
-    let state = match policy {
+    match policy {
         Policy::AgentServe(opts) => {
             let mut pool = GreenContextPool::new(
                 cfg.gpu.sm_count,
@@ -1901,11 +2015,111 @@ fn run_sim_inner(
             fifo: VecDeque::new(),
             batcher: DecodeBatcher::new(max_batch),
         },
-    };
+    }
+}
 
-    let sessions: Vec<SimSession> = scripts
-        .into_iter()
-        .map(|script| SimSession {
+impl Sim {
+    /// Construct an idle simulator over `scripts`: no events are seeded —
+    /// the caller installs an arrival plan (batch paths) or injects
+    /// arrivals incrementally ([`SimDriver`]).
+    fn new(cfg: &Config, policy: Policy, scripts: Vec<SessionScript>, flags: RunFlags) -> Sim {
+        let cost = CostModel::new(&cfg.model, &cfg.gpu);
+        let state = build_pstate(cfg, policy);
+        let sessions: Vec<SimSession> = scripts.into_iter().map(SimSession::fresh).collect();
+        let n_sessions = sessions.len();
+        let mut metrics = MetricsRecorder::new();
+        if !flags.record_timeline {
+            metrics.disable_timeline();
+        }
+        let kv = if cfg.kv.is_paged() {
+            KvState::Paged(Box::new(MemoryGovernor::new(&cfg.kv, n_sessions)))
+        } else {
+            KvState::Tokens { used: 0, peak: 0 }
+        };
+        Sim {
+            cost,
+            sessions,
+            chain: None,
+            arrival_times: vec![0; n_sessions],
+            log: if flags.record_events { Some(Vec::new()) } else { None },
+            heap: BinaryHeap::with_capacity(n_sessions + 16),
+            seq: 0,
+            seq_base: 0,
+            now: 0,
+            ctx_work: [None, None],
+            state,
+            metrics,
+            done_count: 0,
+            kv,
+            wf: None,
+            driver: None,
+            prompt_ids: vec![None; n_sessions],
+            step_scratch: Vec::new(),
+            cold_prefill_tokens: 0,
+            resume_prefill_tokens: 0,
+            decode_round_accum_us: 0.0,
+            control_trace: Vec::new(),
+            id_buf_pool: Vec::new(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Aggregate the finished run into a [`SimOutcome`] (the shared tail of
+    /// the batch entry points and [`SimDriver::finish`]). `end` is the
+    /// report horizon — the timestamp of the last processed event.
+    fn outcome(&mut self, policy: Policy, end: u64) -> SimOutcome {
+        let report = self.metrics.report(end);
+        let slo = SloJudge::new(&self.cfg.slo).judge(&self.metrics);
+        let total_prefill = self.cold_prefill_tokens + self.resume_prefill_tokens;
+        let (rebinds, cold_routed, resume_merged, resume_rerouted) = match &self.state {
+            PState::AgentServe { pool, manager, .. } => (
+                pool.stats(),
+                manager.cold_routed,
+                manager.resume_merged,
+                manager.resume_rerouted,
+            ),
+            _ => (RebindStats::default(), 0, 0, 0),
+        };
+        let timeline = self.metrics.take_timeline();
+        let (kv_peak_tokens, kv_report) = match &mut self.kv {
+            KvState::Tokens { peak, .. } => (*peak, None),
+            KvState::Paged(gov) => (gov.peak_used_tokens(), Some(gov.report(end))),
+        };
+        let workflow = self.wf.as_ref().map(|wf| {
+            WorkflowReport::from_task_times(
+                &wf.plan.task_release_us,
+                &wf.task_done_us,
+                &wf.task_cp_ms,
+                self.cfg.slo.task_ms,
+            )
+        });
+        SimOutcome {
+            policy_name: policy.name().to_string(),
+            report,
+            slo,
+            timeline,
+            rebinds,
+            eta_cold: if total_prefill == 0 {
+                0.0
+            } else {
+                self.cold_prefill_tokens as f64 / total_prefill as f64
+            },
+            cold_routed,
+            resume_merged,
+            resume_rerouted,
+            kv_peak_tokens,
+            kv: kv_report,
+            workflow,
+            control_trace: std::mem::take(&mut self.control_trace),
+            arrivals_us: std::mem::take(&mut self.arrival_times),
+        }
+    }
+}
+
+impl SimSession {
+    /// A not-yet-arrived session over `script`.
+    fn fresh(script: SessionScript) -> Self {
+        SimSession {
             script,
             phase: SessPhase::NotArrived,
             ctx_tokens: 0,
@@ -1914,68 +2128,47 @@ fn run_sim_inner(
             kv_resident: false,
             after_prefill: AfterPrefill::FirstBurst,
             prefill_commit: 0,
-        })
-        .collect();
+        }
+    }
+}
 
+fn run_sim_inner(
+    cfg: &Config,
+    policy: Policy,
+    scripts: Vec<SessionScript>,
+    plan: ArrivalPlan,
+    flags: RunFlags,
+) -> (SimOutcome, Option<ExecTrace>) {
     if let ArrivalPlan::Explicit(times) = &plan {
         assert_eq!(
             times.len(),
-            sessions.len(),
+            scripts.len(),
             "explicit arrival plan must cover every session"
         );
     }
-    let n_sessions = sessions.len();
     let chain = match &plan {
         ArrivalPlan::Closed { n_agents, think_time_us, .. } => Some((*n_agents, *think_time_us)),
         ArrivalPlan::Explicit(_) | ArrivalPlan::Workflow(_) => None,
     };
-    let mut metrics = MetricsRecorder::new();
-    if !flags.record_timeline {
-        metrics.disable_timeline();
-    }
-    let kv = if cfg.kv.is_paged() {
-        KvState::Paged(Box::new(MemoryGovernor::new(&cfg.kv, n_sessions)))
-    } else {
-        KvState::Tokens { used: 0, peak: 0 }
-    };
-    // Workflow plans are consumed into orchestrator state; legacy plans are
+    // Workflow plans are consumed into orchestrator state (built from the
+    // scripts before they move into the session table); legacy plans are
     // kept for heap seeding below.
     let (plan, wf) = match plan {
         ArrivalPlan::Workflow(p) => {
             assert_eq!(
                 p.arrivals.len(),
-                sessions.len(),
+                scripts.len(),
                 "workflow plan must cover every session"
             );
-            let wf = WfState::new(p, &cost, &sessions);
+            let cost = CostModel::new(&cfg.model, &cfg.gpu);
+            let wf = WfState::new(p, &cost, &scripts);
             (None, Some(wf))
         }
         other => (Some(other), None),
     };
-    let mut sim = Sim {
-        cost,
-        sessions,
-        chain,
-        arrival_times: vec![0; n_sessions],
-        log: if flags.record_events { Some(Vec::new()) } else { None },
-        heap: BinaryHeap::with_capacity(n_sessions + 16),
-        seq: 0,
-        now: 0,
-        ctx_work: [None, None],
-        state,
-        metrics,
-        done_count: 0,
-        kv,
-        wf,
-        prompt_ids: vec![None; n_sessions],
-        step_scratch: Vec::new(),
-        cold_prefill_tokens: 0,
-        resume_prefill_tokens: 0,
-        decode_round_accum_us: 0.0,
-        control_trace: Vec::new(),
-        id_buf_pool: Vec::new(),
-        cfg: cfg.clone(),
-    };
+    let mut sim = Sim::new(cfg, policy, scripts, flags);
+    sim.chain = chain;
+    sim.wf = wf;
 
     match &plan {
         // Wave-0 arrivals, staggered; later waves chain on completion.
@@ -1994,17 +2187,12 @@ fn run_sim_inner(
         // Workflow roots arrive at their gate timestamps; every other
         // session is released by the orchestrator as its joins resolve.
         None => {
-            let roots: Vec<(usize, u64)> = sim
+            let roots = sim
                 .wf
                 .as_ref()
                 .expect("plan was consumed into workflow state")
                 .plan
-                .arrivals
-                .iter()
-                .enumerate()
-                .filter(|(_, g)| g.dep_count == 0)
-                .map(|(s, g)| (s, g.delay_us))
-                .collect();
+                .root_arrivals();
             for (s, t) in roots {
                 sim.push(t, Ev::Arrive(s));
             }
@@ -2020,56 +2208,230 @@ fn run_sim_inner(
 
     sim.run();
 
-    let end = sim.now;
-    let report = sim.metrics.report(end);
-    let slo = SloJudge::new(&cfg.slo).judge(&sim.metrics);
-    let total_prefill = sim.cold_prefill_tokens + sim.resume_prefill_tokens;
-    let (rebinds, cold_routed, resume_merged, resume_rerouted) = match &sim.state {
-        PState::AgentServe { pool, manager, .. } => (
-            pool.stats(),
-            manager.cold_routed,
-            manager.resume_merged,
-            manager.resume_rerouted,
-        ),
-        _ => (RebindStats::default(), 0, 0, 0),
-    };
     let exec = sim.log.take().map(|events| ExecTrace { events });
-    let timeline = sim.metrics.take_timeline();
-    let (kv_peak_tokens, kv_report) = match &mut sim.kv {
-        KvState::Tokens { peak, .. } => (*peak, None),
-        KvState::Paged(gov) => (gov.peak_used_tokens(), Some(gov.report(end))),
-    };
-    let workflow = sim.wf.as_ref().map(|wf| {
-        let mut completed = Vec::with_capacity(wf.plan.n_tasks);
-        for t in 0..wf.plan.n_tasks {
-            if let Some(done) = wf.task_done_us[t] {
-                let span = done.saturating_sub(wf.plan.task_release_us[t]);
-                completed.push((span as f64 / 1000.0, wf.task_cp_ms[t]));
+    let end = sim.now;
+    (sim.outcome(policy, end), exec)
+}
+
+// ---------------------------------------------------------------------------
+// SimDriver: the incremental stepping API
+// ---------------------------------------------------------------------------
+
+/// One single-GPU replica simulator under external control.
+///
+/// The batch entry points ([`run_scenario`] & co.) own the whole run: they
+/// seed every arrival up front and spin the event loop to completion. A
+/// `SimDriver` inverts that: the caller — the fleet loop in
+/// [`crate::cluster`] — *injects* sessions at their arrival timestamps,
+/// *steps* the replica one event at a time on the shared virtual clock,
+/// *drains* burst/session completions (fleet-wide workflow gates key off
+/// them), and reads a live [`ReplicaLoad`] surface for routing decisions.
+///
+/// ## Contract
+/// - Events are processed in `(t, seq)` order; injected arrivals draw from
+///   a low sequence band so they order exactly like a batch run's
+///   pre-seeded arrival plan (see the band constants above). A 1-replica
+///   fleet over an open-loop scenario is therefore **byte-identical** to
+///   [`run_scenario`].
+/// - `inject` must not time-travel: `at_us` ≥ the last processed event's
+///   timestamp.
+/// - After [`SimDriver::set_no_more_arrivals`], the event that completes
+///   the last session ends the run exactly like a batch run (no trailing
+///   dispatch, trailing control ticks left unprocessed).
+pub struct SimDriver {
+    sim: Sim,
+    policy: Policy,
+}
+
+impl SimDriver {
+    /// A fresh idle replica (timeline retained, as in [`run_scenario`]).
+    pub fn new(cfg: &Config, policy: Policy) -> Self {
+        Self::with_flags(cfg, policy, RunFlags::default())
+    }
+
+    /// A fresh idle replica without per-token timeline retention (the
+    /// fleet-sweep hot path; aggregates match [`SimDriver::new`] exactly).
+    pub fn new_fast(cfg: &Config, policy: Policy) -> Self {
+        Self::with_flags(cfg, policy, RunFlags { record_timeline: false, ..RunFlags::default() })
+    }
+
+    fn with_flags(cfg: &Config, policy: Policy, flags: RunFlags) -> Self {
+        let mut sim = Sim::new(cfg, policy, Vec::new(), flags);
+        sim.seq = DRIVER_SEQ_INTERNAL;
+        sim.seq_base = DRIVER_SEQ_INTERNAL;
+        sim.driver = Some(DriverState {
+            events: Vec::new(),
+            gate_closed: Vec::new(),
+            parked: Vec::new(),
+            arrival_seq: 1,
+            outstanding_tokens: 0,
+            no_more_arrivals: false,
+        });
+        // Control ticks for adaptive AgentServe: middle band, so the tick
+        // orders after every injected arrival and before every internal
+        // event at equal timestamps — the batch-run relative order.
+        if let Policy::AgentServe(opts) = policy {
+            if opts.adaptive {
+                let interval = (cfg.scheduler.interval_ms * 1000.0) as u64;
+                sim.heap.push(Reverse((interval, DRIVER_SEQ_TICK, Ev::Tick)));
             }
         }
-        WorkflowReport::from_parts(wf.plan.n_tasks, &completed, &wf.task_cp_ms, cfg.slo.task_ms)
-    });
-    let outcome = SimOutcome {
-        policy_name: policy.name().to_string(),
-        report,
-        slo,
-        timeline,
-        rebinds,
-        eta_cold: if total_prefill == 0 {
-            0.0
-        } else {
-            sim.cold_prefill_tokens as f64 / total_prefill as f64
-        },
-        cold_routed,
-        resume_merged,
-        resume_rerouted,
-        kv_peak_tokens,
-        kv: kv_report,
-        workflow,
-        control_trace: sim.control_trace,
-        arrivals_us: sim.arrival_times,
-    };
-    (outcome, exec)
+        SimDriver { sim, policy }
+    }
+
+    /// Inject a session arriving at `at_us`. `gated_steps` lists step
+    /// indices whose fleet-wide join barrier is still closed at injection
+    /// time; the session parks when it reaches such a step until
+    /// [`SimDriver::open_step_gate`] releases it. Returns the local
+    /// session id.
+    pub fn inject(&mut self, script: SessionScript, at_us: u64, gated_steps: &[usize]) -> usize {
+        debug_assert!(at_us >= self.sim.now, "injection must not time-travel");
+        let sess = self.sim.sessions.len();
+        let mut closed = vec![false; script.steps.len()];
+        for &s in gated_steps {
+            closed[s] = true;
+        }
+        let d = self.sim.driver.as_mut().expect("driver mode");
+        d.outstanding_tokens += script.total_prefill_tokens() + script.total_decode_tokens();
+        d.gate_closed.push(closed);
+        d.parked.push(false);
+        let seq = d.arrival_seq;
+        d.arrival_seq += 1;
+        assert!(seq < DRIVER_SEQ_TICK, "arrival band overflow");
+        self.sim.sessions.push(SimSession::fresh(script));
+        self.sim.arrival_times.push(0);
+        self.sim.prompt_ids.push(None);
+        if let KvState::Paged(gov) = &mut self.sim.kv {
+            gov.add_session();
+        }
+        self.sim.heap.push(Reverse((at_us, seq, Ev::Arrive(sess))));
+        sess
+    }
+
+    /// A fleet-wide join barrier on `(sess, step)` resolved at `at_us`: the
+    /// gate opens, and a session parked on it wakes through the standard
+    /// tool-return path (its scripted tool latency runs from `at_us`, the
+    /// same semantics the in-replica workflow gates use).
+    pub fn open_step_gate(&mut self, sess: usize, step: usize, at_us: u64) {
+        let d = self.sim.driver.as_mut().expect("driver mode");
+        if !std::mem::replace(&mut d.gate_closed[sess][step], false) {
+            return; // already open
+        }
+        let wake = d.parked[sess]
+            && self.sim.sessions[sess].cur_step == step
+            && self.sim.sessions[sess].phase == SessPhase::ToolWait;
+        if wake {
+            d.parked[sess] = false;
+            let lat = self.sim.sessions[sess].script.steps[step].tool_latency_us;
+            self.sim.push(at_us + lat, Ev::ToolReturn(sess));
+        }
+    }
+
+    /// Timestamp of the next pending event, if any (the fleet loop's
+    /// global-merge key).
+    pub fn next_event_us(&self) -> Option<u64> {
+        self.sim.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Process exactly one event. Returns `false` when there is nothing to
+    /// do (empty heap, or the run already ended). Mirrors one iteration of
+    /// the batch loop, including the no-dispatch tail after the final
+    /// completion once [`SimDriver::set_no_more_arrivals`] was called.
+    pub fn step(&mut self) -> bool {
+        if self.finished() {
+            return false; // leave trailing ticks unprocessed, batch-style
+        }
+        let Some(Reverse((t, _, ev))) = self.sim.heap.pop() else {
+            return false;
+        };
+        self.sim.now = t;
+        self.sim.handle_event(ev);
+        if self.finished() {
+            return true; // final completion: no trailing dispatch
+        }
+        self.sim.dispatch();
+        assert!(
+            self.sim.seq - self.sim.seq_base < 200_000_000,
+            "simulation runaway"
+        );
+        true
+    }
+
+    /// The fleet will inject no further sessions: the last completion may
+    /// end the run with batch-run tail semantics.
+    pub fn set_no_more_arrivals(&mut self) {
+        self.sim.driver.as_mut().expect("driver mode").no_more_arrivals = true;
+    }
+
+    /// Every injected session finished.
+    pub fn all_done(&self) -> bool {
+        self.sim.done_count == self.sim.sessions.len()
+    }
+
+    fn finished(&self) -> bool {
+        self.all_done()
+            && self.sim.driver.as_ref().is_some_and(|d| d.no_more_arrivals)
+    }
+
+    /// Sessions injected so far.
+    pub fn sessions(&self) -> usize {
+        self.sim.sessions.len()
+    }
+
+    /// Move accumulated completion events into `out` (processing order).
+    pub fn drain_events(&mut self, out: &mut Vec<DriverEvent>) {
+        out.append(&mut self.sim.driver.as_mut().expect("driver mode").events);
+    }
+
+    /// Live load surface (all O(1)).
+    pub fn load(&self) -> ReplicaLoad {
+        let d = self.sim.driver.as_ref().expect("driver mode");
+        let queue_depth = match &self.sim.state {
+            PState::AgentServe { queues, .. } => queues.cold_len() + queues.resume_len(),
+            PState::Sglang { fifo, .. } => fifo.len(),
+            PState::IterBatch { fifo, .. } => fifo.len(),
+        };
+        let kv_used_tokens = match &self.sim.kv {
+            KvState::Tokens { used, .. } => *used,
+            KvState::Paged(gov) => gov.used_tokens(),
+        };
+        ReplicaLoad {
+            active_sessions: self.sim.sessions.len() - self.sim.done_count,
+            queue_depth,
+            outstanding_tokens: d.outstanding_tokens,
+            decode_streams: self.sim.batcher().len(),
+            kv_used_tokens,
+        }
+    }
+
+    /// Longest radix-cached prefix (tokens) this replica holds for
+    /// `prompt` — a read-only probe of live KV state (no lease, no LRU
+    /// touch). 0 off the paged path: the cache-aware router then falls
+    /// back to its load score.
+    pub fn cached_prompt_tokens(&self, prompt: &[u32]) -> u32 {
+        match &self.sim.kv {
+            KvState::Paged(gov) => gov.peek_prompt(prompt) as u32,
+            KvState::Tokens { .. } => 0,
+        }
+    }
+
+    /// Timestamp of the last processed event (the replica's clock).
+    pub fn now_us(&self) -> u64 {
+        self.sim.now
+    }
+
+    /// The metrics recorder (fleet-level sample aggregation reads the
+    /// per-session TTFT/TPOT vectors before [`SimDriver::finish`]).
+    pub fn recorder(&self) -> &MetricsRecorder {
+        &self.sim.metrics
+    }
+
+    /// Aggregate the replica's run. The report horizon is the replica's
+    /// last processed event — identical to the batch tail.
+    pub fn finish(mut self) -> SimOutcome {
+        let end = self.sim.now;
+        self.sim.outcome(self.policy, end)
+    }
 }
 
 #[cfg(test)]
@@ -2359,6 +2721,86 @@ mod tests {
             assert_eq!(kv.preemptions, kv2.preemptions, "{}", policy.name());
             assert_eq!(kv.evictions, kv2.evictions, "{}", policy.name());
         }
+    }
+
+    #[test]
+    fn driver_replays_explicit_trace_byte_identically() {
+        // The SimDriver stepping API over an explicit (open-loop) arrival
+        // plan must be a pure refactor: same events in the same order, so
+        // every aggregate — report JSON, SLO, realized arrivals, control
+        // trace — is byte-identical to the batch loop. This is the
+        // replica-level half of the 1-replica fleet equivalence locked in
+        // rust/tests/cluster.rs.
+        let cfg = cfg();
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, cfg.model.kind, 9);
+        let trace = Trace::concurrent(gen.sessions(5), 5, 120_000);
+        for policy in Policy::paper_lineup() {
+            let batch = run_sim_trace(&cfg, policy, &trace);
+            let mut drv = SimDriver::new(&cfg, policy);
+            for e in &trace.events {
+                drv.inject(e.script.clone(), e.arrival_us, &[]);
+            }
+            drv.set_no_more_arrivals();
+            while drv.step() {}
+            assert!(drv.all_done(), "{}", policy.name());
+            let out = drv.finish();
+            assert_eq!(
+                out.report.to_value().to_string(),
+                batch.report.to_value().to_string(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(out.slo.attained, batch.slo.attained, "{}", policy.name());
+            assert_eq!(out.arrivals_us, batch.arrivals_us, "{}", policy.name());
+            assert_eq!(out.control_trace, batch.control_trace, "{}", policy.name());
+            assert_eq!(out.eta_cold, batch.eta_cold, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn driver_load_surface_tracks_outstanding_work() {
+        let cfg = cfg();
+        let mut gen = WorkloadGenerator::new(WorkloadKind::ReAct, cfg.model.kind, 4);
+        let scripts = gen.sessions(2);
+        let total: u64 = scripts
+            .iter()
+            .map(|s| s.total_prefill_tokens() + s.total_decode_tokens())
+            .sum();
+        let mut drv = SimDriver::new(&cfg, Policy::Vllm);
+        assert_eq!(drv.load().outstanding_tokens, 0);
+        for (i, s) in scripts.into_iter().enumerate() {
+            drv.inject(s, i as u64 * 1000, &[]);
+        }
+        assert_eq!(drv.load().outstanding_tokens, total);
+        assert_eq!(drv.load().active_sessions, 2);
+        drv.set_no_more_arrivals();
+        let mut events = Vec::new();
+        while drv.step() {}
+        drv.drain_events(&mut events);
+        // Completion events cover every burst and both sessions; the
+        // outstanding ledger drains to zero with the work.
+        assert_eq!(drv.load().outstanding_tokens, 0);
+        assert_eq!(drv.load().active_sessions, 0);
+        let done = events
+            .iter()
+            .filter(|e| matches!(e, DriverEvent::SessionDone { .. }))
+            .count();
+        assert_eq!(done, 2);
+        let bursts = events
+            .iter()
+            .filter(|e| matches!(e, DriverEvent::BurstDone { .. }))
+            .count();
+        assert!(bursts >= 2, "at least one burst per session");
+        // Event timestamps are non-decreasing (processing order).
+        let ts: Vec<u64> = events
+            .iter()
+            .map(|e| match e {
+                DriverEvent::BurstDone { t_us, .. } | DriverEvent::SessionDone { t_us, .. } => {
+                    *t_us
+                }
+            })
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -86,6 +86,25 @@ impl RadixPrefixCache {
         (matched, blocks)
     }
 
+    /// Longest cached prefix of `tokens`, in tokens, as a **pure read**: no
+    /// block leasing, no LRU-stamp touch, no hit/miss accounting. The fleet
+    /// router scores replicas with this probe without perturbing the cache
+    /// state the eventual admission will see.
+    pub fn peek(&self, tokens: &[u32], block_size: usize) -> usize {
+        let mut node = &self.root;
+        let mut matched = 0usize;
+        for chunk in tokens.chunks_exact(block_size) {
+            match node.children.get(chunk) {
+                Some(child) => {
+                    matched += block_size;
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        matched
+    }
+
     /// Insert a prefilled sequence: `blocks[i]` backs tokens
     /// `[i*bs, (i+1)*bs)`. Only fully-filled blocks are indexed. Blocks
     /// newly referenced by the tree are `retain`ed (the tree holds its own
@@ -257,6 +276,23 @@ mod tests {
         // Shared head block survives (still an interior node).
         assert!(a.ref_count(b1[0]) > 0);
         a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_is_a_pure_read() {
+        let (mut a, mut r) = setup();
+        let toks: Vec<u32> = (0..8).collect();
+        let blocks = a.allocate_for_tokens(8).unwrap();
+        r.insert(&toks, &blocks, &mut a);
+        let hits_before = r.hit_tokens;
+        let misses_before = r.miss_tokens;
+        let rc = a.ref_count(blocks[0]);
+        assert_eq!(r.peek(&toks, 4), 8);
+        assert_eq!(r.peek(&toks[..6], 4), 4, "partial final block never matches");
+        assert_eq!(r.peek(&[9, 9, 9, 9], 4), 0);
+        assert_eq!(r.hit_tokens, hits_before, "peek does no accounting");
+        assert_eq!(r.miss_tokens, misses_before);
+        assert_eq!(a.ref_count(blocks[0]), rc, "peek leases nothing");
     }
 
     #[test]

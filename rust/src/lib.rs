@@ -20,6 +20,7 @@
 
 pub mod agents;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -1,0 +1,252 @@
+//! Fleet-level metrics: one report across N replica simulators.
+//!
+//! Per-replica [`super::RunReport`]s cannot be merged after the fact
+//! (percentiles do not compose), so the fleet loop collects the raw
+//! per-request TTFT/TPOT samples from every replica's recorder — in global
+//! session order, keeping aggregation byte-deterministic — and summarizes
+//! them here, alongside the routing-quality surfaces the single-GPU report
+//! has no notion of: per-replica load balance (coefficient of variation),
+//! session-affinity rate, and the fleet-wide radix hit rate.
+
+use super::percentile::Summary;
+use super::recorder::WorkflowReport;
+use super::slo::SloReport;
+use crate::util::json::Value;
+
+/// Aggregated results of one fleet run ([`crate::cluster::run_cluster`]).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Replica count.
+    pub replicas: usize,
+    /// Router policy name.
+    pub router: String,
+    pub sessions: usize,
+    pub completed_sessions: usize,
+    pub total_tokens: u64,
+    /// Fleet wall clock: the latest replica's last event (ms).
+    pub wall_ms: f64,
+    /// Output tokens per second across the whole fleet.
+    pub throughput_tok_s: f64,
+    /// Fleet-wide per-request TTFT/TPOT distributions (samples gathered in
+    /// global session order).
+    pub ttft: Summary,
+    pub tpot: Summary,
+    /// Joint per-session SLO attainment summed across replicas (counts
+    /// compose exactly; rates are derived).
+    pub slo: SloReport,
+    /// Output tokens emitted per replica (the balance surface).
+    pub per_replica_tokens: Vec<u64>,
+    /// Coefficient of variation (population std / mean) of
+    /// `per_replica_tokens`; 0 = perfectly balanced.
+    pub load_cov: f64,
+    /// Follow-up sessions of a multi-session unit (chained agent sessions,
+    /// workflow-task sessions) routed to the unit's previous replica, over
+    /// all such opportunities — 1.0 under the session-affinity router.
+    pub affinity_hits: u64,
+    pub affinity_opportunities: u64,
+    /// Radix prefix-cache counters summed across replicas (zeros off the
+    /// paged path).
+    pub radix_hit_tokens: u64,
+    pub radix_miss_tokens: u64,
+    pub evictions: u64,
+    pub preemptions: u64,
+    /// Worst per-replica memory-stall p99 (ms); 0 off the paged path.
+    pub stall_p99_ms: f64,
+    /// Whether the paged KV path ran (gates the memory lines in output).
+    pub kv_present: bool,
+    /// Fleet-wide task metrics (workflow scenarios only; join barriers
+    /// resolve across replicas, so this is computed by the fleet loop, not
+    /// by any single replica).
+    pub workflow: Option<WorkflowReport>,
+}
+
+/// Population coefficient of variation of per-replica token counts.
+pub fn load_cov(per_replica_tokens: &[u64]) -> f64 {
+    if per_replica_tokens.is_empty() {
+        return 0.0;
+    }
+    let n = per_replica_tokens.len() as f64;
+    let mean = per_replica_tokens.iter().map(|&t| t as f64).sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = per_replica_tokens
+        .iter()
+        .map(|&t| {
+            let d = t as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    var.sqrt() / mean
+}
+
+impl FleetReport {
+    /// Affinity rate over follow-up placements (1.0 when there were none —
+    /// nothing to keep home is vacuously home).
+    pub fn affinity_rate(&self) -> f64 {
+        if self.affinity_opportunities == 0 {
+            1.0
+        } else {
+            self.affinity_hits as f64 / self.affinity_opportunities as f64
+        }
+    }
+
+    /// Fleet-wide radix hit rate over all cold-prefill lookups.
+    pub fn radix_hit_rate(&self) -> f64 {
+        let total = self.radix_hit_tokens + self.radix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.radix_hit_tokens as f64 / total as f64
+        }
+    }
+
+    /// Deterministic JSON form (cluster CLI output, fleet sweep reports).
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("replicas", self.replicas.into()),
+            ("router", self.router.as_str().into()),
+            ("sessions", self.sessions.into()),
+            ("completed_sessions", self.completed_sessions.into()),
+            ("total_tokens", self.total_tokens.into()),
+            ("wall_ms", self.wall_ms.into()),
+            ("throughput_tok_s", self.throughput_tok_s.into()),
+            ("ttft", self.ttft.to_value()),
+            ("tpot", self.tpot.to_value()),
+            ("slo_attained", self.slo.attained.into()),
+            ("slo_sessions", self.slo.sessions.into()),
+            ("slo_rate", self.slo.rate().into()),
+            (
+                "per_replica_tokens",
+                Value::Arr(self.per_replica_tokens.iter().map(|&t| t.into()).collect()),
+            ),
+            ("load_cov", self.load_cov.into()),
+            ("affinity_hits", self.affinity_hits.into()),
+            ("affinity_opportunities", self.affinity_opportunities.into()),
+            ("affinity_rate", self.affinity_rate().into()),
+            ("radix_hit_tokens", self.radix_hit_tokens.into()),
+            ("radix_miss_tokens", self.radix_miss_tokens.into()),
+            ("radix_hit_rate", self.radix_hit_rate().into()),
+            ("evictions", self.evictions.into()),
+            ("preemptions", self.preemptions.into()),
+            ("stall_p99_ms", self.stall_p99_ms.into()),
+        ];
+        if let Some(wf) = &self.workflow {
+            fields.push(("workflow", wf.to_value()));
+        }
+        Value::obj(fields)
+    }
+}
+
+impl std::fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "fleet {} replicas | router {} | sessions={}/{} tokens={} wall={:.0}ms",
+            self.replicas,
+            self.router,
+            self.completed_sessions,
+            self.sessions,
+            self.total_tokens,
+            self.wall_ms
+        )?;
+        writeln!(f, "  TTFT  {}", self.ttft)?;
+        writeln!(f, "  TPOT  {}", self.tpot)?;
+        writeln!(
+            f,
+            "  SLO   {}/{} attained ({:.1}%)",
+            self.slo.attained,
+            self.slo.sessions,
+            self.slo.rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "  bal   tokens/replica {:?} | CoV {:.3}",
+            self.per_replica_tokens, self.load_cov
+        )?;
+        write!(
+            f,
+            "  route affinity {:.1}% ({}/{})",
+            self.affinity_rate() * 100.0,
+            self.affinity_hits,
+            self.affinity_opportunities
+        )?;
+        if self.kv_present {
+            write!(
+                f,
+                " | radix hit {:.1}% | evictions {} preemptions {} | stall p99 {:.1}ms",
+                self.radix_hit_rate() * 100.0,
+                self.evictions,
+                self.preemptions,
+                self.stall_p99_ms
+            )?;
+        }
+        if let Some(wf) = &self.workflow {
+            write!(f, "\n  task  {wf}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(tokens: Vec<u64>) -> FleetReport {
+        let load = load_cov(&tokens);
+        FleetReport {
+            replicas: tokens.len(),
+            router: "cache-aware".into(),
+            sessions: 10,
+            completed_sessions: 10,
+            total_tokens: tokens.iter().sum(),
+            wall_ms: 1000.0,
+            throughput_tok_s: 1.0,
+            ttft: Summary::from_samples(&[10.0, 20.0]),
+            tpot: Summary::from_samples(&[1.0]),
+            slo: SloReport { sessions: 10, attained: 9, ttft_violations: 1, tpot_violations: 0 },
+            per_replica_tokens: tokens,
+            load_cov: load,
+            affinity_hits: 3,
+            affinity_opportunities: 4,
+            radix_hit_tokens: 90,
+            radix_miss_tokens: 10,
+            evictions: 0,
+            preemptions: 0,
+            stall_p99_ms: 0.0,
+            kv_present: true,
+            workflow: None,
+        }
+    }
+
+    #[test]
+    fn cov_measures_imbalance() {
+        assert_eq!(load_cov(&[]), 0.0);
+        assert_eq!(load_cov(&[0, 0]), 0.0);
+        assert!((load_cov(&[100, 100, 100])).abs() < 1e-12, "balanced fleet");
+        // All load on one of two replicas: std = mean -> CoV = 1.
+        assert!((load_cov(&[200, 0]) - 1.0).abs() < 1e-12);
+        assert!(load_cov(&[150, 50]) < load_cov(&[200, 0]));
+    }
+
+    #[test]
+    fn rates_and_json_are_consistent() {
+        let r = report(vec![60, 40]);
+        assert!((r.affinity_rate() - 0.75).abs() < 1e-12);
+        assert!((r.radix_hit_rate() - 0.9).abs() < 1e-12);
+        let v = r.to_value().to_string();
+        assert!(v.contains("\"load_cov\""));
+        assert!(v.contains("\"affinity_rate\""));
+        assert_eq!(v, report(vec![60, 40]).to_value().to_string(), "deterministic");
+        // Vacuous affinity (no multi-session units) reads as fully kept.
+        let mut r2 = report(vec![60, 40]);
+        r2.affinity_opportunities = 0;
+        r2.affinity_hits = 0;
+        assert_eq!(r2.affinity_rate(), 1.0);
+        // Display renders without panicking and carries the headline.
+        let text = format!("{r}");
+        assert!(text.contains("fleet 2 replicas"));
+        assert!(text.contains("radix hit 90.0%"));
+    }
+}

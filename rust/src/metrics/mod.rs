@@ -6,10 +6,12 @@
 //! what makes byte-identical golden-report snapshots and sweep reports
 //! possible (see `docs/ARCHITECTURE.md`, determinism contract).
 
+mod fleet;
 mod percentile;
 mod recorder;
 mod slo;
 
+pub use fleet::{load_cov, FleetReport};
 pub use percentile::{percentile, Summary};
 pub use recorder::{
     KvReport, MetricsRecorder, RunReport, SessionMetrics, TpotSample, WorkflowReport,

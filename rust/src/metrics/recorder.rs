@@ -361,6 +361,28 @@ impl WorkflowReport {
         }
     }
 
+    /// Aggregate from per-task completion timestamps: task `t` was
+    /// released at `release_us[t]` and finished at `done_us[t]` (`None` =
+    /// unfinished). Shared by the single-GPU simulator and the fleet loop
+    /// ([`crate::cluster`]) so makespan accounting cannot diverge between
+    /// the two.
+    pub fn from_task_times(
+        release_us: &[u64],
+        done_us: &[Option<u64>],
+        critical_paths_ms: &[f64],
+        task_slo_ms: f64,
+    ) -> Self {
+        let n_tasks = release_us.len();
+        let mut completed = Vec::with_capacity(n_tasks);
+        for t in 0..n_tasks {
+            if let Some(done) = done_us[t] {
+                let span = done.saturating_sub(release_us[t]);
+                completed.push((span as f64 / 1000.0, critical_paths_ms[t]));
+            }
+        }
+        Self::from_parts(n_tasks, &completed, critical_paths_ms, task_slo_ms)
+    }
+
     /// Task-SLO attainment rate over *released* tasks (incomplete = failed).
     pub fn rate(&self) -> f64 {
         if self.tasks == 0 {

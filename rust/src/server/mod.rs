@@ -41,6 +41,15 @@ USAGE:
                              [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
+  agentserve cluster list
+  agentserve cluster run     (--name S | --file f.json) [--replicas N] [--router R]
+                             [--policy P | --all-policies] [--model M] [--gpu G]
+                             [--seed N] [--per-replica]
+                             [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
+  agentserve cluster sweep   (--name gpus-for-slo | (--scenario S | --file f.json)
+                              --replica-counts n1,n2,…) [--router R] [--policy P]
+                             [--model M] [--gpu G] [--seed N]
+                             [--out report.json] [--csv report.csv]
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
   agentserve analyze  [--model M] [--gpu G] [--delta D] [--eps E]
   agentserve serve    [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
@@ -52,8 +61,13 @@ gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
            | memory-pressure | shared-prefix-fleet
 sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee | fanout-knee
-           (sweep runs all paper policies unless --policy is given; see
-           rust/src/workload/README.md for the scenario/sweep file schema)
+           | gpus-for-slo (sweep runs all paper policies unless --policy is
+           given; see rust/src/workload/README.md for the scenario/sweep
+           file schema)
+routers:   round-robin | least-outstanding | session-affinity | cache-aware
+           — fleet session routing for `cluster run|sweep` (--replicas N
+           single-GPU replicas behind the router; gpus-for-slo reports the
+           smallest fleet meeting the TTFT SLO — the inverse knee)
 workflows: single-react | plan-execute | supervisor-worker | pipeline-chain
            | debate — multi-agent DAG tasks (fan-out, join barriers, context
            continuations) with task-level makespan/SLO metrics
@@ -65,10 +79,13 @@ kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
 
 /// Entry point used by `main` (and by CLI tests).
 pub fn run(args: Args) -> crate::Result<()> {
-    // Default-deny the action positional: only `scenario` and `workflow`
-    // take one, so a stray positional on any other (or future) subcommand
-    // errors loudly instead of being silently ignored.
-    if !matches!(args.subcommand.as_deref(), Some("scenario") | Some("workflow")) {
+    // Default-deny the action positional: only `scenario`, `workflow`, and
+    // `cluster` take one, so a stray positional on any other (or future)
+    // subcommand errors loudly instead of being silently ignored.
+    if !matches!(
+        args.subcommand.as_deref(),
+        Some("scenario") | Some("workflow") | Some("cluster")
+    ) {
         if let Some(a) = &args.action {
             anyhow::bail!("unexpected positional argument '{a}'");
         }
@@ -77,6 +94,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         Some("bench") => bench(&args),
         Some("scenario") => scenario_cmd(&args),
         Some("workflow") => workflow_cmd(&args),
+        Some("cluster") => cluster_cmd(&args),
         Some("figures") => run_figures(&args),
         Some("analyze") => {
             let model: ModelKind = args.get_or("model", "7b").parse()?;
@@ -181,7 +199,7 @@ fn scenario_from_file(path: &str, cfg: &mut Config) -> crate::Result<crate::work
     let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
     let sc = crate::workload::Scenario::from_value(&v)?;
     if let Some(overrides) = v.get("config") {
-        cfg.apply_overrides(overrides);
+        cfg.apply_overrides(overrides)?;
         cfg.validate()?;
     }
     Ok(sc)
@@ -527,6 +545,186 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
     }
 }
 
+/// `agentserve cluster list|run|sweep` — the fleet layer CLI.
+///
+/// `run` drives a scenario on an N-replica fleet behind a session router
+/// and prints the [`crate::metrics::FleetReport`]; `sweep` runs the
+/// replica (capacity-planning) axis — the registry `gpus-for-slo` sweep or
+/// an ad-hoc `--replica-counts` grid — and reports the *inverse* knee: the
+/// smallest fleet meeting the TTFT SLO.
+fn cluster_cmd(args: &Args) -> crate::Result<()> {
+    use crate::cluster::run_cluster;
+    use crate::config::RouterPolicy;
+    use crate::workload::{SweepAxis, SweepSpec};
+
+    match args.action.as_deref() {
+        Some("list") => {
+            println!("router policies (cluster run --router <policy>):");
+            for r in RouterPolicy::ALL {
+                println!("  {:<18} {}", r.name(), r.describe());
+            }
+            println!("\nfleet sweeps (cluster sweep --name <sweep>):");
+            for s in SweepSpec::registry() {
+                if let SweepAxis::Replicas { counts, router } = &s.axis {
+                    println!(
+                        "  {:<16} {:?} replicas  {:<11} {}",
+                        s.name,
+                        counts,
+                        router.name(),
+                        s.description
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let model: ModelKind = args.get_or("model", "3b").parse()?;
+            let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+            let seed = args.get_u64("seed", 7)?;
+            let mut cfg = match args.get("config") {
+                Some(p) => Config::from_path(p)?,
+                None => Config::preset(model, gpu),
+            };
+            let mut scenario = load_scenario_arg(args, &mut cfg)?;
+            scenario.validate()?;
+            if apply_kv_flags(args, &mut cfg, scenario.kv)? {
+                scenario.kv = None;
+            }
+            let replicas = args.get_usize("replicas", cfg.cluster.replicas)?;
+            anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+            let router: RouterPolicy = match args.get("router") {
+                Some(r) => r.parse()?,
+                None => cfg.cluster.router,
+            };
+            println!(
+                "== cluster '{}' | {} replicas | router {} | {} | {} | seed {} ==",
+                scenario.name, replicas, router, model, gpu, seed
+            );
+            for policy in scenario_policies(args)? {
+                let out = run_cluster(&cfg, policy, &scenario, replicas, router, seed)?;
+                println!("--- {} ---", out.policy_name);
+                println!("{}", out.report);
+                if args.has("per-replica") {
+                    for (r, o) in out.per_replica.iter().enumerate() {
+                        println!(
+                            "  r{r}    sessions={}/{} tokens={} ttft p99 {:.0}ms",
+                            o.report.completed_sessions,
+                            o.report.sessions,
+                            o.report.total_tokens,
+                            o.report.ttft.p99
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
+        Some("sweep") => {
+            let model: ModelKind = args.get_or("model", "3b").parse()?;
+            let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+            let seed = args.get_u64("seed", 7)?;
+            let mut cfg = match args.get("config") {
+                Some(p) => Config::from_path(p)?,
+                None => Config::preset(model, gpu),
+            };
+            // Fleet grids vary replicas only; refuse the scenario-sweep
+            // axis flags instead of silently dropping them (the grid the
+            // user asked for must be the grid run).
+            for flag in ["rates", "agents", "mix", "kv-blocks", "fan-outs"] {
+                anyhow::ensure!(
+                    args.get(flag).is_none(),
+                    "--{flag} is a scenario-sweep axis; `cluster sweep` grids vary the \
+                     replica count only — use `agentserve scenario sweep` for that axis"
+                );
+            }
+            let spec = if let Some(name) = args.get("name") {
+                // Refuse flags the registry sweep would silently drop —
+                // including --router: the grid's router is baked into the
+                // registry definition.
+                anyhow::ensure!(
+                    args.get("replica-counts").is_none()
+                        && args.get("scenario").is_none()
+                        && args.get("file").is_none()
+                        && args.get("router").is_none(),
+                    "--name picks a built-in fleet sweep (fixed grid and router); \
+                     drop it to build an ad-hoc --replica-counts/--router grid"
+                );
+                let spec = SweepSpec::by_name(name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown sweep '{name}' (try `agentserve cluster list`)")
+                })?;
+                anyhow::ensure!(
+                    matches!(spec.axis, SweepAxis::Replicas { .. }),
+                    "sweep '{name}' is not a fleet (replicas-axis) sweep; \
+                     run it via `agentserve scenario sweep --name {name}`"
+                );
+                spec
+            } else {
+                let base = if let Some(path) = args.get("file") {
+                    scenario_from_file(path, &mut cfg)?
+                } else if let Some(name) = args.get("scenario") {
+                    crate::workload::Scenario::by_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown scenario '{name}' (try `agentserve scenario list`)"
+                        )
+                    })?
+                } else {
+                    anyhow::bail!(
+                        "cluster sweep needs --name <fleet-sweep>, or a base scenario \
+                         (--scenario <name> | --file f.json) plus --replica-counts n1,n2,…"
+                    )
+                };
+                let counts = args.get_usize_list("replica-counts")?.ok_or_else(|| {
+                    anyhow::anyhow!("pass --replica-counts n1,n2,… for an ad-hoc fleet sweep")
+                })?;
+                let router: RouterPolicy = match args.get("router") {
+                    Some(r) => r.parse()?,
+                    None => cfg.cluster.router,
+                };
+                SweepSpec {
+                    name: format!("{}-fleet-sweep", base.name),
+                    description: format!(
+                        "ad-hoc replicas sweep over '{}' ({} router)",
+                        base.name, router
+                    ),
+                    base,
+                    axis: SweepAxis::Replicas { counts, router },
+                }
+            };
+            spec.validate()?;
+            let policies = match args.get("policy") {
+                Some(p) => vec![p.parse::<Policy>()?],
+                None => Policy::paper_lineup(),
+            };
+            println!(
+                "== fleet sweep '{}' | axis {} ({}) | {} | {} | seed {} ==",
+                spec.name,
+                spec.axis.kind_name(),
+                spec.axis.unit(),
+                model,
+                gpu,
+                seed
+            );
+            let report = crate::workload::run_sweep(&cfg, &spec, &policies, seed)?;
+            print_sweep_report(&report);
+            if let Some(path) = args.get("out") {
+                report.save_json(path)?;
+                println!("sweep report -> {path}");
+            }
+            if let Some(path) = args.get("csv") {
+                report.save_csv(path)?;
+                println!("sweep CSV -> {path}");
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("{USAGE}");
+            match other {
+                Some(a) => anyhow::bail!("unknown cluster action '{a}'"),
+                None => anyhow::bail!("cluster needs an action: list|run|sweep"),
+            }
+        }
+    }
+}
+
 /// Resolve `scenario sweep` inputs: `--name` picks a built-in sweep;
 /// otherwise a base scenario (`--scenario` registry name or `--file`, which
 /// may embed config overrides) plus exactly one axis flag builds an ad-hoc
@@ -539,7 +737,17 @@ fn resolve_sweep_spec(
     if let Some(name) = args.get("name") {
         // A registry sweep is fully specified: refuse flags that would be
         // silently dropped (the grid the user asked for must be the grid run).
-        for flag in ["scenario", "file", "rates", "agents", "mix", "kv-blocks", "fan-outs"] {
+        for flag in [
+            "scenario",
+            "file",
+            "rates",
+            "agents",
+            "mix",
+            "kv-blocks",
+            "fan-outs",
+            "replica-counts",
+            "router",
+        ] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--name picks a built-in sweep; --{flag} would be ignored — \
@@ -550,6 +758,12 @@ fn resolve_sweep_spec(
             anyhow::anyhow!("unknown sweep '{name}' (try `agentserve scenario list`)")
         });
     }
+    // No ad-hoc `scenario sweep` axis uses a router; refuse rather than
+    // silently drop it (fleet grids live under `agentserve cluster sweep`).
+    anyhow::ensure!(
+        args.get("router").is_none(),
+        "--router applies to fleet (replica) grids; use `agentserve cluster sweep`"
+    );
     let base = if let Some(path) = args.get("file") {
         scenario_from_file(path, cfg)?
     } else if let Some(name) = args.get("scenario") {
@@ -626,7 +840,12 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
             );
         }
     }
-    if report.axis == "fan-out" {
+    if report.axis == "replicas" {
+        println!(
+            "inverse knee (smallest fleet whose p99 TTFT meets the {:.0} ms SLO):",
+            report.slo_ttft_ms
+        );
+    } else if report.axis == "fan-out" {
         println!(
             "task knee ({} where p99 makespan first exceeds the {:.0} ms task SLO):",
             report.axis, report.slo_task_ms
@@ -937,6 +1156,68 @@ mod tests {
         .is_err());
         // Registry sweeps refuse a would-be-dropped --fan-outs flag.
         assert!(run(args("scenario sweep --name fanout-knee --fan-outs 2,4")).is_err());
+    }
+
+    #[test]
+    fn cluster_list_and_run_smoke() {
+        run(args("cluster list")).unwrap();
+        run(args("cluster run --name mixed-fleet --replicas 2 --model 3b")).unwrap();
+        run(args(
+            "cluster run --name mixed-fleet --replicas 3 --router round-robin --model 3b \
+             --per-replica",
+        ))
+        .unwrap();
+        assert!(run(args("cluster run --name no-such-scenario --replicas 2")).is_err());
+        assert!(run(args("cluster run --name mixed-fleet --replicas 0")).is_err());
+        assert!(run(args("cluster run --name mixed-fleet --router warp-speed")).is_err());
+        assert!(run(args("cluster")).is_err());
+        assert!(run(args("cluster frobnicate")).is_err());
+    }
+
+    #[test]
+    fn cluster_sweep_smoke_and_artifacts() {
+        let dir = std::env::temp_dir().join("agentserve_cluster_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("fleet.json");
+        let csv = dir.join("fleet.csv");
+        run(args(&format!(
+            "cluster sweep --scenario mixed-fleet --replica-counts 1,2 --policy vllm \
+             --model 3b --out {} --csv {}",
+            json.to_str().unwrap(),
+            csv.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "replicas");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.lines().next().unwrap().ends_with("replicas,load_cov"));
+        assert_eq!(csv_text.lines().count(), 1 + 2);
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(csv).unwrap();
+        // Flag validation: --name with would-be-dropped flags, non-fleet
+        // registry names, and a missing axis are all loud errors.
+        assert!(run(args("cluster sweep --name gpus-for-slo --replica-counts 1,2")).is_err());
+        assert!(
+            run(args("cluster sweep --name gpus-for-slo --router round-robin")).is_err(),
+            "the registry sweep's router is baked in; --router must not be dropped"
+        );
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --rates 1,2 --router round-robin"
+        ))
+        .is_err());
+        // …and cluster sweep refuses scenario-sweep axis flags.
+        assert!(run(args("cluster sweep --name gpus-for-slo --rates 0.5,1")).is_err());
+        assert!(run(args(
+            "cluster sweep --scenario mixed-fleet --replica-counts 1,2 --kv-blocks 640,65536"
+        ))
+        .is_err());
+        assert!(run(args("cluster sweep --name kv-knee")).is_err(), "not a fleet sweep");
+        assert!(run(args("cluster sweep --scenario mixed-fleet")).is_err());
+        assert!(run(args("cluster sweep")).is_err());
+        // The registry fleet sweep also resolves through `scenario sweep`
+        // (it is just another sweep), and refuses dropped flags there too.
+        assert!(run(args("scenario sweep --name gpus-for-slo --replica-counts 1,2")).is_err());
     }
 
     #[test]

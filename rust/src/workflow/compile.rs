@@ -86,6 +86,88 @@ pub struct WorkflowPlan {
     pub units: Vec<UnitInfo>,
 }
 
+impl WorkflowPlan {
+    /// Initial arrival-gate counters: unresolved dependency units per
+    /// session. Shared by the in-simulator orchestrator (`WfState`) and
+    /// the fleet loop so gate semantics cannot diverge.
+    pub fn initial_arrival_gates(&self) -> Vec<usize> {
+        self.arrivals.iter().map(|g| g.dep_count).collect()
+    }
+
+    /// Initial step-gate counters per (session, step).
+    pub fn initial_step_gates(&self) -> Vec<Vec<usize>> {
+        self.step_deps.clone()
+    }
+
+    /// Sessions per task (the countdown to each task's completion).
+    pub fn task_session_counts(&self) -> Vec<usize> {
+        let mut left = vec![0usize; self.n_tasks];
+        for &t in &self.task_of {
+            left[t] += 1;
+        }
+        left
+    }
+
+    /// Root sessions (no arrival dependencies) paired with their absolute
+    /// release timestamps — the unconditional seed arrivals.
+    pub fn root_arrivals(&self) -> Vec<(usize, u64)> {
+        self.arrivals
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.dep_count == 0)
+            .map(|(s, g)| (s, g.delay_us))
+            .collect()
+    }
+
+    /// Resolve the DAG unit completed by `(sess, burst)` — if that burst
+    /// carries one — against the live gate counters, returning what just
+    /// opened. This is the *single* implementation of dependency-release
+    /// semantics: the in-simulator orchestrator (`engine/sim.rs`) and the
+    /// fleet loop (`crate::cluster`) both decrement through it, so release
+    /// timing cannot drift between the batch and fleet paths. The caller
+    /// schedules the returned releases (arrival delays apply from the
+    /// resolution timestamp; opened steps may wake parked sessions).
+    pub fn resolve_burst(
+        &self,
+        sess: usize,
+        burst: usize,
+        arr_remaining: &mut [usize],
+        step_remaining: &mut [Vec<usize>],
+    ) -> ResolvedUnit {
+        let mut out = ResolvedUnit { arrivals: Vec::new(), steps: Vec::new() };
+        let Some(&Some(unit)) = self.unit_of_burst[sess].get(burst) else {
+            return out;
+        };
+        for &target in &self.dependents[unit] {
+            match target {
+                DepTarget::Arrival(s2) => {
+                    arr_remaining[s2] -= 1;
+                    if arr_remaining[s2] == 0 {
+                        out.arrivals.push((s2, self.arrivals[s2].delay_us));
+                    }
+                }
+                DepTarget::Step { sess: s2, step } => {
+                    step_remaining[s2][step] -= 1;
+                    if step_remaining[s2][step] == 0 {
+                        out.steps.push((s2, step));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// What one completed unit just released ([`WorkflowPlan::resolve_burst`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ResolvedUnit {
+    /// Sessions whose arrival gate opened, with the release delay to apply
+    /// from the resolution timestamp (folded tool latency).
+    pub arrivals: Vec<(usize, u64)>,
+    /// Steps `(sess, step)` whose join barrier opened.
+    pub steps: Vec<(usize, usize)>,
+}
+
 /// Scripts + plan: everything the simulator needs to run a workflow fleet.
 #[derive(Debug, Clone)]
 pub struct CompiledWorkflow {

@@ -29,5 +29,7 @@
 mod compile;
 mod spec;
 
-pub use compile::{compile, ArrivalGate, CompiledWorkflow, DepTarget, UnitInfo, WorkflowPlan};
+pub use compile::{
+    compile, ArrivalGate, CompiledWorkflow, DepTarget, ResolvedUnit, UnitInfo, WorkflowPlan,
+};
 pub use spec::{NodeKind, WorkflowLoad, WorkflowNode, WorkflowSpec};

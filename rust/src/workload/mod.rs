@@ -39,8 +39,8 @@ pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
 pub use sweep::{
-    knee_value, knee_value_kv, knee_value_task, run_sweep, PolicyPoint, SweepAxis, SweepPoint,
-    SweepReport, SweepSpec,
+    knee_by, knee_value, knee_value_fleet, knee_value_kv, knee_value_task, run_sweep, KneeRule,
+    PolicyPoint, SweepAxis, SweepPoint, SweepReport, SweepSpec,
 };
 pub use trace::{Trace, TraceEvent};
 

@@ -21,7 +21,8 @@
 
 use super::scenario::{ArrivalProcess, Population, Scenario};
 use super::spec::WorkloadKind;
-use crate::config::{Config, KvConfig};
+use crate::cluster::FleetOutcome;
+use crate::config::{Config, KvConfig, RouterPolicy};
 use crate::engine::{run_scenario_fast, Policy, SimOutcome};
 use crate::util::json::Value;
 use crate::workflow::{WorkflowLoad, WorkflowSpec};
@@ -55,6 +56,12 @@ pub enum SweepAxis {
     /// per task and a heavier join — the knee is judged on the task SLO
     /// (p99 makespan vs `slo.task_ms`), not per-request TTFT.
     FanOut(Vec<usize>),
+    /// Replica count: each point runs the *unchanged* base scenario on an
+    /// N-GPU fleet behind `router` ([`crate::cluster::run_cluster`]). The
+    /// capacity-planning axis: the knee is **inverse** — the smallest
+    /// fleet whose p99 TTFT *meets* the SLO ([`knee_value_fleet`]), i.e.
+    /// "how many GPUs to hold the SLO at this rate".
+    Replicas { counts: Vec<usize>, router: RouterPolicy },
 }
 
 impl SweepAxis {
@@ -66,6 +73,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(_) => "mix-ratio",
             SweepAxis::KvBlocks(_) => "kv-blocks",
             SweepAxis::FanOut(_) => "fan-out",
+            SweepAxis::Replicas { .. } => "replicas",
         }
     }
 
@@ -77,6 +85,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(_) => "fraction",
             SweepAxis::KvBlocks(_) => "blocks",
             SweepAxis::FanOut(_) => "degree",
+            SweepAxis::Replicas { .. } => "GPUs",
         }
     }
 
@@ -88,6 +97,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(v) => v.len(),
             SweepAxis::KvBlocks(v) => v.len(),
             SweepAxis::FanOut(v) => v.len(),
+            SweepAxis::Replicas { counts, .. } => counts.len(),
         }
     }
 
@@ -103,6 +113,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(v) => v[i],
             SweepAxis::KvBlocks(v) => v[i] as f64,
             SweepAxis::FanOut(v) => v[i] as f64,
+            SweepAxis::Replicas { counts, .. } => counts[i] as f64,
         }
     }
 }
@@ -190,6 +201,11 @@ impl SweepSpec {
                     anyhow::ensure!(d >= 1, "fan-out degree must be >= 1");
                 }
             }
+            SweepAxis::Replicas { counts, .. } => {
+                for &c in counts {
+                    anyhow::ensure!(c >= 1, "replica count must be >= 1");
+                }
+            }
         }
         Ok(())
     }
@@ -223,6 +239,10 @@ impl SweepSpec {
                     .expect("validate(): fan-out sweeps carry a workflow")
                     .fan_out = Some(ds[i]);
             }
+            // The replica axis varies the fleet, not the workload: every
+            // point replays the identical scenario bytes on a larger
+            // cluster (run_sweep applies the count to run_cluster_fast).
+            SweepAxis::Replicas { .. } => {}
         }
         sc
     }
@@ -339,6 +359,33 @@ impl SweepSpec {
                 },
                 axis: SweepAxis::FanOut(vec![2, 4, 8, 16]),
             },
+            SweepSpec {
+                name: "gpus-for-slo".into(),
+                description:
+                    "the inverse knee: smallest fleet of consumer GPUs holding the TTFT SLO \
+                     for 2,000 paper-fig5 agents at 1.0/s — twice the single-GPU saturation \
+                     knee"
+                        .into(),
+                base: Scenario {
+                    name: "fig5-fleet-overload".into(),
+                    description: "2,000 single-session ReAct agents, open-loop 1.0/s — \
+                                  past what one GPU can absorb"
+                        .into(),
+                    // Single-GPU cold-prefill capacity saturates near
+                    // 0.5 sessions/s (see paper-fig5-sweep); 1.0/s needs a
+                    // fleet, so the compliant count is > 1 and finite.
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+                    populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                    total_sessions: 2000,
+                    n_agents: 2000,
+                    kv: None,
+                    workflow: None,
+                },
+                axis: SweepAxis::Replicas {
+                    counts: vec![1, 2, 4],
+                    router: RouterPolicy::CacheAware,
+                },
+            },
         ]
     }
 
@@ -372,6 +419,10 @@ pub struct PolicyPoint {
     /// Workflow task metrics (zeros on plain session scenarios).
     pub makespan_p99_ms: f64,
     pub task_slo_rate: f64,
+    /// Fleet metrics (`replicas` = 1, `load_cov` = 0 on single-GPU rows,
+    /// so fleet sweeps diff cleanly against single-GPU sweeps).
+    pub replicas: usize,
+    pub load_cov: f64,
 }
 
 impl PolicyPoint {
@@ -402,6 +453,41 @@ impl PolicyPoint {
             stall_p99_ms,
             makespan_p99_ms,
             task_slo_rate,
+            replicas: 1,
+            load_cov: 0.0,
+        }
+    }
+
+    /// One fleet run as a sweep row: same schema as the single-GPU form,
+    /// with the fleet-wide aggregates in the shared columns and the
+    /// fleet-only surfaces (`replicas`, `load_cov`) filled in.
+    pub fn from_fleet(out: &FleetOutcome) -> Self {
+        let r = &out.report;
+        let (makespan_p99_ms, task_slo_rate) = match &r.workflow {
+            Some(wf) => (wf.makespan.p99, wf.rate()),
+            None => (0.0, 0.0),
+        };
+        Self {
+            policy: out.policy_name.clone(),
+            ttft_p50: r.ttft.p50,
+            ttft_p95: r.ttft.p95,
+            ttft_p99: r.ttft.p99,
+            tpot_p50: r.tpot.p50,
+            tpot_p95: r.tpot.p95,
+            tpot_p99: r.tpot.p99,
+            throughput_tok_s: r.throughput_tok_s,
+            slo_rate: r.slo.rate(),
+            completed: r.completed_sessions,
+            wall_ms: r.wall_ms,
+            radix_hit_rate: r.radix_hit_rate(),
+            evictions: r.evictions,
+            preemptions: r.preemptions,
+            // The fleet stall column reports the worst replica's p99.
+            stall_p99_ms: r.stall_p99_ms,
+            makespan_p99_ms,
+            task_slo_rate,
+            replicas: r.replicas,
+            load_cov: r.load_cov,
         }
     }
 
@@ -424,6 +510,8 @@ impl PolicyPoint {
             ("stall_p99_ms", self.stall_p99_ms.into()),
             ("makespan_p99_ms", self.makespan_p99_ms.into()),
             ("task_slo_rate", self.task_slo_rate.into()),
+            ("replicas", self.replicas.into()),
+            ("load_cov", self.load_cov.into()),
         ])
     }
 }
@@ -519,12 +607,13 @@ impl SweepReport {
         let mut out = String::from(
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
-             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate\n",
+             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate,\
+             replicas,load_cov\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -545,7 +634,9 @@ impl SweepReport {
                     pp.preemptions,
                     pp.stall_p99_ms,
                     pp.makespan_p99_ms,
-                    pp.task_slo_rate
+                    pp.task_slo_rate,
+                    pp.replicas,
+                    pp.load_cov
                 ));
             }
         }
@@ -563,16 +654,49 @@ impl SweepReport {
     }
 }
 
+/// How a knee scan reads an ascending grid (shared by every axis; see the
+/// wrappers below for the per-axis semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KneeRule {
+    /// Smallest axis value whose metric *exceeds* the threshold (load-style
+    /// axes: more load, worse latency).
+    FirstViolation,
+    /// Largest axis value whose metric still exceeds the threshold
+    /// (capacity-style axes: bigger pools recover; the knee is the last
+    /// inadequate capacity).
+    LastViolation,
+    /// Smallest axis value whose metric is *within* the threshold (inverse
+    /// capacity planning: the first adequate fleet size).
+    FirstCompliant,
+}
+
+/// One parameterized knee scan over ascending `points`: `metric` reads the
+/// judged quantity off a policy row, `threshold` is the SLO bound, and
+/// `rule` gives the grid direction. All axis-specific knee helpers are
+/// thin wrappers over this.
+pub fn knee_by(
+    points: &[SweepPoint],
+    policy_idx: usize,
+    threshold: f64,
+    metric: impl Fn(&PolicyPoint) -> f64,
+    rule: KneeRule,
+) -> Option<f64> {
+    let violates = |pt: &&SweepPoint| metric(&pt.per_policy[policy_idx]) > threshold;
+    match rule {
+        KneeRule::FirstViolation => points.iter().find(violates),
+        KneeRule::LastViolation => points.iter().rev().find(violates),
+        KneeRule::FirstCompliant => points.iter().find(|pt| !violates(pt)),
+    }
+    .map(|pt| pt.axis_value)
+}
+
 /// The knee point for policy `policy_idx`: the smallest axis value whose
 /// p99 TTFT exceeds `ttft_slo_ms` (`None` when the whole grid is within
 /// SLO). Points must be in ascending axis order (enforced by
 /// [`SweepSpec::validate`]). This is the *load* knee — for the kv-blocks
-/// axis use [`knee_value_kv`].
+/// axis use [`knee_value_kv`], for the replica axis [`knee_value_fleet`].
 pub fn knee_value(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
-    points
-        .iter()
-        .find(|pt| pt.per_policy[policy_idx].ttft_p99 > ttft_slo_ms)
-        .map(|pt| pt.axis_value)
+    knee_by(points, policy_idx, ttft_slo_ms, |p| p.ttft_p99, KneeRule::FirstViolation)
 }
 
 /// The *memory* knee for policy `policy_idx` on an ascending kv-blocks
@@ -580,11 +704,7 @@ pub fn knee_value(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) ->
 /// — capacities above it meet the SLO (`None` when no point violates, i.e.
 /// the whole grid is memory-adequate).
 pub fn knee_value_kv(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
-    points
-        .iter()
-        .rev()
-        .find(|pt| pt.per_policy[policy_idx].ttft_p99 > ttft_slo_ms)
-        .map(|pt| pt.axis_value)
+    knee_by(points, policy_idx, ttft_slo_ms, |p| p.ttft_p99, KneeRule::LastViolation)
 }
 
 /// The *task* knee for policy `policy_idx` on an ascending fan-out grid:
@@ -592,10 +712,15 @@ pub fn knee_value_kv(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64)
 /// (`None` when every degree meets the task SLO). Fan-out scales the work
 /// a join must absorb, so the load axis semantics (first violation) apply.
 pub fn knee_value_task(points: &[SweepPoint], policy_idx: usize, task_slo_ms: f64) -> Option<f64> {
-    points
-        .iter()
-        .find(|pt| pt.per_policy[policy_idx].makespan_p99_ms > task_slo_ms)
-        .map(|pt| pt.axis_value)
+    knee_by(points, policy_idx, task_slo_ms, |p| p.makespan_p99_ms, KneeRule::FirstViolation)
+}
+
+/// The *inverse* (capacity-planning) knee for policy `policy_idx` on an
+/// ascending replica grid: the smallest fleet whose p99 TTFT **meets**
+/// `ttft_slo_ms` (`None` when even the largest fleet in the grid violates
+/// — the answer lies beyond the grid).
+pub fn knee_value_fleet(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f64) -> Option<f64> {
+    knee_by(points, policy_idx, ttft_slo_ms, |p| p.ttft_p99, KneeRule::FirstCompliant)
 }
 
 /// Execute the full grid: every point under every policy, timeline-free.
@@ -617,10 +742,19 @@ pub fn run_sweep(
         let seed = spec.point_seed(base_seed, i);
         let per_policy = policies
             .iter()
-            .map(|&policy| {
-                PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed))
+            .map(|&policy| match &spec.axis {
+                // Replica points run the unchanged scenario on an N-GPU
+                // fleet; every policy at the point still shares the seed.
+                SweepAxis::Replicas { counts, router } => Ok(PolicyPoint::from_fleet(
+                    &crate::cluster::run_cluster_fast(
+                        cfg, policy, &scenario, counts[i], *router, seed,
+                    )?,
+                )),
+                _ => Ok(PolicyPoint::from_outcome(&run_scenario_fast(
+                    cfg, policy, &scenario, seed,
+                ))),
             })
-            .collect();
+            .collect::<crate::Result<Vec<_>>>()?;
         points.push(SweepPoint {
             axis_value: spec.axis.value_at(i),
             sessions: scenario.total_sessions,
@@ -635,6 +769,7 @@ pub fn run_sweep(
             let knee = match &spec.axis {
                 SweepAxis::KvBlocks(_) => knee_value_kv(&points, pi, cfg.slo.ttft_ms),
                 SweepAxis::FanOut(_) => knee_value_task(&points, pi, cfg.slo.task_ms),
+                SweepAxis::Replicas { .. } => knee_value_fleet(&points, pi, cfg.slo.ttft_ms),
                 _ => knee_value(&points, pi, cfg.slo.ttft_ms),
             };
             (p.name().to_string(), knee)
@@ -797,6 +932,8 @@ mod tests {
             stall_p99_ms: 0.0,
             makespan_p99_ms: 0.0,
             task_slo_rate: 0.0,
+            replicas: 1,
+            load_cov: 0.0,
         }
     }
 
@@ -838,6 +975,50 @@ mod tests {
         assert_eq!(knee_value_task(&points, 0, 30_000.0), Some(8.0));
         assert_eq!(knee_value_task(&points, 0, 10_000.0), Some(4.0));
         assert_eq!(knee_value_task(&points, 0, 100_000.0), None);
+    }
+
+    #[test]
+    fn fleet_knee_is_first_compliant_fleet_size() {
+        // Ascending replica counts at fixed load: latency recovers as the
+        // fleet grows; the inverse knee is the first adequate size.
+        let points = points_with(&[(1.0, 900.0), (2.0, 300.0), (4.0, 40.0)]);
+        assert_eq!(knee_value_fleet(&points, 0, 100.0), Some(4.0));
+        assert_eq!(knee_value_fleet(&points, 0, 500.0), Some(2.0));
+        assert_eq!(knee_value_fleet(&points, 0, 10.0), None, "grid never complies");
+        // The deduped scan reproduces every legacy helper.
+        let pts = points_with(&[(1.0, 50.0), (2.0, 120.0), (4.0, 400.0)]);
+        assert_eq!(
+            knee_by(&pts, 0, 100.0, |p| p.ttft_p99, KneeRule::FirstViolation),
+            knee_value(&pts, 0, 100.0)
+        );
+        assert_eq!(
+            knee_by(&pts, 0, 100.0, |p| p.ttft_p99, KneeRule::LastViolation),
+            knee_value_kv(&pts, 0, 100.0)
+        );
+    }
+
+    #[test]
+    fn replica_axis_leaves_the_scenario_unchanged() {
+        let spec = SweepSpec::by_name("gpus-for-slo").unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.axis.kind_name(), "replicas");
+        assert_eq!(spec.axis.len(), 3);
+        for i in 0..spec.axis.len() {
+            let sc = spec.scenario_at(i);
+            assert_eq!(sc.total_sessions, 2000, "the workload never varies");
+            let rate = match sc.arrivals {
+                ArrivalProcess::Poisson { rate_per_s } => rate_per_s,
+                other => panic!("expected poisson, got {other:?}"),
+            };
+            assert_eq!(rate, 1.0, "the rate never varies either");
+        }
+        // Zero replicas is rejected.
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::Replicas {
+            counts: vec![0, 2],
+            router: crate::config::RouterPolicy::RoundRobin,
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]
