@@ -118,5 +118,23 @@ if grep -q '"knee": null' "$tmp/fleet.json"; then
     exit 1
 fi
 
+step "Chaos smoke (failure-storm: seeded crashes + flaky tools, rerun-stable)"
+cargo run --release --bin agentserve -- \
+    cluster run --name failure-storm --replicas 3 --model 3b \
+    --router cache-aware > "$tmp/storm1.txt"
+cargo run --release --bin agentserve -- \
+    cluster run --name failure-storm --replicas 3 --model 3b \
+    --router cache-aware > "$tmp/storm2.txt"
+# Chaos runs are deterministic: two invocations, identical bytes out.
+cmp "$tmp/storm1.txt" "$tmp/storm2.txt"
+grep -q 'chaos' "$tmp/storm1.txt"
+
+step "Chaos sweep smoke (3-point crash-rate grid on a 2-GPU fleet)"
+cargo run --release --bin agentserve -- \
+    cluster sweep --scenario mixed-fleet --chaos 0,6,20 --replicas 2 \
+    --policy agentserve --model 3b --out "$tmp/chaos.json" --csv "$tmp/chaos.csv"
+[ -s "$tmp/chaos.json" ] && [ -s "$tmp/chaos.csv" ]
+grep -q '"axis": "chaos"' "$tmp/chaos.json"
+
 echo ""
 echo "ci/check.sh: all green"

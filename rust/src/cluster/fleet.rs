@@ -1,12 +1,13 @@
 //! The fleet loop: N replica simulators on one shared virtual clock behind
 //! a session router.
 //!
-//! A fleet run is a deterministic three-way merge:
+//! A fleet run is a deterministic merge of up to four event sources:
 //!
 //! 1. **Fleet arrivals** — the scenario's arrival plan, plus arrivals the
 //!    run itself creates: closed-loop agents chain their next session
-//!    `think_time` after the previous completes, and workflow dependents
-//!    are released when their fleet-wide join barrier resolves. Each
+//!    `think_time` after the previous completes, workflow dependents are
+//!    released when their fleet-wide join barrier resolves, and sessions
+//!    lost to a replica crash re-enter as re-routed continuations. Each
 //!    arrival is routed *at its timestamp* against the replicas' live load
 //!    surfaces and injected into the chosen [`SimDriver`].
 //! 2. **Replica events** — each replica advances one event at a time; the
@@ -17,6 +18,15 @@
 //!    after every step, resolving workflow gates *fleet-wide*: a join's
 //!    workers may live on different replicas than the supervisor they
 //!    release ([`SimDriver::open_step_gate`]).
+//! 4. **Chaos events** — scripted and seeded replica faults
+//!    ([`crate::config::ChaosConfig`]): a crash retires the replica
+//!    mid-flight (its KV state and queue are gone), harvests every
+//!    unfinished session into a *continuation script* that re-prefills the
+//!    lost context cold, and re-routes each at its own resume instant; a
+//!    drain stops routing to the replica but lets it finish its queue; a
+//!    restart boots a cold replacement after the model-load latency. Chaos
+//!    events win exact-time ties against arrivals and replica events, so a
+//!    same-microsecond arrival is routed *around* the dying replica.
 //!
 //! With one replica and an open-loop scenario this machinery collapses to
 //! exactly the batch event order, so `run_cluster(.., 1, ..)` reproduces
@@ -26,14 +36,19 @@
 //! fleet-created arrivals at their own timestamps, which can order
 //! differently from the batch path only when such an arrival collides with
 //! an internal event on the exact microsecond (see
-//! `docs/ARCHITECTURE.md` § Fleet layer).
+//! `docs/ARCHITECTURE.md` § Fleet layer). With no chaos configured the
+//! fault machinery is skipped entirely and outputs stay byte-identical to
+//! the pre-chaos fleet.
 
 use super::router::Router;
-use crate::config::{Config, RouterPolicy};
+use crate::config::{Config, FaultKind, RouterPolicy, CHAOS_STREAM};
 use crate::engine::sim::task_critical_paths_ms;
-use crate::engine::{DriverEvent, Policy, SimDriver, SimOutcome};
+use crate::engine::{CrashResume, DriverEvent, Policy, SimDriver, SimOutcome};
 use crate::gpusim::CostModel;
-use crate::metrics::{load_cov, FleetReport, SloReport, Summary, WorkflowReport};
+use crate::metrics::{
+    load_cov, percentile, ChaosStats, FleetReport, SloReport, Summary, WorkflowReport,
+};
+use crate::util::rng::Rng;
 use crate::workflow::WorkflowPlan;
 use crate::workload::{Scenario, SessionScript};
 use std::cmp::Reverse;
@@ -47,9 +62,12 @@ pub struct FleetOutcome {
     pub replicas: usize,
     /// Fleet-level aggregation (the headline surface).
     pub report: FleetReport,
-    /// Each replica's own outcome, in replica order.
+    /// Each replica's own outcome, in replica order. After a crash this is
+    /// the *replacement* replica's outcome; the crashed incarnation's
+    /// counters are folded into the fleet report.
     pub per_replica: Vec<SimOutcome>,
-    /// Replica index per global session (the routing record).
+    /// Replica index per global session (the final routing record — a
+    /// crashed session's entry points at the replica that finished it).
     pub placements: Vec<usize>,
 }
 
@@ -105,6 +123,165 @@ fn unit_key(g: usize, chain: Option<(usize, u64)>, wf: Option<&WfFleet>) -> Opti
     wf.map(|w| w.plan.task_of[g] as u64)
 }
 
+/// The remainder of a session whose replica crashed after `bursts_done`
+/// fully emitted decode bursts: everything already produced (prompt,
+/// emitted bursts, consumed tool outputs — including the in-flight burst's
+/// resume tokens) folds into one cold re-prefill, because the KV state
+/// died with the replica and must be recomputed; decoding restarts at the
+/// in-flight burst. The template-shared system prompt stays shared (the
+/// new replica's radix cache can still serve it); everything beyond is
+/// marked session-unique so recomputed context is never counted as
+/// cross-session reuse.
+fn continuation_script(orig: &SessionScript, bursts_done: usize) -> SessionScript {
+    let k = bursts_done;
+    if k == 0 {
+        return orig.clone();
+    }
+    let shared = (orig.cold_prefill_tokens - orig.unique_prompt_tokens) as u64;
+    let mut cold = orig.cold_prefill_tokens as u64 + orig.first_decode_tokens as u64;
+    for s in &orig.steps[..k - 1] {
+        cold += s.resume_tokens as u64 + s.decode_tokens as u64;
+    }
+    cold += orig.steps[k - 1].resume_tokens as u64;
+    SessionScript {
+        id: orig.id,
+        kind: orig.kind,
+        cold_prefill_tokens: cold as u32,
+        template: orig.template,
+        unique_prompt_tokens: (cold - shared) as u32,
+        first_decode_tokens: orig.steps[k - 1].decode_tokens,
+        steps: orig.steps[k..].to_vec(),
+    }
+}
+
+/// Replica availability under the chaos layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RepState {
+    Up,
+    /// Routed around but still finishing its queue; only a scripted
+    /// Restore revives it.
+    Draining,
+    /// Crashed; a cold replacement boots at `until`.
+    Down { until: u64 },
+}
+
+/// Deterministic fault-event source: scripted events (sorted, file order
+/// on ties), an optional per-replica seeded crash process, and the
+/// auto-restore timers crashes schedule. At equal timestamps restores fire
+/// before scripted faults before seeded crashes — a restore and a crash on
+/// one microsecond leave the replica down, never ambiguous.
+struct ChaosState {
+    scripted: Vec<crate::config::FaultEvent>,
+    next_scripted: usize,
+    /// Next seeded crash instant per replica; None while down/draining.
+    seeded_at: Vec<Option<u64>>,
+    rngs: Vec<Rng>,
+    mtbf_us: u64,
+    restart_us: u64,
+    /// Auto-restore timers: (boot instant, replica).
+    restores: BinaryHeap<Reverse<(u64, usize)>>,
+    states: Vec<RepState>,
+    stats: ChaosStats,
+}
+
+/// (source band, replica): restores = 0, scripted = 1, seeded = 2.
+type ChaosPick = (u64, u8, usize, FaultKind);
+
+impl ChaosState {
+    fn new(cfg: &crate::config::ChaosConfig, n_replicas: usize, seed: u64) -> crate::Result<Self> {
+        for ev in &cfg.events {
+            anyhow::ensure!(
+                ev.replica < n_replicas,
+                "chaos event targets replica {} but the fleet has {n_replicas}",
+                ev.replica
+            );
+        }
+        let mut scripted = cfg.events.clone();
+        scripted.sort_by_key(|e| e.at_us); // stable: ties keep file order
+        let mut state = Self {
+            scripted,
+            next_scripted: 0,
+            seeded_at: vec![None; n_replicas],
+            rngs: (0..n_replicas)
+                .map(|r| Rng::fold(Rng::fold(seed, CHAOS_STREAM), r as u64))
+                .collect(),
+            mtbf_us: cfg.mtbf_us,
+            restart_us: cfg.restart_us,
+            restores: BinaryHeap::new(),
+            states: vec![RepState::Up; n_replicas],
+            stats: ChaosStats::default(),
+        };
+        for r in 0..n_replicas {
+            state.draw_seeded(r, 0);
+        }
+        Ok(state)
+    }
+
+    /// Arm the next seeded crash for an Up replica (exponential inter-fault
+    /// gap from the replica's own stream; ≥ 1 us so it never aliases the
+    /// arming instant).
+    fn draw_seeded(&mut self, r: usize, now_us: u64) {
+        if self.mtbf_us == 0 {
+            return;
+        }
+        let u = self.rngs[r].f64();
+        let gap = (-(1.0 - u).ln() * self.mtbf_us as f64).max(1.0) as u64;
+        self.seeded_at[r] = Some(now_us + gap);
+    }
+
+    /// The earliest pending fault, if any (not consumed).
+    fn peek(&self) -> Option<ChaosPick> {
+        let mut best: Option<ChaosPick> = None;
+        if let Some(&Reverse((t, r))) = self.restores.peek() {
+            best = Some((t, 0, r, FaultKind::Restore));
+        }
+        if let Some(ev) = self.scripted.get(self.next_scripted) {
+            let c = (ev.at_us, 1u8, ev.replica, ev.kind);
+            if best.is_none_or(|b| (c.0, c.1) < (b.0, b.1)) {
+                best = Some(c);
+            }
+        }
+        if let Some((t, r)) = self
+            .seeded_at
+            .iter()
+            .enumerate()
+            .filter_map(|(r, t)| t.map(|t| (t, r)))
+            .min()
+        {
+            let c = (t, 2u8, r, FaultKind::Crash);
+            if best.is_none_or(|b| (c.0, c.1) < (b.0, b.1)) {
+                best = Some(c);
+            }
+        }
+        best
+    }
+
+    /// Consume the event returned by [`ChaosState::peek`].
+    fn pop(&mut self, pick: ChaosPick) {
+        match pick.1 {
+            0 => {
+                self.restores.pop();
+            }
+            1 => self.next_scripted += 1,
+            _ => self.seeded_at[pick.2] = None,
+        }
+    }
+
+    /// Earliest instant any replica returns to Up (for arrivals that find
+    /// no eligible replica): the next auto-restore or scripted Restore.
+    fn earliest_revival(&self) -> Option<u64> {
+        let auto = self.restores.peek().map(|&Reverse((t, _))| t);
+        let scripted = self.scripted[self.next_scripted..]
+            .iter()
+            .find(|e| e.kind == FaultKind::Restore)
+            .map(|e| e.at_us);
+        match (auto, scripted) {
+            (Some(a), Some(s)) => Some(a.min(s)),
+            (a, s) => a.or(s),
+        }
+    }
+}
+
 fn run_cluster_inner(
     cfg: &Config,
     policy: Policy,
@@ -117,6 +294,11 @@ fn run_cluster_inner(
     anyhow::ensure!(n_replicas >= 1, "a fleet needs at least one replica");
     scenario.validate()?;
     let cfg = scenario.effective_config(cfg);
+    let chaos_active = scenario.chaos.as_ref().is_some_and(|c| c.is_active());
+    let mut chaos = match &scenario.chaos {
+        Some(c) if c.is_active() => Some(ChaosState::new(c, n_replicas, seed)?),
+        _ => None,
+    };
 
     // -- 1) lower the scenario into scripts + the fleet arrival plan --------
     // `chain` = closed-loop chaining (stride, think time); `wf` = fleet-wide
@@ -124,6 +306,10 @@ fn run_cluster_inner(
     // open-loop) arrivals in session-index order.
     let mut chain: Option<(usize, u64)> = None;
     let mut wf: Option<WfFleet> = None;
+    let tool_faults = scenario
+        .workflow
+        .as_ref()
+        .is_some_and(|w| w.effective_spec().has_tool_faults());
     let (scripts, seeds): (Vec<SessionScript>, Vec<(usize, u64)>) = if scenario.workflow.is_some()
     {
         let cw = crate::workflow::compile(scenario, cfg.model.kind, seed);
@@ -162,6 +348,7 @@ fn run_cluster_inner(
         };
         (scripts, seeds)
     };
+    let mut scripts = scripts;
     let total = scripts.len();
 
     // -- 2) replicas, router, fleet arrival queue ---------------------------
@@ -195,10 +382,35 @@ fn run_cluster_inner(
     // template prompts are one deterministic stream — a shorter prompt is a
     // prefix of a longer one — so the longest materialized vector per
     // template is cached and sliced instead of regenerated per arrival
-    // (sessions with per-task unique suffixes bypass the cache).
+    // (sessions with per-task unique suffixes bypass the cache; so do
+    // post-crash continuations, whose context is session-unique).
     let want_prompt =
         router_policy == RouterPolicy::CacheAware && cfg.kv.is_paged() && cfg.kv.prefix_sharing;
     let mut prompt_cache: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+
+    // -- chaos bookkeeping --------------------------------------------------
+    // `up_mask` stays all-true with chaos off, making every route() call
+    // bit-for-bit the legacy decision.
+    let mut up_mask = vec![true; n_replicas];
+    // Bursts completed in earlier incarnations per session: local burst /
+    // gate index c on the current replica is global index c + off[g].
+    let mut off = vec![0usize; total];
+    // Sessions that crashed while parked on a closed join gate: g → the
+    // scripted tool latency to pay once the gate resolves.
+    let mut deferred: BTreeMap<usize, u64> = BTreeMap::new();
+    // Retired (crashed) replica outcomes, by replica index.
+    let mut retired: Vec<(usize, SimOutcome)> = Vec::new();
+    // Samples harvested from crashed replicas, in per-session order.
+    let mut harv_ttfts: Vec<Vec<f64>> = vec![Vec::new(); total];
+    let mut harv_tpots: Vec<Vec<f64>> = vec![Vec::new(); total];
+    let mut harv_stalls: Vec<Vec<f64>> = vec![Vec::new(); total];
+    let mut session_done = vec![false; total];
+    let mut done_global = 0usize;
+    // Chaos-mode wall clock: the max timestamp actually *stepped* (a cold
+    // replacement that boots after the last completion and never runs must
+    // not stretch the horizon the way the legacy max-over-now_us would).
+    let mut wall_chaos: u64 = 0;
+    let mut winding_down = false;
 
     // -- 3) the lockstep merge loop ----------------------------------------
     loop {
@@ -214,6 +426,111 @@ fn run_cluster_inner(
                 }
             }
         }
+        // Chaos events win exact-time ties against both other sources: a
+        // crash at t kills the replica before a t-stamped arrival routes
+        // (it must avoid the dying replica) and before the replica's own
+        // t-stamped events run (they die with it). The `t_chaos <= t_rep`
+        // gate also guarantees every replica has fully processed its
+        // events *before* the fault instant, which is what lets
+        // `crash_manifest` treat exactly-at-t arrivals as not yet started.
+        // Once every session is done the remaining fault stream is moot.
+        if let Some(ch) = chaos.as_mut() {
+            if done_global < total {
+                if let Some(pick) = ch.peek() {
+                    let (t_c, _, r, kind) = pick;
+                    let beats_arr = t_arr.is_none_or(|ta| t_c <= ta);
+                    let beats_rep = t_rep.is_none_or(|(tr, _)| t_c <= tr);
+                    if beats_arr && beats_rep {
+                        ch.pop(pick);
+                        match kind {
+                            FaultKind::Crash => {
+                                if !matches!(ch.states[r], RepState::Down { .. }) {
+                                    // -- retire the replica mid-flight ----
+                                    let t_up = t_c + ch.restart_us;
+                                    ch.states[r] = RepState::Down { until: t_up };
+                                    up_mask[r] = false;
+                                    ch.seeded_at[r] = None;
+                                    ch.restores.push(Reverse((t_up, r)));
+                                    ch.stats.crashes += 1;
+                                    ch.stats.downtime_ms += ch.restart_us as f64 / 1000.0;
+                                    let old = std::mem::replace(
+                                        &mut drivers[r],
+                                        SimDriver::new_fast_boot_at(&cfg, policy, t_up),
+                                    );
+                                    finished[r] = false;
+                                    // Keep every sample the dead replica
+                                    // recorded (finished sessions *and*
+                                    // the lost ones' partial requests) —
+                                    // `finish()` only keeps aggregates.
+                                    for (l, &g) in local2global[r].iter().enumerate() {
+                                        if let Some(s) =
+                                            old.recorder().sessions_map().get(&(l as u64))
+                                        {
+                                            harv_ttfts[g].extend_from_slice(&s.ttfts_ms);
+                                            harv_tpots[g].extend_from_slice(&s.tpots_ms);
+                                        }
+                                    }
+                                    for (l, ms) in old.memory_stalls() {
+                                        harv_stalls[local2global[r][l]].push(ms);
+                                    }
+                                    for cs in old.crash_manifest() {
+                                        let g = local2global[r][cs.local];
+                                        scripts[g] =
+                                            continuation_script(&scripts[g], cs.bursts_done);
+                                        off[g] += cs.bursts_done;
+                                        placements[g] = usize::MAX;
+                                        local_of[g] = usize::MAX;
+                                        injected -= 1;
+                                        ch.stats.rerouted_sessions += 1;
+                                        ch.stats.redecoded_tokens +=
+                                            cs.emitted_in_burst as u64;
+                                        match cs.resume {
+                                            CrashResume::Now => {
+                                                queue.push(Reverse((t_c, fseq, g)));
+                                                fseq += 1;
+                                            }
+                                            CrashResume::At(t) => {
+                                                queue.push(Reverse((t, fseq, g)));
+                                                fseq += 1;
+                                            }
+                                            CrashResume::ParkedGate { latency_us } => {
+                                                deferred.insert(g, latency_us);
+                                            }
+                                        }
+                                    }
+                                    local2global[r].clear();
+                                    retired.push((r, old.finish()));
+                                }
+                            }
+                            FaultKind::Drain => {
+                                if ch.states[r] == RepState::Up {
+                                    ch.states[r] = RepState::Draining;
+                                    up_mask[r] = false;
+                                    ch.seeded_at[r] = None; // drained ≠ crashed
+                                    ch.stats.drains += 1;
+                                }
+                            }
+                            FaultKind::Restore => {
+                                // Auto-restores (band 0) only match the
+                                // crash that armed them — an early scripted
+                                // Restore + re-crash leaves a stale timer.
+                                let revive = if pick.1 == 0 {
+                                    matches!(ch.states[r], RepState::Down { until } if until == t_c)
+                                } else {
+                                    ch.states[r] != RepState::Up
+                                };
+                                if revive {
+                                    ch.states[r] = RepState::Up;
+                                    up_mask[r] = true;
+                                    ch.draw_seeded(r, t_c);
+                                }
+                            }
+                        }
+                        continue;
+                    }
+                }
+            }
+        }
         // Arrivals win exact-time ties: injected arrivals sit in the low
         // sequence band of the replica heap, so the replica would order
         // them first anyway — the fleet must have routed them by then.
@@ -225,6 +542,21 @@ fn run_cluster_inner(
         };
         if take_arrival {
             let Reverse((t, _, g)) = queue.pop().expect("peeked above");
+            if chaos_active && !up_mask.iter().any(|&e| e) {
+                // Whole fleet down or draining: hold the arrival until the
+                // next revival instant (chaos wins that tie, so the replica
+                // is Up again before this arrival re-pops).
+                let revival = chaos.as_ref().and_then(|c| c.earliest_revival());
+                let Some(tr) = revival else {
+                    anyhow::bail!(
+                        "fleet unroutable: every replica is down or draining at {t} us \
+                         with no restore pending"
+                    );
+                };
+                queue.push(Reverse((tr.max(t), fseq, g)));
+                fseq += 1;
+                continue;
+            }
             let unit = unit_key(g, chain, wf.as_ref());
             let unique_buf: Vec<u32>;
             let prompt: Option<&[u32]> = if want_prompt {
@@ -242,15 +574,19 @@ fn run_cluster_inner(
             } else {
                 None
             };
-            let r = router.route(unit, prompt, &drivers);
+            let r = router.route(unit, prompt, &drivers, &up_mask);
+            // Still-closed join gates, translated into the (possibly
+            // continuation) script's local step indices; gates before
+            // `off[g]` belong to bursts already folded into the cold
+            // re-prefill.
             let gated: Vec<usize> = wf
                 .as_ref()
                 .map(|w| {
                     w.step_remaining[g]
                         .iter()
                         .enumerate()
-                        .filter(|&(_, &c)| c > 0)
-                        .map(|(i, _)| i)
+                        .filter(|&(j, &c)| c > 0 && j >= off[g])
+                        .map(|(j, _)| j - off[g])
                         .collect()
                 })
                 .unwrap_or_default();
@@ -260,7 +596,11 @@ fn run_cluster_inner(
             local_of[g] = local;
             local2global[r].push(g);
             injected += 1;
-            if injected == total {
+            // With chaos on, "all sessions placed" is not final — a crash
+            // un-places its sessions — so arrival-count termination only
+            // applies to the legacy path; chaos runs wind down on
+            // completion count instead (below).
+            if !chaos_active && injected == total {
                 for (r, d) in drivers.iter_mut().enumerate() {
                     d.set_no_more_arrivals();
                     finished[r] = d.all_done(); // replicas that got nothing
@@ -272,6 +612,9 @@ fn run_cluster_inner(
         if !drivers[r].step() {
             finished[r] = true;
             continue;
+        }
+        if chaos_active {
+            wall_chaos = wall_chaos.max(drivers[r].now_us());
         }
         drivers[r].drain_events(&mut events);
         for ev in events.drain(..) {
@@ -285,7 +628,7 @@ fn run_cluster_inner(
                     // the router queue, step gates onto the holding replica.
                     let resolved = w.plan.resolve_burst(
                         g,
-                        burst,
+                        burst + off[g],
                         &mut w.arr_remaining,
                         &mut w.step_remaining,
                     );
@@ -296,14 +639,27 @@ fn run_cluster_inner(
                     for (s2, step) in resolved.steps {
                         // Wake the (possibly parked) session on whichever
                         // replica holds it; a target not yet injected
-                        // simply arrives with this gate already open.
-                        if placements[s2] != usize::MAX {
-                            drivers[placements[s2]].open_step_gate(local_of[s2], step, t_us);
+                        // simply arrives with this gate already open. A
+                        // session that *crashed while parked on this gate*
+                        // re-enters here instead, paying its tool latency
+                        // from the resolution instant (gate semantics).
+                        if deferred.contains_key(&s2) && step + 1 == off[s2] {
+                            let lat = deferred.remove(&s2).expect("checked");
+                            queue.push(Reverse((t_us + lat, fseq, s2)));
+                            fseq += 1;
+                        } else if placements[s2] != usize::MAX && step >= off[s2] {
+                            drivers[placements[s2]].open_step_gate(
+                                local_of[s2],
+                                step - off[s2],
+                                t_us,
+                            );
                         }
                     }
                 }
                 DriverEvent::SessionDone { sess, t_us } => {
                     let g = local2global[r][sess];
+                    session_done[g] = true;
+                    done_global += 1;
                     if let Some((stride, think_us)) = chain {
                         let next = g + stride;
                         if next < total {
@@ -321,7 +677,17 @@ fn run_cluster_inner(
                 }
             }
         }
-        if injected == total && drivers[r].all_done() {
+        if chaos_active {
+            // Completion-count termination: every session done and no
+            // arrival pending means nothing will ever enqueue again — tell
+            // the replicas so their control ticks stop re-arming.
+            if !winding_down && done_global == total && queue.is_empty() {
+                winding_down = true;
+                for d in drivers.iter_mut() {
+                    d.set_no_more_arrivals();
+                }
+            }
+        } else if injected == total && drivers[r].all_done() {
             finished[r] = true;
         }
     }
@@ -335,47 +701,113 @@ fn run_cluster_inner(
     // -- 4) fleet aggregation ----------------------------------------------
     // Raw per-request samples in global session order, so fleet summaries
     // are byte-deterministic and independent of replica interleaving.
+    // Harvested (pre-crash) samples precede the finishing replica's — they
+    // are chronologically earlier. With chaos off the harvest vectors are
+    // empty and this is exactly the legacy gather. Session-joint SLO
+    // attainment must span incarnations too (a slow pre-crash request
+    // fails the session even if the continuation was fast), so chaos runs
+    // re-judge per *global* session here instead of summing the replicas'
+    // per-incarnation judgments.
     let mut ttfts: Vec<f64> = Vec::new();
     let mut tpots: Vec<f64> = Vec::new();
+    let mut chaos_slo =
+        SloReport { sessions: 0, attained: 0, ttft_violations: 0, tpot_violations: 0 };
     for g in 0..total {
+        let (from_t, from_p) = (ttfts.len(), tpots.len());
+        ttfts.extend_from_slice(&harv_ttfts[g]);
+        tpots.extend_from_slice(&harv_tpots[g]);
         let (r, l) = (placements[g], local_of[g]);
         if let Some(s) = drivers[r].recorder().sessions_map().get(&(l as u64)) {
             ttfts.extend_from_slice(&s.ttfts_ms);
             tpots.extend_from_slice(&s.tpots_ms);
         }
+        if chaos_active {
+            chaos_slo.sessions += 1;
+            let ttft_ok = ttfts[from_t..].iter().all(|&t| t <= cfg.slo.ttft_ms);
+            let tpot_ok = tpots[from_p..].iter().all(|&t| t <= cfg.slo.tpot_ms);
+            if !ttft_ok {
+                chaos_slo.ttft_violations += 1;
+            }
+            if !tpot_ok {
+                chaos_slo.tpot_violations += 1;
+            }
+            if ttft_ok && tpot_ok && session_done[g] {
+                chaos_slo.attained += 1;
+            }
+        }
     }
-    let wall_us = drivers.iter().map(|d| d.now_us()).max().unwrap_or(0);
+    // Memory-stall percentiles recomputed from raw samples in global
+    // session order — percentiles do not compose across replicas, so the
+    // fleet must never max() per-replica p99s (that reads as "worst
+    // replica", not "fleet tail").
+    for (r, d) in drivers.iter().enumerate() {
+        for (l, ms) in d.memory_stalls() {
+            harv_stalls[local2global[r][l]].push(ms);
+        }
+    }
+    let stall_flat: Vec<f64> = harv_stalls.iter().flatten().copied().collect();
+    let stall_p99_ms = percentile(&stall_flat, 99.0);
+
+    let wall_us = if chaos_active {
+        wall_chaos
+    } else {
+        drivers.iter().map(|d| d.now_us()).max().unwrap_or(0)
+    };
     let per_replica: Vec<SimOutcome> = drivers.into_iter().map(|d| d.finish()).collect();
 
+    // Counters sum over the surviving replicas *and* the crashed
+    // incarnations — work a replica did before dying still happened.
     let mut slo = SloReport { sessions: 0, attained: 0, ttft_violations: 0, tpot_violations: 0 };
     let mut total_tokens = 0u64;
     let mut completed = 0usize;
-    let mut per_replica_tokens = Vec::with_capacity(per_replica.len());
     let (mut hit, mut miss, mut evictions, mut preemptions) = (0u64, 0u64, 0u64, 0u64);
-    let mut stall_p99_ms = 0.0f64;
-    for o in &per_replica {
+    for o in per_replica.iter().chain(retired.iter().map(|(_, o)| o)) {
         slo.sessions += o.slo.sessions;
         slo.attained += o.slo.attained;
         slo.ttft_violations += o.slo.ttft_violations;
         slo.tpot_violations += o.slo.tpot_violations;
         total_tokens += o.report.total_tokens;
         completed += o.report.completed_sessions;
-        per_replica_tokens.push(o.report.total_tokens);
         if let Some(kv) = &o.kv {
             hit += kv.radix_hit_tokens;
             miss += kv.radix_miss_tokens;
             evictions += kv.evictions;
             preemptions += kv.preemptions;
-            stall_p99_ms = stall_p99_ms.max(kv.stalls.p99);
         }
     }
+    if chaos_active {
+        // A crashed session spans incarnations; the per-replica judgments
+        // double-count it. Use the per-global-session re-judgment above.
+        slo = chaos_slo;
+    }
+    let mut per_replica_tokens: Vec<u64> =
+        per_replica.iter().map(|o| o.report.total_tokens).collect();
+    for (r, o) in &retired {
+        per_replica_tokens[*r] += o.report.total_tokens;
+    }
+    let (wf_tool_retries, wf_failed_tasks) = wf
+        .as_ref()
+        .map(|w| {
+            (
+                w.plan.tool_retries,
+                w.plan.task_failed.iter().filter(|&&f| f).count() as u64,
+            )
+        })
+        .unwrap_or((0, 0));
     let workflow = wf.map(|w| {
         WorkflowReport::from_task_times(
             &w.plan.task_release_us,
             &w.task_done_us,
             &w.task_cp_ms,
             cfg.slo.task_ms,
+            &w.plan.task_failed,
+            w.plan.tool_retries,
         )
+    });
+    let chaos_report = (chaos_active || tool_faults).then(|| ChaosStats {
+        tool_retries: wf_tool_retries,
+        failed_tasks: wf_failed_tasks,
+        ..chaos.map(|c| c.stats).unwrap_or_default()
     });
     let wall_ms = wall_us as f64 / 1000.0;
     let wall_s = (wall_ms / 1000.0).max(1e-9);
@@ -401,6 +833,7 @@ fn run_cluster_inner(
         stall_p99_ms,
         kv_present: cfg.kv.is_paged(),
         workflow,
+        chaos: chaos_report,
     };
     Ok(FleetOutcome {
         policy_name: policy.name().to_string(),

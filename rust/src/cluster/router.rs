@@ -10,19 +10,20 @@ use crate::config::RouterPolicy;
 use crate::engine::SimDriver;
 use std::collections::BTreeMap;
 
-/// The replica with the least outstanding scripted work (ties: shallower
-/// prefill queue, then lowest index).
-fn least_loaded(drivers: &[SimDriver]) -> usize {
+/// The eligible replica with the least outstanding scripted work (ties:
+/// shallower prefill queue, then lowest index).
+fn least_loaded(drivers: &[SimDriver], eligible: &[bool]) -> usize {
     drivers
         .iter()
         .enumerate()
+        .filter(|(i, _)| eligible[*i])
         .map(|(i, d)| {
             let l = d.load();
             (l.outstanding_tokens, l.queue_depth, i)
         })
         .min()
         .map(|(_, _, i)| i)
-        .expect("non-empty fleet")
+        .expect("at least one eligible replica")
 }
 
 /// Stateful router over one fleet run.
@@ -53,47 +54,67 @@ impl Router {
     /// Choose a replica for one arriving session. `unit` keys multi-session
     /// units (None for independent open-loop sessions); `prompt` is the
     /// session's system-prompt ids, supplied only when the cache-aware
-    /// policy can use them (paged path with prefix sharing).
+    /// policy can use them (paged path with prefix sharing). `eligible`
+    /// masks replicas out of contention (chaos layer: down or draining);
+    /// the caller guarantees at least one `true`. An all-true mask is the
+    /// legacy behavior, bit for bit.
     pub fn route(
         &mut self,
         unit: Option<u64>,
         prompt: Option<&[u32]>,
         drivers: &[SimDriver],
+        eligible: &[bool],
     ) -> usize {
+        debug_assert_eq!(eligible.len(), drivers.len());
+        debug_assert!(eligible.iter().any(|&e| e), "no eligible replica to route to");
         let home = unit.and_then(|u| self.homes.get(&u).copied());
         if home.is_some() {
             self.affinity_opportunities += 1;
         }
         let choice = match self.policy {
             RouterPolicy::RoundRobin => {
-                let c = self.rr_next % drivers.len();
-                self.rr_next += 1;
-                c
+                // Advance the cursor past ineligible replicas; with an
+                // all-true mask this is exactly the legacy single advance.
+                loop {
+                    let c = self.rr_next % drivers.len();
+                    self.rr_next += 1;
+                    if eligible[c] {
+                        break c;
+                    }
+                }
             }
-            RouterPolicy::LeastOutstanding => least_loaded(drivers),
-            RouterPolicy::SessionAffinity => home.unwrap_or_else(|| least_loaded(drivers)),
+            RouterPolicy::LeastOutstanding => least_loaded(drivers, eligible),
+            RouterPolicy::SessionAffinity => home
+                .filter(|&h| eligible[h])
+                .unwrap_or_else(|| least_loaded(drivers, eligible)),
             RouterPolicy::CacheAware => {
                 let scores: Vec<u32> = match prompt {
                     Some(p) => drivers.iter().map(|d| d.cached_prompt_tokens(p)).collect(),
                     None => Vec::new(),
                 };
-                let top = scores.iter().copied().max().unwrap_or(0);
+                let top = scores
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| eligible[*i])
+                    .map(|(_, &sc)| sc)
+                    .max()
+                    .unwrap_or(0);
                 if top == 0 {
                     // No cache signal anywhere: pure load decision.
-                    least_loaded(drivers)
+                    least_loaded(drivers, eligible)
                 } else {
                     // Best expected radix hit; ties broken by load, index.
                     drivers
                         .iter()
                         .enumerate()
-                        .filter(|(i, _)| scores[*i] == top)
+                        .filter(|(i, _)| eligible[*i] && scores[*i] == top)
                         .map(|(i, d)| {
                             let l = d.load();
                             (l.outstanding_tokens, l.queue_depth, i)
                         })
                         .min()
                         .map(|(_, _, i)| i)
-                        .expect("non-empty fleet")
+                        .expect("at least one eligible replica")
                 }
             }
         };
@@ -128,7 +149,8 @@ mod tests {
     fn round_robin_cycles() {
         let drivers = fleet(3);
         let mut r = Router::new(RouterPolicy::RoundRobin);
-        let picks: Vec<usize> = (0..6).map(|_| r.route(None, None, &drivers)).collect();
+        let up = [true; 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(None, None, &drivers, &up)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -136,47 +158,75 @@ mod tests {
     fn least_outstanding_prefers_idle_replicas() {
         let mut drivers = fleet(2);
         let mut r = Router::new(RouterPolicy::LeastOutstanding);
-        assert_eq!(r.route(None, None, &drivers), 0, "empty fleet ties to index 0");
+        let up = [true; 2];
+        assert_eq!(r.route(None, None, &drivers, &up), 0, "empty fleet ties to index 0");
         drivers[0].inject(script(1), 0, &[]);
-        assert_eq!(r.route(None, None, &drivers), 1, "replica 0 now carries work");
+        assert_eq!(r.route(None, None, &drivers, &up), 1, "replica 0 now carries work");
     }
 
     #[test]
     fn affinity_pins_units_to_their_home() {
         let mut drivers = fleet(3);
         let mut r = Router::new(RouterPolicy::SessionAffinity);
-        let first = r.route(Some(7), None, &drivers);
+        let up = [true; 3];
+        let first = r.route(Some(7), None, &drivers, &up);
         assert_eq!(first, 0);
         assert_eq!(r.affinity_opportunities, 0, "first placement is not an opportunity");
         // Load up the home replica: affinity still returns there.
         drivers[first].inject(script(2), 0, &[]);
-        let again = r.route(Some(7), None, &drivers);
+        let again = r.route(Some(7), None, &drivers, &up);
         assert_eq!(again, first);
         assert_eq!((r.affinity_hits, r.affinity_opportunities), (1, 1));
         // A different unit balances away.
-        assert_eq!(r.route(Some(8), None, &drivers), 1);
+        assert_eq!(r.route(Some(8), None, &drivers, &up), 1);
     }
 
     #[test]
     fn cache_aware_without_signal_is_load_driven() {
         let mut drivers = fleet(2);
         let mut r = Router::new(RouterPolicy::CacheAware);
+        let up = [true; 2];
         drivers[0].inject(script(3), 0, &[]);
         // Unbounded (non-paged) replicas report no cached prefix: the
         // policy degrades to least-outstanding.
         let s = script(4);
         let ids = s.system_prompt_ids();
-        assert_eq!(r.route(None, Some(&ids), &drivers), 1);
-        assert_eq!(r.route(None, None, &drivers), 1);
+        assert_eq!(r.route(None, Some(&ids), &drivers, &up), 1);
+        assert_eq!(r.route(None, None, &drivers, &up), 1);
+    }
+
+    #[test]
+    fn ineligible_replicas_are_skipped() {
+        let drivers = fleet(3);
+        let mask = [true, false, true]; // replica 1 down/draining
+        // Round-robin hops over the masked replica but keeps cycling.
+        let mut rr = Router::new(RouterPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(None, None, &drivers, &mask)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        // Least-outstanding ties resolve to the lowest *eligible* index.
+        let mut lo = Router::new(RouterPolicy::LeastOutstanding);
+        assert_eq!(lo.route(None, None, &drivers, &[false, true, true]), 1);
+        // Affinity falls back to load when the home replica is masked.
+        let mut aff = Router::new(RouterPolicy::SessionAffinity);
+        let up = [true; 3];
+        let home = aff.route(Some(3), None, &drivers, &up);
+        assert_eq!(home, 0);
+        let mut masked = up;
+        masked[home] = false;
+        let moved = aff.route(Some(3), None, &drivers, &masked);
+        assert_ne!(moved, home, "home is down: the unit re-homes");
+        // The re-home sticks: with the mask lifted the unit stays put.
+        assert_eq!(aff.route(Some(3), None, &drivers, &up), moved);
     }
 
     #[test]
     fn affinity_metric_counts_other_policies_too() {
         let drivers = fleet(2);
         let mut r = Router::new(RouterPolicy::RoundRobin);
-        r.route(Some(1), None, &drivers); // -> 0 (home)
-        r.route(Some(1), None, &drivers); // -> 1 (miss)
-        r.route(Some(1), None, &drivers); // -> 0, but home moved to 1 (miss)
+        let up = [true; 2];
+        r.route(Some(1), None, &drivers, &up); // -> 0 (home)
+        r.route(Some(1), None, &drivers, &up); // -> 1 (miss)
+        r.route(Some(1), None, &drivers, &up); // -> 0, but home moved to 1 (miss)
         assert_eq!(r.affinity_opportunities, 2);
         assert_eq!(r.affinity_hits, 0);
     }

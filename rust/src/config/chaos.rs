@@ -1,0 +1,210 @@
+//! Chaos configuration: deterministic replica-fault injection for the
+//! fleet layer (`crate::cluster`).
+//!
+//! Faults come from two sources that compose:
+//! - **Scripted events** — explicit `(at_us, replica, kind)` triples, for
+//!   reproducing a specific incident (a crash at t=3s, a drain before a
+//!   deploy, a manual restore of a drained replica).
+//! - **Seeded crashes** — a per-replica exponential crash process with
+//!   mean `mtbf_us`, drawn from `Rng::fold(Rng::fold(seed, CHAOS_STREAM),
+//!   replica)`, redrawn after every restart. `mtbf_us = 0` disables the
+//!   process.
+//!
+//! Either way, every fault instant is a pure function of `(config, seed)`
+//! on the fleet's virtual clock, so chaos runs rerun byte-identically —
+//! the same determinism contract every other subsystem honors. The
+//! default (`ChaosConfig::default()`, no events, mtbf 0) is inert: the
+//! fleet loop takes the exact legacy code path and its outputs stay
+//! byte-identical (locked in `rust/tests/chaos.rs`).
+
+use crate::util::json::Value;
+
+/// Seeded-crash stream selector (folded with the run seed; the per-replica
+/// stream folds the replica index on top).
+pub const CHAOS_STREAM: u64 = 0xC4A0_5EED;
+
+/// What a scripted fault event does to its replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The replica dies instantly: in-flight sessions lose their KV state
+    /// and are re-routed (context recomputed on the new replica); the
+    /// replica restarts cold `restart_us` later.
+    Crash,
+    /// Graceful drain: the replica stops accepting new routes but finishes
+    /// everything already placed on it. Only a scripted `Restore` brings
+    /// it back.
+    Drain,
+    /// Return a drained (or down) replica to service.
+    Restore,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Drain => "drain",
+            FaultKind::Restore => "restore",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "crash" => Ok(FaultKind::Crash),
+            "drain" => Ok(FaultKind::Drain),
+            "restore" => Ok(FaultKind::Restore),
+            other => anyhow::bail!("unknown fault kind '{other}' (crash|drain|restore)"),
+        }
+    }
+}
+
+/// One scripted fault on the fleet's virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Virtual timestamp (us).
+    pub at_us: u64,
+    /// Target replica index.
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// Deterministic fault-injection plan for one fleet run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ChaosConfig {
+    /// Scripted faults (sorted by the fleet at run start; ties keep file
+    /// order).
+    pub events: Vec<FaultEvent>,
+    /// Mean time between seeded crashes per replica (us). 0 = no seeded
+    /// crash process.
+    pub mtbf_us: u64,
+    /// Cold-restart latency after a crash (model reload; the replica comes
+    /// back with an empty radix cache).
+    pub restart_us: u64,
+}
+
+impl ChaosConfig {
+    /// Default cold-restart latency: ~2 s of model load on a consumer GPU.
+    pub const DEFAULT_RESTART_US: u64 = 2_000_000;
+
+    /// A purely seeded crash plan: exponential crashes with mean
+    /// `mtbf_us`, default restart latency.
+    pub fn seeded(mtbf_us: u64) -> Self {
+        Self { events: Vec::new(), mtbf_us, restart_us: Self::DEFAULT_RESTART_US }
+    }
+
+    /// An inert config injects nothing: the fleet loop takes the exact
+    /// legacy code path (byte-identical outputs).
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty() || self.mtbf_us > 0
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.is_active() {
+            anyhow::ensure!(
+                self.restart_us >= 1,
+                "chaos.restart_us must be >= 1 us when faults are active \
+                 (a zero-latency restart would alias crash and restore on \
+                 one timestamp)"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        if !self.events.is_empty() {
+            fields.push((
+                "events",
+                Value::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("at_us", e.at_us.into()),
+                                ("replica", e.replica.into()),
+                                ("kind", e.kind.name().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if self.mtbf_us > 0 {
+            fields.push(("mtbf_us", self.mtbf_us.into()));
+        }
+        fields.push(("restart_us", self.restart_us.into()));
+        Value::obj(fields)
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let mut events = Vec::new();
+        if let Some(arr) = v.get("events").and_then(|e| e.as_arr()) {
+            for e in arr {
+                events.push(FaultEvent {
+                    at_us: e.req_f64("at_us")? as u64,
+                    replica: e.req_usize("replica")?,
+                    kind: e.req_str("kind")?.parse()?,
+                });
+            }
+        }
+        let cfg = Self {
+            events,
+            mtbf_us: v.get("mtbf_us").and_then(|x| x.as_u64()).unwrap_or(0),
+            restart_us: v
+                .get("restart_us")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(Self::DEFAULT_RESTART_US),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let c = ChaosConfig::default();
+        assert!(!c.is_active());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let c = ChaosConfig {
+            events: vec![
+                FaultEvent { at_us: 3_000_000, replica: 1, kind: FaultKind::Crash },
+                FaultEvent { at_us: 5_000_000, replica: 0, kind: FaultKind::Drain },
+                FaultEvent { at_us: 9_000_000, replica: 0, kind: FaultKind::Restore },
+            ],
+            mtbf_us: 60_000_000,
+            restart_us: 1_500_000,
+        };
+        let back = ChaosConfig::from_value(&crate::util::json::parse(&c.to_value().to_string())
+            .unwrap())
+        .unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn zero_restart_rejected_when_active() {
+        let mut c = ChaosConfig::seeded(1_000_000);
+        c.restart_us = 0;
+        assert!(c.validate().is_err());
+        let inert = ChaosConfig { restart_us: 0, ..ChaosConfig::default() };
+        inert.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_fault_kind_rejected() {
+        let v = crate::util::json::parse(
+            r#"{"events": [{"at_us": 1, "replica": 0, "kind": "explode"}]}"#,
+        )
+        .unwrap();
+        assert!(ChaosConfig::from_value(&v).is_err());
+    }
+}

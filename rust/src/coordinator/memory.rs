@@ -64,6 +64,10 @@ pub struct MemoryGovernor {
     hit_tokens: u64,
     miss_tokens: u64,
     stall_ms: Vec<f64>,
+    /// Session id of each entry in `stall_ms` (same order). Fleet-level
+    /// aggregation needs raw per-session samples because percentiles do
+    /// not compose across replicas.
+    stall_sess: Vec<usize>,
     stall_since: Vec<Option<u64>>,
     /// Time-weighted occupancy integral (blocks x us) and its last stamp.
     occ_blocks_us: f64,
@@ -86,6 +90,7 @@ impl MemoryGovernor {
             hit_tokens: 0,
             miss_tokens: 0,
             stall_ms: Vec::new(),
+            stall_sess: Vec::new(),
             stall_since: vec![None; n_sessions],
             occ_blocks_us: 0.0,
             last_t_us: 0,
@@ -151,7 +156,15 @@ impl MemoryGovernor {
     fn stall_end(&mut self, sess: usize, now_us: u64) {
         if let Some(t0) = self.stall_since[sess].take() {
             self.stall_ms.push(now_us.saturating_sub(t0) as f64 / 1000.0);
+            self.stall_sess.push(sess);
         }
+    }
+
+    /// Raw memory-stall samples as `(session, stall_ms)` in recording
+    /// order. The fleet layer re-aggregates these across replicas rather
+    /// than composing per-replica percentiles.
+    pub fn stall_samples(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.stall_sess.iter().copied().zip(self.stall_ms.iter().copied())
     }
 
     /// Free at least `need` blocks, evicting LRU radix leaves if necessary.

@@ -25,6 +25,6 @@ pub mod sim;
 pub use policy::{AgentServeOpts, Policy, SglangOpts};
 pub use sim::{
     record_scenario_trace, run_scenario, run_scenario_fast, run_scenario_recorded, run_sim,
-    run_sim_trace, run_sim_trace_recorded, DriverEvent, ExecEvent, ExecEventKind, ExecTrace,
-    ReplicaLoad, SimDriver, SimOutcome, SimParams,
+    run_sim_trace, run_sim_trace_recorded, CrashResume, CrashedSession, DriverEvent, ExecEvent,
+    ExecEventKind, ExecTrace, ReplicaLoad, SimDriver, SimOutcome, SimParams,
 };

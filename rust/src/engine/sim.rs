@@ -2091,6 +2091,8 @@ impl Sim {
                 &wf.task_done_us,
                 &wf.task_cp_ms,
                 self.cfg.slo.task_ms,
+                &wf.plan.task_failed,
+                wf.plan.tool_retries,
             )
         });
         SimOutcome {
@@ -2426,12 +2428,145 @@ impl SimDriver {
         &self.sim.metrics
     }
 
+    /// Raw memory-stall samples as `(local session, stall ms)` in recording
+    /// order; empty off the paged path. The fleet reads this before
+    /// [`SimDriver::finish`] and recomputes its stall percentiles from raw
+    /// samples — percentiles do not compose across replicas.
+    pub fn memory_stalls(&self) -> Vec<(usize, f64)> {
+        match &self.sim.kv {
+            KvState::Paged(gov) => gov.stall_samples().collect(),
+            KvState::Tokens { .. } => Vec::new(),
+        }
+    }
+
     /// Aggregate the replica's run. The report horizon is the replica's
     /// last processed event — identical to the batch tail.
     pub fn finish(mut self) -> SimOutcome {
         let end = self.sim.now;
         self.sim.outcome(self.policy, end)
     }
+
+    /// A replacement replica booting cold at `boot_us` on the fleet clock
+    /// (chaos layer, post-crash restart): identical to
+    /// [`SimDriver::new_fast`] except its clock starts at the boot instant
+    /// and the adaptive control tick is re-armed from there, so event
+    /// ordering against the rest of the fleet stays exact. The replica is
+    /// cold in every sense — empty radix cache, empty queues, fresh
+    /// metrics.
+    pub fn new_fast_boot_at(cfg: &Config, policy: Policy, boot_us: u64) -> Self {
+        let mut d = Self::with_flags(
+            cfg,
+            policy,
+            RunFlags { record_timeline: false, ..RunFlags::default() },
+        );
+        d.sim.now = boot_us;
+        if let Policy::AgentServe(opts) = policy {
+            if opts.adaptive {
+                // with_flags armed the first tick at the absolute interval;
+                // shift it to fire one interval after boot.
+                d.sim.heap.clear();
+                let interval = (cfg.scheduler.interval_ms * 1000.0) as u64;
+                d.sim.heap.push(Reverse((boot_us + interval, DRIVER_SEQ_TICK, Ev::Tick)));
+            }
+        }
+        d
+    }
+
+    /// Snapshot every unfinished session for post-crash re-routing (chaos
+    /// layer). Read-only: the fleet harvests this (plus the recorder's
+    /// samples) and then drops the replica.
+    ///
+    /// `bursts_done` counts fully emitted decode bursts (burst 0 = the
+    /// first decode, burst b = step b-1's decode): the continuation script
+    /// the fleet rebuilds folds everything before burst `bursts_done` into
+    /// a cold re-prefill and re-decodes from there. `emitted_in_burst` is
+    /// the progress lost inside the in-flight burst — tokens the crash
+    /// forces the fleet to decode twice (conservation: fleet totals =
+    /// scripted totals + these).
+    pub fn crash_manifest(&self) -> Vec<CrashedSession> {
+        let d = self.sim.driver.as_ref().expect("driver mode");
+        let mut out = Vec::new();
+        for (s, sess) in self.sim.sessions.iter().enumerate() {
+            let burst_len = |b: usize| -> u32 {
+                if b == 0 {
+                    sess.script.first_decode_tokens
+                } else {
+                    sess.script.steps[b - 1].decode_tokens
+                }
+            };
+            let (bursts_done, emitted_in_burst, resume) = match sess.phase {
+                SessPhase::Done => continue,
+                // Injected but unprocessed: the arrival sits in the heap at
+                // exactly the crash timestamp (the fleet steps replicas
+                // strictly past earlier events before processing a fault).
+                SessPhase::NotArrived => (0, 0, CrashResume::Now),
+                SessPhase::Decoding => {
+                    let b = sess.cur_step;
+                    (b, burst_len(b) - sess.decode_remaining, CrashResume::Now)
+                }
+                SessPhase::ToolWait => {
+                    let k = sess.cur_step + 1;
+                    if d.parked[s] {
+                        // Waiting on a fleet-wide join gate that is still
+                        // closed: the continuation re-enters when the gate
+                        // resolves, paying the scripted tool latency from
+                        // that instant (standard gate semantics).
+                        let lat = sess.script.steps[sess.cur_step].tool_latency_us;
+                        (k, 0, CrashResume::ParkedGate { latency_us: lat })
+                    } else {
+                        // Tool call in flight: the external tool is
+                        // unaffected by the replica crash; the continuation
+                        // re-enters when it returns.
+                        let at = self.sim.heap.iter().find_map(|Reverse((t, _, ev))| {
+                            matches!(ev, Ev::ToolReturn(s2) if *s2 == s).then_some(*t)
+                        });
+                        debug_assert!(at.is_some(), "ToolWait session without a ToolReturn");
+                        match at {
+                            Some(t) => (k, 0, CrashResume::At(t)),
+                            None => (k, 0, CrashResume::Now),
+                        }
+                    }
+                }
+                SessPhase::WaitingPrefill | SessPhase::Prefilling => match sess.after_prefill {
+                    AfterPrefill::FirstBurst => (0, 0, CrashResume::Now),
+                    AfterPrefill::StepBurst => (sess.cur_step + 1, 0, CrashResume::Now),
+                    AfterPrefill::ContinueDecode => {
+                        let b = sess.cur_step;
+                        (b, burst_len(b) - sess.decode_remaining, CrashResume::Now)
+                    }
+                },
+            };
+            out.push(CrashedSession { local: s, bursts_done, emitted_in_burst, resume });
+        }
+        out
+    }
+}
+
+/// How a session harvested from a crashed replica re-enters the fleet
+/// ([`SimDriver::crash_manifest`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashResume {
+    /// Re-route immediately (at the crash timestamp).
+    Now,
+    /// A tool call was in flight; re-route when it returns (absolute us).
+    At(u64),
+    /// Parked on a closed fleet-wide join gate: re-route when the gate
+    /// resolves, after this scripted tool latency.
+    ParkedGate { latency_us: u64 },
+}
+
+/// One unfinished session lost in a replica crash (chaos layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashedSession {
+    /// Local session id on the crashed replica.
+    pub local: usize,
+    /// Fully emitted decode bursts — the continuation skips (re-prefills)
+    /// them.
+    pub bursts_done: usize,
+    /// Tokens already emitted in the in-flight burst (decoded twice after
+    /// re-routing).
+    pub emitted_in_burst: u32,
+    pub resume: CrashResume,
 }
 
 #[cfg(test)]

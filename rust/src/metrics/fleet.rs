@@ -13,6 +13,60 @@ use super::recorder::WorkflowReport;
 use super::slo::SloReport;
 use crate::util::json::Value;
 
+/// Chaos-layer counters of one fleet run: replica faults and their cost.
+/// Present on [`FleetReport`] only when fault injection was configured
+/// (replica chaos active or tool-fault policies attached), so fault-free
+/// outputs stay byte-identical to the legacy report.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChaosStats {
+    /// Replica crashes (scripted + seeded).
+    pub crashes: u64,
+    /// Graceful drains entered.
+    pub drains: u64,
+    /// Total replica downtime (sum of cold-restart windows, ms).
+    pub downtime_ms: f64,
+    /// In-flight sessions lost to a crash and re-routed (KV state gone;
+    /// context recomputed on the new replica).
+    pub rerouted_sessions: u64,
+    /// Tokens decoded twice because a crash lost in-burst progress.
+    pub redecoded_tokens: u64,
+    /// Workflow tool retries realized by the fault layer.
+    pub tool_retries: u64,
+    /// Workflow tasks that exhausted a tool retry budget.
+    pub failed_tasks: u64,
+}
+
+impl ChaosStats {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("crashes", self.crashes.into()),
+            ("drains", self.drains.into()),
+            ("downtime_ms", self.downtime_ms.into()),
+            ("rerouted_sessions", self.rerouted_sessions.into()),
+            ("redecoded_tokens", self.redecoded_tokens.into()),
+            ("tool_retries", self.tool_retries.into()),
+            ("failed_tasks", self.failed_tasks.into()),
+        ])
+    }
+}
+
+impl std::fmt::Display for ChaosStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} crashes {} drains | down {:.0}ms | {} rerouted, {} redecoded tok | \
+             {} tool retries, {} failed tasks",
+            self.crashes,
+            self.drains,
+            self.downtime_ms,
+            self.rerouted_sessions,
+            self.redecoded_tokens,
+            self.tool_retries,
+            self.failed_tasks
+        )
+    }
+}
+
 /// Aggregated results of one fleet run ([`crate::cluster::run_cluster`]).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -50,7 +104,10 @@ pub struct FleetReport {
     pub radix_miss_tokens: u64,
     pub evictions: u64,
     pub preemptions: u64,
-    /// Worst per-replica memory-stall p99 (ms); 0 off the paged path.
+    /// Fleet-wide memory-stall p99 (ms), computed from the raw stall
+    /// samples of every replica gathered in global session order —
+    /// percentiles do not compose, so this is *not* a max of per-replica
+    /// p99s. 0 off the paged path.
     pub stall_p99_ms: f64,
     /// Whether the paged KV path ran (gates the memory lines in output).
     pub kv_present: bool,
@@ -58,6 +115,9 @@ pub struct FleetReport {
     /// resolve across replicas, so this is computed by the fleet loop, not
     /// by any single replica).
     pub workflow: Option<WorkflowReport>,
+    /// Chaos-layer counters; None when no fault injection was configured
+    /// (keeps fault-free JSON byte-identical to the legacy form).
+    pub chaos: Option<ChaosStats>,
 }
 
 /// Population coefficient of variation of per-replica token counts.
@@ -135,6 +195,9 @@ impl FleetReport {
         if let Some(wf) = &self.workflow {
             fields.push(("workflow", wf.to_value()));
         }
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", c.to_value()));
+        }
         Value::obj(fields)
     }
 }
@@ -185,6 +248,9 @@ impl std::fmt::Display for FleetReport {
         if let Some(wf) = &self.workflow {
             write!(f, "\n  task  {wf}")?;
         }
+        if let Some(c) = &self.chaos {
+            write!(f, "\n  chaos {c}")?;
+        }
         Ok(())
     }
 }
@@ -217,6 +283,7 @@ mod tests {
             stall_p99_ms: 0.0,
             kv_present: true,
             workflow: None,
+            chaos: None,
         }
     }
 
@@ -248,5 +315,28 @@ mod tests {
         let text = format!("{r}");
         assert!(text.contains("fleet 2 replicas"));
         assert!(text.contains("radix hit 90.0%"));
+    }
+
+    #[test]
+    fn chaos_counters_are_gated() {
+        let clean = report(vec![50, 50]);
+        assert!(!clean.to_value().to_string().contains("\"chaos\""));
+        let mut chaotic = report(vec![50, 50]);
+        chaotic.chaos = Some(ChaosStats {
+            crashes: 2,
+            drains: 1,
+            downtime_ms: 4000.0,
+            rerouted_sessions: 3,
+            redecoded_tokens: 57,
+            tool_retries: 5,
+            failed_tasks: 1,
+        });
+        let v = chaotic.to_value().to_string();
+        assert!(v.contains("\"chaos\""));
+        assert!(v.contains("\"rerouted_sessions\":3"));
+        assert!(v.contains("\"redecoded_tokens\":57"));
+        let text = format!("{chaotic}");
+        assert!(text.contains("2 crashes 1 drains"));
+        assert!(text.contains("3 rerouted"));
     }
 }

@@ -326,25 +326,35 @@ pub struct WorkflowReport {
     /// Task deadline (ms) and how many completed tasks met it.
     pub task_slo_ms: f64,
     pub attained: usize,
+    /// Tasks whose tool retries exhausted (chaos layer); a failed task
+    /// completes (its delay propagates) but never attains the task SLO.
+    /// 0 on fault-free runs, where the JSON form omits the chaos fields
+    /// so legacy outputs stay byte-identical.
+    pub failed_tasks: usize,
+    /// Tool retries realized across all tasks (chaos layer).
+    pub tool_retries: u64,
 }
 
 impl WorkflowReport {
-    /// Aggregate per-task samples. `completed` pairs each *completed*
-    /// task's `(makespan_ms, critical_path_ms)`; `critical_paths_ms`
-    /// covers every released task (the reported distribution). Stretch is
-    /// computed over the completed pairs only, so both sides of the ratio
-    /// describe the same task population even when overload leaves tasks
-    /// unfinished.
+    /// Aggregate per-task samples. `completed` carries each *completed*
+    /// task's `(makespan_ms, critical_path_ms, failed)` — `failed` marks
+    /// chaos-layer retry exhaustion, which disqualifies the task from SLO
+    /// attainment regardless of its makespan. `critical_paths_ms` covers
+    /// every released task (the reported distribution). Stretch is
+    /// computed over the completed tuples only, so both sides of the
+    /// ratio describe the same task population even when overload leaves
+    /// tasks unfinished.
     pub fn from_parts(
         tasks: usize,
-        completed: &[(f64, f64)],
+        completed: &[(f64, f64, bool)],
         critical_paths_ms: &[f64],
         task_slo_ms: f64,
+        tool_retries: u64,
     ) -> Self {
-        let makespans: Vec<f64> = completed.iter().map(|&(m, _)| m).collect();
+        let makespans: Vec<f64> = completed.iter().map(|&(m, _, _)| m).collect();
         let makespan = Summary::from_samples(&makespans);
         let critical_path = Summary::from_samples(critical_paths_ms);
-        let cp_completed: f64 = completed.iter().map(|&(_, c)| c).sum();
+        let cp_completed: f64 = completed.iter().map(|&(_, c, _)| c).sum();
         let stretch = if cp_completed > 0.0 {
             makespans.iter().sum::<f64>() / cp_completed
         } else {
@@ -357,7 +367,12 @@ impl WorkflowReport {
             critical_path,
             stretch,
             task_slo_ms,
-            attained: completed.iter().filter(|&&(m, _)| m <= task_slo_ms).count(),
+            attained: completed
+                .iter()
+                .filter(|&&(m, _, failed)| !failed && m <= task_slo_ms)
+                .count(),
+            failed_tasks: completed.iter().filter(|&&(_, _, failed)| failed).count(),
+            tool_retries,
         }
     }
 
@@ -371,16 +386,19 @@ impl WorkflowReport {
         done_us: &[Option<u64>],
         critical_paths_ms: &[f64],
         task_slo_ms: f64,
+        task_failed: &[bool],
+        tool_retries: u64,
     ) -> Self {
         let n_tasks = release_us.len();
         let mut completed = Vec::with_capacity(n_tasks);
         for t in 0..n_tasks {
             if let Some(done) = done_us[t] {
                 let span = done.saturating_sub(release_us[t]);
-                completed.push((span as f64 / 1000.0, critical_paths_ms[t]));
+                let failed = task_failed.get(t).copied().unwrap_or(false);
+                completed.push((span as f64 / 1000.0, critical_paths_ms[t], failed));
             }
         }
-        Self::from_parts(n_tasks, &completed, critical_paths_ms, task_slo_ms)
+        Self::from_parts(n_tasks, &completed, critical_paths_ms, task_slo_ms, tool_retries)
     }
 
     /// Task-SLO attainment rate over *released* tasks (incomplete = failed).
@@ -392,9 +410,11 @@ impl WorkflowReport {
         }
     }
 
-    /// Deterministic JSON form (run/sweep reports, diagnostics).
+    /// Deterministic JSON form (run/sweep reports, diagnostics). The
+    /// chaos fields appear only when tool faults actually fired, so
+    /// fault-free outputs stay byte-identical to the legacy form.
     pub fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("tasks", self.tasks.into()),
             ("completed_tasks", self.completed_tasks.into()),
             ("makespan_ms", self.makespan.to_value()),
@@ -403,7 +423,12 @@ impl WorkflowReport {
             ("task_slo_ms", self.task_slo_ms.into()),
             ("task_slo_attained", self.attained.into()),
             ("task_slo_rate", self.rate().into()),
-        ])
+        ];
+        if self.failed_tasks > 0 || self.tool_retries > 0 {
+            fields.push(("failed_tasks", self.failed_tasks.into()));
+            fields.push(("tool_retries", self.tool_retries.into()));
+        }
+        Value::obj(fields)
     }
 }
 
@@ -421,7 +446,11 @@ impl std::fmt::Display for WorkflowReport {
             self.stretch,
             self.rate() * 100.0,
             self.task_slo_ms
-        )
+        )?;
+        if self.failed_tasks > 0 || self.tool_retries > 0 {
+            write!(f, " | {} failed, {} tool retries", self.failed_tasks, self.tool_retries)?;
+        }
+        Ok(())
     }
 }
 
@@ -549,9 +578,13 @@ mod tests {
     #[test]
     fn workflow_report_aggregates_tasks() {
         // 4 released tasks, 3 completed; deadline 1000 ms lets 2 through.
-        let completed = [(400.0, 300.0), (900.0, 500.0), (2500.0, 800.0)];
+        let completed = [
+            (400.0, 300.0, false),
+            (900.0, 500.0, false),
+            (2500.0, 800.0, false),
+        ];
         let cps = [300.0, 500.0, 800.0, 600.0];
-        let r = WorkflowReport::from_parts(4, &completed, &cps, 1000.0);
+        let r = WorkflowReport::from_parts(4, &completed, &cps, 1000.0, 0);
         assert_eq!(r.tasks, 4);
         assert_eq!(r.completed_tasks, 3);
         assert_eq!(r.attained, 2);
@@ -565,12 +598,31 @@ mod tests {
         // JSON form is complete and deterministic.
         let v = r.to_value().to_string();
         assert!(v.contains("\"task_slo_rate\""));
-        let again = WorkflowReport::from_parts(4, &completed, &cps, 1000.0);
+        let again = WorkflowReport::from_parts(4, &completed, &cps, 1000.0, 0);
         assert_eq!(v, again.to_value().to_string());
+        // Fault-free reports keep the legacy JSON shape exactly.
+        assert!(!v.contains("failed_tasks"));
         // Empty runs are well defined.
-        let empty = WorkflowReport::from_parts(0, &[], &[], 1000.0);
+        let empty = WorkflowReport::from_parts(0, &[], &[], 1000.0, 0);
         assert_eq!(empty.rate(), 0.0);
         assert_eq!(empty.stretch, 0.0);
+    }
+
+    #[test]
+    fn failed_tasks_cannot_attain_the_task_slo() {
+        // Task 1 beats the deadline but exhausted its tool retries: it
+        // completes, counts as failed, and is excluded from attainment.
+        let completed = [(400.0, 300.0, false), (600.0, 500.0, true)];
+        let cps = [300.0, 500.0];
+        let r = WorkflowReport::from_parts(2, &completed, &cps, 1000.0, 3);
+        assert_eq!(r.completed_tasks, 2);
+        assert_eq!(r.attained, 1);
+        assert_eq!(r.failed_tasks, 1);
+        assert_eq!(r.tool_retries, 3);
+        let v = r.to_value().to_string();
+        assert!(v.contains("\"failed_tasks\":1"));
+        assert!(v.contains("\"tool_retries\":3"));
+        assert!(format!("{r}").contains("1 failed, 3 tool retries"));
     }
 
     #[test]

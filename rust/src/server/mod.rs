@@ -38,16 +38,18 @@ USAGE:
   agentserve workflow list
   agentserve workflow run    --name W [--policy P | --all-policies] [--tasks N]
                              [--rate R] [--fan-out D] [--task-slo-ms MS]
-                             [--model M] [--gpu G] [--seed N]
+                             [--fail-prob P] [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve cluster list
   agentserve cluster run     (--name S | --file f.json) [--replicas N] [--router R]
                              [--policy P | --all-policies] [--model M] [--gpu G]
                              [--seed N] [--per-replica]
+                             [--fail-rate R [--restart-ms MS]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
-  agentserve cluster sweep   (--name gpus-for-slo | (--scenario S | --file f.json)
-                              --replica-counts n1,n2,…) [--router R] [--policy P]
+  agentserve cluster sweep   (--name SWEEP | (--scenario S | --file f.json)
+                              (--replica-counts n1,n2,… | --chaos r1,r2,…))
+                             [--router R] [--replicas N] [--policy P]
                              [--model M] [--gpu G] [--seed N]
                              [--out report.json] [--csv report.csv]
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
@@ -59,11 +61,11 @@ policies:  agentserve | no-alg | no-green | sglang | vllm | llamacpp
 models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
-           | memory-pressure | shared-prefix-fleet
+           | memory-pressure | shared-prefix-fleet | failure-storm
 sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee | fanout-knee
-           | gpus-for-slo (sweep runs all paper policies unless --policy is
-           given; see rust/src/workload/README.md for the scenario/sweep
-           file schema)
+           | gpus-for-slo | chaos-resilience (sweep runs all paper policies
+           unless --policy is given; see rust/src/workload/README.md for the
+           scenario/sweep file schema)
 routers:   round-robin | least-outstanding | session-affinity | cache-aware
            — fleet session routing for `cluster run|sweep` (--replicas N
            single-GPU replicas behind the router; gpus-for-slo reports the
@@ -75,6 +77,13 @@ kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
            sets the page size, --prefix-sharing enables cross-session
            system-prompt reuse; on `scenario sweep`, --kv-blocks is the
            memory sweep axis instead
+chaos:     `cluster run --fail-rate R` seeds replica crashes at R
+           crashes/replica/min (0 = off; --restart-ms sets the cold-restart
+           latency); `cluster sweep --chaos r1,r2,…` sweeps that rate on a
+           fixed --replicas fleet; `workflow run --fail-prob P` makes every
+           tool node fail each attempt with probability P (3 attempts,
+           exponential backoff). All fault schedules are seeded and
+           deterministic: reruns are byte-identical
 ";
 
 /// Entry point used by `main` (and by CLI tests).
@@ -503,7 +512,13 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
                 cfg.slo.task_ms = ms.parse()?;
             }
             apply_kv_flags(args, &mut cfg, None)?;
-            let scenario = WorkflowLoad { spec, fan_out }.carrier(tasks, rate);
+            // --fail-prob installs the scenario-level tool-fault override
+            // (every tool node; 3 attempts, exponential backoff).
+            let tool_fault = match args.get("fail-prob") {
+                Some(p) => Some(crate::workflow::ToolFaultPolicy::with_fail_prob(p.parse()?)),
+                None => None,
+            };
+            let scenario = WorkflowLoad { spec, fan_out, tool_fault }.carrier(tasks, rate);
             scenario.validate()?;
             let per_task = scenario
                 .workflow
@@ -565,14 +580,23 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             }
             println!("\nfleet sweeps (cluster sweep --name <sweep>):");
             for s in SweepSpec::registry() {
-                if let SweepAxis::Replicas { counts, router } = &s.axis {
-                    println!(
+                match &s.axis {
+                    SweepAxis::Replicas { counts, router } => println!(
                         "  {:<16} {:?} replicas  {:<11} {}",
                         s.name,
                         counts,
                         router.name(),
                         s.description
-                    );
+                    ),
+                    SweepAxis::Chaos { rates_per_min, replicas, router } => println!(
+                        "  {:<16} {:?} crashes/min x{} {:<11} {}",
+                        s.name,
+                        rates_per_min,
+                        replicas,
+                        router.name(),
+                        s.description
+                    ),
+                    _ => {}
                 }
             }
             Ok(())
@@ -596,6 +620,42 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                 Some(r) => r.parse()?,
                 None => cfg.cluster.router,
             };
+            // --fail-rate seeds the replica-crash process (crashes per
+            // replica per virtual minute; 0 strips chaos — the fault-free
+            // baseline); --restart-ms tunes the cold-restart latency of an
+            // active process (seeded here or carried by the scenario).
+            let fail_rate = match args.get("fail-rate") {
+                Some(r) => Some(r.parse::<f64>()?),
+                None => None,
+            };
+            let restart_ms = match args.get("restart-ms") {
+                Some(m) => Some(m.parse::<u64>()?),
+                None => None,
+            };
+            if fail_rate.is_some() || restart_ms.is_some() {
+                use crate::config::ChaosConfig;
+                let mut chaos = scenario.chaos.clone().unwrap_or_else(|| ChaosConfig::seeded(0));
+                if let Some(rate) = fail_rate {
+                    anyhow::ensure!(
+                        rate.is_finite() && rate >= 0.0,
+                        "--fail-rate must be finite and >= 0 (crashes/replica/min; 0 = off)"
+                    );
+                    chaos.mtbf_us =
+                        if rate > 0.0 { (60_000_000.0 / rate) as u64 } else { 0 };
+                }
+                if let Some(ms) = restart_ms {
+                    chaos.restart_us = ms.saturating_mul(1000);
+                }
+                // Loud refusal over silent drop: --restart-ms with nothing
+                // to restart would otherwise do nothing.
+                anyhow::ensure!(
+                    chaos.is_active() || restart_ms.is_none(),
+                    "--restart-ms tunes an active crash process; pass --fail-rate > 0 \
+                     or a chaos-carrying scenario (e.g. failure-storm)"
+                );
+                scenario.chaos = chaos.is_active().then_some(chaos);
+                scenario.validate()?;
+            }
             println!(
                 "== cluster '{}' | {} replicas | router {} | {} | {} | seed {} ==",
                 scenario.name, replicas, router, model, gpu, seed
@@ -633,7 +693,8 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} is a scenario-sweep axis; `cluster sweep` grids vary the \
-                     replica count only — use `agentserve scenario sweep` for that axis"
+                     fleet (replica count or crash rate) only — use \
+                     `agentserve scenario sweep` for that axis"
                 );
             }
             let spec = if let Some(name) = args.get("name") {
@@ -642,18 +703,22 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                 // registry definition.
                 anyhow::ensure!(
                     args.get("replica-counts").is_none()
+                        && args.get("chaos").is_none()
                         && args.get("scenario").is_none()
                         && args.get("file").is_none()
                         && args.get("router").is_none(),
                     "--name picks a built-in fleet sweep (fixed grid and router); \
-                     drop it to build an ad-hoc --replica-counts/--router grid"
+                     drop it to build an ad-hoc --replica-counts/--chaos grid"
                 );
                 let spec = SweepSpec::by_name(name).ok_or_else(|| {
                     anyhow::anyhow!("unknown sweep '{name}' (try `agentserve cluster list`)")
                 })?;
                 anyhow::ensure!(
-                    matches!(spec.axis, SweepAxis::Replicas { .. }),
-                    "sweep '{name}' is not a fleet (replicas-axis) sweep; \
+                    matches!(
+                        spec.axis,
+                        SweepAxis::Replicas { .. } | SweepAxis::Chaos { .. }
+                    ),
+                    "sweep '{name}' is not a fleet (replicas/chaos-axis) sweep; \
                      run it via `agentserve scenario sweep --name {name}`"
                 );
                 spec
@@ -672,21 +737,34 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                          (--scenario <name> | --file f.json) plus --replica-counts n1,n2,…"
                     )
                 };
-                let counts = args.get_usize_list("replica-counts")?.ok_or_else(|| {
-                    anyhow::anyhow!("pass --replica-counts n1,n2,… for an ad-hoc fleet sweep")
-                })?;
+                let counts = args.get_usize_list("replica-counts")?;
+                let chaos_rates = args.get_f64_list("chaos")?;
                 let router: RouterPolicy = match args.get("router") {
                     Some(r) => r.parse()?,
                     None => cfg.cluster.router,
                 };
+                let axis = match (counts, chaos_rates) {
+                    (Some(counts), None) => SweepAxis::Replicas { counts, router },
+                    (None, Some(rates_per_min)) => SweepAxis::Chaos {
+                        rates_per_min,
+                        replicas: args.get_usize("replicas", cfg.cluster.replicas)?,
+                        router,
+                    },
+                    _ => anyhow::bail!(
+                        "pass exactly one fleet axis: --replica-counts n1,n2,… | \
+                         --chaos r1,r2,… (crashes/replica/min)"
+                    ),
+                };
                 SweepSpec {
                     name: format!("{}-fleet-sweep", base.name),
                     description: format!(
-                        "ad-hoc replicas sweep over '{}' ({} router)",
-                        base.name, router
+                        "ad-hoc {} sweep over '{}' ({} router)",
+                        axis.kind_name(),
+                        base.name,
+                        router
                     ),
                     base,
-                    axis: SweepAxis::Replicas { counts, router },
+                    axis,
                 }
             };
             spec.validate()?;
@@ -746,6 +824,7 @@ fn resolve_sweep_spec(
             "kv-blocks",
             "fan-outs",
             "replica-counts",
+            "chaos",
             "router",
         ] {
             anyhow::ensure!(
@@ -763,6 +842,10 @@ fn resolve_sweep_spec(
     anyhow::ensure!(
         args.get("router").is_none(),
         "--router applies to fleet (replica) grids; use `agentserve cluster sweep`"
+    );
+    anyhow::ensure!(
+        args.get("chaos").is_none(),
+        "--chaos is a fleet axis; use `agentserve cluster sweep`"
     );
     let base = if let Some(path) = args.get("file") {
         scenario_from_file(path, cfg)?
@@ -849,6 +932,11 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
         println!(
             "task knee ({} where p99 makespan first exceeds the {:.0} ms task SLO):",
             report.axis, report.slo_task_ms
+        );
+    } else if report.axis == "chaos" {
+        println!(
+            "resilience knee (crash rate where p99 TTFT first exceeds the {:.0} ms SLO):",
+            report.slo_ttft_ms
         );
     } else if report.axis == "kv-blocks" {
         println!(
@@ -1218,6 +1306,88 @@ mod tests {
         // The registry fleet sweep also resolves through `scenario sweep`
         // (it is just another sweep), and refuses dropped flags there too.
         assert!(run(args("scenario sweep --name gpus-for-slo --replica-counts 1,2")).is_err());
+    }
+
+    #[test]
+    fn cluster_run_chaos_flags_smoke() {
+        // Seeded crashes on an ordinary scenario; rate 0 is the baseline.
+        run(args(
+            "cluster run --name mixed-fleet --replicas 2 --fail-rate 6 --model 3b",
+        ))
+        .unwrap();
+        run(args(
+            "cluster run --name mixed-fleet --replicas 2 --fail-rate 0 --model 3b",
+        ))
+        .unwrap();
+        // --restart-ms tunes an active process: OK alongside --fail-rate or
+        // a chaos-carrying scenario, a loud error with neither.
+        run(args(
+            "cluster run --name mixed-fleet --replicas 2 --fail-rate 6 --restart-ms 500 \
+             --model 3b",
+        ))
+        .unwrap();
+        run(args(
+            "cluster run --name failure-storm --replicas 2 --restart-ms 500 --model 3b",
+        ))
+        .unwrap();
+        assert!(run(args(
+            "cluster run --name mixed-fleet --replicas 2 --restart-ms 500"
+        ))
+        .is_err());
+        assert!(run(args(
+            "cluster run --name mixed-fleet --replicas 2 --fail-rate -1"
+        ))
+        .is_err());
+        // An active process with a zero restart is rejected by validation.
+        assert!(run(args(
+            "cluster run --name mixed-fleet --replicas 2 --fail-rate 6 --restart-ms 0"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn cluster_sweep_chaos_axis_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_chaos_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("chaos.json");
+        run(args(&format!(
+            "cluster sweep --scenario mixed-fleet --chaos 0,6 --replicas 2 --policy vllm \
+             --model 3b --out {}",
+            json.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "chaos");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        std::fs::remove_file(json).unwrap();
+        // Exactly one fleet axis at a time; registry names refuse ad-hoc
+        // grids; the chaos axis lives under `cluster sweep`, not `scenario
+        // sweep`.
+        assert!(run(args(
+            "cluster sweep --scenario mixed-fleet --chaos 0,6 --replica-counts 1,2"
+        ))
+        .is_err());
+        assert!(run(args("cluster sweep --name chaos-resilience --chaos 1,2")).is_err());
+        assert!(run(args("scenario sweep --scenario paper-fig5 --chaos 0,6")).is_err());
+        assert!(run(args("scenario sweep --name chaos-resilience --chaos 0,6")).is_err());
+        // Non-increasing and negative grids are rejected by validation.
+        assert!(run(args("cluster sweep --scenario mixed-fleet --chaos 6,0")).is_err());
+        assert!(run(args("cluster sweep --scenario mixed-fleet --chaos -1,2")).is_err());
+    }
+
+    #[test]
+    fn workflow_run_fail_prob_smoke() {
+        run(args(
+            "workflow run --name supervisor-worker --tasks 2 --fail-prob 0.3 --model 3b",
+        ))
+        .unwrap();
+        // Out-of-range probability and a spec with no tool node to attach
+        // to are both validation errors.
+        assert!(run(args(
+            "workflow run --name supervisor-worker --tasks 2 --fail-prob 1.5"
+        ))
+        .is_err());
+        assert!(run(args("workflow run --name debate --tasks 2 --fail-prob 0.3")).is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! reproduces the classic scenario's workload byte-for-byte (locked by
 //! tests here and in `rust/tests/workflows.rs`).
 
-use super::spec::{NodeKind, WorkflowSpec};
+use super::spec::{NodeKind, WorkflowSpec, TOOL_FAULT_STREAM};
 use crate::config::ModelKind;
 use crate::util::rng::Rng;
 use crate::workload::{Scenario, SessionScript, SessionStep, WorkloadGenerator};
@@ -84,6 +84,12 @@ pub struct WorkflowPlan {
     pub dependents: Vec<Vec<DepTarget>>,
     /// All units in deterministic topological order (deps precede uses).
     pub units: Vec<UnitInfo>,
+    /// Per task: did a tool node exhaust its retry budget? Failed tasks
+    /// still run to completion (the exhausted tool's delay propagates, so
+    /// nothing hangs) but can no longer attain their SLO.
+    pub task_failed: Vec<bool>,
+    /// Total tool retries realized across all tasks (chaos accounting).
+    pub tool_retries: u64,
 }
 
 impl WorkflowPlan {
@@ -178,12 +184,14 @@ pub struct CompiledWorkflow {
 /// Per-node non-tool dependencies with tool chains folded into a single
 /// release delay (the maximum accumulated latency across incoming tool
 /// paths — a join releases when its last dependency resolves, so per-path
-/// delays collapse conservatively onto that edge).
+/// delays collapse conservatively onto that edge). `tool_latency[j]` is
+/// the effective latency of tool node `j` — the declared base latency, or
+/// the fault-realized cost when the chaos layer is active.
 ///
 /// Computed in one pass over the topological definition order, reusing
 /// earlier nodes' folded results, so shared (diamond-shaped) tool
 /// subgraphs cost linear work instead of one recursive walk per path.
-fn fold_deps(spec: &WorkflowSpec) -> Vec<(Vec<usize>, u64)> {
+fn fold_deps(spec: &WorkflowSpec, tool_latency: &[u64]) -> Vec<(Vec<usize>, u64)> {
     let mut folded: Vec<(Vec<usize>, u64)> = Vec::with_capacity(spec.nodes.len());
     for node in &spec.nodes {
         let mut deps: Vec<usize> = Vec::new();
@@ -191,7 +199,7 @@ fn fold_deps(spec: &WorkflowSpec) -> Vec<(Vec<usize>, u64)> {
         for dep in &node.deps {
             let d = spec.node_index(dep).expect("validated dep");
             match spec.nodes[d].kind {
-                NodeKind::Tool { latency_us } => {
+                NodeKind::Tool { .. } => {
                     // A tool edge contributes its anchors plus its own
                     // latency on top of whatever tool chain fed it.
                     for &anchor in &folded[d].0 {
@@ -199,7 +207,7 @@ fn fold_deps(spec: &WorkflowSpec) -> Vec<(Vec<usize>, u64)> {
                             deps.push(anchor);
                         }
                     }
-                    delay = delay.max(folded[d].1 + latency_us);
+                    delay = delay.max(folded[d].1 + tool_latency[d]);
                 }
                 _ => {
                     if !deps.contains(&d) {
@@ -211,6 +219,17 @@ fn fold_deps(spec: &WorkflowSpec) -> Vec<(Vec<usize>, u64)> {
         folded.push((deps, delay));
     }
     folded
+}
+
+/// Declared per-node tool latencies (0 for non-tool nodes — never read).
+fn base_tool_latencies(spec: &WorkflowSpec) -> Vec<u64> {
+    spec.nodes
+        .iter()
+        .map(|n| match n.kind {
+            NodeKind::Tool { latency_us } => latency_us,
+            _ => 0,
+        })
+        .collect()
 }
 
 /// Compile a workflow-carrying scenario for one `(model, seed)` pair.
@@ -246,9 +265,16 @@ pub fn compile(scenario: &Scenario, model: ModelKind, seed: u64) -> CompiledWork
         })
         .collect();
 
-    // Static per-node structure.
-    let folded = fold_deps(&spec);
+    // Static per-node structure. With active tool faults the folded delays
+    // become per-task (each task realizes its own fault draws); otherwise
+    // one static fold serves every task — the legacy byte-pure path, taken
+    // even when inert (fail_prob 0) policies are attached.
+    let base_lat = base_tool_latencies(&spec);
+    let static_folded = fold_deps(&spec, &base_lat);
+    let faults_active = spec.has_tool_faults();
     let roots: Vec<usize> = (0..spec.nodes.len()).map(|i| spec.session_root(i)).collect();
+    let mut task_failed = vec![false; n_tasks];
+    let mut tool_retries = 0u64;
 
     let mut scripts: Vec<SessionScript> = Vec::with_capacity(n_tasks * spec.sessions_per_task());
     let mut task_of: Vec<usize> = Vec::new();
@@ -263,6 +289,39 @@ pub fn compile(scenario: &Scenario, model: ModelKind, seed: u64) -> CompiledWork
     let mut unit_at: Vec<Vec<(usize, usize)>> = Vec::new(); // per session: (burst, unit)
 
     for (t, &release) in releases.iter().enumerate() {
+        // Realize this task's tool faults: each (task, tool node) draws
+        // once from its own stream, so reruns are byte-identical and fault
+        // schedules never shift across nodes or tasks. A failed attempt
+        // costs its timeout plus backoff; exhaustion marks the task failed
+        // but the realized delay still folds into the release edges below,
+        // so dependents release and the DAG completes.
+        let folded_storage;
+        let folded = if faults_active {
+            let mut lat = base_lat.clone();
+            for (j, node) in spec.nodes.iter().enumerate() {
+                let (NodeKind::Tool { latency_us }, Some(f)) = (node.kind, node.fault) else {
+                    continue;
+                };
+                if f.fail_prob <= 0.0 {
+                    continue;
+                }
+                let mut frng = Rng::fold(
+                    Rng::fold(seed, TOOL_FAULT_STREAM),
+                    ((t as u64) << 32) | j as u64,
+                );
+                let (cost, retries, exhausted) = f.realize(latency_us, &mut frng);
+                lat[j] = cost;
+                tool_retries += retries as u64;
+                if exhausted {
+                    task_failed[t] = true;
+                }
+            }
+            folded_storage = fold_deps(&spec, &lat);
+            &folded_storage
+        } else {
+            &static_folded
+        };
+
         // Per-task instance tables, indexed by node.
         let mut node_units: Vec<Vec<usize>> = vec![Vec::new(); spec.nodes.len()];
         let mut node_sessions: Vec<Vec<usize>> = vec![Vec::new(); spec.nodes.len()];
@@ -398,6 +457,8 @@ pub fn compile(scenario: &Scenario, model: ModelKind, seed: u64) -> CompiledWork
             unit_of_burst,
             dependents,
             units,
+            task_failed,
+            tool_retries,
         },
     }
 }
@@ -441,6 +502,7 @@ mod tests {
             n_agents: tasks,
             kv: None,
             workflow: None,
+            chaos: None,
         };
         for seed in [3, 7, 11] {
             let cw = compile(&wf, ModelKind::Qwen3B, seed);
@@ -553,6 +615,70 @@ mod tests {
         assert_eq!(cw.scripts[0].template, cw.scripts[3].template);
         assert_ne!(cw.scripts[0].template, cw.scripts[1].template);
         assert!(cw.scripts[0].template >= WF_TEMPLATE_BASE);
+    }
+
+    #[test]
+    fn inert_fault_policies_compile_byte_identically() {
+        use crate::workflow::ToolFaultPolicy;
+        let clean = carrier("sw", WorkflowSpec::by_name("supervisor-worker").unwrap(), 6);
+        let mut inert = clean.clone();
+        inert.workflow.as_mut().unwrap().tool_fault = Some(ToolFaultPolicy::with_fail_prob(0.0));
+        let a = compile(&clean, ModelKind::Qwen3B, 11);
+        let b = compile(&inert, ModelKind::Qwen3B, 11);
+        assert_eq!(a.scripts, b.scripts, "fail_prob 0 must stay on the legacy path");
+        assert_eq!(a.plan, b.plan);
+        assert!(a.plan.task_failed.iter().all(|&f| !f));
+        assert_eq!(a.plan.tool_retries, 0);
+    }
+
+    #[test]
+    fn tool_faults_are_deterministic_and_stretch_release_edges() {
+        use crate::workflow::ToolFaultPolicy;
+        let tasks = 16;
+        let mut sc = carrier("sw", WorkflowSpec::by_name("supervisor-worker").unwrap(), tasks);
+        sc.workflow.as_mut().unwrap().tool_fault = Some(ToolFaultPolicy {
+            fail_prob: 0.45,
+            timeout_us: 400_000,
+            max_attempts: 2,
+            backoff_base_us: 50_000,
+        });
+        sc.validate().unwrap();
+        let a = compile(&sc, ModelKind::Qwen3B, 11);
+        let b = compile(&sc, ModelKind::Qwen3B, 11);
+        assert_eq!(a.scripts, b.scripts, "fault realization must be reproducible");
+        assert_eq!(a.plan, b.plan);
+        assert!(a.plan.tool_retries > 0, "p=0.45 over 16 tasks should retry at least once");
+
+        // Per-task dispatch delays: clean tasks keep the base 120 ms edge;
+        // faulted tasks pay timeout(+backoff) on that edge instead.
+        let mut saw_clean = false;
+        let mut saw_faulted = false;
+        for t in 0..tasks {
+            let worker0 = 5 * t + 1;
+            let d = a.plan.arrivals[worker0].delay_us;
+            if d == 120_000 {
+                saw_clean = true;
+            } else {
+                saw_faulted = true;
+                // Either one failed attempt then success (timeout +
+                // backoff + base = 570 ms) or exhaustion (two timeouts,
+                // no backoff after the final attempt = 800 ms).
+                assert!(
+                    d == 400_000 + 50_000 + 120_000 || d == 800_000,
+                    "task {t}: unexpected realized dispatch delay {d}"
+                );
+                if d == 800_000 {
+                    assert!(a.plan.task_failed[t], "exhaustion must mark the task failed");
+                }
+            }
+        }
+        assert!(saw_clean && saw_faulted, "p=0.45 should mix outcomes across 16 tasks");
+
+        // Failed tasks still wire the full DAG: the reduce step exists and
+        // joins on all 4 workers (delay propagates; nothing hangs).
+        for t in 0..tasks {
+            assert_eq!(a.plan.step_deps[5 * t], vec![4]);
+        }
     }
 
     #[test]

@@ -32,4 +32,6 @@ mod spec;
 pub use compile::{
     compile, ArrivalGate, CompiledWorkflow, DepTarget, ResolvedUnit, UnitInfo, WorkflowPlan,
 };
-pub use spec::{NodeKind, WorkflowLoad, WorkflowNode, WorkflowSpec};
+pub use spec::{
+    NodeKind, ToolFaultPolicy, WorkflowLoad, WorkflowNode, WorkflowSpec, TOOL_FAULT_STREAM,
+};

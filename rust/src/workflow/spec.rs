@@ -17,7 +17,102 @@
 //! `docs/ARCHITECTURE.md` § Workflow DAG layer).
 
 use crate::util::json::Value;
+use crate::util::rng::Rng;
 use crate::workload::{ArrivalProcess, Scenario, WorkloadKind};
+
+/// Per-(task, tool-node) fault stream selector: folded with the run seed,
+/// then with `(task << 32) | node`, so every tool instance draws from its
+/// own deterministic stream (reruns are byte-identical; adding or removing
+/// a fault policy on one node never shifts another node's draws).
+pub const TOOL_FAULT_STREAM: u64 = 0x7001_FA17;
+
+/// Failure model of one workflow tool node: each attempt fails with
+/// `fail_prob`; a failed attempt runs to its `timeout_us`, then retries
+/// after exponential backoff (`backoff_base_us << attempt`) up to
+/// `max_attempts` total attempts. Exhaustion marks the owning task
+/// *failed* — the delay still propagates through the DAG (dependents
+/// release; nothing hangs), but the task can no longer attain its SLO.
+///
+/// Faults are realized at compile time from the node's seeded stream
+/// ([`TOOL_FAULT_STREAM`]), so a rerun under the same `(scenario, seed)`
+/// reproduces the exact same fault schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ToolFaultPolicy {
+    /// Per-attempt failure probability in `[0, 1)`.
+    pub fail_prob: f64,
+    /// Latency a failed attempt burns before the failure is detected (us).
+    pub timeout_us: u64,
+    /// Total attempts (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before retry `k` (1-based): `backoff_base_us << (k - 1)`.
+    pub backoff_base_us: u64,
+}
+
+impl ToolFaultPolicy {
+    /// A plain `fail_prob` policy with paper-ish defaults: 30 s timeout,
+    /// 3 attempts, 250 ms base backoff.
+    pub fn with_fail_prob(fail_prob: f64) -> Self {
+        Self { fail_prob, timeout_us: 30_000_000, max_attempts: 3, backoff_base_us: 250_000 }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.fail_prob),
+            "tool fault fail_prob must be in [0, 1) (got {})",
+            self.fail_prob
+        );
+        anyhow::ensure!(self.max_attempts >= 1, "tool fault max_attempts must be >= 1");
+        if self.fail_prob > 0.0 {
+            anyhow::ensure!(
+                self.timeout_us >= 1,
+                "tool fault timeout_us must be >= 1 when fail_prob > 0"
+            );
+        }
+        Ok(())
+    }
+
+    /// Realize one tool invocation against this policy: returns the total
+    /// latency replacing the node's base latency, the number of retries
+    /// performed, and whether every attempt failed (task failure). The
+    /// final failed attempt pays its timeout but no backoff (there is no
+    /// retry to back off for); a successful attempt pays the base latency.
+    pub fn realize(&self, base_latency_us: u64, rng: &mut Rng) -> (u64, u32, bool) {
+        let mut cost = 0u64;
+        for attempt in 1..=self.max_attempts {
+            if rng.f64() >= self.fail_prob {
+                return (cost + base_latency_us, attempt - 1, false);
+            }
+            cost += self.timeout_us;
+            if attempt < self.max_attempts {
+                cost += self.backoff_base_us << (attempt - 1);
+            }
+        }
+        (cost, self.max_attempts - 1, true)
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("fail_prob", self.fail_prob.into()),
+            ("timeout_us", self.timeout_us.into()),
+            ("max_attempts", self.max_attempts.into()),
+            ("backoff_base_us", self.backoff_base_us.into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let p = Self {
+            fail_prob: v.req_f64("fail_prob")?,
+            timeout_us: v.get("timeout_us").and_then(|x| x.as_u64()).unwrap_or(30_000_000),
+            max_attempts: v.get("max_attempts").and_then(|x| x.as_u64()).unwrap_or(3) as u32,
+            backoff_base_us: v
+                .get("backoff_base_us")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(250_000),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
 
 /// What one workflow node does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +157,9 @@ pub struct WorkflowNode {
     /// prefill on that node's session. Must be an `Llm` node whose `count`
     /// equals the context owner's.
     pub continues: Option<String>,
+    /// Failure model for `Tool` nodes (None = the tool never fails). The
+    /// compiler realizes it per task from the node's seeded stream.
+    pub fault: Option<ToolFaultPolicy>,
 }
 
 impl WorkflowNode {
@@ -73,6 +171,7 @@ impl WorkflowNode {
             deps: deps.iter().map(|d| d.to_string()).collect(),
             count: 1,
             continues: None,
+            fault: None,
         }
     }
 
@@ -84,6 +183,7 @@ impl WorkflowNode {
             deps: deps.iter().map(|d| d.to_string()).collect(),
             count: 1,
             continues: None,
+            fault: None,
         }
     }
 
@@ -95,6 +195,7 @@ impl WorkflowNode {
             deps: deps.iter().map(|d| d.to_string()).collect(),
             count: 1,
             continues: None,
+            fault: None,
         }
     }
 
@@ -107,6 +208,14 @@ impl WorkflowNode {
     /// Builder: continue `parent`'s cached context.
     pub fn continuing(mut self, parent: &str) -> Self {
         self.continues = Some(parent.to_string());
+        self
+    }
+
+    /// Builder: attach a failure model (tool nodes only; see [`validate`]).
+    ///
+    /// [`validate`]: WorkflowSpec::validate
+    pub fn with_fault(mut self, fault: ToolFaultPolicy) -> Self {
+        self.fault = Some(fault);
         self
     }
 
@@ -130,6 +239,9 @@ impl WorkflowNode {
         fields.push(("count", self.count.into()));
         if let Some(c) = &self.continues {
             fields.push(("continues", c.as_str().into()));
+        }
+        if let Some(f) = &self.fault {
+            fields.push(("fault", f.to_value()));
         }
         Value::obj(fields)
     }
@@ -161,6 +273,10 @@ impl WorkflowNode {
             deps,
             count: v.get("count").and_then(|c| c.as_usize()).unwrap_or(1),
             continues: v.get("continues").and_then(|c| c.as_str()).map(String::from),
+            fault: match v.get("fault") {
+                Some(f) => Some(ToolFaultPolicy::from_value(f)?),
+                None => None,
+            },
         })
     }
 }
@@ -236,6 +352,27 @@ impl WorkflowSpec {
         spec
     }
 
+    /// The spec with `fault` set on **every** tool node (the scenario-level
+    /// `tool_fault` override / `--fail-rate`-style chaos knob). Per-node
+    /// policies already present are replaced.
+    pub fn with_tool_fault(&self, fault: ToolFaultPolicy) -> WorkflowSpec {
+        let mut spec = self.clone();
+        for node in &mut spec.nodes {
+            if matches!(node.kind, NodeKind::Tool { .. }) {
+                node.fault = Some(fault);
+            }
+        }
+        spec
+    }
+
+    /// Whether any tool node carries an *active* fault policy (fail_prob
+    /// > 0). Inactive specs compile on the legacy byte-pure path.
+    pub fn has_tool_faults(&self) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| n.fault.map(|f| f.fail_prob > 0.0).unwrap_or(false))
+    }
+
     /// Structural sanity checks (run before compilation / after load).
     pub fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(!self.name.is_empty(), "workflow needs a name");
@@ -289,6 +426,16 @@ impl WorkflowSpec {
                         node.name
                     );
                 }
+            }
+            if let Some(fault) = &node.fault {
+                anyhow::ensure!(
+                    matches!(node.kind, NodeKind::Tool { .. }),
+                    "workflow '{}': node '{}' has a fault policy but only tool nodes \
+                     can fail",
+                    self.name,
+                    node.name
+                );
+                fault.validate()?;
             }
             if let Some(parent) = &node.continues {
                 anyhow::ensure!(
@@ -444,18 +591,26 @@ pub struct WorkflowLoad {
     /// When set, every replicated node runs at this degree
     /// ([`WorkflowSpec::with_fan_out`]).
     pub fan_out: Option<usize>,
+    /// When set, every tool node runs under this failure model
+    /// ([`WorkflowSpec::with_tool_fault`]; the `--fail-rate` chaos knob).
+    pub tool_fault: Option<ToolFaultPolicy>,
 }
 
 impl WorkflowLoad {
     pub fn new(spec: WorkflowSpec) -> Self {
-        Self { spec, fan_out: None }
+        Self { spec, fan_out: None, tool_fault: None }
     }
 
-    /// The spec as it will actually run (fan-out override applied).
+    /// The spec as it will actually run (fan-out and tool-fault overrides
+    /// applied).
     pub fn effective_spec(&self) -> WorkflowSpec {
-        match self.fan_out {
+        let spec = match self.fan_out {
             Some(d) => self.spec.with_fan_out(d),
             None => self.spec.clone(),
+        };
+        match self.tool_fault {
+            Some(f) => spec.with_tool_fault(f),
+            None => spec,
         }
     }
 
@@ -471,6 +626,22 @@ impl WorkflowLoad {
                  override to rescale",
                 self.spec.name
             );
+        }
+        if let Some(f) = &self.tool_fault {
+            f.validate()?;
+            // Same loud-refusal idiom: an override with no tool node to
+            // attach to would silently do nothing.
+            anyhow::ensure!(
+                self.spec
+                    .nodes
+                    .iter()
+                    .any(|n| matches!(n.kind, NodeKind::Tool { .. })),
+                "workflow '{}' has no tool node for the tool-fault override to \
+                 attach to",
+                self.spec.name
+            );
+        }
+        if self.fan_out.is_some() || self.tool_fault.is_some() {
             self.effective_spec().validate()?;
         }
         Ok(())
@@ -490,6 +661,7 @@ impl WorkflowLoad {
             n_agents: tasks,
             kv: None,
             workflow: Some(self),
+            chaos: None,
         }
     }
 
@@ -498,6 +670,9 @@ impl WorkflowLoad {
         if let Some(d) = self.fan_out {
             fields.push(("fan_out", d.into()));
         }
+        if let Some(f) = &self.tool_fault {
+            fields.push(("tool_fault", f.to_value()));
+        }
         Value::obj(fields)
     }
 
@@ -505,6 +680,10 @@ impl WorkflowLoad {
         Ok(Self {
             spec: WorkflowSpec::from_value(v.req("spec")?)?,
             fan_out: v.get("fan_out").and_then(|d| d.as_usize()),
+            tool_fault: match v.get("tool_fault") {
+                Some(f) => Some(ToolFaultPolicy::from_value(f)?),
+                None => None,
+            },
         })
     }
 }
@@ -626,6 +805,82 @@ mod tests {
         assert!(flat.validate().is_err(), "nothing to rescale");
         flat.fan_out = None;
         flat.validate().unwrap();
+    }
+
+    #[test]
+    fn tool_fault_policy_realize_and_validate() {
+        let p = ToolFaultPolicy {
+            fail_prob: 0.0,
+            timeout_us: 1_000_000,
+            max_attempts: 3,
+            backoff_base_us: 100_000,
+        };
+        p.validate().unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        // fail_prob 0: always first-attempt success at base latency.
+        assert_eq!(p.realize(120_000, &mut rng), (120_000, 0, false));
+
+        // Certain-ish failure: force exhaustion by driving fail_prob to the
+        // top of the valid range. Cost = 3 timeouts + backoffs 100ms, 200ms
+        // (no backoff after the final attempt), and no base latency.
+        let p = ToolFaultPolicy { fail_prob: 0.999_999_999, ..p };
+        let (cost, retries, exhausted) = p.realize(120_000, &mut rng);
+        assert_eq!(cost, 3_000_000 + 100_000 + 200_000);
+        assert_eq!(retries, 2);
+        assert!(exhausted);
+
+        // Same stream, same draws: realization is deterministic.
+        let p = ToolFaultPolicy::with_fail_prob(0.4);
+        let mut a = Rng::fold(Rng::fold(11, TOOL_FAULT_STREAM), 3);
+        let mut b = Rng::fold(Rng::fold(11, TOOL_FAULT_STREAM), 3);
+        assert_eq!(p.realize(50_000, &mut a), p.realize(50_000, &mut b));
+
+        assert!(ToolFaultPolicy::with_fail_prob(1.0).validate().is_err());
+        assert!(ToolFaultPolicy::with_fail_prob(-0.1).validate().is_err());
+        let mut bad = ToolFaultPolicy::with_fail_prob(0.2);
+        bad.max_attempts = 0;
+        assert!(bad.validate().is_err());
+        bad.max_attempts = 2;
+        bad.timeout_us = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fault_policies_attach_to_tool_nodes_only() {
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[1].fault = Some(ToolFaultPolicy::with_fail_prob(0.1));
+        s.validate().unwrap();
+        assert!(s.has_tool_faults());
+        // Round trip keeps the policy.
+        let back = WorkflowSpec::from_value(&parse(&s.to_value().to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+
+        // On an LLM node the policy is rejected.
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[0].fault = Some(ToolFaultPolicy::with_fail_prob(0.1));
+        assert!(s.validate().is_err());
+
+        // An attached-but-inert policy does not count as active.
+        let mut s = WorkflowSpec::by_name("supervisor-worker").unwrap();
+        s.nodes[1].fault = Some(ToolFaultPolicy::with_fail_prob(0.0));
+        assert!(!s.has_tool_faults());
+    }
+
+    #[test]
+    fn tool_fault_override_applies_to_every_tool_node() {
+        let mut load = WorkflowLoad::new(WorkflowSpec::by_name("supervisor-worker").unwrap());
+        load.tool_fault = Some(ToolFaultPolicy::with_fail_prob(0.25));
+        load.validate().unwrap();
+        let eff = load.effective_spec();
+        assert!(eff.has_tool_faults());
+        assert_eq!(eff.nodes[1].fault.unwrap().fail_prob, 0.25);
+        // Round trip keeps the override.
+        assert_eq!(WorkflowLoad::from_value(&load.to_value()).unwrap(), load);
+
+        // No tool node to attach to → loud refusal, like fan_out.
+        let mut flat = WorkflowLoad::new(WorkflowSpec::by_name("debate").unwrap());
+        flat.tool_fault = Some(ToolFaultPolicy::with_fail_prob(0.25));
+        assert!(flat.validate().is_err(), "nothing to attach to");
     }
 
     #[test]

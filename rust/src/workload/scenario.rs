@@ -18,7 +18,7 @@
 use super::generator::WorkloadGenerator;
 use super::spec::WorkloadKind;
 use super::trace::{Trace, TraceEvent};
-use crate::config::{Config, KvConfig, ModelKind};
+use crate::config::{ChaosConfig, Config, KvConfig, ModelKind};
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
 use crate::workflow::WorkflowLoad;
@@ -164,6 +164,11 @@ pub struct Scenario {
     /// arrival process open-loop. Compiled via [`crate::workflow::compile()`]
     /// instead of [`Scenario::instantiate`].
     pub workflow: Option<WorkflowLoad>,
+    /// Replica fault injection ([`crate::config::ChaosConfig`]): scripted
+    /// crash/drain/restore events and/or a seeded per-replica crash
+    /// process, applied by the fleet loop. `None` (or an inert config)
+    /// keeps the fleet on the exact legacy code path.
+    pub chaos: Option<ChaosConfig>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -218,6 +223,9 @@ impl Scenario {
                 anyhow::ensure!(idle_min_us <= idle_max_us, "idle_min_us must be <= idle_max_us");
             }
             ArrivalProcess::ClosedLoop { .. } => {}
+        }
+        if let Some(c) = &self.chaos {
+            c.validate()?;
         }
         if let Some(kv) = &self.kv {
             anyhow::ensure!(
@@ -374,6 +382,7 @@ impl Scenario {
                 n_agents: 4,
                 kv: None,
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "burst-storm".into(),
@@ -390,6 +399,7 @@ impl Scenario {
                 n_agents: 4,
                 kv: None,
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -403,6 +413,7 @@ impl Scenario {
                 n_agents: 5,
                 kv: None,
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "long-tool".into(),
@@ -422,6 +433,7 @@ impl Scenario {
                 n_agents: 4,
                 kv: None,
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -438,6 +450,7 @@ impl Scenario {
                 n_agents: 6,
                 kv: None,
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "memory-pressure".into(),
@@ -453,6 +466,7 @@ impl Scenario {
                 // growth forces preemptions (all deterministic per seed).
                 kv: Some(KvConfig { num_blocks: 2048, block_size: 16, prefix_sharing: true }),
                 workflow: None,
+                chaos: None,
             },
             Scenario {
                 name: "shared-prefix-fleet".into(),
@@ -467,6 +481,29 @@ impl Scenario {
                 // point is the >0.9 radix hit rate across the fleet.
                 kv: Some(KvConfig { num_blocks: 65_536, block_size: 16, prefix_sharing: true }),
                 workflow: None,
+                chaos: None,
+            },
+            Scenario {
+                name: "failure-storm".into(),
+                description: "supervisor-worker pipelines on a fleet with seeded replica \
+                              crashes (20 s MTBF, 2 s cold restart) and flaky tools \
+                              (8% failure, 3 attempts): the chaos-resilience scenario"
+                    .into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 0.8 },
+                populations: vec![],
+                total_sessions: 12,
+                n_agents: 4,
+                kv: None,
+                workflow: Some({
+                    let mut w = WorkflowLoad::new(
+                        crate::workflow::WorkflowSpec::by_name("supervisor-worker")
+                            .expect("registry spec"),
+                    );
+                    w.tool_fault =
+                        Some(crate::workflow::ToolFaultPolicy::with_fail_prob(0.08));
+                    w
+                }),
+                chaos: Some(ChaosConfig::seeded(20_000_000)),
             },
         ]
     }
@@ -504,6 +541,9 @@ impl Scenario {
         }
         if let Some(wf) = &self.workflow {
             fields.push(("workflow", wf.to_value()));
+        }
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", c.to_value()));
         }
         Value::obj(fields)
     }
@@ -556,6 +596,10 @@ impl Scenario {
                 None => None,
             },
             workflow,
+            chaos: match v.get("chaos") {
+                Some(c) => Some(ChaosConfig::from_value(c)?),
+                None => None,
+            },
         };
         sc.validate()?;
         Ok(sc)
@@ -579,7 +623,7 @@ mod tests {
     #[test]
     fn registry_is_valid_and_named_uniquely() {
         let reg = Scenario::registry();
-        assert!(reg.len() >= 7);
+        assert!(reg.len() >= 8);
         for s in &reg {
             s.validate().unwrap();
         }
@@ -594,6 +638,9 @@ mod tests {
     #[test]
     fn instantiation_is_deterministic() {
         for sc in Scenario::registry() {
+            if sc.workflow.is_some() {
+                continue; // workflow carriers compile, not instantiate
+            }
             let a = sc.instantiate(ModelKind::Qwen3B, 11);
             let b = sc.instantiate(ModelKind::Qwen3B, 11);
             assert_eq!(a.trace, b.trace, "{}", sc.name);
@@ -606,6 +653,9 @@ mod tests {
     #[test]
     fn arrivals_are_monotone_and_ids_sequential() {
         for sc in Scenario::registry() {
+            if sc.workflow.is_some() {
+                continue; // workflow carriers compile, not instantiate
+            }
             let wl = sc.instantiate(ModelKind::Qwen3B, 3);
             assert_eq!(wl.trace.len(), sc.total_sessions);
             if sc.closed_loop().is_none() {
@@ -707,6 +757,7 @@ mod tests {
             workflow: Some(WorkflowLoad::new(
                 WorkflowSpec::by_name("supervisor-worker").unwrap(),
             )),
+            chaos: None,
         };
         sc.validate().unwrap();
         let back = Scenario::from_value(&sc.to_value()).unwrap();
@@ -721,6 +772,22 @@ mod tests {
         // Populations and a DAG are mutually exclusive.
         sc.populations = vec![Population::new("react", WorkloadKind::ReAct, 1.0)];
         assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn failure_storm_carries_chaos_and_tool_faults() {
+        let sc = Scenario::by_name("failure-storm").unwrap();
+        let chaos = sc.chaos.as_ref().expect("failure-storm ships a chaos config");
+        assert!(chaos.is_active() && chaos.mtbf_us == 20_000_000);
+        let wf = sc.workflow.as_ref().expect("workflow carrier");
+        assert!(wf.effective_spec().has_tool_faults());
+        // Chaos config survives the JSON round trip.
+        let back = Scenario::from_value(&sc.to_value()).unwrap();
+        assert_eq!(back, sc);
+        // An invalid chaos config is rejected at scenario level.
+        let mut bad = sc.clone();
+        bad.chaos = Some(ChaosConfig { restart_us: 0, ..ChaosConfig::seeded(1_000_000) });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use super::scenario::{ArrivalProcess, Population, Scenario};
 use super::spec::WorkloadKind;
 use crate::cluster::FleetOutcome;
-use crate::config::{Config, KvConfig, RouterPolicy};
+use crate::config::{ChaosConfig, Config, KvConfig, RouterPolicy};
 use crate::engine::{run_scenario_fast, Policy, SimOutcome};
 use crate::util::json::Value;
 use crate::workflow::{WorkflowLoad, WorkflowSpec};
@@ -62,6 +62,17 @@ pub enum SweepAxis {
     /// fleet whose p99 TTFT *meets* the SLO ([`knee_value_fleet`]), i.e.
     /// "how many GPUs to hold the SLO at this rate".
     Replicas { counts: Vec<usize>, router: RouterPolicy },
+    /// Seeded replica-crash rate (expected crashes per replica per virtual
+    /// minute): each point runs the base scenario on a fixed
+    /// `replicas`-GPU fleet with [`ChaosConfig::seeded`] at the matching
+    /// MTBF (rate 0 = chaos off — the exact legacy fleet path). The
+    /// resilience axis: failure rate up, SLO attainment down; the knee is
+    /// the first rate whose p99 TTFT violates the SLO.
+    Chaos {
+        rates_per_min: Vec<f64>,
+        replicas: usize,
+        router: RouterPolicy,
+    },
 }
 
 impl SweepAxis {
@@ -74,6 +85,7 @@ impl SweepAxis {
             SweepAxis::KvBlocks(_) => "kv-blocks",
             SweepAxis::FanOut(_) => "fan-out",
             SweepAxis::Replicas { .. } => "replicas",
+            SweepAxis::Chaos { .. } => "chaos",
         }
     }
 
@@ -86,6 +98,7 @@ impl SweepAxis {
             SweepAxis::KvBlocks(_) => "blocks",
             SweepAxis::FanOut(_) => "degree",
             SweepAxis::Replicas { .. } => "GPUs",
+            SweepAxis::Chaos { .. } => "crashes/min",
         }
     }
 
@@ -98,6 +111,7 @@ impl SweepAxis {
             SweepAxis::KvBlocks(v) => v.len(),
             SweepAxis::FanOut(v) => v.len(),
             SweepAxis::Replicas { counts, .. } => counts.len(),
+            SweepAxis::Chaos { rates_per_min, .. } => rates_per_min.len(),
         }
     }
 
@@ -114,6 +128,7 @@ impl SweepAxis {
             SweepAxis::KvBlocks(v) => v[i] as f64,
             SweepAxis::FanOut(v) => v[i] as f64,
             SweepAxis::Replicas { counts, .. } => counts[i] as f64,
+            SweepAxis::Chaos { rates_per_min, .. } => rates_per_min[i],
         }
     }
 }
@@ -206,6 +221,15 @@ impl SweepSpec {
                     anyhow::ensure!(c >= 1, "replica count must be >= 1");
                 }
             }
+            SweepAxis::Chaos { rates_per_min, replicas, .. } => {
+                anyhow::ensure!(*replicas >= 1, "chaos sweep fleet needs >= 1 replica");
+                for &r in rates_per_min {
+                    anyhow::ensure!(
+                        r.is_finite() && r >= 0.0,
+                        "crash rate must be finite and >= 0 (got {r}; 0 = chaos off)"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -243,6 +267,18 @@ impl SweepSpec {
             // point replays the identical scenario bytes on a larger
             // cluster (run_sweep applies the count to run_cluster_fast).
             SweepAxis::Replicas { .. } => {}
+            SweepAxis::Chaos { rates_per_min, .. } => {
+                // rate crashes/replica/min -> seeded MTBF; rate 0 leaves an
+                // inert (or absent) config so the point runs the exact
+                // legacy fleet path. Scripted events in the base carry over.
+                let mut chaos = sc.chaos.clone().unwrap_or_else(|| ChaosConfig::seeded(0));
+                chaos.mtbf_us = if rates_per_min[i] > 0.0 {
+                    (60_000_000.0 / rates_per_min[i]) as u64
+                } else {
+                    0
+                };
+                sc.chaos = chaos.is_active().then_some(chaos);
+            }
         }
         sc
     }
@@ -273,6 +309,7 @@ impl SweepSpec {
                     n_agents: 2000,
                     kv: None,
                     workflow: None,
+                    chaos: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -294,6 +331,7 @@ impl SweepSpec {
                     n_agents: 250,
                     kv: None,
                     workflow: None,
+                    chaos: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -315,6 +353,7 @@ impl SweepSpec {
                     n_agents: 200,
                     kv: None,
                     workflow: None,
+                    chaos: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
             },
@@ -337,6 +376,7 @@ impl SweepSpec {
                         prefix_sharing: true,
                     }),
                     workflow: None,
+                    chaos: None,
                 },
                 axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
             },
@@ -360,6 +400,29 @@ impl SweepSpec {
                 axis: SweepAxis::FanOut(vec![2, 4, 8, 16]),
             },
             SweepSpec {
+                name: "chaos-resilience".into(),
+                description:
+                    "SLO attainment under seeded replica crashes: a 3-GPU open-loop ReAct \
+                     fleet swept across crash rate (0 = fault-free baseline)"
+                        .into(),
+                base: Scenario {
+                    name: "chaos-fleet".into(),
+                    description: "open-loop ReAct fleet; the sweep sets the crash rate".into(),
+                    arrivals: ArrivalProcess::Poisson { rate_per_s: 0.6 },
+                    populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                    total_sessions: 60,
+                    n_agents: 60,
+                    kv: None,
+                    workflow: None,
+                    chaos: None,
+                },
+                axis: SweepAxis::Chaos {
+                    rates_per_min: vec![0.0, 2.0, 6.0, 12.0],
+                    replicas: 3,
+                    router: RouterPolicy::LeastOutstanding,
+                },
+            },
+            SweepSpec {
                 name: "gpus-for-slo".into(),
                 description:
                     "the inverse knee: smallest fleet of consumer GPUs holding the TTFT SLO \
@@ -380,6 +443,7 @@ impl SweepSpec {
                     n_agents: 2000,
                     kv: None,
                     workflow: None,
+                    chaos: None,
                 },
                 axis: SweepAxis::Replicas {
                     counts: vec![1, 2, 4],
@@ -482,7 +546,8 @@ impl PolicyPoint {
             radix_hit_rate: r.radix_hit_rate(),
             evictions: r.evictions,
             preemptions: r.preemptions,
-            // The fleet stall column reports the worst replica's p99.
+            // Fleet-wide stall p99 from raw samples (not a max of
+            // per-replica p99s — percentiles do not compose).
             stall_p99_ms: r.stall_p99_ms,
             makespan_p99_ms,
             task_slo_rate,
@@ -750,6 +815,13 @@ pub fn run_sweep(
                         cfg, policy, &scenario, counts[i], *router, seed,
                     )?,
                 )),
+                // Chaos points run the scenario (with the point's seeded
+                // fault process applied) on a fixed-size fleet.
+                SweepAxis::Chaos { replicas, router, .. } => Ok(PolicyPoint::from_fleet(
+                    &crate::cluster::run_cluster_fast(
+                        cfg, policy, &scenario, *replicas, *router, seed,
+                    )?,
+                )),
                 _ => Ok(PolicyPoint::from_outcome(&run_scenario_fast(
                     cfg, policy, &scenario, seed,
                 ))),
@@ -770,6 +842,7 @@ pub fn run_sweep(
                 SweepAxis::KvBlocks(_) => knee_value_kv(&points, pi, cfg.slo.ttft_ms),
                 SweepAxis::FanOut(_) => knee_value_task(&points, pi, cfg.slo.task_ms),
                 SweepAxis::Replicas { .. } => knee_value_fleet(&points, pi, cfg.slo.ttft_ms),
+                // Chaos is a load-style axis: more faults, worse tails.
                 _ => knee_value(&points, pi, cfg.slo.ttft_ms),
             };
             (p.name().to_string(), knee)
@@ -1039,6 +1112,35 @@ mod tests {
         // Degree 0 is rejected.
         let mut bad = SweepSpec::by_name("fanout-knee").unwrap();
         bad.axis = SweepAxis::FanOut(vec![0, 2]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_axis_applies_the_seeded_fault_process() {
+        let spec = SweepSpec::by_name("chaos-resilience").unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.axis.kind_name(), "chaos");
+        // Rate 0 leaves the scenario chaos-free (legacy fleet path).
+        assert_eq!(spec.scenario_at(0).chaos, None);
+        // Rate 2/min -> 30 s MTBF, active seeded process.
+        let sc = spec.scenario_at(1);
+        let chaos = sc.chaos.expect("nonzero rate installs a chaos config");
+        assert_eq!(chaos.mtbf_us, 30_000_000);
+        assert!(chaos.is_active() && chaos.events.is_empty());
+        // Negative and non-finite rates are rejected; so is a 0-GPU fleet.
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::Chaos {
+            rates_per_min: vec![-1.0, 2.0],
+            replicas: 2,
+            router: RouterPolicy::RoundRobin,
+        };
+        assert!(bad.validate().is_err());
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::Chaos {
+            rates_per_min: vec![1.0],
+            replicas: 0,
+            router: RouterPolicy::RoundRobin,
+        };
         assert!(bad.validate().is_err());
     }
 

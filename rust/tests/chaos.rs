@@ -1,0 +1,207 @@
+//! Chaos-layer integration tests.
+//!
+//! The two contracts this suite locks:
+//! - **Zero-fault purity**: an absent *or inert* chaos config keeps the
+//!   fleet on the exact legacy code path — reports are byte-identical
+//!   under every router policy.
+//! - **Deterministic chaos**: with faults active (scripted, seeded, or
+//!   tool-level), reruns of the same `(config, seed)` are byte-identical,
+//!   sessions are never lost (crashed work is re-routed and recomputed),
+//!   and the scripted decode-token budget is conserved up to the tokens
+//!   the crash forced the fleet to redecode.
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::{
+    ChaosConfig, Config, FaultEvent, FaultKind, GpuKind, ModelKind, RouterPolicy,
+};
+use agentserve::engine::{run_scenario, Policy};
+use agentserve::workflow::{ToolFaultPolicy, WorkflowLoad, WorkflowSpec};
+use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
+
+fn cfg() -> Config {
+    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+}
+
+/// Scripted decode tokens of a non-workflow scenario (policy-independent).
+fn scripted_tokens(cfg: &Config, sc: &Scenario, seed: u64) -> u64 {
+    sc.instantiate(cfg.model.kind, seed).trace.total_decode_tokens()
+}
+
+#[test]
+fn inert_chaos_config_keeps_the_legacy_bytes_under_every_router() {
+    // `chaos: None` and an attached-but-inert config (no events, mtbf 0)
+    // must both take the legacy path: same report bytes, no chaos block.
+    let cfg = cfg();
+    let plain = Scenario::by_name("mixed-fleet").unwrap();
+    let inert = Scenario { chaos: Some(ChaosConfig::default()), ..plain.clone() };
+    for policy in [Policy::AgentServe(Default::default()), Policy::Vllm] {
+        for router in RouterPolicy::ALL {
+            let a = run_cluster_fast(&cfg, policy, &plain, 2, router, 7).unwrap();
+            let b = run_cluster_fast(&cfg, policy, &inert, 2, router, 7).unwrap();
+            let tag = format!("{}/{}", policy.name(), router);
+            assert!(a.report.chaos.is_none(), "{tag}: no chaos block without faults");
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{tag}: an inert chaos config must not perturb a single byte"
+            );
+        }
+    }
+}
+
+#[test]
+fn failure_storm_reruns_are_byte_identical() {
+    // The registry chaos scenario (seeded crashes + flaky tools) is a pure
+    // function of (config, seed): rerun → same bytes; new seed → new run.
+    let cfg = cfg();
+    let sc = Scenario::by_name("failure-storm").unwrap();
+    sc.validate().unwrap();
+    let policy = Policy::AgentServe(Default::default());
+    let a = run_cluster_fast(&cfg, policy, &sc, 3, RouterPolicy::CacheAware, 7).unwrap();
+    let b = run_cluster_fast(&cfg, policy, &sc, 3, RouterPolicy::CacheAware, 7).unwrap();
+    assert_eq!(
+        a.report.to_value().to_string(),
+        b.report.to_value().to_string(),
+        "same (scenario, seed) must serialize byte-identically"
+    );
+    let c = run_cluster_fast(&cfg, policy, &sc, 3, RouterPolicy::CacheAware, 8).unwrap();
+    assert_ne!(a.report.to_value().to_string(), c.report.to_value().to_string());
+    // Chaos counters are reported, and no session is ever lost: crashed
+    // work is re-routed and finishes elsewhere.
+    assert!(a.report.chaos.is_some(), "active chaos always reports its block");
+    assert_eq!(a.report.completed_sessions, a.report.sessions);
+    let wf = a.report.workflow.as_ref().expect("failure-storm carries a workflow");
+    assert_eq!(wf.tasks, 12);
+}
+
+#[test]
+fn scripted_crash_conserves_tokens_and_reroutes_sessions() {
+    // One crash at t=200ms on a 2-replica fleet: every session still
+    // completes, and the fleet emits exactly the scripted decode budget
+    // plus whatever the crash forced it to redecode.
+    let cfg = cfg();
+    let base = Scenario::by_name("mixed-fleet").unwrap();
+    let sc = Scenario {
+        chaos: Some(ChaosConfig {
+            events: vec![FaultEvent { at_us: 200_000, replica: 0, kind: FaultKind::Crash }],
+            mtbf_us: 0,
+            restart_us: 2_000_000,
+        }),
+        ..base
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::CacheAware] {
+        let out = run_cluster_fast(&cfg, Policy::Vllm, &sc, 2, router, 7).unwrap();
+        let chaos = out.report.chaos.expect("scripted crash reports chaos stats");
+        assert_eq!(chaos.crashes, 1, "{router}");
+        assert!(chaos.downtime_ms > 0.0, "{router}");
+        assert_eq!(
+            out.report.completed_sessions, out.report.sessions,
+            "{router}: crashed sessions must be re-routed, not dropped"
+        );
+        assert_eq!(
+            out.report.total_tokens,
+            expected + chaos.redecoded_tokens,
+            "{router}: decode tokens conserved up to crash-forced recompute"
+        );
+    }
+}
+
+#[test]
+fn graceful_drain_loses_no_work() {
+    // Drain replica 0 early, restore it later: nothing in flight is lost,
+    // so nothing is redecoded and the scripted budget is emitted exactly.
+    let cfg = cfg();
+    let sc = Scenario {
+        chaos: Some(ChaosConfig {
+            events: vec![
+                FaultEvent { at_us: 200_000, replica: 0, kind: FaultKind::Drain },
+                FaultEvent { at_us: 5_000_000, replica: 0, kind: FaultKind::Restore },
+            ],
+            mtbf_us: 0,
+            restart_us: 2_000_000,
+        }),
+        ..Scenario::by_name("mixed-fleet").unwrap()
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    let out = run_cluster_fast(&cfg, Policy::Vllm, &sc, 2, RouterPolicy::RoundRobin, 7).unwrap();
+    let chaos = out.report.chaos.expect("drain reports chaos stats");
+    assert_eq!(chaos.drains, 1);
+    assert_eq!(chaos.crashes, 0);
+    assert_eq!(chaos.redecoded_tokens, 0, "a drain finishes its queue; no recompute");
+    assert_eq!(out.report.completed_sessions, out.report.sessions);
+    assert_eq!(out.report.total_tokens, expected);
+}
+
+#[test]
+fn retry_exhaustion_fails_the_task_instead_of_hanging() {
+    // A near-certain tool failure with 2 attempts: the run must terminate,
+    // every session still completes (the delay propagates through the DAG),
+    // and the exhausted tasks are reported failed — excluded from task-SLO
+    // attainment rather than wedging the join barrier.
+    let cfg = cfg();
+    let mut load = WorkflowLoad::new(WorkflowSpec::by_name("supervisor-worker").unwrap());
+    load.tool_fault = Some(ToolFaultPolicy {
+        fail_prob: 0.999,
+        timeout_us: 1_000_000,
+        max_attempts: 2,
+        backoff_base_us: 100_000,
+    });
+    let sc = Scenario { name: "exhaust".into(), ..load.carrier(4, 1.0) };
+    sc.validate().unwrap();
+    let out = run_scenario(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    let wf = out.workflow.expect("workflow metrics present");
+    assert_eq!(out.report.completed_sessions, out.report.sessions, "no hang");
+    assert!(wf.failed_tasks > 0, "exhaustion must surface as failed tasks");
+    assert!(wf.tool_retries > 0);
+    assert!(wf.failed_tasks <= wf.tasks);
+
+    // The same load on a fleet reports the counters through the chaos
+    // block even with zero replica faults (tool faults alone gate it).
+    let fleet = run_cluster_fast(&cfg, Policy::Vllm, &sc, 2, RouterPolicy::RoundRobin, 7).unwrap();
+    let chaos = fleet.report.chaos.expect("tool faults alone report a chaos block");
+    assert_eq!(chaos.crashes, 0);
+    assert!(chaos.failed_tasks > 0);
+    assert!(chaos.tool_retries > 0);
+    assert_eq!(fleet.report.completed_sessions, fleet.report.sessions);
+}
+
+#[test]
+fn chaos_sweep_degrades_slo_attainment() {
+    // The resilience axis end-to-end: byte-deterministic reruns, and a
+    // violent crash rate (mtbf 2 s ~ the restart latency, so replicas are
+    // down half the time) cannot beat the fault-free baseline.
+    let cfg = cfg();
+    let spec = SweepSpec {
+        name: "chaos-test".into(),
+        description: String::new(),
+        base: Scenario::by_name("mixed-fleet").unwrap(),
+        axis: SweepAxis::Chaos {
+            rates_per_min: vec![0.0, 30.0],
+            replicas: 2,
+            router: RouterPolicy::RoundRobin,
+        },
+    };
+    spec.validate().unwrap();
+    let policies = [Policy::Vllm];
+    let report = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    let again = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(report.to_value().to_string(), again.to_value().to_string());
+    assert_eq!(report.axis, "chaos");
+    assert_eq!(report.points.len(), 2);
+    let baseline = &report.points[0].per_policy[0];
+    let stormy = &report.points[1].per_policy[0];
+    assert!(
+        stormy.slo_rate <= baseline.slo_rate,
+        "crashing half the fleet's uptime away must not improve SLO attainment \
+         ({} vs baseline {})",
+        stormy.slo_rate,
+        baseline.slo_rate
+    );
+    assert!(
+        stormy.ttft_p99 >= baseline.ttft_p99,
+        "re-routed cold recomputes can only lengthen the TTFT tail"
+    );
+}

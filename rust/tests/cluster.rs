@@ -265,6 +265,7 @@ fn fleet_p99_ttft_is_nonincreasing_in_replica_count() {
         n_agents: 120,
         kv: None,
         workflow: None,
+        chaos: None,
     };
     let mut prev = f64::INFINITY;
     for replicas in [1, 2, 4] {
@@ -334,6 +335,7 @@ fn replica_sweep_finds_a_finite_inverse_knee() {
             n_agents: 100,
             kv: None,
             workflow: None,
+            chaos: None,
         },
         axis: SweepAxis::Replicas {
             counts: vec![1, 2, 4, 8],

@@ -147,6 +147,7 @@ fn scaled_pressure_fleet() -> Scenario {
         n_agents: 300,
         kv: Some(KvConfig { num_blocks: 1024, block_size: 16, prefix_sharing: true }),
         workflow: None,
+        chaos: None,
     }
 }
 
@@ -256,6 +257,7 @@ fn kv_blocks_sweep_detects_a_memory_knee() {
             n_agents: 20,
             kv: None,
             workflow: None,
+            chaos: None,
         },
         axis: SweepAxis::KvBlocks(vec![640, 262_144]),
     };

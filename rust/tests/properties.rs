@@ -286,6 +286,7 @@ mod arrivals {
             n_agents: 4,
             kv: None,
             workflow: None,
+            chaos: None,
         }
     }
 

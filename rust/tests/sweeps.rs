@@ -25,6 +25,7 @@ fn small_open_loop(sessions: usize) -> Scenario {
         n_agents: sessions,
         kv: None,
         workflow: None,
+        chaos: None,
     }
 }
 

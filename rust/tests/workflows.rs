@@ -61,6 +61,7 @@ fn degenerate_single_react_matches_legacy_byte_identically() {
         n_agents: tasks,
         kv: None,
         workflow: None,
+        chaos: None,
     };
     for policy in Policy::paper_lineup() {
         let a = run_scenario(&cfg, policy, &wf, 7);
