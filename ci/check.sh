@@ -136,5 +136,24 @@ cargo run --release --bin agentserve -- \
 [ -s "$tmp/chaos.json" ] && [ -s "$tmp/chaos.csv" ]
 grep -q '"axis": "chaos"' "$tmp/chaos.json"
 
+step "Autoscale smoke (diurnal-burst control plane, rerun-stable)"
+cargo run --release --bin agentserve -- \
+    cluster run --name diurnal-burst --autoscale --min-replicas 1 \
+    --max-replicas 4 --model 3b > "$tmp/auto1.txt"
+cargo run --release --bin agentserve -- \
+    cluster run --name diurnal-burst --autoscale --min-replicas 1 \
+    --max-replicas 4 --model 3b > "$tmp/auto2.txt"
+# The control loop is deterministic: two invocations, identical bytes out.
+cmp "$tmp/auto1.txt" "$tmp/auto2.txt"
+grep -q 'autoscale' "$tmp/auto1.txt"
+
+step "Autoscale frontier sweep smoke (3-point up-thresh grid, cost column)"
+cargo run --release --bin agentserve -- \
+    cluster sweep --name autoscale-frontier --policy agentserve --model 3b \
+    --out "$tmp/frontier.json" --csv "$tmp/frontier.csv"
+[ -s "$tmp/frontier.json" ] && [ -s "$tmp/frontier.csv" ]
+grep -q '"axis": "autoscale"' "$tmp/frontier.json"
+grep -q 'replica_us' "$tmp/frontier.csv"
+
 echo ""
 echo "ci/check.sh: all green"

@@ -61,5 +61,23 @@ fn main() -> anyhow::Result<()> {
             .total_tokens
         });
     }
+
+    // Control-plane overhead: the diurnal-burst demo with its carried
+    // [1, 4] autoscale band, started at the floor — tick cadence, load
+    // probes, boots and drains all ride the merge loop.
+    let diurnal = agentserve::workload::Scenario::by_name("diurnal-burst").expect("registry");
+    b.case("autoscale_diurnal_burst_band_1_4", || {
+        run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            &diurnal,
+            1,
+            RouterPolicy::LeastOutstanding,
+            7,
+        )
+        .expect("fleet runs")
+        .report
+        .total_tokens
+    });
     Ok(())
 }

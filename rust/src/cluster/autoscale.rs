@@ -1,0 +1,301 @@
+//! Deterministic fleet autoscaler: the control plane over the replica
+//! fleet ([`super::fleet`]).
+//!
+//! The fleet loop calls [`Autoscaler::tick`] at every control instant on
+//! the virtual clock (the tick source loses timestamp ties to chaos events
+//! and arrivals — see the merge-order contract in `fleet.rs`). Each tick
+//! smooths the fleet's mean per-replica pressure
+//! ([`crate::engine::ReplicaLoad::pressure`]) with an EWMA and applies
+//! hysteresis: the smoothed signal must hold past a threshold for
+//! `sustain_ticks` consecutive ticks before the controller acts, scale-down
+//! additionally waits out `cooldown_us` since the last scale event, and no
+//! decision fires while a previously ordered boot is still cold. The
+//! controller is pure state-machine arithmetic — no RNG, no wall clock —
+//! so fleet size is a pure function of `(seed, scenario, config)`.
+//!
+//! [`SizeTracker`] integrates fleet size over virtual time for the cost
+//! side of the cost-vs-SLO frontier: `replica_us` (the GPU-time integral
+//! Σ size × dt) and a time-at-each-size histogram, both surfaced in
+//! [`crate::metrics::AutoscaleStats`].
+
+use crate::config::AutoscaleConfig;
+
+/// EWMA smoothing factor for the load signal (weight of the newest
+/// sample). 0.5 keeps ~two ticks of memory — enough to ride out a single
+/// quiet tick inside a burst without delaying real phase shifts.
+const EWMA_ALPHA: f64 = 0.5;
+
+/// What the controller ordered at one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Hold the current size.
+    Hold,
+    /// Boot one replica (cold start: `boot_us` of model load, empty cache).
+    Up,
+    /// Drain one replica (it finishes placed work, then leaves the
+    /// accounting — no tokens are lost).
+    Down,
+}
+
+/// The hysteresis state machine. One instance per fleet run; the fleet
+/// loop owns the clock and calls [`Autoscaler::tick`] exactly at
+/// [`Autoscaler::next_tick_us`].
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    next_tick_us: u64,
+    /// Smoothed signal (`None` until the first tick seeds it).
+    ewma: Option<f64>,
+    ticks_above: u32,
+    ticks_below: u32,
+    /// Virtual time of the last scale order (0 = never — the run start
+    /// counts as the reference point, so an early scale-down still waits
+    /// out one full cooldown).
+    last_scale_us: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+}
+
+impl Autoscaler {
+    /// `cfg` must be active and validated (the fleet loop checks).
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        debug_assert!(cfg.is_active());
+        let first = cfg.interval_us;
+        Self {
+            cfg,
+            next_tick_us: first,
+            ewma: None,
+            ticks_above: 0,
+            ticks_below: 0,
+            last_scale_us: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+        }
+    }
+
+    /// Virtual instant of the next control tick.
+    pub fn next_tick_us(&self) -> u64 {
+        self.next_tick_us
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Scale orders issued so far, as `(ups, downs)`.
+    pub fn events(&self) -> (u64, u64) {
+        (self.scale_ups, self.scale_downs)
+    }
+
+    /// Current smoothed signal (for diagnostics; `None` before any tick).
+    pub fn smoothed(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// One control tick at virtual time `now` (must equal
+    /// [`Self::next_tick_us`]). `signal` is the mean serving-replica
+    /// pressure, `size` the current accounted fleet size, `booting` the
+    /// number of ordered-but-cold replicas.
+    pub fn tick(&mut self, now: u64, signal: f64, size: usize, booting: usize) -> ScaleDecision {
+        debug_assert_eq!(now, self.next_tick_us);
+        self.next_tick_us = now + self.cfg.interval_us;
+        let prev = self.ewma.unwrap_or(signal);
+        let smoothed = EWMA_ALPHA * signal + (1.0 - EWMA_ALPHA) * prev;
+        self.ewma = Some(smoothed);
+        if smoothed > self.cfg.up_thresh {
+            self.ticks_above += 1;
+        } else {
+            self.ticks_above = 0;
+        }
+        if smoothed < self.cfg.down_thresh {
+            self.ticks_below += 1;
+        } else {
+            self.ticks_below = 0;
+        }
+        // Never stack decisions on a cold boot: the new replica has not
+        // absorbed any load yet, so acting again would double-count the
+        // pressure that ordered it. Sustain restarts once the boot lands.
+        if booting > 0 {
+            self.ticks_above = 0;
+            self.ticks_below = 0;
+            return ScaleDecision::Hold;
+        }
+        if self.ticks_above >= self.cfg.sustain_ticks && size < self.cfg.max_replicas {
+            self.ticks_above = 0;
+            self.ticks_below = 0;
+            self.last_scale_us = now;
+            self.scale_ups += 1;
+            return ScaleDecision::Up;
+        }
+        let cooled = now.saturating_sub(self.last_scale_us) >= self.cfg.cooldown_us;
+        if self.ticks_below >= self.cfg.sustain_ticks && size > self.cfg.min_replicas && cooled {
+            self.ticks_above = 0;
+            self.ticks_below = 0;
+            self.last_scale_us = now;
+            self.scale_downs += 1;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Integrates fleet size over virtual time: the GPU-cost side of the
+/// cost-vs-SLO frontier. A replica counts from the instant its boot is
+/// ordered (the GPU is held from then on) until it actually leaves — for a
+/// drain, the instant the fleet observes it idle.
+#[derive(Debug, Clone)]
+pub struct SizeTracker {
+    last_us: u64,
+    size: usize,
+    /// Σ size × dt (replica-microseconds).
+    replica_us: u64,
+    /// Virtual time spent at each fleet size (`at_size_us[k]` = time at
+    /// size `k`; index 0 stays 0 for a live fleet).
+    at_size_us: Vec<u64>,
+}
+
+impl SizeTracker {
+    pub fn new(initial_size: usize) -> Self {
+        Self {
+            last_us: 0,
+            size: initial_size,
+            replica_us: 0,
+            at_size_us: vec![0; initial_size + 1],
+        }
+    }
+
+    /// Account elapsed time at the current size up to `now`. Idempotent at
+    /// one instant; `now` earlier than the last accounting is a no-op
+    /// (saturating — replica completions can be observed out of order
+    /// across the merge).
+    pub fn advance(&mut self, now: u64) {
+        let dt = now.saturating_sub(self.last_us);
+        if dt == 0 {
+            return;
+        }
+        self.replica_us += self.size as u64 * dt;
+        if self.size >= self.at_size_us.len() {
+            self.at_size_us.resize(self.size + 1, 0);
+        }
+        self.at_size_us[self.size] += dt;
+        self.last_us = self.last_us.max(now);
+    }
+
+    /// Account up to `now`, then change the fleet size.
+    pub fn set_size(&mut self, now: u64, size: usize) {
+        self.advance(now);
+        self.size = size;
+        if size >= self.at_size_us.len() {
+            self.at_size_us.resize(size + 1, 0);
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Finalize at `end_us` and read out `(replica_us, at_size_us)`.
+    pub fn finish(mut self, end_us: u64) -> (u64, Vec<u64>) {
+        self.advance(end_us);
+        (self.replica_us, self.at_size_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            interval_us: 100,
+            min_replicas: 1,
+            max_replicas: 3,
+            up_thresh: 2.0,
+            down_thresh: 0.5,
+            sustain_ticks: 2,
+            cooldown_us: 300,
+            boot_us: 50,
+        }
+    }
+
+    #[test]
+    fn scale_up_needs_sustained_pressure() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.next_tick_us(), 100);
+        // One hot tick is not enough (sustain_ticks = 2).
+        assert_eq!(a.tick(100, 10.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(200, 10.0, 1, 0), ScaleDecision::Up);
+        assert_eq!(a.events(), (1, 0));
+        // Counters reset after the order: the next hot tick starts over.
+        assert_eq!(a.tick(300, 10.0, 2, 1), ScaleDecision::Hold, "boot pending");
+        assert_eq!(a.tick(400, 10.0, 2, 0), ScaleDecision::Hold, "sustain restarts");
+        assert_eq!(a.tick(500, 10.0, 2, 0), ScaleDecision::Up);
+        // At max size the controller holds no matter the pressure.
+        assert_eq!(a.tick(600, 10.0, 3, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(700, 10.0, 3, 0), ScaleDecision::Hold);
+        assert_eq!(a.events(), (2, 0));
+    }
+
+    #[test]
+    fn ewma_debounces_single_tick_spikes() {
+        let mut a = Autoscaler::new(cfg());
+        // A lone spike between idle ticks never sustains past the
+        // threshold: ewma(0, 10, 0, ...) crosses once, then falls back.
+        assert_eq!(a.tick(100, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(200, 10.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(300, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(400, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.events(), (0, 0));
+    }
+
+    #[test]
+    fn scale_down_waits_out_cooldown_and_floor() {
+        let mut a = Autoscaler::new(cfg());
+        // Idle from the start: sustain is met at t=200 but cooldown (300 us
+        // from t=0) holds the order until t=300.
+        assert_eq!(a.tick(100, 0.0, 2, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(200, 0.0, 2, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(300, 0.0, 2, 0), ScaleDecision::Down);
+        assert_eq!(a.events(), (0, 1));
+        // At the floor the controller never drains below min_replicas.
+        assert_eq!(a.tick(400, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(500, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.tick(600, 0.0, 1, 0), ScaleDecision::Hold);
+        assert_eq!(a.events(), (0, 1));
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let run = || {
+            let mut a = Autoscaler::new(cfg());
+            let signals = [0.0, 5.0, 5.0, 5.0, 0.2, 0.0, 0.0, 0.0, 0.0];
+            let mut size = 1usize;
+            let mut orders = Vec::new();
+            for (i, &s) in signals.iter().enumerate() {
+                let t = 100 * (i as u64 + 1);
+                let d = a.tick(t, s, size, 0);
+                match d {
+                    ScaleDecision::Up => size += 1,
+                    ScaleDecision::Down => size -= 1,
+                    ScaleDecision::Hold => {}
+                }
+                orders.push((t, d, size));
+            }
+            orders
+        };
+        assert_eq!(run(), run(), "same inputs, same orders");
+    }
+
+    #[test]
+    fn size_tracker_integrates_exactly() {
+        let mut t = SizeTracker::new(1);
+        t.set_size(100, 2); // 100 us at size 1
+        t.set_size(300, 1); // 200 us at size 2
+        t.advance(250); // stale advance: no-op (250 < 300)
+        let (replica_us, hist) = t.finish(600); // 300 us at size 1
+        assert_eq!(replica_us, 100 + 2 * 200 + 300);
+        assert_eq!(hist[1], 400);
+        assert_eq!(hist[2], 200);
+        assert_eq!(hist.iter().sum::<u64>(), 600, "histogram covers the run");
+    }
+}

@@ -1,7 +1,7 @@
 //! The fleet loop: N replica simulators on one shared virtual clock behind
 //! a session router.
 //!
-//! A fleet run is a deterministic merge of up to four event sources:
+//! A fleet run is a deterministic merge of up to five event sources:
 //!
 //! 1. **Fleet arrivals** — the scenario's arrival plan, plus arrivals the
 //!    run itself creates: closed-loop agents chain their next session
@@ -27,6 +27,20 @@
 //!    restart boots a cold replacement after the model-load latency. Chaos
 //!    events win exact-time ties against arrivals and replica events, so a
 //!    same-microsecond arrival is routed *around* the dying replica.
+//! 5. **Control ticks** — the autoscaler ([`super::Autoscaler`],
+//!    [`crate::config::AutoscaleConfig`]) ticks every `interval_us` of
+//!    virtual time, reads the serving replicas' mean
+//!    [`crate::engine::ReplicaLoad::pressure`], and may boot a replica
+//!    (cold start via [`SimDriver::new_fast_boot_at`]: model-load latency,
+//!    empty radix cache) or drain one (it finishes its placed work, then
+//!    leaves the GPU-time accounting — no tokens are lost). At equal
+//!    timestamps the tie order is chaos > arrival > control tick > replica
+//!    event: faults preempt everything, a same-microsecond arrival is
+//!    routed on the pre-tick fleet, and a scale order lands before the
+//!    replicas' own events at that instant. The seeded chaos crash process
+//!    covers only the initial `n_replicas` — autoscale-booted replicas can
+//!    drain but never crash (scripted events are validated against the
+//!    initial fleet, and the per-replica crash streams are drawn at start).
 //!
 //! With one replica and an open-loop scenario this machinery collapses to
 //! exactly the batch event order, so `run_cluster(.., 1, ..)` reproduces
@@ -38,15 +52,19 @@
 //! an internal event on the exact microsecond (see
 //! `docs/ARCHITECTURE.md` § Fleet layer). With no chaos configured the
 //! fault machinery is skipped entirely and outputs stay byte-identical to
-//! the pre-chaos fleet.
+//! the pre-chaos fleet; with no (or an inert, or a never-triggering)
+//! autoscale config the control plane likewise leaves every byte of the
+//! static-fleet output unchanged (`rust/tests/properties.rs`).
 
+use super::autoscale::{Autoscaler, ScaleDecision, SizeTracker};
 use super::router::Router;
 use crate::config::{Config, FaultKind, RouterPolicy, CHAOS_STREAM};
 use crate::engine::sim::task_critical_paths_ms;
 use crate::engine::{CrashResume, DriverEvent, Policy, SimDriver, SimOutcome};
 use crate::gpusim::CostModel;
 use crate::metrics::{
-    load_cov, percentile, ChaosStats, FleetReport, SloReport, Summary, WorkflowReport,
+    load_cov, percentile, AutoscaleStats, ChaosStats, FleetReport, SloReport, Summary,
+    WorkflowReport,
 };
 use crate::util::rng::Rng;
 use crate::workflow::WorkflowPlan;
@@ -299,6 +317,29 @@ fn run_cluster_inner(
         Some(c) if c.is_active() => Some(ChaosState::new(c, n_replicas, seed)?),
         _ => None,
     };
+    // The control plane. `n_replicas` is the *initial* fleet size and must
+    // sit inside the autoscale band; an inert config leaves `scaler` None
+    // and every code path below identical to the static fleet.
+    let mut scaler = match &scenario.autoscale {
+        Some(a) if a.is_active() => {
+            a.validate()?;
+            anyhow::ensure!(
+                a.min_replicas <= n_replicas && n_replicas <= a.max_replicas,
+                "autoscale: initial fleet size {n_replicas} is outside the \
+                 [{}, {}] replica band",
+                a.min_replicas,
+                a.max_replicas
+            );
+            Some(Autoscaler::new(a.clone()))
+        }
+        _ => None,
+    };
+    let as_present = scaler.is_some();
+    // Max *stepped* timestamp is the wall clock whenever replicas can boot
+    // after the last real event (chaos restarts, autoscale cold boots): an
+    // idle late boot must not stretch the horizon. On a static fault-free
+    // fleet it equals the legacy max-over-`now_us`.
+    let track_wall = chaos_active || as_present;
 
     // -- 1) lower the scenario into scripts + the fleet arrival plan --------
     // `chain` = closed-loop chaining (stride, think time); `wf` = fleet-wide
@@ -411,6 +452,25 @@ fn run_cluster_inner(
     // not stretch the horizon the way the legacy max-over-now_us would).
     let mut wall_chaos: u64 = 0;
     let mut winding_down = false;
+
+    // -- autoscale bookkeeping ---------------------------------------------
+    // All three vecs grow when the controller boots a replica; with no
+    // controller they stay at their initial values and cost nothing.
+    // `serving[r]`: replica is part of the accounted fleet (false once the
+    // controller drains it — chaos restores must not revive it).
+    let mut serving = vec![true; n_replicas];
+    // Boot instant per replica: 0 for the initial fleet, `tick + boot_us`
+    // for controller-booted ones (ineligible for routing before then).
+    let mut boot_at = vec![0u64; n_replicas];
+    // Replica ordered down but still finishing placed work; it leaves the
+    // GPU-time accounting when the loop observes it idle.
+    let mut drain_pending = vec![false; n_replicas];
+    // GPU-time integral (replica-µs) + time-at-size histogram.
+    let mut tracker = SizeTracker::new(n_replicas);
+    // Scale events actually committed by the fleet (a Down order can find
+    // no drainable victim when chaos holds every serving replica down —
+    // the report counts what happened, not what was ordered).
+    let (mut as_ups, mut as_downs) = (0u64, 0u64);
 
     // -- 3) the lockstep merge loop ----------------------------------------
     loop {
@@ -531,6 +591,104 @@ fn run_cluster_inner(
                 }
             }
         }
+        // Control ticks run strictly between the other sources: they lose
+        // timestamp ties to chaos (handled above — chaos `continue`s before
+        // this point) and to arrivals (`<` against t_arr: a same-microsecond
+        // arrival routes on the pre-tick fleet), but win them against
+        // replica events (`<=` against t_rep: a scale order lands before
+        // the replicas' own events at that instant). Ticks only interleave
+        // with real pending work — once every session is done, or the run
+        // has stalled, the controller goes quiet so the loop can terminate.
+        if let Some(sc) = scaler.as_mut() {
+            if done_global < total && (t_arr.is_some() || t_rep.is_some()) {
+                let tt = sc.next_tick_us();
+                let beats_arr = t_arr.is_none_or(|ta| tt < ta);
+                let beats_rep = t_rep.is_none_or(|(tr, _)| tt <= tr);
+                if beats_arr && beats_rep {
+                    // Mean pressure over the replicas actually serving:
+                    // accounted, booted, and not downed/drained by chaos.
+                    // Ordered-but-cold boots count separately (`booting`)
+                    // so the controller never stacks decisions on them.
+                    let (mut sum, mut n_serve, mut booting) = (0.0, 0usize, 0usize);
+                    for r in 0..drivers.len() {
+                        if !serving[r] {
+                            continue;
+                        }
+                        if boot_at[r] > tt {
+                            booting += 1;
+                            continue;
+                        }
+                        if !up_mask[r] {
+                            continue;
+                        }
+                        sum += drivers[r].load().pressure();
+                        n_serve += 1;
+                    }
+                    let signal = sum / n_serve.max(1) as f64;
+                    match sc.tick(tt, signal, tracker.size(), booting) {
+                        ScaleDecision::Hold => {}
+                        ScaleDecision::Up => {
+                            // Cold start: the replica pays boot_us of model
+                            // load and joins with an empty radix cache. If
+                            // every session is already placed the boot is a
+                            // sunk cost (sessions never migrate) — it idles,
+                            // terminates immediately, and honestly shows up
+                            // in the GPU-time integral.
+                            let boot = tt + sc.config().boot_us;
+                            let mut d = SimDriver::new_fast_boot_at(&cfg, policy, boot);
+                            // A replica booted after the arrival stream is
+                            // exhausted can never receive work: close it out
+                            // immediately so termination never waits on it.
+                            // (all_done() is vacuously true on an empty
+                            // driver, so `finished` must stay false while
+                            // arrivals can still be routed here.)
+                            let terminal = (!chaos_active && injected == total) || winding_down;
+                            if terminal {
+                                d.set_no_more_arrivals();
+                            }
+                            finished.push(terminal);
+                            drivers.push(d);
+                            local2global.push(Vec::new());
+                            up_mask.push(true);
+                            serving.push(true);
+                            boot_at.push(boot);
+                            drain_pending.push(false);
+                            tracker.set_size(tt, tracker.size() + 1);
+                            as_ups += 1;
+                        }
+                        ScaleDecision::Down => {
+                            // Drain the newest serving replica (LIFO keeps
+                            // the initial fleet — and its chaos streams —
+                            // stable). It finishes everything already
+                            // placed, then leaves the accounting below.
+                            let victim = (0..drivers.len())
+                                .rev()
+                                .find(|&r| serving[r] && up_mask[r] && boot_at[r] <= tt);
+                            if let Some(r) = victim {
+                                serving[r] = false;
+                                // A replica leaving the fleet also leaves
+                                // the chaos process: disarm its seeded
+                                // stream and mark it Draining so a pending
+                                // restore cannot revive it into service.
+                                if let Some(ch) = chaos.as_mut() {
+                                    if r < ch.states.len() {
+                                        ch.states[r] = RepState::Draining;
+                                        ch.seeded_at[r] = None;
+                                    }
+                                }
+                                if drivers[r].all_done() {
+                                    tracker.set_size(tt, tracker.size() - 1);
+                                } else {
+                                    drain_pending[r] = true;
+                                }
+                                as_downs += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+            }
+        }
         // Arrivals win exact-time ties: injected arrivals sit in the low
         // sequence band of the replica heap, so the replica would order
         // them first anyway — the fleet must have routed them by then.
@@ -542,15 +700,37 @@ fn run_cluster_inner(
         };
         if take_arrival {
             let Reverse((t, _, g)) = queue.pop().expect("peeked above");
-            if chaos_active && !up_mask.iter().any(|&e| e) {
-                // Whole fleet down or draining: hold the arrival until the
-                // next revival instant (chaos wins that tie, so the replica
-                // is Up again before this arrival re-pops).
+            // Routing eligibility: chaos availability (`up_mask`) and —
+            // only when a controller is present — autoscale membership
+            // (`serving`) and boot completion. With no controller the mask
+            // *is* `up_mask`, bit-for-bit the legacy decision.
+            let elig_buf: Vec<bool>;
+            let elig: &[bool] = if as_present {
+                elig_buf = (0..drivers.len())
+                    .map(|r| up_mask[r] && serving[r] && boot_at[r] <= t)
+                    .collect();
+                &elig_buf
+            } else {
+                &up_mask
+            };
+            if (chaos_active || as_present) && !elig.iter().any(|&e| e) {
+                // Nothing can serve this arrival yet: hold it until the
+                // earliest instant a replica (re)enters service — a chaos
+                // restore (chaos wins that tie, so the replica is Up again
+                // before this arrival re-pops) or a pending cold boot.
                 let revival = chaos.as_ref().and_then(|c| c.earliest_revival());
-                let Some(tr) = revival else {
+                let boot = (0..drivers.len())
+                    .filter(|&r| serving[r] && up_mask[r] && boot_at[r] > t)
+                    .map(|r| boot_at[r])
+                    .min();
+                let tr = match (revival, boot) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                let Some(tr) = tr else {
                     anyhow::bail!(
-                        "fleet unroutable: every replica is down or draining at {t} us \
-                         with no restore pending"
+                        "fleet unroutable: every replica is down, draining, or drained \
+                         at {t} us with no restore or boot pending"
                     );
                 };
                 queue.push(Reverse((tr.max(t), fseq, g)));
@@ -574,7 +754,7 @@ fn run_cluster_inner(
             } else {
                 None
             };
-            let r = router.route(unit, prompt, &drivers, &up_mask);
+            let r = router.route(unit, prompt, &drivers, elig);
             // Still-closed join gates, translated into the (possibly
             // continuation) script's local step indices; gates before
             // `off[g]` belong to bursts already folded into the cold
@@ -613,7 +793,7 @@ fn run_cluster_inner(
             finished[r] = true;
             continue;
         }
-        if chaos_active {
+        if track_wall {
             wall_chaos = wall_chaos.max(drivers[r].now_us());
         }
         drivers[r].drain_events(&mut events);
@@ -676,6 +856,13 @@ fn run_cluster_inner(
                     }
                 }
             }
+        }
+        if drain_pending[r] && drivers[r].all_done() {
+            // The drained replica just went idle: every session placed on
+            // it finished (no work lost), and it leaves the GPU-time
+            // accounting at the instant of its final event.
+            drain_pending[r] = false;
+            tracker.set_size(drivers[r].now_us(), tracker.size() - 1);
         }
         if chaos_active {
             // Completion-count termination: every session done and no
@@ -748,11 +935,12 @@ fn run_cluster_inner(
     let stall_flat: Vec<f64> = harv_stalls.iter().flatten().copied().collect();
     let stall_p99_ms = percentile(&stall_flat, 99.0);
 
-    let wall_us = if chaos_active {
+    let wall_us = if track_wall {
         wall_chaos
     } else {
         drivers.iter().map(|d| d.now_us()).max().unwrap_or(0)
     };
+    let n_final = drivers.len();
     let per_replica: Vec<SimOutcome> = drivers.into_iter().map(|d| d.finish()).collect();
 
     // Counters sum over the surviving replicas *and* the crashed
@@ -809,10 +997,26 @@ fn run_cluster_inner(
         failed_tasks: wf_failed_tasks,
         ..chaos.map(|c| c.stats).unwrap_or_default()
     });
+    // Reported only when the controller actually acted: a configured but
+    // never-triggering autoscaler leaves the report byte-identical to the
+    // static fleet (the disabled ≡ absent contract, locked in
+    // rust/tests/properties.rs).
+    let autoscale_report = (as_ups + as_downs > 0).then(|| {
+        let final_replicas = tracker.size();
+        let (replica_us, time_at_size_us) = tracker.finish(wall_us);
+        AutoscaleStats {
+            scale_ups: as_ups,
+            scale_downs: as_downs,
+            peak_replicas: time_at_size_us.len() - 1,
+            final_replicas,
+            replica_us,
+            time_at_size_us,
+        }
+    });
     let wall_ms = wall_us as f64 / 1000.0;
     let wall_s = (wall_ms / 1000.0).max(1e-9);
     let report = FleetReport {
-        replicas: n_replicas,
+        replicas: n_final,
         router: router_policy.name().to_string(),
         sessions: total,
         completed_sessions: completed,
@@ -834,11 +1038,12 @@ fn run_cluster_inner(
         kv_present: cfg.kv.is_paged(),
         workflow,
         chaos: chaos_report,
+        autoscale: autoscale_report,
     };
     Ok(FleetOutcome {
         policy_name: policy.name().to_string(),
         router: router_policy,
-        replicas: n_replicas,
+        replicas: n_final,
         report,
         per_replica,
         placements,

@@ -24,6 +24,11 @@
 //!   `gpus-for-slo` registry sweep (`rust/src/workload/sweep.rs`) answer
 //!   the inverse-knee question: the smallest fleet meeting the TTFT SLO at
 //!   a fixed arrival rate.
+//! - **Control plane** — a deterministic autoscaler ([`Autoscaler`])
+//!   ticking on the virtual clock: EWMA-smoothed fleet pressure,
+//!   hysteresis with sustain and cooldown, cold boots on scale-up, drains
+//!   on scale-down ([`crate::config::AutoscaleConfig`]; the `autoscale`
+//!   sweep axis maps the cost-vs-SLO frontier).
 //!
 //! CLI: `agentserve cluster list|run|sweep`. Determinism: one
 //! `(config, scenario, policy, router, replicas, seed)` tuple fixes every
@@ -31,8 +36,10 @@
 //! `scenario run` byte-for-byte under every router
 //! (`rust/tests/cluster.rs`).
 
+mod autoscale;
 mod fleet;
 mod router;
 
 pub use crate::config::RouterPolicy;
+pub use autoscale::{Autoscaler, ScaleDecision, SizeTracker};
 pub use fleet::{run_cluster, run_cluster_fast, FleetOutcome};

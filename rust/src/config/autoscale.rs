@@ -1,0 +1,234 @@
+//! Autoscale configuration: the deterministic fleet control plane
+//! (`crate::cluster::autoscale`).
+//!
+//! The controller ticks on the fleet's virtual clock every `interval_us`,
+//! smooths a per-replica load signal (queue depth + decode streams +
+//! outstanding work) with an EWMA, and scales the fleet between
+//! `min_replicas` and `max_replicas` with hysteresis: scale-up fires after
+//! the smoothed signal stays above `up_thresh` for `sustain_ticks`
+//! consecutive ticks, scale-down after it stays below `down_thresh` as
+//! long *and* `cooldown_us` has elapsed since the last scale event. New
+//! replicas pay a cold boot (`boot_us` of model load, empty radix cache);
+//! removed replicas drain — they finish everything already placed on them
+//! before leaving the accounting, so no work is ever lost.
+//!
+//! Every decision is a pure function of `(config, scenario, seed)` on the
+//! virtual clock, so autoscaled runs rerun byte-identically. The default
+//! (`interval_us = 0`) is inert: the fleet loop takes the exact legacy
+//! static-fleet code path and its outputs stay byte-identical (locked in
+//! `rust/tests/properties.rs`).
+
+use crate::util::json::Value;
+
+/// Deterministic fleet-autoscaling plan for one cluster run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Control-loop tick interval on the virtual clock (us). 0 = autoscaling
+    /// off (the inert default — exact legacy static-fleet path).
+    pub interval_us: u64,
+    /// Fleet size floor (also the initial size of an autoscaled fleet).
+    pub min_replicas: usize,
+    /// Fleet size ceiling.
+    pub max_replicas: usize,
+    /// Smoothed per-replica load above which the controller scales up.
+    pub up_thresh: f64,
+    /// Smoothed per-replica load below which the controller scales down
+    /// (must sit below `up_thresh` — the hysteresis band).
+    pub down_thresh: f64,
+    /// Consecutive ticks the signal must hold past a threshold before the
+    /// controller acts (debounces single-tick spikes).
+    pub sustain_ticks: u32,
+    /// Minimum virtual time between a scale event and the next scale-down
+    /// (prevents flapping around a threshold).
+    pub cooldown_us: u64,
+    /// Cold-start latency a new replica pays before serving (model load;
+    /// it boots with an empty radix cache).
+    pub boot_us: u64,
+}
+
+impl AutoscaleConfig {
+    /// Default cold-boot latency: ~2 s of model load on a consumer GPU
+    /// (matches [`super::ChaosConfig::DEFAULT_RESTART_US`]).
+    pub const DEFAULT_BOOT_US: u64 = 2_000_000;
+
+    /// An active controller over `[min, max]` replicas with the default
+    /// cadence: 500 ms ticks, a 2.0/0.5 hysteresis band, 2-tick sustain,
+    /// 5 s cooldown, 2 s cold boot.
+    pub fn banded(min_replicas: usize, max_replicas: usize) -> Self {
+        Self {
+            interval_us: 500_000,
+            min_replicas,
+            max_replicas,
+            up_thresh: 2.0,
+            down_thresh: 0.5,
+            sustain_ticks: 2,
+            cooldown_us: 5_000_000,
+            boot_us: Self::DEFAULT_BOOT_US,
+        }
+    }
+
+    /// An inert config never ticks: the fleet loop takes the exact legacy
+    /// static-fleet code path (byte-identical outputs).
+    pub fn is_active(&self) -> bool {
+        self.interval_us > 0
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.is_active() {
+            anyhow::ensure!(self.min_replicas >= 1, "autoscale.min_replicas must be >= 1");
+            anyhow::ensure!(
+                self.max_replicas >= self.min_replicas,
+                "autoscale.max_replicas ({}) must be >= min_replicas ({})",
+                self.max_replicas,
+                self.min_replicas
+            );
+            anyhow::ensure!(
+                self.up_thresh.is_finite() && self.up_thresh > 0.0,
+                "autoscale.up_thresh must be finite and > 0 (got {})",
+                self.up_thresh
+            );
+            anyhow::ensure!(
+                self.down_thresh.is_finite()
+                    && self.down_thresh >= 0.0
+                    && self.down_thresh < self.up_thresh,
+                "autoscale.down_thresh ({}) must satisfy 0 <= down < up ({}) — \
+                 the hysteresis band must be non-empty",
+                self.down_thresh,
+                self.up_thresh
+            );
+            anyhow::ensure!(
+                self.sustain_ticks >= 1,
+                "autoscale.sustain_ticks must be >= 1"
+            );
+            anyhow::ensure!(
+                self.boot_us >= 1,
+                "autoscale.boot_us must be >= 1 us when active (a zero-latency \
+                 boot would alias the scale decision and the first route on \
+                 one timestamp)"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("interval_us", self.interval_us.into()),
+            ("min_replicas", self.min_replicas.into()),
+            ("max_replicas", self.max_replicas.into()),
+            ("up_thresh", self.up_thresh.into()),
+            ("down_thresh", self.down_thresh.into()),
+            ("sustain_ticks", self.sustain_ticks.into()),
+            ("cooldown_us", self.cooldown_us.into()),
+            ("boot_us", self.boot_us.into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            interval_us: v.get("interval_us").and_then(|x| x.as_u64()).unwrap_or(d.interval_us),
+            min_replicas: v
+                .get("min_replicas")
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .unwrap_or(d.min_replicas),
+            max_replicas: v
+                .get("max_replicas")
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .unwrap_or(d.max_replicas),
+            up_thresh: v.get("up_thresh").and_then(|x| x.as_f64()).unwrap_or(d.up_thresh),
+            down_thresh: v.get("down_thresh").and_then(|x| x.as_f64()).unwrap_or(d.down_thresh),
+            sustain_ticks: v
+                .get("sustain_ticks")
+                .and_then(|x| x.as_u64())
+                .map(|x| x as u32)
+                .unwrap_or(d.sustain_ticks),
+            cooldown_us: v.get("cooldown_us").and_then(|x| x.as_u64()).unwrap_or(d.cooldown_us),
+            boot_us: v.get("boot_us").and_then(|x| x.as_u64()).unwrap_or(d.boot_us),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl Default for AutoscaleConfig {
+    /// Inert: never ticks (legacy static-fleet path), sensible band values
+    /// so flipping `interval_us` on alone yields a working controller.
+    fn default() -> Self {
+        Self { interval_us: 0, ..Self::banded(1, 4) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let c = AutoscaleConfig::default();
+        assert!(!c.is_active());
+        c.validate().unwrap();
+        // Inert configs skip field validation entirely (like ChaosConfig).
+        let weird = AutoscaleConfig { max_replicas: 0, ..AutoscaleConfig::default() };
+        weird.validate().unwrap();
+    }
+
+    #[test]
+    fn banded_is_active_and_valid() {
+        let c = AutoscaleConfig::banded(1, 4);
+        assert!(c.is_active());
+        c.validate().unwrap();
+        assert_eq!(c.min_replicas, 1);
+        assert_eq!(c.max_replicas, 4);
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let c = AutoscaleConfig {
+            interval_us: 250_000,
+            min_replicas: 2,
+            max_replicas: 6,
+            up_thresh: 3.5,
+            down_thresh: 1.0,
+            sustain_ticks: 3,
+            cooldown_us: 8_000_000,
+            boot_us: 1_500_000,
+        };
+        let back =
+            AutoscaleConfig::from_value(&crate::util::json::parse(&c.to_value().to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn invalid_bands_rejected_when_active() {
+        let mut c = AutoscaleConfig::banded(3, 2);
+        assert!(c.validate().is_err(), "max < min");
+        c = AutoscaleConfig::banded(0, 2);
+        assert!(c.validate().is_err(), "zero min");
+        c = AutoscaleConfig::banded(1, 4);
+        c.down_thresh = c.up_thresh;
+        assert!(c.validate().is_err(), "empty hysteresis band");
+        c = AutoscaleConfig::banded(1, 4);
+        c.up_thresh = f64::INFINITY;
+        assert!(c.validate().is_err(), "non-finite up_thresh");
+        c = AutoscaleConfig::banded(1, 4);
+        c.sustain_ticks = 0;
+        assert!(c.validate().is_err(), "zero sustain");
+        c = AutoscaleConfig::banded(1, 4);
+        c.boot_us = 0;
+        assert!(c.validate().is_err(), "zero boot latency");
+    }
+
+    #[test]
+    fn from_value_fills_defaults() {
+        let v = crate::util::json::parse(r#"{"interval_us": 500000, "max_replicas": 8}"#).unwrap();
+        let c = AutoscaleConfig::from_value(&v).unwrap();
+        assert!(c.is_active());
+        assert_eq!(c.max_replicas, 8);
+        assert_eq!(c.min_replicas, 1, "unset fields take defaults");
+        assert_eq!(c.boot_us, AutoscaleConfig::DEFAULT_BOOT_US);
+    }
+}

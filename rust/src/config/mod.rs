@@ -6,6 +6,7 @@
 //! Configs load from JSON files (`--config path`, via the in-tree parser)
 //! with built-in presets matching the paper's setup (§IV-A).
 
+mod autoscale;
 mod chaos;
 mod cluster;
 mod gpu;
@@ -14,6 +15,7 @@ mod model;
 mod scheduler;
 mod slo;
 
+pub use autoscale::AutoscaleConfig;
 pub use chaos::{ChaosConfig, FaultEvent, FaultKind, CHAOS_STREAM};
 pub use cluster::{ClusterConfig, RouterPolicy};
 pub use gpu::{GpuProfile, GpuKind};

@@ -389,6 +389,21 @@ pub struct ReplicaLoad {
     pub kv_used_tokens: u64,
 }
 
+impl ReplicaLoad {
+    /// Scalar congestion signal for the autoscale control plane
+    /// ([`crate::cluster`]): queued prefills plus live decode streams plus
+    /// outstanding scripted work normalized to ~one worst-case session
+    /// (8,192 tokens). An idle replica scores 0; a replica with a deep
+    /// queue or heavy backlog scores well above 1 per busy session. Pure
+    /// arithmetic over the O(1) load reads, so the controller stays
+    /// deterministic.
+    pub fn pressure(&self) -> f64 {
+        self.queue_depth as f64
+            + self.decode_streams as f64
+            + self.outstanding_tokens as f64 / 8192.0
+    }
+}
+
 /// Driver-mode orchestration state: the fleet loop owns arrivals, chaining,
 /// and workflow dependency gates; the replica reports burst/session
 /// completions upward instead of resolving them locally. `None` on every

@@ -67,6 +67,58 @@ impl std::fmt::Display for ChaosStats {
     }
 }
 
+/// Autoscale control-plane counters of one fleet run: scale events and the
+/// GPU-time cost they bought. Present on [`FleetReport`] only when an
+/// active autoscaler was configured, so static-fleet outputs stay
+/// byte-identical to the legacy report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AutoscaleStats {
+    /// Replicas booted by the controller.
+    pub scale_ups: u64,
+    /// Replicas drained out by the controller.
+    pub scale_downs: u64,
+    /// Largest fleet size reached.
+    pub peak_replicas: usize,
+    /// Fleet size when the run ended.
+    pub final_replicas: usize,
+    /// GPU-time integral Σ size × dt over the run (replica-microseconds) —
+    /// the cost axis of the cost-vs-SLO frontier.
+    pub replica_us: u64,
+    /// Virtual time spent at each fleet size (`time_at_size_us[k]` = µs at
+    /// size `k`).
+    pub time_at_size_us: Vec<u64>,
+}
+
+impl AutoscaleStats {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("scale_ups", self.scale_ups.into()),
+            ("scale_downs", self.scale_downs.into()),
+            ("peak_replicas", self.peak_replicas.into()),
+            ("final_replicas", self.final_replicas.into()),
+            ("replica_us", self.replica_us.into()),
+            (
+                "time_at_size_us",
+                Value::Arr(self.time_at_size_us.iter().map(|&t| t.into()).collect()),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for AutoscaleStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ups {} downs | peak {} final {} | gpu-time {:.1} replica-s",
+            self.scale_ups,
+            self.scale_downs,
+            self.peak_replicas,
+            self.final_replicas,
+            self.replica_us as f64 / 1e6
+        )
+    }
+}
+
 /// Aggregated results of one fleet run ([`crate::cluster::run_cluster`]).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -118,6 +170,9 @@ pub struct FleetReport {
     /// Chaos-layer counters; None when no fault injection was configured
     /// (keeps fault-free JSON byte-identical to the legacy form).
     pub chaos: Option<ChaosStats>,
+    /// Autoscale control-plane counters; None on static fleets (keeps
+    /// static-fleet JSON byte-identical to the legacy form).
+    pub autoscale: Option<AutoscaleStats>,
 }
 
 /// Population coefficient of variation of per-replica token counts.
@@ -198,6 +253,9 @@ impl FleetReport {
         if let Some(c) = &self.chaos {
             fields.push(("chaos", c.to_value()));
         }
+        if let Some(a) = &self.autoscale {
+            fields.push(("autoscale", a.to_value()));
+        }
         Value::obj(fields)
     }
 }
@@ -251,6 +309,9 @@ impl std::fmt::Display for FleetReport {
         if let Some(c) = &self.chaos {
             write!(f, "\n  chaos {c}")?;
         }
+        if let Some(a) = &self.autoscale {
+            write!(f, "\n  scale {a}")?;
+        }
         Ok(())
     }
 }
@@ -284,6 +345,7 @@ mod tests {
             kv_present: true,
             workflow: None,
             chaos: None,
+            autoscale: None,
         }
     }
 
@@ -338,5 +400,27 @@ mod tests {
         let text = format!("{chaotic}");
         assert!(text.contains("2 crashes 1 drains"));
         assert!(text.contains("3 rerouted"));
+    }
+
+    #[test]
+    fn autoscale_counters_are_gated() {
+        let fixed = report(vec![50, 50]);
+        assert!(!fixed.to_value().to_string().contains("\"autoscale\""));
+        let mut scaled = report(vec![50, 50]);
+        scaled.autoscale = Some(AutoscaleStats {
+            scale_ups: 3,
+            scale_downs: 2,
+            peak_replicas: 4,
+            final_replicas: 2,
+            replica_us: 12_000_000,
+            time_at_size_us: vec![0, 4_000_000, 2_000_000, 0, 1_500_000],
+        });
+        let v = scaled.to_value().to_string();
+        assert!(v.contains("\"autoscale\""));
+        assert!(v.contains("\"replica_us\":12000000"));
+        assert!(v.contains("\"time_at_size_us\""));
+        let text = format!("{scaled}");
+        assert!(text.contains("3 ups 2 downs"));
+        assert!(text.contains("gpu-time 12.0 replica-s"));
     }
 }

@@ -11,7 +11,7 @@ mod percentile;
 mod recorder;
 mod slo;
 
-pub use fleet::{load_cov, ChaosStats, FleetReport};
+pub use fleet::{load_cov, AutoscaleStats, ChaosStats, FleetReport};
 pub use percentile::{percentile, Summary};
 pub use recorder::{
     KvReport, MetricsRecorder, RunReport, SessionMetrics, TpotSample, WorkflowReport,

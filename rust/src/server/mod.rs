@@ -45,6 +45,7 @@ USAGE:
   agentserve cluster run     (--name S | --file f.json) [--replicas N] [--router R]
                              [--policy P | --all-policies] [--model M] [--gpu G]
                              [--seed N] [--per-replica]
+                             [--autoscale [--min-replicas N] [--max-replicas M]]
                              [--fail-rate R [--restart-ms MS]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve cluster sweep   (--name SWEEP | (--scenario S | --file f.json)
@@ -62,10 +63,11 @@ models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
            | memory-pressure | shared-prefix-fleet | failure-storm
+           | diurnal-burst
 sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee | fanout-knee
-           | gpus-for-slo | chaos-resilience (sweep runs all paper policies
-           unless --policy is given; see rust/src/workload/README.md for the
-           scenario/sweep file schema)
+           | gpus-for-slo | chaos-resilience | autoscale-frontier (sweep runs
+           all paper policies unless --policy is given; see
+           rust/src/workload/README.md for the scenario/sweep file schema)
 routers:   round-robin | least-outstanding | session-affinity | cache-aware
            — fleet session routing for `cluster run|sweep` (--replicas N
            single-GPU replicas behind the router; gpus-for-slo reports the
@@ -84,6 +86,14 @@ chaos:     `cluster run --fail-rate R` seeds replica crashes at R
            tool node fail each attempt with probability P (3 attempts,
            exponential backoff). All fault schedules are seeded and
            deterministic: reruns are byte-identical
+autoscale: `cluster run --autoscale` hands the fleet to a deterministic
+           control loop scaling between --min-replicas (default 1) and
+           --max-replicas (default 4) on the virtual clock: EWMA-smoothed
+           pressure, hysteresis, cold boots up, drains down. Conflicts
+           with --replicas (the controller owns the size, starting at the
+           band floor). `cluster sweep --name autoscale-frontier` maps the
+           cost-vs-SLO frontier (up-thresh 0 = static provisioned-for-peak
+           baseline; every row carries the replica_us GPU-time integral)
 ";
 
 /// Entry point used by `main` (and by CLI tests).
@@ -348,6 +358,15 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("run") => {
+            // Loud refusal over silent drop: the control plane scales a
+            // fleet, and `scenario run` has no fleet to scale.
+            for flag in ["autoscale", "min-replicas", "max-replicas"] {
+                anyhow::ensure!(
+                    !args.has(flag),
+                    "--{flag} drives the fleet control plane; single-GPU `scenario run` \
+                     has no fleet to scale — use `agentserve cluster run --autoscale`"
+                );
+            }
             let mut scenario = load_scenario_arg(args, &mut cfg)?;
             scenario.validate()?;
             if apply_kv_flags(args, &mut cfg, scenario.kv)? {
@@ -596,6 +615,17 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                         router.name(),
                         s.description
                     ),
+                    SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, router } => {
+                        println!(
+                            "  {:<16} {:?} up-thresh [{},{}] {:<11} {}",
+                            s.name,
+                            up_threshes,
+                            min_replicas,
+                            max_replicas,
+                            router.name(),
+                            s.description
+                        )
+                    }
                     _ => {}
                 }
             }
@@ -614,8 +644,38 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             if apply_kv_flags(args, &mut cfg, scenario.kv)? {
                 scenario.kv = None;
             }
-            let replicas = args.get_usize("replicas", cfg.cluster.replicas)?;
+            // --autoscale hands the fleet size to the control plane: it
+            // conflicts with an explicit static --replicas, and the band
+            // flags mean nothing without it (loud refusal over silent drop).
+            let autoscale_on = args.has("autoscale");
+            anyhow::ensure!(
+                !(autoscale_on && args.has("replicas")),
+                "--autoscale manages the fleet size (starting at the band floor); \
+                 drop --replicas, or drop --autoscale for a static fleet"
+            );
+            anyhow::ensure!(
+                autoscale_on || !(args.has("min-replicas") || args.has("max-replicas")),
+                "--min-replicas/--max-replicas set the autoscale band; pass --autoscale \
+                 to enable the control plane (or --replicas N for a static fleet)"
+            );
+            let mut replicas = args.get_usize("replicas", cfg.cluster.replicas)?;
             anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+            if autoscale_on {
+                use crate::config::AutoscaleConfig;
+                // Start from the scenario's own policy when it carries an
+                // active one (e.g. diurnal-burst), else the banded default;
+                // the CLI band flags override in either case.
+                let mut a = scenario
+                    .autoscale
+                    .clone()
+                    .filter(|a| a.is_active())
+                    .unwrap_or_else(|| AutoscaleConfig::banded(1, 4));
+                a.min_replicas = args.get_usize("min-replicas", a.min_replicas)?;
+                a.max_replicas = args.get_usize("max-replicas", a.max_replicas)?;
+                a.validate()?;
+                replicas = a.min_replicas;
+                scenario.autoscale = Some(a);
+            }
             let router: RouterPolicy = match args.get("router") {
                 Some(r) => r.parse()?,
                 None => cfg.cluster.router,
@@ -656,10 +716,17 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                 scenario.chaos = chaos.is_active().then_some(chaos);
                 scenario.validate()?;
             }
-            println!(
-                "== cluster '{}' | {} replicas | router {} | {} | {} | seed {} ==",
-                scenario.name, replicas, router, model, gpu, seed
-            );
+            match scenario.autoscale.as_ref().filter(|a| a.is_active()) {
+                Some(a) => println!(
+                    "== cluster '{}' | autoscale [{}, {}] replicas | router {} | {} | {} \
+                     | seed {} ==",
+                    scenario.name, a.min_replicas, a.max_replicas, router, model, gpu, seed
+                ),
+                None => println!(
+                    "== cluster '{}' | {} replicas | router {} | {} | {} | seed {} ==",
+                    scenario.name, replicas, router, model, gpu, seed
+                ),
+            }
             for policy in scenario_policies(args)? {
                 let out = run_cluster(&cfg, policy, &scenario, replicas, router, seed)?;
                 println!("--- {} ---", out.policy_name);
@@ -716,9 +783,11 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                 anyhow::ensure!(
                     matches!(
                         spec.axis,
-                        SweepAxis::Replicas { .. } | SweepAxis::Chaos { .. }
+                        SweepAxis::Replicas { .. }
+                            | SweepAxis::Chaos { .. }
+                            | SweepAxis::Autoscale { .. }
                     ),
-                    "sweep '{name}' is not a fleet (replicas/chaos-axis) sweep; \
+                    "sweep '{name}' is not a fleet (replicas/chaos/autoscale-axis) sweep; \
                      run it via `agentserve scenario sweep --name {name}`"
                 );
                 spec
@@ -942,6 +1011,11 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
         println!(
             "memory knee (largest {} whose p99 TTFT still violates the {:.0} ms SLO):",
             report.axis, report.slo_ttft_ms
+        );
+    } else if report.axis == "autoscale" {
+        println!(
+            "frontier knee (first up-thresh too sluggish to hold the {:.0} ms TTFT SLO):",
+            report.slo_ttft_ms
         );
     } else {
         println!(
@@ -1279,7 +1353,7 @@ mod tests {
         assert_eq!(report.req_str("axis").unwrap(), "replicas");
         assert_eq!(report.req_arr("points").unwrap().len(), 2);
         let csv_text = std::fs::read_to_string(&csv).unwrap();
-        assert!(csv_text.lines().next().unwrap().ends_with("replicas,load_cov"));
+        assert!(csv_text.lines().next().unwrap().ends_with("replicas,load_cov,replica_us"));
         assert_eq!(csv_text.lines().count(), 1 + 2);
         std::fs::remove_file(json).unwrap();
         std::fs::remove_file(csv).unwrap();
@@ -1373,6 +1447,69 @@ mod tests {
         // Non-increasing and negative grids are rejected by validation.
         assert!(run(args("cluster sweep --scenario mixed-fleet --chaos 6,0")).is_err());
         assert!(run(args("cluster sweep --scenario mixed-fleet --chaos -1,2")).is_err());
+    }
+
+    #[test]
+    fn cluster_run_autoscale_flags_smoke() {
+        // The control plane on the registry tide scenario, default band.
+        run(args("cluster run --name diurnal-burst --autoscale --model 3b")).unwrap();
+        // An explicit band on an ordinary scenario.
+        run(args(
+            "cluster run --name mixed-fleet --autoscale --min-replicas 1 --max-replicas 3 \
+             --model 3b",
+        ))
+        .unwrap();
+        // Autoscale composes with seeded chaos.
+        run(args(
+            "cluster run --name mixed-fleet --autoscale --max-replicas 3 --fail-rate 6 \
+             --model 3b",
+        ))
+        .unwrap();
+        // --autoscale owns the fleet size: an explicit --replicas conflicts.
+        assert!(run(args(
+            "cluster run --name mixed-fleet --autoscale --replicas 2"
+        ))
+        .is_err());
+        // Band flags without --autoscale are refused, not silently dropped.
+        assert!(run(args("cluster run --name mixed-fleet --min-replicas 2")).is_err());
+        assert!(run(args("cluster run --name mixed-fleet --max-replicas 3")).is_err());
+        // An inverted band is a validation error.
+        assert!(run(args(
+            "cluster run --name mixed-fleet --autoscale --min-replicas 3 --max-replicas 1"
+        ))
+        .is_err());
+        // The control plane has no meaning on a single GPU: `scenario run`
+        // refuses the flags loudly.
+        assert!(run(args("scenario run --name paper-fig5 --autoscale")).is_err());
+        assert!(run(args("scenario run --name paper-fig5 --min-replicas 2")).is_err());
+        assert!(run(args("scenario run --name paper-fig5 --max-replicas 4")).is_err());
+    }
+
+    #[test]
+    fn cluster_sweep_autoscale_axis_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_autoscale_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("frontier.json");
+        let csv = dir.join("frontier.csv");
+        run(args(&format!(
+            "cluster sweep --name autoscale-frontier --policy vllm --model 3b \
+             --out {} --csv {}",
+            json.to_str().unwrap(),
+            csv.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "autoscale");
+        assert_eq!(report.req_arr("points").unwrap().len(), 3);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.lines().next().unwrap().ends_with("replica_us"));
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(csv).unwrap();
+        // The frontier sweep also resolves through `scenario sweep` (it is
+        // just another sweep), and registry names still refuse ad-hoc flags.
+        assert!(run(args("cluster sweep --name autoscale-frontier --replica-counts 1,2"))
+            .is_err());
+        assert!(run(args("scenario sweep --name autoscale-frontier --rates 1,2")).is_err());
     }
 
     #[test]

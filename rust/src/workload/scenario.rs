@@ -18,7 +18,7 @@
 use super::generator::WorkloadGenerator;
 use super::spec::WorkloadKind;
 use super::trace::{Trace, TraceEvent};
-use crate::config::{ChaosConfig, Config, KvConfig, ModelKind};
+use crate::config::{AutoscaleConfig, ChaosConfig, Config, KvConfig, ModelKind};
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
 use crate::workflow::WorkflowLoad;
@@ -169,6 +169,11 @@ pub struct Scenario {
     /// process, applied by the fleet loop. `None` (or an inert config)
     /// keeps the fleet on the exact legacy code path.
     pub chaos: Option<ChaosConfig>,
+    /// Fleet autoscaling policy ([`crate::config::AutoscaleConfig`]): a
+    /// deterministic control loop that scales the fleet between
+    /// `min_replicas` and `max_replicas` on the virtual clock. `None` (or
+    /// an inert config) keeps the static-fleet code path byte-identical.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -226,6 +231,9 @@ impl Scenario {
         }
         if let Some(c) = &self.chaos {
             c.validate()?;
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate()?;
         }
         if let Some(kv) = &self.kv {
             anyhow::ensure!(
@@ -383,6 +391,7 @@ impl Scenario {
                 kv: None,
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "burst-storm".into(),
@@ -400,6 +409,7 @@ impl Scenario {
                 kv: None,
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -414,6 +424,7 @@ impl Scenario {
                 kv: None,
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "long-tool".into(),
@@ -434,6 +445,7 @@ impl Scenario {
                 kv: None,
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -451,6 +463,7 @@ impl Scenario {
                 kv: None,
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "memory-pressure".into(),
@@ -467,6 +480,7 @@ impl Scenario {
                 kv: Some(KvConfig { num_blocks: 2048, block_size: 16, prefix_sharing: true }),
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "shared-prefix-fleet".into(),
@@ -482,6 +496,7 @@ impl Scenario {
                 kv: Some(KvConfig { num_blocks: 65_536, block_size: 16, prefix_sharing: true }),
                 workflow: None,
                 chaos: None,
+                autoscale: None,
             },
             Scenario {
                 name: "failure-storm".into(),
@@ -504,6 +519,28 @@ impl Scenario {
                     w
                 }),
                 chaos: Some(ChaosConfig::seeded(20_000_000)),
+                autoscale: None,
+            },
+            Scenario {
+                name: "diurnal-burst".into(),
+                description: "on-off tide for the control plane: bursts of 10 ReAct arrivals \
+                              200 ms apart, then 20-30 s of quiet — carries an active \
+                              autoscale band [1, 4] so `cluster run --autoscale` shows the \
+                              cost-vs-SLO frontier out of the box"
+                    .into(),
+                arrivals: ArrivalProcess::Bursty {
+                    burst_size: 10,
+                    intra_gap_us: 200_000,
+                    idle_min_us: 20_000_000,
+                    idle_max_us: 30_000_000,
+                },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 40,
+                n_agents: 8,
+                kv: None,
+                workflow: None,
+                chaos: None,
+                autoscale: Some(AutoscaleConfig::banded(1, 4)),
             },
         ]
     }
@@ -544,6 +581,9 @@ impl Scenario {
         }
         if let Some(c) = &self.chaos {
             fields.push(("chaos", c.to_value()));
+        }
+        if let Some(a) = &self.autoscale {
+            fields.push(("autoscale", a.to_value()));
         }
         Value::obj(fields)
     }
@@ -598,6 +638,10 @@ impl Scenario {
             workflow,
             chaos: match v.get("chaos") {
                 Some(c) => Some(ChaosConfig::from_value(c)?),
+                None => None,
+            },
+            autoscale: match v.get("autoscale") {
+                Some(a) => Some(AutoscaleConfig::from_value(a)?),
                 None => None,
             },
         };
@@ -758,6 +802,7 @@ mod tests {
                 WorkflowSpec::by_name("supervisor-worker").unwrap(),
             )),
             chaos: None,
+            autoscale: None,
         };
         sc.validate().unwrap();
         let back = Scenario::from_value(&sc.to_value()).unwrap();
@@ -788,6 +833,24 @@ mod tests {
         let mut bad = sc.clone();
         bad.chaos = Some(ChaosConfig { restart_us: 0, ..ChaosConfig::seeded(1_000_000) });
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn diurnal_burst_carries_an_active_autoscale_band() {
+        let sc = Scenario::by_name("diurnal-burst").unwrap();
+        let a = sc.autoscale.as_ref().expect("diurnal-burst ships an autoscale config");
+        assert!(a.is_active());
+        assert_eq!((a.min_replicas, a.max_replicas), (1, 4));
+        // Autoscale config survives the JSON round trip.
+        let back = Scenario::from_value(&sc.to_value()).unwrap();
+        assert_eq!(back, sc);
+        // An invalid band is rejected at scenario level.
+        let mut bad = sc.clone();
+        bad.autoscale = Some(AutoscaleConfig { max_replicas: 0, ..AutoscaleConfig::banded(1, 4) });
+        assert!(bad.validate().is_err());
+        // Scenarios without a config leave the field absent in JSON.
+        let plain = Scenario::by_name("paper-fig5").unwrap();
+        assert!(plain.to_value().get("autoscale").is_none());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use super::scenario::{ArrivalProcess, Population, Scenario};
 use super::spec::WorkloadKind;
 use crate::cluster::FleetOutcome;
-use crate::config::{ChaosConfig, Config, KvConfig, RouterPolicy};
+use crate::config::{AutoscaleConfig, ChaosConfig, Config, KvConfig, RouterPolicy};
 use crate::engine::{run_scenario_fast, Policy, SimOutcome};
 use crate::util::json::Value;
 use crate::workflow::{WorkflowLoad, WorkflowSpec};
@@ -73,6 +73,21 @@ pub enum SweepAxis {
         replicas: usize,
         router: RouterPolicy,
     },
+    /// Autoscaler scale-up threshold: each point runs the base scenario
+    /// behind `router` with a `[min_replicas, max_replicas]` autoscale band
+    /// at the point's `up_thresh` (the down threshold tracks it at a 4:1
+    /// ratio, matching [`AutoscaleConfig::banded`]). Threshold 0 =
+    /// autoscaling **off** — a static `max_replicas` fleet on the exact
+    /// legacy path, i.e. the provisioned-for-peak baseline. The
+    /// cost-vs-SLO frontier axis: every row carries both SLO attainment
+    /// and the GPU-time integral (`replica_us`); the knee is load-style
+    /// (the first threshold too sluggish to hold the TTFT SLO).
+    Autoscale {
+        up_threshes: Vec<f64>,
+        min_replicas: usize,
+        max_replicas: usize,
+        router: RouterPolicy,
+    },
 }
 
 impl SweepAxis {
@@ -86,6 +101,7 @@ impl SweepAxis {
             SweepAxis::FanOut(_) => "fan-out",
             SweepAxis::Replicas { .. } => "replicas",
             SweepAxis::Chaos { .. } => "chaos",
+            SweepAxis::Autoscale { .. } => "autoscale",
         }
     }
 
@@ -99,6 +115,7 @@ impl SweepAxis {
             SweepAxis::FanOut(_) => "degree",
             SweepAxis::Replicas { .. } => "GPUs",
             SweepAxis::Chaos { .. } => "crashes/min",
+            SweepAxis::Autoscale { .. } => "up-thresh",
         }
     }
 
@@ -112,6 +129,7 @@ impl SweepAxis {
             SweepAxis::FanOut(v) => v.len(),
             SweepAxis::Replicas { counts, .. } => counts.len(),
             SweepAxis::Chaos { rates_per_min, .. } => rates_per_min.len(),
+            SweepAxis::Autoscale { up_threshes, .. } => up_threshes.len(),
         }
     }
 
@@ -129,6 +147,7 @@ impl SweepAxis {
             SweepAxis::FanOut(v) => v[i] as f64,
             SweepAxis::Replicas { counts, .. } => counts[i] as f64,
             SweepAxis::Chaos { rates_per_min, .. } => rates_per_min[i],
+            SweepAxis::Autoscale { up_threshes, .. } => up_threshes[i],
         }
     }
 }
@@ -230,6 +249,19 @@ impl SweepSpec {
                     );
                 }
             }
+            SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, .. } => {
+                anyhow::ensure!(*min_replicas >= 1, "autoscale sweep needs min_replicas >= 1");
+                anyhow::ensure!(
+                    *max_replicas >= *min_replicas,
+                    "autoscale sweep band is inverted (min {min_replicas} > max {max_replicas})"
+                );
+                for &t in up_threshes {
+                    anyhow::ensure!(
+                        t.is_finite() && t >= 0.0,
+                        "up-thresh must be finite and >= 0 (got {t}; 0 = autoscaling off)"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -279,6 +311,26 @@ impl SweepSpec {
                 };
                 sc.chaos = chaos.is_active().then_some(chaos);
             }
+            SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, .. } => {
+                // thresh 0 strips the policy entirely: the point runs a
+                // static max_replicas fleet on the exact legacy path (the
+                // provisioned-for-peak baseline). A nonzero threshold
+                // installs the band with the down threshold tracking at the
+                // banded 4:1 ratio so hysteresis stays well formed at every
+                // grid value.
+                sc.autoscale = (up_threshes[i] > 0.0).then(|| {
+                    let mut a = sc
+                        .autoscale
+                        .clone()
+                        .filter(|a| a.is_active())
+                        .unwrap_or_else(|| AutoscaleConfig::banded(1, 1));
+                    a.min_replicas = *min_replicas;
+                    a.max_replicas = *max_replicas;
+                    a.up_thresh = up_threshes[i];
+                    a.down_thresh = up_threshes[i] / 4.0;
+                    a
+                });
+            }
         }
         sc
     }
@@ -310,6 +362,7 @@ impl SweepSpec {
                     kv: None,
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -332,6 +385,7 @@ impl SweepSpec {
                     kv: None,
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -354,6 +408,7 @@ impl SweepSpec {
                     kv: None,
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
             },
@@ -377,6 +432,7 @@ impl SweepSpec {
                     }),
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
             },
@@ -415,6 +471,7 @@ impl SweepSpec {
                     kv: None,
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 axis: SweepAxis::Chaos {
                     rates_per_min: vec![0.0, 2.0, 6.0, 12.0],
@@ -444,10 +501,26 @@ impl SweepSpec {
                     kv: None,
                     workflow: None,
                     chaos: None,
+                    autoscale: None,
                 },
                 axis: SweepAxis::Replicas {
                     counts: vec![1, 2, 4],
                     router: RouterPolicy::CacheAware,
+                },
+            },
+            SweepSpec {
+                name: "autoscale-frontier".into(),
+                description:
+                    "the cost-vs-SLO frontier: the diurnal-burst tide under a [1, 4]-replica \
+                     autoscaler swept across scale-up threshold (0 = autoscaling off — a \
+                     static 4-GPU provisioned-for-peak baseline)"
+                        .into(),
+                base: Scenario::by_name("diurnal-burst").expect("registry scenario exists"),
+                axis: SweepAxis::Autoscale {
+                    up_threshes: vec![0.0, 2.0, 6.0],
+                    min_replicas: 1,
+                    max_replicas: 4,
+                    router: RouterPolicy::LeastOutstanding,
                 },
             },
         ]
@@ -487,6 +560,12 @@ pub struct PolicyPoint {
     /// so fleet sweeps diff cleanly against single-GPU sweeps).
     pub replicas: usize,
     pub load_cov: f64,
+    /// GPU-time integral Σ fleet-size × dt in replica-microseconds: the
+    /// cost column of the cost-vs-SLO frontier. Autoscaled runs read it
+    /// off [`crate::metrics::AutoscaleStats`]; static runs (no scale
+    /// events) charge `replicas` for the whole wall clock so frontier
+    /// rows stay directly comparable.
+    pub replica_us: u64,
 }
 
 impl PolicyPoint {
@@ -519,6 +598,7 @@ impl PolicyPoint {
             task_slo_rate,
             replicas: 1,
             load_cov: 0.0,
+            replica_us: (out.report.wall_ms * 1000.0) as u64,
         }
     }
 
@@ -553,6 +633,10 @@ impl PolicyPoint {
             task_slo_rate,
             replicas: r.replicas,
             load_cov: r.load_cov,
+            replica_us: match &r.autoscale {
+                Some(a) => a.replica_us,
+                None => r.replicas as u64 * (r.wall_ms * 1000.0) as u64,
+            },
         }
     }
 
@@ -577,6 +661,7 @@ impl PolicyPoint {
             ("task_slo_rate", self.task_slo_rate.into()),
             ("replicas", self.replicas.into()),
             ("load_cov", self.load_cov.into()),
+            ("replica_us", self.replica_us.into()),
         ])
     }
 }
@@ -673,12 +758,12 @@ impl SweepReport {
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
              radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate,\
-             replicas,load_cov\n",
+             replicas,load_cov,replica_us\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -701,7 +786,8 @@ impl SweepReport {
                     pp.makespan_p99_ms,
                     pp.task_slo_rate,
                     pp.replicas,
-                    pp.load_cov
+                    pp.load_cov,
+                    pp.replica_us
                 ));
             }
         }
@@ -822,6 +908,15 @@ pub fn run_sweep(
                         cfg, policy, &scenario, *replicas, *router, seed,
                     )?,
                 )),
+                // Autoscale points start at min_replicas and let the
+                // controller grow the fleet; the thresh-0 baseline runs the
+                // full max_replicas fleet statically (provisioned for peak).
+                SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, router } => {
+                    let n = if up_threshes[i] > 0.0 { *min_replicas } else { *max_replicas };
+                    Ok(PolicyPoint::from_fleet(&crate::cluster::run_cluster_fast(
+                        cfg, policy, &scenario, n, *router, seed,
+                    )?))
+                }
                 _ => Ok(PolicyPoint::from_outcome(&run_scenario_fast(
                     cfg, policy, &scenario, seed,
                 ))),
@@ -1007,6 +1102,7 @@ mod tests {
             task_slo_rate: 0.0,
             replicas: 1,
             load_cov: 0.0,
+            replica_us: 0,
         }
     }
 
@@ -1142,6 +1238,69 @@ mod tests {
             router: RouterPolicy::RoundRobin,
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn autoscale_axis_installs_the_policy_and_baseline() {
+        let spec = SweepSpec::by_name("autoscale-frontier").unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.axis.kind_name(), "autoscale");
+        assert_eq!(spec.axis.unit(), "up-thresh");
+        // Thresh 0 strips the policy: the baseline point is a plain static
+        // fleet on the legacy path (run_sweep sizes it at max_replicas).
+        assert_eq!(spec.scenario_at(0).autoscale, None);
+        // A nonzero threshold installs the band with tracking hysteresis.
+        let a = spec.scenario_at(1).autoscale.expect("active point carries the policy");
+        assert!(a.is_active());
+        assert_eq!((a.min_replicas, a.max_replicas), (1, 4));
+        assert_eq!(a.up_thresh, 2.0);
+        assert_eq!(a.down_thresh, 0.5, "down threshold tracks up at 4:1");
+        spec.scenario_at(1).validate().unwrap();
+        // Inverted bands and bad thresholds are rejected.
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::Autoscale {
+            up_threshes: vec![1.0, 2.0],
+            min_replicas: 4,
+            max_replicas: 2,
+            router: RouterPolicy::RoundRobin,
+        };
+        assert!(bad.validate().is_err());
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::Autoscale {
+            up_threshes: vec![-1.0, 2.0],
+            min_replicas: 1,
+            max_replicas: 2,
+            router: RouterPolicy::RoundRobin,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn csv_rows_carry_the_gpu_time_column() {
+        let report = SweepReport {
+            sweep: "s".into(),
+            axis: "autoscale".into(),
+            axis_unit: "up-thresh".into(),
+            model: "m".into(),
+            gpu: "g".into(),
+            slo_ttft_ms: 1.0,
+            slo_tpot_ms: 1.0,
+            slo_task_ms: 1.0,
+            base_seed: 7,
+            points: vec![SweepPoint {
+                axis_value: 2.0,
+                sessions: 1,
+                seed: 7,
+                per_policy: vec![PolicyPoint { replica_us: 123_456, ..pp(1.0) }],
+            }],
+            knees: vec![],
+        };
+        let csv = report.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with("replicas,load_cov,replica_us"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",123456"));
+        let v = crate::util::json::parse(&report.to_value().to_string()).unwrap();
+        let row = &v.req_arr("points").unwrap()[0].req_arr("policies").unwrap()[0];
+        assert_eq!(row.req_f64("replica_us").unwrap(), 123_456.0);
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Autoscale control-plane acceptance suite (tier-1).
+//!
+//! Locks the tentpole contracts of the deterministic fleet autoscaler on
+//! its demo workload, the `diurnal-burst` registry scenario (bursts of 10
+//! arrivals, then 20-30 s of quiet, carrying an active `[1, 4]` band):
+//!
+//! - **Frontier**: the autoscaled fleet beats the band-floor static fleet
+//!   on tail TTFT while spending less GPU-time than the band-ceiling
+//!   static fleet — the cost-vs-SLO frontier the control plane exists for.
+//! - **Drains lose nothing**: scale-downs happen in the quiet valleys and
+//!   the scripted decode-token budget is still emitted exactly once.
+//! - **The `autoscale` sweep axis** maps the same frontier as data: the
+//!   `up_thresh = 0` point is the provisioned-for-peak static baseline,
+//!   autoscaled points undercut its `replica_us` cost column, and the
+//!   whole report reruns byte-identically.
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::RouterPolicy;
+use agentserve::engine::Policy;
+use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
+
+mod common;
+use common::{cfg, scripted_tokens};
+
+#[test]
+fn diurnal_burst_frontier_beats_both_static_extremes() {
+    let cfg = cfg();
+    let sc = Scenario::by_name("diurnal-burst").unwrap();
+    let run = |scenario: &Scenario, replicas| {
+        run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            scenario,
+            replicas,
+            RouterPolicy::LeastOutstanding,
+            7,
+        )
+        .unwrap()
+    };
+    let auto = run(&sc, 1);
+    let static_sc = Scenario { autoscale: None, ..sc.clone() };
+    let floor = run(&static_sc, 1);
+    let ceiling = run(&static_sc, 4);
+    for out in [&auto, &floor, &ceiling] {
+        assert_eq!(out.report.completed_sessions, sc.total_sessions);
+    }
+    let stats = auto.report.autoscale.as_ref().expect("bursts of 10 drive the controller");
+    assert!(stats.scale_ups > 0, "the controller must boot capacity into the bursts");
+    assert!(stats.peak_replicas > 1 && stats.peak_replicas <= 4);
+    // SLO side of the frontier: scaling into the bursts relieves the
+    // queue the floor fleet cannot clear.
+    assert!(
+        auto.report.ttft.p99 < floor.report.ttft.p99,
+        "autoscaled p99 TTFT ({:.1} ms) must beat the 1-replica static fleet ({:.1} ms)",
+        auto.report.ttft.p99,
+        floor.report.ttft.p99
+    );
+    // Cost side: the quiet valleys mean far less GPU-time than keeping the
+    // band ceiling provisioned for the whole run.
+    let ceiling_cost = 4 * (ceiling.report.wall_ms * 1000.0) as u64;
+    assert!(
+        stats.replica_us < ceiling_cost,
+        "autoscaled GPU-time ({} replica-us) must undercut a pinned 4-replica fleet ({})",
+        stats.replica_us,
+        ceiling_cost
+    );
+}
+
+#[test]
+fn scale_downs_drain_without_losing_work() {
+    // The 20-30 s valleys pull the fleet back to the floor (cooldown is
+    // 5 s), so the run sees real drains — and the ledger still closes
+    // exactly: a drained replica finishes everything placed on it first.
+    let cfg = cfg();
+    let sc = Scenario::by_name("diurnal-burst").unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    let out = run_cluster_fast(
+        &cfg,
+        Policy::AgentServe(Default::default()),
+        &sc,
+        1,
+        RouterPolicy::CacheAware,
+        7,
+    )
+    .unwrap();
+    let stats = out.report.autoscale.as_ref().expect("the controller acted");
+    assert!(stats.scale_ups > 0);
+    assert!(stats.scale_downs > 0, "20-30 s valleys must drain the burst capacity back out");
+    assert_eq!(out.report.completed_sessions, sc.total_sessions, "no session lost to a drain");
+    assert_eq!(
+        out.report.total_tokens, expected,
+        "every scripted decode token exactly once — drains recompute nothing"
+    );
+    let sum: u64 = out.per_replica.iter().map(|o| o.report.total_tokens).sum();
+    assert_eq!(sum, expected, "drained replicas keep their finished work in the ledger");
+}
+
+#[test]
+fn autoscale_sweep_maps_the_cost_vs_slo_frontier() {
+    let cfg = cfg();
+    let spec = SweepSpec {
+        name: "frontier-test".into(),
+        description: String::new(),
+        base: Scenario::by_name("diurnal-burst").unwrap(),
+        axis: SweepAxis::Autoscale {
+            up_threshes: vec![0.0, 2.0],
+            min_replicas: 1,
+            max_replicas: 4,
+            router: RouterPolicy::LeastOutstanding,
+        },
+    };
+    spec.validate().unwrap();
+    let policies = [Policy::AgentServe(Default::default())];
+    let report = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    let again = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(
+        report.to_value().to_string(),
+        again.to_value().to_string(),
+        "the frontier sweep must rerun byte-identically"
+    );
+    assert_eq!(report.axis, "autoscale");
+    assert_eq!(report.points.len(), 2);
+    let static_pt = &report.points[0].per_policy[0];
+    let auto_pt = &report.points[1].per_policy[0];
+    assert_eq!(
+        static_pt.replicas, 4,
+        "up_thresh 0 means policy off: the provisioned-for-peak static baseline"
+    );
+    assert_eq!(static_pt.completed, 40);
+    assert_eq!(auto_pt.completed, 40);
+    assert!(static_pt.replica_us > 0);
+    assert!(
+        auto_pt.replica_us < static_pt.replica_us,
+        "the autoscaled point ({} replica-us) must undercut the static ceiling ({})",
+        auto_pt.replica_us,
+        static_pt.replica_us
+    );
+    // The cost column rides both serialized forms.
+    assert!(report.to_csv().lines().next().unwrap().ends_with("replicas,load_cov,replica_us"));
+    assert!(report.to_value().to_string().contains("\"replica_us\""));
+}

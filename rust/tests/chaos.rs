@@ -11,21 +11,13 @@
 //!   the crash forced the fleet to redecode.
 
 use agentserve::cluster::run_cluster_fast;
-use agentserve::config::{
-    ChaosConfig, Config, FaultEvent, FaultKind, GpuKind, ModelKind, RouterPolicy,
-};
+use agentserve::config::{ChaosConfig, FaultEvent, FaultKind, RouterPolicy};
 use agentserve::engine::{run_scenario, Policy};
 use agentserve::workflow::{ToolFaultPolicy, WorkflowLoad, WorkflowSpec};
 use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
 
-fn cfg() -> Config {
-    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
-}
-
-/// Scripted decode tokens of a non-workflow scenario (policy-independent).
-fn scripted_tokens(cfg: &Config, sc: &Scenario, seed: u64) -> u64 {
-    sc.instantiate(cfg.model.kind, seed).trace.total_decode_tokens()
-}
+mod common;
+use common::{cfg, scripted_tokens};
 
 #[test]
 fn inert_chaos_config_keeps_the_legacy_bytes_under_every_router() {

@@ -15,34 +15,16 @@
 //! `gpus-for-slo` inverse knee.
 
 use agentserve::cluster::{run_cluster, run_cluster_fast, FleetOutcome};
-use agentserve::config::{Config, GpuKind, KvConfig, ModelKind, RouterPolicy};
+use agentserve::config::{KvConfig, RouterPolicy};
 use agentserve::engine::{run_scenario, Policy};
-use agentserve::workflow::{WorkflowLoad, WorkflowSpec};
-use agentserve::workload::{
-    ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
-};
+use agentserve::workload::{Scenario, SweepAxis, SweepSpec};
 
-fn cfg() -> Config {
-    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
-}
-
-/// Scripted decode tokens of a scenario instantiation (policy-independent).
-fn scripted_tokens(cfg: &Config, sc: &Scenario, seed: u64) -> u64 {
-    if sc.workflow.is_some() {
-        let cw = agentserve::workflow::compile(sc, cfg.model.kind, seed);
-        cw.scripts.iter().map(|s| s.total_decode_tokens()).sum()
-    } else {
-        sc.instantiate(cfg.model.kind, seed).trace.total_decode_tokens()
-    }
-}
+mod common;
+use common::{cfg, scripted_tokens};
 
 /// A small open-loop workflow carrier (supervisor/worker joins).
 fn workflow_scenario(tasks: usize) -> Scenario {
-    Scenario {
-        name: "sw-fleet".into(),
-        ..WorkflowLoad::new(WorkflowSpec::by_name("supervisor-worker").unwrap())
-            .carrier(tasks, 0.5)
-    }
+    Scenario { name: "sw-fleet".into(), ..common::wf_scenario("supervisor-worker", tasks, 0.5) }
 }
 
 #[test]
@@ -256,17 +238,7 @@ fn fleet_p99_ttft_is_nonincreasing_in_replica_count() {
     // queueing, so the fleet p99 TTFT must not rise. A small slack absorbs
     // floating-point percentile wiggle between near-identical schedules.
     let cfg = cfg();
-    let sc = Scenario {
-        name: "overload".into(),
-        description: "open-loop ReAct at ~4x single-GPU capacity".into(),
-        arrivals: ArrivalProcess::Poisson { rate_per_s: 2.0 },
-        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-        total_sessions: 120,
-        n_agents: 120,
-        kv: None,
-        workflow: None,
-        chaos: None,
-    };
+    let sc = common::open_loop("overload", 2.0, 120);
     let mut prev = f64::INFINITY;
     for replicas in [1, 2, 4] {
         let out = run_cluster_fast(
@@ -326,17 +298,7 @@ fn replica_sweep_finds_a_finite_inverse_knee() {
     let spec = SweepSpec {
         name: "mini-gpus-for-slo".into(),
         description: "inverse knee on a small overloaded fleet".into(),
-        base: Scenario {
-            name: "mini-overload".into(),
-            description: "open-loop ReAct past one GPU's knee".into(),
-            arrivals: ArrivalProcess::Poisson { rate_per_s: 1.5 },
-            populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-            total_sessions: 100,
-            n_agents: 100,
-            kv: None,
-            workflow: None,
-            chaos: None,
-        },
+        base: common::open_loop("mini-overload", 1.5, 100),
         axis: SweepAxis::Replicas {
             counts: vec![1, 2, 4, 8],
             router: RouterPolicy::LeastOutstanding,
@@ -370,7 +332,7 @@ fn replica_sweep_finds_a_finite_inverse_knee() {
     assert!(json.contains("\"replicas\""));
     assert!(json.contains("\"load_cov\""));
     let csv = report.to_csv();
-    assert!(csv.lines().next().unwrap().ends_with("replicas,load_cov"));
+    assert!(csv.lines().next().unwrap().ends_with("replicas,load_cov,replica_us"));
 }
 
 #[test]

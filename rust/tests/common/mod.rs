@@ -1,0 +1,54 @@
+//! Shared helpers for the integration suites.
+//!
+//! Every suite pulls its `Config` preset and scenario builders from here
+//! (`mod common;`) so that a new `Scenario` field — like the `autoscale`
+//! control-plane block — is added in exactly one place instead of in a
+//! dozen hand-rolled struct literals scattered across the suites.
+#![allow(dead_code)]
+
+use agentserve::config::{Config, GpuKind, ModelKind};
+use agentserve::workflow::{compile, WorkflowLoad, WorkflowSpec};
+use agentserve::workload::{ArrivalProcess, Population, Scenario, WorkloadKind};
+
+/// The calibrated paper preset every suite runs on (Qwen-3B on an A5000).
+pub fn cfg() -> Config {
+    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
+}
+
+/// Open-loop Poisson ReAct fleet with every optional layer (bounded KV,
+/// workflow DAG, chaos, autoscale) switched off — the baseline shape the
+/// suites then specialize with struct-update syntax.
+pub fn open_loop(name: &str, rate_per_s: f64, sessions: usize) -> Scenario {
+    Scenario {
+        name: name.into(),
+        description: String::new(),
+        arrivals: ArrivalProcess::Poisson { rate_per_s },
+        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+        total_sessions: sessions,
+        n_agents: sessions,
+        kv: None,
+        workflow: None,
+        chaos: None,
+        autoscale: None,
+    }
+}
+
+/// Open-loop carrier releasing `tasks` instances of a registry workflow.
+pub fn wf_scenario(spec_name: &str, tasks: usize, rate: f64) -> Scenario {
+    Scenario {
+        name: format!("wf-{spec_name}"),
+        ..WorkflowLoad::new(WorkflowSpec::by_name(spec_name).expect("registry workflow"))
+            .carrier(tasks, rate)
+    }
+}
+
+/// Scripted decode tokens of a scenario instantiation (policy-independent;
+/// workflow-aware — DAG scenarios compile to scripts first).
+pub fn scripted_tokens(cfg: &Config, sc: &Scenario, seed: u64) -> u64 {
+    if sc.workflow.is_some() {
+        let cw = compile(sc, cfg.model.kind, seed);
+        cw.scripts.iter().map(|s| s.total_decode_tokens()).sum()
+    } else {
+        sc.instantiate(cfg.model.kind, seed).trace.total_decode_tokens()
+    }
+}

@@ -1,0 +1,207 @@
+//! Cross-layer interaction matrix (tier-1).
+//!
+//! Each optional layer — bounded KV pool, workflow DAG, chaos faults,
+//! multi-replica fleet, autoscale control plane — is locked in isolation
+//! by its own suite. This suite locks their *compositions*: every stack of
+//! layers must still terminate, conserve the scripted decode-token budget
+//! (exactly without crashes, up to `redecoded_tokens` with them), lose no
+//! session, respect the autoscale band, and rerun byte-identically from
+//! one `(config, scenario, seed)` tuple.
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::{
+    AutoscaleConfig, ChaosConfig, FaultEvent, FaultKind, KvConfig, RouterPolicy,
+};
+use agentserve::engine::Policy;
+use agentserve::workload::Scenario;
+
+mod common;
+use common::{cfg, scripted_tokens, wf_scenario};
+
+/// A hot controller that fires on any nonzero load — makes the autoscale
+/// layer participate deterministically in every composition below.
+fn hot_autoscale(max_replicas: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        up_thresh: 0.5,
+        down_thresh: 0.1,
+        ..AutoscaleConfig::banded(1, max_replicas)
+    }
+}
+
+#[test]
+fn bounded_kv_workflow_crash_fleet_conserves_and_reruns() {
+    // Three layers at once: a bounded shared-prefix pool, a supervisor/
+    // worker DAG, and a scripted replica crash on a 2-replica fleet. The
+    // crash forces re-routes and recomputes; joins still resolve, the pool
+    // still admits everyone, and the token ledger closes exactly.
+    let cfg = cfg();
+    let sc = Scenario {
+        kv: Some(KvConfig { num_blocks: 2048, block_size: 16, prefix_sharing: true }),
+        chaos: Some(ChaosConfig {
+            events: vec![FaultEvent { at_us: 300_000, replica: 0, kind: FaultKind::Crash }],
+            mtbf_us: 0,
+            restart_us: 2_000_000,
+        }),
+        ..wf_scenario("supervisor-worker", 4, 0.5)
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::CacheAware] {
+        let out =
+            run_cluster_fast(&cfg, Policy::AgentServe(Default::default()), &sc, 2, router, 7)
+                .unwrap();
+        let chaos = out.report.chaos.as_ref().expect("scripted crash reports chaos stats");
+        assert_eq!(chaos.crashes, 1, "{router}");
+        assert_eq!(
+            out.report.completed_sessions, out.report.sessions,
+            "{router}: crashed sessions must be re-routed, not dropped"
+        );
+        assert_eq!(
+            out.report.total_tokens,
+            expected + chaos.redecoded_tokens,
+            "{router}: decode tokens conserved up to crash-forced recompute"
+        );
+        assert!(out.report.kv_present, "{router}: the bounded pool rode the fleet");
+        let wf = out.report.workflow.as_ref().expect("workflow metrics ride the fleet");
+        assert_eq!(wf.tasks, 4, "{router}");
+        assert_eq!(wf.completed_tasks, 4, "{router}");
+        let again =
+            run_cluster_fast(&cfg, Policy::AgentServe(Default::default()), &sc, 2, router, 7)
+                .unwrap();
+        assert_eq!(
+            out.report.to_value().to_string(),
+            again.report.to_value().to_string(),
+            "{router}: the three-layer stack must rerun byte-identically"
+        );
+    }
+}
+
+#[test]
+fn full_stack_kv_workflow_autoscale_conserves_exactly() {
+    // Bounded KV × workflow DAG × control plane, no faults: scaling must be
+    // invisible to the ledger — every scripted token exactly once, every
+    // task complete, fleet size inside the band.
+    let cfg = cfg();
+    let sc = Scenario {
+        kv: Some(KvConfig { num_blocks: 4096, block_size: 16, prefix_sharing: true }),
+        autoscale: Some(hot_autoscale(3)),
+        ..wf_scenario("supervisor-worker", 6, 2.0)
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    let run = || {
+        run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            &sc,
+            1,
+            RouterPolicy::CacheAware,
+            7,
+        )
+        .unwrap()
+    };
+    let out = run();
+    assert_eq!(out.report.completed_sessions, out.report.sessions);
+    assert_eq!(out.report.total_tokens, expected, "no chaos, no recompute: exact conservation");
+    assert!(out.report.kv_present);
+    let wf = out.report.workflow.as_ref().expect("workflow metrics present");
+    assert_eq!(wf.completed_tasks, 6);
+    let auto = out.report.autoscale.as_ref().expect("a hot threshold drives the controller");
+    assert!(auto.scale_ups > 0, "load above 0.5 per replica must boot capacity");
+    assert!(auto.peak_replicas <= 3, "peak {} exceeded the band", auto.peak_replicas);
+    assert!(auto.replica_us > 0);
+    let again = run();
+    assert_eq!(
+        out.report.to_value().to_string(),
+        again.report.to_value().to_string(),
+        "the full stack must rerun byte-identically"
+    );
+}
+
+#[test]
+fn autoscale_rides_out_a_crash_storm() {
+    // Chaos × autoscale on the open-loop mix: a scripted crash plus seeded
+    // crashes (mtbf 10 s) while a hot controller scales the fleet. Both
+    // stats blocks report, no session is lost, and the ledger closes up to
+    // the crash-forced recompute.
+    let cfg = cfg();
+    let sc = Scenario {
+        chaos: Some(ChaosConfig {
+            events: vec![FaultEvent { at_us: 200_000, replica: 0, kind: FaultKind::Crash }],
+            mtbf_us: 10_000_000,
+            restart_us: 2_000_000,
+        }),
+        autoscale: Some(hot_autoscale(4)),
+        ..Scenario::by_name("mixed-fleet").unwrap()
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    let run = || {
+        run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            &sc,
+            2,
+            RouterPolicy::LeastOutstanding,
+            7,
+        )
+        .unwrap()
+    };
+    let out = run();
+    let chaos = out.report.chaos.as_ref().expect("crashes report the chaos block");
+    assert!(chaos.crashes >= 1);
+    let auto = out.report.autoscale.as_ref().expect("the hot controller reports its block");
+    assert!(auto.scale_ups > 0);
+    assert!(auto.peak_replicas <= 4);
+    assert_eq!(out.report.completed_sessions, out.report.sessions, "no session lost");
+    assert_eq!(
+        out.report.total_tokens,
+        expected + chaos.redecoded_tokens,
+        "conserved up to crash-forced recompute"
+    );
+    let again = run();
+    assert_eq!(
+        out.report.to_value().to_string(),
+        again.report.to_value().to_string(),
+        "chaos x autoscale must rerun byte-identically"
+    );
+}
+
+#[test]
+fn failure_storm_with_autoscaler_reports_both_blocks() {
+    // The registry chaos scenario (seeded crashes + flaky tools over a
+    // workflow) with the control plane attached: the run terminates, every
+    // session completes somewhere, and the report carries the chaos and
+    // autoscale blocks side by side.
+    let cfg = cfg();
+    let sc = Scenario {
+        autoscale: Some(hot_autoscale(4)),
+        ..Scenario::by_name("failure-storm").unwrap()
+    };
+    sc.validate().unwrap();
+    let expected = scripted_tokens(&cfg, &sc, 7);
+    let out = run_cluster_fast(
+        &cfg,
+        Policy::AgentServe(Default::default()),
+        &sc,
+        2,
+        RouterPolicy::CacheAware,
+        7,
+    )
+    .unwrap();
+    let chaos = out.report.chaos.as_ref().expect("failure-storm reports chaos");
+    let auto = out.report.autoscale.as_ref().expect("the controller reports beside it");
+    assert!(auto.scale_ups > 0);
+    assert!(auto.peak_replicas <= 4);
+    assert_eq!(
+        out.report.completed_sessions, out.report.sessions,
+        "crashes + retries + scaling must never wedge or drop a session"
+    );
+    assert_eq!(
+        out.report.total_tokens,
+        expected + chaos.redecoded_tokens,
+        "tool retries delay but never mint tokens; crashes only recompute"
+    );
+    let wf = out.report.workflow.as_ref().expect("failure-storm carries a workflow");
+    assert_eq!(wf.tasks, 12);
+}

@@ -5,17 +5,14 @@
 //! preemptions on `memory-pressure`, >0.9 radix hit rate on
 //! `shared-prefix-fleet`, a detected memory knee on a kv-blocks sweep).
 
-use agentserve::config::{Config, GpuKind, KvConfig, ModelKind};
+use agentserve::config::KvConfig;
 use agentserve::engine::{run_scenario_fast, Policy};
 use agentserve::kvcache::{BlockAllocator, RadixPrefixCache, SessionCache};
 use agentserve::util::rng::Rng;
-use agentserve::workload::{
-    run_sweep, ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
-};
+use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
 
-fn cfg() -> Config {
-    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
-}
+mod common;
+use common::cfg;
 
 // ---------------------------------------------------------------------------
 // Property: allocator + radix + session caches preserve every invariant
@@ -139,15 +136,8 @@ fn prop_kv_trio_invariants_under_churn() {
 /// every paper policy.
 fn scaled_pressure_fleet() -> Scenario {
     Scenario {
-        name: "pressure-300".into(),
-        description: "scaled memory-pressure fleet for the churn suite".into(),
-        arrivals: ArrivalProcess::Poisson { rate_per_s: 8.0 },
-        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-        total_sessions: 300,
-        n_agents: 300,
         kv: Some(KvConfig { num_blocks: 1024, block_size: 16, prefix_sharing: true }),
-        workflow: None,
-        chaos: None,
+        ..common::open_loop("pressure-300", 8.0, 300)
     }
 }
 
@@ -248,17 +238,7 @@ fn kv_blocks_sweep_detects_a_memory_knee() {
     let spec = SweepSpec {
         name: "knee-test".into(),
         description: String::new(),
-        base: Scenario {
-            name: "knee-fleet".into(),
-            description: String::new(),
-            arrivals: ArrivalProcess::Poisson { rate_per_s: 4.0 },
-            populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-            total_sessions: 20,
-            n_agents: 20,
-            kv: None,
-            workflow: None,
-            chaos: None,
-        },
+        base: common::open_loop("knee-fleet", 4.0, 20),
         axis: SweepAxis::KvBlocks(vec![640, 262_144]),
     };
     spec.validate().unwrap();

@@ -10,6 +10,8 @@ use agentserve::metrics::percentile;
 use agentserve::util::json::{parse, Value};
 use agentserve::util::rng::Rng;
 
+mod common;
+
 // ---------------------------------------------------------------------------
 // KV allocator: invariants hold under arbitrary operation sequences.
 // ---------------------------------------------------------------------------
@@ -287,6 +289,7 @@ mod arrivals {
             kv: None,
             workflow: None,
             chaos: None,
+            autoscale: None,
         }
     }
 
@@ -445,6 +448,177 @@ fn prop_sim_conserves_tokens_across_policies() {
             let expected_requests: u64 =
                 scripts.iter().map(|s| 1 + s.steps.len() as u64).sum();
             assert_eq!(out.report.ttft.n, expected_requests);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Autoscale control plane: band bounds, purity, and the inert-path lock.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_autoscaled_fleet_never_leaves_its_band() {
+    // Randomized valid controller configs over an overloaded open loop:
+    // whatever the controller does, the realized fleet size stays inside
+    // [min_replicas, max_replicas] and every session still completes.
+    use agentserve::cluster::run_cluster_fast;
+    use agentserve::config::{AutoscaleConfig, RouterPolicy};
+    use agentserve::engine::Policy;
+    use agentserve::workload::Scenario;
+
+    let cfg = common::cfg();
+    for seed in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(11_000 + seed);
+        let min = 1 + (rng.next_u64() % 2) as usize;
+        let max = min + 1 + (rng.next_u64() % 3) as usize;
+        let up = 0.5 + rng.f64() * 3.5;
+        let sc = Scenario {
+            autoscale: Some(AutoscaleConfig {
+                interval_us: 200_000 + rng.next_u64() % 600_000,
+                min_replicas: min,
+                max_replicas: max,
+                up_thresh: up,
+                down_thresh: up / 4.0,
+                sustain_ticks: 1 + (rng.next_u64() % 3) as u32,
+                cooldown_us: rng.next_u64() % 5_000_000,
+                boot_us: 1 + rng.next_u64() % 3_000_000,
+            }),
+            ..common::open_loop("band-prop", 4.0, 60)
+        };
+        sc.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let router = RouterPolicy::ALL[(seed % 4) as usize];
+        let out = run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            &sc,
+            min,
+            router,
+            70 + seed,
+        )
+        .unwrap();
+        assert_eq!(
+            out.report.completed_sessions, 60,
+            "seed {seed}/{router}: scaling must never lose a session"
+        );
+        if let Some(a) = &out.report.autoscale {
+            assert!(
+                a.peak_replicas <= max,
+                "seed {seed}/{router}: peak {} exceeded the ceiling {max}",
+                a.peak_replicas
+            );
+            assert!(
+                (min..=max).contains(&a.final_replicas),
+                "seed {seed}/{router}: final size {} left the band [{min}, {max}]",
+                a.final_replicas
+            );
+            assert!(
+                a.time_at_size_us.len() <= max + 1,
+                "seed {seed}/{router}: time was accounted at a size above the ceiling"
+            );
+            assert!(a.replica_us > 0, "seed {seed}/{router}: the GPU-time integral is live");
+        }
+    }
+}
+
+#[test]
+fn prop_fleet_size_is_a_pure_function_of_seed_scenario_config() {
+    // The controller holds no hidden state: reruns of one
+    // (config, scenario, seed) tuple reproduce the whole report — including
+    // the realized size trajectory — byte-for-byte, and a different seed
+    // actually changes the run.
+    use agentserve::cluster::run_cluster_fast;
+    use agentserve::config::RouterPolicy;
+    use agentserve::engine::Policy;
+    use agentserve::workload::Scenario;
+
+    let cfg = common::cfg();
+    let sc = Scenario::by_name("diurnal-burst").unwrap();
+    let run = |seed| {
+        run_cluster_fast(
+            &cfg,
+            Policy::AgentServe(Default::default()),
+            &sc,
+            1,
+            RouterPolicy::LeastOutstanding,
+            seed,
+        )
+        .unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(
+        a.report.to_value().to_string(),
+        b.report.to_value().to_string(),
+        "same (scenario, seed) must reproduce the autoscaled run byte-for-byte"
+    );
+    let sa = a.report.autoscale.as_ref().expect("diurnal bursts drive the controller");
+    let sb = b.report.autoscale.as_ref().unwrap();
+    assert_eq!(sa.time_at_size_us, sb.time_at_size_us, "identical size trajectory");
+    assert_eq!(sa.replica_us, sb.replica_us);
+    let c = run(8);
+    assert_ne!(
+        a.report.to_value().to_string(),
+        c.report.to_value().to_string(),
+        "a different seed must change the workload"
+    );
+}
+
+#[test]
+fn prop_never_triggering_thresholds_match_the_static_fleet_bytes() {
+    // The inert-path lock: an absent config, the inert default
+    // (interval 0), and an active-but-never-triggering band (unreachable
+    // up_thresh, strict `< 0` down_thresh) must all produce byte-identical
+    // static-fleet reports under every router — and the never-triggering
+    // run must not emit an autoscale block.
+    use agentserve::cluster::run_cluster_fast;
+    use agentserve::config::{AutoscaleConfig, RouterPolicy};
+    use agentserve::engine::Policy;
+    use agentserve::workload::Scenario;
+
+    let cfg = common::cfg();
+    let plain = Scenario::by_name("mixed-fleet").unwrap();
+    let lockstep = Scenario {
+        autoscale: Some(AutoscaleConfig {
+            up_thresh: 1e12,
+            down_thresh: 0.0,
+            ..AutoscaleConfig::banded(1, 4)
+        }),
+        ..plain.clone()
+    };
+    lockstep.validate().unwrap();
+    let inert = Scenario { autoscale: Some(AutoscaleConfig::default()), ..plain.clone() };
+    inert.validate().unwrap();
+    for router in RouterPolicy::ALL {
+        for replicas in [1usize, 2] {
+            let run = |sc: &Scenario| {
+                run_cluster_fast(
+                    &cfg,
+                    Policy::AgentServe(Default::default()),
+                    sc,
+                    replicas,
+                    router,
+                    7,
+                )
+                .unwrap()
+            };
+            let a = run(&plain);
+            let b = run(&lockstep);
+            let c = run(&inert);
+            let tag = format!("{router}/{replicas} replicas");
+            assert!(
+                b.report.autoscale.is_none(),
+                "{tag}: a controller that never acts must not report stats"
+            );
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{tag}: never-triggering thresholds must not perturb a single byte"
+            );
+            assert_eq!(
+                a.report.to_value().to_string(),
+                c.report.to_value().to_string(),
+                "{tag}: the inert default must take the exact legacy path"
+            );
         }
     }
 }

@@ -4,29 +4,15 @@
 //! blocking sanity), the agent-count axis really scales the fleet, and the
 //! CSV form stays in lock-step with the JSON form.
 
-use agentserve::config::{Config, GpuKind, ModelKind};
 use agentserve::engine::{run_scenario_fast, Policy};
-use agentserve::workload::{
-    run_sweep, ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
-};
+use agentserve::workload::{run_sweep, Scenario, SweepAxis, SweepSpec};
 
-fn cfg() -> Config {
-    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
-}
+mod common;
+use common::cfg;
 
 /// Small open-loop ReAct fleet (kept tiny so the suite stays fast).
 fn small_open_loop(sessions: usize) -> Scenario {
-    Scenario {
-        name: "sweep-test-fleet".into(),
-        description: "open-loop ReAct fleet for sweep tests".into(),
-        arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
-        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-        total_sessions: sessions,
-        n_agents: sessions,
-        kv: None,
-        workflow: None,
-        chaos: None,
-    }
+    common::open_loop("sweep-test-fleet", 1.0, sessions)
 }
 
 #[test]

@@ -4,25 +4,13 @@
 //! under every paper policy, dependency-driven arrival ordering, radix
 //! prefix sharing across fan-out, and the fan-out sweep axis.
 
-use agentserve::config::{Config, GpuKind, KvConfig, ModelKind};
+use agentserve::config::KvConfig;
 use agentserve::engine::{run_scenario, Policy};
-use agentserve::workflow::{compile, WorkflowLoad, WorkflowSpec};
-use agentserve::workload::{
-    run_sweep, ArrivalProcess, Population, Scenario, SweepAxis, SweepSpec, WorkloadKind,
-};
+use agentserve::workflow::compile;
+use agentserve::workload::{run_sweep, SweepAxis, SweepSpec};
 
-fn cfg() -> Config {
-    Config::preset(ModelKind::Qwen3B, GpuKind::A5000)
-}
-
-/// Open-loop carrier releasing `tasks` instances of a registry workflow.
-fn wf_scenario(spec_name: &str, tasks: usize, rate: f64) -> Scenario {
-    Scenario {
-        name: format!("wf-{spec_name}"),
-        ..WorkflowLoad::new(WorkflowSpec::by_name(spec_name).expect("registry workflow"))
-            .carrier(tasks, rate)
-    }
-}
+mod common;
+use common::{cfg, wf_scenario};
 
 #[test]
 fn workflow_runs_are_byte_deterministic() {
@@ -52,17 +40,7 @@ fn degenerate_single_react_matches_legacy_byte_identically() {
     let cfg = cfg();
     let tasks = 8;
     let wf = wf_scenario("single-react", tasks, 1.0);
-    let legacy = Scenario {
-        name: "wf-single-react".into(),
-        description: String::new(),
-        arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
-        populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
-        total_sessions: tasks,
-        n_agents: tasks,
-        kv: None,
-        workflow: None,
-        chaos: None,
-    };
+    let legacy = common::open_loop("wf-single-react", 1.0, tasks);
     for policy in Policy::paper_lineup() {
         let a = run_scenario(&cfg, policy, &wf, 7);
         let b = run_scenario(&cfg, policy, &legacy, 7);
