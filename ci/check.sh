@@ -3,6 +3,7 @@
 #
 #   ./ci/check.sh            # fmt (hard) + clippy (hard) + build + rustdoc
 #                            #   + tests + scenario/record-replay/sweep smokes
+#                            #   + parallel-determinism + bench-gate smokes
 #
 # Every PR must leave this green; .github/workflows/ci.yml runs it with
 # CI=1 on every push/PR to main. The golden-report snapshot
@@ -14,9 +15,33 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+# Each step prints the wall-clock of the one before it, so a wedged or
+# slow-growing step is visible straight from the CI log.
+step_name=""
+step_start=$SECONDS
 step() {
+    if [ -n "$step_name" ]; then
+        echo "--- ${step_name}: $((SECONDS - step_start))s ---"
+    fi
+    step_name="$1"
+    step_start=$SECONDS
     echo ""
     echo "=== $1 ==="
+}
+
+# Determinism smoke: run the same command twice, require byte-identical
+# stdout, and check a marker string appears in the output.
+#   rerun_stable <tag> <marker> <command...>
+rerun_stable() {
+    local tag="$1" marker="$2"
+    shift 2
+    "$@" > "$tmp/$tag.1.txt"
+    "$@" > "$tmp/$tag.2.txt"
+    cmp "$tmp/$tag.1.txt" "$tmp/$tag.2.txt"
+    grep -q "$marker" "$tmp/$tag.1.txt"
 }
 
 step "Format check"
@@ -65,8 +90,6 @@ step "Scenario smoke (paper-fig5 under the default policy)"
 cargo run --release --bin agentserve -- scenario run --name paper-fig5 --model 3b
 
 step "Scenario record/replay smoke"
-tmp="$(mktemp -d)"
-trap 'rm -rf "$tmp"' EXIT
 cargo run --release --bin agentserve -- \
     scenario record --name burst-storm --model 3b --out "$tmp/burst.jsonl"
 cargo run --release --bin agentserve -- \
@@ -77,6 +100,62 @@ cargo run --release --bin agentserve -- \
     scenario sweep --scenario open-loop-sweep --rates 0.25,0.5,1 \
     --policy agentserve --model 3b --out "$tmp/sweep.json" --csv "$tmp/sweep.csv"
 [ -s "$tmp/sweep.json" ] && [ -s "$tmp/sweep.csv" ]
+
+step "Parallel sweep determinism (mix-shift at --threads 1 vs --threads 4)"
+cargo run --release --bin agentserve -- \
+    scenario sweep --name mix-shift --model 3b --threads 1 \
+    --out "$tmp/mix-t1.json" --csv "$tmp/mix-t1.csv"
+cargo run --release --bin agentserve -- \
+    scenario sweep --name mix-shift --model 3b --threads 4 \
+    --out "$tmp/mix-t4.json" --csv "$tmp/mix-t4.csv"
+# The worker pool must be invisible in the artifacts: byte-for-byte.
+cmp "$tmp/mix-t1.json" "$tmp/mix-t4.json"
+cmp "$tmp/mix-t1.csv" "$tmp/mix-t4.csv"
+
+step "Experiment manifest smoke (example manifest, parallel vs serial)"
+cargo run --release --bin agentserve -- experiment example > "$tmp/manifest.json"
+cargo run --release --bin agentserve -- \
+    experiment run --file "$tmp/manifest.json" --model 3b --threads 4 \
+    --out "$tmp/exp-t4.json" --csv "$tmp/exp-t4.csv"
+cargo run --release --bin agentserve -- \
+    experiment run --file "$tmp/manifest.json" --model 3b --threads 1 \
+    --out "$tmp/exp-t1.json" --csv "$tmp/exp-t1.csv"
+cmp "$tmp/exp-t1.json" "$tmp/exp-t4.json"
+cmp "$tmp/exp-t1.csv" "$tmp/exp-t4.csv"
+grep -q '"overridden": true' "$tmp/exp-t4.json"
+
+step "Bench gate smoke (suite artifact + diff exit codes)"
+# One measured iteration keeps the smoke quick; the dedicated CI bench-gate
+# job runs the full default and uploads BENCH_<ref>.json as an artifact.
+AGENTSERVE_BENCH_ITERS=1 cargo run --release --bin agentserve -- \
+    bench suite --model 3b --label ci-smoke --out "$tmp/BENCH_ci.json"
+[ -s "$tmp/BENCH_ci.json" ]
+grep -q '"schema": "agentserve-bench-v1"' "$tmp/BENCH_ci.json"
+# Self-diff must pass (identical metrics, identical wall-clock)…
+cargo run --release --bin agentserve -- \
+    bench diff "$tmp/BENCH_ci.json" "$tmp/BENCH_ci.json"
+# …and a fabricated regression must fail the gate with a non-zero exit.
+cat > "$tmp/BENCH_base.json" <<'JSON'
+{
+  "schema": "agentserve-bench-v1",
+  "label": "base", "model": "3b", "gpu": "a5000", "threads": 1, "iters": 1,
+  "points": [{"name": "sweep/x", "wall_ms": 100.0, "min_ms": 100.0,
+              "metrics": {"slo_rate": 0.95}}]
+}
+JSON
+cat > "$tmp/BENCH_bad.json" <<'JSON'
+{
+  "schema": "agentserve-bench-v1",
+  "label": "bad", "model": "3b", "gpu": "a5000", "threads": 1, "iters": 1,
+  "points": [{"name": "sweep/x", "wall_ms": 100.0, "min_ms": 100.0,
+              "metrics": {"slo_rate": 0.50}}]
+}
+JSON
+if cargo run --release --bin agentserve -- \
+    bench diff "$tmp/BENCH_base.json" "$tmp/BENCH_bad.json" >/dev/null 2>&1; then
+    echo "ERROR: bench diff accepted an SLO-rate regression" >&2
+    exit 1
+fi
 
 step "KV sweep smoke (memory axis: constrained vs ample pool)"
 cargo run --release --bin agentserve -- \
@@ -119,15 +198,9 @@ if grep -q '"knee": null' "$tmp/fleet.json"; then
 fi
 
 step "Chaos smoke (failure-storm: seeded crashes + flaky tools, rerun-stable)"
-cargo run --release --bin agentserve -- \
+rerun_stable storm chaos cargo run --release --bin agentserve -- \
     cluster run --name failure-storm --replicas 3 --model 3b \
-    --router cache-aware > "$tmp/storm1.txt"
-cargo run --release --bin agentserve -- \
-    cluster run --name failure-storm --replicas 3 --model 3b \
-    --router cache-aware > "$tmp/storm2.txt"
-# Chaos runs are deterministic: two invocations, identical bytes out.
-cmp "$tmp/storm1.txt" "$tmp/storm2.txt"
-grep -q 'chaos' "$tmp/storm1.txt"
+    --router cache-aware
 
 step "Chaos sweep smoke (3-point crash-rate grid on a 2-GPU fleet)"
 cargo run --release --bin agentserve -- \
@@ -137,15 +210,9 @@ cargo run --release --bin agentserve -- \
 grep -q '"axis": "chaos"' "$tmp/chaos.json"
 
 step "Autoscale smoke (diurnal-burst control plane, rerun-stable)"
-cargo run --release --bin agentserve -- \
+rerun_stable auto autoscale cargo run --release --bin agentserve -- \
     cluster run --name diurnal-burst --autoscale --min-replicas 1 \
-    --max-replicas 4 --model 3b > "$tmp/auto1.txt"
-cargo run --release --bin agentserve -- \
-    cluster run --name diurnal-burst --autoscale --min-replicas 1 \
-    --max-replicas 4 --model 3b > "$tmp/auto2.txt"
-# The control loop is deterministic: two invocations, identical bytes out.
-cmp "$tmp/auto1.txt" "$tmp/auto2.txt"
-grep -q 'autoscale' "$tmp/auto1.txt"
+    --max-replicas 4 --model 3b
 
 step "Autoscale frontier sweep smoke (3-point up-thresh grid, cost column)"
 cargo run --release --bin agentserve -- \
@@ -156,4 +223,5 @@ grep -q '"axis": "autoscale"' "$tmp/frontier.json"
 grep -q 'replica_us' "$tmp/frontier.csv"
 
 echo ""
-echo "ci/check.sh: all green"
+echo "--- ${step_name}: $((SECONDS - step_start))s ---"
+echo "ci/check.sh: all green (total ${SECONDS}s)"

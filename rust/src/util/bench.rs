@@ -1,15 +1,28 @@
-//! Benchmark harness for `cargo bench` (criterion is unavailable offline).
+//! Benchmark harness for `cargo bench` (criterion is unavailable offline),
+//! plus the `BENCH_*.json` artifact + diff tooling behind the CI perf gate.
 //!
 //! [`Bench`] runs closures with warmup, collects per-iteration wall times,
 //! and reports min/median/p95/mean — enough to compare policies and track
 //! hot-path regressions. `cargo bench` targets use `harness = false` and
 //! call this directly from `main`.
 //!
+//! Every timing number in the repo flows through **one** code path —
+//! [`sample`] (warmup + measured loop) into [`summarize`] (quantiles) —
+//! whether it lands in a `cargo bench` table or a `BENCH_*.json` artifact
+//! (`agentserve bench suite`), so the two can never drift apart.
 //! Quantiles come from [`crate::metrics::percentile`] so bench numbers and
 //! report numbers agree on what "median" and "p95" mean (linear
 //! interpolation, not index truncation).
+//!
+//! The artifact side: [`BenchReport`] (wall-clock per point + headline
+//! deterministic SLO metrics) serializes to `BENCH_*.json`; [`diff_reports`]
+//! compares two artifacts with direction-aware, per-metric tolerances and
+//! is the engine behind `agentserve bench diff A.json B.json` — the CI job
+//! that fails the build on a perf regression.
 
 use crate::metrics::percentile;
+use crate::util::json::Value;
+use std::path::Path;
 use std::time::Instant;
 
 /// One benchmark group.
@@ -30,6 +43,37 @@ pub struct BenchResult {
     pub median_us: f64,
     pub p95_us: f64,
     pub mean_us: f64,
+}
+
+/// The one sampling loop: `warmup` unmeasured runs, then `measure` timed
+/// runs, returning the per-iteration wall times in microseconds. Both the
+/// `cargo bench` tables ([`Bench::case`]) and the CI artifact suite feed
+/// these samples to [`summarize`].
+pub fn sample<T>(warmup: u32, measure: u32, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(measure as usize);
+    for _ in 0..measure {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    samples
+}
+
+/// Collapse raw per-iteration samples (µs) into a [`BenchResult`] using the
+/// metrics layer's percentile definition. Panics on an empty slice — a
+/// bench with zero measured iterations is a harness bug, not a data point.
+pub fn summarize(samples: &[f64]) -> BenchResult {
+    assert!(!samples.is_empty(), "summarize() needs at least one sample");
+    BenchResult {
+        iters: samples.len() as u32,
+        min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        median_us: percentile(samples, 50.0),
+        p95_us: percentile(samples, 95.0),
+        mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
 }
 
 impl Bench {
@@ -57,25 +101,17 @@ impl Bench {
         self
     }
 
+    /// The effective `(warmup, measure)` counts after env resolution — the
+    /// suite runner reads these so `BENCH_*.json` honors the same knobs as
+    /// the bench tables.
+    pub fn iters(&self) -> (u32, u32) {
+        (self.warmup_iters, self.measure_iters)
+    }
+
     /// Run one case; the closure's return value is black-boxed.
-    pub fn case<T>(&self, label: &str, mut f: impl FnMut() -> T) -> BenchResult {
-        for _ in 0..self.warmup_iters {
-            std::hint::black_box(f());
-        }
-        let mut samples = Vec::with_capacity(self.measure_iters as usize);
-        for _ in 0..self.measure_iters {
-            let t = Instant::now();
-            std::hint::black_box(f());
-            samples.push(t.elapsed().as_secs_f64() * 1e6);
-        }
-        let n = samples.len();
-        let result = BenchResult {
-            iters: self.measure_iters,
-            min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
-            median_us: percentile(&samples, 50.0),
-            p95_us: percentile(&samples, 95.0),
-            mean_us: samples.iter().sum::<f64>() / n as f64,
-        };
+    pub fn case<T>(&self, label: &str, f: impl FnMut() -> T) -> BenchResult {
+        let samples = sample(self.warmup_iters, self.measure_iters, f);
+        let result = summarize(&samples);
         println!(
             "{:<40} min {:>10.1} us   median {:>10.1} us   p95 {:>10.1} us",
             format!("{}/{label}", self.name),
@@ -85,6 +121,250 @@ impl Bench {
         );
         result
     }
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_*.json artifacts and the regression diff.
+// ---------------------------------------------------------------------------
+
+/// Artifact schema tag; bump when the layout changes incompatibly.
+const BENCH_SCHEMA: &str = "agentserve-bench-v1";
+
+/// One named row of a bench artifact: wall-clock timing plus the headline
+/// *deterministic* SLO metrics of whatever the row ran (seeded sim results
+/// — identical across machines; only `wall_ms`/`min_ms` carry noise).
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub name: String,
+    /// Median wall-clock of the measured runs, milliseconds.
+    pub wall_ms: f64,
+    /// Fastest measured run, milliseconds (the stabler number on noisy
+    /// runners; the diff judges `wall_ms` but prints both).
+    pub min_ms: f64,
+    /// `(metric name, value)` pairs in emission order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// A `BENCH_*.json` artifact: one run of the bench suite on one machine.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Free-form label (CI passes the PR/sha identifier).
+    pub label: String,
+    pub model: String,
+    pub gpu: String,
+    /// Worker-pool width the suite ran with (affects wall-clock only).
+    pub threads: usize,
+    /// Measured iterations per point.
+    pub iters: u32,
+    pub points: Vec<BenchPoint>,
+}
+
+impl BenchReport {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("schema", BENCH_SCHEMA.into()),
+            ("label", self.label.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("gpu", self.gpu.as_str().into()),
+            ("threads", self.threads.into()),
+            ("iters", self.iters.into()),
+            (
+                "points",
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                ("name", p.name.as_str().into()),
+                                ("wall_ms", p.wall_ms.into()),
+                                ("min_ms", p.min_ms.into()),
+                                (
+                                    "metrics",
+                                    Value::Obj(
+                                        p.metrics
+                                            .iter()
+                                            .map(|(k, v)| (k.clone(), (*v).into()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let schema = v.req_str("schema")?;
+        anyhow::ensure!(
+            schema == BENCH_SCHEMA,
+            "unsupported bench artifact schema '{schema}' (expected {BENCH_SCHEMA})"
+        );
+        let points = v
+            .req_arr("points")?
+            .iter()
+            .map(|p| {
+                let metrics = match p.req("metrics")? {
+                    Value::Obj(pairs) => pairs
+                        .iter()
+                        .map(|(k, val)| {
+                            val.as_f64()
+                                .map(|x| (k.clone(), x))
+                                .ok_or_else(|| anyhow::anyhow!("metric '{k}' is not a number"))
+                        })
+                        .collect::<crate::Result<Vec<_>>>()?,
+                    _ => anyhow::bail!("bench point 'metrics' must be an object"),
+                };
+                Ok(BenchPoint {
+                    name: p.req_str("name")?.to_string(),
+                    wall_ms: p.req_f64("wall_ms")?,
+                    min_ms: p.req_f64("min_ms")?,
+                    metrics,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(BenchReport {
+            label: v.req_str("label")?.to_string(),
+            model: v.req_str("model")?.to_string(),
+            gpu: v.req_str("gpu")?.to_string(),
+            threads: v.req_usize("threads")?,
+            iters: v.req_f64("iters")? as u32,
+            points,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_value().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("cannot read bench artifact '{}': {e}", path.as_ref().display())
+        })?;
+        Self::from_value(&crate::util::json::parse(&text)?)
+    }
+}
+
+/// Whether a larger value of the named metric is a regression. Throughput-
+/// style metrics regress downward; latency/counter-style metrics upward.
+fn higher_is_better(metric: &str) -> bool {
+    matches!(
+        metric,
+        "slo_rate" | "task_slo_rate" | "throughput_tok_s" | "radix_hit_rate" | "completed" | "knee"
+    )
+}
+
+/// One regression found by [`diff_reports`].
+#[derive(Debug, Clone)]
+pub struct BenchRegression {
+    pub point: String,
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+}
+
+/// The outcome of comparing two bench artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    /// Printable per-point comparison lines (old → new wall, delta %).
+    pub rows: Vec<String>,
+    /// Everything beyond tolerance — non-empty means the gate fails.
+    pub regressions: Vec<BenchRegression>,
+    /// Points present only in the new artifact (informational).
+    pub only_in_new: Vec<String>,
+}
+
+/// Compare two bench artifacts. `wall_tol` is the fractional wall-clock
+/// slack (0.5 = new may be up to 50% slower — CI runners are noisy);
+/// `metric_tol` is the slack on the deterministic SLO metrics (default 0:
+/// seeded sim results must not move at all without an intentional,
+/// baseline-regenerating change). A point that *vanished* from the new
+/// artifact is a regression too — a silently dropped bench can hide one.
+pub fn diff_reports(
+    old: &BenchReport,
+    new: &BenchReport,
+    wall_tol: f64,
+    metric_tol: f64,
+) -> crate::Result<BenchDiff> {
+    anyhow::ensure!(
+        old.model == new.model && old.gpu == new.gpu,
+        "bench artifacts model different hardware ({}/{} vs {}/{}) — not comparable",
+        old.model,
+        old.gpu,
+        new.model,
+        new.gpu
+    );
+    let mut diff = BenchDiff::default();
+    for op in &old.points {
+        let Some(np) = new.points.iter().find(|p| p.name == op.name) else {
+            diff.rows.push(format!("{:<32} MISSING from new artifact", op.name));
+            diff.regressions.push(BenchRegression {
+                point: op.name.clone(),
+                metric: "(point missing)".into(),
+                old: op.wall_ms,
+                new: f64::NAN,
+            });
+            continue;
+        };
+        let delta_pct = if op.wall_ms > 0.0 {
+            (np.wall_ms - op.wall_ms) / op.wall_ms * 100.0
+        } else {
+            0.0
+        };
+        let wall_bad = np.wall_ms > op.wall_ms * (1.0 + wall_tol);
+        diff.rows.push(format!(
+            "{:<32} wall {:>9.1} -> {:>9.1} ms ({:>+6.1}%){}",
+            op.name,
+            op.wall_ms,
+            np.wall_ms,
+            delta_pct,
+            if wall_bad { "  REGRESSION" } else { "" }
+        ));
+        if wall_bad {
+            diff.regressions.push(BenchRegression {
+                point: op.name.clone(),
+                metric: "wall_ms".into(),
+                old: op.wall_ms,
+                new: np.wall_ms,
+            });
+        }
+        for (metric, ov) in &op.metrics {
+            let Some((_, nv)) = np.metrics.iter().find(|(m, _)| m == metric) else {
+                diff.regressions.push(BenchRegression {
+                    point: op.name.clone(),
+                    metric: format!("{metric} (vanished)"),
+                    old: *ov,
+                    new: f64::NAN,
+                });
+                continue;
+            };
+            let worse = if higher_is_better(metric) {
+                *nv < ov - ov.abs() * metric_tol
+            } else {
+                *nv > ov + ov.abs() * metric_tol
+            };
+            if worse {
+                diff.rows.push(format!(
+                    "{:<32}   {metric}: {ov} -> {nv}  REGRESSION",
+                    op.name
+                ));
+                diff.regressions.push(BenchRegression {
+                    point: op.name.clone(),
+                    metric: metric.clone(),
+                    old: *ov,
+                    new: *nv,
+                });
+            }
+        }
+    }
+    for np in &new.points {
+        if !old.points.iter().any(|p| p.name == np.name) {
+            diff.only_in_new.push(np.name.clone());
+        }
+    }
+    Ok(diff)
 }
 
 #[cfg(test)]
@@ -118,6 +398,7 @@ mod tests {
         let b = b.with_iters(1, 5);
         assert_eq!(b.measure_iters, 5);
         assert_eq!(b.warmup_iters, 1);
+        assert_eq!(b.iters(), (1, 5));
     }
 
     #[test]
@@ -143,5 +424,97 @@ mod tests {
         let samples = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&samples, 50.0), 2.5);
         assert!((percentile(&samples, 95.0) - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_and_summarize_share_one_path() {
+        // The satellite bugfix lock: Bench::case must report exactly
+        // summarize(sample(...)) — no second percentile/warm-up code path.
+        let r = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.iters, 4);
+        assert_eq!(r.min_us, 1.0);
+        assert_eq!(r.median_us, percentile(&[1.0, 2.0, 3.0, 4.0], 50.0));
+        assert_eq!(r.p95_us, percentile(&[1.0, 2.0, 3.0, 4.0], 95.0));
+        assert_eq!(r.mean_us, 2.5);
+        let n = std::cell::Cell::new(0u32);
+        let samples = sample(2, 3, || n.set(n.get() + 1));
+        assert_eq!(n.get(), 5, "2 warmup + 3 measured");
+        assert_eq!(samples.len(), 3, "only measured runs produce samples");
+    }
+
+    fn report(wall: f64, slo: f64) -> BenchReport {
+        BenchReport {
+            label: "t".into(),
+            model: "m".into(),
+            gpu: "g".into(),
+            threads: 4,
+            iters: 1,
+            points: vec![BenchPoint {
+                name: "sweep/x".into(),
+                wall_ms: wall,
+                min_ms: wall,
+                metrics: vec![("slo_rate".into(), slo), ("ttft_p99_ms".into(), 100.0)],
+            }],
+        }
+    }
+
+    #[test]
+    fn artifact_round_trips_through_json() {
+        let r = report(123.4, 0.97);
+        let text = r.to_value().to_string_pretty();
+        let back = BenchReport::from_value(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.label, "t");
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.points.len(), 1);
+        assert_eq!(back.points[0].wall_ms, 123.4);
+        assert_eq!(back.points[0].metrics, r.points[0].metrics);
+        // Wrong schema refuses.
+        let bad = text.replace(BENCH_SCHEMA, "agentserve-bench-v999");
+        assert!(BenchReport::from_value(&crate::util::json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn diff_judges_wall_clock_with_tolerance() {
+        let old = report(100.0, 0.9);
+        // 20% slower: inside a 50% tolerance, outside a 10% one.
+        let new = report(120.0, 0.9);
+        assert!(diff_reports(&old, &new, 0.5, 0.0).unwrap().regressions.is_empty());
+        let d = diff_reports(&old, &new, 0.1, 0.0).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "wall_ms");
+        // Faster is never a regression.
+        assert!(diff_reports(&old, &report(10.0, 0.9), 0.0, 0.0).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn diff_judges_metrics_by_direction() {
+        let old = report(100.0, 0.9);
+        // slo_rate is higher-is-better: a drop regresses even at wall par.
+        let d = diff_reports(&old, &report(100.0, 0.8), 0.5, 0.0).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "slo_rate");
+        // A rise does not.
+        assert!(diff_reports(&old, &report(100.0, 0.99), 0.5, 0.0).unwrap().regressions.is_empty());
+        // ttft_p99_ms is lower-is-better: a rise regresses.
+        let mut worse = report(100.0, 0.9);
+        worse.points[0].metrics[1].1 = 150.0;
+        let d = diff_reports(&old, &worse, 0.5, 0.0).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "ttft_p99_ms");
+        // ...but survives a 60% metric tolerance.
+        assert!(diff_reports(&old, &worse, 0.5, 0.6).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn diff_flags_vanished_points_and_hardware_mismatch() {
+        let old = report(100.0, 0.9);
+        let mut renamed = report(100.0, 0.9);
+        renamed.points[0].name = "sweep/y".into();
+        let d = diff_reports(&old, &renamed, 0.5, 0.0).unwrap();
+        assert_eq!(d.regressions.len(), 1, "a vanished point is a regression");
+        assert_eq!(d.only_in_new, vec!["sweep/y".to_string()]);
+        let mut other_gpu = report(100.0, 0.9);
+        other_gpu.gpu = "h100".into();
+        assert!(diff_reports(&old, &other_gpu, 0.5, 0.0).is_err(), "hardware must match");
     }
 }

@@ -5,11 +5,14 @@ use std::collections::BTreeMap;
 
 /// Parsed command line: a subcommand, an optional action (second
 /// positional, used by grouped subcommands like `scenario run|record|
-/// replay|list`), plus `--key value` / `--switch` flags.
+/// replay|list`), any further positionals (third onward — operands of
+/// actions like `bench diff A.json B.json`), plus `--key value` /
+/// `--switch` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
     pub action: Option<String>,
+    rest: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
@@ -35,7 +38,9 @@ impl Args {
             } else if out.action.is_none() {
                 out.action = Some(arg);
             } else {
-                anyhow::bail!("unexpected positional argument '{arg}'");
+                // Operand positionals; each command decides whether it
+                // accepts any (the server layer rejects strays loudly).
+                out.rest.push(arg);
             }
         }
         Ok(out)
@@ -47,6 +52,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Positionals after the action (`bench diff A.json B.json` → the two
+    /// paths). Empty for commands that take none.
+    pub fn rest(&self) -> &[String] {
+        &self.rest
     }
 
     pub fn has(&self, switch: &str) -> bool {
@@ -156,8 +167,14 @@ mod tests {
     }
 
     #[test]
-    fn triple_positional_rejected() {
-        assert!(Args::parse(["a", "b", "c"].map(String::from)).is_err());
+    fn operand_positionals_collect_in_order() {
+        let a = parse("bench diff old.json new.json --tolerance 0.5");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.action.as_deref(), Some("diff"));
+        assert_eq!(a.rest(), ["old.json".to_string(), "new.json".to_string()]);
+        assert_eq!(a.get("tolerance"), Some("0.5"));
+        let b = parse("scenario run --name paper-fig5");
+        assert!(b.rest().is_empty());
     }
 
     #[test]

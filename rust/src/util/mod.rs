@@ -9,9 +9,13 @@
 //!   beta sampling for the workload generator and property tests.
 //! - [`cli`] — a small `--flag value` argument parser for the launcher.
 //! - [`bench`] — the micro/macro benchmark harness used by `cargo bench`
-//!   (median-of-runs timing with warmup, criterion-style reporting).
+//!   (median-of-runs timing with warmup, criterion-style reporting) plus
+//!   the `BENCH_*.json` artifact + diff tooling behind the CI perf gate.
+//! - [`pool`] — the deterministic indexed worker pool that parallelizes
+//!   sweep/experiment grids with a byte-identical merge.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;

@@ -1,0 +1,129 @@
+//! Deterministic indexed worker pool for sweep/experiment grids.
+//!
+//! Grid cells are pure functions of `(inputs, seed)`, so they can run on any
+//! thread in any order — determinism lives entirely in the *merge*:
+//! [`run_indexed`] hands out indices from a shared atomic counter, lets each
+//! worker collect `(index, result)` pairs locally, and re-assembles the
+//! results in index order after joining. The output vector is therefore
+//! byte-identical at any worker count, and `threads == 1` short-circuits to
+//! a plain serial loop — the exact legacy code path, same execution order,
+//! same early-exit-on-error behavior.
+//!
+//! Error determinism: the parallel path runs every index to completion and
+//! then reports the *lowest-indexed* error, which is the same error the
+//! serial path stops at. Callers see one deterministic `Err` either way.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve the worker count for grid execution: an explicit `--threads`
+/// value wins, then the `AGENTSERVE_SWEEP_THREADS` env var, then the
+/// machine's available parallelism (falling back to 1 where that is
+/// unknowable). Invalid values refuse loudly rather than degrade silently.
+pub fn grid_threads(cli: Option<usize>) -> crate::Result<usize> {
+    if let Some(t) = cli {
+        anyhow::ensure!(t >= 1, "--threads must be >= 1 (got {t})");
+        return Ok(t);
+    }
+    if let Ok(raw) = std::env::var("AGENTSERVE_SWEEP_THREADS") {
+        let t: usize = raw.trim().parse().map_err(|_| {
+            anyhow::anyhow!("AGENTSERVE_SWEEP_THREADS must be a positive integer (got '{raw}')")
+        })?;
+        anyhow::ensure!(t >= 1, "AGENTSERVE_SWEEP_THREADS must be >= 1 (got {t})");
+        return Ok(t);
+    }
+    Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Run `job(0)..job(n-1)` across `threads` scoped workers and return the
+/// results **in index order**, or the lowest-indexed error.
+pub fn run_indexed<T, F>(n: usize, threads: usize, job: F) -> crate::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> crate::Result<T> + Sync,
+{
+    anyhow::ensure!(threads >= 1, "worker pool needs >= 1 thread (got {threads})");
+    if threads == 1 || n <= 1 {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(job(i)?);
+        }
+        return Ok(out);
+    }
+    let workers = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<crate::Result<T>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, job(i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("grid worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("counter hands every index to exactly one worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_merge_matches_serial_order() {
+        let serial = run_indexed(64, 1, |i| Ok(i * i)).unwrap();
+        for threads in [2, 3, 4, 16, 100] {
+            let par = run_indexed(64, threads, |i| Ok(i * i)).unwrap();
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_grids_work_at_any_width() {
+        for threads in [1, 4] {
+            assert_eq!(run_indexed(0, threads, |i| Ok(i + 1)).unwrap(), vec![]);
+            assert_eq!(run_indexed(1, threads, |i| Ok(i + 10)).unwrap(), vec![10]);
+        }
+    }
+
+    #[test]
+    fn lowest_indexed_error_wins_at_any_width() {
+        for threads in [1, 2, 8] {
+            let err = run_indexed(32, threads, |i| {
+                anyhow::ensure!(i % 10 != 7, "boom at {i}");
+                Ok(i)
+            })
+            .unwrap_err();
+            assert!(err.to_string().contains("boom at 7"), "threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn zero_threads_refused() {
+        assert!(run_indexed(4, 0, |i| Ok(i + 1)).is_err());
+        assert!(grid_threads(Some(0)).is_err());
+    }
+
+    #[test]
+    fn explicit_thread_count_wins() {
+        assert_eq!(grid_threads(Some(3)).unwrap(), 3);
+        // No CLI value: resolves to *something* >= 1 (env or detected).
+        assert!(grid_threads(None).unwrap() >= 1);
+    }
+}

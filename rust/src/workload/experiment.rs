@@ -1,0 +1,923 @@
+//! Experiment manifests: declarative multi-axis grids from a JSON file.
+//!
+//! A [`super::SweepSpec`] drives one scenario across one axis; capacity
+//! planning wants the cross-product — rate × replicas × kv-blocks ×
+//! fan-out — with
+//! the odd cell pinned to a different value ("at rate 1.0 give the 1-GPU
+//! cell a second replica"). An [`ExperimentSpec`] describes exactly that as
+//! a checked-in JSON manifest (`agentserve experiment run --file …`;
+//! schema in `rust/src/workload/README.md`; JSON only — the offline build
+//! vendors no TOML parser):
+//!
+//! ```json
+//! {
+//!   "experiment": "rate-x-replicas",
+//!   "scenario": "mixed-fleet",
+//!   "policies": ["agentserve", "vllm"],
+//!   "grid": { "rate": [0.25, 0.5], "replicas": [1, 2, 4] },
+//!   "overrides": [ { "where": { "rate": 0.5, "replicas": 1 },
+//!                    "set": { "replicas": 2 } } ]
+//! }
+//! ```
+//!
+//! Cells are enumerated row-major in grid declaration order (the last
+//! declared axis varies fastest), seeded with the same per-index mixer as
+//! sweep points, and executed as `(cell, policy)` pairs over the
+//! [`crate::util::pool`] worker pool — the merged [`ExperimentReport`] is
+//! byte-identical at any worker count. Cells with a `replicas` coordinate
+//! run on the fleet path ([`crate::cluster::run_cluster_fast`]); all others
+//! on the single-GPU fast path. Rows reuse the sweep [`PolicyPoint`] schema
+//! so experiment artifacts diff cleanly against sweep artifacts.
+
+use super::scenario::{ArrivalProcess, Scenario};
+use super::sweep::PolicyPoint;
+use crate::config::{Config, KvConfig, RouterPolicy};
+use crate::engine::{run_scenario_fast, Policy};
+use crate::util::json::Value;
+use std::path::Path;
+
+/// The four grid axes an experiment may cross.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpAxis {
+    /// Open-loop Poisson arrival rate (req/s) — replaces the base
+    /// scenario's arrival process, like the sweep rate axis.
+    Rate,
+    /// Fleet size; presence of this axis routes the cell through the
+    /// cluster path (the value never touches the scenario bytes).
+    Replicas,
+    /// Bounded KV pool size in blocks (block size / sharing inherit from
+    /// the base scenario's `kv`, like the sweep kv axis).
+    KvBlocks,
+    /// Workflow fan-out degree (requires a workflow-carrying base).
+    FanOut,
+}
+
+impl ExpAxis {
+    pub const ALL: [ExpAxis; 4] =
+        [ExpAxis::Rate, ExpAxis::Replicas, ExpAxis::KvBlocks, ExpAxis::FanOut];
+
+    /// Manifest key / report column name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExpAxis::Rate => "rate",
+            ExpAxis::Replicas => "replicas",
+            ExpAxis::KvBlocks => "kv-blocks",
+            ExpAxis::FanOut => "fan-out",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<ExpAxis> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+}
+
+/// One declared axis: a name plus its grid values (in declaration order;
+/// unlike sweep grids they need not be monotone — there is no knee scan).
+#[derive(Debug, Clone)]
+pub struct ExperimentAxis {
+    pub axis: ExpAxis,
+    pub values: Vec<f64>,
+}
+
+/// A per-cell exception: every cell whose *grid* coordinates match all
+/// `when` entries gets the `set` values (and optionally a pinned seed)
+/// applied on top. Matching is against the original grid coordinates, so
+/// overrides never cascade.
+#[derive(Debug, Clone)]
+pub struct CellOverride {
+    pub when: Vec<(ExpAxis, f64)>,
+    pub set: Vec<(ExpAxis, f64)>,
+    pub seed: Option<u64>,
+}
+
+/// A declarative multi-axis experiment grid (see the module docs).
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub description: String,
+    pub base: Scenario,
+    pub policies: Vec<Policy>,
+    /// Fleet router for replica-bearing cells; `None` = the config's own.
+    pub router: Option<RouterPolicy>,
+    /// Manifest-level base seed; the CLI `--seed` flag overrides it.
+    pub seed: Option<u64>,
+    /// Axes in manifest declaration order; the cross-product is the grid.
+    pub axes: Vec<ExperimentAxis>,
+    pub overrides: Vec<CellOverride>,
+}
+
+fn parse_axis_name(key: &str) -> crate::Result<ExpAxis> {
+    ExpAxis::from_name(key).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown grid axis '{key}' (expected rate|replicas|kv-blocks|fan-out)"
+        )
+    })
+}
+
+/// Seeds may exceed 2^53, so manifests accept them as strings as well as
+/// integer numbers (mirroring how reports emit them).
+fn parse_seed(v: &Value, what: &str) -> crate::Result<u64> {
+    match v {
+        Value::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("{what} must be a u64 (got '{s}')")),
+        Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9.0e15 => Ok(*n as u64),
+        other => anyhow::bail!("{what} must be a non-negative integer or string (got {other:?})"),
+    }
+}
+
+/// Parse an axis-name → number object (`where` / `set` clauses).
+fn parse_axis_map(v: &Value, what: &str) -> crate::Result<Vec<(ExpAxis, f64)>> {
+    let Value::Obj(pairs) = v else {
+        anyhow::bail!("override '{what}' must be an object of axis: value pairs");
+    };
+    anyhow::ensure!(!pairs.is_empty(), "override '{what}' must not be empty");
+    let mut out = Vec::with_capacity(pairs.len());
+    for (k, val) in pairs {
+        let axis = parse_axis_name(k)?;
+        let num = val
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("override '{what}.{k}' must be a number"))?;
+        anyhow::ensure!(
+            !out.iter().any(|(a, _)| *a == axis),
+            "override '{what}' names axis '{k}' twice"
+        );
+        out.push((axis, num));
+    }
+    Ok(out)
+}
+
+impl ExperimentSpec {
+    /// Parse a manifest document. Unknown keys, unknown axes, duplicate
+    /// axes and malformed overrides are refused loudly — a typo'd manifest
+    /// must never silently run a different experiment.
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let Value::Obj(top) = v else {
+            anyhow::bail!("experiment manifest must be a JSON object");
+        };
+        const KNOWN: [&str; 8] = [
+            "experiment",
+            "description",
+            "scenario",
+            "policies",
+            "router",
+            "seed",
+            "grid",
+            "overrides",
+        ];
+        // "config" is read by the CLI layer (model/GPU overrides, like
+        // scenario files); everything else unknown is a refusal.
+        for (k, _) in top {
+            anyhow::ensure!(
+                KNOWN.contains(&k.as_str()) || k == "config",
+                "unknown manifest key '{k}' (expected one of: {}, config)",
+                KNOWN.join(", ")
+            );
+        }
+        let name = v.req_str("experiment")?.to_string();
+        let description =
+            v.get("description").and_then(|d| d.as_str()).unwrap_or_default().to_string();
+        let base = match v.req("scenario")? {
+            Value::Str(s) => Scenario::by_name(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown scenario '{s}' (see scenario list)"))?,
+            obj @ Value::Obj(_) => Scenario::from_value(obj)?,
+            _ => anyhow::bail!("\"scenario\" must be a registry name or an inline scenario object"),
+        };
+        let policies = match v.get("policies") {
+            None => Policy::paper_lineup(),
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("\"policies\" entries must be strings"))?
+                        .parse::<Policy>()
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+            Some(_) => anyhow::bail!("\"policies\" must be an array of policy names"),
+        };
+        let router = match v.get("router") {
+            None => None,
+            Some(r) => Some(
+                r.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("\"router\" must be a string"))?
+                    .parse::<RouterPolicy>()?,
+            ),
+        };
+        let seed = v.get("seed").map(|s| parse_seed(s, "manifest seed")).transpose()?;
+        let Some(Value::Obj(grid_pairs)) = v.get("grid") else {
+            anyhow::bail!("experiment manifest needs a \"grid\" object of axis: [values]");
+        };
+        let mut axes = Vec::with_capacity(grid_pairs.len());
+        for (key, vals) in grid_pairs {
+            let axis = parse_axis_name(key)?;
+            anyhow::ensure!(
+                !axes.iter().any(|a: &ExperimentAxis| a.axis == axis),
+                "grid declares axis '{key}' twice"
+            );
+            let values = vals
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("grid axis '{key}' must be an array of numbers"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("grid axis '{key}' values must be numbers"))
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+            axes.push(ExperimentAxis { axis, values });
+        }
+        let overrides = match v.get("overrides") {
+            None => Vec::new(),
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|ov| {
+                    if let Value::Obj(pairs) = ov {
+                        for (k, _) in pairs {
+                            anyhow::ensure!(
+                                matches!(k.as_str(), "where" | "set" | "seed"),
+                                "unknown override key '{k}' (expected where, set, seed)"
+                            );
+                        }
+                    }
+                    let when = parse_axis_map(ov.req("where")?, "where")?;
+                    let set = match ov.get("set") {
+                        None => Vec::new(),
+                        Some(s) => parse_axis_map(s, "set")?,
+                    };
+                    let seed =
+                        ov.get("seed").map(|s| parse_seed(s, "override seed")).transpose()?;
+                    Ok(CellOverride { when, set, seed })
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+            Some(_) => anyhow::bail!("\"overrides\" must be an array of override objects"),
+        };
+        Ok(ExperimentSpec { name, description, base, policies, router, seed, axes, overrides })
+    }
+
+    /// Structural sanity checks (run before execution / after parsing).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "experiment needs a name");
+        self.base.validate()?;
+        anyhow::ensure!(!self.policies.is_empty(), "experiment '{}' needs >= 1 policy", self.name);
+        anyhow::ensure!(
+            !self.axes.is_empty(),
+            "experiment '{}' needs at least one grid axis",
+            self.name
+        );
+        for (i, a) in self.axes.iter().enumerate() {
+            anyhow::ensure!(
+                !self.axes[..i].iter().any(|b| b.axis == a.axis),
+                "experiment '{}' declares axis '{}' twice",
+                self.name,
+                a.axis.name()
+            );
+            anyhow::ensure!(
+                !a.values.is_empty(),
+                "experiment '{}' axis '{}' has no values",
+                self.name,
+                a.axis.name()
+            );
+            for &val in &a.values {
+                self.check_axis_value(a.axis, val)?;
+            }
+        }
+        if self.has_axis(ExpAxis::FanOut) {
+            let wf = self.base.workflow.as_ref();
+            anyhow::ensure!(
+                wf.is_some(),
+                "fan-out axis needs a workflow-carrying base scenario ('{}' has none)",
+                self.base.name
+            );
+            anyhow::ensure!(
+                wf.is_some_and(|w| w.spec.nodes.iter().any(|n| n.count > 1)),
+                "fan-out axis needs a replicated node (count > 1) in workflow '{}'",
+                self.base.name
+            );
+        }
+        anyhow::ensure!(
+            self.has_axis(ExpAxis::Replicas)
+                || (self.base.chaos.is_none() && self.base.autoscale.is_none()),
+            "experiment '{}': base scenario '{}' carries chaos/autoscale, which only the \
+             fleet path honors — add a replicas axis",
+            self.name,
+            self.base.name
+        );
+        for ov in &self.overrides {
+            anyhow::ensure!(
+                !ov.set.is_empty() || ov.seed.is_some(),
+                "experiment '{}': an override needs \"set\" values or a \"seed\"",
+                self.name
+            );
+            for (axis, val) in &ov.when {
+                let decl = self.axes.iter().find(|a| a.axis == *axis).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "experiment '{}': override matches on '{}', which is not a grid axis",
+                        self.name,
+                        axis.name()
+                    )
+                })?;
+                anyhow::ensure!(
+                    decl.values.contains(val),
+                    "experiment '{}': override matches no cell — {} is not on the '{}' axis",
+                    self.name,
+                    val,
+                    axis.name()
+                );
+            }
+            for (axis, val) in &ov.set {
+                anyhow::ensure!(
+                    self.has_axis(*axis),
+                    "experiment '{}': override sets '{}', which is not a grid axis",
+                    self.name,
+                    axis.name()
+                );
+                self.check_axis_value(*axis, *val)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn check_axis_value(&self, axis: ExpAxis, val: f64) -> crate::Result<()> {
+        match axis {
+            ExpAxis::Rate => anyhow::ensure!(
+                val.is_finite() && val > 0.0,
+                "rate must be finite and > 0 (got {val})"
+            ),
+            ExpAxis::Replicas => anyhow::ensure!(
+                val >= 1.0 && val.fract() == 0.0,
+                "replicas must be a positive integer (got {val})"
+            ),
+            ExpAxis::FanOut => anyhow::ensure!(
+                val >= 1.0 && val.fract() == 0.0,
+                "fan-out must be a positive integer (got {val})"
+            ),
+            ExpAxis::KvBlocks => {
+                anyhow::ensure!(
+                    val >= 1.0 && val.fract() == 0.0,
+                    "kv-blocks must be a positive integer (got {val})"
+                );
+                let block_size = self
+                    .base
+                    .kv
+                    .map(|kv| kv.block_size)
+                    .unwrap_or(KvConfig::default().block_size);
+                anyhow::ensure!(
+                    val as usize * block_size >= 8192,
+                    "kv-blocks value {val} x {block_size}-token blocks cannot hold one \
+                     worst-case session (need >= 8192 tokens)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn has_axis(&self, axis: ExpAxis) -> bool {
+        self.axes.iter().any(|a| a.axis == axis)
+    }
+
+    /// Total cell count (the cross-product of all axis lengths).
+    pub fn n_cells(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Grid coordinates of cell `idx`, row-major: the **last** declared
+    /// axis varies fastest, like nested for-loops in declaration order.
+    pub fn coords(&self, idx: usize) -> Vec<(ExpAxis, f64)> {
+        debug_assert!(idx < self.n_cells());
+        let mut rem = idx;
+        let mut out = Vec::with_capacity(self.axes.len());
+        for a in self.axes.iter().rev() {
+            out.push((a.axis, a.values[rem % a.values.len()]));
+            rem /= a.values.len();
+        }
+        out.reverse();
+        out
+    }
+
+    /// The *effective* cell `idx`: grid coordinates with every matching
+    /// override applied (later overrides win), plus whether any matched and
+    /// any pinned seed. Matching is against the original grid coordinates.
+    pub fn cell(&self, idx: usize) -> (Vec<(ExpAxis, f64)>, bool, Option<u64>) {
+        let grid = self.coords(idx);
+        let mut eff = grid.clone();
+        let mut overridden = false;
+        let mut seed = None;
+        for ov in &self.overrides {
+            let matches = ov
+                .when
+                .iter()
+                .all(|(axis, val)| grid.iter().any(|(a, v)| a == axis && v == val));
+            if !matches {
+                continue;
+            }
+            overridden = true;
+            for (axis, val) in &ov.set {
+                if let Some(slot) = eff.iter_mut().find(|(a, _)| a == axis) {
+                    slot.1 = *val;
+                }
+            }
+            if ov.seed.is_some() {
+                seed = ov.seed;
+            }
+        }
+        (eff, overridden, seed)
+    }
+
+    /// The scenario a cell runs: the base with every non-fleet coordinate
+    /// applied (the replicas coordinate sizes the fleet instead).
+    pub fn scenario_for(&self, coords: &[(ExpAxis, f64)]) -> Scenario {
+        let mut sc = self.base.clone();
+        for &(axis, val) in coords {
+            match axis {
+                ExpAxis::Rate => sc.arrivals = ArrivalProcess::Poisson { rate_per_s: val },
+                ExpAxis::KvBlocks => {
+                    let base_kv = sc.kv.unwrap_or_default();
+                    sc.kv = Some(KvConfig { num_blocks: val as usize, ..base_kv });
+                }
+                ExpAxis::FanOut => {
+                    sc.workflow
+                        .as_mut()
+                        .expect("validate(): fan-out axes carry a workflow")
+                        .fan_out = Some(val as usize);
+                }
+                ExpAxis::Replicas => {}
+            }
+        }
+        sc
+    }
+
+    /// Per-cell seed: the same index mixer as the sweep engine's
+    /// [`super::SweepSpec::point_seed`], so cells are decorrelated while
+    /// every policy at one cell replays identical workload bytes.
+    pub fn cell_seed(&self, base_seed: u64, idx: usize) -> u64 {
+        base_seed ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// The canonical sample manifest (`agentserve experiment example`);
+    /// parses and validates by construction (locked by a unit test).
+    pub fn example_manifest() -> Value {
+        Value::obj(vec![
+            ("experiment", "rate-x-replicas".into()),
+            (
+                "description",
+                "capacity plan: arrival rate crossed with fleet size, hot cell pinned".into(),
+            ),
+            ("scenario", "mixed-fleet".into()),
+            ("policies", Value::Arr(vec!["agentserve".into(), "vllm".into()])),
+            ("router", "least-outstanding".into()),
+            ("seed", 7.into()),
+            (
+                "grid",
+                Value::obj(vec![
+                    ("rate", Value::Arr(vec![0.25.into(), 0.5.into(), 1.0.into()])),
+                    ("replicas", Value::Arr(vec![1.into(), 2.into(), 4.into()])),
+                ]),
+            ),
+            (
+                "overrides",
+                Value::Arr(vec![Value::obj(vec![
+                    (
+                        "where",
+                        Value::obj(vec![("rate", 1.0.into()), ("replicas", 1.into())]),
+                    ),
+                    ("set", Value::obj(vec![("replicas", 2.into())])),
+                ])]),
+            ),
+        ])
+    }
+}
+
+fn replicas_of(coords: &[(ExpAxis, f64)]) -> Option<usize> {
+    coords.iter().find(|(a, _)| *a == ExpAxis::Replicas).map(|&(_, v)| v as usize)
+}
+
+/// One executed grid cell with its provenance: where it sits in the grid,
+/// what it actually ran (post-override), and under which seed.
+#[derive(Debug, Clone)]
+pub struct ExperimentCell {
+    pub index: usize,
+    /// Effective coordinates in axis declaration order (post-override).
+    pub coords: Vec<(ExpAxis, f64)>,
+    /// Whether any manifest override touched this cell.
+    pub overridden: bool,
+    pub seed: u64,
+    pub sessions: usize,
+    /// Fleet size for replica-bearing cells (`None` = single-GPU path).
+    pub replicas: Option<usize>,
+    /// One row per policy, in manifest policy order.
+    pub per_policy: Vec<PolicyPoint>,
+}
+
+impl ExperimentCell {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("cell", self.index.into()),
+            (
+                "coords",
+                Value::Obj(
+                    self.coords
+                        .iter()
+                        .map(|&(a, v)| (a.name().to_string(), v.into()))
+                        .collect(),
+                ),
+            ),
+            ("overridden", self.overridden.into()),
+            // String for the exact-u64 reason documented on sweep points.
+            ("seed", self.seed.to_string().into()),
+            ("sessions", self.sessions.into()),
+            (
+                "policies",
+                Value::Arr(self.per_policy.iter().map(|p| p.to_value()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The merged result of one experiment run. Deterministic: one
+/// `(ExperimentSpec, Config, base_seed)` triple fixes every byte,
+/// regardless of worker count.
+#[derive(Debug, Clone)]
+pub struct ExperimentReport {
+    pub experiment: String,
+    pub model: String,
+    pub gpu: String,
+    pub slo_ttft_ms: f64,
+    pub slo_tpot_ms: f64,
+    pub slo_task_ms: f64,
+    pub base_seed: u64,
+    /// Axis names in declaration order (the coords/CSV column order).
+    pub axes: Vec<String>,
+    pub cells: Vec<ExperimentCell>,
+}
+
+impl ExperimentReport {
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("experiment", self.experiment.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("gpu", self.gpu.as_str().into()),
+            ("slo_ttft_ms", self.slo_ttft_ms.into()),
+            ("slo_tpot_ms", self.slo_tpot_ms.into()),
+            ("slo_task_ms", self.slo_task_ms.into()),
+            ("base_seed", self.base_seed.to_string().into()),
+            (
+                "axes",
+                Value::Arr(self.axes.iter().map(|a| a.as_str().into()).collect()),
+            ),
+            (
+                "cells",
+                Value::Arr(self.cells.iter().map(|c| c.to_value()).collect()),
+            ),
+        ])
+    }
+
+    /// Flat CSV (one row per cell × policy): the axis columns carry the
+    /// effective coordinates, then the shared sweep-row columns.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("cell");
+        for a in &self.axes {
+            out.push(',');
+            out.push_str(a);
+        }
+        out.push_str(
+            ",overridden,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
+             tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
+             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate,\
+             replicas,load_cov,replica_us\n",
+        );
+        for cell in &self.cells {
+            for pp in &cell.per_policy {
+                out.push_str(&cell.index.to_string());
+                for &(_, v) in &cell.coords {
+                    out.push_str(&format!(",{v}"));
+                }
+                out.push_str(&format!(
+                    ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    cell.overridden,
+                    pp.policy,
+                    cell.sessions,
+                    cell.seed,
+                    pp.ttft_p50,
+                    pp.ttft_p95,
+                    pp.ttft_p99,
+                    pp.tpot_p50,
+                    pp.tpot_p95,
+                    pp.tpot_p99,
+                    pp.throughput_tok_s,
+                    pp.slo_rate,
+                    pp.completed,
+                    pp.wall_ms,
+                    pp.radix_hit_rate,
+                    pp.evictions,
+                    pp.preemptions,
+                    pp.stall_p99_ms,
+                    pp.makespan_p99_ms,
+                    pp.task_slo_rate,
+                    pp.replicas,
+                    pp.load_cov,
+                    pp.replica_us
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn save_json(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_value().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Execute every `(cell, policy)` pair of the grid across `threads` workers
+/// and merge in grid order (byte-identical at any width; `threads == 1` is
+/// the plain serial loop — see [`crate::util::pool::run_indexed`]).
+pub fn run_experiment(
+    cfg: &Config,
+    spec: &ExperimentSpec,
+    base_seed: u64,
+    threads: usize,
+) -> crate::Result<ExperimentReport> {
+    spec.validate()?;
+    let np = spec.policies.len();
+    let n = spec.n_cells();
+    let router = spec.router.unwrap_or(cfg.cluster.router);
+    let rows = crate::util::pool::run_indexed(n * np, threads, |j| {
+        let (ci, pi) = (j / np, j % np);
+        let (coords, _, pinned) = spec.cell(ci);
+        let scenario = spec.scenario_for(&coords);
+        scenario.validate()?;
+        let seed = pinned.unwrap_or_else(|| spec.cell_seed(base_seed, ci));
+        let policy = spec.policies[pi];
+        match replicas_of(&coords) {
+            Some(fleet) => Ok(PolicyPoint::from_fleet(&crate::cluster::run_cluster_fast(
+                cfg, policy, &scenario, fleet, router, seed,
+            )?)),
+            None => Ok(PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed))),
+        }
+    })?;
+    let mut rows = rows.into_iter();
+    let cells = (0..n)
+        .map(|ci| {
+            let (coords, overridden, pinned) = spec.cell(ci);
+            let sessions = spec.scenario_for(&coords).total_sessions;
+            ExperimentCell {
+                index: ci,
+                replicas: replicas_of(&coords),
+                seed: pinned.unwrap_or_else(|| spec.cell_seed(base_seed, ci)),
+                coords,
+                overridden,
+                sessions,
+                per_policy: rows.by_ref().take(np).collect(),
+            }
+        })
+        .collect();
+    Ok(ExperimentReport {
+        experiment: spec.name.clone(),
+        model: cfg.model.kind.name().to_string(),
+        gpu: cfg.gpu.kind.name().to_string(),
+        slo_ttft_ms: cfg.slo.ttft_ms,
+        slo_tpot_ms: cfg.slo.tpot_ms,
+        slo_task_ms: cfg.slo.task_ms,
+        base_seed,
+        axes: spec.axes.iter().map(|a| a.axis.name().to_string()).collect(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, ModelKind};
+    use crate::util::json::parse;
+
+    fn tiny_manifest() -> Value {
+        parse(
+            r#"{
+                "experiment": "tiny",
+                "scenario": {
+                    "name": "tiny-open-loop",
+                    "description": "6 open-loop ReAct sessions",
+                    "arrivals": { "kind": "poisson", "rate_per_s": 1.0 },
+                    "populations": [
+                        { "name": "react", "workload": "react", "weight": 1.0 }
+                    ],
+                    "total_sessions": 6,
+                    "n_agents": 6
+                },
+                "policies": ["agentserve"],
+                "grid": { "rate": [0.5, 2.0], "replicas": [1, 2] },
+                "overrides": [
+                    { "where": { "rate": 2.0, "replicas": 1 }, "set": { "replicas": 2 } }
+                ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn tiny_spec() -> ExperimentSpec {
+        let spec = ExperimentSpec::from_value(&tiny_manifest()).unwrap();
+        spec.validate().unwrap();
+        spec
+    }
+
+    #[test]
+    fn example_manifest_parses_and_validates() {
+        let spec = ExperimentSpec::from_value(&ExperimentSpec::example_manifest()).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.n_cells(), 9);
+        assert_eq!(spec.policies.len(), 2);
+        assert_eq!(spec.seed, Some(7));
+        assert_eq!(spec.router, Some(crate::config::RouterPolicy::LeastOutstanding));
+    }
+
+    #[test]
+    fn cells_enumerate_row_major_with_last_axis_fastest() {
+        let spec = tiny_spec();
+        assert_eq!(spec.n_cells(), 4);
+        let got: Vec<Vec<f64>> = (0..4)
+            .map(|i| spec.coords(i).into_iter().map(|(_, v)| v).collect())
+            .collect();
+        assert_eq!(
+            got,
+            vec![vec![0.5, 1.0], vec![0.5, 2.0], vec![2.0, 1.0], vec![2.0, 2.0]],
+            "declaration order: rate outer, replicas inner"
+        );
+    }
+
+    #[test]
+    fn overrides_apply_to_matching_cells_only() {
+        let spec = tiny_spec();
+        // Cell 2 = (rate 2.0, replicas 1): the override bumps it to 2 GPUs.
+        let (eff, overridden, seed) = spec.cell(2);
+        assert!(overridden);
+        assert_eq!(seed, None);
+        assert_eq!(eff[1], (ExpAxis::Replicas, 2.0));
+        assert_eq!(replicas_of(&eff), Some(2));
+        // Every other cell is untouched.
+        for i in [0, 1, 3] {
+            let (eff, overridden, _) = spec.cell(i);
+            assert!(!overridden, "cell {i}");
+            assert_eq!(eff, spec.coords(i), "cell {i}");
+        }
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_and_match_the_sweep_mixer() {
+        let spec = tiny_spec();
+        let seeds: Vec<u64> = (0..4).map(|i| spec.cell_seed(7, i)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        let sweep = crate::workload::SweepSpec::by_name("mix-shift").unwrap();
+        assert_eq!(spec.cell_seed(7, 2), sweep.point_seed(7, 2), "one mixer, one contract");
+    }
+
+    #[test]
+    fn refusal_paths_are_loud() {
+        let with = |edit: &dyn Fn(&mut Value)| {
+            let mut v = tiny_manifest();
+            edit(&mut v);
+            v
+        };
+        let set = |v: &mut Value, key: &str, val: Value| {
+            if let Value::Obj(pairs) = v {
+                match pairs.iter_mut().find(|(k, _)| k == key) {
+                    Some(slot) => slot.1 = val,
+                    None => pairs.push((key.to_string(), val)),
+                }
+            }
+        };
+        // Unknown top-level key.
+        let v = with(&|v| set(v, "grdi", Value::Null));
+        assert!(ExperimentSpec::from_value(&v).unwrap_err().to_string().contains("grdi"));
+        // Unknown axis name.
+        let v = with(&|v| set(v, "grid", Value::obj(vec![("ratez", Value::Arr(vec![1.into()]))])));
+        assert!(ExperimentSpec::from_value(&v).unwrap_err().to_string().contains("ratez"));
+        // Missing grid entirely.
+        let v = with(&|v| {
+            if let Value::Obj(pairs) = v {
+                pairs.retain(|(k, _)| k != "grid");
+            }
+        });
+        assert!(ExperimentSpec::from_value(&v).is_err());
+        // Empty axis.
+        let v = with(&|v| set(v, "grid", Value::obj(vec![("rate", Value::Arr(vec![]))])));
+        let spec = ExperimentSpec::from_value(&v).unwrap();
+        assert!(spec.validate().unwrap_err().to_string().contains("no values"));
+        // Duplicate axis (JSON objects can repeat keys).
+        let v = with(&|v| {
+            set(
+                v,
+                "grid",
+                Value::Obj(vec![
+                    ("rate".into(), Value::Arr(vec![1.into()])),
+                    ("rate".into(), Value::Arr(vec![2.into()])),
+                ]),
+            )
+        });
+        assert!(ExperimentSpec::from_value(&v).unwrap_err().to_string().contains("twice"));
+        // Non-integer replicas.
+        let v = with(&|v| {
+            set(v, "grid", Value::obj(vec![("replicas", Value::Arr(vec![1.5.into()]))]))
+        });
+        let spec = ExperimentSpec::from_value(&v).unwrap();
+        assert!(spec.validate().is_err());
+        // Non-positive rate.
+        let v =
+            with(&|v| set(v, "grid", Value::obj(vec![("rate", Value::Arr(vec![(-1.0).into()]))])));
+        assert!(ExperimentSpec::from_value(&v).unwrap().validate().is_err());
+        // Undersized kv pool.
+        let v = with(&|v| {
+            set(v, "grid", Value::obj(vec![("kv-blocks", Value::Arr(vec![128.into()]))]))
+        });
+        assert!(ExperimentSpec::from_value(&v).unwrap().validate().is_err());
+        // Fan-out axis over a non-workflow base.
+        let v = with(&|v| {
+            set(v, "grid", Value::obj(vec![("fan-out", Value::Arr(vec![2.into(), 4.into()]))]))
+        });
+        assert!(ExperimentSpec::from_value(&v).unwrap().validate().is_err());
+        // Override matching a value not on the axis (dead override).
+        let v = with(&|v| {
+            set(
+                v,
+                "overrides",
+                Value::Arr(vec![Value::obj(vec![
+                    ("where", Value::obj(vec![("rate", 99.0.into())])),
+                    ("set", Value::obj(vec![("replicas", 2.into())])),
+                ])]),
+            )
+        });
+        let err = ExperimentSpec::from_value(&v).unwrap().validate().unwrap_err();
+        assert!(err.to_string().contains("matches no cell"), "{err}");
+        // Override setting a non-grid axis.
+        let v = with(&|v| {
+            set(
+                v,
+                "overrides",
+                Value::Arr(vec![Value::obj(vec![
+                    ("where", Value::obj(vec![("rate", 0.5.into())])),
+                    ("set", Value::obj(vec![("fan-out", 2.into())])),
+                ])]),
+            )
+        });
+        assert!(ExperimentSpec::from_value(&v).unwrap().validate().is_err());
+        // Override with an unknown key.
+        let v = with(&|v| {
+            set(
+                v,
+                "overrides",
+                Value::Arr(vec![Value::obj(vec![
+                    ("wher", Value::obj(vec![("rate", 0.5.into())])),
+                    ("set", Value::obj(vec![("replicas", 2.into())])),
+                ])]),
+            )
+        });
+        assert!(ExperimentSpec::from_value(&v).is_err());
+        // Override with neither set nor seed.
+        let v = with(&|v| {
+            set(
+                v,
+                "overrides",
+                Value::Arr(vec![Value::obj(vec![(
+                    "where",
+                    Value::obj(vec![("rate", 0.5.into())]),
+                )])]),
+            )
+        });
+        assert!(ExperimentSpec::from_value(&v).unwrap().validate().is_err());
+        // Unknown policy / router / scenario names.
+        let v = with(&|v| set(v, "policies", Value::Arr(vec!["warp-drive".into()])));
+        assert!(ExperimentSpec::from_value(&v).is_err());
+        let v = with(&|v| set(v, "router", "teleport".into()));
+        assert!(ExperimentSpec::from_value(&v).is_err());
+        let v = with(&|v| set(v, "scenario", "no-such-scenario".into()));
+        assert!(ExperimentSpec::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn run_is_byte_identical_at_any_worker_count() {
+        let cfg = Config::preset(ModelKind::Qwen3B, GpuKind::A5000);
+        let spec = tiny_spec();
+        let serial = run_experiment(&cfg, &spec, 7, 1).unwrap();
+        assert_eq!(serial.cells.len(), 4);
+        for threads in [2, 5] {
+            let par = run_experiment(&cfg, &spec, 7, threads).unwrap();
+            assert_eq!(par.to_value().to_string(), serial.to_value().to_string(), "t={threads}");
+            assert_eq!(par.to_csv(), serial.to_csv(), "t={threads}");
+        }
+        // Provenance: the overridden cell is flagged and runs 2 replicas.
+        let cell = &serial.cells[2];
+        assert!(cell.overridden);
+        assert_eq!(cell.replicas, Some(2));
+        assert_eq!(cell.per_policy[0].replicas, 2, "the row really ran the fleet path");
+        // CSV carries one column per axis plus the shared row schema.
+        let header = serial.to_csv().lines().next().unwrap().to_string();
+        assert!(header.starts_with("cell,rate,replicas,overridden,policy,"));
+        assert!(header.ends_with("replicas,load_cov,replica_us"));
+    }
+}

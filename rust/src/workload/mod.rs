@@ -16,8 +16,10 @@
 //! - **Plan-and-Execute** — fewer but longer resume prefills, medium decodes.
 //!
 //! Above single workloads sit [`Scenario`] (declarative traffic: arrival
-//! process × population mix) and [`SweepSpec`] (a scenario driven across an
-//! arrival-rate / agent-count / mix-ratio grid — the paper's load curves).
+//! process × population mix), [`SweepSpec`] (a scenario driven across an
+//! arrival-rate / agent-count / mix-ratio grid — the paper's load curves),
+//! and [`ExperimentSpec`] (a JSON manifest crossing several axes into one
+//! grid, executed over the parallel worker pool).
 //! A scenario may instead carry a [`crate::workflow::WorkflowSpec`]: each
 //! arrival then releases one multi-agent DAG *task* (fan-out, join
 //! barriers, context continuations) compiled by [`crate::workflow::compile()`].
@@ -27,6 +29,7 @@
 //! generators, scenario instantiation, sweep grids, and their JSON forms are
 //! byte-stable across runs and platforms.
 
+mod experiment;
 mod generator;
 mod scenario;
 mod spec;
@@ -34,13 +37,17 @@ mod stats;
 mod sweep;
 mod trace;
 
+pub use experiment::{
+    run_experiment, CellOverride, ExpAxis, ExperimentAxis, ExperimentCell, ExperimentReport,
+    ExperimentSpec,
+};
 pub use generator::{SessionScript, SessionStep, WorkloadGenerator};
 pub use scenario::{ArrivalProcess, Population, Scenario, ScenarioWorkload};
 pub use spec::{TokenRange, WorkloadKind, WorkloadSpec};
 pub use stats::{DistSummary, TokenStats};
 pub use sweep::{
-    knee_by, knee_value, knee_value_fleet, knee_value_kv, knee_value_task, run_sweep, KneeRule,
-    PolicyPoint, SweepAxis, SweepPoint, SweepReport, SweepSpec,
+    knee_by, knee_value, knee_value_fleet, knee_value_kv, knee_value_task, run_sweep,
+    run_sweep_with_threads, KneeRule, PolicyPoint, SweepAxis, SweepPoint, SweepReport, SweepSpec,
 };
 pub use trace::{Trace, TraceEvent};
 

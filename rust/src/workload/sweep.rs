@@ -14,6 +14,10 @@
 //! every byte of the report. Grid points get decorrelated per-point seeds
 //! ([`SweepSpec::point_seed`]), but all policies at one point share that
 //! seed, so within-point comparisons stay paired (identical workload bytes).
+//! Execution is parallel: `(point, policy)` cells fan out over the
+//! [`crate::util::pool`] worker pool and merge back in grid order, so the
+//! report stays byte-identical at any `--threads` width (1 = the exact
+//! legacy serial loop).
 //!
 //! Built-in sweeps ([`SweepSpec::registry`]) include `paper-fig5-sweep`,
 //! which reproduces the paper's load-curve shape with a 2,000-agent
@@ -640,7 +644,10 @@ impl PolicyPoint {
         }
     }
 
-    fn to_value(&self) -> Value {
+    /// Shared row schema: sweep reports and experiment reports (the
+    /// `experiment` module) serialize policy rows through this one function
+    /// so the two artifact families cannot drift apart.
+    pub(crate) fn to_value(&self) -> Value {
         Value::obj(vec![
             ("policy", self.policy.as_str().into()),
             ("ttft_p50_ms", self.ttft_p50.into()),
@@ -874,61 +881,87 @@ pub fn knee_value_fleet(points: &[SweepPoint], policy_idx: usize, ttft_slo_ms: f
     knee_by(points, policy_idx, ttft_slo_ms, |p| p.ttft_p99, KneeRule::FirstCompliant)
 }
 
+/// One `(grid point, policy)` cell — the unit of work the parallel pool
+/// hands out. Pure in `(cfg, spec, policy, base_seed, i)`: the scenario is
+/// re-materialized from the spec so cells share no mutable state.
+fn run_cell(
+    cfg: &Config,
+    spec: &SweepSpec,
+    policy: Policy,
+    base_seed: u64,
+    i: usize,
+) -> crate::Result<PolicyPoint> {
+    let scenario = spec.scenario_at(i);
+    scenario.validate()?;
+    let seed = spec.point_seed(base_seed, i);
+    match &spec.axis {
+        // Replica points run the unchanged scenario on an N-GPU
+        // fleet; every policy at the point still shares the seed.
+        SweepAxis::Replicas { counts, router } => Ok(PolicyPoint::from_fleet(
+            &crate::cluster::run_cluster_fast(cfg, policy, &scenario, counts[i], *router, seed)?,
+        )),
+        // Chaos points run the scenario (with the point's seeded
+        // fault process applied) on a fixed-size fleet.
+        SweepAxis::Chaos { replicas, router, .. } => Ok(PolicyPoint::from_fleet(
+            &crate::cluster::run_cluster_fast(cfg, policy, &scenario, *replicas, *router, seed)?,
+        )),
+        // Autoscale points start at min_replicas and let the
+        // controller grow the fleet; the thresh-0 baseline runs the
+        // full max_replicas fleet statically (provisioned for peak).
+        SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, router } => {
+            let n = if up_threshes[i] > 0.0 { *min_replicas } else { *max_replicas };
+            Ok(PolicyPoint::from_fleet(&crate::cluster::run_cluster_fast(
+                cfg, policy, &scenario, n, *router, seed,
+            )?))
+        }
+        _ => Ok(PolicyPoint::from_outcome(&run_scenario_fast(cfg, policy, &scenario, seed))),
+    }
+}
+
 /// Execute the full grid: every point under every policy, timeline-free.
 ///
 /// Fully deterministic in `(cfg, spec, policies, base_seed)`; all policies
-/// at one grid point replay identical workload bytes.
+/// at one grid point replay identical workload bytes. Worker count comes
+/// from `AGENTSERVE_SWEEP_THREADS` (default: available parallelism) — the
+/// report is byte-identical at any width; see [`run_sweep_with_threads`].
 pub fn run_sweep(
     cfg: &Config,
     spec: &SweepSpec,
     policies: &[Policy],
     base_seed: u64,
 ) -> crate::Result<SweepReport> {
+    run_sweep_with_threads(cfg, spec, policies, base_seed, crate::util::pool::grid_threads(None)?)
+}
+
+/// [`run_sweep`] with an explicit worker count (`--threads`).
+///
+/// Grid cells — `(point, policy)` pairs — are distributed over a
+/// [`crate::util::pool::run_indexed`] worker pool and merged back in grid
+/// order, so the report is **byte-identical at any worker count**;
+/// `threads == 1` is the exact legacy serial loop. The thread count is
+/// deliberately *not* recorded in the report (it must not affect a byte).
+pub fn run_sweep_with_threads(
+    cfg: &Config,
+    spec: &SweepSpec,
+    policies: &[Policy],
+    base_seed: u64,
+    threads: usize,
+) -> crate::Result<SweepReport> {
     spec.validate()?;
     anyhow::ensure!(!policies.is_empty(), "sweep needs at least one policy");
-    let mut points = Vec::with_capacity(spec.axis.len());
-    for i in 0..spec.axis.len() {
-        let scenario = spec.scenario_at(i);
-        scenario.validate()?;
-        let seed = spec.point_seed(base_seed, i);
-        let per_policy = policies
-            .iter()
-            .map(|&policy| match &spec.axis {
-                // Replica points run the unchanged scenario on an N-GPU
-                // fleet; every policy at the point still shares the seed.
-                SweepAxis::Replicas { counts, router } => Ok(PolicyPoint::from_fleet(
-                    &crate::cluster::run_cluster_fast(
-                        cfg, policy, &scenario, counts[i], *router, seed,
-                    )?,
-                )),
-                // Chaos points run the scenario (with the point's seeded
-                // fault process applied) on a fixed-size fleet.
-                SweepAxis::Chaos { replicas, router, .. } => Ok(PolicyPoint::from_fleet(
-                    &crate::cluster::run_cluster_fast(
-                        cfg, policy, &scenario, *replicas, *router, seed,
-                    )?,
-                )),
-                // Autoscale points start at min_replicas and let the
-                // controller grow the fleet; the thresh-0 baseline runs the
-                // full max_replicas fleet statically (provisioned for peak).
-                SweepAxis::Autoscale { up_threshes, min_replicas, max_replicas, router } => {
-                    let n = if up_threshes[i] > 0.0 { *min_replicas } else { *max_replicas };
-                    Ok(PolicyPoint::from_fleet(&crate::cluster::run_cluster_fast(
-                        cfg, policy, &scenario, n, *router, seed,
-                    )?))
-                }
-                _ => Ok(PolicyPoint::from_outcome(&run_scenario_fast(
-                    cfg, policy, &scenario, seed,
-                ))),
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
-        points.push(SweepPoint {
+    let np = policies.len();
+    let cells = crate::util::pool::run_indexed(spec.axis.len() * np, threads, |j| {
+        run_cell(cfg, spec, policies[j % np], base_seed, j / np)
+    })?;
+    let mut cells = cells.into_iter();
+    let points: Vec<SweepPoint> = (0..spec.axis.len())
+        .map(|i| SweepPoint {
             axis_value: spec.axis.value_at(i),
-            sessions: scenario.total_sessions,
-            seed,
-            per_policy,
-        });
-    }
+            sessions: spec.scenario_at(i).total_sessions,
+            seed: spec.point_seed(base_seed, i),
+            per_policy: cells.by_ref().take(np).collect(),
+        })
+        .collect();
     let knees = policies
         .iter()
         .enumerate()
@@ -1301,6 +1334,47 @@ mod tests {
         let v = crate::util::json::parse(&report.to_value().to_string()).unwrap();
         let row = &v.req_arr("points").unwrap()[0].req_arr("policies").unwrap()[0];
         assert_eq!(row.req_f64("replica_us").unwrap(), 123_456.0);
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        // The tentpole lock at unit scale: the same tiny grid at widths
+        // 1/2/3/8 must serialize to identical JSON and CSV bytes.
+        let cfg = Config::preset(ModelKind::Qwen3B, crate::config::GpuKind::A5000);
+        let spec = SweepSpec {
+            name: "tiny".into(),
+            description: "unit-scale determinism probe".into(),
+            base: Scenario {
+                name: "tiny-fleet".into(),
+                description: "6 open-loop ReAct sessions".into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+                populations: vec![Population::new("react", WorkloadKind::ReAct, 1.0)],
+                total_sessions: 6,
+                n_agents: 6,
+                kv: None,
+                workflow: None,
+                chaos: None,
+                autoscale: None,
+            },
+            axis: SweepAxis::ArrivalRate(vec![0.5, 1.0, 2.0]),
+        };
+        let lineup = Policy::paper_lineup();
+        let policies = &lineup[..2];
+        let serial = run_sweep_with_threads(&cfg, &spec, policies, 7, 1).unwrap();
+        for threads in [2, 3, 8] {
+            let par = run_sweep_with_threads(&cfg, &spec, policies, 7, threads).unwrap();
+            assert_eq!(
+                par.to_value().to_string(),
+                serial.to_value().to_string(),
+                "threads={threads}: JSON must not depend on worker count"
+            );
+            assert_eq!(par.to_csv(), serial.to_csv(), "threads={threads}: CSV too");
+        }
+        // The env/default-resolving entry point agrees with the serial path.
+        let auto = run_sweep(&cfg, &spec, policies, 7).unwrap();
+        assert_eq!(auto.to_value().to_string(), serial.to_value().to_string());
+        // Width 0 is refused loudly.
+        assert!(run_sweep_with_threads(&cfg, &spec, policies, 7, 0).is_err());
     }
 
     #[test]

@@ -622,3 +622,79 @@ fn prop_never_triggering_thresholds_match_the_static_fleet_bytes() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Experiment grids: worker count is invisible in the artifact bytes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_experiment_grids_are_byte_identical_at_any_worker_count() {
+    use agentserve::engine::Policy;
+    use agentserve::workload::{
+        run_experiment, CellOverride, ExpAxis, ExperimentAxis, ExperimentSpec,
+    };
+
+    let cfg = common::cfg();
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        // Random grid: a rate axis (1-2 values), coin-flip replicas axis.
+        let rate_pool = [0.5, 1.0, 2.0];
+        let n_rates = 1 + (rng.next_u64() % 2) as usize;
+        let start = (rng.next_u64() % 2) as usize;
+        let rates: Vec<f64> = rate_pool[start..start + n_rates].to_vec();
+        let mut axes = vec![ExperimentAxis { axis: ExpAxis::Rate, values: rates.clone() }];
+        let with_fleet = rng.next_u64() % 2 == 0;
+        if with_fleet {
+            axes.push(ExperimentAxis { axis: ExpAxis::Replicas, values: vec![1.0, 2.0] });
+        }
+        // Coin-flip override: pin a random cell's seed and (on fleet
+        // grids) bump its replica count.
+        let mut overrides = Vec::new();
+        if rng.next_u64() % 2 == 0 {
+            let rate = rates[(rng.next_u64() % rates.len() as u64) as usize];
+            let mut when = vec![(ExpAxis::Rate, rate)];
+            let mut set = Vec::new();
+            if with_fleet {
+                when.push((ExpAxis::Replicas, 1.0));
+                set.push((ExpAxis::Replicas, 2.0));
+            }
+            overrides.push(CellOverride { when, set, seed: Some(rng.next_u64() >> 1) });
+        }
+        let policies = if rng.next_u64() % 2 == 0 {
+            vec![Policy::paper_lineup()[0]]
+        } else {
+            Policy::paper_lineup()[..2].to_vec()
+        };
+        let spec = ExperimentSpec {
+            name: format!("prop-{seed}"),
+            description: String::new(),
+            base: common::open_loop("prop-base", 1.0, 5),
+            policies,
+            router: None,
+            seed: None,
+            axes,
+            overrides,
+        };
+        spec.validate().unwrap_or_else(|e| panic!("seed {seed}: generated spec invalid: {e}"));
+        let serial = run_experiment(&cfg, &spec, 7, 1).unwrap();
+        let serial_json = serial.to_value().to_string();
+        let serial_csv = serial.to_csv();
+        // Rerun stability at width 1, then byte-identity at random widths.
+        let again = run_experiment(&cfg, &spec, 7, 1).unwrap();
+        assert_eq!(
+            serial_json,
+            again.to_value().to_string(),
+            "seed {seed}: serial rerun drifted"
+        );
+        for _ in 0..2 {
+            let w = 2 + (rng.next_u64() % 7) as usize;
+            let par = run_experiment(&cfg, &spec, 7, w).unwrap();
+            assert_eq!(
+                serial_json,
+                par.to_value().to_string(),
+                "seed {seed}: {w} workers diverged from serial"
+            );
+            assert_eq!(serial_csv, par.to_csv(), "seed {seed}: {w} workers diverged (CSV)");
+        }
+    }
+}

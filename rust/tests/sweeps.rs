@@ -130,3 +130,29 @@ fn knee_reported_under_overload() {
         report.slo_ttft_ms
     );
 }
+
+#[test]
+fn registry_sweeps_are_byte_identical_at_any_worker_count() {
+    // The tentpole lock at the integration level: a real registry sweep
+    // (mix-shift exercises the mix axis and multi-policy merge) run at
+    // several worker-pool widths must serialize byte-identically to the
+    // `threads == 1` legacy serial loop — the CI smoke (`ci/check.sh`)
+    // re-checks this through the CLI with `--threads 1` vs `--threads 4`.
+    use agentserve::workload::run_sweep_with_threads;
+    let cfg = cfg();
+    let spec = SweepSpec::by_name("mix-shift").unwrap();
+    let policies = [Policy::AgentServe(Default::default()), Policy::Vllm];
+    let serial = run_sweep_with_threads(&cfg, &spec, &policies, 7, 1).unwrap();
+    for threads in [2, 4, 9] {
+        let par = run_sweep_with_threads(&cfg, &spec, &policies, 7, threads).unwrap();
+        assert_eq!(
+            serial.to_value().to_string(),
+            par.to_value().to_string(),
+            "{threads} workers diverged from the serial sweep"
+        );
+        assert_eq!(serial.to_csv(), par.to_csv(), "{threads} workers diverged (CSV)");
+    }
+    // The env/default-resolving entry point agrees with the explicit one.
+    let auto = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(serial.to_value().to_string(), auto.to_value().to_string());
+}
