@@ -222,6 +222,33 @@ cargo run --release --bin agentserve -- \
 grep -q '"axis": "autoscale"' "$tmp/frontier.json"
 grep -q 'replica_us' "$tmp/frontier.csv"
 
+step "Host smoke (tool-storm: 12-wide tool bursts on 2 CPU workers, rerun-stable)"
+rerun_stable tool host cargo run --release --bin agentserve -- \
+    scenario run --name tool-storm --policy agentserve --model 3b
+
+step "Host inert-default byte check (--cpu-workers 0 == the legacy path)"
+cargo run --release --bin agentserve -- \
+    scenario run --name mixed-fleet --policy agentserve --model 3b \
+    > "$tmp/plain.txt"
+cargo run --release --bin agentserve -- \
+    scenario run --name mixed-fleet --policy agentserve --model 3b \
+    --cpu-workers 0 > "$tmp/inert.txt"
+cmp "$tmp/plain.txt" "$tmp/inert.txt"
+
+step "CPU-knee sweep smoke (3-point worker grid over tool-storm, task-SLO knee)"
+cargo run --release --bin agentserve -- \
+    scenario sweep --name cpu-knee --policy agentserve --model 3b \
+    --out "$tmp/cpu.json" --csv "$tmp/cpu.csv"
+[ -s "$tmp/cpu.json" ] && [ -s "$tmp/cpu.csv" ]
+grep -q '"axis": "cpu-workers"' "$tmp/cpu.json"
+grep -q 'tool_wait_p99_ms' "$tmp/cpu.csv"
+# The acceptance bar: some worker count in the grid keeps p99 task
+# makespan inside the task SLO — the capacity knee must not be null.
+if grep -q '"knee": null' "$tmp/cpu.json"; then
+    echo "ERROR: cpu-knee found no compliant worker count in the grid" >&2
+    exit 1
+fi
+
 echo ""
 echo "--- ${step_name}: $((SECONDS - step_start))s ---"
 echo "ci/check.sh: all green (total ${SECONDS}s)"

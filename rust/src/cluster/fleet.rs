@@ -62,6 +62,7 @@ use crate::config::{Config, FaultKind, RouterPolicy, CHAOS_STREAM};
 use crate::engine::sim::task_critical_paths_ms;
 use crate::engine::{CrashResume, DriverEvent, Policy, SimDriver, SimOutcome};
 use crate::gpusim::CostModel;
+use crate::host::{HostReport, HostSamples};
 use crate::metrics::{
     load_cov, percentile, AutoscaleStats, ChaosStats, FleetReport, SloReport, Summary,
     WorkflowReport,
@@ -402,6 +403,12 @@ fn run_cluster_inner(
             }
         })
         .collect();
+    // Per-replica host queues: each replica slot folds its own stream off
+    // the run seed (HOST_STREAM), so adding replicas never perturbs the
+    // draws of existing ones. No-op when `cfg.host` is inert.
+    for (r, d) in drivers.iter_mut().enumerate() {
+        d.set_host_seed(seed, r as u64);
+    }
     let mut router = Router::new(router_policy);
     // (time, fleet-seq, global session): seq makes equal-time arrivals pop
     // in creation order — seed order first, then fleet-created arrivals.
@@ -441,6 +448,9 @@ fn run_cluster_inner(
     let mut deferred: BTreeMap<usize, u64> = BTreeMap::new();
     // Retired (crashed) replica outcomes, by replica index.
     let mut retired: Vec<(usize, SimOutcome)> = Vec::new();
+    // Host-queue samples harvested from crashed incarnations; live replicas
+    // contribute theirs at the final gather. Empty when `cfg.host` is inert.
+    let mut host_acc = HostSamples::default();
     // Samples harvested from crashed replicas, in per-session order.
     let mut harv_ttfts: Vec<Vec<f64>> = vec![Vec::new(); total];
     let mut harv_tpots: Vec<Vec<f64>> = vec![Vec::new(); total];
@@ -517,6 +527,10 @@ fn run_cluster_inner(
                                         &mut drivers[r],
                                         SimDriver::new_fast_boot_at(&cfg, policy, t_up),
                                     );
+                                    // The replacement reuses slot r's host
+                                    // stream: the queue is a property of the
+                                    // replica's CPU, reborn empty with it.
+                                    drivers[r].set_host_seed(seed, r as u64);
                                     finished[r] = false;
                                     // Keep every sample the dead replica
                                     // recorded (finished sessions *and*
@@ -532,6 +546,9 @@ fn run_cluster_inner(
                                     }
                                     for (l, ms) in old.memory_stalls() {
                                         harv_stalls[local2global[r][l]].push(ms);
+                                    }
+                                    if let Some(s) = old.host_samples() {
+                                        host_acc.merge(&s);
                                     }
                                     for cs in old.crash_manifest() {
                                         let g = local2global[r][cs.local];
@@ -636,6 +653,10 @@ fn run_cluster_inner(
                             // in the GPU-time integral.
                             let boot = tt + sc.config().boot_us;
                             let mut d = SimDriver::new_fast_boot_at(&cfg, policy, boot);
+                            // Fresh replica slot → fresh host stream; index
+                            // = current fleet size, never reused (Down
+                            // drains in place, it does not pop).
+                            d.set_host_seed(seed, drivers.len() as u64);
                             // A replica booted after the arrival stream is
                             // exhausted can never receive work: close it out
                             // immediately so termination never waits on it.
@@ -813,7 +834,16 @@ fn run_cluster_inner(
                         &mut w.step_remaining,
                     );
                     for (s2, delay) in resolved.arrivals {
-                        queue.push(Reverse((t_us + delay, fseq, s2)));
+                        // A positive delay is the dependent's folded tool
+                        // edge: it executes on the CPU of the replica whose
+                        // completion resolved the gate. Zero-delay releases
+                        // are pure join barriers and skip the host.
+                        let at = if delay > 0 {
+                            drivers[r].host_tool_done_at(t_us, delay)
+                        } else {
+                            t_us
+                        };
+                        queue.push(Reverse((at, fseq, s2)));
                         fseq += 1;
                     }
                     for (s2, step) in resolved.steps {
@@ -825,7 +855,11 @@ fn run_cluster_inner(
                         // from the resolution instant (gate semantics).
                         if deferred.contains_key(&s2) && step + 1 == off[s2] {
                             let lat = deferred.remove(&s2).expect("checked");
-                            queue.push(Reverse((t_us + lat, fseq, s2)));
+                            // The crashed-parked session pays its tool
+                            // latency on the resolving replica's CPU —
+                            // same queue the surviving gate-waits use.
+                            let at = drivers[r].host_tool_done_at(t_us, lat);
+                            queue.push(Reverse((at, fseq, s2)));
                             fseq += 1;
                         } else if placements[s2] != usize::MAX && step >= off[s2] {
                             drivers[placements[s2]].open_step_gate(
@@ -934,6 +968,14 @@ fn run_cluster_inner(
     }
     let stall_flat: Vec<f64> = harv_stalls.iter().flatten().copied().collect();
     let stall_p99_ms = percentile(&stall_flat, 99.0);
+    // Host-queue gather: crashed incarnations already merged above; the
+    // survivors contribute in replica order. Like stalls, the fleet keeps
+    // raw waits and recomputes percentiles once — never max() of p99s.
+    for d in drivers.iter() {
+        if let Some(s) = d.host_samples() {
+            host_acc.merge(&s);
+        }
+    }
 
     let wall_us = if track_wall {
         wall_chaos
@@ -1013,6 +1055,16 @@ fn run_cluster_inner(
             time_at_size_us,
         }
     });
+    // Fleet host capacity approximates every final replica as present for
+    // the whole wall clock (autoscaled fleets overstate capacity for
+    // late-booted replicas — documented in docs/ARCHITECTURE.md).
+    let host_report = cfg.host.is_active().then(|| {
+        HostReport::from_samples(
+            cfg.host.cpu_workers,
+            &host_acc,
+            cfg.host.cpu_workers as u64 * wall_us * n_final as u64,
+        )
+    });
     let wall_ms = wall_us as f64 / 1000.0;
     let wall_s = (wall_ms / 1000.0).max(1e-9);
     let report = FleetReport {
@@ -1039,6 +1091,7 @@ fn run_cluster_inner(
         workflow,
         chaos: chaos_report,
         autoscale: autoscale_report,
+        host: host_report,
     };
     Ok(FleetOutcome {
         policy_name: policy.name().to_string(),

@@ -1,0 +1,316 @@
+//! Host-execution configuration: the replica CPU as a contended resource
+//! (`crate::host`).
+//!
+//! Agentic loops interleave GPU work with host-side tool execution —
+//! sandbox syscalls, retrieval, prompt assembly. The legacy simulator
+//! treats every tool step as a free, fixed latency; with an *active*
+//! `HostConfig` each replica instead owns `cpu_workers` CPU workers
+//! serving a FIFO tool-slot queue on the virtual clock. A tool call
+//! occupies one worker for `dispatch_overhead_us` plus its (optionally
+//! distribution-scaled) latency; when every worker is busy the call
+//! queues, and that wait is visible in `HostReport` and in end-to-end
+//! task latency — the second knee a GPU-only model cannot see.
+//!
+//! Latency scaling draws fold from the dedicated [`HOST_STREAM`], so runs
+//! stay a pure function of `(seed, scenario, config)`. The default
+//! (`cpu_workers = 0`) is inert: every tool path takes the exact legacy
+//! code and its outputs stay byte-identical (locked in
+//! `rust/tests/host.rs`).
+
+use crate::util::json::Value;
+
+/// Seed-fold stream for host latency draws, disjoint from the chaos
+/// (`CHAOS_STREAM`) and tool-fault (`TOOL_FAULT_STREAM`) streams so the
+/// host model never perturbs their sequences.
+pub const HOST_STREAM: u64 = 0x4057_CA11;
+
+/// Service-time distribution applied to each tool call's scripted latency.
+///
+/// The scripted latency `L` (from the workload script, workflow tool node,
+/// or realized fault-retry cost) is the *scale*; the distribution supplies
+/// a multiplicative factor so heavier-tailed sandboxes stretch long calls
+/// more than short ones:
+///
+/// - `Fixed` — service is exactly `L` (no draw, no RNG consumed).
+/// - `Uniform { lo, hi }` — service is `L × U(lo, hi)`.
+/// - `LogNormal { mu, sigma }` — service is `L × exp(mu + sigma·Z)`,
+///   `Z ~ N(0,1)`: the heavy-tailed sandbox.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostLatency {
+    Fixed,
+    Uniform { lo: f64, hi: f64 },
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl HostLatency {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HostLatency::Fixed => "fixed",
+            HostLatency::Uniform { .. } => "uniform",
+            HostLatency::LogNormal { .. } => "lognormal",
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        match self {
+            HostLatency::Fixed => Value::obj(vec![("dist", "fixed".into())]),
+            HostLatency::Uniform { lo, hi } => Value::obj(vec![
+                ("dist", "uniform".into()),
+                ("lo", (*lo).into()),
+                ("hi", (*hi).into()),
+            ]),
+            HostLatency::LogNormal { mu, sigma } => Value::obj(vec![
+                ("dist", "lognormal".into()),
+                ("mu", (*mu).into()),
+                ("sigma", (*sigma).into()),
+            ]),
+        }
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let dist = v.get("dist").and_then(|x| x.as_str()).unwrap_or("fixed");
+        match dist {
+            "fixed" => Ok(HostLatency::Fixed),
+            "uniform" => Ok(HostLatency::Uniform {
+                lo: v.get("lo").and_then(|x| x.as_f64()).unwrap_or(0.5),
+                hi: v.get("hi").and_then(|x| x.as_f64()).unwrap_or(1.5),
+            }),
+            "lognormal" => Ok(HostLatency::LogNormal {
+                mu: v.get("mu").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                sigma: v.get("sigma").and_then(|x| x.as_f64()).unwrap_or(0.5),
+            }),
+            other => anyhow::bail!(
+                "unknown host latency dist {other:?} (expected fixed|uniform|lognormal)"
+            ),
+        }
+    }
+}
+
+impl std::str::FromStr for HostLatency {
+    type Err = anyhow::Error;
+
+    /// CLI form: `fixed`, `uniform:LO,HI`, or `lognormal:MU,SIGMA`.
+    fn from_str(s: &str) -> crate::Result<Self> {
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (s, None),
+        };
+        let two = |r: Option<&str>, what: &str| -> crate::Result<(f64, f64)> {
+            let r = r.ok_or_else(|| {
+                anyhow::anyhow!("--tool-dist {kind} needs {what} (e.g. {kind}:{})",
+                    if kind == "uniform" { "0.5,1.5" } else { "0.0,0.8" })
+            })?;
+            let (a, b) = r
+                .split_once(',')
+                .ok_or_else(|| anyhow::anyhow!("--tool-dist {kind}: expected two comma-separated numbers, got {r:?}"))?;
+            Ok((a.trim().parse::<f64>()?, b.trim().parse::<f64>()?))
+        };
+        match kind {
+            "fixed" => {
+                anyhow::ensure!(rest.is_none(), "--tool-dist fixed takes no parameters");
+                Ok(HostLatency::Fixed)
+            }
+            "uniform" => {
+                let (lo, hi) = two(rest, "lo,hi")?;
+                Ok(HostLatency::Uniform { lo, hi })
+            }
+            "lognormal" => {
+                let (mu, sigma) = two(rest, "mu,sigma")?;
+                Ok(HostLatency::LogNormal { mu, sigma })
+            }
+            other => anyhow::bail!(
+                "unknown --tool-dist {other:?} (expected fixed|uniform:lo,hi|lognormal:mu,sigma)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for HostLatency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HostLatency::Fixed => write!(f, "fixed"),
+            HostLatency::Uniform { lo, hi } => write!(f, "uniform:{lo},{hi}"),
+            HostLatency::LogNormal { mu, sigma } => write!(f, "lognormal:{mu},{sigma}"),
+        }
+    }
+}
+
+/// Deterministic host-execution plan for one run: `cpu_workers` CPU
+/// workers per replica serving a FIFO tool-slot queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostConfig {
+    /// CPU workers per replica. 0 = unbounded host (the inert default —
+    /// exact legacy free-tool-latency path).
+    pub cpu_workers: usize,
+    /// Fixed per-call dispatch cost (process spawn, sandbox setup) added
+    /// to every tool call's service time (us).
+    pub dispatch_overhead_us: u64,
+    /// Service-time distribution applied to each call's scripted latency.
+    pub latency: HostLatency,
+}
+
+impl HostConfig {
+    /// Default per-call dispatch overhead: ~0.5 ms of process/sandbox
+    /// setup on a consumer host.
+    pub const DEFAULT_DISPATCH_US: u64 = 500;
+
+    /// An active host with `workers` CPU workers and the default dispatch
+    /// overhead, serving scripted latencies unscaled.
+    pub fn workers(workers: usize) -> Self {
+        Self {
+            cpu_workers: workers,
+            dispatch_overhead_us: Self::DEFAULT_DISPATCH_US,
+            latency: HostLatency::Fixed,
+        }
+    }
+
+    /// An inert config never queues: every tool path takes the exact
+    /// legacy code (byte-identical outputs).
+    pub fn is_active(&self) -> bool {
+        self.cpu_workers > 0
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.is_active() {
+            match self.latency {
+                HostLatency::Fixed => {}
+                HostLatency::Uniform { lo, hi } => {
+                    anyhow::ensure!(
+                        lo.is_finite() && hi.is_finite() && lo > 0.0 && lo <= hi,
+                        "host.latency uniform bounds must satisfy 0 < lo <= hi \
+                         (got lo={lo}, hi={hi})"
+                    );
+                }
+                HostLatency::LogNormal { mu, sigma } => {
+                    anyhow::ensure!(
+                        mu.is_finite() && sigma.is_finite() && sigma >= 0.0,
+                        "host.latency lognormal needs finite mu and sigma >= 0 \
+                         (got mu={mu}, sigma={sigma})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("cpu_workers", self.cpu_workers.into()),
+            ("dispatch_overhead_us", self.dispatch_overhead_us.into()),
+            ("latency", self.latency.to_value()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            cpu_workers: v
+                .get("cpu_workers")
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .unwrap_or(d.cpu_workers),
+            dispatch_overhead_us: v
+                .get("dispatch_overhead_us")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.dispatch_overhead_us),
+            latency: match v.get("latency") {
+                Some(l) => HostLatency::from_value(l)?,
+                None => d.latency,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl Default for HostConfig {
+    /// Inert: unbounded host (legacy free-tool path), sensible dispatch
+    /// overhead so flipping `cpu_workers` on alone yields a working host.
+    fn default() -> Self {
+        Self { cpu_workers: 0, ..Self::workers(4) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let c = HostConfig::default();
+        assert!(!c.is_active());
+        c.validate().unwrap();
+        // Inert configs skip field validation entirely (like AutoscaleConfig).
+        let weird = HostConfig {
+            latency: HostLatency::Uniform { lo: -1.0, hi: 0.0 },
+            ..HostConfig::default()
+        };
+        weird.validate().unwrap();
+    }
+
+    #[test]
+    fn workers_is_active_and_valid() {
+        let c = HostConfig::workers(2);
+        assert!(c.is_active());
+        c.validate().unwrap();
+        assert_eq!(c.cpu_workers, 2);
+        assert_eq!(c.dispatch_overhead_us, HostConfig::DEFAULT_DISPATCH_US);
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        for latency in [
+            HostLatency::Fixed,
+            HostLatency::Uniform { lo: 0.5, hi: 2.0 },
+            HostLatency::LogNormal { mu: 0.25, sigma: 0.8 },
+        ] {
+            let c = HostConfig { cpu_workers: 3, dispatch_overhead_us: 1200, latency };
+            let back = HostConfig::from_value(
+                &crate::util::json::parse(&c.to_value().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn invalid_distributions_rejected_when_active() {
+        let mut c = HostConfig::workers(2);
+        c.latency = HostLatency::Uniform { lo: 2.0, hi: 1.0 };
+        assert!(c.validate().is_err(), "lo > hi");
+        c.latency = HostLatency::Uniform { lo: 0.0, hi: 1.0 };
+        assert!(c.validate().is_err(), "zero lo (a free tool call)");
+        c.latency = HostLatency::LogNormal { mu: f64::NAN, sigma: 0.5 };
+        assert!(c.validate().is_err(), "non-finite mu");
+        c.latency = HostLatency::LogNormal { mu: 0.0, sigma: -0.5 };
+        assert!(c.validate().is_err(), "negative sigma");
+    }
+
+    #[test]
+    fn from_value_fills_defaults() {
+        let v = crate::util::json::parse(r#"{"cpu_workers": 2}"#).unwrap();
+        let c = HostConfig::from_value(&v).unwrap();
+        assert!(c.is_active());
+        assert_eq!(c.cpu_workers, 2);
+        assert_eq!(c.dispatch_overhead_us, HostConfig::DEFAULT_DISPATCH_US);
+        assert_eq!(c.latency, HostLatency::Fixed);
+    }
+
+    #[test]
+    fn cli_dist_parses_and_round_trips() {
+        for (s, want) in [
+            ("fixed", HostLatency::Fixed),
+            ("uniform:0.5,1.5", HostLatency::Uniform { lo: 0.5, hi: 1.5 }),
+            ("lognormal:0,0.8", HostLatency::LogNormal { mu: 0.0, sigma: 0.8 }),
+        ] {
+            let got: HostLatency = s.parse().unwrap();
+            assert_eq!(got, want, "{s}");
+            let again: HostLatency = got.to_string().parse().unwrap();
+            assert_eq!(again, got, "display round-trip for {s}");
+        }
+        assert!("uniform".parse::<HostLatency>().is_err(), "missing params");
+        assert!("uniform:1".parse::<HostLatency>().is_err(), "one param");
+        assert!("fixed:1,2".parse::<HostLatency>().is_err(), "stray params");
+        assert!("pareto:1,2".parse::<HostLatency>().is_err(), "unknown dist");
+    }
+}

@@ -10,6 +10,7 @@ mod autoscale;
 mod chaos;
 mod cluster;
 mod gpu;
+mod host;
 mod kv;
 mod model;
 mod scheduler;
@@ -19,6 +20,7 @@ pub use autoscale::AutoscaleConfig;
 pub use chaos::{ChaosConfig, FaultEvent, FaultKind, CHAOS_STREAM};
 pub use cluster::{ClusterConfig, RouterPolicy};
 pub use gpu::{GpuProfile, GpuKind};
+pub use host::{HostConfig, HostLatency, HOST_STREAM};
 pub use kv::KvConfig;
 pub use model::{ModelProfile, ModelKind};
 pub use scheduler::SchedulerConfig;
@@ -43,6 +45,9 @@ pub struct Config {
     /// KV-cache geometry and prefix-sharing policy (default: effectively
     /// unbounded, sharing off — the pre-memory-model behavior).
     pub kv: KvConfig,
+    /// Host-execution model: CPU workers serving tool calls (default:
+    /// unbounded — the pre-host-model free-tool-latency behavior).
+    pub host: HostConfig,
     /// Fleet simulation defaults (default: 1 replica — single-GPU runs).
     pub cluster: ClusterConfig,
 }
@@ -106,6 +111,7 @@ impl Config {
             slo,
             engine: EngineConfig::default(),
             kv: KvConfig::default(),
+            host: HostConfig::default(),
             cluster: ClusterConfig::default(),
         }
     }
@@ -173,6 +179,7 @@ impl Config {
                     ("prefix_sharing", Value::Bool(self.kv.prefix_sharing)),
                 ]),
             ),
+            ("host", self.host.to_value()),
             (
                 "cluster",
                 Value::obj(vec![
@@ -240,6 +247,18 @@ impl Config {
             override_usize(k, "block_size", &mut cfg.kv.block_size);
             override_bool(k, "prefix_sharing", &mut cfg.kv.prefix_sharing);
         }
+        if let Some(h) = v.get("host") {
+            // Sparse like the other sections: absent fields keep their
+            // current values; the distribution replaces wholesale when
+            // present (its parameters are meaningless across kinds).
+            override_usize(h, "cpu_workers", &mut cfg.host.cpu_workers);
+            if let Some(x) = h.get("dispatch_overhead_us").and_then(|x| x.as_u64()) {
+                cfg.host.dispatch_overhead_us = x;
+            }
+            if let Some(l) = h.get("latency") {
+                cfg.host.latency = HostLatency::from_value(l)?;
+            }
+        }
         if let Some(c) = v.get("cluster") {
             override_usize(c, "replicas", &mut cfg.cluster.replicas);
             if let Some(s) = c.get("router").and_then(|x| x.as_str()) {
@@ -274,6 +293,7 @@ impl Config {
             self.kv.num_blocks,
             self.kv.block_size
         );
+        self.host.validate()?;
         anyhow::ensure!(self.cluster.replicas >= 1, "cluster.replicas must be >= 1");
         Ok(())
     }
@@ -362,6 +382,30 @@ mod tests {
         assert_eq!(cfg.kv.block_size, 16, "untouched fields survive");
         assert!(cfg.kv.prefix_sharing);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn host_section_overrides_apply_and_round_trip() {
+        let mut cfg = Config::default();
+        assert!(!cfg.host.is_active(), "presets ship the inert host");
+        let v = crate::util::json::parse(
+            r#"{"host": {"cpu_workers": 2, "latency": {"dist": "lognormal", "sigma": 0.8}}}"#,
+        )
+        .unwrap();
+        cfg.apply_overrides(&v).unwrap();
+        assert_eq!(cfg.host.cpu_workers, 2);
+        assert_eq!(
+            cfg.host.dispatch_overhead_us,
+            HostConfig::DEFAULT_DISPATCH_US,
+            "untouched fields survive"
+        );
+        assert_eq!(cfg.host.latency, HostLatency::LogNormal { mu: 0.0, sigma: 0.8 });
+        cfg.validate().unwrap();
+        let back = Config::from_value(&crate::util::json::parse(&cfg.to_json()).unwrap()).unwrap();
+        assert_eq!(back.host, cfg.host);
+        // An invalid distribution on an active host is a loud error.
+        cfg.host.latency = HostLatency::Uniform { lo: 2.0, hi: 1.0 };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

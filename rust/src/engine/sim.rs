@@ -30,6 +30,7 @@ use crate::coordinator::{
 };
 use crate::gpusim::CostModel;
 use crate::greenctx::{GreenContextPool, RebindStats};
+use crate::host::{HostReport, HostSamples, HostState};
 use crate::metrics::{
     KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample, WorkflowReport,
 };
@@ -229,6 +230,10 @@ pub struct SimOutcome {
     /// Task-level workflow metrics (makespan, critical path, task-SLO) —
     /// present only when the workload came from a workflow DAG scenario.
     pub workflow: Option<WorkflowReport>,
+    /// Host-contention metrics (tool-wait percentiles, worker utilization)
+    /// — present only when `Config::host` is active (`cpu_workers > 0`);
+    /// `None` on the legacy unbounded-host path.
+    pub host: Option<HostReport>,
     /// Scheduler decisions (tick time us, b_prefill, r_min).
     pub control_trace: Vec<(u64, u32, u32)>,
     /// Realized cold-prefill arrival timestamp per session (us). For
@@ -617,6 +622,9 @@ struct Sim {
     kv: KvState,
     /// Workflow orchestration state (`None` on every legacy path).
     wf: Option<WfState>,
+    /// Host execution model (`None` under the inert default — every tool
+    /// path then takes the exact legacy `now + latency` pushes).
+    host: Option<HostState>,
     /// Driver-mode state (`None` on every batch path; see [`SimDriver`]).
     driver: Option<DriverState>,
     /// Lazily materialized system-prompt token ids (radix lookups/inserts;
@@ -643,6 +651,19 @@ impl Sim {
     fn push(&mut self, t: u64, ev: Ev) {
         self.seq += 1;
         self.heap.push(Reverse((t, self.seq, ev)));
+    }
+
+    /// Completion timestamp of a tool call issued at `at` with scripted
+    /// latency `lat`: through the replica's FIFO worker queue when the
+    /// host model is active, the legacy free path (`at + lat`) otherwise.
+    /// The caller pushes the returned timestamp with its *existing* event
+    /// kind, so the host adds no new event class and tie order against
+    /// arrivals/ticks is unchanged.
+    fn host_done_at(&mut self, at: u64, lat: u64) -> u64 {
+        match &mut self.host {
+            Some(h) => h.issue(at, lat),
+            None => at + lat,
+        }
     }
 
     fn log_event(&mut self, kind: ExecEventKind) {
@@ -878,7 +899,11 @@ impl Sim {
         };
         let now = self.now;
         for (s2, delay) in resolved.arrivals {
-            self.push(now + delay, Ev::Arrive(s2));
+            // A positive release delay is a folded tool edge (workflow tool
+            // nodes, including realized fault-retry costs) and occupies a
+            // host worker; zero-delay releases are pure join barriers.
+            let at = if delay > 0 { self.host_done_at(now, delay) } else { now };
+            self.push(at, Ev::Arrive(s2));
         }
         for (s2, step) in resolved.steps {
             // Only a session parked *at this step* resumes here; a barrier
@@ -890,7 +915,8 @@ impl Sim {
             if at_step && wf.parked[s2] {
                 wf.parked[s2] = false;
                 let lat = self.sessions[s2].script.steps[step].tool_latency_us;
-                self.push(now + lat, Ev::ToolReturn(s2));
+                let done = self.host_done_at(now, lat);
+                self.push(done, Ev::ToolReturn(s2));
             }
         }
     }
@@ -953,7 +979,8 @@ impl Sim {
                 self.driver.as_mut().expect("gated step implies driver mode").parked[sess] =
                     true;
             } else {
-                self.push(self.now + lat, Ev::ToolReturn(sess));
+                let done = self.host_done_at(self.now, lat);
+                self.push(done, Ev::ToolReturn(sess));
             }
         } else {
             self.sessions[sess].phase = SessPhase::Done;
@@ -1837,17 +1864,20 @@ pub fn run_sim(cfg: &Config, policy: Policy, params: &SimParams) -> SimOutcome {
     run_sim_scripts(cfg, policy, params, scripts)
 }
 
-/// Internal run switches: execution-event capture and per-token timeline
-/// retention (the latter is disabled on the sweep hot path).
+/// Internal run switches: execution-event capture, per-token timeline
+/// retention (the latter is disabled on the sweep hot path), and the seed
+/// the host model folds its latency stream from (0 where no run seed
+/// exists — trace replay; irrelevant when `Config::host` is inert).
 #[derive(Debug, Clone, Copy)]
 struct RunFlags {
     record_events: bool,
     record_timeline: bool,
+    host_seed: u64,
 }
 
 impl Default for RunFlags {
     fn default() -> Self {
-        Self { record_events: false, record_timeline: true }
+        Self { record_events: false, record_timeline: true, host_seed: 0 }
     }
 }
 
@@ -1864,7 +1894,8 @@ pub fn run_sim_scripts(
         stagger_us: params.stagger_us,
         think_time_us: params.think_time_us,
     };
-    run_sim_inner(cfg, policy, scripts, plan, RunFlags::default()).0
+    let flags = RunFlags { host_seed: params.seed, ..RunFlags::default() };
+    run_sim_inner(cfg, policy, scripts, plan, flags).0
 }
 
 /// Scripts + explicit arrival plan from a recorded trace.
@@ -1930,7 +1961,8 @@ pub fn run_sim_trace_recorded(
 pub fn run_scenario(cfg: &Config, policy: Policy, scenario: &Scenario, seed: u64) -> SimOutcome {
     let cfg = scenario.effective_config(cfg);
     let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
-    run_sim_inner(&cfg, policy, scripts, plan, RunFlags::default()).0
+    let flags = RunFlags { host_seed: seed, ..RunFlags::default() };
+    run_sim_inner(&cfg, policy, scripts, plan, flags).0
 }
 
 /// [`run_scenario`] with per-token timeline retention disabled — the sweep
@@ -1945,7 +1977,7 @@ pub fn run_scenario_fast(
 ) -> SimOutcome {
     let cfg = scenario.effective_config(cfg);
     let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
-    let flags = RunFlags { record_timeline: false, ..RunFlags::default() };
+    let flags = RunFlags { record_timeline: false, host_seed: seed, ..RunFlags::default() };
     run_sim_inner(&cfg, policy, scripts, plan, flags).0
 }
 
@@ -1958,7 +1990,7 @@ pub fn run_scenario_recorded(
 ) -> (SimOutcome, ExecTrace) {
     let cfg = scenario.effective_config(cfg);
     let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
-    let flags = RunFlags { record_events: true, ..RunFlags::default() };
+    let flags = RunFlags { record_events: true, host_seed: seed, ..RunFlags::default() };
     let (out, log) = run_sim_inner(&cfg, policy, scripts, plan, flags);
     (out, log.unwrap_or_default())
 }
@@ -1978,7 +2010,8 @@ pub fn record_scenario_trace(
 ) -> (SimOutcome, Trace) {
     let cfg = scenario.effective_config(cfg);
     let (scripts, plan) = scenario_inputs(&cfg, scenario, seed);
-    let (out, _) = run_sim_inner(&cfg, policy, scripts.clone(), plan, RunFlags::default());
+    let flags = RunFlags { host_seed: seed, ..RunFlags::default() };
+    let (out, _) = run_sim_inner(&cfg, policy, scripts.clone(), plan, flags);
     let trace = Trace::with_arrivals(scripts, &out.arrivals_us);
     (out, trace)
 }
@@ -2067,6 +2100,11 @@ impl Sim {
             done_count: 0,
             kv,
             wf: None,
+            host: if cfg.host.is_active() {
+                Some(HostState::new(&cfg.host, flags.host_seed, 0))
+            } else {
+                None
+            },
             driver: None,
             prompt_ids: vec![None; n_sessions],
             step_scratch: Vec::new(),
@@ -2110,6 +2148,7 @@ impl Sim {
                 wf.plan.tool_retries,
             )
         });
+        let host = self.host.as_ref().map(|h| h.report(end));
         SimOutcome {
             policy_name: policy.name().to_string(),
             report,
@@ -2127,6 +2166,7 @@ impl Sim {
             kv_peak_tokens,
             kv: kv_report,
             workflow,
+            host,
             control_trace: std::mem::take(&mut self.control_trace),
             arrivals_us: std::mem::take(&mut self.arrival_times),
         }
@@ -2340,8 +2380,35 @@ impl SimDriver {
         if wake {
             d.parked[sess] = false;
             let lat = self.sim.sessions[sess].script.steps[step].tool_latency_us;
-            self.sim.push(at_us + lat, Ev::ToolReturn(sess));
+            let done = self.sim.host_done_at(at_us, lat);
+            self.sim.push(done, Ev::ToolReturn(sess));
         }
+    }
+
+    /// Rebind the replica's host latency stream to `(run seed, replica
+    /// slot)` — the fleet calls this right after construction so each
+    /// replica's draws fold from its own slot of `HOST_STREAM`. No-op when
+    /// `Config::host` is inert.
+    pub fn set_host_seed(&mut self, seed: u64, replica: u64) {
+        if self.sim.cfg.host.is_active() {
+            self.sim.host = Some(HostState::new(&self.sim.cfg.host, seed, replica));
+        }
+    }
+
+    /// Completion timestamp for a fleet-level tool edge (workflow release
+    /// delays, deferred crashed-session wakes) executing on *this*
+    /// replica's host at `at_us`: queued when the host model is active,
+    /// the legacy `at_us + lat` otherwise.
+    pub fn host_tool_done_at(&mut self, at_us: u64, lat: u64) -> u64 {
+        self.sim.host_done_at(at_us, lat)
+    }
+
+    /// Raw host wait samples + counters for fleet aggregation (percentiles
+    /// do not compose across replicas); `None` when the host model is
+    /// inert. Read before [`SimDriver::finish`], like
+    /// [`SimDriver::memory_stalls`].
+    pub fn host_samples(&self) -> Option<HostSamples> {
+        self.sim.host.as_ref().map(|h| h.samples())
     }
 
     /// Timestamp of the next pending event, if any (the fleet loop's

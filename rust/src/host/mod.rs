@@ -1,0 +1,345 @@
+//! Host execution model: the replica CPU as a contended resource.
+//!
+//! Every tool call a replica makes — scripted session tool waits, workflow
+//! `tool` nodes (including realized fault-retry costs), and fleet-level
+//! join release delays — executes on the replica's host, not on the GPU.
+//! With an active [`HostConfig`] that host is `K` CPU workers serving a
+//! FIFO tool-slot queue on the simulator's virtual clock: a call issued at
+//! `t` with scripted latency `L` occupies one worker for
+//! `dispatch_overhead_us + scale(L)` starting at `max(t, earliest worker
+//! free)`; when every worker is busy the call waits, and that wait shows
+//! up in task latency and in [`HostReport`].
+//!
+//! # Determinism
+//!
+//! Tool calls reach [`HostState::issue`] in event-processing order, which
+//! the engine's heap keeps non-decreasing in time with a stable sequence
+//! tie-break — so FIFO order, worker assignment, and the per-call latency
+//! draws (folded from [`HOST_STREAM`][crate::config::HOST_STREAM] per
+//! replica) are all pure functions of `(seed, scenario, config)`. The host
+//! introduces no new event class: a routed call simply schedules its
+//! existing completion event at the queued finish time instead of
+//! `t + L`, so tie order against arrivals/chaos/control ticks is
+//! unchanged. The inert default (`cpu_workers == 0`) never constructs a
+//! `HostState` and the legacy `t + L` pushes run untouched —
+//! byte-identical outputs, locked in `rust/tests/host.rs`.
+
+use crate::config::{HostConfig, HostLatency, HOST_STREAM};
+use crate::metrics::percentile;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One replica's host: `K` CPU workers serving tool calls FIFO on the
+/// virtual clock.
+#[derive(Debug, Clone)]
+pub struct HostState {
+    cfg: HostConfig,
+    rng: Rng,
+    /// Per-worker virtual time at which the worker next becomes free.
+    free_at: Vec<u64>,
+    /// Completion timestamps of calls still outstanding (running or
+    /// queued); pruned lazily against the issue clock.
+    outstanding: Vec<u64>,
+    /// Per-call queue wait (ms) — raw samples, harvested by the fleet.
+    waits_ms: Vec<f64>,
+    busy_us: u64,
+    calls: u64,
+    queued_calls: u64,
+    peak_inflight: u64,
+}
+
+impl HostState {
+    /// Build the host for one replica. `seed` is the run seed; draws fold
+    /// through `Rng::fold(Rng::fold(seed, HOST_STREAM), replica)` so each
+    /// replica owns an independent latency stream and no other stream in
+    /// the run is perturbed.
+    pub fn new(cfg: &HostConfig, seed: u64, replica: u64) -> Self {
+        debug_assert!(cfg.is_active(), "inert hosts must not be constructed");
+        Self {
+            cfg: cfg.clone(),
+            rng: Rng::fold(Rng::fold(seed, HOST_STREAM), replica),
+            free_at: vec![0; cfg.cpu_workers],
+            outstanding: Vec::new(),
+            waits_ms: Vec::new(),
+            busy_us: 0,
+            calls: 0,
+            queued_calls: 0,
+            peak_inflight: 0,
+        }
+    }
+
+    /// Issue a tool call at virtual time `now` with scripted latency
+    /// `latency_us`; returns its completion timestamp (>= the legacy
+    /// `now + latency_us` whenever the scale factor is >= 1).
+    ///
+    /// Must be called in non-decreasing `now` order (event-processing
+    /// order guarantees this).
+    pub fn issue(&mut self, now: u64, latency_us: u64) -> u64 {
+        let service = self.cfg.dispatch_overhead_us + self.scale(latency_us);
+        // Earliest-free worker, lowest index on ties (deterministic).
+        let (k, _) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &t)| (t, i))
+            .expect("active host has >= 1 worker");
+        let start = self.free_at[k].max(now);
+        let done = start + service;
+        self.free_at[k] = done;
+        let wait = start - now;
+        self.waits_ms.push(wait as f64 / 1000.0);
+        self.busy_us += service;
+        self.calls += 1;
+        if wait > 0 {
+            self.queued_calls += 1;
+        }
+        self.outstanding.retain(|&c| c > now);
+        self.outstanding.push(done);
+        self.peak_inflight = self.peak_inflight.max(self.outstanding.len() as u64);
+        done
+    }
+
+    /// Apply the configured service-time distribution to a scripted
+    /// latency. `Fixed` consumes no randomness.
+    fn scale(&mut self, latency_us: u64) -> u64 {
+        match self.cfg.latency {
+            HostLatency::Fixed => latency_us,
+            HostLatency::Uniform { lo, hi } => {
+                let f = self.rng.range_f64(lo, hi);
+                (latency_us as f64 * f).round() as u64
+            }
+            HostLatency::LogNormal { mu, sigma } => {
+                let f = (mu + sigma * self.rng.normal()).exp();
+                (latency_us as f64 * f).round() as u64
+            }
+        }
+    }
+
+    /// Raw per-host samples and counters, for fleet-level aggregation
+    /// (percentiles do not compose, so the fleet re-ranks raw waits).
+    pub fn samples(&self) -> HostSamples {
+        HostSamples {
+            waits_ms: self.waits_ms.clone(),
+            busy_us: self.busy_us,
+            calls: self.calls,
+            queued_calls: self.queued_calls,
+            peak_inflight: self.peak_inflight,
+        }
+    }
+
+    /// Report for a single-replica run over `horizon_us` of virtual time.
+    pub fn report(&self, horizon_us: u64) -> HostReport {
+        HostReport::from_samples(
+            self.cfg.cpu_workers,
+            &self.samples(),
+            self.cfg.cpu_workers as u64 * horizon_us,
+        )
+    }
+}
+
+/// Raw counters + wait samples from one host incarnation, mergeable
+/// across a fleet (waits concatenate, counters sum, peaks max).
+#[derive(Debug, Clone, Default)]
+pub struct HostSamples {
+    pub waits_ms: Vec<f64>,
+    pub busy_us: u64,
+    pub calls: u64,
+    pub queued_calls: u64,
+    pub peak_inflight: u64,
+}
+
+impl HostSamples {
+    /// Fold another incarnation's samples into this accumulator.
+    pub fn merge(&mut self, other: &HostSamples) {
+        self.waits_ms.extend_from_slice(&other.waits_ms);
+        self.busy_us += other.busy_us;
+        self.calls += other.calls;
+        self.queued_calls += other.queued_calls;
+        self.peak_inflight = self.peak_inflight.max(other.peak_inflight);
+    }
+}
+
+/// Host-side contention metrics for one run (single replica or fleet).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostReport {
+    /// CPU workers per replica (the configured `K`).
+    pub cpu_workers: usize,
+    /// Tool calls served by the host model.
+    pub calls: u64,
+    /// Calls that found every worker busy and queued (wait > 0).
+    pub queued_calls: u64,
+    /// Median queue wait before a worker picked the call up (ms).
+    pub tool_wait_p50_ms: f64,
+    /// Tail queue wait (ms) — the second knee's headline metric.
+    pub tool_wait_p99_ms: f64,
+    /// Busy worker-time over total worker-time (fleet runs: summed over
+    /// replicas; approximate under autoscaling, where booted replicas
+    /// exist for only part of the horizon).
+    pub utilization: f64,
+    /// Peak concurrent outstanding tool calls (running + queued) on any
+    /// single replica.
+    pub peak_inflight: u64,
+}
+
+impl HostReport {
+    /// Build from merged samples. `capacity_us` is the total worker-time
+    /// in the horizon (workers × wall-clock × replicas).
+    pub fn from_samples(cpu_workers: usize, s: &HostSamples, capacity_us: u64) -> Self {
+        let utilization = if capacity_us > 0 {
+            (s.busy_us as f64 / capacity_us as f64).min(1.0)
+        } else {
+            0.0
+        };
+        Self {
+            cpu_workers,
+            calls: s.calls,
+            queued_calls: s.queued_calls,
+            tool_wait_p50_ms: percentile(&s.waits_ms, 50.0),
+            tool_wait_p99_ms: percentile(&s.waits_ms, 99.0),
+            utilization,
+            peak_inflight: s.peak_inflight,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("cpu_workers", self.cpu_workers.into()),
+            ("calls", self.calls.into()),
+            ("queued_calls", self.queued_calls.into()),
+            ("tool_wait_p50_ms", self.tool_wait_p50_ms.into()),
+            ("tool_wait_p99_ms", self.tool_wait_p99_ms.into()),
+            ("utilization", self.utilization.into()),
+            ("peak_inflight", self.peak_inflight.into()),
+        ])
+    }
+}
+
+impl std::fmt::Display for HostReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "host: {} workers | calls {} ({} queued) | tool wait p50/p99 {:.1}/{:.1} ms | \
+             util {:.1}% | peak in-flight {}",
+            self.cpu_workers,
+            self.calls,
+            self.queued_calls,
+            self.tool_wait_p50_ms,
+            self.tool_wait_p99_ms,
+            self.utilization * 100.0,
+            self.peak_inflight
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host(workers: usize) -> HostState {
+        HostState::new(&HostConfig::workers(workers), 7, 0)
+    }
+
+    #[test]
+    fn uncontended_call_pays_only_dispatch() {
+        let mut h = host(2);
+        let done = h.issue(1_000, 10_000);
+        assert_eq!(done, 1_000 + HostConfig::DEFAULT_DISPATCH_US + 10_000);
+        assert_eq!(h.samples().queued_calls, 0);
+        assert_eq!(h.samples().waits_ms, vec![0.0]);
+    }
+
+    #[test]
+    fn third_call_on_two_workers_queues_fifo() {
+        let mut h = host(2);
+        let d = HostConfig::DEFAULT_DISPATCH_US;
+        let a = h.issue(0, 10_000); // worker 0: 0 .. 10_500
+        let b = h.issue(0, 20_000); // worker 1: 0 .. 20_500
+        let c = h.issue(0, 5_000); // queues behind a on worker 0
+        assert_eq!(a, 10_000 + d);
+        assert_eq!(b, 20_000 + d);
+        assert_eq!(c, a + 5_000 + d, "third call starts when worker 0 frees");
+        let s = h.samples();
+        assert_eq!(s.queued_calls, 1);
+        assert_eq!(s.peak_inflight, 3);
+        assert_eq!(s.waits_ms[2], a as f64 / 1000.0);
+        // A later call after the backlog drains is uncontended again.
+        let e = h.issue(100_000, 1_000);
+        assert_eq!(e, 101_000 + d);
+        assert_eq!(h.samples().queued_calls, 1, "no new queueing");
+    }
+
+    #[test]
+    fn more_workers_never_finish_later() {
+        // Same call pattern on 1 vs 4 workers: each call's completion under
+        // 4 workers is <= its completion under 1 worker.
+        let pattern: &[(u64, u64)] = &[(0, 8_000), (100, 9_000), (200, 7_000), (300, 6_000)];
+        let mut narrow = host(1);
+        let mut wide = host(4);
+        for &(t, l) in pattern {
+            let n = narrow.issue(t, l);
+            let w = wide.issue(t, l);
+            assert!(w <= n, "wider host finished later: {w} > {n}");
+        }
+        assert!(narrow.samples().queued_calls > wide.samples().queued_calls);
+    }
+
+    #[test]
+    fn issue_order_and_draws_are_deterministic() {
+        let cfg = HostConfig {
+            latency: HostLatency::LogNormal { mu: 0.0, sigma: 0.8 },
+            ..HostConfig::workers(2)
+        };
+        let run = |seed: u64| {
+            let mut h = HostState::new(&cfg, seed, 3);
+            (0..50).map(|i| h.issue(i * 500, 4_000)).collect::<Vec<u64>>()
+        };
+        assert_eq!(run(7), run(7), "same (seed, replica) reproduces");
+        assert_ne!(run(7), run(8), "seed changes the draws");
+        let mut other = HostState::new(&cfg, 7, 4);
+        let theirs: Vec<u64> = (0..50).map(|i| other.issue(i * 500, 4_000)).collect();
+        assert_ne!(run(7), theirs, "replicas own independent streams");
+    }
+
+    #[test]
+    fn fixed_dist_consumes_no_randomness() {
+        let mut a = HostState::new(&HostConfig::workers(2), 7, 0);
+        let mut b = HostState::new(&HostConfig::workers(2), 99, 0);
+        for i in 0..20 {
+            assert_eq!(a.issue(i * 100, 3_000), b.issue(i * 100, 3_000));
+        }
+    }
+
+    #[test]
+    fn report_aggregates_utilization_and_percentiles() {
+        let mut h = host(1);
+        let d = HostConfig::DEFAULT_DISPATCH_US;
+        h.issue(0, 10_000);
+        h.issue(0, 10_000);
+        let horizon = 2 * (10_000 + d);
+        let r = h.report(horizon);
+        assert_eq!(r.calls, 2);
+        assert_eq!(r.queued_calls, 1);
+        assert!((r.utilization - 1.0).abs() < 1e-9, "back-to-back on one worker");
+        assert_eq!(r.peak_inflight, 2);
+        assert!(r.tool_wait_p99_ms > r.tool_wait_p50_ms);
+        let v = r.to_value();
+        assert_eq!(v.get("cpu_workers").and_then(|x| x.as_u64()), Some(1));
+        assert!(format!("{r}").contains("host: 1 workers"));
+    }
+
+    #[test]
+    fn samples_merge_across_incarnations() {
+        let mut a = host(2);
+        let mut b = host(2);
+        a.issue(0, 5_000);
+        a.issue(0, 5_000);
+        a.issue(0, 5_000);
+        b.issue(0, 1_000);
+        let mut acc = a.samples();
+        acc.merge(&b.samples());
+        assert_eq!(acc.calls, 4);
+        assert_eq!(acc.queued_calls, 1);
+        assert_eq!(acc.peak_inflight, 3, "peak is a max, not a sum");
+        assert_eq!(acc.waits_ms.len(), 4);
+    }
+}

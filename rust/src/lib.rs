@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod gpusim;
 pub mod greenctx;
+pub mod host;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;

@@ -11,6 +11,7 @@
 use super::percentile::Summary;
 use super::recorder::WorkflowReport;
 use super::slo::SloReport;
+use crate::host::HostReport;
 use crate::util::json::Value;
 
 /// Chaos-layer counters of one fleet run: replica faults and their cost.
@@ -173,6 +174,11 @@ pub struct FleetReport {
     /// Autoscale control-plane counters; None on static fleets (keeps
     /// static-fleet JSON byte-identical to the legacy form).
     pub autoscale: Option<AutoscaleStats>,
+    /// Host execution report (tool waits, worker utilization) recomputed
+    /// from every replica's raw wait samples; None when
+    /// [`crate::config::HostConfig`] is inert (keeps unhosted JSON
+    /// byte-identical to the legacy form).
+    pub host: Option<HostReport>,
 }
 
 /// Population coefficient of variation of per-replica token counts.
@@ -256,6 +262,9 @@ impl FleetReport {
         if let Some(a) = &self.autoscale {
             fields.push(("autoscale", a.to_value()));
         }
+        if let Some(h) = &self.host {
+            fields.push(("host", h.to_value()));
+        }
         Value::obj(fields)
     }
 }
@@ -312,6 +321,9 @@ impl std::fmt::Display for FleetReport {
         if let Some(a) = &self.autoscale {
             write!(f, "\n  scale {a}")?;
         }
+        if let Some(h) = &self.host {
+            write!(f, "\n  {h}")?;
+        }
         Ok(())
     }
 }
@@ -346,6 +358,7 @@ mod tests {
             workflow: None,
             chaos: None,
             autoscale: None,
+            host: None,
         }
     }
 
@@ -400,6 +413,29 @@ mod tests {
         let text = format!("{chaotic}");
         assert!(text.contains("2 crashes 1 drains"));
         assert!(text.contains("3 rerouted"));
+    }
+
+    #[test]
+    fn host_report_is_gated() {
+        let unhosted = report(vec![50, 50]);
+        assert!(!unhosted.to_value().to_string().contains("\"host\""));
+        let mut hosted = report(vec![50, 50]);
+        hosted.host = Some(HostReport {
+            cpu_workers: 2,
+            calls: 40,
+            queued_calls: 12,
+            tool_wait_p50_ms: 1.5,
+            tool_wait_p99_ms: 9.0,
+            utilization: 0.62,
+            peak_inflight: 5,
+        });
+        let v = hosted.to_value().to_string();
+        assert!(v.contains("\"host\""));
+        assert!(v.contains("\"queued_calls\":12"));
+        assert!(v.contains("\"tool_wait_p99_ms\":9"));
+        let text = format!("{hosted}");
+        assert!(text.contains("host: 2 workers"));
+        assert!(text.contains("peak in-flight 5"));
     }
 
     #[test]

@@ -24,6 +24,7 @@ USAGE:
                              [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl | --events out.jsonl]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
+                             [--cpu-workers N [--tool-dist D]]
   agentserve scenario record (--name S | --file f.json) --out trace.jsonl
                              [--policy P] [--model M] [--gpu G] [--seed N]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
@@ -32,7 +33,8 @@ USAGE:
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
   agentserve scenario sweep  (--name SWEEP | (--scenario S | --file f.json)
                               (--rates r1,r2,… | --agents n1,n2,… | --mix f1,f2,…
-                               | --kv-blocks b1,b2,… | --fan-outs d1,d2,…))
+                               | --kv-blocks b1,b2,… | --fan-outs d1,d2,…
+                               | --cpu-workers c1,c2,…))
                              [--policy P] [--model M] [--gpu G] [--seed N]
                              [--threads T] [--out report.json] [--csv report.csv]
   agentserve experiment run  --file manifest.json [--model M] [--gpu G]
@@ -49,6 +51,7 @@ USAGE:
                              [--fail-prob P] [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
+                             [--cpu-workers N [--tool-dist D]]
   agentserve cluster list
   agentserve cluster run     (--name S | --file f.json) [--replicas N] [--router R]
                              [--policy P | --all-policies] [--model M] [--gpu G]
@@ -56,6 +59,7 @@ USAGE:
                              [--autoscale [--min-replicas N] [--max-replicas M]]
                              [--fail-rate R [--restart-ms MS]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
+                             [--cpu-workers N [--tool-dist D]]
   agentserve cluster sweep   (--name SWEEP | (--scenario S | --file f.json)
                               (--replica-counts n1,n2,… | --chaos r1,r2,…))
                              [--router R] [--replicas N] [--policy P]
@@ -71,10 +75,10 @@ models:    3b | 7b | 8b (cost-model) / tiny (real engine)
 gpus:      a5000 | 5090
 scenarios: paper-fig5 | burst-storm | mixed-fleet | long-tool | open-loop-sweep
            | memory-pressure | shared-prefix-fleet | failure-storm
-           | diurnal-burst
+           | diurnal-burst | tool-storm | slow-sandbox
 sweeps:    paper-fig5-sweep | agent-scaling | mix-shift | kv-knee | fanout-knee
-           | gpus-for-slo | chaos-resilience | autoscale-frontier (sweep runs
-           all paper policies unless --policy is given; see
+           | cpu-knee | gpus-for-slo | chaos-resilience | autoscale-frontier
+           (sweep runs all paper policies unless --policy is given; see
            rust/src/workload/README.md for the scenario/sweep file schema)
 routers:   round-robin | least-outstanding | session-affinity | cache-aware
            — fleet session routing for `cluster run|sweep` (--replicas N
@@ -87,6 +91,14 @@ kv:        --kv-blocks bounds the KV pool (0 = unbounded), --kv-block-size
            sets the page size, --prefix-sharing enables cross-session
            system-prompt reuse; on `scenario sweep`, --kv-blocks is the
            memory sweep axis instead
+host:      --cpu-workers N bounds each replica's tool sandbox at N CPU
+           workers (0 = unbounded legacy host — tool calls return after
+           their scripted latency with no queueing); --tool-dist shapes the
+           seeded service-time draw: fixed | uniform:LO,HI |
+           lognormal:MU,SIGMA (multipliers on the scripted latency). On
+           `scenario sweep`, --cpu-workers c1,c2,… is the host capacity
+           axis instead; the cpu-knee registry sweep reports the smallest
+           worker count meeting the task SLO
 chaos:     `cluster run --fail-rate R` seeds replica crashes at R
            crashes/replica/min (0 = off; --restart-ms sets the cold-restart
            latency); `cluster sweep --chaos r1,r2,…` sweeps that rate on a
@@ -99,7 +111,8 @@ threads:   sweep/experiment grids fan out over a worker pool; --threads T
            cores, 1 = the serial loop. Reports are byte-identical at any
            width — parallelism changes wall-clock only
 experiment: a JSON manifest crossing rate × replicas × kv-blocks × fan-out
-           into one grid with per-cell overrides and pinned seeds;
+           × cpu-workers into one grid with per-cell overrides and pinned
+           seeds;
            `experiment example` prints a ready-to-edit manifest (schema in
            rust/src/workload/README.md)
 bench gate: `bench suite` times every registry sweep through the shared
@@ -316,6 +329,9 @@ fn print_scenario_outcome(out: &crate::engine::SimOutcome) {
     if let Some(wf) = &out.workflow {
         println!("  task  {wf}");
     }
+    if let Some(h) = &out.host {
+        println!("  host  {h}");
+    }
 }
 
 /// Apply the `--kv-blocks` / `--kv-block-size` / `--prefix-sharing` CLI
@@ -340,6 +356,39 @@ fn apply_kv_flags(
         kv.prefix_sharing = true;
     }
     cfg.kv = kv;
+    cfg.validate()?;
+    Ok(true)
+}
+
+/// Apply the `--cpu-workers` / `--tool-dist` host-execution CLI overrides
+/// onto the config. Returns whether any flag was present — when the user
+/// constrains the host explicitly, scenario-embedded `host` blocks are
+/// dropped so the CLI wins (flags merge onto the scenario's own settings).
+/// `--cpu-workers 0` is the explicit legacy host (unbounded, no queueing):
+/// it strips an active scenario host and is byte-identical to no flag at
+/// all on host-less scenarios.
+fn apply_host_flags(
+    args: &Args,
+    cfg: &mut Config,
+    scenario_host: Option<crate::config::HostConfig>,
+) -> crate::Result<bool> {
+    let present = args.get("cpu-workers").is_some() || args.get("tool-dist").is_some();
+    if !present {
+        return Ok(false);
+    }
+    let mut host = scenario_host.unwrap_or_else(|| cfg.host.clone());
+    host.cpu_workers = args.get_usize("cpu-workers", host.cpu_workers)?;
+    if let Some(d) = args.get("tool-dist") {
+        host.latency = d.parse()?;
+    }
+    // Loud refusal over silent drop: a latency shape on an inactive host
+    // model would otherwise do nothing.
+    anyhow::ensure!(
+        host.is_active() || args.get("tool-dist").is_none(),
+        "--tool-dist shapes the host tool-service distribution; pass --cpu-workers N \
+         (N >= 1) or a host-carrying scenario (e.g. tool-storm) to enable the host model"
+    );
+    cfg.host = host;
     cfg.validate()?;
     Ok(true)
 }
@@ -421,6 +470,9 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             scenario.validate()?;
             if apply_kv_flags(args, &mut cfg, scenario.kv)? {
                 scenario.kv = None;
+            }
+            if apply_host_flags(args, &mut cfg, scenario.host.clone())? {
+                scenario.host = None;
             }
             println!(
                 "== scenario '{}' | {} | {} | seed {} ==",
@@ -583,6 +635,7 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
                 cfg.slo.task_ms = ms.parse()?;
             }
             apply_kv_flags(args, &mut cfg, None)?;
+            apply_host_flags(args, &mut cfg, None)?;
             // --fail-prob installs the scenario-level tool-fault override
             // (every tool node; 3 attempts, exponential backoff).
             let tool_fault = match args.get("fail-prob") {
@@ -696,6 +749,9 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             if apply_kv_flags(args, &mut cfg, scenario.kv)? {
                 scenario.kv = None;
             }
+            if apply_host_flags(args, &mut cfg, scenario.host.clone())? {
+                scenario.host = None;
+            }
             // --autoscale hands the fleet size to the control plane: it
             // conflicts with an explicit static --replicas, and the band
             // flags mean nothing without it (loud refusal over silent drop).
@@ -808,7 +864,7 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             // Fleet grids vary replicas only; refuse the scenario-sweep
             // axis flags instead of silently dropping them (the grid the
             // user asked for must be the grid run).
-            for flag in ["rates", "agents", "mix", "kv-blocks", "fan-outs"] {
+            for flag in ["rates", "agents", "mix", "kv-blocks", "fan-outs", "cpu-workers"] {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} is a scenario-sweep axis; `cluster sweep` grids vary the \
@@ -946,6 +1002,7 @@ fn resolve_sweep_spec(
             "mix",
             "kv-blocks",
             "fan-outs",
+            "cpu-workers",
             "replica-counts",
             "chaos",
             "router",
@@ -987,12 +1044,14 @@ fn resolve_sweep_spec(
     let mix = args.get_f64_list("mix")?;
     let kv_blocks = args.get_usize_list("kv-blocks")?;
     let fan_outs = args.get_usize_list("fan-outs")?;
+    let cpu_workers = args.get_usize_list("cpu-workers")?;
     let n_axes = [
         rates.is_some(),
         agents.is_some(),
         mix.is_some(),
         kv_blocks.is_some(),
         fan_outs.is_some(),
+        cpu_workers.is_some(),
     ]
     .iter()
     .filter(|&&x| x)
@@ -1000,7 +1059,8 @@ fn resolve_sweep_spec(
     anyhow::ensure!(
         n_axes == 1,
         "pass exactly one sweep axis: --rates r1,r2,… | --agents n1,n2,… | \
-         --mix f1,f2,… | --kv-blocks b1,b2,… | --fan-outs d1,d2,…"
+         --mix f1,f2,… | --kv-blocks b1,b2,… | --fan-outs d1,d2,… | \
+         --cpu-workers c1,c2,…"
     );
     let axis = if let Some(r) = rates {
         SweepAxis::ArrivalRate(r)
@@ -1010,6 +1070,8 @@ fn resolve_sweep_spec(
         SweepAxis::MixRatio(m)
     } else if let Some(b) = kv_blocks {
         SweepAxis::KvBlocks(b)
+    } else if let Some(c) = cpu_workers {
+        SweepAxis::CpuWorkers(c)
     } else {
         SweepAxis::FanOut(fan_outs.expect("one axis is set"))
     };
@@ -1065,6 +1127,11 @@ fn print_sweep_report(report: &crate::workload::SweepReport) {
         println!(
             "memory knee (largest {} whose p99 TTFT still violates the {:.0} ms SLO):",
             report.axis, report.slo_ttft_ms
+        );
+    } else if report.axis == "cpu-workers" {
+        println!(
+            "host knee (smallest {} whose p99 task makespan meets the {:.0} ms task SLO):",
+            report.axis, report.slo_task_ms
         );
     } else if report.axis == "autoscale" {
         println!(
@@ -1230,6 +1297,27 @@ fn bench_suite(args: &Args) -> crate::Result<()> {
             wall_ms: timing.median_us / 1000.0,
             min_ms: timing.min_us / 1000.0,
             metrics,
+        });
+    }
+    // Scenario-run timing points for the fault/tide registry scenarios no
+    // sweep covers: same seeded single-GPU fast path as `scenario run`, so
+    // their SLO metrics are machine-independent too.
+    for name in ["failure-storm", "diurnal-burst"] {
+        let sc = crate::workload::Scenario::by_name(name).expect("registry scenario");
+        let mut last: Option<crate::engine::SimOutcome> = None;
+        let timing = b.case(name, || {
+            last = Some(crate::engine::run_scenario_fast(&cfg, policy, &sc, seed));
+        });
+        let out = last.take().expect("measure >= 1 runs the closure");
+        points.push(BenchPoint {
+            name: format!("scenario/{name}"),
+            wall_ms: timing.median_us / 1000.0,
+            min_ms: timing.min_us / 1000.0,
+            metrics: vec![
+                ("ttft_p99_ms".to_string(), out.report.ttft.p99),
+                ("tpot_p99_ms".to_string(), out.report.tpot.p99),
+                ("slo_rate".to_string(), out.slo.rate()),
+            ],
         });
     }
     let report = BenchReport {
@@ -1486,6 +1574,71 @@ mod tests {
         ))
         .is_err());
         assert!(run(args("scenario sweep --name kv-knee --kv-blocks 1024,2048")).is_err());
+    }
+
+    #[test]
+    fn scenario_run_host_flags_smoke() {
+        // The host-carrying registry scenarios run end to end.
+        run(args("scenario run --name tool-storm --model 3b")).unwrap();
+        run(args("scenario run --name slow-sandbox --model 3b")).unwrap();
+        // CLI override onto a plain scenario, and the explicit legacy host
+        // (--cpu-workers 0 strips an active scenario host).
+        run(args(
+            "scenario run --name paper-fig5 --model 3b --cpu-workers 2 \
+             --tool-dist uniform:0.5,1.5",
+        ))
+        .unwrap();
+        run(args("scenario run --name tool-storm --model 3b --cpu-workers 0")).unwrap();
+        // --tool-dist without an active host model is refused, as is a
+        // malformed distribution.
+        assert!(run(args("scenario run --name paper-fig5 --tool-dist fixed")).is_err());
+        assert!(run(args(
+            "scenario run --name paper-fig5 --cpu-workers 2 --tool-dist warp:1"
+        ))
+        .is_err());
+        // The flags reach `workflow run` and `cluster run` too.
+        run(args(
+            "workflow run --name supervisor-worker --tasks 2 --model 3b --cpu-workers 2",
+        ))
+        .unwrap();
+        run(args(
+            "cluster run --name tool-storm --replicas 2 --model 3b --cpu-workers 4",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn scenario_sweep_cpu_workers_axis_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_cpu_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("cpu.json");
+        let csv = dir.join("cpu.csv");
+        run(args(&format!(
+            "scenario sweep --scenario tool-storm --cpu-workers 2,8 --policy vllm \
+             --model 3b --out {} --csv {}",
+            json.to_str().unwrap(),
+            csv.to_str().unwrap()
+        )))
+        .unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(report.req_str("axis").unwrap(), "cpu-workers");
+        assert_eq!(report.req_arr("points").unwrap().len(), 2);
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        let header = csv_text.lines().next().unwrap();
+        assert!(header.contains("tool_wait_p99_ms,host_util"));
+        assert!(header.ends_with("replicas,load_cov,replica_us"));
+        std::fs::remove_file(json).unwrap();
+        std::fs::remove_file(csv).unwrap();
+        // Registry sweeps refuse a would-be-dropped axis flag; two axes at
+        // once and a zero worker count are loud errors; the host axis is a
+        // scenario sweep, not a fleet grid.
+        assert!(run(args("scenario sweep --name cpu-knee --cpu-workers 2,4")).is_err());
+        assert!(run(args(
+            "scenario sweep --scenario tool-storm --cpu-workers 2,4 --rates 1,2"
+        ))
+        .is_err());
+        assert!(run(args("scenario sweep --scenario tool-storm --cpu-workers 0,2")).is_err());
+        assert!(run(args("cluster sweep --scenario tool-storm --cpu-workers 2,4")).is_err());
     }
 
     #[test]

@@ -20,8 +20,13 @@ impl Rng {
     }
 
     /// Derive an independent stream (for shared-template prompt ids etc.).
-    pub fn fold(seed: u64, stream: u64) -> Self {
-        let mut r = Self::seed_from_u64(seed ^ stream.wrapping_mul(0xA24BAED4963EE407));
+    ///
+    /// `seed` is either a raw `u64` or another `Rng` (which contributes one
+    /// draw as seed material), so per-entity streams nest:
+    /// `Rng::fold(Rng::fold(seed, STREAM), entity)`.
+    pub fn fold(seed: impl FoldSeed, stream: u64) -> Self {
+        let mut r =
+            Self::seed_from_u64(seed.fold_seed() ^ stream.wrapping_mul(0xA24BAED4963EE407));
         r.next_u64();
         r
     }
@@ -99,6 +104,44 @@ impl Rng {
         let x = self.gamma(alpha);
         let y = self.gamma(beta);
         x / (x + y)
+    }
+}
+
+/// Seed material for [`Rng::fold`]: a raw `u64`, or an `Rng` stream whose
+/// next draw seeds the derived stream (enables nested per-entity folding).
+pub trait FoldSeed {
+    fn fold_seed(self) -> u64;
+}
+
+impl FoldSeed for u64 {
+    fn fold_seed(self) -> u64 {
+        self
+    }
+}
+
+// Integer literals default to i32; accept the common widths so existing
+// call sites like `Rng::fold(0xC0FFEE, t)` keep inferring.
+impl FoldSeed for i32 {
+    fn fold_seed(self) -> u64 {
+        self as u64
+    }
+}
+
+impl FoldSeed for u32 {
+    fn fold_seed(self) -> u64 {
+        self as u64
+    }
+}
+
+impl FoldSeed for usize {
+    fn fold_seed(self) -> u64 {
+        self as u64
+    }
+}
+
+impl FoldSeed for Rng {
+    fn fold_seed(mut self) -> u64 {
+        self.next_u64()
     }
 }
 
@@ -196,5 +239,16 @@ mod tests {
         // Same stream reproduces.
         let mut a3 = Rng::fold(7, 0);
         assert_eq!(a3.next_u64(), Rng::fold(7, 0).next_u64());
+    }
+
+    #[test]
+    fn nested_folds_are_deterministic_and_distinct() {
+        let mut a = Rng::fold(Rng::fold(7u64, 0xABCD), 1);
+        let mut b = Rng::fold(Rng::fold(7u64, 0xABCD), 1);
+        assert_eq!(a.next_u64(), b.next_u64(), "nested folds reproduce");
+        let mut c = Rng::fold(Rng::fold(7u64, 0xABCD), 2);
+        assert_ne!(a.next_u64(), c.next_u64(), "entity index separates streams");
+        let mut d = Rng::fold(Rng::fold(8u64, 0xABCD), 1);
+        assert_ne!(b.next_u64(), d.next_u64(), "base seed separates streams");
     }
 }

@@ -503,6 +503,8 @@ mod tests {
             kv: None,
             workflow: None,
             chaos: None,
+            autoscale: None,
+            host: None,
         };
         for seed in [3, 7, 11] {
             let cw = compile(&wf, ModelKind::Qwen3B, seed);

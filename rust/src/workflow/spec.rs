@@ -662,6 +662,8 @@ impl WorkflowLoad {
             kv: None,
             workflow: Some(self),
             chaos: None,
+            autoscale: None,
+            host: None,
         }
     }
 

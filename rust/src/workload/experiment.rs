@@ -2,7 +2,7 @@
 //!
 //! A [`super::SweepSpec`] drives one scenario across one axis; capacity
 //! planning wants the cross-product — rate × replicas × kv-blocks ×
-//! fan-out — with
+//! fan-out × cpu-workers — with
 //! the odd cell pinned to a different value ("at rate 1.0 give the 1-GPU
 //! cell a second replica"). An [`ExperimentSpec`] describes exactly that as
 //! a checked-in JSON manifest (`agentserve experiment run --file …`;
@@ -36,7 +36,7 @@ use crate::engine::{run_scenario_fast, Policy};
 use crate::util::json::Value;
 use std::path::Path;
 
-/// The four grid axes an experiment may cross.
+/// The five grid axes an experiment may cross.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExpAxis {
     /// Open-loop Poisson arrival rate (req/s) — replaces the base
@@ -50,11 +50,19 @@ pub enum ExpAxis {
     KvBlocks,
     /// Workflow fan-out degree (requires a workflow-carrying base).
     FanOut,
+    /// Host CPU workers per replica (dispatch overhead / latency shape
+    /// inherit from the base scenario's `host`, like the sweep axis).
+    CpuWorkers,
 }
 
 impl ExpAxis {
-    pub const ALL: [ExpAxis; 4] =
-        [ExpAxis::Rate, ExpAxis::Replicas, ExpAxis::KvBlocks, ExpAxis::FanOut];
+    pub const ALL: [ExpAxis; 5] = [
+        ExpAxis::Rate,
+        ExpAxis::Replicas,
+        ExpAxis::KvBlocks,
+        ExpAxis::FanOut,
+        ExpAxis::CpuWorkers,
+    ];
 
     /// Manifest key / report column name.
     pub fn name(self) -> &'static str {
@@ -63,6 +71,7 @@ impl ExpAxis {
             ExpAxis::Replicas => "replicas",
             ExpAxis::KvBlocks => "kv-blocks",
             ExpAxis::FanOut => "fan-out",
+            ExpAxis::CpuWorkers => "cpu-workers",
         }
     }
 
@@ -109,7 +118,7 @@ pub struct ExperimentSpec {
 fn parse_axis_name(key: &str) -> crate::Result<ExpAxis> {
     ExpAxis::from_name(key).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown grid axis '{key}' (expected rate|replicas|kv-blocks|fan-out)"
+            "unknown grid axis '{key}' (expected rate|replicas|kv-blocks|fan-out|cpu-workers)"
         )
     })
 }
@@ -350,6 +359,10 @@ impl ExperimentSpec {
                 val >= 1.0 && val.fract() == 0.0,
                 "fan-out must be a positive integer (got {val})"
             ),
+            ExpAxis::CpuWorkers => anyhow::ensure!(
+                val >= 1.0 && val.fract() == 0.0,
+                "cpu-workers must be a positive integer (got {val})"
+            ),
             ExpAxis::KvBlocks => {
                 anyhow::ensure!(
                     val >= 1.0 && val.fract() == 0.0,
@@ -438,6 +451,16 @@ impl ExperimentSpec {
                         .as_mut()
                         .expect("validate(): fan-out axes carry a workflow")
                         .fan_out = Some(val as usize);
+                }
+                ExpAxis::CpuWorkers => {
+                    let base_host = sc
+                        .host
+                        .clone()
+                        .unwrap_or_else(|| crate::config::HostConfig::workers(val as usize));
+                    sc.host = Some(crate::config::HostConfig {
+                        cpu_workers: val as usize,
+                        ..base_host
+                    });
                 }
                 ExpAxis::Replicas => {}
             }
@@ -581,8 +604,8 @@ impl ExperimentReport {
         out.push_str(
             ",overridden,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
-             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate,\
-             replicas,load_cov,replica_us\n",
+             radix_hit_rate,evictions,preemptions,stall_p99_ms,tool_wait_p99_ms,host_util,\
+             makespan_p99_ms,task_slo_rate,replicas,load_cov,replica_us\n",
         );
         for cell in &self.cells {
             for pp in &cell.per_policy {
@@ -591,7 +614,7 @@ impl ExperimentReport {
                     out.push_str(&format!(",{v}"));
                 }
                 out.push_str(&format!(
-                    ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     cell.overridden,
                     pp.policy,
                     cell.sessions,
@@ -610,6 +633,8 @@ impl ExperimentReport {
                     pp.evictions,
                     pp.preemptions,
                     pp.stall_p99_ms,
+                    pp.tool_wait_p99_ms,
+                    pp.host_util,
                     pp.makespan_p99_ms,
                     pp.task_slo_rate,
                     pp.replicas,
@@ -897,6 +922,47 @@ mod tests {
         assert!(ExperimentSpec::from_value(&v).is_err());
         let v = with(&|v| set(v, "scenario", "no-such-scenario".into()));
         assert!(ExperimentSpec::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn cpu_workers_axis_installs_the_host_config() {
+        let mut v = tiny_manifest();
+        if let Value::Obj(pairs) = &mut v {
+            if let Some(slot) = pairs.iter_mut().find(|(k, _)| k == "grid") {
+                slot.1 = Value::obj(vec![
+                    ("rate", Value::Arr(vec![1.0.into()])),
+                    ("cpu-workers", Value::Arr(vec![2.into(), 8.into()])),
+                ]);
+            }
+            // The stock overrides match on the replicas axis we removed.
+            pairs.retain(|(k, _)| k != "overrides");
+        }
+        let spec = ExperimentSpec::from_value(&v).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.n_cells(), 2);
+        let sc = spec.scenario_for(&spec.coords(1));
+        let host = sc.host.as_ref().expect("axis installs a host config");
+        assert_eq!(host.cpu_workers, 8);
+        assert!(host.is_active());
+        // A host-carrying base keeps its dispatch/latency shape; only the
+        // worker count is swept.
+        let mut carrier = spec.clone();
+        carrier.base.host = Some(crate::config::HostConfig {
+            dispatch_overhead_us: 2_000,
+            ..crate::config::HostConfig::workers(4)
+        });
+        let sc = carrier.scenario_for(&carrier.coords(0));
+        let host = sc.host.as_ref().unwrap();
+        assert_eq!((host.cpu_workers, host.dispatch_overhead_us), (2, 2_000));
+        // Fractional worker counts are refused.
+        if let Value::Obj(pairs) = &mut v {
+            if let Some(slot) = pairs.iter_mut().find(|(k, _)| k == "grid") {
+                slot.1 =
+                    Value::obj(vec![("cpu-workers", Value::Arr(vec![1.5.into()]))]);
+            }
+        }
+        let err = ExperimentSpec::from_value(&v).unwrap().validate().unwrap_err();
+        assert!(err.to_string().contains("cpu-workers"), "{err}");
     }
 
     #[test]

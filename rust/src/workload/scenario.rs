@@ -18,7 +18,9 @@
 use super::generator::WorkloadGenerator;
 use super::spec::WorkloadKind;
 use super::trace::{Trace, TraceEvent};
-use crate::config::{AutoscaleConfig, ChaosConfig, Config, KvConfig, ModelKind};
+use crate::config::{
+    AutoscaleConfig, ChaosConfig, Config, HostConfig, HostLatency, KvConfig, ModelKind,
+};
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
 use crate::workflow::WorkflowLoad;
@@ -174,6 +176,12 @@ pub struct Scenario {
     /// `min_replicas` and `max_replicas` on the virtual clock. `None` (or
     /// an inert config) keeps the static-fleet code path byte-identical.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Host execution model ([`crate::config::HostConfig`]): `cpu_workers`
+    /// CPU workers per replica serving every tool call through a FIFO
+    /// queue. `None` (or an inert config) keeps the unbounded legacy
+    /// tool-latency path byte-identical. CLI `--cpu-workers`/`--tool-dist`
+    /// override this.
+    pub host: Option<HostConfig>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -235,6 +243,9 @@ impl Scenario {
         if let Some(a) = &self.autoscale {
             a.validate()?;
         }
+        if let Some(h) = &self.host {
+            h.validate()?;
+        }
         if let Some(kv) = &self.kv {
             anyhow::ensure!(
                 kv.block_size > 0,
@@ -260,6 +271,9 @@ impl Scenario {
         let mut cfg = base.clone();
         if let Some(kv) = self.kv {
             cfg.kv = kv;
+        }
+        if let Some(h) = &self.host {
+            cfg.host = h.clone();
         }
         cfg
     }
@@ -392,6 +406,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "burst-storm".into(),
@@ -410,6 +425,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -425,6 +441,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "long-tool".into(),
@@ -446,6 +463,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -464,6 +482,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "memory-pressure".into(),
@@ -481,6 +500,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "shared-prefix-fleet".into(),
@@ -497,6 +517,7 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "failure-storm".into(),
@@ -520,6 +541,7 @@ impl Scenario {
                 }),
                 chaos: Some(ChaosConfig::seeded(20_000_000)),
                 autoscale: None,
+                host: None,
             },
             Scenario {
                 name: "diurnal-burst".into(),
@@ -541,6 +563,54 @@ impl Scenario {
                 workflow: None,
                 chaos: None,
                 autoscale: Some(AutoscaleConfig::banded(1, 4)),
+                host: None,
+            },
+            Scenario {
+                name: "tool-storm".into(),
+                description: "supervisor-worker DAGs fanned out to 12 workers per stage on a \
+                              2-worker host CPU: every join resolves into a burst of tool \
+                              calls that saturates the sandbox executor — the host-contention \
+                              scenario (`--cpu-workers` sweeps the knee)"
+                    .into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+                populations: vec![],
+                total_sessions: 12,
+                n_agents: 4,
+                kv: None,
+                workflow: Some({
+                    let mut w = WorkflowLoad::new(
+                        crate::workflow::WorkflowSpec::by_name("supervisor-worker")
+                            .expect("registry spec"),
+                    );
+                    w.fan_out = Some(12);
+                    w
+                }),
+                chaos: None,
+                autoscale: None,
+                host: Some(HostConfig::workers(2)),
+            },
+            Scenario {
+                name: "slow-sandbox".into(),
+                description: "interactive ReAct/planner mix on a host whose sandbox startup \
+                              is heavy-tailed: 2 ms dispatch + log-normal service scaling \
+                              (sigma 0.8) over 4 CPU workers — the tail-latency host scenario"
+                    .into(),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: 1.5 },
+                populations: vec![
+                    Population::new("react", WorkloadKind::ReAct, 0.6),
+                    Population::new("planner", WorkloadKind::PlanAndExecute, 0.4),
+                ],
+                total_sessions: 14,
+                n_agents: 5,
+                kv: None,
+                workflow: None,
+                chaos: None,
+                autoscale: None,
+                host: Some(HostConfig {
+                    cpu_workers: 4,
+                    dispatch_overhead_us: 2_000,
+                    latency: HostLatency::LogNormal { mu: 0.0, sigma: 0.8 },
+                }),
             },
         ]
     }
@@ -584,6 +654,9 @@ impl Scenario {
         }
         if let Some(a) = &self.autoscale {
             fields.push(("autoscale", a.to_value()));
+        }
+        if let Some(h) = &self.host {
+            fields.push(("host", h.to_value()));
         }
         Value::obj(fields)
     }
@@ -642,6 +715,10 @@ impl Scenario {
             },
             autoscale: match v.get("autoscale") {
                 Some(a) => Some(AutoscaleConfig::from_value(a)?),
+                None => None,
+            },
+            host: match v.get("host") {
+                Some(h) => Some(HostConfig::from_value(h)?),
                 None => None,
             },
         };
@@ -803,6 +880,7 @@ mod tests {
             )),
             chaos: None,
             autoscale: None,
+            host: None,
         };
         sc.validate().unwrap();
         let back = Scenario::from_value(&sc.to_value()).unwrap();
@@ -851,6 +929,36 @@ mod tests {
         // Scenarios without a config leave the field absent in JSON.
         let plain = Scenario::by_name("paper-fig5").unwrap();
         assert!(plain.to_value().get("autoscale").is_none());
+    }
+
+    #[test]
+    fn host_carrying_scenarios_round_trip_and_apply() {
+        let storm = Scenario::by_name("tool-storm").unwrap();
+        let h = storm.host.as_ref().expect("tool-storm ships a host config");
+        assert!(h.is_active() && h.cpu_workers == 2);
+        assert_eq!(storm.workflow.as_ref().unwrap().fan_out, Some(12));
+        let back = Scenario::from_value(&storm.to_value()).unwrap();
+        assert_eq!(back, storm, "host block survives the JSON round trip");
+        // effective_config applies the scenario's host; identity otherwise.
+        let base = crate::config::Config::default();
+        assert_eq!(storm.effective_config(&base).host, *h);
+        let plain = Scenario::by_name("paper-fig5").unwrap();
+        assert_eq!(plain.host, None);
+        assert!(plain.to_value().get("host").is_none(), "absent host stays absent in JSON");
+        assert!(plain.effective_config(&base).host == base.host);
+        // slow-sandbox: heavy-tailed service over 4 workers.
+        let sandbox = Scenario::by_name("slow-sandbox").unwrap();
+        let h = sandbox.host.as_ref().unwrap();
+        assert_eq!(h.cpu_workers, 4);
+        assert!(matches!(h.latency, HostLatency::LogNormal { sigma, .. } if sigma == 0.8));
+        assert_eq!(Scenario::from_value(&sandbox.to_value()).unwrap(), sandbox);
+        // An invalid host config is rejected at scenario level.
+        let mut bad = sandbox.clone();
+        bad.host = Some(HostConfig {
+            latency: HostLatency::Uniform { lo: 2.0, hi: 1.0 },
+            ..HostConfig::workers(2)
+        });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -60,6 +60,14 @@ pub enum SweepAxis {
     /// per task and a heavier join — the knee is judged on the task SLO
     /// (p99 makespan vs `slo.task_ms`), not per-request TTFT.
     FanOut(Vec<usize>),
+    /// Host CPU workers per replica: each point installs the value into the
+    /// scenario's [`crate::config::HostConfig`] (dispatch overhead and the
+    /// service distribution inherit from the base scenario's `host`,
+    /// defaulting to [`crate::config::HostConfig::workers`]). The host
+    /// capacity axis: few workers queue every tool call; the knee is
+    /// **inverse** — the smallest worker count whose p99 task makespan
+    /// *meets* the task SLO.
+    CpuWorkers(Vec<usize>),
     /// Replica count: each point runs the *unchanged* base scenario on an
     /// N-GPU fleet behind `router` ([`crate::cluster::run_cluster`]). The
     /// capacity-planning axis: the knee is **inverse** — the smallest
@@ -103,6 +111,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(_) => "mix-ratio",
             SweepAxis::KvBlocks(_) => "kv-blocks",
             SweepAxis::FanOut(_) => "fan-out",
+            SweepAxis::CpuWorkers(_) => "cpu-workers",
             SweepAxis::Replicas { .. } => "replicas",
             SweepAxis::Chaos { .. } => "chaos",
             SweepAxis::Autoscale { .. } => "autoscale",
@@ -117,6 +126,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(_) => "fraction",
             SweepAxis::KvBlocks(_) => "blocks",
             SweepAxis::FanOut(_) => "degree",
+            SweepAxis::CpuWorkers(_) => "workers",
             SweepAxis::Replicas { .. } => "GPUs",
             SweepAxis::Chaos { .. } => "crashes/min",
             SweepAxis::Autoscale { .. } => "up-thresh",
@@ -131,6 +141,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(v) => v.len(),
             SweepAxis::KvBlocks(v) => v.len(),
             SweepAxis::FanOut(v) => v.len(),
+            SweepAxis::CpuWorkers(v) => v.len(),
             SweepAxis::Replicas { counts, .. } => counts.len(),
             SweepAxis::Chaos { rates_per_min, .. } => rates_per_min.len(),
             SweepAxis::Autoscale { up_threshes, .. } => up_threshes.len(),
@@ -149,6 +160,7 @@ impl SweepAxis {
             SweepAxis::MixRatio(v) => v[i],
             SweepAxis::KvBlocks(v) => v[i] as f64,
             SweepAxis::FanOut(v) => v[i] as f64,
+            SweepAxis::CpuWorkers(v) => v[i] as f64,
             SweepAxis::Replicas { counts, .. } => counts[i] as f64,
             SweepAxis::Chaos { rates_per_min, .. } => rates_per_min[i],
             SweepAxis::Autoscale { up_threshes, .. } => up_threshes[i],
@@ -239,6 +251,11 @@ impl SweepSpec {
                     anyhow::ensure!(d >= 1, "fan-out degree must be >= 1");
                 }
             }
+            SweepAxis::CpuWorkers(cs) => {
+                for &c in cs {
+                    anyhow::ensure!(c >= 1, "cpu-workers grid value must be >= 1");
+                }
+            }
             SweepAxis::Replicas { counts, .. } => {
                 for &c in counts {
                     anyhow::ensure!(c >= 1, "replica count must be >= 1");
@@ -298,6 +315,15 @@ impl SweepSpec {
                     .as_mut()
                     .expect("validate(): fan-out sweeps carry a workflow")
                     .fan_out = Some(ds[i]);
+            }
+            SweepAxis::CpuWorkers(cs) => {
+                // Dispatch overhead and the service distribution inherit
+                // from the base scenario's host block when it carries one.
+                let base_host = sc
+                    .host
+                    .clone()
+                    .unwrap_or_else(|| crate::config::HostConfig::workers(cs[i]));
+                sc.host = Some(crate::config::HostConfig { cpu_workers: cs[i], ..base_host });
             }
             // The replica axis varies the fleet, not the workload: every
             // point replays the identical scenario bytes on a larger
@@ -367,6 +393,7 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -390,6 +417,7 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -413,6 +441,7 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
             },
@@ -437,6 +466,7 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
             },
@@ -476,6 +506,7 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 axis: SweepAxis::Chaos {
                     rates_per_min: vec![0.0, 2.0, 6.0, 12.0],
@@ -506,11 +537,22 @@ impl SweepSpec {
                     workflow: None,
                     chaos: None,
                     autoscale: None,
+                    host: None,
                 },
                 axis: SweepAxis::Replicas {
                     counts: vec![1, 2, 4],
                     router: RouterPolicy::CacheAware,
                 },
+            },
+            SweepSpec {
+                name: "cpu-knee".into(),
+                description:
+                    "the host-capacity knee: tool-storm's 12-wide supervisor/worker joins \
+                     swept across host CPU workers — the smallest worker count whose p99 \
+                     task makespan meets the task SLO (inverse knee)"
+                        .into(),
+                base: Scenario::by_name("tool-storm").expect("registry scenario exists"),
+                axis: SweepAxis::CpuWorkers(vec![2, 4, 8]),
             },
             SweepSpec {
                 name: "autoscale-frontier".into(),
@@ -557,6 +599,10 @@ pub struct PolicyPoint {
     pub evictions: u64,
     pub preemptions: u64,
     pub stall_p99_ms: f64,
+    /// Host execution metrics (zeros on the unbounded legacy path — an
+    /// inert [`crate::config::HostConfig`] reports nothing).
+    pub tool_wait_p99_ms: f64,
+    pub host_util: f64,
     /// Workflow task metrics (zeros on plain session scenarios).
     pub makespan_p99_ms: f64,
     pub task_slo_rate: f64,
@@ -582,6 +628,10 @@ impl PolicyPoint {
             Some(wf) => (wf.makespan.p99, wf.rate()),
             None => (0.0, 0.0),
         };
+        let (tool_wait_p99_ms, host_util) = match &out.host {
+            Some(h) => (h.tool_wait_p99_ms, h.utilization),
+            None => (0.0, 0.0),
+        };
         Self {
             policy: out.policy_name.clone(),
             ttft_p50: out.report.ttft.p50,
@@ -598,6 +648,8 @@ impl PolicyPoint {
             evictions,
             preemptions,
             stall_p99_ms,
+            tool_wait_p99_ms,
+            host_util,
             makespan_p99_ms,
             task_slo_rate,
             replicas: 1,
@@ -613,6 +665,10 @@ impl PolicyPoint {
         let r = &out.report;
         let (makespan_p99_ms, task_slo_rate) = match &r.workflow {
             Some(wf) => (wf.makespan.p99, wf.rate()),
+            None => (0.0, 0.0),
+        };
+        let (tool_wait_p99_ms, host_util) = match &r.host {
+            Some(h) => (h.tool_wait_p99_ms, h.utilization),
             None => (0.0, 0.0),
         };
         Self {
@@ -633,6 +689,8 @@ impl PolicyPoint {
             // Fleet-wide stall p99 from raw samples (not a max of
             // per-replica p99s — percentiles do not compose).
             stall_p99_ms: r.stall_p99_ms,
+            tool_wait_p99_ms,
+            host_util,
             makespan_p99_ms,
             task_slo_rate,
             replicas: r.replicas,
@@ -664,6 +722,8 @@ impl PolicyPoint {
             ("evictions", self.evictions.into()),
             ("preemptions", self.preemptions.into()),
             ("stall_p99_ms", self.stall_p99_ms.into()),
+            ("tool_wait_p99_ms", self.tool_wait_p99_ms.into()),
+            ("host_util", self.host_util.into()),
             ("makespan_p99_ms", self.makespan_p99_ms.into()),
             ("task_slo_rate", self.task_slo_rate.into()),
             ("replicas", self.replicas.into()),
@@ -764,13 +824,13 @@ impl SweepReport {
         let mut out = String::from(
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
-             radix_hit_rate,evictions,preemptions,stall_p99_ms,makespan_p99_ms,task_slo_rate,\
-             replicas,load_cov,replica_us\n",
+             radix_hit_rate,evictions,preemptions,stall_p99_ms,tool_wait_p99_ms,host_util,\
+             makespan_p99_ms,task_slo_rate,replicas,load_cov,replica_us\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -790,6 +850,8 @@ impl SweepReport {
                     pp.evictions,
                     pp.preemptions,
                     pp.stall_p99_ms,
+                    pp.tool_wait_p99_ms,
+                    pp.host_util,
                     pp.makespan_p99_ms,
                     pp.task_slo_rate,
                     pp.replicas,
@@ -969,6 +1031,15 @@ pub fn run_sweep_with_threads(
             let knee = match &spec.axis {
                 SweepAxis::KvBlocks(_) => knee_value_kv(&points, pi, cfg.slo.ttft_ms),
                 SweepAxis::FanOut(_) => knee_value_task(&points, pi, cfg.slo.task_ms),
+                // Inverse capacity knee on the task SLO: the smallest
+                // worker count whose p99 makespan complies.
+                SweepAxis::CpuWorkers(_) => knee_by(
+                    &points,
+                    pi,
+                    cfg.slo.task_ms,
+                    |p| p.makespan_p99_ms,
+                    KneeRule::FirstCompliant,
+                ),
                 SweepAxis::Replicas { .. } => knee_value_fleet(&points, pi, cfg.slo.ttft_ms),
                 // Chaos is a load-style axis: more faults, worse tails.
                 _ => knee_value(&points, pi, cfg.slo.ttft_ms),
@@ -1131,6 +1202,8 @@ mod tests {
             evictions: 0,
             preemptions: 0,
             stall_p99_ms: 0.0,
+            tool_wait_p99_ms: 0.0,
+            host_util: 0.0,
             makespan_p99_ms: 0.0,
             task_slo_rate: 0.0,
             replicas: 1,
@@ -1245,6 +1318,34 @@ mod tests {
     }
 
     #[test]
+    fn cpu_workers_axis_installs_the_host_config() {
+        let spec = SweepSpec::by_name("cpu-knee").unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.axis.kind_name(), "cpu-workers");
+        assert_eq!(spec.axis.unit(), "workers");
+        // Each point overrides the worker count; dispatch overhead and the
+        // service distribution inherit from tool-storm's host block.
+        let base_host = spec.base.host.clone().expect("tool-storm carries a host config");
+        for (i, want) in [(0usize, 2usize), (1, 4), (2, 8)] {
+            let h = spec.scenario_at(i).host.expect("axis installs a host config");
+            assert_eq!(h.cpu_workers, want);
+            assert_eq!(h.dispatch_overhead_us, base_host.dispatch_overhead_us);
+            assert_eq!(h.latency, base_host.latency);
+        }
+        // A host-less base still gets an active default carrier.
+        let mut plain = SweepSpec::by_name("agent-scaling").unwrap();
+        plain.axis = SweepAxis::CpuWorkers(vec![2, 4]);
+        plain.validate().unwrap();
+        let h = plain.scenario_at(0).host.expect("default carrier installed");
+        assert!(h.is_active() && h.cpu_workers == 2);
+        // Worker count 0 is rejected (0 = inert belongs to the base, not a
+        // grid point — every point must actually exercise the host).
+        let mut bad = spec.clone();
+        bad.axis = SweepAxis::CpuWorkers(vec![0, 2]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
     fn chaos_axis_applies_the_seeded_fault_process() {
         let spec = SweepSpec::by_name("chaos-resilience").unwrap();
         spec.validate().unwrap();
@@ -1355,6 +1456,7 @@ mod tests {
                 workflow: None,
                 chaos: None,
                 autoscale: None,
+                host: None,
             },
             axis: SweepAxis::ArrivalRate(vec![0.5, 1.0, 2.0]),
         };

@@ -30,6 +30,7 @@ pub fn open_loop(name: &str, rate_per_s: f64, sessions: usize) -> Scenario {
         workflow: None,
         chaos: None,
         autoscale: None,
+        host: None,
     }
 }
 

@@ -1,0 +1,192 @@
+//! Host execution-model integration tests (tier-1).
+//!
+//! The contracts this suite locks:
+//! - **Inert purity**: an absent *or inert* host config (`cpu_workers == 0`)
+//!   keeps every run on the exact legacy tool-latency path — reports are
+//!   byte-identical under the whole paper policy lineup and every router.
+//! - **Contention ordering**: on coupled seeds over the `tool-storm`
+//!   scenario, 2 CPU workers queue tool calls and show strictly worse p99
+//!   task latency than 8 workers — the capacity knee the `cpu-knee` sweep
+//!   maps as data.
+//! - **Determinism**: host queue waits (including log-normal service
+//!   draws) are a pure function of `(seed, scenario, config)`, and tokens
+//!   are conserved under contention — queueing delays work, never drops
+//!   or duplicates it.
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::{HostConfig, RouterPolicy};
+use agentserve::engine::{run_scenario_fast, Policy};
+use agentserve::workload::{run_sweep, Scenario, SweepSpec};
+
+mod common;
+use common::{cfg, scripted_tokens};
+
+#[test]
+fn inert_host_config_keeps_the_legacy_bytes_under_every_policy_and_router() {
+    // `host: None` and an attached-but-inert config (0 workers) must both
+    // take the legacy path: same report bytes, no host block.
+    let cfg = cfg();
+    let plain = Scenario::by_name("mixed-fleet").unwrap();
+    let inert = Scenario { host: Some(HostConfig::default()), ..plain.clone() };
+    for policy in Policy::paper_lineup() {
+        for router in RouterPolicy::ALL {
+            let a = run_cluster_fast(&cfg, policy, &plain, 2, router, 7).unwrap();
+            let b = run_cluster_fast(&cfg, policy, &inert, 2, router, 7).unwrap();
+            let tag = format!("{}/{}", policy.name(), router);
+            assert!(a.report.host.is_none(), "{tag}: no host block without workers");
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{tag}: an inert host config must not perturb a single byte"
+            );
+        }
+    }
+    // Same contract on the single-GPU path, including a workflow carrier.
+    for name in ["paper-fig5", "burst-storm"] {
+        let plain = Scenario::by_name(name).unwrap();
+        let inert = Scenario { host: Some(HostConfig::default()), ..plain.clone() };
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario_fast(&cfg, policy, &plain, 7);
+            let b = run_scenario_fast(&cfg, policy, &inert, 7);
+            assert!(a.host.is_none(), "{name}: no host report without workers");
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{name}/{}: inert host must keep the legacy bytes",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fewer_cpu_workers_strictly_worsen_tail_task_latency() {
+    // tool-storm: 12-wide worker fan-out resolving into bursts of tool
+    // calls. Coupled seeds mean both runs issue the identical call stream;
+    // only the sandbox capacity differs.
+    let cfg = cfg();
+    let base = Scenario::by_name("tool-storm").unwrap();
+    let with_workers = |n: usize| Scenario {
+        host: Some(HostConfig { cpu_workers: n, ..base.host.clone().unwrap() }),
+        ..base.clone()
+    };
+    let policy = Policy::AgentServe(Default::default());
+    let starved = run_scenario_fast(&cfg, policy, &with_workers(2), 7);
+    let ample = run_scenario_fast(&cfg, policy, &with_workers(8), 7);
+    let (hs, ha) = (
+        starved.host.as_ref().expect("active host => report"),
+        ample.host.as_ref().expect("active host => report"),
+    );
+    assert_eq!(hs.calls, ha.calls, "coupled seeds: the same tool-call stream");
+    assert!(hs.calls > 0, "the storm must actually issue tool calls");
+    assert!(hs.queued_calls > 0, "12-wide bursts on 2 workers must queue");
+    assert!(
+        hs.tool_wait_p99_ms > ha.tool_wait_p99_ms,
+        "2 workers must wait longer at the tail than 8 ({:.1} ms vs {:.1} ms)",
+        hs.tool_wait_p99_ms,
+        ha.tool_wait_p99_ms
+    );
+    let (ws, wa) = (
+        starved.workflow.as_ref().expect("tool-storm is a workflow scenario"),
+        ample.workflow.as_ref().expect("tool-storm is a workflow scenario"),
+    );
+    assert!(
+        ws.makespan.p99 > wa.makespan.p99,
+        "strictly worse p99 task latency at 2 workers ({:.1} ms vs {:.1} ms)",
+        ws.makespan.p99,
+        wa.makespan.p99
+    );
+    // Token conservation under contention: queueing delays work, it never
+    // drops or duplicates any scripted decode token.
+    let expected = scripted_tokens(&cfg, &base, 7);
+    assert_eq!(starved.report.total_tokens, expected);
+    assert_eq!(ample.report.total_tokens, expected);
+    assert_eq!(starved.report.completed_sessions, ample.report.completed_sessions);
+}
+
+#[test]
+fn host_waits_are_a_pure_function_of_seed_scenario_and_config() {
+    // slow-sandbox draws log-normal service scalings from the dedicated
+    // host stream: reruns are byte-identical, a new seed is a new run.
+    let cfg = cfg();
+    let sc = Scenario::by_name("slow-sandbox").unwrap();
+    let policy = Policy::Vllm;
+    let a = run_scenario_fast(&cfg, policy, &sc, 7);
+    let b = run_scenario_fast(&cfg, policy, &sc, 7);
+    assert_eq!(
+        a.report.to_value().to_string(),
+        b.report.to_value().to_string(),
+        "same (scenario, seed) must serialize byte-identically"
+    );
+    let (ha, hb) = (a.host.as_ref().unwrap(), b.host.as_ref().unwrap());
+    assert_eq!(ha.to_value().to_string(), hb.to_value().to_string());
+    assert!(ha.calls > 0);
+    let c = run_scenario_fast(&cfg, policy, &sc, 8);
+    let hc = c.host.as_ref().unwrap();
+    assert_ne!(
+        (ha.to_value().to_string(), a.report.to_value().to_string()),
+        (hc.to_value().to_string(), c.report.to_value().to_string()),
+        "a new seed must be a new run"
+    );
+}
+
+#[test]
+fn fleet_host_reports_merge_raw_samples_and_rerun_byte_identically() {
+    let cfg = cfg();
+    let sc = Scenario::by_name("tool-storm").unwrap();
+    let policy = Policy::AgentServe(Default::default());
+    let a = run_cluster_fast(&cfg, policy, &sc, 2, RouterPolicy::CacheAware, 7).unwrap();
+    let b = run_cluster_fast(&cfg, policy, &sc, 2, RouterPolicy::CacheAware, 7).unwrap();
+    assert_eq!(
+        a.report.to_value().to_string(),
+        b.report.to_value().to_string(),
+        "fleet host accounting must rerun byte-identically"
+    );
+    let h = a.report.host.as_ref().expect("active host => fleet report block");
+    assert_eq!(h.cpu_workers, 2);
+    assert!(h.calls > 0);
+    assert!(h.utilization > 0.0 && h.utilization <= 1.0);
+    assert!(a.report.to_value().to_string().contains("\"host\""));
+    // Sessions and scripted tokens survive routing through the host queue.
+    assert_eq!(a.report.completed_sessions, a.report.sessions);
+    assert_eq!(a.report.total_tokens, scripted_tokens(&cfg, &sc, 7));
+}
+
+#[test]
+fn cpu_knee_sweep_reports_the_smallest_compliant_worker_count() {
+    let cfg = cfg();
+    let spec = SweepSpec::by_name("cpu-knee").unwrap();
+    spec.validate().unwrap();
+    let policies = [Policy::AgentServe(Default::default())];
+    let report = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    let again = run_sweep(&cfg, &spec, &policies, 7).unwrap();
+    assert_eq!(
+        report.to_value().to_string(),
+        again.to_value().to_string(),
+        "the capacity sweep must rerun byte-identically"
+    );
+    assert_eq!(report.axis, "cpu-workers");
+    assert_eq!(report.points.len(), 3);
+    for pt in &report.points {
+        let pp = &pt.per_policy[0];
+        assert!(pp.host_util > 0.0, "every grid point runs an active host");
+        assert!(pp.makespan_p99_ms > 0.0, "the base carries a workflow");
+    }
+    // The acceptance knee: some worker count in {2, 4, 8} meets the task
+    // SLO, and the knee is the smallest one that does.
+    let (_, knee) = &report.knees[0];
+    let knee = knee.expect("a finite cpu-knee within the grid");
+    assert!(
+        [2.0, 4.0, 8.0].contains(&knee),
+        "knee must be a grid value (got {knee})"
+    );
+    let first_ok = report
+        .points
+        .iter()
+        .find(|pt| pt.per_policy[0].makespan_p99_ms <= cfg.slo.task_ms)
+        .expect("the knee implies a compliant point");
+    assert_eq!(first_ok.axis_value, knee, "FirstCompliant: smallest compliant worker count");
+    // The host columns ride both artifact forms.
+    assert!(report.to_csv().lines().next().unwrap().contains("tool_wait_p99_ms,host_util"));
+    assert!(report.to_value().to_string().contains("\"tool_wait_p99_ms\""));
+}

@@ -290,6 +290,7 @@ mod arrivals {
             workflow: None,
             chaos: None,
             autoscale: None,
+            host: None,
         }
     }
 
@@ -696,5 +697,76 @@ fn prop_experiment_grids_are_byte_identical_at_any_worker_count() {
             );
             assert_eq!(serial_csv, par.to_csv(), "seed {seed}: {w} workers diverged (CSV)");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host execution model: queue waits are pure functions of (seed, scenario,
+// config), and contention conserves the scripted token budget.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_host_queue_is_deterministic_and_conserves_tokens() {
+    // Randomized valid host configs (worker count, dispatch overhead,
+    // latency shape) over both tool paths — scripted-session mixes and
+    // workflow carriers: reruns are byte-identical, a new seed is a new
+    // run, and queueing delays work without dropping or duplicating it.
+    use agentserve::config::{HostConfig, HostLatency};
+    use agentserve::engine::{run_scenario_fast, Policy};
+    use agentserve::workload::Scenario;
+
+    let cfg = common::cfg();
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(13_000 + seed);
+        let latency = match rng.next_u64() % 3 {
+            0 => HostLatency::Fixed,
+            1 => {
+                let lo = 0.25 + rng.f64();
+                HostLatency::Uniform { lo, hi: lo + 0.1 + rng.f64() }
+            }
+            _ => HostLatency::LogNormal { mu: 0.0, sigma: 0.2 + rng.f64() },
+        };
+        let host = HostConfig {
+            cpu_workers: 1 + (rng.next_u64() % 4) as usize,
+            dispatch_overhead_us: rng.next_u64() % 3_000,
+            latency,
+        };
+        host.validate().unwrap_or_else(|e| panic!("seed {seed}: generated config invalid: {e}"));
+        let base = if rng.next_u64() % 2 == 0 {
+            common::open_loop("host-prop", 2.0, 24)
+        } else {
+            common::wf_scenario("supervisor-worker", 6, 1.0)
+        };
+        let sc = Scenario { host: Some(host), ..base };
+        sc.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let run_seed = 70 + seed;
+        let policy = Policy::paper_lineup()[(seed % 4) as usize];
+        let a = run_scenario_fast(&cfg, policy, &sc, run_seed);
+        let b = run_scenario_fast(&cfg, policy, &sc, run_seed);
+        assert_eq!(
+            a.report.to_value().to_string(),
+            b.report.to_value().to_string(),
+            "seed {seed}: same (scenario, seed) must rerun byte-identically"
+        );
+        let (ha, hb) = (a.host.as_ref().unwrap(), b.host.as_ref().unwrap());
+        assert_eq!(
+            ha.to_value().to_string(),
+            hb.to_value().to_string(),
+            "seed {seed}: host waits must replay exactly"
+        );
+        // Conservation under contention: the scripted decode budget is
+        // emitted exactly once and no session is lost to the queue.
+        assert_eq!(
+            a.report.total_tokens,
+            common::scripted_tokens(&cfg, &sc, run_seed),
+            "seed {seed}: queueing must conserve the scripted token budget"
+        );
+        assert_eq!(a.report.completed_sessions, a.report.sessions, "seed {seed}");
+        let c = run_scenario_fast(&cfg, policy, &sc, run_seed + 1);
+        assert_ne!(
+            a.report.to_value().to_string(),
+            c.report.to_value().to_string(),
+            "seed {seed}: a new seed must change the run"
+        );
     }
 }
