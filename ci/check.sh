@@ -249,6 +249,53 @@ if grep -q '"knee": null' "$tmp/cpu.json"; then
     exit 1
 fi
 
+step "Telemetry smoke (traced paper-fig5: write-only, valid trace, rerun-stable)"
+cargo run --release --bin agentserve -- \
+    scenario run --name paper-fig5 --policy agentserve --model 3b \
+    > "$tmp/untraced.txt"
+cargo run --release --bin agentserve -- \
+    scenario run --name paper-fig5 --policy agentserve --model 3b \
+    --trace-out "$tmp/fig5.trace.json" > "$tmp/traced.txt"
+# Telemetry is write-only: the stdout report must not move a byte.
+cmp "$tmp/untraced.txt" "$tmp/traced.txt"
+# The artifact is well-formed Chrome trace-event JSON with the GPU-time
+# attribution riding along, and a rerun reproduces it byte-for-byte.
+cargo run --release --bin agentserve -- \
+    trace validate --file "$tmp/fig5.trace.json"
+grep -q '"phase_report"' "$tmp/fig5.trace.json"
+cargo run --release --bin agentserve -- \
+    scenario run --name paper-fig5 --policy agentserve --model 3b \
+    --trace-out "$tmp/fig5.trace2.json" > /dev/null
+cmp "$tmp/fig5.trace.json" "$tmp/fig5.trace2.json"
+
+step "Probe conservation smoke (JSON n_samples == CSV data rows, 2-GPU grid)"
+cargo run --release --bin agentserve -- \
+    probe --name mixed-fleet --replicas 2 --model 3b --interval-us 20000 \
+    --out "$tmp/probe.json"
+cargo run --release --bin agentserve -- \
+    probe --name mixed-fleet --replicas 2 --model 3b --interval-us 20000 \
+    --out "$tmp/probe.csv"
+grep -q '"schema": "agentserve-probe-v1"' "$tmp/probe.json"
+n_json=$(grep -o '"n_samples": [0-9]*' "$tmp/probe.json" | grep -o '[0-9]*$')
+n_csv=$(( $(wc -l < "$tmp/probe.csv") - 1 ))
+if [ "$n_json" -ne "$n_csv" ] || [ "$n_json" -eq 0 ]; then
+    echo "ERROR: probe sample count diverged (JSON $n_json vs CSV $n_csv)" >&2
+    exit 1
+fi
+
+step "Exec capture smoke (cluster run --exec-out: replica-stamped, schema-tagged)"
+cargo run --release --bin agentserve -- \
+    cluster run --name mixed-fleet --replicas 2 --model 3b \
+    --exec-out "$tmp/fleet-exec.jsonl" > /dev/null
+head -1 "$tmp/fleet-exec.jsonl" | grep -q '"schema":"agentserve-exec-v1"'
+grep -q '"replica":1' "$tmp/fleet-exec.jsonl"
+# An exec log is not a workload trace; replay must refuse it loudly.
+if cargo run --release --bin agentserve -- \
+    scenario replay --trace "$tmp/fleet-exec.jsonl" --model 3b >/dev/null 2>&1; then
+    echo "ERROR: scenario replay accepted an execution-event log" >&2
+    exit 1
+fi
+
 echo ""
 echo "--- ${step_name}: $((SECONDS - step_start))s ---"
 echo "ci/check.sh: all green (total ${SECONDS}s)"

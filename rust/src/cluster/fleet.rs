@@ -60,13 +60,16 @@ use super::autoscale::{Autoscaler, ScaleDecision, SizeTracker};
 use super::router::Router;
 use crate::config::{Config, FaultKind, RouterPolicy, CHAOS_STREAM};
 use crate::engine::sim::task_critical_paths_ms;
-use crate::engine::{CrashResume, DriverEvent, Policy, SimDriver, SimOutcome};
+use crate::engine::{
+    CrashResume, DriverEvent, ExecEvent, ExecEventKind, ExecTrace, Policy, SimDriver, SimOutcome,
+};
 use crate::gpusim::CostModel;
 use crate::host::{HostReport, HostSamples};
 use crate::metrics::{
     load_cov, percentile, AutoscaleStats, ChaosStats, FleetReport, SloReport, Summary,
     WorkflowReport,
 };
+use crate::obs::{InstantEvent, InstantKind, ObsLog, PhaseReport, ProbeLog, ProbeSample};
 use crate::util::rng::Rng;
 use crate::workflow::WorkflowPlan;
 use crate::workload::{Scenario, SessionScript};
@@ -88,6 +91,14 @@ pub struct FleetOutcome {
     /// Replica index per global session (the final routing record — a
     /// crashed session's entry points at the replica that finished it).
     pub placements: Vec<usize>,
+    /// Merged telemetry: every incarnation's spans and instants retagged
+    /// to fleet identity (pid = replica, tid = global session), plus the
+    /// fleet-global probe grid. `None` when `Config::obs` is inert.
+    pub obs: Option<ObsLog>,
+    /// Merged execution-event stream (replica-stamped, global session
+    /// ids, time-ordered). `None` unless capture was requested via
+    /// [`run_cluster_recorded`].
+    pub exec: Option<ExecTrace>,
 }
 
 /// Fleet-side workflow orchestration: gate counters over the compiled
@@ -117,7 +128,7 @@ pub fn run_cluster(
     router: RouterPolicy,
     seed: u64,
 ) -> crate::Result<FleetOutcome> {
-    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, false)
+    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, false, false)
 }
 
 /// [`run_cluster`] without per-token timeline retention — the fleet-sweep
@@ -130,7 +141,25 @@ pub fn run_cluster_fast(
     router: RouterPolicy,
     seed: u64,
 ) -> crate::Result<FleetOutcome> {
-    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, true)
+    run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, true, false)
+}
+
+/// [`run_cluster`] with execution-event capture: every replica incarnation
+/// records its stream, the fleet stamps each event with its replica id and
+/// global session id, and the streams merge time-ordered (ties: replica
+/// order) into the returned [`ExecTrace`] — the fleet counterpart of
+/// [`crate::engine::run_scenario_recorded`].
+pub fn run_cluster_recorded(
+    cfg: &Config,
+    policy: Policy,
+    scenario: &Scenario,
+    n_replicas: usize,
+    router: RouterPolicy,
+    seed: u64,
+) -> crate::Result<(FleetOutcome, ExecTrace)> {
+    let mut out = run_cluster_inner(cfg, policy, scenario, n_replicas, router, seed, false, true)?;
+    let trace = out.exec.take().expect("capture was requested");
+    Ok((out, trace))
 }
 
 /// The affinity-unit key of one global session: closed-loop agent slot, or
@@ -301,6 +330,7 @@ impl ChaosState {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_cluster_inner(
     cfg: &Config,
     policy: Policy,
@@ -309,10 +339,24 @@ fn run_cluster_inner(
     router_policy: RouterPolicy,
     seed: u64,
     fast: bool,
+    record_exec: bool,
 ) -> crate::Result<FleetOutcome> {
     anyhow::ensure!(n_replicas >= 1, "a fleet needs at least one replica");
     scenario.validate()?;
     let cfg = scenario.effective_config(cfg);
+    // Observability gates. All three are false on the inert default, and
+    // every obs code path below is behind one of them, so legacy outputs
+    // stay byte-identical (the same contract as chaos and autoscale).
+    let obs_active = cfg.obs.is_active();
+    let trace_on = obs_active && cfg.obs.trace;
+    let probe_on = obs_active && cfg.obs.probe.is_active();
+    // Fleet-side telemetry: control-plane instants (chaos faults, scale
+    // decisions), the fleet-global probe grid, and harvested exec streams.
+    let mut fleet_instants: Vec<InstantEvent> = Vec::new();
+    let mut fleet_probes: Vec<ProbeSample> = Vec::new();
+    let mut next_probe_us: u64 = cfg.obs.probe.interval_us;
+    let mut exec_acc: Vec<ExecEvent> = Vec::new();
+    let mut fleet_exec: Vec<ExecEvent> = Vec::new();
     let chaos_active = scenario.chaos.as_ref().is_some_and(|c| c.is_active());
     let mut chaos = match &scenario.chaos {
         Some(c) if c.is_active() => Some(ChaosState::new(c, n_replicas, seed)?),
@@ -409,6 +453,11 @@ fn run_cluster_inner(
     for (r, d) in drivers.iter_mut().enumerate() {
         d.set_host_seed(seed, r as u64);
     }
+    if record_exec {
+        for d in drivers.iter_mut() {
+            d.record_events();
+        }
+    }
     let mut router = Router::new(router_policy);
     // (time, fleet-seq, global session): seq makes equal-time arrivals pop
     // in creation order — seed order first, then fleet-created arrivals.
@@ -496,6 +545,40 @@ fn run_cluster_inner(
                 }
             }
         }
+        // Fleet-global probe grid: one row per *serving* replica per grid
+        // point, fired strictly before any event source at-or-after that
+        // instant — the same pre-event discipline the batch sampler uses
+        // (a probe colliding with a crash samples the pre-crash state).
+        // The grid never enters any heap; it is drained lazily against the
+        // next real event, so with probing off this whole block is one
+        // `bool` test per loop iteration.
+        if probe_on {
+            let t_chaos = chaos
+                .as_ref()
+                .filter(|_| done_global < total)
+                .and_then(|ch| ch.peek().map(|p| p.0));
+            let t_tick = scaler
+                .as_ref()
+                .filter(|_| done_global < total && (t_arr.is_some() || t_rep.is_some()))
+                .map(|sc| sc.next_tick_us());
+            let next = [t_arr, t_rep.map(|(t, _)| t), t_chaos, t_tick]
+                .into_iter()
+                .flatten()
+                .min();
+            if let Some(tn) = next {
+                while next_probe_us <= tn {
+                    let tp = next_probe_us;
+                    let live: Vec<usize> = (0..drivers.len())
+                        .filter(|&r| up_mask[r] && serving[r] && boot_at[r] <= tp)
+                        .collect();
+                    let n_serving = live.len() as u32;
+                    for r in live {
+                        fleet_probes.push(drivers[r].probe_row(tp, r as u32, n_serving));
+                    }
+                    next_probe_us += cfg.obs.probe.interval_us;
+                }
+            }
+        }
         // Chaos events win exact-time ties against both other sources: a
         // crash at t kills the replica before a t-stamped arrival routes
         // (it must avoid the dying replica) and before the replica's own
@@ -523,7 +606,20 @@ fn run_cluster_inner(
                                     ch.restores.push(Reverse((t_up, r)));
                                     ch.stats.crashes += 1;
                                     ch.stats.downtime_ms += ch.restart_us as f64 / 1000.0;
-                                    let old = std::mem::replace(
+                                    if trace_on {
+                                        fleet_instants.push(InstantEvent {
+                                            t_us: t_c,
+                                            replica: r as u32,
+                                            kind: InstantKind::Chaos { what: "crash".into() },
+                                        });
+                                    }
+                                    // The session map dies with the
+                                    // incarnation: take it so the harvested
+                                    // telemetry below can be retagged to
+                                    // fleet identity before the replacement
+                                    // starts its own (empty) map.
+                                    let l2g = std::mem::take(&mut local2global[r]);
+                                    let mut old = std::mem::replace(
                                         &mut drivers[r],
                                         SimDriver::new_fast_boot_at(&cfg, policy, t_up),
                                     );
@@ -531,12 +627,20 @@ fn run_cluster_inner(
                                     // stream: the queue is a property of the
                                     // replica's CPU, reborn empty with it.
                                     drivers[r].set_host_seed(seed, r as u64);
+                                    if record_exec {
+                                        drivers[r].record_events();
+                                        let mut evs = old.take_exec_events();
+                                        for e in &mut evs {
+                                            e.retag(r as u32, &l2g);
+                                        }
+                                        exec_acc.append(&mut evs);
+                                    }
                                     finished[r] = false;
                                     // Keep every sample the dead replica
                                     // recorded (finished sessions *and*
                                     // the lost ones' partial requests) —
                                     // `finish()` only keeps aggregates.
-                                    for (l, &g) in local2global[r].iter().enumerate() {
+                                    for (l, &g) in l2g.iter().enumerate() {
                                         if let Some(s) =
                                             old.recorder().sessions_map().get(&(l as u64))
                                         {
@@ -545,13 +649,13 @@ fn run_cluster_inner(
                                         }
                                     }
                                     for (l, ms) in old.memory_stalls() {
-                                        harv_stalls[local2global[r][l]].push(ms);
+                                        harv_stalls[l2g[l]].push(ms);
                                     }
                                     if let Some(s) = old.host_samples() {
                                         host_acc.merge(&s);
                                     }
                                     for cs in old.crash_manifest() {
-                                        let g = local2global[r][cs.local];
+                                        let g = l2g[cs.local];
                                         scripts[g] =
                                             continuation_script(&scripts[g], cs.bursts_done);
                                         off[g] += cs.bursts_done;
@@ -575,8 +679,17 @@ fn run_cluster_inner(
                                             }
                                         }
                                     }
-                                    local2global[r].clear();
-                                    retired.push((r, old.finish()));
+                                    let mut gone = old.finish();
+                                    if let Some(log) = &mut gone.obs {
+                                        // The fleet owns the probe grid;
+                                        // dead incarnations keep only spans
+                                        // and instants, retagged to fleet
+                                        // identity while their l2g map is
+                                        // still at hand.
+                                        log.probes = None;
+                                        log.retag(r as u32, &l2g);
+                                    }
+                                    retired.push((r, gone));
                                 }
                             }
                             FaultKind::Drain => {
@@ -585,6 +698,13 @@ fn run_cluster_inner(
                                     up_mask[r] = false;
                                     ch.seeded_at[r] = None; // drained ≠ crashed
                                     ch.stats.drains += 1;
+                                    if trace_on {
+                                        fleet_instants.push(InstantEvent {
+                                            t_us: t_c,
+                                            replica: r as u32,
+                                            kind: InstantKind::Chaos { what: "drain".into() },
+                                        });
+                                    }
                                 }
                             }
                             FaultKind::Restore => {
@@ -600,6 +720,15 @@ fn run_cluster_inner(
                                     ch.states[r] = RepState::Up;
                                     up_mask[r] = true;
                                     ch.draw_seeded(r, t_c);
+                                    if trace_on {
+                                        fleet_instants.push(InstantEvent {
+                                            t_us: t_c,
+                                            replica: r as u32,
+                                            kind: InstantKind::Chaos {
+                                                what: "restore".into(),
+                                            },
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -657,6 +786,19 @@ fn run_cluster_inner(
                             // = current fleet size, never reused (Down
                             // drains in place, it does not pop).
                             d.set_host_seed(seed, drivers.len() as u64);
+                            if record_exec {
+                                d.record_events();
+                            }
+                            if trace_on {
+                                fleet_instants.push(InstantEvent {
+                                    t_us: tt,
+                                    replica: drivers.len() as u32,
+                                    kind: InstantKind::Autoscale {
+                                        serving: tracker.size() as u32,
+                                        target: tracker.size() as u32 + 1,
+                                    },
+                                });
+                            }
                             // A replica booted after the arrival stream is
                             // exhausted can never receive work: close it out
                             // immediately so termination never waits on it.
@@ -687,6 +829,16 @@ fn run_cluster_inner(
                                 .find(|&r| serving[r] && up_mask[r] && boot_at[r] <= tt);
                             if let Some(r) = victim {
                                 serving[r] = false;
+                                if trace_on {
+                                    fleet_instants.push(InstantEvent {
+                                        t_us: tt,
+                                        replica: r as u32,
+                                        kind: InstantKind::Autoscale {
+                                            serving: tracker.size() as u32,
+                                            target: tracker.size() as u32 - 1,
+                                        },
+                                    });
+                                }
                                 // A replica leaving the fleet also leaves
                                 // the chaos process: disarm its seeded
                                 // stream and mark it Draining so a pending
@@ -886,6 +1038,16 @@ fn run_cluster_inner(
                         w.task_left[task] -= 1;
                         if w.task_left[task] == 0 {
                             w.task_done_us[task] = Some(t_us);
+                            if record_exec {
+                                // Task completion is a *fleet* fact (the
+                                // last session may finish on any replica);
+                                // stamp the replica that resolved it.
+                                fleet_exec.push(ExecEvent {
+                                    t_us,
+                                    replica: r as u32,
+                                    kind: ExecEventKind::TaskDone { task: task as u64 },
+                                });
+                            }
                         }
                     }
                 }
@@ -983,7 +1145,73 @@ fn run_cluster_inner(
         drivers.iter().map(|d| d.now_us()).max().unwrap_or(0)
     };
     let n_final = drivers.len();
-    let per_replica: Vec<SimOutcome> = drivers.into_iter().map(|d| d.finish()).collect();
+    if record_exec {
+        // Live replicas' streams, harvested in replica order; crashed
+        // incarnations already contributed theirs at crash time (earlier
+        // timestamps, so the final sort is cheap and stable).
+        for (r, d) in drivers.iter_mut().enumerate() {
+            let mut evs = d.take_exec_events();
+            for e in &mut evs {
+                e.retag(r as u32, &local2global[r]);
+            }
+            exec_acc.append(&mut evs);
+        }
+    }
+    let mut per_replica: Vec<SimOutcome> = drivers.into_iter().map(|d| d.finish()).collect();
+
+    // Merge telemetry across every incarnation: surviving replicas first
+    // (retagged here — their session maps are still in `local2global`),
+    // then the crash-retired ones (retagged at harvest time), then the
+    // fleet's own control-plane instants and the fleet-global probe grid.
+    let (fleet_obs, fleet_phases) = if obs_active {
+        let mut merged = ObsLog::default();
+        let mut phases: Option<PhaseReport> = None;
+        for (r, o) in per_replica.iter_mut().enumerate() {
+            if let Some(mut log) = o.obs.take() {
+                // The fleet owns the probe grid; per-replica samplers stay
+                // dormant in driver mode.
+                log.probes = None;
+                log.retag(r as u32, &local2global[r]);
+                merged.absorb(log);
+            }
+            if let Some(p) = o.phases {
+                match &mut phases {
+                    Some(acc) => acc.merge(&p),
+                    None => phases = Some(p),
+                }
+            }
+        }
+        for (_, o) in &retired {
+            if let Some(log) = &o.obs {
+                merged.absorb(log.clone());
+            }
+            if let Some(p) = o.phases {
+                match &mut phases {
+                    Some(acc) => acc.merge(&p),
+                    None => phases = Some(p),
+                }
+            }
+        }
+        if trace_on {
+            merged.instants.append(&mut fleet_instants);
+        }
+        if probe_on {
+            merged.probes = Some(ProbeLog {
+                interval_us: cfg.obs.probe.interval_us,
+                samples: fleet_probes,
+            });
+        }
+        (Some(merged), phases)
+    } else {
+        (None, None)
+    };
+    let exec = record_exec.then(|| {
+        // Fleet-level TaskDone events go last so they sort after the
+        // replica-local events that resolved them on timestamp ties.
+        exec_acc.append(&mut fleet_exec);
+        exec_acc.sort_by_key(|e| (e.t_us, e.replica));
+        ExecTrace { events: exec_acc }
+    });
 
     // Counters sum over the surviving replicas *and* the crashed
     // incarnations — work a replica did before dying still happened.
@@ -1092,6 +1320,7 @@ fn run_cluster_inner(
         chaos: chaos_report,
         autoscale: autoscale_report,
         host: host_report,
+        phases: fleet_phases,
     };
     Ok(FleetOutcome {
         policy_name: policy.name().to_string(),
@@ -1100,5 +1329,7 @@ fn run_cluster_inner(
         report,
         per_replica,
         placements,
+        obs: fleet_obs,
+        exec,
     })
 }

@@ -42,4 +42,4 @@ mod router;
 
 pub use crate::config::RouterPolicy;
 pub use autoscale::{Autoscaler, ScaleDecision, SizeTracker};
-pub use fleet::{run_cluster, run_cluster_fast, FleetOutcome};
+pub use fleet::{run_cluster, run_cluster_fast, run_cluster_recorded, FleetOutcome};

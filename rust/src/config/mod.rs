@@ -13,6 +13,7 @@ mod gpu;
 mod host;
 mod kv;
 mod model;
+mod obs;
 mod scheduler;
 mod slo;
 
@@ -22,6 +23,7 @@ pub use cluster::{ClusterConfig, RouterPolicy};
 pub use gpu::{GpuProfile, GpuKind};
 pub use host::{HostConfig, HostLatency, HOST_STREAM};
 pub use kv::KvConfig;
+pub use obs::{ObsConfig, ProbeConfig};
 pub use model::{ModelProfile, ModelKind};
 pub use scheduler::SchedulerConfig;
 pub use slo::SloConfig;
@@ -48,6 +50,9 @@ pub struct Config {
     /// Host-execution model: CPU workers serving tool calls (default:
     /// unbounded — the pre-host-model free-tool-latency behavior).
     pub host: HostConfig,
+    /// Telemetry layer: span tracing + virtual-clock probes (default:
+    /// inert — no observer state is ever constructed).
+    pub obs: ObsConfig,
     /// Fleet simulation defaults (default: 1 replica — single-GPU runs).
     pub cluster: ClusterConfig,
 }
@@ -112,6 +117,7 @@ impl Config {
             engine: EngineConfig::default(),
             kv: KvConfig::default(),
             host: HostConfig::default(),
+            obs: ObsConfig::default(),
             cluster: ClusterConfig::default(),
         }
     }
@@ -180,6 +186,7 @@ impl Config {
                 ]),
             ),
             ("host", self.host.to_value()),
+            ("obs", self.obs.to_value()),
             (
                 "cluster",
                 Value::obj(vec![
@@ -259,6 +266,12 @@ impl Config {
                 cfg.host.latency = HostLatency::from_value(l)?;
             }
         }
+        if let Some(o) = v.get("obs") {
+            // The obs block replaces wholesale: its two fields fully
+            // describe the layer and `from_value` fills absent keys with
+            // the inert defaults.
+            cfg.obs = ObsConfig::from_value(o)?;
+        }
         if let Some(c) = v.get("cluster") {
             override_usize(c, "replicas", &mut cfg.cluster.replicas);
             if let Some(s) = c.get("router").and_then(|x| x.as_str()) {
@@ -294,6 +307,7 @@ impl Config {
             self.kv.block_size
         );
         self.host.validate()?;
+        self.obs.validate()?;
         anyhow::ensure!(self.cluster.replicas >= 1, "cluster.replicas must be >= 1");
         Ok(())
     }
@@ -406,6 +420,25 @@ mod tests {
         // An invalid distribution on an active host is a loud error.
         cfg.host.latency = HostLatency::Uniform { lo: 2.0, hi: 1.0 };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn obs_section_overrides_apply_and_round_trip() {
+        let mut cfg = Config::default();
+        assert!(!cfg.obs.is_active(), "presets ship the inert obs layer");
+        let v = crate::util::json::parse(
+            r#"{"obs": {"trace": true, "probe_interval_us": 50000}}"#,
+        )
+        .unwrap();
+        cfg.apply_overrides(&v).unwrap();
+        assert!(cfg.obs.trace);
+        assert_eq!(cfg.obs.probe.interval_us, 50_000);
+        cfg.validate().unwrap();
+        let back = Config::from_value(&crate::util::json::parse(&cfg.to_json()).unwrap()).unwrap();
+        assert_eq!(back.obs, cfg.obs);
+        // A sub-millisecond probe grid is a loud error, not a silent clamp.
+        let bad = crate::util::json::parse(r#"{"obs": {"probe_interval_us": 10}}"#).unwrap();
+        assert!(cfg.apply_overrides(&bad).is_err());
     }
 
     #[test]

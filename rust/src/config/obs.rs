@@ -1,0 +1,154 @@
+//! Observability configuration: span tracing and virtual-clock probes.
+//!
+//! [`ObsConfig`] switches the telemetry layer (`rust/src/obs/`) on for a
+//! run: `trace` turns every session into a span tree with per-slot GPU
+//! phase attribution, and `probe.interval_us` samples a time series of
+//! queue/batch/KV/host/fleet state on the virtual clock. The default is
+//! inert — no tracing, no probes — and the engine never constructs an
+//! observer state for an inert config, so the legacy hot path runs
+//! untouched and byte-identical (locked in `rust/tests/obs.rs`).
+//!
+//! The layer consumes no randomness and never perturbs scheduling, so
+//! every trace/probe artifact is a pure function of
+//! `(seed, scenario, config)` — reruns are byte-identical.
+
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Virtual-clock time-series sampler settings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ProbeConfig {
+    /// Sampling interval on the virtual clock (µs). `0` = probes off.
+    /// A probe at time `T` observes the state after all events strictly
+    /// before `T` and before any event at `T` — the same tie-order
+    /// discipline control ticks use against replica events.
+    pub interval_us: u64,
+}
+
+impl ProbeConfig {
+    /// Minimum legal sampling interval (1 ms). Finer grids would emit
+    /// millions of rows per simulated minute without resolving anything
+    /// the event log doesn't already capture.
+    pub const MIN_INTERVAL_US: u64 = 1_000;
+
+    /// Probe sampler at `interval_us` microseconds.
+    pub fn every_us(interval_us: u64) -> Self {
+        Self { interval_us }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.interval_us > 0
+    }
+}
+
+/// Telemetry layer settings: span tracing + probe sampling.
+///
+/// Inert by default; `is_active()` gates construction of the observer so
+/// an inert config takes the exact legacy code path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObsConfig {
+    /// Record session span trees and per-slot GPU phase attribution.
+    pub trace: bool,
+    /// Time-series sampler (inert when `interval_us == 0`).
+    pub probe: ProbeConfig,
+}
+
+impl ObsConfig {
+    /// Span tracing on, probes off.
+    pub fn traced() -> Self {
+        Self { trace: true, probe: ProbeConfig::default() }
+    }
+
+    /// Probes on at `interval_us`, tracing off.
+    pub fn probed(interval_us: u64) -> Self {
+        Self { trace: false, probe: ProbeConfig::every_us(interval_us) }
+    }
+
+    /// Anything to observe? Inert configs never construct observer state.
+    pub fn is_active(&self) -> bool {
+        self.trace || self.probe.is_active()
+    }
+
+    /// Validate an *active* config; inert configs are always legal.
+    pub fn validate(&self) -> Result<()> {
+        if !self.is_active() {
+            return Ok(());
+        }
+        if self.probe.is_active() {
+            ensure!(
+                self.probe.interval_us >= ProbeConfig::MIN_INTERVAL_US,
+                "obs.probe.interval_us must be 0 (off) or >= {} (got {})",
+                ProbeConfig::MIN_INTERVAL_US,
+                self.probe.interval_us
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("trace", self.trace.into()),
+            ("probe_interval_us", self.probe.interval_us.into()),
+        ])
+    }
+
+    /// Parse from a config/scenario JSON object; missing keys keep their
+    /// inert defaults.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(b) = v.get("trace") {
+            cfg.trace = b.as_bool().ok_or_else(|| anyhow!("obs.trace must be a bool"))?;
+        }
+        if let Some(n) = v.get("probe_interval_us") {
+            cfg.probe.interval_us = n
+                .as_u64()
+                .ok_or_else(|| anyhow!("obs.probe_interval_us must be a non-negative integer"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn default_is_inert_and_always_valid() {
+        let cfg = ObsConfig::default();
+        assert!(!cfg.is_active());
+        assert!(!cfg.probe.is_active());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn active_configs_validate_their_interval() {
+        ObsConfig::traced().validate().unwrap();
+        ObsConfig::probed(50_000).validate().unwrap();
+        let err = ObsConfig::probed(10).validate().unwrap_err();
+        assert!(err.to_string().contains("interval_us"), "{err}");
+        // Tracing alone with probes off is fine.
+        assert!(ObsConfig::traced().is_active());
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let cfg = ObsConfig { trace: true, probe: ProbeConfig::every_us(25_000) };
+        let back = ObsConfig::from_value(&cfg.to_value()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn from_value_fills_defaults_and_rejects_bad_fields() {
+        let sparse = parse(r#"{"trace": true}"#).unwrap();
+        let cfg = ObsConfig::from_value(&sparse).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.probe.interval_us, 0, "missing interval stays inert");
+        let bad = parse(r#"{"trace": 3}"#).unwrap();
+        assert!(ObsConfig::from_value(&bad).is_err());
+        let too_fine = parse(r#"{"probe_interval_us": 5}"#).unwrap();
+        assert!(ObsConfig::from_value(&too_fine).is_err());
+    }
+}

@@ -26,5 +26,5 @@ pub use policy::{AgentServeOpts, Policy, SglangOpts};
 pub use sim::{
     record_scenario_trace, run_scenario, run_scenario_fast, run_scenario_recorded, run_sim,
     run_sim_trace, run_sim_trace_recorded, CrashResume, CrashedSession, DriverEvent, ExecEvent,
-    ExecEventKind, ExecTrace, ReplicaLoad, SimDriver, SimOutcome, SimParams,
+    ExecEventKind, ExecTrace, ReplicaLoad, SimDriver, SimOutcome, SimParams, EXEC_SCHEMA,
 };

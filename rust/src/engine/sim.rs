@@ -34,6 +34,7 @@ use crate::host::{HostReport, HostSamples, HostState};
 use crate::metrics::{
     KvReport, MetricsRecorder, RunReport, SloJudge, SloReport, TpotSample, WorkflowReport,
 };
+use crate::obs::{InstantKind, ObsLog, ObsState, PhaseBucket, PhaseReport, ProbeSample, SpanKind};
 use crate::util::json::Value;
 use crate::workflow::WorkflowPlan;
 use crate::workload::{Scenario, SessionScript, Trace, WorkloadGenerator, WorkloadKind};
@@ -86,11 +87,20 @@ enum ArrivalPlan {
     Workflow(WorkflowPlan),
 }
 
+/// Schema version tag stamped on every [`ExecEvent`] JSONL line, so
+/// downstream format sniffing (`agentserve scenario replay`'s
+/// pretty/compact detection) can identify — and loudly reject — an
+/// execution log offered where a workload trace is expected.
+pub const EXEC_SCHEMA: &str = "agentserve-exec-v1";
+
 /// One execution-layer event (opt-in recording; see [`ExecTrace`]).
 #[derive(Debug, Clone)]
 pub struct ExecEvent {
     /// Virtual timestamp (us).
     pub t_us: u64,
+    /// Replica that emitted the event (0 on single-replica paths; the
+    /// fleet merge stamps each replica's stream before interleaving).
+    pub replica: u32,
     pub kind: ExecEventKind,
 }
 
@@ -119,58 +129,75 @@ pub enum ExecEventKind {
 }
 
 impl ExecEvent {
-    fn to_value(&self) -> Value {
-        match self.kind {
-            ExecEventKind::Arrival { session, kind } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "arrival".into()),
-                ("session", session.into()),
-                ("kind", kind.into()),
-            ]),
-            ExecEventKind::Classified { session, queue } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "classified".into()),
-                ("session", session.into()),
-                ("queue", queue.into()),
-            ]),
-            ExecEventKind::Control { b_prefill, r_min } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "control".into()),
-                ("b_prefill", b_prefill.into()),
-                ("r_min", r_min.into()),
-            ]),
-            ExecEventKind::Rebind { decode_sms, cost_us } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "rebind".into()),
-                ("decode_sms", decode_sms.into()),
-                ("cost_us", cost_us.into()),
-            ]),
-            ExecEventKind::FirstToken { session } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "first_token".into()),
-                ("session", session.into()),
-            ]),
-            ExecEventKind::Token { session } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "token".into()),
-                ("session", session.into()),
-            ]),
-            ExecEventKind::SessionDone { session } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "session_done".into()),
-                ("session", session.into()),
-            ]),
-            ExecEventKind::Preempted { session } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "preempted".into()),
-                ("session", session.into()),
-            ]),
-            ExecEventKind::TaskDone { task } => Value::obj(vec![
-                ("t_us", self.t_us.into()),
-                ("event", "task_done".into()),
-                ("task", task.into()),
-            ]),
+    /// Stamp the event with its fleet identity: `replica`, plus the
+    /// replica-local session id remapped through `local2global` (variants
+    /// without a session id — control, rebind, task — just get the stamp).
+    pub fn retag(&mut self, replica: u32, local2global: &[usize]) {
+        self.replica = replica;
+        match &mut self.kind {
+            ExecEventKind::Arrival { session, .. }
+            | ExecEventKind::Classified { session, .. }
+            | ExecEventKind::FirstToken { session }
+            | ExecEventKind::Token { session }
+            | ExecEventKind::SessionDone { session }
+            | ExecEventKind::Preempted { session } => {
+                *session = local2global[*session as usize] as u64;
+            }
+            ExecEventKind::Control { .. }
+            | ExecEventKind::Rebind { .. }
+            | ExecEventKind::TaskDone { .. } => {}
         }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("schema", EXEC_SCHEMA.into()),
+            ("t_us", self.t_us.into()),
+            ("replica", self.replica.into()),
+        ];
+        match self.kind {
+            ExecEventKind::Arrival { session, kind } => {
+                pairs.push(("event", "arrival".into()));
+                pairs.push(("session", session.into()));
+                pairs.push(("kind", kind.into()));
+            }
+            ExecEventKind::Classified { session, queue } => {
+                pairs.push(("event", "classified".into()));
+                pairs.push(("session", session.into()));
+                pairs.push(("queue", queue.into()));
+            }
+            ExecEventKind::Control { b_prefill, r_min } => {
+                pairs.push(("event", "control".into()));
+                pairs.push(("b_prefill", b_prefill.into()));
+                pairs.push(("r_min", r_min.into()));
+            }
+            ExecEventKind::Rebind { decode_sms, cost_us } => {
+                pairs.push(("event", "rebind".into()));
+                pairs.push(("decode_sms", decode_sms.into()));
+                pairs.push(("cost_us", cost_us.into()));
+            }
+            ExecEventKind::FirstToken { session } => {
+                pairs.push(("event", "first_token".into()));
+                pairs.push(("session", session.into()));
+            }
+            ExecEventKind::Token { session } => {
+                pairs.push(("event", "token".into()));
+                pairs.push(("session", session.into()));
+            }
+            ExecEventKind::SessionDone { session } => {
+                pairs.push(("event", "session_done".into()));
+                pairs.push(("session", session.into()));
+            }
+            ExecEventKind::Preempted { session } => {
+                pairs.push(("event", "preempted".into()));
+                pairs.push(("session", session.into()));
+            }
+            ExecEventKind::TaskDone { task } => {
+                pairs.push(("event", "task_done".into()));
+                pairs.push(("task", task.into()));
+            }
+        }
+        Value::obj(pairs)
     }
 }
 
@@ -234,6 +261,12 @@ pub struct SimOutcome {
     /// — present only when `Config::host` is active (`cpu_workers > 0`);
     /// `None` on the legacy unbounded-host path.
     pub host: Option<HostReport>,
+    /// Telemetry log (spans, instants, probes) — present only when
+    /// `Config::obs` is active; `None` on the legacy inert path.
+    pub obs: Option<ObsLog>,
+    /// GPU-time and latency attribution — present only when span tracing
+    /// was on (`Config::obs.trace`).
+    pub phases: Option<PhaseReport>,
     /// Scheduler decisions (tick time us, b_prefill, r_min).
     pub control_trace: Vec<(u64, u32, u32)>,
     /// Realized cold-prefill arrival timestamp per session (us). For
@@ -606,6 +639,9 @@ struct Sim {
     arrival_times: Vec<u64>,
     /// Optional execution-event log (None costs nothing on the hot path).
     log: Option<Vec<ExecEvent>>,
+    /// Observability layer (`None` under the inert default config — every
+    /// hook is then a single branch and the hot path allocates nothing).
+    obs: Option<Box<ObsState>>,
     heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
     seq: u64,
     /// First value `seq` took (0 batch, [`DRIVER_SEQ_INTERNAL`] driver) —
@@ -668,7 +704,7 @@ impl Sim {
 
     fn log_event(&mut self, kind: ExecEventKind) {
         if let Some(log) = &mut self.log {
-            log.push(ExecEvent { t_us: self.now, kind });
+            log.push(ExecEvent { t_us: self.now, replica: 0, kind });
         }
     }
 
@@ -760,6 +796,15 @@ impl Sim {
         if self.sessions[sess].ctx_tokens == 0 {
             self.arrival_times[sess] = self.now;
         }
+        if let Some(o) = &mut self.obs {
+            if self.sessions[sess].ctx_tokens == 0 {
+                // First arrival: open the session root and its Queue child.
+                o.begin(sess, self.now);
+            } else {
+                // Tool return / recompute re-entry: back to the queue.
+                o.transition(sess, SpanKind::Queue, self.now);
+            }
+        }
         let s = &mut self.sessions[sess];
         s.phase = SessPhase::WaitingPrefill;
         s.after_prefill = after;
@@ -832,6 +877,9 @@ impl Sim {
         if self.sessions[sess].after_prefill == AfterPrefill::ContinueDecode {
             // The recompute rebuilt the context; the burst continues where
             // the preemption cut it off. No new token is emitted here.
+            if let Some(o) = &mut self.obs {
+                o.transition(sess, SpanKind::Decode, self.now);
+            }
             let (ctx, rem) = {
                 let s = &self.sessions[sess];
                 (s.ctx_tokens, s.decode_remaining)
@@ -863,6 +911,9 @@ impl Sim {
         s.ctx_tokens += 1;
         self.metrics.first_token(sess as u64, self.now);
         self.log_event(ExecEventKind::FirstToken { session: sess as u64 });
+        if let Some(o) = &mut self.obs {
+            o.transition(sess, SpanKind::Decode, self.now);
+        }
         self.kv_tokens_add(1);
         if self.sessions[sess].decode_remaining == 0 {
             self.decode_burst_finished(sess);
@@ -969,6 +1020,9 @@ impl Sim {
             let step = s.cur_step;
             let lat = s.script.steps[step].tool_latency_us;
             self.sessions[sess].phase = SessPhase::ToolWait;
+            if let Some(o) = &mut self.obs {
+                o.transition(sess, SpanKind::ToolWait, self.now);
+            }
             if self.wf_step_blocked(sess, step) {
                 // Join barrier still closed: park; the barrier's last
                 // dependency schedules this tool return.
@@ -985,6 +1039,9 @@ impl Sim {
         } else {
             self.sessions[sess].phase = SessPhase::Done;
             self.metrics.session_complete(sess as u64, self.now);
+            if let Some(o) = &mut self.obs {
+                o.close_session(sess, self.now);
+            }
             self.done_count += 1;
             let now = self.now;
             let ctx = self.sessions[sess].ctx_tokens as u64;
@@ -1097,7 +1154,14 @@ impl Sim {
             }
             match self.preemption_victim(&[job.session], sess) {
                 Some(victim) => self.preempt_session(victim),
-                None => return None,
+                None => {
+                    // Stays queued on memory, not on dispatch capacity: the
+                    // session's wait reclassifies as a KV stall from here.
+                    if let Some(o) = &mut self.obs {
+                        o.transition(sess, SpanKind::KvStall, self.now);
+                    }
+                    return None;
+                }
             }
         }
     }
@@ -1189,6 +1253,13 @@ impl Sim {
         }
         self.sessions[victim].kv_resident = false;
         self.log_event(ExecEventKind::Preempted { session: victim as u64 });
+        // Tool-waiting victims keep their tool-wait span: the host call is
+        // still the thing the session is blocked on.
+        if runnable {
+            if let Some(o) = &mut self.obs {
+                o.transition(victim, SpanKind::Preempted, now);
+            }
+        }
         match self.sessions[victim].phase {
             SessPhase::Decoding => {
                 if let Some(st) = self.batcher_mut().leave(victim as u64) {
@@ -1310,6 +1381,9 @@ impl Sim {
 
     fn complete_work(&mut self, ctx_id: usize) {
         let work = self.ctx_work[ctx_id].take().expect("ctx had work");
+        if let Some(o) = &mut self.obs {
+            o.slot_complete(ctx_id, self.now);
+        }
         match work {
             Work::Prefill { sess, tokens, kind, dur_us } => {
                 let commit = std::mem::take(&mut self.sessions[sess].prefill_commit);
@@ -1322,6 +1396,12 @@ impl Sim {
                     // blocks already live in the common pool).
                     let t_us = tokens as f64 * self.cfg.engine.pd_transfer_us_per_token
                         + self.cfg.engine.pd_handoff_fixed_us;
+                    // Installed inline, bypassing start(): open its slot
+                    // phase here. The session stays in its prefill span —
+                    // the handoff is part of delivering that prefill.
+                    if let Some(o) = &mut self.obs {
+                        o.slot_start(ctx_id, PhaseBucket::Transfer, self.now);
+                    }
                     self.ctx_work[ctx_id] = Some(Work::Transfer { sess });
                     self.push(self.now + t_us as u64, Ev::CtxFree(ctx_id));
                     return;
@@ -1380,8 +1460,65 @@ impl Sim {
 
     fn start(&mut self, ctx_id: usize, work: Work, dur_us: f64) {
         debug_assert!(self.ctx_work[ctx_id].is_none());
+        if self.obs.is_some() {
+            self.obs_work_started(ctx_id, &work);
+        }
         self.ctx_work[ctx_id] = Some(work);
         self.push(self.now + dur_us.max(1.0) as u64, Ev::CtxFree(ctx_id));
+    }
+
+    /// Single choke point for dispatch-side observability: classify the
+    /// work into a slot phase bucket and move the executing session(s)
+    /// into the matching span. Called only when `obs` is active.
+    fn obs_work_started(&mut self, ctx_id: usize, work: &Work) {
+        let now = self.now;
+        // Decode streams already moved into their Decode spans at
+        // finish_prefill_burst; only the prefilling session (if any)
+        // transitions here.
+        let (bucket, prefilling): (PhaseBucket, Option<(usize, JobKind)>) = match work {
+            Work::Prefill { sess, kind, .. } => {
+                let bucket = if *kind == JobKind::ColdPrefill {
+                    PhaseBucket::Cold
+                } else {
+                    PhaseBucket::Resume
+                };
+                (bucket, Some((*sess, *kind)))
+            }
+            Work::DecodeStep { ids, resume, .. } => match resume {
+                Some((sess, _)) => {
+                    let bucket =
+                        if ids.is_empty() { PhaseBucket::Resume } else { PhaseBucket::Mixed };
+                    (bucket, Some((*sess, JobKind::ResumePrefill)))
+                }
+                None => (PhaseBucket::Decode, None),
+            },
+            // Only reached via the inline install in complete_work; kept
+            // for completeness should a dispatch path ever start one.
+            Work::Transfer { .. } => (PhaseBucket::Transfer, None),
+            Work::Iteration { chunk, decode_ids } => match chunk {
+                Some(c) => {
+                    let bucket = if !decode_ids.is_empty() {
+                        PhaseBucket::Mixed
+                    } else if c.kind == JobKind::ColdPrefill {
+                        PhaseBucket::Cold
+                    } else {
+                        PhaseBucket::Resume
+                    };
+                    (bucket, Some((c.sess, c.kind)))
+                }
+                None => (PhaseBucket::Decode, None),
+            },
+        };
+        let o = self.obs.as_mut().expect("caller checked");
+        o.slot_start(ctx_id, bucket, now);
+        if let Some((sess, kind)) = prefilling {
+            let span = if kind == JobKind::ColdPrefill {
+                SpanKind::ColdPrefill
+            } else {
+                SpanKind::ResumePrefill
+            };
+            o.transition(sess, span, now);
+        }
     }
 
     fn dispatch(&mut self) {
@@ -1815,6 +1952,12 @@ impl Sim {
                 self.log_event(ExecEventKind::Rebind { decode_sms, cost_us });
             }
         }
+        if let Some(o) = &mut self.obs {
+            o.instant(
+                InstantKind::Control { b_prefill: decision.0, r_min: decision.1 },
+                self.now,
+            );
+        }
         // Driver mode keeps ticking while the fleet may still inject
         // arrivals (a batch run's session table always covers every future
         // arrival, so its `done < len` test encodes the same condition).
@@ -1822,6 +1965,62 @@ impl Sim {
             || self.driver.as_ref().is_some_and(|d| !d.no_more_arrivals);
         if more {
             self.push(self.now + interval, Ev::Tick);
+        }
+    }
+
+    // -- probes -------------------------------------------------------------------
+
+    /// Fire every probe grid point due at-or-before `t`, *before* the
+    /// event at `t` is applied — the same pre-event tie discipline as
+    /// control ticks, so a probed run's scheduling is byte-identical to
+    /// an unprobed run's. The fleet driver applies the identical rule
+    /// fleet-side, which keeps the 1-replica fleet byte-equivalent.
+    fn drain_probes(&mut self, t: u64) {
+        if self.obs.is_none() {
+            return;
+        }
+        while let Some(due) = self.obs.as_ref().and_then(|o| o.probe_due(t)) {
+            let row = self.probe_row(due, 0, 1);
+            if let Some(o) = &mut self.obs {
+                o.push_probe(row);
+            }
+        }
+    }
+
+    /// Sample live scheduler state for the probe row at `t_us`. Fleet
+    /// callers stamp their own `replica` / `serving_replicas`.
+    fn probe_row(&self, t_us: u64, replica: u32, serving_replicas: u32) -> ProbeSample {
+        let (queue_cold, queue_resume, b_prefill, r_min) = match &self.state {
+            PState::AgentServe { queues, sched, .. } => (
+                queues.cold_len() as u64,
+                queues.resume_len() as u64,
+                sched.b_prefill(),
+                sched.r_min(),
+            ),
+            PState::Sglang { fifo, .. } => (fifo.len() as u64, 0, 0, 0),
+            PState::IterBatch { fifo, .. } => (fifo.len() as u64, 0, 0, 0),
+        };
+        let kv_used_tokens = match &self.kv {
+            KvState::Tokens { used, .. } => *used,
+            KvState::Paged(gov) => gov.used_tokens(),
+        };
+        let active_sessions = self
+            .sessions
+            .iter()
+            .filter(|s| s.phase != SessPhase::NotArrived && s.phase != SessPhase::Done)
+            .count() as u64;
+        ProbeSample {
+            t_us,
+            replica,
+            serving_replicas,
+            active_sessions,
+            queue_cold,
+            queue_resume,
+            decode_streams: self.batcher().len() as u64,
+            kv_used_tokens,
+            host_inflight: self.host.as_ref().map_or(0, |h| h.inflight(t_us)) as u64,
+            b_prefill,
+            r_min,
         }
     }
 
@@ -1845,6 +2044,7 @@ impl Sim {
     fn run(&mut self) {
         let cap = 200_000_000u64; // runaway guard
         while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+            self.drain_probes(t);
             self.now = t;
             self.handle_event(ev);
             if self.done_count == self.sessions.len() {
@@ -2090,6 +2290,11 @@ impl Sim {
             chain: None,
             arrival_times: vec![0; n_sessions],
             log: if flags.record_events { Some(Vec::new()) } else { None },
+            obs: if cfg.obs.is_active() {
+                Some(Box::new(ObsState::new(cfg.obs)))
+            } else {
+                None
+            },
             heap: BinaryHeap::with_capacity(n_sessions + 16),
             seq: 0,
             seq_base: 0,
@@ -2149,6 +2354,13 @@ impl Sim {
             )
         });
         let host = self.host.as_ref().map(|h| h.report(end));
+        let (obs, phases) = match &mut self.obs {
+            Some(o) => {
+                let (log, phases) = o.finish(end);
+                (Some(log), phases)
+            }
+            None => (None, None),
+        };
         SimOutcome {
             policy_name: policy.name().to_string(),
             report,
@@ -2167,6 +2379,8 @@ impl Sim {
             kv: kv_report,
             workflow,
             host,
+            obs,
+            phases,
             control_trace: std::mem::take(&mut self.control_trace),
             arrivals_us: std::mem::take(&mut self.arrival_times),
         }
@@ -2521,6 +2735,28 @@ impl SimDriver {
         }
     }
 
+    /// Turn on execution-event capture (the fleet's `--exec-out` path).
+    /// Idempotent; call right after construction so no events are missed.
+    pub fn record_events(&mut self) {
+        if self.sim.log.is_none() {
+            self.sim.log = Some(Vec::new());
+        }
+    }
+
+    /// Drain the captured execution events (replica-local order, replica
+    /// field still 0 — the fleet stamps and merges). Empty when
+    /// [`SimDriver::record_events`] was never called.
+    pub fn take_exec_events(&mut self) -> Vec<ExecEvent> {
+        self.sim.log.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Sample this replica's live scheduler state for the fleet-global
+    /// probe grid (the fleet stamps `replica` / `serving_replicas` and owns
+    /// the grid; replica-local probe state is unused in driver mode).
+    pub fn probe_row(&self, t_us: u64, replica: u32, serving_replicas: u32) -> ProbeSample {
+        self.sim.probe_row(t_us, replica, serving_replicas)
+    }
+
     /// Aggregate the replica's run. The report horizon is the replica's
     /// last processed event — identical to the batch tail.
     pub fn finish(mut self) -> SimOutcome {
@@ -2542,6 +2778,11 @@ impl SimDriver {
             RunFlags { record_timeline: false, ..RunFlags::default() },
         );
         d.sim.now = boot_us;
+        if let Some(o) = &mut d.sim.obs {
+            // The incarnation's wall clock (and idle attribution) starts
+            // at boot, not at fleet time 0.
+            o.set_origin(boot_us);
+        }
         if let Policy::AgentServe(opts) = policy {
             if opts.adaptive {
                 // with_flags armed the first tick at the absolute interval;

@@ -115,6 +115,14 @@ impl HostState {
         }
     }
 
+    /// Tool calls still in flight (running or queued) at virtual time
+    /// `now`. Read-only — `outstanding` prunes lazily on issue, so stale
+    /// completions are filtered here rather than mutated away (probe
+    /// sampling must not perturb host state).
+    pub fn inflight(&self, now: u64) -> usize {
+        self.outstanding.iter().filter(|&&c| c > now).count()
+    }
+
     /// Raw per-host samples and counters, for fleet-level aggregation
     /// (percentiles do not compose, so the fleet re-ranks raw waits).
     pub fn samples(&self) -> HostSamples {

@@ -29,6 +29,7 @@ pub mod greenctx;
 pub mod host;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod util;

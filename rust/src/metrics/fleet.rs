@@ -12,6 +12,7 @@ use super::percentile::Summary;
 use super::recorder::WorkflowReport;
 use super::slo::SloReport;
 use crate::host::HostReport;
+use crate::obs::PhaseReport;
 use crate::util::json::Value;
 
 /// Chaos-layer counters of one fleet run: replica faults and their cost.
@@ -179,6 +180,11 @@ pub struct FleetReport {
     /// [`crate::config::HostConfig`] is inert (keeps unhosted JSON
     /// byte-identical to the legacy form).
     pub host: Option<HostReport>,
+    /// GPU-time and latency attribution merged across replicas (slot walls
+    /// sum over incarnations); None unless span tracing was on
+    /// (`Config::obs.trace`), keeping untraced JSON byte-identical to the
+    /// legacy form.
+    pub phases: Option<PhaseReport>,
 }
 
 /// Population coefficient of variation of per-replica token counts.
@@ -265,6 +271,9 @@ impl FleetReport {
         if let Some(h) = &self.host {
             fields.push(("host", h.to_value()));
         }
+        if let Some(p) = &self.phases {
+            fields.push(("phases", p.to_value()));
+        }
         Value::obj(fields)
     }
 }
@@ -324,6 +333,9 @@ impl std::fmt::Display for FleetReport {
         if let Some(h) = &self.host {
             write!(f, "\n  {h}")?;
         }
+        if let Some(p) = &self.phases {
+            write!(f, "\n  gpu   {p}")?;
+        }
         Ok(())
     }
 }
@@ -359,6 +371,7 @@ mod tests {
             chaos: None,
             autoscale: None,
             host: None,
+            phases: None,
         }
     }
 
@@ -458,5 +471,35 @@ mod tests {
         let text = format!("{scaled}");
         assert!(text.contains("3 ups 2 downs"));
         assert!(text.contains("gpu-time 12.0 replica-s"));
+    }
+
+    #[test]
+    fn phase_attribution_is_gated() {
+        use crate::obs::SlotPhases;
+        let untraced = report(vec![50, 50]);
+        assert!(!untraced.to_value().to_string().contains("\"phases\""));
+        let mut traced = report(vec![50, 50]);
+        let slot = SlotPhases {
+            cold_prefill_us: 400,
+            decode_us: 300,
+            idle_us: 300,
+            ..SlotPhases::default()
+        };
+        traced.phases = Some(PhaseReport {
+            wall_us: 1_000,
+            replicas: 2,
+            slots: [slot, SlotPhases { idle_us: 1_000, ..SlotPhases::default() }],
+            queue_us: 100,
+            kv_stall_us: 0,
+            host_wait_us: 50,
+            compute_us: 700,
+            sessions: 10,
+            latency_us: 850,
+        });
+        let v = traced.to_value().to_string();
+        assert!(v.contains("\"phases\""));
+        assert!(v.contains("\"prefill_share\""));
+        let text = format!("{traced}");
+        assert!(text.contains("phase attribution"));
     }
 }

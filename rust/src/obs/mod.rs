@@ -1,0 +1,484 @@
+//! Observability layer: span tracing, time-series probes, GPU-time
+//! attribution.
+//!
+//! This module is the telemetry instrument for the whole stack. It turns
+//! a run into three deterministic artifacts:
+//!
+//! 1. **Span traces** ([`span`]): every session is a root span tiled by
+//!    phase children (queue / kv-stall / cold-prefill / resume-prefill /
+//!    decode / tool-wait / preempted), exported as Chrome trace-event
+//!    JSON (`--trace-out`, loadable in Perfetto with pid = replica and
+//!    tid = global session id).
+//! 2. **Probes** ([`probe`]): live queue/batch/KV/host/knob state sampled
+//!    on a fixed virtual-clock grid (`--probe-out`, JSON or CSV).
+//! 3. **Attribution** ([`phase`]): a [`PhaseReport`] splitting each GPU
+//!    slot's wall clock into cold-prefill/resume-prefill/decode/idle µs
+//!    and each session's latency into queue + kv-stall + host-wait +
+//!    compute, with exact conservation invariants.
+//!
+//! ## Contract (matches kv / chaos / host / autoscale)
+//!
+//! - **Inert by default.** [`crate::config::ObsConfig::is_active`] gates
+//!   construction: the engine holds `Option<Box<ObsState>>` and an inert
+//!   config takes the exact legacy code path — zero allocations, goldens
+//!   byte-identical.
+//! - **Zero perturbation.** The observer is write-only: it consumes no
+//!   randomness, pushes nothing into any event heap, and never influences
+//!   a scheduling decision. Probes drain *outside* the heap (a probe due
+//!   at `T` fires before any event at `T`), so a traced/probed run's
+//!   results are byte-identical to an untraced run's.
+//! - **Deterministic artifacts.** Every output is a pure function of
+//!   `(seed, scenario, config)`; reruns are byte-identical (`cmp`-able).
+//!
+//! ## Conservation invariants (locked in `rust/tests/obs.rs`)
+//!
+//! - Child spans tile the root exactly: per session, phase durations sum
+//!   to the session's wall latency, and no two phases overlap.
+//! - Per GPU slot, attributed busy time + idle == the run's wall clock.
+//!   Only *completed* work intervals are attributed; an interval still in
+//!   flight at run end contributes to idle.
+
+mod phase;
+mod probe;
+mod span;
+
+pub use phase::{PhaseBucket, PhaseReport, SlotPhases};
+pub use probe::{ProbeLog, ProbeSample, PROBE_SCHEMA};
+pub use span::{InstantEvent, InstantKind, ObsLog, Span, SpanKind};
+
+use crate::config::ObsConfig;
+
+/// Per-session observer bookkeeping: the open root, the single open phase
+/// child, and the closed-span decomposition accumulators.
+#[derive(Debug, Clone, Copy, Default)]
+struct SessObs {
+    /// Root span open timestamp (`None` before arrival / after close).
+    root_open: Option<u64>,
+    /// The one open phase child. Invariant: `Some` exactly while
+    /// `root_open` is `Some` — this is what makes the tree tile.
+    open: Option<(SpanKind, u64)>,
+    queue_us: u64,
+    kv_stall_us: u64,
+    host_wait_us: u64,
+    compute_us: u64,
+    latency_us: u64,
+    closed: bool,
+}
+
+/// Live observer state threaded through one replica's engine.
+///
+/// The engine owns `Option<Box<ObsState>>` — `None` when
+/// [`ObsConfig::is_active`] is false, so the inert path allocates
+/// nothing. All span/slot methods are additionally gated on `cfg.trace`
+/// (a probe-only config records no spans), and probe bookkeeping on
+/// `cfg.probe` — callers just call the hooks unconditionally once the
+/// state exists.
+#[derive(Debug, Clone)]
+pub struct ObsState {
+    cfg: ObsConfig,
+    /// Clock origin: 0, or the boot timestamp of a chaos-restart replica
+    /// (its wall clock and idle attribution start there, not at 0).
+    origin_us: u64,
+    sess: Vec<SessObs>,
+    /// In-flight work per GPU slot: `(bucket, start)` recorded at
+    /// dispatch, attributed at completion.
+    slot_open: [Option<(PhaseBucket, u64)>; 2],
+    slot_acc: [SlotPhases; 2],
+    spans: Vec<Span>,
+    instants: Vec<InstantEvent>,
+    probes: Vec<ProbeSample>,
+    /// Next probe grid point (absolute µs).
+    next_probe_us: u64,
+}
+
+impl ObsState {
+    /// Observer for an active config. Callers must gate on
+    /// [`ObsConfig::is_active`]; constructing an inert observer is a bug.
+    pub fn new(cfg: ObsConfig) -> Self {
+        debug_assert!(cfg.is_active(), "inert configs never construct observer state");
+        ObsState {
+            cfg,
+            origin_us: 0,
+            sess: Vec::new(),
+            slot_open: [None; 2],
+            slot_acc: [SlotPhases::default(); 2],
+            spans: Vec::new(),
+            instants: Vec::new(),
+            probes: Vec::new(),
+            // First sample one full interval in (t=0 state is empty).
+            next_probe_us: cfg.probe.interval_us,
+        }
+    }
+
+    /// Shift the clock origin to `boot_us` (chaos-restart replicas): wall
+    /// clock, idle attribution, and the probe grid all start there.
+    pub fn set_origin(&mut self, boot_us: u64) {
+        self.origin_us = boot_us;
+        if self.cfg.probe.is_active() {
+            self.next_probe_us = boot_us + self.cfg.probe.interval_us;
+        }
+    }
+
+    pub fn cfg(&self) -> ObsConfig {
+        self.cfg
+    }
+
+    fn ensure(&mut self, sess: usize) {
+        if sess >= self.sess.len() {
+            self.sess.resize(sess + 1, SessObs::default());
+        }
+    }
+
+    // -- span tree ----------------------------------------------------
+
+    /// Session arrives at `t`: open the root and its first Queue child.
+    pub fn begin(&mut self, sess: usize, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        self.ensure(sess);
+        debug_assert!(self.sess[sess].root_open.is_none(), "session began twice");
+        self.sess[sess].root_open = Some(t);
+        self.sess[sess].open = Some((SpanKind::Queue, t));
+    }
+
+    /// Close the current phase at `t` and open `kind` — the only way a
+    /// session changes phase, which is what keeps the children tiling
+    /// the root. No-op when `kind` is already open; a zero-length closed
+    /// phase is accounted but emits no span row.
+    pub fn transition(&mut self, sess: usize, kind: SpanKind, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        debug_assert!(kind != SpanKind::Session, "the root opens via begin()");
+        self.ensure(sess);
+        if self.sess[sess].closed {
+            return; // stray hook after completion
+        }
+        if self.sess[sess].root_open.is_none() {
+            // Tolerate a transition racing arrival bookkeeping (e.g. a
+            // dispatch hook firing in the same event as the arrival).
+            self.sess[sess].root_open = Some(t);
+        }
+        if let Some((cur, t0)) = self.sess[sess].open {
+            if cur == kind {
+                return;
+            }
+            self.close_child(sess, cur, t0, t);
+        }
+        self.sess[sess].open = Some((kind, t));
+    }
+
+    fn close_child(&mut self, sess: usize, kind: SpanKind, t0: u64, t1: u64) {
+        debug_assert!(t1 >= t0, "virtual clock ran backwards");
+        let dur = t1 - t0;
+        let s = &mut self.sess[sess];
+        match kind {
+            SpanKind::Queue => s.queue_us += dur,
+            SpanKind::KvStall | SpanKind::Preempted => s.kv_stall_us += dur,
+            SpanKind::ToolWait => s.host_wait_us += dur,
+            SpanKind::ColdPrefill | SpanKind::ResumePrefill | SpanKind::Decode => {
+                s.compute_us += dur
+            }
+            SpanKind::Session => unreachable!("roots close via close_session"),
+        }
+        if dur > 0 {
+            self.spans.push(Span {
+                session: sess as u64,
+                replica: 0,
+                kind,
+                start_us: t0,
+                end_us: t1,
+            });
+        }
+    }
+
+    /// Session completes (or its replica dies) at `t`: close the open
+    /// child and the root. Idempotent.
+    pub fn close_session(&mut self, sess: usize, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        self.ensure(sess);
+        if self.sess[sess].closed {
+            return;
+        }
+        if let Some((cur, t0)) = self.sess[sess].open.take() {
+            self.close_child(sess, cur, t0, t);
+        }
+        if let Some(t0) = self.sess[sess].root_open.take() {
+            self.sess[sess].latency_us = t - t0;
+            self.spans.push(Span {
+                session: sess as u64,
+                replica: 0,
+                kind: SpanKind::Session,
+                start_us: t0,
+                end_us: t,
+            });
+            self.sess[sess].closed = true;
+        }
+    }
+
+    // -- GPU slot attribution -----------------------------------------
+
+    /// Slot `slot` starts executing `bucket` work at `t`.
+    pub fn slot_start(&mut self, slot: usize, bucket: PhaseBucket, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        debug_assert!(self.slot_open[slot].is_none(), "slot {slot} double-dispatched");
+        self.slot_open[slot] = Some((bucket, t));
+    }
+
+    /// Slot `slot` finished its work interval at `t`; attribute it.
+    pub fn slot_complete(&mut self, slot: usize, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        if let Some((bucket, t0)) = self.slot_open[slot].take() {
+            self.slot_acc[slot].add(bucket, t - t0);
+        }
+    }
+
+    // -- instants ------------------------------------------------------
+
+    /// Record a zero-duration control-plane event at `t`.
+    pub fn instant(&mut self, kind: InstantKind, t: u64) {
+        if !self.cfg.trace {
+            return;
+        }
+        self.instants.push(InstantEvent { t_us: t, replica: 0, kind });
+    }
+
+    // -- probes --------------------------------------------------------
+
+    /// The next probe grid point that is due at-or-before `t`, if any.
+    /// Callers drain (`probe_due` → build sample → [`ObsState::push_probe`])
+    /// *before* processing events at `t`, giving probes the same tie-order
+    /// discipline as control ticks: a probe at `T` observes pre-`T` state.
+    pub fn probe_due(&self, t: u64) -> Option<u64> {
+        (self.cfg.probe.is_active() && self.next_probe_us <= t).then_some(self.next_probe_us)
+    }
+
+    /// Record a sample and advance the grid one interval.
+    pub fn push_probe(&mut self, sample: ProbeSample) {
+        debug_assert!(self.cfg.probe.is_active());
+        self.next_probe_us += self.cfg.probe.interval_us;
+        self.probes.push(sample);
+    }
+
+    // -- finish --------------------------------------------------------
+
+    /// Seal the run at `end`: close every open span there, compute idle
+    /// per slot, and hand back the log plus the attribution report
+    /// (`None` when tracing was off — a probe-only run has no spans).
+    pub fn finish(&mut self, end: u64) -> (ObsLog, Option<PhaseReport>) {
+        let phases = if self.cfg.trace {
+            for s in 0..self.sess.len() {
+                if !self.sess[s].closed && self.sess[s].root_open.is_some() {
+                    self.close_session(s, end);
+                }
+            }
+            let wall = end - self.origin_us;
+            let mut slots = self.slot_acc;
+            for s in &mut slots {
+                debug_assert!(s.busy_us() <= wall, "attributed more than wall");
+                s.idle_us = wall - s.busy_us();
+            }
+            let mut pr = PhaseReport {
+                wall_us: wall,
+                replicas: 1,
+                slots,
+                queue_us: 0,
+                kv_stall_us: 0,
+                host_wait_us: 0,
+                compute_us: 0,
+                sessions: 0,
+                latency_us: 0,
+            };
+            for s in &self.sess {
+                if !s.closed {
+                    continue; // never arrived
+                }
+                pr.queue_us += s.queue_us;
+                pr.kv_stall_us += s.kv_stall_us;
+                pr.host_wait_us += s.host_wait_us;
+                pr.compute_us += s.compute_us;
+                pr.latency_us += s.latency_us;
+                pr.sessions += 1;
+            }
+            Some(pr)
+        } else {
+            None
+        };
+        let log = ObsLog {
+            spans: std::mem::take(&mut self.spans),
+            instants: std::mem::take(&mut self.instants),
+            probes: self.cfg.probe.is_active().then(|| ProbeLog {
+                interval_us: self.cfg.probe.interval_us,
+                samples: std::mem::take(&mut self.probes),
+            }),
+        };
+        (log, phases)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traced() -> ObsState {
+        ObsState::new(ObsConfig::traced())
+    }
+
+    #[test]
+    fn lifecycle_tiles_the_root_exactly() {
+        let mut o = traced();
+        o.begin(0, 100);
+        o.transition(0, SpanKind::ColdPrefill, 150);
+        o.transition(0, SpanKind::Decode, 300);
+        o.transition(0, SpanKind::ToolWait, 500);
+        o.transition(0, SpanKind::Queue, 900);
+        o.transition(0, SpanKind::ResumePrefill, 950);
+        o.transition(0, SpanKind::Decode, 1000);
+        o.close_session(0, 1200);
+        let (log, phases) = o.finish(1200);
+        let pr = phases.unwrap();
+        // Decomposition sums to the root's latency.
+        assert_eq!(pr.latency_us, 1100);
+        assert_eq!(
+            pr.queue_us + pr.kv_stall_us + pr.host_wait_us + pr.compute_us,
+            pr.latency_us
+        );
+        assert_eq!(pr.queue_us, 50 + 50);
+        assert_eq!(pr.host_wait_us, 400);
+        assert_eq!(pr.compute_us, 150 + 200 + 50 + 200);
+        // Children tile the root: sorted child spans abut exactly.
+        let mut children: Vec<&Span> =
+            log.spans.iter().filter(|s| s.kind != SpanKind::Session).collect();
+        children.sort_by_key(|s| s.start_us);
+        let root = log.spans.iter().find(|s| s.kind == SpanKind::Session).unwrap();
+        assert_eq!(children.first().unwrap().start_us, root.start_us);
+        assert_eq!(children.last().unwrap().end_us, root.end_us);
+        for w in children.windows(2) {
+            assert_eq!(w[0].end_us, w[1].start_us, "gap or overlap in tiling");
+        }
+    }
+
+    #[test]
+    fn same_kind_transition_is_a_noop_and_zero_spans_are_dropped() {
+        let mut o = traced();
+        o.begin(0, 0);
+        o.transition(0, SpanKind::Queue, 10); // same kind: no-op
+        o.transition(0, SpanKind::ColdPrefill, 20);
+        o.transition(0, SpanKind::Decode, 20); // zero-length prefill
+        o.close_session(0, 50);
+        let (log, phases) = o.finish(50);
+        let kinds: Vec<SpanKind> = log.spans.iter().map(|s| s.kind).collect();
+        assert!(!kinds.contains(&SpanKind::ColdPrefill), "zero-length span emitted");
+        assert!(kinds.contains(&SpanKind::Queue));
+        // ... but its (zero) duration is still accounted.
+        assert_eq!(phases.unwrap().latency_us, 50);
+    }
+
+    #[test]
+    fn slot_attribution_conserves_wall() {
+        let mut o = traced();
+        o.slot_start(0, PhaseBucket::Cold, 0);
+        o.slot_complete(0, 400);
+        o.slot_start(0, PhaseBucket::Decode, 450);
+        o.slot_complete(0, 800);
+        o.slot_start(1, PhaseBucket::Mixed, 100);
+        o.slot_complete(1, 300);
+        // Slot 1 dispatches again but the run ends mid-flight.
+        o.slot_start(1, PhaseBucket::Decode, 900);
+        let (_, phases) = o.finish(1000);
+        let pr = phases.unwrap();
+        for s in &pr.slots {
+            assert_eq!(s.total_us(), 1000, "busy+idle must equal wall");
+        }
+        assert_eq!(pr.slots[0].cold_prefill_us, 400);
+        assert_eq!(pr.slots[0].decode_us, 350);
+        assert_eq!(pr.slots[0].idle_us, 250);
+        // The in-flight interval landed in idle, not decode.
+        assert_eq!(pr.slots[1].decode_us, 0);
+        assert_eq!(pr.slots[1].idle_us, 800);
+    }
+
+    #[test]
+    fn probe_grid_fires_in_order_and_respects_origin() {
+        let mut o = ObsState::new(ObsConfig::probed(1_000));
+        assert_eq!(o.probe_due(999), None);
+        assert_eq!(o.probe_due(1_000), Some(1_000));
+        let mut s = ProbeSample {
+            t_us: 1_000,
+            replica: 0,
+            serving_replicas: 1,
+            active_sessions: 0,
+            queue_cold: 0,
+            queue_resume: 0,
+            decode_streams: 0,
+            kv_used_tokens: 0,
+            host_inflight: 0,
+            b_prefill: 0,
+            r_min: 0,
+        };
+        o.push_probe(s);
+        assert_eq!(o.probe_due(1_500), None);
+        assert_eq!(o.probe_due(2_000), Some(2_000));
+        s.t_us = 2_000;
+        o.push_probe(s);
+        let (log, phases) = o.finish(5_000);
+        assert!(phases.is_none(), "probe-only runs have no attribution");
+        let probes = log.probes.unwrap();
+        assert_eq!(probes.samples.len(), 2);
+        assert!(log.spans.is_empty());
+        // A restart replica's grid starts one interval after boot.
+        let mut boot = ObsState::new(ObsConfig::probed(1_000));
+        boot.set_origin(10_000);
+        assert_eq!(boot.probe_due(10_500), None);
+        assert_eq!(boot.probe_due(11_000), Some(11_000));
+    }
+
+    #[test]
+    fn probe_only_config_records_no_spans() {
+        let mut o = ObsState::new(ObsConfig::probed(1_000));
+        o.begin(0, 0);
+        o.transition(0, SpanKind::Decode, 10);
+        o.slot_start(0, PhaseBucket::Decode, 0);
+        o.slot_complete(0, 10);
+        o.instant(InstantKind::Chaos { what: "crash".into() }, 5);
+        o.close_session(0, 20);
+        let (log, phases) = o.finish(20);
+        assert!(log.spans.is_empty());
+        assert!(log.instants.is_empty());
+        assert!(phases.is_none());
+    }
+
+    #[test]
+    fn crash_finish_closes_open_sessions_at_the_horizon() {
+        let mut o = traced();
+        o.begin(0, 0);
+        o.transition(0, SpanKind::Decode, 100);
+        // Replica dies at 500 with the session mid-decode.
+        let (log, phases) = o.finish(500);
+        let root = log.spans.iter().find(|s| s.kind == SpanKind::Session).unwrap();
+        assert_eq!(root.end_us, 500);
+        let pr = phases.unwrap();
+        assert_eq!(pr.sessions, 1);
+        assert_eq!(pr.latency_us, 500);
+        assert_eq!(pr.compute_us, 400);
+    }
+
+    #[test]
+    fn origin_shifts_wall_for_restart_replicas() {
+        let mut o = traced();
+        o.set_origin(10_000);
+        o.slot_start(0, PhaseBucket::Cold, 10_000);
+        o.slot_complete(0, 10_400);
+        let (_, phases) = o.finish(11_000);
+        let pr = phases.unwrap();
+        assert_eq!(pr.wall_us, 1_000);
+        assert_eq!(pr.slots[0].idle_us, 600);
+    }
+}

@@ -1,0 +1,325 @@
+//! GPU-time attribution: where did every slot-microsecond go?
+//!
+//! [`SlotPhases`] splits one execution slot's wall clock into
+//! cold-prefill / resume-prefill / decode / mixed / transfer / idle µs;
+//! [`PhaseReport`] aggregates both slots plus the per-session latency
+//! decomposition (queue + kv-stall + host-wait + compute). Both carry hard
+//! conservation invariants — busy + idle == wall per slot, decomposition
+//! sums == total session latency — locked in `rust/tests/obs.rs`.
+//!
+//! Attribution only counts *completed* work intervals: the observer
+//! records `(bucket, start)` when a slot dispatches and accumulates
+//! `now - start` when the work completes, so an interval still in flight
+//! at run end contributes nothing and lands in idle. That keeps the
+//! per-slot invariant exact by construction instead of by bookkeeping.
+
+use crate::util::json::Value;
+use std::fmt;
+
+/// What a GPU slot is computing during one work interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseBucket {
+    /// Cold prefill (fresh prompt, no reusable KV).
+    Cold,
+    /// Resume prefill (tool-return re-entry over cached context).
+    Resume,
+    /// Pure decode step(s).
+    Decode,
+    /// A fused iteration serving both a prefill chunk and decode streams
+    /// (iteration-level batching / hybrid resume admission).
+    Mixed,
+    /// KV transfer between contexts (SGLang-style handoff).
+    Transfer,
+}
+
+/// One execution slot's wall clock, fully attributed (µs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SlotPhases {
+    pub cold_prefill_us: u64,
+    pub resume_prefill_us: u64,
+    pub decode_us: u64,
+    pub mixed_us: u64,
+    pub transfer_us: u64,
+    /// Wall minus busy, filled in at report build.
+    pub idle_us: u64,
+}
+
+impl SlotPhases {
+    /// Credit one completed work interval to its bucket.
+    pub fn add(&mut self, bucket: PhaseBucket, dur_us: u64) {
+        match bucket {
+            PhaseBucket::Cold => self.cold_prefill_us += dur_us,
+            PhaseBucket::Resume => self.resume_prefill_us += dur_us,
+            PhaseBucket::Decode => self.decode_us += dur_us,
+            PhaseBucket::Mixed => self.mixed_us += dur_us,
+            PhaseBucket::Transfer => self.transfer_us += dur_us,
+        }
+    }
+
+    /// Attributed compute time (everything except idle).
+    pub fn busy_us(&self) -> u64 {
+        self.cold_prefill_us
+            + self.resume_prefill_us
+            + self.decode_us
+            + self.mixed_us
+            + self.transfer_us
+    }
+
+    /// Busy + idle — equals the slot's wall clock by construction.
+    pub fn total_us(&self) -> u64 {
+        self.busy_us() + self.idle_us
+    }
+
+    /// Did this slot ever run decode work (pure or fused)?
+    pub fn ran_decode(&self) -> bool {
+        self.decode_us > 0 || self.mixed_us > 0
+    }
+
+    /// Component-wise sum (fleet aggregation across replicas).
+    pub fn merge(&mut self, other: &SlotPhases) {
+        self.cold_prefill_us += other.cold_prefill_us;
+        self.resume_prefill_us += other.resume_prefill_us;
+        self.decode_us += other.decode_us;
+        self.mixed_us += other.mixed_us;
+        self.transfer_us += other.transfer_us;
+        self.idle_us += other.idle_us;
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("cold_prefill_us", self.cold_prefill_us.into()),
+            ("resume_prefill_us", self.resume_prefill_us.into()),
+            ("decode_us", self.decode_us.into()),
+            ("mixed_us", self.mixed_us.into()),
+            ("transfer_us", self.transfer_us.into()),
+            ("idle_us", self.idle_us.into()),
+        ])
+    }
+}
+
+/// End-of-run GPU-time and latency attribution.
+///
+/// Single-replica invariants (locked in `rust/tests/obs.rs`):
+/// - per slot: `busy_us() + idle_us == wall_us`;
+/// - per run: `queue_us + kv_stall_us + host_wait_us + compute_us
+///   == latency_us` (the sum of all session wall latencies).
+///
+/// Fleet merges sum every component and every wall, so the merged
+/// invariants become `Σ slots[i].total_us() == 2 × wall_us` (two slots per
+/// replica) with the latency decomposition unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseReport {
+    /// Run horizon (µs). A replica booted mid-run (chaos restart) counts
+    /// only its own service interval; fleet merges sum per-replica walls.
+    pub wall_us: u64,
+    /// Replicas folded into this report.
+    pub replicas: u32,
+    /// Slot 0 = prefill context, slot 1 = decode context (green-context
+    /// policies; single-queue baselines run everything on slot 0).
+    pub slots: [SlotPhases; 2],
+    /// Session-latency decomposition: time spent queued for dispatch.
+    pub queue_us: u64,
+    /// ... waiting on KV admission or preempted for memory.
+    pub kv_stall_us: u64,
+    /// ... waiting on tool calls / the host CPU.
+    pub host_wait_us: u64,
+    /// ... in prefill or decode spans.
+    pub compute_us: u64,
+    /// Sessions folded into the decomposition.
+    pub sessions: u64,
+    /// Total session wall latency (µs) — the decomposition's checksum.
+    pub latency_us: u64,
+}
+
+impl PhaseReport {
+    /// Fraction of attributed GPU busy time spent in prefill (cold +
+    /// resume) across both slots. 0 when nothing ran.
+    pub fn prefill_share(&self) -> f64 {
+        let busy: u64 = self.slots.iter().map(|s| s.busy_us()).sum();
+        if busy == 0 {
+            return 0.0;
+        }
+        let prefill: u64 = self
+            .slots
+            .iter()
+            .map(|s| s.cold_prefill_us + s.resume_prefill_us)
+            .sum();
+        prefill as f64 / busy as f64
+    }
+
+    /// Idle fraction of the slots that executed decode work — how much of
+    /// the decode lane's reservation went unused. 0 when no slot decoded.
+    pub fn decode_idle_share(&self) -> f64 {
+        let (idle, total) = self
+            .slots
+            .iter()
+            .filter(|s| s.ran_decode())
+            .fold((0u64, 0u64), |(i, t), s| (i + s.idle_us, t + s.total_us()));
+        if total == 0 {
+            return 0.0;
+        }
+        idle as f64 / total as f64
+    }
+
+    /// Fold another replica's report in (fleet aggregation).
+    pub fn merge(&mut self, other: &PhaseReport) {
+        self.wall_us += other.wall_us;
+        self.replicas += other.replicas;
+        for (a, b) in self.slots.iter_mut().zip(other.slots.iter()) {
+            a.merge(b);
+        }
+        self.queue_us += other.queue_us;
+        self.kv_stall_us += other.kv_stall_us;
+        self.host_wait_us += other.host_wait_us;
+        self.compute_us += other.compute_us;
+        self.sessions += other.sessions;
+        self.latency_us += other.latency_us;
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("wall_us", self.wall_us.into()),
+            ("replicas", self.replicas.into()),
+            ("slot0", self.slots[0].to_value()),
+            ("slot1", self.slots[1].to_value()),
+            ("queue_us", self.queue_us.into()),
+            ("kv_stall_us", self.kv_stall_us.into()),
+            ("host_wait_us", self.host_wait_us.into()),
+            ("compute_us", self.compute_us.into()),
+            ("sessions", self.sessions.into()),
+            ("latency_us", self.latency_us.into()),
+            ("prefill_share", self.prefill_share().into()),
+            ("decode_idle_share", self.decode_idle_share().into()),
+        ])
+    }
+}
+
+impl fmt::Display for PhaseReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "phase attribution  wall {:.1} ms x {} replica(s)",
+            self.wall_us as f64 / 1e3,
+            self.replicas
+        )?;
+        for (i, s) in self.slots.iter().enumerate() {
+            writeln!(
+                f,
+                "  slot{i}: cold {:.1} ms  resume {:.1} ms  decode {:.1} ms  mixed {:.1} ms  transfer {:.1} ms  idle {:.1} ms",
+                s.cold_prefill_us as f64 / 1e3,
+                s.resume_prefill_us as f64 / 1e3,
+                s.decode_us as f64 / 1e3,
+                s.mixed_us as f64 / 1e3,
+                s.transfer_us as f64 / 1e3,
+                s.idle_us as f64 / 1e3,
+            )?;
+        }
+        writeln!(
+            f,
+            "  sessions {}: queue {:.1} ms  kv-stall {:.1} ms  host-wait {:.1} ms  compute {:.1} ms",
+            self.sessions,
+            self.queue_us as f64 / 1e3,
+            self.kv_stall_us as f64 / 1e3,
+            self.host_wait_us as f64 / 1e3,
+            self.compute_us as f64 / 1e3,
+        )?;
+        write!(
+            f,
+            "  prefill share {:.3}  decode idle share {:.3}",
+            self.prefill_share(),
+            self.decode_idle_share()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(cold: u64, resume: u64, decode: u64, idle: u64) -> SlotPhases {
+        SlotPhases {
+            cold_prefill_us: cold,
+            resume_prefill_us: resume,
+            decode_us: decode,
+            idle_us: idle,
+            ..SlotPhases::default()
+        }
+    }
+
+    fn report() -> PhaseReport {
+        PhaseReport {
+            wall_us: 1_000,
+            replicas: 1,
+            slots: [slot(300, 200, 0, 500), slot(0, 0, 800, 200)],
+            queue_us: 100,
+            kv_stall_us: 50,
+            host_wait_us: 250,
+            compute_us: 600,
+            sessions: 2,
+            latency_us: 1_000,
+        }
+    }
+
+    #[test]
+    fn slot_conservation_holds() {
+        let r = report();
+        for s in &r.slots {
+            assert_eq!(s.total_us(), r.wall_us);
+        }
+        assert_eq!(
+            r.queue_us + r.kv_stall_us + r.host_wait_us + r.compute_us,
+            r.latency_us
+        );
+    }
+
+    #[test]
+    fn shares_are_fractions_of_the_right_denominators() {
+        let r = report();
+        // prefill busy = 500, total busy = 1300.
+        assert!((r.prefill_share() - 500.0 / 1300.0).abs() < 1e-12);
+        // Only slot1 decoded: idle 200 of wall 1000.
+        assert!((r.decode_idle_share() - 0.2).abs() < 1e-12);
+        let empty = PhaseReport { slots: [SlotPhases::default(); 2], ..report() };
+        assert_eq!(empty.prefill_share(), 0.0);
+        assert_eq!(empty.decode_idle_share(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_every_component() {
+        let mut a = report();
+        let b = report();
+        a.merge(&b);
+        assert_eq!(a.wall_us, 2_000);
+        assert_eq!(a.replicas, 2);
+        assert_eq!(a.sessions, 4);
+        assert_eq!(a.latency_us, 2_000);
+        // Fleet invariant: slot totals sum to 2 × merged wall.
+        let total: u64 = a.slots.iter().map(|s| s.total_us()).sum();
+        assert_eq!(total, 2 * a.wall_us);
+    }
+
+    #[test]
+    fn bucket_accounting_routes_to_named_fields() {
+        let mut s = SlotPhases::default();
+        s.add(PhaseBucket::Cold, 10);
+        s.add(PhaseBucket::Resume, 20);
+        s.add(PhaseBucket::Decode, 30);
+        s.add(PhaseBucket::Mixed, 40);
+        s.add(PhaseBucket::Transfer, 50);
+        assert_eq!(s.cold_prefill_us, 10);
+        assert_eq!(s.resume_prefill_us, 20);
+        assert_eq!(s.decode_us, 30);
+        assert_eq!(s.mixed_us, 40);
+        assert_eq!(s.transfer_us, 50);
+        assert_eq!(s.busy_us(), 150);
+        assert!(s.ran_decode());
+    }
+
+    #[test]
+    fn to_value_exposes_shares() {
+        let v = report().to_value();
+        assert!(v.get("prefill_share").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(v.get("wall_us").unwrap().as_u64(), Some(1_000));
+        assert!(v.get("slot1").unwrap().get("decode_us").is_some());
+    }
+}

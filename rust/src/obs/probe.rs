@@ -1,0 +1,180 @@
+//! Virtual-clock time-series probes.
+//!
+//! A probe samples live scheduler state on a fixed grid of the virtual
+//! clock (`ObsConfig::probe.interval_us`). The tie-order discipline
+//! matches control ticks: a probe due at time `T` fires *before* any
+//! event at `T` is processed, so the sample observes the state produced
+//! by all events strictly before `T`. Probes never enter the event heap
+//! and consume no randomness — a probed run's scheduling decisions are
+//! byte-identical to an unprobed run's (locked in `ci/check.sh` by a
+//! traced-vs-untraced report `cmp`).
+//!
+//! In fleet runs the grid is fleet-global and one row is emitted per
+//! *serving* replica per tick (crashed/parked replicas emit nothing), so
+//! `serving_replicas` is constant across the rows of one tick.
+
+use crate::util::json::Value;
+use std::fmt::Write as _;
+
+/// Schema tag stamped on every probe artifact (JSON envelope + CSV
+/// consumers key on the column header).
+pub const PROBE_SCHEMA: &str = "agentserve-probe-v1";
+
+/// One sample of live scheduler state at `t_us`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeSample {
+    pub t_us: u64,
+    /// Replica sampled (0 for single-replica runs).
+    pub replica: u32,
+    /// Serving replicas at sample time (1 for single-replica runs).
+    pub serving_replicas: u32,
+    /// Injected-but-unfinished sessions on this replica.
+    pub active_sessions: u64,
+    /// Cold-prefill queue depth (whole FIFO for single-queue baselines).
+    pub queue_cold: u64,
+    /// Resume-prefill queue depth (0 for single-queue baselines).
+    pub queue_resume: u64,
+    /// Streams in the decode batch.
+    pub decode_streams: u64,
+    /// KV tokens resident (counter or paged-pool used tokens).
+    pub kv_used_tokens: u64,
+    /// Tool calls in flight on the host at sample time.
+    pub host_inflight: u64,
+    /// Active resume-admission budget knob (0 for non-AgentServe policies).
+    pub b_prefill: u32,
+    /// Active decode-reservation knob (0 for non-AgentServe policies).
+    pub r_min: u32,
+}
+
+impl ProbeSample {
+    /// CSV column order; must match [`ProbeSample::write_csv_row`].
+    pub const CSV_HEADER: &'static str = "t_us,replica,serving_replicas,active_sessions,\
+queue_cold,queue_resume,decode_streams,kv_used_tokens,host_inflight,b_prefill,r_min";
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("t_us", self.t_us.into()),
+            ("replica", self.replica.into()),
+            ("serving_replicas", self.serving_replicas.into()),
+            ("active_sessions", self.active_sessions.into()),
+            ("queue_cold", self.queue_cold.into()),
+            ("queue_resume", self.queue_resume.into()),
+            ("decode_streams", self.decode_streams.into()),
+            ("kv_used_tokens", self.kv_used_tokens.into()),
+            ("host_inflight", self.host_inflight.into()),
+            ("b_prefill", self.b_prefill.into()),
+            ("r_min", self.r_min.into()),
+        ])
+    }
+
+    fn write_csv_row(&self, out: &mut String) {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            self.t_us,
+            self.replica,
+            self.serving_replicas,
+            self.active_sessions,
+            self.queue_cold,
+            self.queue_resume,
+            self.decode_streams,
+            self.kv_used_tokens,
+            self.host_inflight,
+            self.b_prefill,
+            self.r_min,
+        );
+    }
+}
+
+/// Every probe sample from one run, in sample order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProbeLog {
+    /// The sampling grid the rows sit on.
+    pub interval_us: u64,
+    pub samples: Vec<ProbeSample>,
+}
+
+impl ProbeLog {
+    /// JSON envelope: schema tag, grid, row count, rows. `n_samples`
+    /// doubles as the conservation checksum against the CSV form
+    /// (CSV data rows == `n_samples`, checked in `ci/check.sh`).
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("schema", PROBE_SCHEMA.into()),
+            ("interval_us", self.interval_us.into()),
+            ("n_samples", self.samples.len().into()),
+            (
+                "samples",
+                Value::Arr(self.samples.iter().map(|s| s.to_value()).collect()),
+            ),
+        ])
+    }
+
+    /// CSV form: header + one row per sample.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::with_capacity(64 * (self.samples.len() + 1));
+        out.push_str(ProbeSample::CSV_HEADER);
+        out.push('\n');
+        for s in &self.samples {
+            s.write_csv_row(&mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: u64) -> ProbeSample {
+        ProbeSample {
+            t_us: t,
+            replica: 0,
+            serving_replicas: 1,
+            active_sessions: 3,
+            queue_cold: 2,
+            queue_resume: 1,
+            decode_streams: 4,
+            kv_used_tokens: 9000,
+            host_inflight: 1,
+            b_prefill: 512,
+            r_min: 2,
+        }
+    }
+
+    #[test]
+    fn csv_and_json_row_counts_agree() {
+        let log = ProbeLog { interval_us: 1_000, samples: (1..=5).map(|i| sample(i * 1_000)).collect() };
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 6, "header + 5 rows");
+        assert!(csv.starts_with(ProbeSample::CSV_HEADER));
+        let v = log.to_value();
+        assert_eq!(v.get("n_samples").unwrap().as_u64(), Some(5));
+        assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(PROBE_SCHEMA));
+    }
+
+    #[test]
+    fn header_matches_row_field_count() {
+        let cols = ProbeSample::CSV_HEADER.split(',').count();
+        let log = ProbeLog { interval_us: 1_000, samples: vec![sample(1_000)] };
+        let row = log.to_csv().lines().nth(1).unwrap().to_string();
+        assert_eq!(row.split(',').count(), cols);
+        // And the JSON row has the same field count, same names in order.
+        let v = sample(1_000).to_value();
+        if let Value::Obj(pairs) = &v {
+            let names: Vec<&str> = pairs.iter().map(|(k, _)| k.as_str()).collect();
+            let header: Vec<&str> = ProbeSample::CSV_HEADER.split(',').collect();
+            assert_eq!(names, header);
+        } else {
+            panic!("not an object");
+        }
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        let log = ProbeLog { interval_us: 2_000, samples: vec![sample(2_000), sample(4_000)] };
+        assert_eq!(log.to_value().to_string(), log.to_value().to_string());
+        assert_eq!(log.to_csv(), log.to_csv());
+    }
+}

@@ -1,0 +1,313 @@
+//! Span model and Chrome trace-event export.
+//!
+//! Every session becomes a span tree on the virtual clock: one root
+//! [`SpanKind::Session`] span (arrival → completion) tiled exactly by
+//! child phase spans — queue wait, KV stall, cold/resume prefill, decode,
+//! tool wait, preemption. "Tiled exactly" is the key structural property:
+//! at any instant inside the root exactly one child is open, children
+//! never overlap, and child durations sum to the root's — which is what
+//! makes the latency decomposition in [`crate::obs::PhaseReport`]
+//! conservative by construction.
+//!
+//! The export target is the Chrome trace-event JSON format (load the file
+//! in `chrome://tracing` or <https://ui.perfetto.dev>): spans map to
+//! `ph:"X"` complete events with `pid` = replica and `tid` = global
+//! session id, control/chaos/autoscale ticks map to `ph:"i"` instant
+//! events. Rows are sorted by `(ts, replica, session, kind)` with the
+//! root span first at equal timestamps, so the file is byte-deterministic
+//! for a given `(seed, scenario, config)`.
+
+use super::{PhaseReport, ProbeLog};
+use crate::util::json::Value;
+
+/// Phase of a session span (or the root itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Root span: arrival → completion. Parent of every other kind.
+    Session,
+    /// Queued, waiting for a dispatch slot.
+    Queue,
+    /// Queued specifically on KV admission (pool full).
+    KvStall,
+    /// Cold prefill executing.
+    ColdPrefill,
+    /// Resume prefill (tool-return re-entry) executing.
+    ResumePrefill,
+    /// Decode burst(s) executing.
+    Decode,
+    /// Waiting on a tool call / the host CPU.
+    ToolWait,
+    /// Preempted for memory; waiting to re-enter.
+    Preempted,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Session => "session",
+            SpanKind::Queue => "queue",
+            SpanKind::KvStall => "kv-stall",
+            SpanKind::ColdPrefill => "cold-prefill",
+            SpanKind::ResumePrefill => "resume-prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::ToolWait => "tool-wait",
+            SpanKind::Preempted => "preempted",
+        }
+    }
+
+    /// Sort rank at equal timestamps: the root opens before its children.
+    fn rank(&self) -> u8 {
+        match self {
+            SpanKind::Session => 0,
+            SpanKind::Queue => 1,
+            SpanKind::KvStall => 2,
+            SpanKind::ColdPrefill => 3,
+            SpanKind::ResumePrefill => 4,
+            SpanKind::Decode => 5,
+            SpanKind::ToolWait => 6,
+            SpanKind::Preempted => 7,
+        }
+    }
+}
+
+/// One closed span on the virtual clock (µs, end-exclusive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Session id: replica-local in the engine, remapped to the global id
+    /// by the fleet merge.
+    pub session: u64,
+    /// Replica that executed the span (0 for single-replica runs).
+    pub replica: u32,
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us - self.start_us
+    }
+
+    /// One Chrome `ph:"X"` complete event.
+    fn to_trace_event(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.kind.name().into()),
+            ("cat", "session".into()),
+            ("ph", "X".into()),
+            ("ts", self.start_us.into()),
+            ("dur", self.dur_us().into()),
+            ("pid", self.replica.into()),
+            ("tid", self.session.into()),
+        ])
+    }
+}
+
+/// A zero-duration control-plane event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InstantKind {
+    /// Adaptive scheduler tick: the knob values it decided.
+    Control { b_prefill: u32, r_min: u32 },
+    /// Chaos-layer event (`"crash"`, `"restart"`, `"tool-fault"`, ...).
+    Chaos { what: String },
+    /// Autoscaler decision: serving count before → target after.
+    Autoscale { serving: u32, target: u32 },
+}
+
+impl InstantKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstantKind::Control { .. } => "control-tick",
+            InstantKind::Chaos { .. } => "chaos",
+            InstantKind::Autoscale { .. } => "autoscale",
+        }
+    }
+
+    fn args(&self) -> Value {
+        match self {
+            InstantKind::Control { b_prefill, r_min } => Value::obj(vec![
+                ("b_prefill", (*b_prefill).into()),
+                ("r_min", (*r_min).into()),
+            ]),
+            InstantKind::Chaos { what } => Value::obj(vec![("what", what.as_str().into())]),
+            InstantKind::Autoscale { serving, target } => Value::obj(vec![
+                ("serving", (*serving).into()),
+                ("target", (*target).into()),
+            ]),
+        }
+    }
+}
+
+/// One instant event on the virtual clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstantEvent {
+    pub t_us: u64,
+    /// Replica the event concerns (0 for run-wide events).
+    pub replica: u32,
+    pub kind: InstantKind,
+}
+
+impl InstantEvent {
+    /// One Chrome `ph:"i"` instant event (global scope).
+    fn to_trace_event(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.kind.name().into()),
+            ("cat", "control".into()),
+            ("ph", "i".into()),
+            ("s", "g".into()),
+            ("ts", self.t_us.into()),
+            ("pid", self.replica.into()),
+            ("tid", 0u64.into()),
+            ("args", self.kind.args()),
+        ])
+    }
+}
+
+/// Everything the observer recorded over one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsLog {
+    pub spans: Vec<Span>,
+    pub instants: Vec<InstantEvent>,
+    /// Present when the probe sampler was active.
+    pub probes: Option<ProbeLog>,
+}
+
+impl ObsLog {
+    /// Stamp every row with its fleet identity: `replica` on spans and
+    /// instants, and replica-local session ids remapped through
+    /// `local2global` (the fleet's id table for this replica).
+    pub fn retag(&mut self, replica: u32, local2global: &[usize]) {
+        for s in &mut self.spans {
+            s.replica = replica;
+            s.session = local2global[s.session as usize] as u64;
+        }
+        for i in &mut self.instants {
+            i.replica = replica;
+        }
+    }
+
+    /// Fold another replica's (already retagged) log into this one.
+    pub fn absorb(&mut self, mut other: ObsLog) {
+        self.spans.append(&mut other.spans);
+        self.instants.append(&mut other.instants);
+        debug_assert!(other.probes.is_none(), "probe rows merge at fleet level");
+    }
+
+    /// Chrome trace-event JSON. `phase_report` rides along as an extra
+    /// top-level key (trace viewers ignore unknown keys).
+    pub fn to_chrome_trace(&self, phases: Option<&PhaseReport>) -> Value {
+        let mut rows: Vec<(u64, u32, u64, u8, Value)> = Vec::with_capacity(
+            self.spans.len() + self.instants.len(),
+        );
+        for s in &self.spans {
+            rows.push((s.start_us, s.replica, s.session, s.kind.rank(), s.to_trace_event()));
+        }
+        for i in &self.instants {
+            // Instants sort after any span opening at the same timestamp.
+            rows.push((i.t_us, i.replica, u64::MAX, u8::MAX, i.to_trace_event()));
+        }
+        rows.sort_by(|a, b| (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3)));
+        let events: Vec<Value> = rows.into_iter().map(|r| r.4).collect();
+        let mut pairs = vec![
+            ("schema", Value::from("agentserve-trace-v1")),
+            ("displayTimeUnit", "ms".into()),
+            ("traceEvents", Value::Arr(events)),
+        ];
+        if let Some(p) = phases {
+            pairs.push(("phase_report", p.to_value()));
+        }
+        Value::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(session: u64, kind: SpanKind, start: u64, end: u64) -> Span {
+        Span { session, replica: 0, kind, start_us: start, end_us: end }
+    }
+
+    fn log() -> ObsLog {
+        ObsLog {
+            spans: vec![
+                span(1, SpanKind::Queue, 50, 80),
+                span(0, SpanKind::Session, 0, 100),
+                span(0, SpanKind::Queue, 0, 20),
+                span(1, SpanKind::Session, 50, 200),
+                span(0, SpanKind::ColdPrefill, 20, 60),
+                span(0, SpanKind::Decode, 60, 100),
+            ],
+            instants: vec![InstantEvent {
+                t_us: 40,
+                replica: 0,
+                kind: InstantKind::Control { b_prefill: 512, r_min: 2 },
+            }],
+            probes: None,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_time_ordered_with_required_fields() {
+        let v = log().to_chrome_trace(None);
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("agentserve-trace-v1"));
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 7);
+        let mut last_ts = 0;
+        for e in events {
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "missing {key}");
+            }
+            let ts = e.get("ts").unwrap().as_u64().unwrap();
+            assert!(ts >= last_ts, "events out of order");
+            last_ts = ts;
+        }
+        // Root span sorts before its children at the shared timestamp.
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("session"));
+        assert_eq!(events[1].get("name").unwrap().as_str(), Some("queue"));
+        // Instant carries its knob args and global scope.
+        let inst = events.iter().find(|e| e.get("ph").unwrap().as_str() == Some("i")).unwrap();
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("g"));
+        assert_eq!(inst.get("args").unwrap().get("b_prefill").unwrap().as_u64(), Some(512));
+    }
+
+    #[test]
+    fn phase_report_rides_along() {
+        use crate::obs::SlotPhases;
+        let pr = PhaseReport {
+            wall_us: 100,
+            replicas: 1,
+            slots: [SlotPhases::default(); 2],
+            queue_us: 0,
+            kv_stall_us: 0,
+            host_wait_us: 0,
+            compute_us: 0,
+            sessions: 0,
+            latency_us: 0,
+        };
+        let v = log().to_chrome_trace(Some(&pr));
+        assert_eq!(v.get("phase_report").unwrap().get("wall_us").unwrap().as_u64(), Some(100));
+        assert!(log().to_chrome_trace(None).get("phase_report").is_none());
+    }
+
+    #[test]
+    fn retag_rewrites_identity_and_absorb_merges() {
+        let mut a = log();
+        a.retag(3, &[7, 9]);
+        assert!(a.spans.iter().all(|s| s.replica == 3));
+        assert_eq!(a.spans[1].session, 7); // local 0 → global 7
+        assert_eq!(a.spans[0].session, 9); // local 1 → global 9
+        assert_eq!(a.instants[0].replica, 3);
+        let mut merged = ObsLog::default();
+        merged.absorb(a);
+        merged.absorb(log());
+        assert_eq!(merged.spans.len(), 12);
+        assert_eq!(merged.instants.len(), 2);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = log().to_chrome_trace(None).to_string();
+        let b = log().to_chrome_trace(None).to_string();
+        assert_eq!(a, b);
+    }
+}

@@ -23,6 +23,8 @@ USAGE:
   agentserve scenario run    (--name S | --file f.json) [--policy P | --all-policies]
                              [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl | --events out.jsonl]
+                             [--trace-out t.json] [--probe-out p.json|p.csv
+                              [--probe-interval-us US]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
                              [--cpu-workers N [--tool-dist D]]
   agentserve scenario record (--name S | --file f.json) --out trace.jsonl
@@ -50,12 +52,17 @@ USAGE:
                              [--rate R] [--fan-out D] [--task-slo-ms MS]
                              [--fail-prob P] [--model M] [--gpu G] [--seed N]
                              [--exec-out out.jsonl]
+                             [--trace-out t.json] [--probe-out p.json|p.csv
+                              [--probe-interval-us US]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
                              [--cpu-workers N [--tool-dist D]]
   agentserve cluster list
   agentserve cluster run     (--name S | --file f.json) [--replicas N] [--router R]
                              [--policy P | --all-policies] [--model M] [--gpu G]
                              [--seed N] [--per-replica]
+                             [--exec-out out.jsonl | --events out.jsonl]
+                             [--trace-out t.json] [--probe-out p.json|p.csv
+                              [--probe-interval-us US]]
                              [--autoscale [--min-replicas N] [--max-replicas M]]
                              [--fail-rate R [--restart-ms MS]]
                              [--kv-blocks N] [--kv-block-size N] [--prefix-sharing]
@@ -65,6 +72,10 @@ USAGE:
                              [--router R] [--replicas N] [--policy P]
                              [--model M] [--gpu G] [--seed N] [--threads T]
                              [--out report.json] [--csv report.csv]
+  agentserve probe    (--name S | --file f.json) [--interval-us US]
+                      [--replicas N [--router R]] [--policy P] [--model M]
+                      [--gpu G] [--seed N] [--out p.json|p.csv]
+  agentserve trace validate  --file trace.json
   agentserve figures  [--fig 2|3|5|6|7] [--table 1] [--all] [--json-dir DIR]
   agentserve analyze  [--model M] [--gpu G] [--delta D] [--eps E]
   agentserve serve    [--artifacts DIR] [--agents N] [--policy agentserve|fcfs]
@@ -128,6 +139,19 @@ autoscale: `cluster run --autoscale` hands the fleet to a deterministic
            band floor). `cluster sweep --name autoscale-frontier` maps the
            cost-vs-SLO frontier (up-thresh 0 = static provisioned-for-peak
            baseline; every row carries the replica_us GPU-time integral)
+telemetry: --trace-out writes per-session span trees (queue wait, cold/
+           resume prefill, decode, kv-stall, tool-wait, preemption) as
+           Chrome trace-event JSON — load it in chrome://tracing or
+           Perfetto (pid = replica, tid = session); the GPU-time
+           attribution report (phase_report) rides inside the same file.
+           --probe-out samples queue depths, decode-batch occupancy, KV
+           usage, host backlog, and the control knobs on a fixed
+           virtual-time grid (--probe-interval-us, default 50000) as
+           pretty JSON, or CSV when the path ends in .csv. `agentserve
+           probe` is the standalone sampler; `agentserve trace validate`
+           checks a trace artifact. Telemetry is off by default, never
+           perturbs the simulation (reports stay byte-identical with it
+           on or off), and reruns are byte-identical
 ";
 
 /// Entry point used by `main` (and by CLI tests).
@@ -137,7 +161,12 @@ pub fn run(args: Args) -> crate::Result<()> {
     // errors loudly instead of being silently ignored.
     if !matches!(
         args.subcommand.as_deref(),
-        Some("scenario") | Some("workflow") | Some("cluster") | Some("experiment") | Some("bench")
+        Some("scenario")
+            | Some("workflow")
+            | Some("cluster")
+            | Some("experiment")
+            | Some("bench")
+            | Some("trace")
     ) {
         if let Some(a) = &args.action {
             anyhow::bail!("unexpected positional argument '{a}'");
@@ -163,6 +192,8 @@ pub fn run(args: Args) -> crate::Result<()> {
         Some("scenario") => scenario_cmd(&args),
         Some("workflow") => workflow_cmd(&args),
         Some("cluster") => cluster_cmd(&args),
+        Some("probe") => probe_cmd(&args),
+        Some("trace") => trace_cmd(&args),
         Some("figures") => run_figures(&args),
         Some("analyze") => {
             let model: ModelKind = args.get_or("model", "7b").parse()?;
@@ -252,6 +283,16 @@ fn bench(args: &Args) -> crate::Result<()> {
 /// (including single-line traces) goes through the JSONL parser.
 fn load_trace_any(path: &str) -> crate::Result<crate::workload::Trace> {
     let text = std::fs::read_to_string(path)?;
+    // Execution-event logs are schema-tagged on every line precisely so
+    // they can't be mistaken for a workload trace (both are JSONL).
+    let exec_tag = format!("\"schema\":\"{}\"", crate::engine::EXEC_SCHEMA);
+    if text.lines().next().is_some_and(|l| l.contains(&exec_tag)) {
+        anyhow::bail!(
+            "'{path}' is an execution-event log ({}), not a workload trace — \
+             record a replayable trace with `agentserve scenario record`",
+            crate::engine::EXEC_SCHEMA
+        );
+    }
     if let Ok(v) = crate::util::json::parse(&text) {
         if v.get("events").is_some() {
             return crate::workload::Trace::from_value(&v);
@@ -393,6 +434,131 @@ fn apply_host_flags(
     Ok(true)
 }
 
+/// Apply the `--trace-out` / `--probe-out` telemetry CLI flags onto the
+/// scenario: they activate the obs layer (span tracing / time-series
+/// probes) on top of whatever `obs` block the scenario file already
+/// carries, and name the artifact paths. `--probe-interval-us` tunes the
+/// sampling grid (default 50 ms of virtual time). Returns the two
+/// artifact paths; both `None` leaves the scenario untouched.
+fn apply_obs_flags(
+    args: &Args,
+    scenario: &mut crate::workload::Scenario,
+) -> crate::Result<(Option<String>, Option<String>)> {
+    let trace_out = args.get("trace-out").map(String::from);
+    let probe_out = args.get("probe-out").map(String::from);
+    // Loud refusal over silent drop: an interval with no probe artifact
+    // to write would otherwise do nothing.
+    anyhow::ensure!(
+        probe_out.is_some() || args.get("probe-interval-us").is_none(),
+        "--probe-interval-us tunes the --probe-out sampling grid; pass \
+         --probe-out <file> to record the time series"
+    );
+    if trace_out.is_none() && probe_out.is_none() {
+        return Ok((None, None));
+    }
+    let mut obs = scenario.obs.unwrap_or_default();
+    if trace_out.is_some() {
+        obs.trace = true;
+    }
+    if probe_out.is_some() {
+        obs.probe.interval_us = args.get_u64("probe-interval-us", 50_000)?;
+    }
+    obs.validate()?;
+    scenario.obs = Some(obs);
+    Ok((trace_out, probe_out))
+}
+
+/// Loudly refuse the per-run capture flags (`--trace-out`, `--probe-out`,
+/// `--exec-out`) on actions that run many simulations or none at all —
+/// a silently dropped flag would hide the user's intent.
+fn refuse_capture_flags(args: &Args, ctx: &str) -> crate::Result<()> {
+    for flag in ["trace-out", "probe-out", "probe-interval-us", "exec-out", "events"] {
+        anyhow::ensure!(
+            args.get(flag).is_none(),
+            "--{flag} captures a single run's telemetry; {ctx}"
+        );
+    }
+    Ok(())
+}
+
+/// Write the telemetry artifacts of one traced/probed run: the Chrome
+/// trace-event JSON (with the GPU-time attribution report riding inside,
+/// so stdout stays byte-identical to an untraced run) and/or the probe
+/// time series (CSV when the path ends in `.csv`, pretty JSON otherwise).
+/// Confirmations go to stderr for the same reason. `slug` splices a
+/// per-policy tag into the filename on `--all-policies` runs.
+fn save_obs_artifacts(
+    trace_base: Option<&str>,
+    probe_base: Option<&str>,
+    slug: Option<&str>,
+    obs: Option<&crate::obs::ObsLog>,
+    phases: Option<&crate::obs::PhaseReport>,
+) -> crate::Result<()> {
+    let resolve = |base: &str| match slug {
+        Some(s) => events_path(base, s),
+        None => base.to_string(),
+    };
+    if let Some(base) = trace_base {
+        let log = obs.ok_or_else(|| {
+            anyhow::anyhow!("--trace-out was set but the run kept no span log (bug)")
+        })?;
+        let path = resolve(base);
+        std::fs::write(&path, log.to_chrome_trace(phases).to_string_pretty())?;
+        eprintln!("  {} spans + {} instants -> {path}", log.spans.len(), log.instants.len());
+    }
+    if let Some(base) = probe_base {
+        let probes = obs.and_then(|l| l.probes.as_ref()).ok_or_else(|| {
+            anyhow::anyhow!("--probe-out was set but the run kept no samples (bug)")
+        })?;
+        let path = resolve(base);
+        if path.ends_with(".csv") {
+            std::fs::write(&path, probes.to_csv())?;
+        } else {
+            std::fs::write(&path, probes.to_value().to_string_pretty())?;
+        }
+        eprintln!(
+            "  {} probe samples ({} us grid) -> {path}",
+            probes.samples.len(),
+            probes.interval_us
+        );
+    }
+    Ok(())
+}
+
+/// Check a `--trace-out` artifact against the Chrome trace-event format:
+/// the schema tag, the `traceEvents` array, the keys every viewer needs
+/// (`name`/`ph`/`ts`/`pid`/`tid`), and the sorted-timestamp invariant the
+/// exporter guarantees. Returns the event count.
+fn validate_chrome_trace(v: &crate::util::json::Value) -> crate::Result<usize> {
+    let schema = v.req_str("schema")?;
+    anyhow::ensure!(
+        schema == "agentserve-trace-v1",
+        "unknown trace schema '{schema}' (expected agentserve-trace-v1)"
+    );
+    let events = v.req_arr("traceEvents")?;
+    let mut last_ts = 0.0f64;
+    for (i, e) in events.iter().enumerate() {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            anyhow::ensure!(e.get(key).is_some(), "event {i}: missing required key '{key}'");
+        }
+        let ts = e.req_f64("ts")?;
+        match e.req_str("ph")? {
+            "X" => anyhow::ensure!(
+                e.req_f64("dur")? >= 0.0,
+                "event {i}: complete ('X') event needs a non-negative dur"
+            ),
+            "i" => {}
+            other => anyhow::bail!("event {i}: unexpected phase '{other}' (exporter emits X|i)"),
+        }
+        anyhow::ensure!(
+            ts >= last_ts,
+            "event {i}: ts {ts} out of order (the exporter sorts by timestamp)"
+        );
+        last_ts = ts;
+    }
+    Ok(events.len())
+}
+
 /// Filesystem-safe tag for a policy name (`llama.cpp` → `llama-cpp`).
 fn policy_slug(name: &str) -> String {
     name.chars()
@@ -474,6 +640,7 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             if apply_host_flags(args, &mut cfg, scenario.host.clone())? {
                 scenario.host = None;
             }
+            let (trace_base, probe_base) = apply_obs_flags(args, &mut scenario)?;
             println!(
                 "== scenario '{}' | {} | {} | seed {} ==",
                 scenario.name, model, gpu, seed
@@ -485,9 +652,14 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             let multi = policies.len() > 1;
             for policy in policies {
                 // Only pay for event recording when the log is kept.
-                if let Some(base) = events_base {
+                let (out, exec) = if events_base.is_some() {
                     let (out, exec) = run_scenario_recorded(&cfg, policy, &scenario, seed);
-                    print_scenario_outcome(&out);
+                    (out, Some(exec))
+                } else {
+                    (run_scenario(&cfg, policy, &scenario, seed), None)
+                };
+                print_scenario_outcome(&out);
+                if let (Some(base), Some(exec)) = (events_base, &exec) {
                     // One file per policy so --all-policies doesn't clobber.
                     let path = if multi {
                         events_path(base, &policy_slug(&out.policy_name))
@@ -496,13 +668,24 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
                     };
                     exec.save(&path)?;
                     println!("  {} execution events -> {path}", exec.len());
-                } else {
-                    print_scenario_outcome(&run_scenario(&cfg, policy, &scenario, seed));
                 }
+                let slug = multi.then(|| policy_slug(&out.policy_name));
+                save_obs_artifacts(
+                    trace_base.as_deref(),
+                    probe_base.as_deref(),
+                    slug.as_deref(),
+                    out.obs.as_ref(),
+                    out.phases.as_ref(),
+                )?;
             }
             Ok(())
         }
         Some("record") => {
+            refuse_capture_flags(
+                args,
+                "`scenario record` writes a workload trace via --out — capture \
+                 telemetry on a live run with `agentserve scenario run`",
+            )?;
             let mut scenario = load_scenario_arg(args, &mut cfg)?;
             scenario.validate()?;
             if apply_kv_flags(args, &mut cfg, scenario.kv)? {
@@ -517,6 +700,12 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("sweep") => {
+            refuse_capture_flags(
+                args,
+                "a sweep aggregates many runs — capture one grid point via \
+                 `agentserve scenario run` (the per-point scenario is printed \
+                 by `scenario list`)",
+            )?;
             let spec = resolve_sweep_spec(args, &mut cfg)?;
             spec.validate()?;
             // Sweeps default to comparing the whole paper lineup; --policy
@@ -549,6 +738,11 @@ fn scenario_cmd(args: &Args) -> crate::Result<()> {
             Ok(())
         }
         Some("replay") => {
+            refuse_capture_flags(
+                args,
+                "`scenario replay` re-drives a recorded workload trace — \
+                 capture telemetry on a live run with `agentserve scenario run`",
+            )?;
             apply_kv_flags(args, &mut cfg, None)?;
             let path = args
                 .get("trace")
@@ -642,8 +836,9 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
                 Some(p) => Some(crate::workflow::ToolFaultPolicy::with_fail_prob(p.parse()?)),
                 None => None,
             };
-            let scenario = WorkflowLoad { spec, fan_out, tool_fault }.carrier(tasks, rate);
+            let mut scenario = WorkflowLoad { spec, fan_out, tool_fault }.carrier(tasks, rate);
             scenario.validate()?;
+            let (trace_base, probe_base) = apply_obs_flags(args, &mut scenario)?;
             let per_task = scenario
                 .workflow
                 .as_ref()
@@ -658,9 +853,14 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
             let policies = scenario_policies(args)?;
             let multi = policies.len() > 1;
             for policy in policies {
-                if let Some(base) = exec_base {
+                let (out, exec) = if exec_base.is_some() {
                     let (out, exec) = run_scenario_recorded(&cfg, policy, &scenario, seed);
-                    print_scenario_outcome(&out);
+                    (out, Some(exec))
+                } else {
+                    (run_scenario(&cfg, policy, &scenario, seed), None)
+                };
+                print_scenario_outcome(&out);
+                if let (Some(base), Some(exec)) = (exec_base, &exec) {
                     let path = if multi {
                         events_path(base, &policy_slug(&out.policy_name))
                     } else {
@@ -668,9 +868,15 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
                     };
                     exec.save(&path)?;
                     println!("  {} execution events -> {path}", exec.len());
-                } else {
-                    print_scenario_outcome(&run_scenario(&cfg, policy, &scenario, seed));
                 }
+                let slug = multi.then(|| policy_slug(&out.policy_name));
+                save_obs_artifacts(
+                    trace_base.as_deref(),
+                    probe_base.as_deref(),
+                    slug.as_deref(),
+                    out.obs.as_ref(),
+                    out.phases.as_ref(),
+                )?;
             }
             Ok(())
         }
@@ -692,7 +898,7 @@ fn workflow_cmd(args: &Args) -> crate::Result<()> {
 /// an ad-hoc `--replica-counts` grid — and reports the *inverse* knee: the
 /// smallest fleet meeting the TTFT SLO.
 fn cluster_cmd(args: &Args) -> crate::Result<()> {
-    use crate::cluster::run_cluster;
+    use crate::cluster::{run_cluster, run_cluster_recorded};
     use crate::config::RouterPolicy;
     use crate::workload::{SweepAxis, SweepSpec};
 
@@ -752,6 +958,7 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             if apply_host_flags(args, &mut cfg, scenario.host.clone())? {
                 scenario.host = None;
             }
+            let (trace_base, probe_base) = apply_obs_flags(args, &mut scenario)?;
             // --autoscale hands the fleet size to the control plane: it
             // conflicts with an explicit static --replicas, and the band
             // flags mean nothing without it (loud refusal over silent drop).
@@ -835,8 +1042,19 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                     scenario.name, replicas, router, model, gpu, seed
                 ),
             }
-            for policy in scenario_policies(args)? {
-                let out = run_cluster(&cfg, policy, &scenario, replicas, router, seed)?;
+            // The fleet merge stamps every event with its replica, so the
+            // exec log works here too; --events stays as the alias.
+            let exec_base = args.get("exec-out").or_else(|| args.get("events"));
+            let policies = scenario_policies(args)?;
+            let multi = policies.len() > 1;
+            for policy in policies {
+                let (out, exec) = if exec_base.is_some() {
+                    let (out, exec) =
+                        run_cluster_recorded(&cfg, policy, &scenario, replicas, router, seed)?;
+                    (out, Some(exec))
+                } else {
+                    (run_cluster(&cfg, policy, &scenario, replicas, router, seed)?, None)
+                };
                 println!("--- {} ---", out.policy_name);
                 println!("{}", out.report);
                 if args.has("per-replica") {
@@ -850,10 +1068,32 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
                         );
                     }
                 }
+                if let (Some(base), Some(exec)) = (exec_base, &exec) {
+                    let path = if multi {
+                        events_path(base, &policy_slug(&out.policy_name))
+                    } else {
+                        base.to_string()
+                    };
+                    exec.save(&path)?;
+                    println!("  {} execution events -> {path}", exec.len());
+                }
+                let slug = multi.then(|| policy_slug(&out.policy_name));
+                save_obs_artifacts(
+                    trace_base.as_deref(),
+                    probe_base.as_deref(),
+                    slug.as_deref(),
+                    out.obs.as_ref(),
+                    out.report.phases.as_ref(),
+                )?;
             }
             Ok(())
         }
         Some("sweep") => {
+            refuse_capture_flags(
+                args,
+                "a fleet sweep aggregates many runs — capture one grid point \
+                 via `agentserve cluster run`",
+            )?;
             let model: ModelKind = args.get_or("model", "3b").parse()?;
             let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
             let seed = args.get_u64("seed", 7)?;
@@ -977,6 +1217,90 @@ fn cluster_cmd(args: &Args) -> crate::Result<()> {
             match other {
                 Some(a) => anyhow::bail!("unknown cluster action '{a}'"),
                 None => anyhow::bail!("cluster needs an action: list|run|sweep"),
+            }
+        }
+    }
+}
+
+/// `agentserve probe` — run a scenario with the time-series sampler on
+/// and dump the probe log: pretty JSON to stdout, or to `--out` (CSV when
+/// the path ends in `.csv`). `--replicas`/`--router` lift the same run
+/// onto the fleet, where the shared grid samples every serving replica at
+/// each tick.
+fn probe_cmd(args: &Args) -> crate::Result<()> {
+    use crate::config::RouterPolicy;
+    let model: ModelKind = args.get_or("model", "3b").parse()?;
+    let gpu: GpuKind = args.get_or("gpu", "a5000").parse()?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_path(p)?,
+        None => Config::preset(model, gpu),
+    };
+    let mut scenario = load_scenario_arg(args, &mut cfg)?;
+    scenario.validate()?;
+    // Layer the sampler onto whatever obs block the scenario carries, so
+    // a traced scenario file keeps its spans; the CLI owns the grid.
+    let mut obs = scenario.obs.unwrap_or_default();
+    obs.probe.interval_us = args.get_u64("interval-us", 50_000)?;
+    obs.validate()?;
+    scenario.obs = Some(obs);
+    let policy: Policy = args.get_or("policy", "agentserve").parse()?;
+    let probes = if let Some(r) = args.get("replicas") {
+        let replicas: usize = r.parse()?;
+        anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+        let router: RouterPolicy = match args.get("router") {
+            Some(r) => r.parse()?,
+            None => cfg.cluster.router,
+        };
+        let out = crate::cluster::run_cluster(&cfg, policy, &scenario, replicas, router, seed)?;
+        out.obs.and_then(|l| l.probes)
+    } else {
+        // Loud refusal over silent drop: a router with no fleet to route.
+        anyhow::ensure!(
+            args.get("router").is_none(),
+            "--router routes a fleet; pass --replicas N to probe one"
+        );
+        let out = crate::engine::run_scenario(&cfg, policy, &scenario, seed);
+        out.obs.and_then(|l| l.probes)
+    };
+    let probes =
+        probes.ok_or_else(|| anyhow::anyhow!("probed run kept no sample log (bug)"))?;
+    match args.get("out") {
+        Some(path) => {
+            if path.ends_with(".csv") {
+                std::fs::write(path, probes.to_csv())?;
+            } else {
+                std::fs::write(path, probes.to_value().to_string_pretty())?;
+            }
+            println!(
+                "{} probe samples ({} us grid) -> {path}",
+                probes.samples.len(),
+                probes.interval_us
+            );
+        }
+        None => println!("{}", probes.to_value().to_string_pretty()),
+    }
+    Ok(())
+}
+
+/// `agentserve trace validate` — check a `--trace-out` artifact against
+/// the Chrome trace-event format without leaving the CLI.
+fn trace_cmd(args: &Args) -> crate::Result<()> {
+    match args.action.as_deref() {
+        Some("validate") => {
+            let path = args
+                .get("file")
+                .ok_or_else(|| anyhow::anyhow!("trace validate needs --file <trace.json>"))?;
+            let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
+            let n = validate_chrome_trace(&v)?;
+            println!("trace '{path}' is well-formed ({n} events)");
+            Ok(())
+        }
+        other => {
+            eprintln!("{USAGE}");
+            match other {
+                Some(a) => anyhow::bail!("unknown trace action '{a}'"),
+                None => anyhow::bail!("trace needs an action: validate"),
             }
         }
     }
@@ -1317,6 +1641,35 @@ fn bench_suite(args: &Args) -> crate::Result<()> {
                 ("ttft_p99_ms".to_string(), out.report.ttft.p99),
                 ("tpot_p99_ms".to_string(), out.report.tpot.p99),
                 ("slo_rate".to_string(), out.slo.rate()),
+            ],
+        });
+    }
+    // Traced timing point: the fig5 scenario with the full telemetry layer
+    // on (spans + 50 ms probes + attribution), so the overhead of
+    // observability itself is a diffable number in the perf gate — and the
+    // attribution shares are machine-independent seeded metrics.
+    {
+        let mut sc = crate::workload::Scenario::by_name("paper-fig5").expect("registry scenario");
+        sc.obs = Some(crate::config::ObsConfig {
+            trace: true,
+            probe: crate::config::ProbeConfig::every_us(50_000),
+        });
+        let mut last: Option<crate::engine::SimOutcome> = None;
+        let timing = b.case("paper-fig5-traced", || {
+            last = Some(crate::engine::run_scenario_fast(&cfg, policy, &sc, seed));
+        });
+        let out = last.take().expect("measure >= 1 runs the closure");
+        let phases = out.phases.expect("active obs attaches attribution");
+        let obs = out.obs.as_ref().expect("active obs attaches the span log");
+        points.push(BenchPoint {
+            name: "obs/paper-fig5-traced".to_string(),
+            wall_ms: timing.median_us / 1000.0,
+            min_ms: timing.min_us / 1000.0,
+            metrics: vec![
+                ("ttft_p99_ms".to_string(), out.report.ttft.p99),
+                ("prefill_share".to_string(), phases.prefill_share()),
+                ("decode_idle_share".to_string(), phases.decode_idle_share()),
+                ("spans".to_string(), obs.spans.len() as f64),
             ],
         });
     }
@@ -2135,6 +2488,153 @@ mod tests {
         for p in ["base.json", "same.json", "slow.json"] {
             std::fs::remove_file(dir.join(p)).unwrap();
         }
+    }
+
+    #[test]
+    fn scenario_run_trace_out_writes_a_valid_chrome_trace() {
+        let dir = std::env::temp_dir().join("agentserve_trace_out");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        let p = p.to_str().unwrap();
+        run(args(&format!(
+            "scenario run --name paper-fig5 --model 3b --trace-out {p}"
+        )))
+        .unwrap();
+        let v = crate::util::json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "agentserve-trace-v1");
+        assert!(!v.req_arr("traceEvents").unwrap().is_empty());
+        assert!(
+            v.get("phase_report").is_some(),
+            "GPU-time attribution rides inside the trace artifact"
+        );
+        // The standalone validator accepts the artifact…
+        run(args(&format!("trace validate --file {p}"))).unwrap();
+        // …and rejects a mangled schema.
+        std::fs::write(p, "{\"schema\":\"bogus\",\"traceEvents\":[]}").unwrap();
+        assert!(run(args(&format!("trace validate --file {p}"))).is_err());
+        std::fs::remove_file(p).unwrap();
+        assert!(run(args("trace validate")).is_err(), "--file is required");
+        assert!(run(args("trace frobnicate")).is_err());
+        assert!(run(args("trace")).is_err());
+    }
+
+    #[test]
+    fn probe_subcommand_dumps_json_and_csv() {
+        let dir = std::env::temp_dir().join("agentserve_probe_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let j = dir.join("p.json");
+        let j = j.to_str().unwrap();
+        run(args(&format!(
+            "probe --name paper-fig5 --model 3b --interval-us 20000 --out {j}"
+        )))
+        .unwrap();
+        let v = crate::util::json::parse(&std::fs::read_to_string(j).unwrap()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "agentserve-probe-v1");
+        let n = v.req_usize("n_samples").unwrap();
+        assert!(n > 0, "a 20 ms grid over fig5 must sample");
+        assert_eq!(v.req_arr("samples").unwrap().len(), n);
+        // CSV by extension: header + one row per sample.
+        let c = dir.join("p.csv");
+        let c = c.to_str().unwrap();
+        run(args(&format!(
+            "probe --name paper-fig5 --model 3b --interval-us 20000 --out {c}"
+        )))
+        .unwrap();
+        let csv = std::fs::read_to_string(c).unwrap();
+        assert!(csv.lines().next().unwrap().starts_with("t_us,replica,"));
+        assert_eq!(csv.lines().count(), 1 + n, "CSV rows conserve the sample count");
+        // The fleet form samples every serving replica on the shared grid.
+        run(args(&format!(
+            "probe --name mixed-fleet --model 3b --replicas 2 --out {j}"
+        )))
+        .unwrap();
+        let v = crate::util::json::parse(&std::fs::read_to_string(j).unwrap()).unwrap();
+        assert!(v.req_usize("n_samples").unwrap() > 0);
+        std::fs::remove_file(j).unwrap();
+        std::fs::remove_file(c).unwrap();
+        // Refusals: a router with no fleet, a sub-minimum grid, a missing
+        // scenario, and a stray positional.
+        assert!(run(args("probe --name paper-fig5 --router round-robin")).is_err());
+        assert!(run(args("probe --name paper-fig5 --interval-us 10")).is_err());
+        assert!(run(args("probe")).is_err());
+        assert!(run(args("probe now")).is_err());
+    }
+
+    #[test]
+    fn cluster_run_exec_out_dumps_replica_stamped_events() {
+        let dir = std::env::temp_dir().join("agentserve_cluster_exec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("fleet-exec.jsonl");
+        let p = p.to_str().unwrap();
+        run(args(&format!(
+            "cluster run --name mixed-fleet --replicas 2 --model 3b --exec-out {p}"
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.lines().count() > 0);
+        let first = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.req_str("schema").unwrap(), "agentserve-exec-v1");
+        assert!(first.get("replica").is_some());
+        assert!(
+            text.contains("\"replica\":1"),
+            "the fleet merge stamps replica identity on routed events"
+        );
+        // The schema tag makes the exec log loudly un-replayable as a
+        // workload trace.
+        assert!(run(args(&format!("scenario replay --trace {p}"))).is_err());
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn cluster_run_trace_and_probe_out_smoke() {
+        let dir = std::env::temp_dir().join("agentserve_cluster_obs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = dir.join("fleet.json");
+        let t = t.to_str().unwrap();
+        let p = dir.join("fleet-probes.csv");
+        let p = p.to_str().unwrap();
+        // failure-storm: crash/restore instants land in the trace, and
+        // spans from pre-crash incarnations survive the merge.
+        run(args(&format!(
+            "cluster run --name failure-storm --replicas 2 --model 3b \
+             --trace-out {t} --probe-out {p} --probe-interval-us 100000"
+        )))
+        .unwrap();
+        run(args(&format!("trace validate --file {t}"))).unwrap();
+        let text = std::fs::read_to_string(t).unwrap();
+        assert!(text.contains("\"what\": \"crash\""), "chaos instants ride the fleet trace");
+        let csv = std::fs::read_to_string(p).unwrap();
+        assert!(csv.lines().count() > 1);
+        std::fs::remove_file(t).unwrap();
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn capture_flags_refused_where_inapplicable() {
+        // Sweeps aggregate many runs; record/replay have their own
+        // artifact — every capture flag is a loud error, never a silent
+        // drop.
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --rates 1,2 --trace-out t.json"
+        ))
+        .is_err());
+        assert!(run(args(
+            "scenario sweep --scenario paper-fig5 --rates 1,2 --exec-out e.jsonl"
+        ))
+        .is_err());
+        assert!(run(args(
+            "cluster sweep --scenario mixed-fleet --replica-counts 1,2 --probe-out p.json"
+        ))
+        .is_err());
+        assert!(run(args(
+            "scenario record --name burst-storm --out t.jsonl --trace-out x.json"
+        ))
+        .is_err());
+        // --probe-interval-us without --probe-out would do nothing.
+        assert!(run(args(
+            "scenario run --name paper-fig5 --probe-interval-us 50000"
+        ))
+        .is_err());
     }
 
     #[test]

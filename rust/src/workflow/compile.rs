@@ -505,6 +505,7 @@ mod tests {
             chaos: None,
             autoscale: None,
             host: None,
+            obs: None,
         };
         for seed in [3, 7, 11] {
             let cw = compile(&wf, ModelKind::Qwen3B, seed);

@@ -664,6 +664,7 @@ impl WorkflowLoad {
             chaos: None,
             autoscale: None,
             host: None,
+            obs: None,
         }
     }
 

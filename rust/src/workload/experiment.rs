@@ -605,7 +605,8 @@ impl ExperimentReport {
             ",overridden,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
              radix_hit_rate,evictions,preemptions,stall_p99_ms,tool_wait_p99_ms,host_util,\
-             makespan_p99_ms,task_slo_rate,replicas,load_cov,replica_us\n",
+             makespan_p99_ms,task_slo_rate,prefill_share,decode_idle_share,replicas,load_cov,\
+             replica_us\n",
         );
         for cell in &self.cells {
             for pp in &cell.per_policy {
@@ -614,7 +615,7 @@ impl ExperimentReport {
                     out.push_str(&format!(",{v}"));
                 }
                 out.push_str(&format!(
-                    ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    ",{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     cell.overridden,
                     pp.policy,
                     cell.sessions,
@@ -637,6 +638,8 @@ impl ExperimentReport {
                     pp.host_util,
                     pp.makespan_p99_ms,
                     pp.task_slo_rate,
+                    pp.prefill_share,
+                    pp.decode_idle_share,
                     pp.replicas,
                     pp.load_cov,
                     pp.replica_us

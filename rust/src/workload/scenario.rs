@@ -19,7 +19,7 @@ use super::generator::WorkloadGenerator;
 use super::spec::WorkloadKind;
 use super::trace::{Trace, TraceEvent};
 use crate::config::{
-    AutoscaleConfig, ChaosConfig, Config, HostConfig, HostLatency, KvConfig, ModelKind,
+    AutoscaleConfig, ChaosConfig, Config, HostConfig, HostLatency, KvConfig, ModelKind, ObsConfig,
 };
 use crate::util::json::{parse, Value};
 use crate::util::rng::Rng;
@@ -182,6 +182,11 @@ pub struct Scenario {
     /// tool-latency path byte-identical. CLI `--cpu-workers`/`--tool-dist`
     /// override this.
     pub host: Option<HostConfig>,
+    /// Telemetry layer ([`crate::config::ObsConfig`]): span tracing and
+    /// virtual-clock probes. `None` (or an inert config) constructs no
+    /// observer and keeps the legacy hot path byte-identical. CLI
+    /// `--trace-out`/`--probe-out` override this.
+    pub obs: Option<ObsConfig>,
 }
 
 /// A scenario instantiated for one (model, seed) pair.
@@ -246,6 +251,9 @@ impl Scenario {
         if let Some(h) = &self.host {
             h.validate()?;
         }
+        if let Some(o) = &self.obs {
+            o.validate()?;
+        }
         if let Some(kv) = &self.kv {
             anyhow::ensure!(
                 kv.block_size > 0,
@@ -274,6 +282,9 @@ impl Scenario {
         }
         if let Some(h) = &self.host {
             cfg.host = h.clone();
+        }
+        if let Some(o) = self.obs {
+            cfg.obs = o;
         }
         cfg
     }
@@ -407,6 +418,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "burst-storm".into(),
@@ -426,6 +438,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "mixed-fleet".into(),
@@ -442,6 +455,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "long-tool".into(),
@@ -464,6 +478,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "open-loop-sweep".into(),
@@ -483,6 +498,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "memory-pressure".into(),
@@ -501,6 +517,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "shared-prefix-fleet".into(),
@@ -518,6 +535,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "failure-storm".into(),
@@ -542,6 +560,7 @@ impl Scenario {
                 chaos: Some(ChaosConfig::seeded(20_000_000)),
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "diurnal-burst".into(),
@@ -564,6 +583,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: Some(AutoscaleConfig::banded(1, 4)),
                 host: None,
+                obs: None,
             },
             Scenario {
                 name: "tool-storm".into(),
@@ -588,6 +608,7 @@ impl Scenario {
                 chaos: None,
                 autoscale: None,
                 host: Some(HostConfig::workers(2)),
+                obs: None,
             },
             Scenario {
                 name: "slow-sandbox".into(),
@@ -611,6 +632,7 @@ impl Scenario {
                     dispatch_overhead_us: 2_000,
                     latency: HostLatency::LogNormal { mu: 0.0, sigma: 0.8 },
                 }),
+                obs: None,
             },
         ]
     }
@@ -657,6 +679,9 @@ impl Scenario {
         }
         if let Some(h) = &self.host {
             fields.push(("host", h.to_value()));
+        }
+        if let Some(o) = &self.obs {
+            fields.push(("obs", o.to_value()));
         }
         Value::obj(fields)
     }
@@ -719,6 +744,10 @@ impl Scenario {
             },
             host: match v.get("host") {
                 Some(h) => Some(HostConfig::from_value(h)?),
+                None => None,
+            },
+            obs: match v.get("obs") {
+                Some(o) => Some(ObsConfig::from_value(o)?),
                 None => None,
             },
         };
@@ -881,6 +910,7 @@ mod tests {
             chaos: None,
             autoscale: None,
             host: None,
+            obs: None,
         };
         sc.validate().unwrap();
         let back = Scenario::from_value(&sc.to_value()).unwrap();
@@ -958,6 +988,26 @@ mod tests {
             latency: HostLatency::Uniform { lo: 2.0, hi: 1.0 },
             ..HostConfig::workers(2)
         });
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn obs_carrying_scenarios_round_trip_and_apply() {
+        let mut sc = Scenario::by_name("paper-fig5").unwrap();
+        assert_eq!(sc.obs, None);
+        assert!(sc.to_value().get("obs").is_none(), "absent obs stays absent in JSON");
+        sc.obs = Some(ObsConfig { trace: true, probe: crate::config::ProbeConfig::every_us(25_000) });
+        sc.validate().unwrap();
+        let back = Scenario::from_value(&sc.to_value()).unwrap();
+        assert_eq!(back, sc, "obs block survives the JSON round trip");
+        // effective_config applies the scenario's obs; identity otherwise.
+        let base = crate::config::Config::default();
+        assert_eq!(sc.effective_config(&base).obs, sc.obs.unwrap());
+        let plain = Scenario::by_name("paper-fig5").unwrap();
+        assert_eq!(plain.effective_config(&base).obs, base.obs);
+        // An invalid probe interval is rejected at scenario level.
+        let mut bad = sc.clone();
+        bad.obs = Some(ObsConfig::probed(10));
         assert!(bad.validate().is_err());
     }
 

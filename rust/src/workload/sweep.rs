@@ -394,6 +394,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 // Cold-prefill service capacity in the calibrated 3B/A5000
                 // cost model is ~0.5 sessions/s, so this grid straddles the
@@ -418,6 +419,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 axis: SweepAxis::AgentCount(vec![250, 500, 1000, 2000]),
             },
@@ -442,6 +444,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 axis: SweepAxis::MixRatio(vec![0.1, 0.3, 0.5, 0.7, 0.9]),
             },
@@ -467,6 +470,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 axis: SweepAxis::KvBlocks(vec![1024, 4096, 16_384, 65_536]),
             },
@@ -507,6 +511,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 axis: SweepAxis::Chaos {
                     rates_per_min: vec![0.0, 2.0, 6.0, 12.0],
@@ -538,6 +543,7 @@ impl SweepSpec {
                     chaos: None,
                     autoscale: None,
                     host: None,
+                    obs: None,
                 },
                 axis: SweepAxis::Replicas {
                     counts: vec![1, 2, 4],
@@ -606,6 +612,13 @@ pub struct PolicyPoint {
     /// Workflow task metrics (zeros on plain session scenarios).
     pub makespan_p99_ms: f64,
     pub task_slo_rate: f64,
+    /// GPU-time attribution shares (zeros unless the run was traced — an
+    /// inert [`crate::config::ObsConfig`] attaches no
+    /// [`crate::obs::PhaseReport`]): fraction of busy GPU time spent in
+    /// prefill-bearing phases, and fraction of wall time the decode slot
+    /// sat idle.
+    pub prefill_share: f64,
+    pub decode_idle_share: f64,
     /// Fleet metrics (`replicas` = 1, `load_cov` = 0 on single-GPU rows,
     /// so fleet sweeps diff cleanly against single-GPU sweeps).
     pub replicas: usize,
@@ -632,6 +645,10 @@ impl PolicyPoint {
             Some(h) => (h.tool_wait_p99_ms, h.utilization),
             None => (0.0, 0.0),
         };
+        let (prefill_share, decode_idle_share) = match &out.phases {
+            Some(p) => (p.prefill_share(), p.decode_idle_share()),
+            None => (0.0, 0.0),
+        };
         Self {
             policy: out.policy_name.clone(),
             ttft_p50: out.report.ttft.p50,
@@ -652,6 +669,8 @@ impl PolicyPoint {
             host_util,
             makespan_p99_ms,
             task_slo_rate,
+            prefill_share,
+            decode_idle_share,
             replicas: 1,
             load_cov: 0.0,
             replica_us: (out.report.wall_ms * 1000.0) as u64,
@@ -669,6 +688,10 @@ impl PolicyPoint {
         };
         let (tool_wait_p99_ms, host_util) = match &r.host {
             Some(h) => (h.tool_wait_p99_ms, h.utilization),
+            None => (0.0, 0.0),
+        };
+        let (prefill_share, decode_idle_share) = match &r.phases {
+            Some(p) => (p.prefill_share(), p.decode_idle_share()),
             None => (0.0, 0.0),
         };
         Self {
@@ -693,6 +716,8 @@ impl PolicyPoint {
             host_util,
             makespan_p99_ms,
             task_slo_rate,
+            prefill_share,
+            decode_idle_share,
             replicas: r.replicas,
             load_cov: r.load_cov,
             replica_us: match &r.autoscale {
@@ -726,6 +751,8 @@ impl PolicyPoint {
             ("host_util", self.host_util.into()),
             ("makespan_p99_ms", self.makespan_p99_ms.into()),
             ("task_slo_rate", self.task_slo_rate.into()),
+            ("prefill_share", self.prefill_share.into()),
+            ("decode_idle_share", self.decode_idle_share.into()),
             ("replicas", self.replicas.into()),
             ("load_cov", self.load_cov.into()),
             ("replica_us", self.replica_us.into()),
@@ -825,12 +852,13 @@ impl SweepReport {
             "axis,value,policy,sessions,seed,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,\
              tpot_p50_ms,tpot_p95_ms,tpot_p99_ms,throughput_tok_s,slo_rate,completed,wall_ms,\
              radix_hit_rate,evictions,preemptions,stall_p99_ms,tool_wait_p99_ms,host_util,\
-             makespan_p99_ms,task_slo_rate,replicas,load_cov,replica_us\n",
+             makespan_p99_ms,task_slo_rate,prefill_share,decode_idle_share,replicas,load_cov,\
+             replica_us\n",
         );
         for pt in &self.points {
             for pp in &pt.per_policy {
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     self.axis,
                     pt.axis_value,
                     pp.policy,
@@ -854,6 +882,8 @@ impl SweepReport {
                     pp.host_util,
                     pp.makespan_p99_ms,
                     pp.task_slo_rate,
+                    pp.prefill_share,
+                    pp.decode_idle_share,
                     pp.replicas,
                     pp.load_cov,
                     pp.replica_us
@@ -1206,6 +1236,8 @@ mod tests {
             host_util: 0.0,
             makespan_p99_ms: 0.0,
             task_slo_rate: 0.0,
+            prefill_share: 0.0,
+            decode_idle_share: 0.0,
             replicas: 1,
             load_cov: 0.0,
             replica_us: 0,
@@ -1457,6 +1489,7 @@ mod tests {
                 chaos: None,
                 autoscale: None,
                 host: None,
+                obs: None,
             },
             axis: SweepAxis::ArrivalRate(vec![0.5, 1.0, 2.0]),
         };

@@ -31,6 +31,7 @@ pub fn open_loop(name: &str, rate_per_s: f64, sessions: usize) -> Scenario {
         chaos: None,
         autoscale: None,
         host: None,
+        obs: None,
     }
 }
 

@@ -1,0 +1,408 @@
+//! Observability-layer integration tests (tier-1).
+//!
+//! The contracts this suite locks:
+//! - **Inert purity**: an absent *or inert* obs config keeps every run on
+//!   the exact legacy code path — reports are byte-identical under the
+//!   whole paper policy lineup and every router, and no log is attached.
+//! - **Write-only telemetry**: an *active* observer never perturbs the
+//!   simulation — traced and untraced runs of the same `(scenario, seed)`
+//!   produce byte-identical reports; the observer only adds artifacts.
+//! - **Span algebra**: per session, phase children tile the root span
+//!   exactly (no gaps, no overlaps), and the latency decomposition
+//!   `queue + kv_stall + host_wait + compute == latency` holds, as does
+//!   per-slot GPU-time conservation `busy + idle == wall`.
+//! - **Determinism**: traces and probe logs are pure functions of
+//!   `(seed, scenario, config)` — reruns are byte-identical, a new seed
+//!   is a new trace — and the 1-replica fleet emits the batch run's exact
+//!   artifacts.
+//! - **Crash continuity**: spans from crashed replica incarnations
+//!   survive the fleet merge (the truncated root and its re-routed rerun
+//!   share one global session id), and chaos faults appear as instants.
+
+use std::collections::BTreeMap;
+
+use agentserve::cluster::run_cluster_fast;
+use agentserve::config::{
+    ChaosConfig, FaultEvent, FaultKind, ObsConfig, ProbeConfig, RouterPolicy,
+};
+use agentserve::engine::{run_scenario, run_scenario_fast, Policy};
+use agentserve::obs::{InstantKind, Span, SpanKind};
+use agentserve::workload::Scenario;
+
+mod common;
+use common::cfg;
+
+/// Scenario with an obs block layered on.
+fn with_obs(base: &Scenario, obs: ObsConfig) -> Scenario {
+    Scenario { obs: Some(obs), ..base.clone() }
+}
+
+/// Tracing and a 20 ms probe grid, together.
+fn full_obs() -> ObsConfig {
+    ObsConfig { trace: true, probe: ProbeConfig::every_us(20_000) }
+}
+
+#[test]
+fn inert_obs_config_keeps_the_legacy_bytes_under_every_policy_and_router() {
+    // `obs: None` and an attached-but-inert config (trace off, probe off)
+    // must both take the legacy path: same report bytes, no log attached.
+    let cfg = cfg();
+    let plain = Scenario::by_name("mixed-fleet").unwrap();
+    let inert = with_obs(&plain, ObsConfig::default());
+    inert.validate().unwrap();
+    for policy in Policy::paper_lineup() {
+        for router in RouterPolicy::ALL {
+            let a = run_cluster_fast(&cfg, policy, &plain, 2, router, 7).unwrap();
+            let b = run_cluster_fast(&cfg, policy, &inert, 2, router, 7).unwrap();
+            let tag = format!("{}/{}", policy.name(), router);
+            assert!(a.obs.is_none() && b.obs.is_none(), "{tag}: inert => no log");
+            assert!(a.report.phases.is_none(), "{tag}: inert => no attribution");
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{tag}: an inert obs config must not perturb a single byte"
+            );
+        }
+    }
+    // Same contract on the single-GPU path.
+    for name in ["paper-fig5", "burst-storm"] {
+        let plain = Scenario::by_name(name).unwrap();
+        let inert = with_obs(&plain, ObsConfig::default());
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario_fast(&cfg, policy, &plain, 7);
+            let b = run_scenario_fast(&cfg, policy, &inert, 7);
+            assert!(a.obs.is_none() && b.obs.is_none());
+            assert!(a.phases.is_none() && b.phases.is_none());
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{name}/{}: inert obs must keep the legacy bytes",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn an_active_observer_never_perturbs_the_simulation() {
+    // Telemetry is write-only: the traced run's *report* is byte-identical
+    // to the untraced run's. (tool-storm exercises host waits, paper-fig5
+    // the adaptive knobs, memory-pressure KV stalls and preemption.)
+    let cfg = cfg();
+    for name in ["paper-fig5", "tool-storm", "memory-pressure"] {
+        let plain = Scenario::by_name(name).unwrap();
+        let traced = with_obs(&plain, full_obs());
+        for policy in Policy::paper_lineup() {
+            let a = run_scenario_fast(&cfg, policy, &plain, 7);
+            let b = run_scenario_fast(&cfg, policy, &traced, 7);
+            assert_eq!(
+                a.report.to_value().to_string(),
+                b.report.to_value().to_string(),
+                "{name}/{}: an active observer must not move a single byte",
+                policy.name()
+            );
+            assert!(b.obs.is_some(), "{name}: active obs attaches the log");
+            assert!(b.phases.is_some(), "{name}: tracing attaches attribution");
+        }
+    }
+    // Fleet form: the merged per-replica reports must agree byte-for-byte
+    // (the fleet report itself legitimately gains a `phases` block).
+    let plain = Scenario::by_name("mixed-fleet").unwrap();
+    let traced = with_obs(&plain, full_obs());
+    let a = run_cluster_fast(&cfg, Policy::Vllm, &plain, 2, RouterPolicy::CacheAware, 7).unwrap();
+    let b = run_cluster_fast(&cfg, Policy::Vllm, &traced, 2, RouterPolicy::CacheAware, 7).unwrap();
+    assert_eq!(a.per_replica.len(), b.per_replica.len());
+    for (ra, rb) in a.per_replica.iter().zip(&b.per_replica) {
+        assert_eq!(
+            ra.report.to_value().to_string(),
+            rb.report.to_value().to_string(),
+            "traced fleet replicas must run the identical simulation"
+        );
+    }
+    assert_eq!(a.report.completed_sessions, b.report.completed_sessions);
+    assert_eq!(a.report.total_tokens, b.report.total_tokens);
+    assert!(b.report.phases.is_some() && b.obs.is_some());
+}
+
+#[test]
+fn span_children_tile_their_root_and_the_decomposition_conserves_latency() {
+    let cfg = cfg();
+    let sc = with_obs(&Scenario::by_name("paper-fig5").unwrap(), ObsConfig::traced());
+    let out = run_scenario(&cfg, Policy::AgentServe(Default::default()), &sc, 7);
+    let log = out.obs.expect("traced run keeps the span log");
+    let pr = out.phases.expect("traced run attributes GPU time");
+
+    let mut roots: BTreeMap<u64, &Span> = BTreeMap::new();
+    let mut children: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    for s in &log.spans {
+        assert!(s.end_us >= s.start_us, "spans close forward in time");
+        assert!(s.end_us > s.start_us || s.kind == SpanKind::Session,
+            "zero-length phase spans are accounted, never emitted");
+        assert_eq!(s.replica, 0, "single-GPU spans carry replica 0");
+        if s.kind == SpanKind::Session {
+            assert!(roots.insert(s.session, s).is_none(), "one root per session");
+        } else {
+            children.entry(s.session).or_default().push(s);
+        }
+    }
+    assert_eq!(roots.len() as u64, pr.sessions, "every begun session has a root");
+    assert!(!roots.is_empty());
+
+    let mut latency_sum = 0u64;
+    for (sess, root) in &roots {
+        let mut kids = children.remove(sess).unwrap_or_default();
+        kids.sort_by_key(|s| s.start_us);
+        // Phase children tile the root exactly: each child starts where
+        // the previous ended (zero-length closed phases are dropped, so
+        // abutment is exact), and the last closes with the root.
+        let mut cursor = root.start_us;
+        for k in &kids {
+            assert_eq!(k.start_us, cursor, "session {sess}: gap/overlap in span tree");
+            cursor = k.end_us;
+        }
+        assert_eq!(cursor, root.end_us, "session {sess}: children must tile to the root");
+        latency_sum += root.dur_us();
+    }
+    assert!(children.is_empty(), "no orphan child spans");
+
+    // Latency decomposition checksum, and per-slot GPU-time conservation.
+    assert_eq!(latency_sum, pr.latency_us, "root durations are the decomposition total");
+    assert_eq!(
+        pr.queue_us + pr.kv_stall_us + pr.host_wait_us + pr.compute_us,
+        pr.latency_us,
+        "queue + kv-stall + host-wait + compute must tile session latency"
+    );
+    assert_eq!(pr.replicas, 1);
+    for (i, slot) in pr.slots.iter().enumerate() {
+        assert_eq!(slot.total_us(), pr.wall_us, "slot {i}: busy + idle == wall");
+    }
+    assert!(pr.slots.iter().map(|s| s.busy_us()).sum::<u64>() > 0, "the run did work");
+    assert!(pr.prefill_share() > 0.0 && pr.prefill_share() <= 1.0);
+
+    // The adaptive policy ticks its controller; every tick is an instant
+    // inside the run horizon.
+    assert!(!log.instants.is_empty(), "AgentServe control ticks become instants");
+    for i in &log.instants {
+        assert!(matches!(i.kind, InstantKind::Control { .. }), "no chaos here");
+        assert!(i.t_us <= pr.wall_us);
+    }
+}
+
+#[test]
+fn telemetry_artifacts_rerun_byte_identically() {
+    // Trace + probe outputs are pure functions of (seed, scenario,
+    // config); a new seed is a new trace.
+    let cfg = cfg();
+    let sc = with_obs(&Scenario::by_name("paper-fig5").unwrap(), full_obs());
+    let policy = Policy::AgentServe(Default::default());
+    let a = run_scenario(&cfg, policy, &sc, 7);
+    let b = run_scenario(&cfg, policy, &sc, 7);
+    let (la, lb) = (a.obs.as_ref().unwrap(), b.obs.as_ref().unwrap());
+    let trace_a = la.to_chrome_trace(a.phases.as_ref()).to_string();
+    assert_eq!(
+        trace_a,
+        lb.to_chrome_trace(b.phases.as_ref()).to_string(),
+        "same (scenario, seed) must serialize byte-identically"
+    );
+    let (pa, pb) = (la.probes.as_ref().unwrap(), lb.probes.as_ref().unwrap());
+    assert!(!pa.samples.is_empty(), "a 20 ms grid must sample this run");
+    assert_eq!(pa.to_value().to_string(), pb.to_value().to_string());
+    assert_eq!(pa.to_csv(), pb.to_csv());
+    let c = run_scenario(&cfg, policy, &sc, 8);
+    assert_ne!(
+        trace_a,
+        c.obs.as_ref().unwrap().to_chrome_trace(c.phases.as_ref()).to_string(),
+        "a new seed must be a new trace"
+    );
+    // Fleet artifacts obey the same law.
+    let fsc = with_obs(&Scenario::by_name("mixed-fleet").unwrap(), full_obs());
+    let fa = run_cluster_fast(&cfg, Policy::Vllm, &fsc, 3, RouterPolicy::CacheAware, 7).unwrap();
+    let fb = run_cluster_fast(&cfg, Policy::Vllm, &fsc, 3, RouterPolicy::CacheAware, 7).unwrap();
+    let (fla, flb) = (fa.obs.as_ref().unwrap(), fb.obs.as_ref().unwrap());
+    assert_eq!(
+        fla.to_chrome_trace(fa.report.phases.as_ref()).to_string(),
+        flb.to_chrome_trace(fb.report.phases.as_ref()).to_string(),
+        "fleet traces must rerun byte-identically"
+    );
+    assert_eq!(
+        fla.probes.as_ref().unwrap().to_csv(),
+        flb.probes.as_ref().unwrap().to_csv()
+    );
+}
+
+#[test]
+fn one_replica_fleet_emits_the_batch_runs_exact_artifacts() {
+    // The fleet's pre-event probe/tick discipline reduces exactly to the
+    // batch sampler on a 1-replica, fault-free fleet: same spans, same
+    // instants, same probe rows, same attribution — byte for byte.
+    let cfg = cfg();
+    let sc = with_obs(&Scenario::by_name("paper-fig5").unwrap(), full_obs());
+    let policy = Policy::AgentServe(Default::default());
+    let single = run_scenario_fast(&cfg, policy, &sc, 7);
+    let fleet = run_cluster_fast(&cfg, policy, &sc, 1, RouterPolicy::RoundRobin, 7).unwrap();
+    let (ls, lf) = (single.obs.as_ref().unwrap(), fleet.obs.as_ref().unwrap());
+    assert_eq!(
+        ls.to_chrome_trace(single.phases.as_ref()).to_string(),
+        lf.to_chrome_trace(fleet.report.phases.as_ref()).to_string(),
+        "1-replica fleet trace must equal the batch trace"
+    );
+    assert_eq!(
+        ls.probes.as_ref().unwrap().to_csv(),
+        lf.probes.as_ref().unwrap().to_csv(),
+        "1-replica fleet probe rows must equal the batch rows"
+    );
+}
+
+#[test]
+fn probe_samples_land_on_the_grid_in_order() {
+    // Probe-only runs: samples sit exactly on the fixed grid, one full
+    // interval in, strictly increasing; no spans, no attribution.
+    let cfg = cfg();
+    let interval = 20_000u64;
+    let sc = with_obs(&Scenario::by_name("paper-fig5").unwrap(), ObsConfig::probed(interval));
+    let out = run_scenario(&cfg, Policy::Vllm, &sc, 7);
+    assert!(out.phases.is_none(), "attribution is a tracing artifact");
+    let log = out.obs.unwrap();
+    assert!(log.spans.is_empty(), "probe-only runs record no spans");
+    let probes = log.probes.expect("active probe => log");
+    assert_eq!(probes.interval_us, interval);
+    assert!(probes.samples.len() > 2, "the run spans several grid points");
+    for (i, s) in probes.samples.iter().enumerate() {
+        assert_eq!(s.t_us, (i as u64 + 1) * interval, "samples sit on the grid");
+        assert_eq!((s.replica, s.serving_replicas), (0, 1));
+    }
+}
+
+#[test]
+fn fleet_probe_grid_samples_every_serving_replica() {
+    let cfg = cfg();
+    let interval = 50_000u64;
+    let sc = with_obs(&Scenario::by_name("mixed-fleet").unwrap(), ObsConfig::probed(interval));
+    let out = run_cluster_fast(&cfg, Policy::Vllm, &sc, 3, RouterPolicy::RoundRobin, 7).unwrap();
+    let probes = out.obs.unwrap().probes.expect("fleet-global probe grid");
+    assert!(!probes.samples.is_empty());
+    let mut by_t: BTreeMap<u64, Vec<_>> = BTreeMap::new();
+    for s in &probes.samples {
+        assert_eq!(s.t_us % interval, 0, "fleet samples sit on the shared grid");
+        by_t.entry(s.t_us).or_default().push(s);
+    }
+    for (t, rows) in &by_t {
+        // Healthy static fleet: one row per serving replica per grid
+        // point, in replica order, each stamped with the serving count.
+        assert_eq!(rows.len(), 3, "t={t}: one row per serving replica");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.replica as usize, r, "t={t}: rows in replica order");
+            assert_eq!(row.serving_replicas, 3, "t={t}: serving count stamped");
+        }
+    }
+}
+
+#[test]
+fn crash_incarnation_spans_survive_the_fleet_merge() {
+    // Scripted crash at t=200 ms on replica 0 of a 2-replica fleet: the
+    // dead incarnation's spans are retagged and kept, the crash itself is
+    // an instant at the fault time, and any session whose decoded work
+    // was lost shows both its truncated root and its re-routed rerun
+    // under one global session id.
+    let cfg = cfg();
+    let sc = Scenario {
+        chaos: Some(ChaosConfig {
+            events: vec![FaultEvent { at_us: 200_000, replica: 0, kind: FaultKind::Crash }],
+            mtbf_us: 0,
+            restart_us: 2_000_000,
+        }),
+        obs: Some(ObsConfig::traced()),
+        ..Scenario::by_name("mixed-fleet").unwrap()
+    };
+    sc.validate().unwrap();
+    let out = run_cluster_fast(&cfg, Policy::Vllm, &sc, 2, RouterPolicy::RoundRobin, 7).unwrap();
+    let chaos = out.report.chaos.expect("scripted crash reports chaos stats");
+    assert_eq!(chaos.crashes, 1);
+    let log = out.obs.expect("traced fleet keeps the merged log");
+    let crash_instants: Vec<_> = log
+        .instants
+        .iter()
+        .filter(|i| matches!(&i.kind, InstantKind::Chaos { what } if what == "crash"))
+        .collect();
+    assert_eq!(crash_instants.len(), 1, "one scripted crash, one instant");
+    assert_eq!(
+        (crash_instants[0].t_us, crash_instants[0].replica),
+        (200_000, 0),
+        "the crash instant carries the fault time and replica"
+    );
+    let mut roots: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    for s in &log.spans {
+        assert!(s.replica < 2, "merged spans carry fleet replica ids");
+        if s.kind == SpanKind::Session {
+            roots.entry(s.session).or_default().push(s);
+        }
+    }
+    assert_eq!(
+        roots.len(),
+        out.report.sessions,
+        "every global session keeps at least one root through the merge"
+    );
+    if chaos.redecoded_tokens > 0 {
+        // Lost decode work implies a session begun on the dead replica
+        // was re-run: its truncated root ends at the crash, its rerun
+        // completes later, same tid.
+        let reruns: Vec<_> = roots.values().filter(|v| v.len() > 1).collect();
+        assert!(
+            !reruns.is_empty(),
+            "redecoded tokens without a rerun root: crashed spans were dropped"
+        );
+        for incarnations in &reruns {
+            // The dead incarnation seals at its last processed event, so
+            // the truncated root closes at-or-before the fault instant;
+            // the re-routed rerun can only finish after it.
+            let earliest = incarnations.iter().map(|s| s.end_us).min().unwrap();
+            let latest = incarnations.iter().map(|s| s.end_us).max().unwrap();
+            assert!(earliest <= 200_000, "the truncated root closes by the crash");
+            assert!(latest > 200_000, "the rerun root completes after the crash");
+        }
+    }
+
+    // Chaos traces obey the same determinism law as everything else: the
+    // registry failure-storm (seeded crashes + flaky tools) reruns its
+    // merged trace byte-identically.
+    let storm = with_obs(&Scenario::by_name("failure-storm").unwrap(), ObsConfig::traced());
+    let policy = Policy::AgentServe(Default::default());
+    let a = run_cluster_fast(&cfg, policy, &storm, 3, RouterPolicy::CacheAware, 7).unwrap();
+    let b = run_cluster_fast(&cfg, policy, &storm, 3, RouterPolicy::CacheAware, 7).unwrap();
+    assert_eq!(
+        a.obs.as_ref().unwrap().to_chrome_trace(a.report.phases.as_ref()).to_string(),
+        b.obs.as_ref().unwrap().to_chrome_trace(b.report.phases.as_ref()).to_string(),
+        "failure-storm traces must rerun byte-identically"
+    );
+    assert_eq!(a.report.completed_sessions, a.report.sessions, "no session lost");
+}
+
+#[test]
+fn fleet_phase_report_merges_replica_walls_and_sessions() {
+    let cfg = cfg();
+    let sc = with_obs(&Scenario::by_name("mixed-fleet").unwrap(), ObsConfig::traced());
+    let out = run_cluster_fast(
+        &cfg,
+        Policy::AgentServe(Default::default()),
+        &sc,
+        2,
+        RouterPolicy::CacheAware,
+        7,
+    )
+    .unwrap();
+    let pr = out.report.phases.expect("traced fleet reports attribution");
+    assert_eq!(pr.replicas, 2);
+    // The merge sums per-replica walls and slots, so the merged slot
+    // totals cover two slots per summed wall.
+    let total: u64 = pr.slots.iter().map(|s| s.total_us()).sum();
+    assert_eq!(total, 2 * pr.wall_us, "Σ slot totals == 2 slots × merged wall");
+    assert_eq!(
+        pr.queue_us + pr.kv_stall_us + pr.host_wait_us + pr.compute_us,
+        pr.latency_us,
+        "the decomposition survives the fleet merge"
+    );
+    assert_eq!(pr.sessions as usize, out.report.sessions, "fault-free: begun == routed");
+    assert!(pr.prefill_share() > 0.0 && pr.prefill_share() <= 1.0);
+    let idle = pr.decode_idle_share();
+    assert!((0.0..=1.0).contains(&idle), "idle share is a fraction (got {idle})");
+}

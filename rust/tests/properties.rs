@@ -291,6 +291,7 @@ mod arrivals {
             chaos: None,
             autoscale: None,
             host: None,
+            obs: None,
         }
     }
 
@@ -768,5 +769,74 @@ fn prop_host_queue_is_deterministic_and_conserves_tokens() {
             c.report.to_value().to_string(),
             "seed {seed}: a new seed must change the run"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observability: telemetry is write-only and grid-exact for any valid
+// probe interval.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_probe_grid_is_exact_and_write_only_for_any_interval() {
+    // Randomized valid probe intervals (floor up to 2 s), with and without
+    // tracing, over both workload shapes: the report stays byte-identical
+    // to the unobserved run, sample i sits exactly at (i+1)×interval (no
+    // skips, no duplicates), and the artifacts rerun byte-identically.
+    use agentserve::config::{ObsConfig, ProbeConfig};
+    use agentserve::engine::{run_scenario_fast, Policy};
+    use agentserve::workload::Scenario;
+
+    let cfg = common::cfg();
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(17_000 + seed);
+        let interval = ProbeConfig::MIN_INTERVAL_US * (1 + rng.next_u64() % 2_000);
+        let obs = ObsConfig {
+            trace: rng.next_u64() % 2 == 0,
+            probe: ProbeConfig::every_us(interval),
+        };
+        obs.validate()
+            .unwrap_or_else(|e| panic!("seed {seed}: generated config invalid: {e}"));
+        let plain = if rng.next_u64() % 2 == 0 {
+            common::open_loop("obs-prop", 2.0, 24)
+        } else {
+            Scenario::by_name("mixed-fleet").unwrap()
+        };
+        let sc = Scenario { obs: Some(obs), ..plain.clone() };
+        sc.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let run_seed = 70 + seed;
+        let policy = Policy::paper_lineup()[(seed % 4) as usize];
+        let observed = run_scenario_fast(&cfg, policy, &sc, run_seed);
+        let unobserved = run_scenario_fast(&cfg, policy, &plain, run_seed);
+        assert_eq!(
+            observed.report.to_value().to_string(),
+            unobserved.report.to_value().to_string(),
+            "seed {seed}: telemetry must be write-only at any interval"
+        );
+        let log = observed.obs.as_ref().expect("active probe => log");
+        let probes = log.probes.as_ref().expect("active probe => probe log");
+        assert_eq!(probes.interval_us, interval);
+        for (i, s) in probes.samples.iter().enumerate() {
+            assert_eq!(
+                s.t_us,
+                (i as u64 + 1) * interval,
+                "seed {seed}: sample {i} off the {interval} us grid"
+            );
+            assert_eq!((s.replica, s.serving_replicas), (0, 1), "seed {seed}");
+        }
+        let again = run_scenario_fast(&cfg, policy, &sc, run_seed);
+        let again_log = again.obs.as_ref().unwrap();
+        assert_eq!(
+            probes.to_value().to_string(),
+            again_log.probes.as_ref().unwrap().to_value().to_string(),
+            "seed {seed}: probe log must rerun byte-identically"
+        );
+        if obs.trace {
+            assert_eq!(
+                log.to_chrome_trace(observed.phases.as_ref()).to_string(),
+                again_log.to_chrome_trace(again.phases.as_ref()).to_string(),
+                "seed {seed}: trace must rerun byte-identically"
+            );
+        }
     }
 }
